@@ -1,0 +1,235 @@
+//! Ablations over the design choices DESIGN.md calls out:
+//!
+//! * GEMM block size (linalg §Perf knob)
+//! * GBT histogram bins vs exact splits (XGBoost `hist` axis)
+//! * CSV reader engines at growing row counts (Modin axis, isolated)
+//! * groupby engines at growing group cardinality (PLAsTiCC's hot stage)
+//! * NMS naive vs sorted at growing detection density
+//! * tokenizer baseline vs trie at growing document counts
+//! * dynamic batcher policy (batch size × wait) at a fixed arrival rate
+//!
+//! ```sh
+//! cargo bench --bench ablations
+//! ```
+
+use repro::coordinator::{BatcherConfig, DynamicBatcher};
+use repro::dataframe::{self as df, groupby::Agg, Column, DataFrame, Engine};
+use repro::linalg::{matmul_blocked, matmul_naive, Matrix};
+use repro::ml::gbt::{synthetic_classification, Gbt, GbtParams, TreeMethod};
+use repro::parallel::channel::bounded;
+use repro::text::{ReviewGenerator, TokenizerKind, Vocab, WordPiece};
+use repro::util::fmt::{dur, speedup, Table};
+use repro::util::timer::bench_median;
+use repro::util::Rng;
+use repro::vision::{nms, Detection, NmsKind};
+use std::time::Duration;
+
+fn gemm_blocks() {
+    println!("\n--- GEMM: naive vs blocked (256³) ---");
+    let mut rng = Rng::new(1);
+    let a = Matrix::randn(256, 256, &mut rng);
+    let b = Matrix::randn(256, 256, &mut rng);
+    let t_naive = bench_median(1, 3, || {
+        std::hint::black_box(matmul_naive(&a, &b));
+    });
+    let t_blocked = bench_median(1, 3, || {
+        std::hint::black_box(matmul_blocked(&a, &b));
+    });
+    let mut t = Table::new(&["kernel", "median", "speedup"]);
+    t.row(&["naive (ijk, strided)".into(), dur(t_naive), "1.00x".into()]);
+    t.row(&[
+        "blocked (ikj, 64³ tiles, unrolled)".into(),
+        dur(t_blocked),
+        speedup(t_naive.as_secs_f64() / t_blocked.as_secs_f64()),
+    ]);
+    t.print();
+}
+
+fn gbt_bins() {
+    println!("\n--- GBT: exact vs histogram bins (1500×10) ---");
+    let mut rng = Rng::new(2);
+    let (x, y) = synthetic_classification(1500, 10, &mut rng);
+    let mut t = Table::new(&["method", "median fit", "speedup vs exact"]);
+    let t_exact = bench_median(0, 3, || {
+        std::hint::black_box(Gbt::fit(
+            &x,
+            &y,
+            GbtParams { method: TreeMethod::Exact, n_trees: 10, ..Default::default() },
+        ));
+    });
+    t.row(&["exact".into(), dur(t_exact), "1.00x".into()]);
+    for bins in [16usize, 64, 256] {
+        let t_hist = bench_median(0, 3, || {
+            std::hint::black_box(Gbt::fit(
+                &x,
+                &y,
+                GbtParams {
+                    method: TreeMethod::Hist,
+                    max_bins: bins,
+                    n_trees: 10,
+                    ..Default::default()
+                },
+            ));
+        });
+        t.row(&[
+            format!("hist({bins})"),
+            dur(t_hist),
+            speedup(t_exact.as_secs_f64() / t_hist.as_secs_f64()),
+        ]);
+    }
+    t.print();
+}
+
+fn csv_engines() {
+    println!("\n--- CSV reader: baseline vs optimized vs parallel engine ---");
+    let threads = repro::parallel::default_threads();
+    let mut t = Table::new(&["rows", "baseline", "optimized", "speedup", &format!("parallel({threads})")]);
+    for rows in [2_000usize, 10_000, 40_000] {
+        let text = repro::pipelines::census::generate_csv(rows, 3);
+        let t_base = bench_median(0, 3, || {
+            std::hint::black_box(df::csv::read_str(&text, Engine::Baseline).unwrap());
+        });
+        let t_opt = bench_median(0, 3, || {
+            std::hint::black_box(df::csv::read_str(&text, Engine::Optimized).unwrap());
+        });
+        let t_par = bench_median(0, 3, || {
+            std::hint::black_box(df::csv::read_str_parallel(&text, threads).unwrap());
+        });
+        t.row(&[
+            rows.to_string(),
+            dur(t_base),
+            dur(t_opt),
+            speedup(t_base.as_secs_f64() / t_opt.as_secs_f64()),
+            dur(t_par),
+        ]);
+    }
+    t.print();
+}
+
+fn groupby_engines() {
+    println!("\n--- groupby-agg: baseline vs optimized engine ---");
+    let mut t = Table::new(&["rows x groups", "baseline", "optimized", "speedup"]);
+    for (rows, groups) in [(5_000usize, 50usize), (20_000, 500), (50_000, 5_000)] {
+        let mut rng = Rng::new(4);
+        let frame = DataFrame::from_cols(vec![
+            ("k", Column::i64((0..rows).map(|_| rng.below(groups) as i64).collect())),
+            ("x", Column::f64((0..rows).map(|_| rng.normal()).collect())),
+        ]);
+        let aggs = [("x", Agg::Mean), ("x", Agg::Std), ("x", Agg::Max)];
+        let t_base = bench_median(0, 3, || {
+            std::hint::black_box(
+                df::groupby::groupby_agg(&frame, &["k"], &aggs, Engine::Baseline).unwrap(),
+            );
+        });
+        let t_opt = bench_median(0, 3, || {
+            std::hint::black_box(
+                df::groupby::groupby_agg(&frame, &["k"], &aggs, Engine::Optimized).unwrap(),
+            );
+        });
+        t.row(&[
+            format!("{rows}x{groups}"),
+            dur(t_base),
+            dur(t_opt),
+            speedup(t_base.as_secs_f64() / t_opt.as_secs_f64()),
+        ]);
+    }
+    t.print();
+}
+
+fn nms_density() {
+    println!("\n--- NMS: naive vs sorted at growing density ---");
+    let mut t = Table::new(&["detections", "naive", "sorted", "speedup"]);
+    for n in [64usize, 256, 1024] {
+        let mut rng = Rng::new(5);
+        let dets: Vec<Detection> = (0..n)
+            .map(|_| {
+                let y = rng.range_f64(0.0, 100.0) as f32;
+                let x = rng.range_f64(0.0, 100.0) as f32;
+                Detection {
+                    bbox: [y, x, y + 8.0, x + 8.0],
+                    class: 1 + rng.below(2),
+                    score: rng.f32(),
+                }
+            })
+            .collect();
+        let t_naive = bench_median(0, 5, || {
+            std::hint::black_box(nms(&dets, 0.4, NmsKind::Naive));
+        });
+        let t_sorted = bench_median(0, 5, || {
+            std::hint::black_box(nms(&dets, 0.4, NmsKind::Sorted));
+        });
+        t.row(&[
+            n.to_string(),
+            dur(t_naive),
+            dur(t_sorted),
+            speedup(t_naive.as_secs_f64() / t_sorted.as_secs_f64()),
+        ]);
+    }
+    t.print();
+}
+
+fn tokenizer_paths() {
+    println!("\n--- tokenizer: substring-probe vs trie ---");
+    let vocab = Vocab::build_from_corpus(&ReviewGenerator::lexicon(), 64);
+    let tok = WordPiece::new(vocab, 64);
+    let mut t = Table::new(&["docs", "baseline", "optimized", "speedup"]);
+    for n in [200usize, 1000] {
+        let mut gen = ReviewGenerator::new(6, 30);
+        let texts: Vec<String> = gen.batch(n).into_iter().map(|r| r.text).collect();
+        let t_base = bench_median(0, 3, || {
+            std::hint::black_box(tok.encode_batch(&texts, TokenizerKind::Baseline));
+        });
+        let t_opt = bench_median(0, 3, || {
+            std::hint::black_box(tok.encode_batch(&texts, TokenizerKind::Optimized));
+        });
+        t.row(&[
+            n.to_string(),
+            dur(t_base),
+            dur(t_opt),
+            speedup(t_base.as_secs_f64() / t_opt.as_secs_f64()),
+        ]);
+    }
+    t.print();
+}
+
+fn batcher_policies() {
+    println!("\n--- dynamic batcher: policy vs batch-size distribution ---");
+    let mut t = Table::new(&["max_batch", "max_wait", "batches", "size flushes", "timeout flushes"]);
+    for (max_batch, wait_ms) in [(4usize, 1u64), (8, 1), (8, 10)] {
+        let (tx, rx) = bounded(64);
+        let producer = std::thread::spawn(move || {
+            let mut rng = Rng::new(7);
+            for i in 0..200 {
+                tx.send(i).unwrap();
+                if rng.chance(0.3) {
+                    std::thread::sleep(Duration::from_micros(300));
+                }
+            }
+        });
+        let mut b = DynamicBatcher::new(
+            rx,
+            BatcherConfig { max_batch, max_wait: Duration::from_millis(wait_ms) },
+        );
+        let batches = b.drain();
+        producer.join().unwrap();
+        t.row(&[
+            max_batch.to_string(),
+            format!("{wait_ms}ms"),
+            batches.len().to_string(),
+            b.size_flushes.to_string(),
+            b.timeout_flushes.to_string(),
+        ]);
+    }
+    t.print();
+}
+
+fn main() {
+    println!("=== ablations over DESIGN.md design choices ===");
+    gemm_blocks();
+    gbt_bins();
+    csv_engines();
+    groupby_engines();
+    nms_density();
+    tokenizer_paths();
+    batcher_policies();
+}

@@ -1,0 +1,65 @@
+//! Figure 11 — end-to-end speedup per pipeline: fully-baseline stack vs
+//! fully-optimized stack.
+//!
+//! Paper reference: 1.8×–81.7× across the eight pipelines (abstract +
+//! Figure 11). The shape to reproduce: the biggest wins come where
+//! preprocessing dominates (Figure 1's high-pre pipelines — census,
+//! plasticc, iiot, dien), the smallest where the pipeline is already
+//! AI-dominated with modest DL headroom (face, video streamer).
+//!
+//! ```sh
+//! cargo bench --bench fig11_e2e
+//! REPRO_BENCH_SCALE=2 REPRO_BENCH_ITERS=5 cargo bench --bench fig11_e2e
+//! ```
+
+use repro::pipelines::{registry, RunConfig, Toggles};
+use repro::util::fmt::{self, Table};
+
+fn median_total(run: fn(&RunConfig) -> anyhow::Result<repro::pipelines::PipelineResult>, cfg: &RunConfig, iters: usize) -> f64 {
+    let mut samples: Vec<f64> = (0..iters)
+        .map(|_| {
+            run(cfg)
+                .map(|r| r.report.total().as_secs_f64())
+                .unwrap_or(f64::NAN)
+        })
+        .collect();
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    samples[samples.len() / 2]
+}
+
+fn main() {
+    let scale: f64 = std::env::var("REPRO_BENCH_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1.0);
+    let iters: usize = std::env::var("REPRO_BENCH_ITERS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(3);
+
+    println!("\n=== Figure 11: E2E speedup, baseline vs optimized (scale {scale}, median of {iters}) ===");
+    let mut t = Table::new(&["pipeline", "baseline", "optimized", "speedup"]);
+    let mut speedups: Vec<(String, f64)> = Vec::new();
+    for e in registry() {
+        let base_cfg = RunConfig { toggles: Toggles::baseline(), scale, seed: 0xF11 };
+        let opt_cfg = RunConfig { toggles: Toggles::optimized(), scale, seed: 0xF11 };
+        let base = median_total(e.run, &base_cfg, iters);
+        let opt = median_total(e.run, &opt_cfg, iters);
+        let s = base / opt;
+        speedups.push((e.name.to_string(), s));
+        t.row(&[
+            e.name.to_string(),
+            fmt::dur(std::time::Duration::from_secs_f64(base)),
+            fmt::dur(std::time::Duration::from_secs_f64(opt)),
+            fmt::speedup(s),
+        ]);
+    }
+    t.print();
+    let min = speedups.iter().map(|(_, s)| *s).fold(f64::INFINITY, f64::min);
+    let max = speedups.iter().map(|(_, s)| *s).fold(0.0, f64::max);
+    println!(
+        "spread: {} – {}   (paper: 1.8x – 81.7x on dual-socket Xeon 8380)",
+        fmt::speedup(min),
+        fmt::speedup(max)
+    );
+}

@@ -1,0 +1,70 @@
+//! Figure 1 — "Percent time in pre/postprocessing vs AI" for all eight
+//! pipelines, regenerated on this substrate.
+//!
+//! Paper reference: Figure 1 reports a 4%–98% pre/post share across the
+//! eight applications (§2). The "paper ≈" column holds approximate
+//! readings off the published figure; the *shape* to reproduce is the
+//! spread — tabular pipelines are preprocessing-dominated, DL-heavy
+//! pipelines are AI-dominated.
+//!
+//! ```sh
+//! cargo bench --bench fig1_breakdown            # default scale
+//! REPRO_BENCH_SCALE=2 cargo bench --bench fig1_breakdown
+//! ```
+
+use repro::pipelines::{registry, RunConfig, Toggles};
+use repro::util::fmt::{self, Table};
+
+/// Approximate pre/post share (%) read off the paper's Figure 1 bars.
+fn paper_pre_pct(name: &str) -> &'static str {
+    match name {
+        "census" => "~90",
+        "plasticc" => "~85",
+        "iiot" => "~60",
+        "dlsa" => "~20",
+        "dien" => "~75",
+        "video_streamer" => "~25",
+        "anomaly" => "~30",
+        "face" => "~4",
+        _ => "?",
+    }
+}
+
+fn main() {
+    let scale: f64 = std::env::var("REPRO_BENCH_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1.0);
+    let cfg = RunConfig { toggles: Toggles::optimized(), scale, seed: 0xF16 };
+
+    println!("\n=== Figure 1: percent time in pre/postprocessing vs AI (scale {scale}) ===");
+    let mut t = Table::new(&[
+        "pipeline",
+        "pre/post %",
+        "ai %",
+        "paper ≈ pre/post %",
+        "total",
+        "items/s",
+    ]);
+    for e in registry() {
+        match (e.run)(&cfg) {
+            Ok(res) => {
+                let (pre, ai) = res.report.fig1_split();
+                t.row(&[
+                    e.name.to_string(),
+                    format!("{pre:.1}"),
+                    format!("{ai:.1}"),
+                    paper_pre_pct(e.name).to_string(),
+                    fmt::dur(res.report.total()),
+                    format!("{:.1}", res.throughput()),
+                ]);
+            }
+            Err(err) => t.row(&[e.name.to_string(), format!("error: {err}")]),
+        }
+    }
+    t.print();
+    println!(
+        "shape check: the spread must run from preprocessing-dominated (census,\n\
+         plasticc, dien) to AI-dominated (dlsa, anomaly, face), as in the paper."
+    );
+}

@@ -1,0 +1,109 @@
+//! §3.4 workload scaling — multi-instance sweep for the two workloads the
+//! paper scales: anomaly-detection camera streams and DLSA inference
+//! streams.
+//!
+//! Single-core sandbox: the deliverables are (a) aggregate throughput
+//! stays flat as instances time-slice (no coordination collapse) and
+//! (b) fairness stays near 1.0. On a many-core Xeon the same harness
+//! shows the paper's linear scaling (DESIGN.md §2).
+//!
+//! ```sh
+//! cargo bench --bench scaling_instances
+//! ```
+
+use repro::coordinator::run_instances;
+use repro::media::{normalize, resize, ResizeFilter};
+use repro::runtime::{ModelServer, Tensor};
+use repro::text::{ReviewGenerator, TokenizerKind, Vocab, WordPiece};
+use repro::util::fmt::Table;
+use repro::util::Rng;
+
+const IMG: usize = 32;
+
+fn anomaly_stream(client: &repro::runtime::ModelClient, seed: u64, images: usize) -> usize {
+    let mut rng = Rng::new(seed);
+    let mut done = 0usize;
+    while done < images {
+        let mut data = Vec::with_capacity(4 * IMG * IMG * 3);
+        for _ in 0..4 {
+            let part = {
+                    let defective = rng.chance(0.2);
+                    repro::pipelines::anomaly::generate_part(&mut rng, defective)
+                };
+            let mut small = resize(&part.img, IMG, IMG, ResizeFilter::Bilinear);
+            normalize(&mut small, [0.45; 3], [0.25; 3]);
+            data.extend_from_slice(&small.data);
+        }
+        if client
+            .run("resnet_features_fused_b4", vec![Tensor::f32(&[4, IMG, IMG, 3], data)])
+            .is_err()
+        {
+            break;
+        }
+        done += 4;
+    }
+    done
+}
+
+fn dlsa_stream(
+    client: &repro::runtime::ModelClient,
+    tok: &WordPiece,
+    seed: u64,
+    docs: usize,
+) -> usize {
+    let mut gen = ReviewGenerator::new(seed, 30);
+    let mut done = 0usize;
+    while done < docs {
+        let batch = gen.batch(8);
+        let texts: Vec<String> = batch.into_iter().map(|r| r.text).collect();
+        let enc = tok.encode_batch(&texts, TokenizerKind::Optimized);
+        let mut ids: Vec<i32> = Vec::with_capacity(8 * 64);
+        for doc in &enc {
+            ids.extend(doc.iter().map(|&t| t as i32));
+        }
+        if client.run("bert_fused_b8", vec![Tensor::i32(&[8, 64], ids)]).is_err() {
+            break;
+        }
+        done += 8;
+    }
+    done
+}
+
+fn main() {
+    let images: usize = std::env::var("REPRO_BENCH_ITEMS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(24);
+    let server =
+        ModelServer::spawn(repro::runtime::default_artifacts_dir(), 64).expect("server");
+    server
+        .client()
+        .warmup(&["resnet_features_fused_b4", "bert_fused_b8"])
+        .expect("warmup");
+    let tok = WordPiece::new(Vocab::build_from_corpus(&ReviewGenerator::lexicon(), 64), 64);
+
+    println!("\n=== §3.4 multi-instance scaling ({images} items/instance) ===");
+    for (workload, is_dlsa) in [("anomaly camera streams", false), ("dlsa inference streams", true)]
+    {
+        println!("\n{workload}:");
+        let mut t = Table::new(&["instances", "aggregate items/s", "fairness"]);
+        for n in [1usize, 2, 4, 8] {
+            let client = server.client();
+            let tok = &tok;
+            let report = run_instances(n, |i| {
+                if is_dlsa {
+                    dlsa_stream(&client, tok, 0xD15A + i as u64, images)
+                } else {
+                    anomaly_stream(&client, 0xA770 + i as u64, images)
+                }
+            });
+            t.row(&[
+                n.to_string(),
+                format!("{:.1}", report.aggregate_throughput()),
+                format!("{:.2}", report.fairness()),
+            ]);
+        }
+        t.print();
+    }
+    println!("\nshape check: aggregate ~flat on one core; fairness ≥ 0.5 throughout.");
+}

@@ -1,0 +1,59 @@
+//! Census end-to-end walkthrough: the paper's §2.1 workload, stage by
+//! stage, showing how each Table 2 optimization axis contributes.
+//!
+//! Sweeps (dataframe, ml) toggles independently — the decomposition behind
+//! Table 2's "Modin 6×" and "scikit-learn 59×" columns for Census.
+//!
+//! ```sh
+//! cargo run --release --example census_e2e [-- --scale 2.0]
+//! ```
+
+use repro::pipelines::{census, RunConfig, Toggles};
+use repro::util::cli::Args;
+use repro::util::fmt::{self, Table};
+use repro::OptLevel;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let scale = args.get_parse("scale", 1.0f64);
+
+    println!("census E2E — toggle decomposition (scale {scale})\n");
+    let mut table = Table::new(&["dataframe", "ml", "total", "pre/post %", "r2"]);
+    let mut baseline_total = None;
+    for df_opt in OptLevel::ALL {
+        for ml_opt in OptLevel::ALL {
+            let mut toggles = Toggles::baseline();
+            toggles.dataframe = df_opt;
+            toggles.ml = ml_opt;
+            let cfg = RunConfig { toggles, scale, seed: 42 };
+            let res = census::run(&cfg)?;
+            let total = res.report.total();
+            if df_opt == OptLevel::Baseline && ml_opt == OptLevel::Baseline {
+                baseline_total = Some(total.as_secs_f64());
+            }
+            let (pre, _) = res.report.fig1_split();
+            table.row(&[
+                df_opt.label().to_string(),
+                ml_opt.label().to_string(),
+                format!(
+                    "{} ({})",
+                    fmt::dur(total),
+                    fmt::speedup(baseline_total.unwrap() / total.as_secs_f64())
+                ),
+                format!("{pre:.1}%"),
+                format!("{:.4}", res.metric("r2").unwrap_or(f64::NAN)),
+            ]);
+        }
+    }
+    table.print();
+
+    // Full stage table for the optimized run (Figure 1 view).
+    let res = census::run(&RunConfig {
+        toggles: Toggles::optimized(),
+        scale,
+        seed: 42,
+    })?;
+    println!("\noptimized stage breakdown:");
+    res.report.table().print();
+    Ok(())
+}

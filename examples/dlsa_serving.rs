@@ -1,0 +1,124 @@
+//! DLSA serving walkthrough (§2.4 + §3.3): dynamic batching and the
+//! (batch size × max wait) tuning the paper does with SigOpt.
+//!
+//! Documents arrive on a bounded queue; the [`DynamicBatcher`] groups them
+//! and a BERT artifact scores each batch through the [`ModelServer`]. The
+//! `tune::coordinate_descent` pass then searches the batching policy for
+//! max throughput at a latency constraint — the paper's multi-objective
+//! tuning story on real measurements.
+//!
+//! ```sh
+//! cargo run --release --example dlsa_serving
+//! ```
+
+use repro::coordinator::{BatcherConfig, DynamicBatcher};
+use repro::parallel::channel::bounded;
+use repro::runtime::{ModelServer, Tensor};
+use repro::text::{ReviewGenerator, TokenizerKind, Vocab, WordPiece};
+use repro::tune::{coordinate_descent, Eval, SearchSpace};
+use repro::util::fmt::Table;
+use std::time::{Duration, Instant};
+
+const SEQ: usize = 64;
+
+/// Serve `n_docs` through a batcher with the given policy; returns
+/// (throughput docs/s, p95 latency ms).
+fn serve(
+    client: &repro::runtime::ModelClient,
+    tok: &WordPiece,
+    n_docs: usize,
+    cfg: BatcherConfig,
+) -> anyhow::Result<(f64, f64)> {
+    let mut gen = ReviewGenerator::new(99, 30);
+    let docs = gen.batch(n_docs);
+    let (tx, rx) = bounded::<(Vec<i64>, Instant)>(64);
+    let mut batcher = DynamicBatcher::new(rx, cfg);
+
+    // Producer: tokenize and enqueue (arrival process).
+    let texts: Vec<String> = docs.into_iter().map(|r| r.text).collect();
+    let encoded = tok.encode_batch(&texts, TokenizerKind::Optimized);
+    let producer = std::thread::spawn(move || {
+        for ids in encoded {
+            if tx.send((ids, Instant::now())).is_err() {
+                break;
+            }
+        }
+    });
+
+    // Consumer: batch → pad to the artifact batch (8) → infer.
+    let t0 = Instant::now();
+    let mut latencies: Vec<f64> = Vec::with_capacity(n_docs);
+    while let Some(batch) = batcher.next_batch() {
+        let mut ids: Vec<i32> = Vec::with_capacity(8 * SEQ);
+        for (doc, _) in &batch {
+            ids.extend(doc.iter().map(|&t| t as i32));
+        }
+        while ids.len() < 8 * SEQ {
+            let start = ids.len() - SEQ;
+            let last: Vec<i32> = ids[start..].to_vec();
+            ids.extend(last);
+        }
+        client.run("bert_fused_b8", vec![Tensor::i32(&[8, SEQ], ids)])?;
+        let done = Instant::now();
+        for (_, arrived) in &batch {
+            latencies.push((done - *arrived).as_secs_f64() * 1e3);
+        }
+    }
+    producer.join().unwrap();
+    let wall = t0.elapsed().as_secs_f64();
+    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let p95 = latencies[(latencies.len() as f64 * 0.95) as usize % latencies.len()];
+    Ok((n_docs as f64 / wall, p95))
+}
+
+fn main() -> anyhow::Result<()> {
+    let server = ModelServer::spawn(repro::runtime::default_artifacts_dir(), 32)?;
+    server.client().warmup(&["bert_fused_b8"])?;
+    let tok = WordPiece::new(Vocab::build_from_corpus(&ReviewGenerator::lexicon(), 64), SEQ);
+    let n_docs = 64;
+
+    println!("dlsa serving — batching policy sweep ({n_docs} docs each)\n");
+    let mut table = Table::new(&["max_batch", "max_wait", "docs/s", "p95 ms"]);
+    for max_batch in [1usize, 4, 8] {
+        for wait_ms in [1u64, 10] {
+            let cfg = BatcherConfig {
+                max_batch,
+                max_wait: Duration::from_millis(wait_ms),
+            };
+            let (thr, p95) = serve(&server.client(), &tok, n_docs, cfg)?;
+            table.row(&[
+                max_batch.to_string(),
+                format!("{wait_ms}ms"),
+                format!("{thr:.1}"),
+                format!("{p95:.1}"),
+            ]);
+        }
+    }
+    table.print();
+
+    // SigOpt-style auto-tuning: maximize throughput s.t. p95 <= budget.
+    println!("\nauto-tuning (coordinate descent, p95 <= 400ms):");
+    let space = SearchSpace::new()
+        .param("max_batch", &[1.0, 2.0, 4.0, 8.0])
+        .param("max_wait_ms", &[1.0, 5.0, 10.0, 20.0]);
+    let client = server.client();
+    let result = coordinate_descent(&space, 1, -400.0, |cfg| {
+        let bc = BatcherConfig {
+            max_batch: cfg["max_batch"] as usize,
+            max_wait: Duration::from_millis(cfg["max_wait_ms"] as u64),
+        };
+        match serve(&client, &tok, n_docs, bc) {
+            Ok((thr, p95)) => Eval { objective: thr, constraint: -p95 },
+            Err(_) => Eval { objective: 0.0, constraint: f64::NEG_INFINITY },
+        }
+    });
+    println!(
+        "best: max_batch={} max_wait={}ms → {:.1} docs/s (p95 {:.1}ms) over {} trials",
+        result.best["max_batch"],
+        result.best["max_wait_ms"],
+        result.best_eval.objective,
+        -result.best_eval.constraint,
+        result.history.len()
+    );
+    Ok(())
+}

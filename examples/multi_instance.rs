@@ -1,0 +1,75 @@
+//! Multi-instance workload scaling (§3.4): N parallel anomaly-detection
+//! camera streams on one box — the paper's "10 streams over 30 FPS on one
+//! socket" experiment, scaled to this sandbox.
+//!
+//! Each instance runs its own stream of synthetic part images through a
+//! shared [`ModelServer`]; the report shows aggregate throughput and
+//! fairness across instances as the count sweeps 1→8.
+//!
+//! ```sh
+//! cargo run --release --example multi_instance [-- --images 24]
+//! ```
+
+use repro::coordinator::run_instances;
+use repro::media::{normalize, resize, ResizeFilter};
+use repro::runtime::{ModelServer, Tensor};
+use repro::util::cli::Args;
+use repro::util::fmt::Table;
+use repro::util::Rng;
+
+const IMG: usize = 32;
+const BATCH: usize = 4;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let images = args.get_parse("images", 24usize);
+
+    let server = ModelServer::spawn(repro::runtime::default_artifacts_dir(), 64)?;
+    server.client().warmup(&["resnet_features_fused_b4"])?;
+
+    println!("multi-instance anomaly streams — {images} images per instance\n");
+    let mut table =
+        Table::new(&["instances", "aggregate img/s", "per-instance img/s", "fairness"]);
+    for n in [1usize, 2, 4, 8] {
+        let client = server.client();
+        let report = run_instances(n, |instance| {
+            let client = client.clone();
+            let mut rng = Rng::new(0xCAFE + instance as u64);
+            let mut done = 0usize;
+            while done < images {
+                // One batch of camera frames: generate → resize/normalize
+                // → feature extraction (the per-stream serving loop).
+                let mut data = Vec::with_capacity(BATCH * IMG * IMG * 3);
+                for _ in 0..BATCH {
+                    let part =
+                        {
+                    let defective = rng.chance(0.2);
+                    repro::pipelines::anomaly::generate_part(&mut rng, defective)
+                };
+                    let mut small = resize(&part.img, IMG, IMG, ResizeFilter::Bilinear);
+                    normalize(&mut small, [0.45; 3], [0.25; 3]);
+                    data.extend_from_slice(&small.data);
+                }
+                let t = Tensor::f32(&[BATCH, IMG, IMG, 3], data);
+                if client.run("resnet_features_fused_b4", vec![t]).is_err() {
+                    break;
+                }
+                done += BATCH;
+            }
+            done
+        });
+        let agg = report.aggregate_throughput();
+        table.row(&[
+            n.to_string(),
+            format!("{agg:.1}"),
+            format!("{:.1}", agg / n as f64),
+            format!("{:.2}", report.fairness()),
+        ]);
+    }
+    table.print();
+    println!(
+        "\nnote: single-core sandbox — aggregate stays ~flat and fairness ~1.0;\n\
+         on a 40-core Xeon the same harness scales instances linearly (§3.4)."
+    );
+    Ok(())
+}

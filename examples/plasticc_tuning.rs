@@ -1,0 +1,157 @@
+//! §3.3 parameter optimization on PLAsTiCC — the SigOpt experiment.
+//!
+//! The paper: "In the case of PLAsTiCC, 'accuracy' and 'timing' metrics
+//! were optimized while the model hyperparameters (number of parallel
+//! threads for XGBoost, number of trees, learning rate, max depth, L1/L2
+//! normalization, etc.) were computed in order to achieve the objective."
+//!
+//! This example runs both searchers from `tune::` over the GBT
+//! hyperparameters on the real PLAsTiCC-like workload: maximize training
+//! throughput subject to AUC ≥ 0.95, then prints the trade-off frontier.
+//!
+//! ```sh
+//! cargo run --release --example plasticc_tuning
+//! ```
+
+use repro::linalg::Matrix;
+use repro::ml::{metrics, Gbt, GbtParams, TreeMethod};
+use repro::pipelines::plasticc;
+use repro::tune::{coordinate_descent, random_search, Eval, SearchSpace};
+use repro::util::fmt::Table;
+use repro::util::Rng;
+use std::time::Instant;
+
+/// Build the PLAsTiCC feature matrix once (preprocessing is not what we
+/// are tuning here).
+fn features() -> (Matrix, Vec<f64>, Matrix, Vec<f64>) {
+    let (csv, labels) = plasticc::generate_csv(400, 40, 0x516);
+    // Reuse the pipeline's own preprocessing via the dataframe engine.
+    use repro::dataframe::{self as df, groupby::Agg, Engine, Expr};
+    let frame = df::csv::read_str(&csv, Engine::Optimized).unwrap();
+    let frame = df::ops::with_column(
+        &frame,
+        "snr",
+        &Expr::col("flux").div(Expr::col("flux_err")),
+        Engine::Optimized,
+    )
+    .unwrap();
+    let g = df::groupby::groupby_agg(
+        &frame,
+        &["object_id"],
+        &[
+            ("flux", Agg::Mean),
+            ("flux", Agg::Std),
+            ("flux", Agg::Min),
+            ("flux", Agg::Max),
+            ("snr", Agg::Mean),
+            ("snr", Agg::Std),
+        ],
+        Engine::Optimized,
+    )
+    .unwrap();
+    let cols = ["flux_mean", "flux_std", "flux_min", "flux_max", "snr_mean", "snr_std"];
+    let n = g.nrows();
+    let mut x = Matrix::zeros(n, cols.len());
+    for (j, c) in cols.iter().enumerate() {
+        let v = g.f64s(c).unwrap();
+        for i in 0..n {
+            x.set(i, j, v[i]);
+        }
+    }
+    let ids = g.i64s("object_id").unwrap();
+    let y: Vec<f64> = ids.iter().map(|&i| labels[i as usize]).collect();
+    // 75/25 split.
+    let mut idx: Vec<usize> = (0..n).collect();
+    Rng::new(9).shuffle(&mut idx);
+    let (test_i, train_i) = idx.split_at(n / 4);
+    let take = |rows: &[usize]| {
+        let mut xm = Matrix::zeros(rows.len(), cols.len());
+        let mut ym = Vec::new();
+        for (r, &i) in rows.iter().enumerate() {
+            for j in 0..cols.len() {
+                xm.set(r, j, x.get(i, j));
+            }
+            ym.push(y[i]);
+        }
+        (xm, ym)
+    };
+    let (xt, yt) = take(train_i);
+    let (xs, ys) = take(test_i);
+    (xt, yt, xs, ys)
+}
+
+fn main() {
+    let (x_train, y_train, x_test, y_test) = features();
+    let space = SearchSpace::new()
+        .param("n_trees", &[5.0, 10.0, 20.0, 40.0])
+        .param("max_depth", &[2.0, 3.0, 4.0, 6.0])
+        .param("learning_rate", &[0.1, 0.3, 0.5])
+        .param("lambda", &[0.5, 1.0, 4.0])
+        .param("max_bins", &[16.0, 64.0, 256.0]);
+    println!(
+        "PLAsTiCC hyperparameter tuning — {} configurations in the space\n",
+        space.cardinality()
+    );
+
+    let evaluate = |cfg: &std::collections::HashMap<String, f64>| {
+        let params = GbtParams {
+            n_trees: cfg["n_trees"] as usize,
+            max_depth: cfg["max_depth"] as usize,
+            learning_rate: cfg["learning_rate"],
+            lambda: cfg["lambda"],
+            max_bins: cfg["max_bins"] as usize,
+            method: TreeMethod::Hist,
+            ..Default::default()
+        };
+        let t0 = Instant::now();
+        let gbt = Gbt::fit(&x_train, &y_train, params);
+        let fit_s = t0.elapsed().as_secs_f64();
+        let auc = metrics::auc(&y_test, &gbt.predict_proba(&x_test));
+        Eval { objective: x_train.rows as f64 / fit_s, constraint: auc }
+    };
+
+    let mut table = Table::new(&["searcher", "trials", "best config", "rows/s", "AUC"]);
+    let rs = random_search(&space, 40, 0.95, 0x51607, evaluate);
+    table.row(&[
+        "random(40)".into(),
+        rs.history.len().to_string(),
+        format!(
+            "trees={} depth={} lr={} λ={} bins={}",
+            rs.best["n_trees"], rs.best["max_depth"], rs.best["learning_rate"],
+            rs.best["lambda"], rs.best["max_bins"],
+        ),
+        format!("{:.0}", rs.best_eval.objective),
+        format!("{:.3}", rs.best_eval.constraint),
+    ]);
+    let cd = coordinate_descent(&space, 2, 0.95, evaluate);
+    table.row(&[
+        "coord-descent(2 sweeps)".into(),
+        cd.history.len().to_string(),
+        format!(
+            "trees={} depth={} lr={} λ={} bins={}",
+            cd.best["n_trees"], cd.best["max_depth"], cd.best["learning_rate"],
+            cd.best["lambda"], cd.best["max_bins"],
+        ),
+        format!("{:.0}", cd.best_eval.objective),
+        format!("{:.3}", cd.best_eval.constraint),
+    ]);
+    table.print();
+
+    // Trade-off frontier from the random-search history.
+    println!("\naccuracy/throughput frontier (random-search samples):");
+    let mut pts: Vec<(f64, f64)> = rs
+        .history
+        .iter()
+        .map(|(_, e)| (e.constraint, e.objective))
+        .collect();
+    pts.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+    let mut best_thr = 0.0;
+    let mut frontier = Table::new(&["AUC ≥", "best rows/s"]);
+    for (auc, thr) in pts {
+        if thr > best_thr {
+            best_thr = thr;
+            frontier.row(&[format!("{auc:.3}"), format!("{thr:.0}")]);
+        }
+    }
+    frontier.print();
+}

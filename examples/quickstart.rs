@@ -1,0 +1,37 @@
+//! Quickstart: the smallest end-to-end tour of the public API.
+//!
+//! Runs one tabular pipeline (census) and one DL pipeline (video streamer)
+//! at baseline and optimized levels, prints the paper-style speedups and
+//! the Figure 1 breakdowns.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use repro::pipelines::{run_by_name, RunConfig, Toggles};
+use repro::util::fmt;
+use repro::OptLevel;
+
+fn main() -> anyhow::Result<()> {
+    for name in ["census", "video_streamer"] {
+        println!("=== {name} ===");
+        let mut totals = Vec::new();
+        for opt in OptLevel::ALL {
+            let cfg = RunConfig { toggles: Toggles::all(opt), scale: 0.5, seed: 1 };
+            let res = run_by_name(name, &cfg)?;
+            let (pre, ai) = res.report.fig1_split();
+            println!(
+                "  {opt:<9}  total {:>8}  ({pre:.0}% pre/post, {ai:.0}% ai)  \
+                 {:.1} items/s",
+                fmt::dur(res.report.total()),
+                res.throughput(),
+            );
+            for (k, v) in &res.metrics {
+                println!("             {k} = {v:.4}");
+            }
+            totals.push(res.report.total().as_secs_f64());
+        }
+        println!("  E2E speedup: {}\n", fmt::speedup(totals[0] / totals[1]));
+    }
+    Ok(())
+}

@@ -1,0 +1,61 @@
+//! Video-analytics walkthrough: the §2.6 streaming pipeline with the
+//! Intel-TF (fused) and INT8 axes toggled, plus the NMS ablation —
+//! demonstrating the streaming coordinator (bounded queues, model server)
+//! on a real frame stream.
+//!
+//! ```sh
+//! cargo run --release --example video_analytics [-- --frames 96]
+//! ```
+
+use repro::pipelines::{video_streamer, RunConfig, Toggles};
+use repro::util::cli::Args;
+use repro::util::fmt::{self, Table};
+use repro::OptLevel;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let frames = args.get_parse("frames", 48usize);
+    let scale = frames as f64 / 48.0;
+
+    println!("video streamer — {frames} frames per configuration\n");
+    let configs: &[(&str, Toggles)] = &[
+        ("unfused fp32 (stock TF)", {
+            let mut t = Toggles::baseline();
+            t.nms = OptLevel::Optimized;
+            t
+        }),
+        ("fused fp32 (Intel TF)", {
+            let mut t = Toggles::optimized();
+            t.quant = false;
+            t
+        }),
+        ("fused int8 (Intel TF + INC)", Toggles::optimized()),
+    ];
+
+    let mut table = Table::new(&["configuration", "fps", "ai %", "recall", "db bytes"]);
+    let mut first_fps = None;
+    for (label, toggles) in configs {
+        let cfg = RunConfig { toggles: *toggles, scale, seed: 3 };
+        let res = video_streamer::run(&cfg)?;
+        let fps = res.metric("fps").unwrap();
+        first_fps.get_or_insert(fps);
+        let (_, ai) = res.report.fig1_split();
+        table.row(&[
+            format!("{label} ({})", fmt::speedup(fps / first_fps.unwrap())),
+            format!("{fps:.1}"),
+            format!("{ai:.1}%"),
+            format!("{:.2}", res.metric("truth_recall").unwrap_or(f64::NAN)),
+            fmt::count(res.metric("db_bytes").unwrap_or(0.0)),
+        ]);
+    }
+    table.print();
+
+    println!("\nstage breakdown (fused int8):");
+    let res = video_streamer::run(&RunConfig {
+        toggles: Toggles::optimized(),
+        scale,
+        seed: 3,
+    })?;
+    res.report.table().print();
+    Ok(())
+}

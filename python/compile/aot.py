@@ -1,0 +1,135 @@
+"""AOT compiler: lower every registry model to HLO **text** + manifest.
+
+HLO text (not serialized ``HloModuleProto``) is the interchange format:
+jax >= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (behind the published ``xla`` rust crate) rejects; the text parser
+reassigns ids, so text round-trips cleanly (see /opt/xla-example/README.md
+and gen_hlo.py there).
+
+Outputs per model: ``<name>.hlo.txt`` and a shared ``manifest.json``
+describing input/output shapes+dtypes and the unfused stage chains, which
+the Rust runtime reads to build typed literals.
+
+Incremental: a model is re-lowered only when the sources are newer than
+its artifact (``make artifacts`` stays a no-op on unchanged inputs).
+"""
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO module → XLA computation → HLO text (ids reassigned)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants is load-bearing: the default HLO printer elides
+    # big constants as `constant({...})`, which xla_extension 0.5.1's text
+    # parser silently reads back as ZEROS — every baked weight would
+    # vanish. (Found the hard way; see EXPERIMENTS.md §Debugging.)
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def spec_dict(s):
+    return {"shape": list(s.shape), "dtype": str(np.dtype(s.dtype).name)}
+
+
+def lower_one(name, builder, out_dir):
+    fn, example_args = builder()
+    lowered = jax.jit(fn).lower(*example_args)
+    text = to_hlo_text(lowered)
+    path = os.path.join(out_dir, f"{name}.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    out_avals = lowered.out_info
+    # out_info is a pytree of ShapeDtypeStruct-like objects (tuple output).
+    outs = jax.tree_util.tree_leaves(out_avals)
+    return {
+        "name": name,
+        "file": f"{name}.hlo.txt",
+        "inputs": [spec_dict(a) for a in example_args],
+        "outputs": [spec_dict(o) for o in outs],
+    }
+
+
+def source_mtime():
+    here = os.path.dirname(os.path.abspath(__file__))
+    paths = [os.path.join(here, "model.py"), os.path.join(here, "aot.py")]
+    kdir = os.path.join(here, "kernels")
+    paths += [os.path.join(kdir, f) for f in os.listdir(kdir) if f.endswith(".py")]
+    return max(os.path.getmtime(p) for p in paths)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="comma-separated artifact names")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    src_mtime = source_mtime()
+    entries = model.registry()
+    if args.only:
+        keep = set(args.only.split(","))
+        entries = {k: v for k, v in entries.items() if k in keep}
+
+    manifest_path = os.path.join(args.out_dir, "manifest.json")
+    old = {}
+    if os.path.exists(manifest_path):
+        with open(manifest_path) as f:
+            try:
+                old = {m["name"]: m for m in json.load(f).get("models", [])}
+            except Exception:
+                old = {}
+
+    models = []
+    for name, builder in sorted(entries.items()):
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        fresh = (
+            not args.force
+            and name in old
+            and os.path.exists(path)
+            and os.path.getmtime(path) >= src_mtime
+        )
+        if fresh:
+            models.append(old[name])
+            continue
+        print(f"lowering {name} ...", flush=True)
+        models.append(lower_one(name, builder, args.out_dir))
+
+    # Remove stale artifacts of models no longer in the registry.
+    if not args.only:
+        keep = {m["file"] for m in models}
+        for f in os.listdir(args.out_dir):
+            if f.endswith(".hlo.txt") and f not in keep:
+                os.remove(os.path.join(args.out_dir, f))
+                print(f"removed stale {f}")
+
+    manifest = {
+        "models": models,
+        "stage_chains": model.STAGE_CHAINS,
+        "configs": {
+            "bert": model.BERT_CFG,
+            "resnet": model.RESNET_CFG,
+            "ssd": model.SSD_CFG,
+            "dien": model.DIEN_CFG,
+        },
+    }
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"wrote {len(models)} artifacts + manifest to {args.out_dir}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

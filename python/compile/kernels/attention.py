@@ -1,0 +1,44 @@
+"""L1 Pallas kernel: fused scaled-dot-product attention.
+
+One grid step computes attention for one (batch*head) slice: the QK^T
+logits, the numerically-stable softmax, and the probs @ V contraction all
+stay in VMEM — a (T, d)+(T, T) working set, ~80 KiB at T=128/d=64. This is
+the flash-attention-style "never materialize logits in HBM" insight mapped
+to the TPU memory hierarchy (DESIGN.md §3); at the sequence lengths of the
+tiny models a single-tile (non-streaming) softmax is exact and simplest.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, *, scale):
+    q = q_ref[0]  # (T, d) — leading grid axis is the batch*head slice
+    k = k_ref[0]
+    v = v_ref[0]
+    logits = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    p = jnp.exp(logits - m)
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    o_ref[0] = jnp.dot(p, v, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("scale",))
+def attention(q, k, v, scale=None):
+    """Fused SDPA. q/k/v: (B, T, d) f32 — B is batch*heads, flattened."""
+    b, t, d = q.shape
+    if scale is None:
+        scale = 1.0 / (d**0.5)
+    spec = pl.BlockSpec((1, t, d), lambda i: (i, 0, 0))
+    kernel = functools.partial(_attn_kernel, scale=float(scale))
+    return pl.pallas_call(
+        kernel,
+        grid=(b,),
+        in_specs=[spec, spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((b, t, d), jnp.float32),
+        interpret=True,
+    )(q, k, v)

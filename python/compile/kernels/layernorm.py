@@ -1,0 +1,60 @@
+"""L1 Pallas kernel: fused (residual +) LayerNorm over the last axis.
+
+One grid step normalizes a (block_rows, d) panel held in VMEM: the mean /
+variance reductions, the scale-shift, and the optional residual add all
+happen on the same resident tile — the fusion oneDNN applies to
+norm+elementwise chains on Xeon.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .matmul import _pick_block
+
+
+def _ln_kernel(x_ref, g_ref, b_ref, o_ref, *, eps):
+    x = x_ref[...]
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mean) ** 2, axis=-1, keepdims=True)
+    o_ref[...] = (x - mean) / jnp.sqrt(var + eps) * g_ref[...] + b_ref[...]
+
+
+def _ln_res_kernel(x_ref, r_ref, g_ref, b_ref, o_ref, *, eps):
+    x = x_ref[...] + r_ref[...]
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mean) ** 2, axis=-1, keepdims=True)
+    o_ref[...] = (x - mean) / jnp.sqrt(var + eps) * g_ref[...] + b_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "block_rows"))
+def layernorm(x, gamma, beta, residual=None, eps=1e-5, block_rows=128):
+    """LayerNorm over the last axis of a 2-D ``x`` (rows, d)."""
+    rows, d = x.shape
+    br = _pick_block(rows, block_rows)
+    grid = (rows // br,)
+    x_spec = pl.BlockSpec((br, d), lambda i: (i, 0))
+    vec_spec = pl.BlockSpec((d,), lambda i: (0,))
+    o_spec = pl.BlockSpec((br, d), lambda i: (i, 0))
+    out_shape = jax.ShapeDtypeStruct((rows, d), jnp.float32)
+    if residual is None:
+        kernel = functools.partial(_ln_kernel, eps=eps)
+        return pl.pallas_call(
+            kernel,
+            grid=grid,
+            in_specs=[x_spec, vec_spec, vec_spec],
+            out_specs=o_spec,
+            out_shape=out_shape,
+            interpret=True,
+        )(x, gamma, beta)
+    kernel = functools.partial(_ln_res_kernel, eps=eps)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[x_spec, x_spec, vec_spec, vec_spec],
+        out_specs=o_spec,
+        out_shape=out_shape,
+        interpret=True,
+    )(x, residual, gamma, beta)

@@ -1,0 +1,103 @@
+"""L1 Pallas kernel: tiled f32 matmul with fused bias+activation epilogue.
+
+TPU-style structure (DESIGN.md §3 Hardware-Adaptation): the grid tiles the
+output into (block_m, block_n) VMEM-resident panels aligned to the MXU's
+128-lane geometry; the contraction (K) dimension is kept whole per tile —
+the models in this repo have K ≤ 512, so an (128, K) x (K, 128) tile pair
+is ≤ 0.5 MiB of VMEM, far under the ~16 MiB budget. The bias add and
+activation run in the kernel epilogue on the VMEM-resident accumulator,
+which is the Pallas rendition of oneDNN's post-op fusion (the paper's
+"Intel-optimized TF" axis).
+
+All ``pallas_call``s use ``interpret=True``: the CPU PJRT plugin cannot run
+Mosaic custom-calls, and interpret-mode lowers to plain HLO so the AOT
+artifact executes anywhere (see /opt/xla-example/README.md).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU-aligned default tile edge.
+DEFAULT_BLOCK = 128
+
+
+def _activate(x, kind: str):
+    """In-kernel epilogue activation (keep in sync with ref.activation_ref)."""
+    if kind == "none":
+        return x
+    if kind == "relu":
+        return jnp.maximum(x, 0.0)
+    if kind == "gelu":
+        return 0.5 * x * (1.0 + jnp.tanh(0.7978845608028654 * (x + 0.044715 * x**3)))
+    if kind == "tanh":
+        return jnp.tanh(x)
+    if kind == "sigmoid":
+        return 1.0 / (1.0 + jnp.exp(-x))
+    raise ValueError(f"unknown activation {kind!r}")
+
+
+def _matmul_kernel(x_ref, w_ref, b_ref, o_ref, *, activation):
+    """One (block_m, block_n) output tile: full-K dot + fused epilogue."""
+    acc = jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+    if b_ref is not None:
+        acc = acc + b_ref[...]
+    o_ref[...] = _activate(acc, activation)
+
+
+def _matmul_kernel_nobias(x_ref, w_ref, o_ref, *, activation):
+    _matmul_kernel(x_ref, w_ref, None, o_ref, activation=activation)
+
+
+def _pick_block(dim: int, block: int) -> int:
+    """Largest divisor of ``dim`` that is <= block (keeps the grid exact)."""
+    b = min(dim, block)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("activation", "block_m", "block_n"))
+def matmul(x, w, b=None, activation="none", block_m=DEFAULT_BLOCK, block_n=DEFAULT_BLOCK):
+    """``activate(x @ w + b)`` as a tiled Pallas kernel.
+
+    x: (m, k) f32;  w: (k, n) f32;  b: (n,) f32 or None.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"matmul shape mismatch {x.shape} @ {w.shape}"
+    bm = _pick_block(m, block_m)
+    bn = _pick_block(n, block_n)
+    grid = (m // bm, n // bn)
+    out_shape = jax.ShapeDtypeStruct((m, n), jnp.float32)
+    x_spec = pl.BlockSpec((bm, k), lambda i, j: (i, 0))
+    w_spec = pl.BlockSpec((k, bn), lambda i, j: (0, j))
+    o_spec = pl.BlockSpec((bm, bn), lambda i, j: (i, j))
+    if b is None:
+        kernel = functools.partial(_matmul_kernel_nobias, activation=activation)
+        return pl.pallas_call(
+            kernel,
+            grid=grid,
+            in_specs=[x_spec, w_spec],
+            out_specs=o_spec,
+            out_shape=out_shape,
+            interpret=True,
+        )(x, w)
+    b_spec = pl.BlockSpec((bn,), lambda i, j: (j,))
+    kernel = functools.partial(_matmul_kernel, activation=activation)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[x_spec, w_spec, b_spec],
+        out_specs=o_spec,
+        out_shape=out_shape,
+        interpret=True,
+    )(x, w, b)
+
+
+def vmem_bytes(m, k, n, block_m=DEFAULT_BLOCK, block_n=DEFAULT_BLOCK):
+    """Estimated VMEM footprint of one grid step (for DESIGN.md §Perf)."""
+    bm, bn = min(m, block_m), min(n, block_n)
+    return 4 * (bm * k + k * bn + bm * bn + bn)

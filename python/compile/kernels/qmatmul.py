@@ -1,0 +1,104 @@
+"""L1 Pallas kernel: INT8xINT8 -> INT32 matmul with dequant epilogue.
+
+The paper's INT8 quantization wins (Table 2: up to 4x on DLSA and the video
+streamer) come from AVX-512 VNNI's int8 dot-product instructions. The TPU
+rendition (DESIGN.md §3) is an MXU int8 matmul accumulating exactly in
+int32, with the per-tensor dequantization fused into the tile epilogue so
+the f32 intermediate never leaves VMEM.
+
+Interpret-mode note: on CPU the int8 path is checked for *numerics* (exact
+int32 accumulation, correct dequant); the throughput win is realized at the
+runtime layer where the INT8 artifacts move 4x fewer bytes per weight.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .matmul import _activate, _pick_block, DEFAULT_BLOCK
+
+
+def _qmatmul_kernel(x_ref, w_ref, b_ref, o_ref, *, scale, activation):
+    acc = jnp.dot(
+        x_ref[...].astype(jnp.int32),
+        w_ref[...].astype(jnp.int32),
+        preferred_element_type=jnp.int32,
+    )
+    out = acc.astype(jnp.float32) * scale
+    if b_ref is not None:
+        out = out + b_ref[...]
+    o_ref[...] = _activate(out, activation)
+
+
+def _qmatmul_kernel_nobias(x_ref, w_ref, o_ref, *, scale, activation):
+    _qmatmul_kernel(x_ref, w_ref, None, o_ref, scale=scale, activation=activation)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("x_scale", "w_scale", "activation", "block_m", "block_n")
+)
+def qmatmul(
+    x_q,
+    w_q,
+    x_scale,
+    w_scale,
+    b=None,
+    activation="none",
+    block_m=DEFAULT_BLOCK,
+    block_n=DEFAULT_BLOCK,
+):
+    """``activate((x_q @ w_q) * x_scale * w_scale + b)`` on int8 inputs.
+
+    x_q: (m, k) int8;  w_q: (k, n) int8;  b: (n,) f32 or None.
+    Scales are static python floats (per-tensor symmetric quantization), so
+    they bake into the kernel as constants — the artifact carries them.
+    """
+    m, k = x_q.shape
+    k2, n = w_q.shape
+    assert k == k2, f"qmatmul shape mismatch {x_q.shape} @ {w_q.shape}"
+    assert x_q.dtype == jnp.int8 and w_q.dtype == jnp.int8
+    bm = _pick_block(m, block_m)
+    bn = _pick_block(n, block_n)
+    grid = (m // bm, n // bn)
+    scale = float(x_scale) * float(w_scale)
+    out_shape = jax.ShapeDtypeStruct((m, n), jnp.float32)
+    x_spec = pl.BlockSpec((bm, k), lambda i, j: (i, 0))
+    w_spec = pl.BlockSpec((k, bn), lambda i, j: (0, j))
+    o_spec = pl.BlockSpec((bm, bn), lambda i, j: (i, j))
+    if b is None:
+        kernel = functools.partial(
+            _qmatmul_kernel_nobias, scale=scale, activation=activation
+        )
+        return pl.pallas_call(
+            kernel,
+            grid=grid,
+            in_specs=[x_spec, w_spec],
+            out_specs=o_spec,
+            out_shape=out_shape,
+            interpret=True,
+        )(x_q, w_q)
+    b_spec = pl.BlockSpec((bn,), lambda i, j: (j,))
+    kernel = functools.partial(_qmatmul_kernel, scale=scale, activation=activation)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[x_spec, w_spec, b_spec],
+        out_specs=o_spec,
+        out_shape=out_shape,
+        interpret=True,
+    )(x_q, w_q, b)
+
+
+def quantize(x, scale):
+    """Symmetric per-tensor int8 quantization (host-side helper for AOT)."""
+    return jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+
+
+def calibrate_scale(x, percentile=99.9):
+    """Max-percentile calibration: scale such that the percentile maps to 127."""
+    import numpy as np
+
+    hi = float(np.percentile(np.abs(np.asarray(x)), percentile))
+    return max(hi, 1e-8) / 127.0

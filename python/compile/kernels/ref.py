@@ -1,0 +1,74 @@
+"""Pure-jnp oracles for the Pallas kernels (L1 correctness ground truth).
+
+Every kernel in this package has a reference implementation here written
+with plain ``jax.numpy`` ops only. ``python/tests/test_kernels.py`` sweeps
+shapes/dtypes with hypothesis and asserts the Pallas (interpret-mode)
+kernels match these to float tolerance.
+"""
+
+import jax.numpy as jnp
+
+
+def activation_ref(x, kind: str):
+    """Reference epilogue activation."""
+    if kind == "none":
+        return x
+    if kind == "relu":
+        return jnp.maximum(x, 0.0)
+    if kind == "gelu":
+        # tanh approximation (matches the kernel's epilogue)
+        return 0.5 * x * (1.0 + jnp.tanh(0.7978845608028654 * (x + 0.044715 * x**3)))
+    if kind == "tanh":
+        return jnp.tanh(x)
+    if kind == "sigmoid":
+        return 1.0 / (1.0 + jnp.exp(-x))
+    raise ValueError(f"unknown activation {kind!r}")
+
+
+def matmul_ref(x, w, b=None, activation="none"):
+    """f32 matmul with optional fused bias + activation."""
+    out = jnp.matmul(x, w, preferred_element_type=jnp.float32)
+    if b is not None:
+        out = out + b
+    return activation_ref(out, activation)
+
+
+def qmatmul_ref(x_q, w_q, x_scale, w_scale, b=None, activation="none"):
+    """INT8xINT8 -> INT32 matmul with per-tensor dequant epilogue.
+
+    ``x_q``/``w_q`` are int8; scales are python/0-d floats such that
+    ``x ~= x_q * x_scale``. Accumulation is exact in int32 (the DL Boost
+    VNNI model); the epilogue dequantizes to f32.
+    """
+    acc = jnp.matmul(
+        x_q.astype(jnp.int32), w_q.astype(jnp.int32), preferred_element_type=jnp.int32
+    )
+    out = acc.astype(jnp.float32) * (x_scale * w_scale)
+    if b is not None:
+        out = out + b
+    return activation_ref(out, activation)
+
+
+def layernorm_ref(x, gamma, beta, eps=1e-5, residual=None):
+    """LayerNorm over the last axis, with optional pre-norm residual add."""
+    if residual is not None:
+        x = x + residual
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mean) ** 2, axis=-1, keepdims=True)
+    return (x - mean) / jnp.sqrt(var + eps) * gamma + beta
+
+
+def attention_ref(q, k, v, scale=None):
+    """Scaled dot-product attention over (T, d) blocks batched on axis 0."""
+    d = q.shape[-1]
+    if scale is None:
+        scale = 1.0 / jnp.sqrt(jnp.float32(d))
+    logits = jnp.einsum("...td,...sd->...ts", q, k) * scale
+    probs = jnp.exp(logits - jnp.max(logits, axis=-1, keepdims=True))
+    probs = probs / jnp.sum(probs, axis=-1, keepdims=True)
+    return jnp.einsum("...ts,...sd->...td", probs, v)
+
+
+def quantize_ref(x, scale):
+    """Symmetric per-tensor quantization to int8 with round-to-nearest."""
+    return jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)

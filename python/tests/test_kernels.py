@@ -1,0 +1,163 @@
+"""L1 kernel correctness: Pallas (interpret) vs pure-jnp oracles.
+
+Hypothesis sweeps shapes/dtypes/activations; assert_allclose against
+ref.py per the session contract.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import attention, layernorm, matmul, qmatmul, ref
+
+DIMS = st.integers(min_value=1, max_value=160)
+ACTS = st.sampled_from(["none", "relu", "gelu", "tanh", "sigmoid"])
+
+
+def rand(rs, *shape):
+    return jnp.asarray(rs.randn(*shape).astype(np.float32))
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=DIMS, k=DIMS, n=DIMS, act=ACTS, with_bias=st.booleans(), seed=st.integers(0, 2**31 - 1))
+def test_matmul_matches_ref(m, k, n, act, with_bias, seed):
+    rs = np.random.RandomState(seed)
+    x, w = rand(rs, m, k), rand(rs, k, n)
+    b = rand(rs, n) if with_bias else None
+    got = matmul.matmul(x, w, b, activation=act)
+    want = ref.matmul_ref(x, w, b, act)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    m=st.integers(1, 96),
+    k=st.integers(1, 96),
+    n=st.integers(1, 96),
+    bm=st.sampled_from([8, 32, 128, 256]),
+    bn=st.sampled_from([8, 32, 128, 256]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_block_shape_invariance(m, k, n, bm, bn, seed):
+    """Result must not depend on the tiling chosen."""
+    rs = np.random.RandomState(seed)
+    x, w = rand(rs, m, k), rand(rs, k, n)
+    got = matmul.matmul(x, w, block_m=bm, block_n=bn)
+    want = ref.matmul_ref(x, w)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(m=DIMS, k=DIMS, n=DIMS, act=ACTS, with_bias=st.booleans(), seed=st.integers(0, 2**31 - 1))
+def test_qmatmul_matches_ref(m, k, n, act, with_bias, seed):
+    rs = np.random.RandomState(seed)
+    x, w = rand(rs, m, k), rand(rs, k, n)
+    xs = qmatmul.calibrate_scale(x)
+    ws = qmatmul.calibrate_scale(w)
+    xq, wq = qmatmul.quantize(x, xs), qmatmul.quantize(w, ws)
+    b = rand(rs, n) if with_bias else None
+    got = qmatmul.qmatmul(xq, wq, xs, ws, b, activation=act)
+    want = ref.qmatmul_ref(xq, wq, xs, ws, b, act)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_qmatmul_int32_accumulation_is_exact():
+    """Saturating-free int8 dot must accumulate exactly (the VNNI model)."""
+    rs = np.random.RandomState(0)
+    xq = jnp.asarray(rs.randint(-127, 128, size=(16, 512), dtype=np.int8))
+    wq = jnp.asarray(rs.randint(-127, 128, size=(512, 16), dtype=np.int8))
+    got = qmatmul.qmatmul(xq, wq, 1.0, 1.0)
+    exact = np.asarray(xq, np.int64) @ np.asarray(wq, np.int64)
+    np.testing.assert_allclose(np.asarray(got), exact.astype(np.float32), rtol=1e-6)
+
+
+def test_quantization_error_is_bounded():
+    """|dequant(quant(x)) - x| <= scale/2 elementwise (round-to-nearest)."""
+    rs = np.random.RandomState(1)
+    x = jnp.asarray(rs.randn(64, 64).astype(np.float32))
+    s = qmatmul.calibrate_scale(x, percentile=100.0)
+    xq = qmatmul.quantize(x, s)
+    err = np.abs(np.asarray(xq, np.float32) * s - np.asarray(x))
+    assert float(err.max()) <= s / 2 + 1e-6
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    rows=DIMS,
+    d=st.integers(2, 128),
+    with_res=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_layernorm_matches_ref(rows, d, with_res, seed):
+    rs = np.random.RandomState(seed)
+    x = rand(rs, rows, d)
+    g, b = rand(rs, d), rand(rs, d)
+    res = rand(rs, rows, d) if with_res else None
+    got = layernorm.layernorm(x, g, b, residual=res)
+    want = ref.layernorm_ref(x, g, b, residual=res)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_layernorm_output_is_normalized():
+    rs = np.random.RandomState(2)
+    x = rand(rs, 32, 64) * 10 + 5
+    out = layernorm.layernorm(x, jnp.ones(64), jnp.zeros(64))
+    np.testing.assert_allclose(np.asarray(out).mean(axis=-1), 0.0, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(out).std(axis=-1), 1.0, atol=1e-3)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    b=st.integers(1, 6),
+    t=st.integers(1, 64),
+    d=st.integers(1, 64),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_attention_matches_ref(b, t, d, seed):
+    rs = np.random.RandomState(seed)
+    q, k, v = rand(rs, b, t, d), rand(rs, b, t, d), rand(rs, b, t, d)
+    got = attention.attention(q, k, v)
+    want = ref.attention_ref(q, k, v)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_attention_rows_are_convex_combinations():
+    """Each output row must lie in the convex hull of V rows: here checked
+    via probs summing to 1 → attention(q,k,ones) == ones."""
+    rs = np.random.RandomState(3)
+    q, k = rand(rs, 2, 8, 4), rand(rs, 2, 8, 4)
+    v = jnp.ones((2, 8, 4), jnp.float32)
+    out = attention.attention(q, k, v)
+    np.testing.assert_allclose(np.asarray(out), 1.0, rtol=1e-5)
+
+
+def test_attention_is_permutation_equivariant_in_keys():
+    """Permuting (k, v) together must not change the output."""
+    rs = np.random.RandomState(4)
+    q, k, v = rand(rs, 1, 8, 4), rand(rs, 1, 8, 4), rand(rs, 1, 8, 4)
+    perm = np.asarray([3, 1, 0, 2, 7, 6, 5, 4])
+    out1 = attention.attention(q, k, v)
+    out2 = attention.attention(q, k[:, perm], v[:, perm])
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2), rtol=1e-4, atol=1e-5)
+
+
+def test_pick_block_divides():
+    for dim in [1, 7, 64, 100, 128, 300]:
+        b = matmul._pick_block(dim, 128)
+        assert dim % b == 0
+        assert 1 <= b <= min(dim, 128)
+
+
+def test_vmem_budget_for_model_shapes():
+    """Every matmul the L2 models issue fits the 16 MiB VMEM budget."""
+    worst = matmul.vmem_bytes(128, 576, 128)  # largest K in the repo (im2col 9*64)
+    assert worst < 16 * 2**20
+
+
+@pytest.mark.parametrize("act", ["none", "relu", "gelu", "tanh", "sigmoid"])
+def test_activations_match_ref(act):
+    x = jnp.linspace(-4, 4, 101, dtype=jnp.float32).reshape(1, 101)
+    got = matmul.matmul(x, jnp.eye(101, dtype=jnp.float32), activation=act)
+    want = ref.activation_ref(x, act)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-6)

@@ -1,0 +1,149 @@
+//! Dynamic batching — the DLSA serving optimization (§3.3: "number of
+//! inference instances and batch size are tuned to achieve high E2E
+//! throughput").
+//!
+//! Collects items from an input channel into batches, flushing on either
+//! `max_batch` items or `max_wait` elapsed since the batch opened — the
+//! standard throughput/latency trade the paper tunes.
+
+use crate::parallel::channel::Receiver;
+use std::time::{Duration, Instant};
+
+/// Batching policy.
+#[derive(Debug, Clone, Copy)]
+pub struct BatcherConfig {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(5) }
+    }
+}
+
+/// Pull-based dynamic batcher over a channel receiver.
+pub struct DynamicBatcher<T> {
+    rx: Receiver<T>,
+    cfg: BatcherConfig,
+    /// Count of batches flushed by timeout (vs size) — ablation telemetry.
+    pub timeout_flushes: usize,
+    pub size_flushes: usize,
+}
+
+impl<T> DynamicBatcher<T> {
+    /// Wrap a receiver.
+    pub fn new(rx: Receiver<T>, cfg: BatcherConfig) -> Self {
+        DynamicBatcher { rx, cfg, timeout_flushes: 0, size_flushes: 0 }
+    }
+
+    /// Next batch: `None` when the channel is closed and drained. Blocks
+    /// for the first item, then fills until `max_batch` or `max_wait`.
+    pub fn next_batch(&mut self) -> Option<Vec<T>> {
+        let first = self.rx.recv().ok()?;
+        let mut batch = Vec::with_capacity(self.cfg.max_batch);
+        batch.push(first);
+        let deadline = Instant::now() + self.cfg.max_wait;
+        while batch.len() < self.cfg.max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                self.timeout_flushes += 1;
+                return Some(batch);
+            }
+            match self.rx.recv_timeout(deadline - now) {
+                Ok(item) => batch.push(item),
+                Err(true) => {
+                    // timed out
+                    self.timeout_flushes += 1;
+                    return Some(batch);
+                }
+                Err(false) => {
+                    // closed: emit what we have
+                    self.timeout_flushes += 1;
+                    return Some(batch);
+                }
+            }
+        }
+        self.size_flushes += 1;
+        Some(batch)
+    }
+
+    /// Drain everything into batches (for tests/benches).
+    pub fn drain(&mut self) -> Vec<Vec<T>> {
+        let mut out = Vec::new();
+        while let Some(b) = self.next_batch() {
+            out.push(b);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::parallel::channel::bounded;
+
+    #[test]
+    fn full_batches_when_queue_is_hot() {
+        let (tx, rx) = bounded(64);
+        for i in 0..20 {
+            tx.send(i).unwrap();
+        }
+        drop(tx);
+        let mut b = DynamicBatcher::new(
+            rx,
+            BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(50) },
+        );
+        let batches = b.drain();
+        assert_eq!(batches.len(), 3);
+        assert_eq!(batches[0].len(), 8);
+        assert_eq!(batches[2].len(), 4);
+        assert_eq!(b.size_flushes, 2);
+        assert_eq!(b.timeout_flushes, 1);
+        // Order preserved.
+        assert_eq!(batches[0][0], 0);
+        assert_eq!(batches[2][3], 19);
+    }
+
+    #[test]
+    fn timeout_flush_with_slow_producer() {
+        let (tx, rx) = bounded(8);
+        let producer = std::thread::spawn(move || {
+            tx.send(1).unwrap();
+            std::thread::sleep(Duration::from_millis(30));
+            tx.send(2).unwrap();
+        });
+        let mut b = DynamicBatcher::new(
+            rx,
+            BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(5) },
+        );
+        let first = b.next_batch().unwrap();
+        assert_eq!(first, vec![1]); // flushed by timeout before item 2
+        assert_eq!(b.timeout_flushes, 1);
+        let second = b.next_batch().unwrap();
+        assert_eq!(second, vec![2]);
+        assert!(b.next_batch().is_none());
+        producer.join().unwrap();
+    }
+
+    #[test]
+    fn closed_empty_channel_yields_none() {
+        let (tx, rx) = bounded::<u32>(2);
+        drop(tx);
+        let mut b = DynamicBatcher::new(rx, BatcherConfig::default());
+        assert!(b.next_batch().is_none());
+    }
+
+    #[test]
+    fn batch_of_one_when_max_batch_is_one() {
+        let (tx, rx) = bounded(4);
+        tx.send(9).unwrap();
+        drop(tx);
+        let mut b = DynamicBatcher::new(
+            rx,
+            BatcherConfig { max_batch: 1, max_wait: Duration::from_millis(1) },
+        );
+        assert_eq!(b.next_batch().unwrap(), vec![9]);
+        assert_eq!(b.size_flushes, 1);
+    }
+}

@@ -1,0 +1,28 @@
+//! Pipeline coordinator — the L3 orchestration layer.
+//!
+//! The paper's eight workloads decompose into stages (decode → preprocess
+//! → inference → postprocess → upload). This module provides:
+//!
+//! * [`telemetry`] — per-stage, per-category timing: the data behind
+//!   Figure 1 ("percent time in pre/postprocessing vs AI").
+//! * [`sequential`] — a batch pipeline runner (the tabular workloads):
+//!   named, categorized stages executed in order with timing.
+//! * [`stream`] — a streaming runner (the video/serving workloads): one
+//!   thread per stage connected by bounded channels → backpressure, with
+//!   the same telemetry.
+//! * [`batcher`] — dynamic batching (max batch size / max wait) used by
+//!   the DLSA serving path.
+//! * [`scaler`] — multi-instance execution (§3.4 workload scaling):
+//!   replicates a pipeline instance N times and aggregates throughput.
+
+pub mod telemetry;
+pub mod sequential;
+pub mod stream;
+pub mod batcher;
+pub mod scaler;
+
+pub use batcher::{BatcherConfig, DynamicBatcher};
+pub use scaler::{run_instances, ScalingReport};
+pub use sequential::SequentialPipeline;
+pub use stream::StreamPipeline;
+pub use telemetry::{Category, Report, StageReport, Telemetry};

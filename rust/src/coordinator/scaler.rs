@@ -1,0 +1,128 @@
+//! Multi-instance workload scaling (§3.4).
+//!
+//! "Multi-instance execution allows parallel streams of the application to
+//! be executed on a single Xeon server" — anomaly detection runs 10 camera
+//! streams, DIEN 40 instances/socket, DLSA 5–10 streams. This module
+//! replicates a pipeline-instance closure N times on worker threads and
+//! aggregates per-instance and total throughput.
+//!
+//! Sandbox note (DESIGN.md §2): with one hardware core the aggregate
+//! throughput stays roughly flat as instances scale (time-slicing), so the
+//! scaling bench reports *fairness* (per-instance share) and the
+//! coordination overhead — the quantities that must stay healthy for the
+//! paper's claim to hold on many-core hardware.
+
+use std::time::{Duration, Instant};
+
+/// Result of one instance run.
+#[derive(Debug, Clone)]
+pub struct InstanceReport {
+    pub instance: usize,
+    pub items: usize,
+    pub elapsed: Duration,
+}
+
+impl InstanceReport {
+    /// Items per second for this instance.
+    pub fn throughput(&self) -> f64 {
+        self.items as f64 / self.elapsed.as_secs_f64().max(1e-12)
+    }
+}
+
+/// Aggregate over all instances.
+#[derive(Debug, Clone)]
+pub struct ScalingReport {
+    pub instances: Vec<InstanceReport>,
+    pub wall: Duration,
+}
+
+impl ScalingReport {
+    /// Total items processed.
+    pub fn total_items(&self) -> usize {
+        self.instances.iter().map(|i| i.items).sum()
+    }
+
+    /// Aggregate throughput (items/s over wall time).
+    pub fn aggregate_throughput(&self) -> f64 {
+        self.total_items() as f64 / self.wall.as_secs_f64().max(1e-12)
+    }
+
+    /// Fairness: min/max per-instance items (1.0 = perfectly fair).
+    pub fn fairness(&self) -> f64 {
+        let min = self.instances.iter().map(|i| i.items).min().unwrap_or(0);
+        let max = self.instances.iter().map(|i| i.items).max().unwrap_or(0);
+        if max == 0 {
+            1.0
+        } else {
+            min as f64 / max as f64
+        }
+    }
+}
+
+/// Run `n` instances of `work` concurrently. Each instance gets its id and
+/// must return the number of items it processed.
+pub fn run_instances(
+    n: usize,
+    work: impl Fn(usize) -> usize + Sync,
+) -> ScalingReport {
+    let t0 = Instant::now();
+    let mut instances: Vec<InstanceReport> = Vec::with_capacity(n);
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..n)
+            .map(|i| {
+                let work = &work;
+                scope.spawn(move || {
+                    let it0 = Instant::now();
+                    let items = work(i);
+                    InstanceReport { instance: i, items, elapsed: it0.elapsed() }
+                })
+            })
+            .collect();
+        for h in handles {
+            instances.push(h.join().expect("instance panicked"));
+        }
+    });
+    ScalingReport { instances, wall: t0.elapsed() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn all_instances_run() {
+        let counter = AtomicUsize::new(0);
+        let report = run_instances(4, |i| {
+            counter.fetch_add(1, Ordering::Relaxed);
+            10 * (i + 1)
+        });
+        assert_eq!(counter.load(Ordering::Relaxed), 4);
+        assert_eq!(report.instances.len(), 4);
+        assert_eq!(report.total_items(), 10 + 20 + 30 + 40);
+        assert!(report.aggregate_throughput() > 0.0);
+    }
+
+    #[test]
+    fn fairness_metrics() {
+        let fair = run_instances(3, |_| 100);
+        assert_eq!(fair.fairness(), 1.0);
+        let unfair = run_instances(2, |i| if i == 0 { 10 } else { 100 });
+        assert!((unfair.fairness() - 0.1).abs() < 1e-9);
+    }
+
+    #[test]
+    fn zero_instances() {
+        let r = run_instances(0, |_| 1);
+        assert_eq!(r.total_items(), 0);
+        assert_eq!(r.fairness(), 1.0);
+    }
+
+    #[test]
+    fn instance_ids_are_distinct() {
+        let r = run_instances(5, |i| i);
+        let mut ids: Vec<usize> = r.instances.iter().map(|x| x.items).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, vec![0, 1, 2, 3, 4]);
+    }
+}

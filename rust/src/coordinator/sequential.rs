@@ -1,0 +1,84 @@
+//! Sequential (batch) pipeline runner — the tabular workloads' shape.
+//!
+//! Census/PLAsTiCC/IIoT/DIEN-preprocessing run stage after stage over one
+//! dataset. The runner threads a typed state `T` through named,
+//! categorized stages, timing each into a [`Telemetry`] so every run
+//! yields the Figure 1 breakdown for free.
+
+use super::telemetry::{Category, Report, Telemetry};
+
+type StageFn<T> = Box<dyn FnOnce(T) -> anyhow::Result<T>>;
+
+/// A typed, named sequence of stages over state `T`.
+pub struct SequentialPipeline<T> {
+    name: String,
+    stages: Vec<(String, Category, StageFn<T>)>,
+}
+
+impl<T> SequentialPipeline<T> {
+    /// New pipeline with a display name.
+    pub fn new(name: &str) -> Self {
+        SequentialPipeline { name: name.to_string(), stages: Vec::new() }
+    }
+
+    /// Append a stage.
+    pub fn stage(
+        mut self,
+        name: &str,
+        category: Category,
+        f: impl FnOnce(T) -> anyhow::Result<T> + 'static,
+    ) -> Self {
+        self.stages.push((name.to_string(), category, Box::new(f)));
+        self
+    }
+
+    /// Pipeline name.
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Run all stages; returns the final state and the telemetry report.
+    pub fn run(self, initial: T) -> anyhow::Result<(T, Report)> {
+        let telemetry = Telemetry::new();
+        let mut state = initial;
+        for (name, category, f) in self.stages {
+            let handle = telemetry.stage(&name, category);
+            let t0 = std::time::Instant::now();
+            state = f(state)?;
+            handle.record(t0.elapsed(), 1);
+        }
+        Ok((state, telemetry.report()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn threads_state_through_stages() {
+        let p = SequentialPipeline::new("test")
+            .stage("double", Category::Pre, |x: i32| Ok(x * 2))
+            .stage("add", Category::Ai, |x| Ok(x + 1));
+        let (out, report) = p.run(10).unwrap();
+        assert_eq!(out, 21);
+        assert_eq!(report.stages.len(), 2);
+        assert_eq!(report.stages[0].name, "double");
+        assert_eq!(report.stages[1].category, Category::Ai);
+    }
+
+    #[test]
+    fn error_stops_pipeline() {
+        let p = SequentialPipeline::new("failing")
+            .stage("ok", Category::Pre, |x: i32| Ok(x))
+            .stage("boom", Category::Ai, |_| anyhow::bail!("boom"))
+            .stage("never", Category::Post, |x| Ok(x + 100));
+        assert!(p.run(1).is_err());
+    }
+
+    #[test]
+    fn name_accessor() {
+        let p: SequentialPipeline<()> = SequentialPipeline::new("census");
+        assert_eq!(p.name(), "census");
+    }
+}

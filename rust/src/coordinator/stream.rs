@@ -1,0 +1,191 @@
+//! Streaming pipeline runner — the video/serving workloads' shape.
+//!
+//! Each stage runs on its own thread; stages are connected by bounded
+//! channels so a slow stage backpressures everything upstream (the
+//! paper's pipelines are throughput-bound, and unbounded queues would
+//! hide that and blow memory). Stage workers record busy time into the
+//! shared [`Telemetry`], producing the same Figure 1 breakdown as the
+//! sequential runner.
+//!
+//! Typing: stages transform `I → Vec<O>` (0..n outputs per input, so
+//! filters and batchers fit). The builder is a simple typed chain.
+
+use super::telemetry::{Category, Report, Telemetry};
+use crate::parallel::channel::{bounded, Receiver};
+use std::thread::JoinHandle;
+
+/// A running streaming pipeline typed by its current tail type `T`.
+pub struct StreamPipeline<T: Send + 'static> {
+    telemetry: Telemetry,
+    tail: Receiver<T>,
+    workers: Vec<JoinHandle<()>>,
+    queue_cap: usize,
+}
+
+impl<T: Send + 'static> StreamPipeline<T> {
+    /// Start a pipeline from a source closure that pushes items and
+    /// returns when done. `queue_cap` bounds every inter-stage queue.
+    pub fn source(
+        name: &str,
+        queue_cap: usize,
+        mut produce: impl FnMut(&mut dyn FnMut(T)) + Send + 'static,
+    ) -> StreamPipeline<T> {
+        let telemetry = Telemetry::new();
+        let handle = telemetry.stage(name, Category::Pre);
+        let (tx, rx) = bounded(queue_cap.max(1));
+        let worker = std::thread::Builder::new()
+            .name(format!("repro-src-{name}"))
+            .spawn(move || {
+                // Busy time = wall time minus time blocked inside send():
+                // send-blocking is backpressure (the downstream stage's
+                // cost), not production work — counting it would smear the
+                // slowest stage's time over the source in the Figure 1
+                // breakdown.
+                let t0 = std::time::Instant::now();
+                let mut blocked = std::time::Duration::ZERO;
+                let mut count = 0usize;
+                let mut emit = |item: T| {
+                    count += 1;
+                    let s0 = std::time::Instant::now();
+                    let _ = tx.send(item);
+                    blocked += s0.elapsed();
+                };
+                produce(&mut emit);
+                handle.record(t0.elapsed().saturating_sub(blocked), count);
+            })
+            .expect("spawn source");
+        StreamPipeline { telemetry, tail: rx, workers: vec![worker], queue_cap }
+    }
+
+    /// Append a transforming stage (`I → 0..n` outputs).
+    pub fn stage<O: Send + 'static>(
+        mut self,
+        name: &str,
+        category: Category,
+        mut f: impl FnMut(T) -> Vec<O> + Send + 'static,
+    ) -> StreamPipeline<O> {
+        let handle = self.telemetry.stage(name, category);
+        let (tx, rx) = bounded(self.queue_cap);
+        let upstream = self.tail;
+        let worker = std::thread::Builder::new()
+            .name(format!("repro-stage-{name}"))
+            .spawn(move || {
+                while let Ok(item) = upstream.recv() {
+                    let t0 = std::time::Instant::now();
+                    let outs = f(item);
+                    handle.record(t0.elapsed(), 1);
+                    for o in outs {
+                        if tx.send(o).is_err() {
+                            return; // downstream gone
+                        }
+                    }
+                }
+            })
+            .expect("spawn stage");
+        self.workers.push(worker);
+        StreamPipeline {
+            telemetry: self.telemetry,
+            tail: rx,
+            workers: self.workers,
+            queue_cap: self.queue_cap,
+        }
+    }
+
+    /// Consume the pipeline with a sink; blocks until the source finishes
+    /// and every queue drains, then returns the sink fold state and the
+    /// telemetry report.
+    pub fn sink<S>(
+        self,
+        name: &str,
+        category: Category,
+        mut state: S,
+        mut f: impl FnMut(&mut S, T),
+    ) -> (S, Report) {
+        let handle = self.telemetry.stage(name, category);
+        while let Ok(item) = self.tail.recv() {
+            let t0 = std::time::Instant::now();
+            f(&mut state, item);
+            handle.record(t0.elapsed(), 1);
+        }
+        for w in self.workers {
+            let _ = w.join();
+        }
+        (state, self.telemetry.report())
+    }
+
+    /// Queue depth of the tail (telemetry/debug).
+    pub fn tail_depth(&self) -> usize {
+        // Receivers don't expose depth directly; senders do. Acceptable to
+        // skip: depth is surfaced through the batcher instead.
+        0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn items_flow_through_all_stages_in_order() {
+        let p = StreamPipeline::source("gen", 4, |emit| {
+            for i in 0..100 {
+                emit(i);
+            }
+        })
+        .stage("double", Category::Pre, |x: i32| vec![x * 2])
+        .stage("keep_even_quarters", Category::Ai, |x: i32| {
+            if x % 4 == 0 {
+                vec![x]
+            } else {
+                vec![]
+            }
+        });
+        let (collected, report) = p.sink("collect", Category::Post, Vec::new(), |v, x| {
+            v.push(x);
+        });
+        let want: Vec<i32> = (0..100).map(|i| i * 2).filter(|x| x % 4 == 0).collect();
+        assert_eq!(collected, want);
+        assert_eq!(report.stages.len(), 4);
+        // Source saw 100, doubler saw 100, filter saw 100, sink saw 50.
+        assert_eq!(report.stages[1].items, 100);
+        assert_eq!(report.stages[3].items, 50);
+    }
+
+    #[test]
+    fn one_to_many_stage() {
+        let p = StreamPipeline::source("gen", 2, |emit| {
+            for i in 0..5 {
+                emit(i);
+            }
+        })
+        .stage("explode", Category::Pre, |x: i32| vec![x; 3]);
+        let (n, _) = p.sink("count", Category::Post, 0usize, |n, _| *n += 1);
+        assert_eq!(n, 15);
+    }
+
+    #[test]
+    fn bounded_queues_do_not_deadlock_with_slow_sink() {
+        let p = StreamPipeline::source("fast", 1, |emit| {
+            for i in 0..50 {
+                emit(i);
+            }
+        })
+        .stage("id", Category::Ai, |x: i32| vec![x]);
+        let (n, report) = p.sink("slow", Category::Post, 0usize, |n, _| {
+            std::thread::sleep(std::time::Duration::from_micros(200));
+            *n += 1;
+        });
+        assert_eq!(n, 50);
+        // Sink must dominate the busy time (backpressure did its job).
+        let sink_busy = report.stages.last().unwrap().busy;
+        assert!(sink_busy >= report.stages[1].busy);
+    }
+
+    #[test]
+    fn empty_source() {
+        let p = StreamPipeline::<i32>::source("none", 2, |_emit| {});
+        let (n, report) = p.sink("count", Category::Post, 0usize, |n, _| *n += 1);
+        assert_eq!(n, 0);
+        assert_eq!(report.stages[0].items, 0);
+    }
+}

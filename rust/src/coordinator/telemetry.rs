@@ -1,0 +1,190 @@
+//! Per-stage timing telemetry — the measurement behind Figure 1.
+
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Stage category for the pre/post-processing vs AI breakdown.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Category {
+    /// Data ingestion / preprocessing / feature engineering.
+    Pre,
+    /// Model execution (the "AI" share of Figure 1).
+    Ai,
+    /// Postprocessing / upload / reporting.
+    Post,
+}
+
+impl Category {
+    /// Label used in reports.
+    pub fn label(self) -> &'static str {
+        match self {
+            Category::Pre => "pre",
+            Category::Ai => "ai",
+            Category::Post => "post",
+        }
+    }
+}
+
+/// Aggregated timing for one stage.
+#[derive(Debug, Clone)]
+pub struct StageReport {
+    pub name: String,
+    pub category: Category,
+    pub items: usize,
+    pub busy: Duration,
+}
+
+/// Shared telemetry collector: stages register once and record laps.
+#[derive(Debug, Clone, Default)]
+pub struct Telemetry {
+    stages: Arc<Mutex<Vec<StageReport>>>,
+}
+
+/// Handle for recording one stage's time.
+#[derive(Debug, Clone)]
+pub struct StageHandle {
+    stages: Arc<Mutex<Vec<StageReport>>>,
+    index: usize,
+}
+
+impl Telemetry {
+    /// Fresh collector.
+    pub fn new() -> Telemetry {
+        Telemetry::default()
+    }
+
+    /// Register a stage; returns its recording handle.
+    pub fn stage(&self, name: &str, category: Category) -> StageHandle {
+        let mut stages = self.stages.lock().unwrap();
+        stages.push(StageReport {
+            name: name.to_string(),
+            category,
+            items: 0,
+            busy: Duration::ZERO,
+        });
+        StageHandle { stages: Arc::clone(&self.stages), index: stages.len() - 1 }
+    }
+
+    /// Snapshot of all stages.
+    pub fn report(&self) -> Report {
+        Report { stages: self.stages.lock().unwrap().clone() }
+    }
+}
+
+impl StageHandle {
+    /// Record `d` of busy time covering `items` processed items.
+    pub fn record(&self, d: Duration, items: usize) {
+        let mut stages = self.stages.lock().unwrap();
+        let s = &mut stages[self.index];
+        s.busy += d;
+        s.items += items;
+    }
+
+    /// Time a closure and record it as one item.
+    pub fn time<T>(&self, f: impl FnOnce() -> T) -> T {
+        let t0 = std::time::Instant::now();
+        let out = f();
+        self.record(t0.elapsed(), 1);
+        out
+    }
+}
+
+/// A finished run's telemetry.
+#[derive(Debug, Clone)]
+pub struct Report {
+    pub stages: Vec<StageReport>,
+}
+
+impl Report {
+    /// Total busy time across stages.
+    pub fn total(&self) -> Duration {
+        self.stages.iter().map(|s| s.busy).sum()
+    }
+
+    /// Busy time for one category.
+    pub fn category_time(&self, c: Category) -> Duration {
+        self.stages.iter().filter(|s| s.category == c).map(|s| s.busy).sum()
+    }
+
+    /// Percent of total busy time in a category (0–100); the Figure 1
+    /// quantity. Pre and Post are combined by the caller when the paper's
+    /// two-way split is wanted.
+    pub fn category_pct(&self, c: Category) -> f64 {
+        let total = self.total().as_secs_f64();
+        if total == 0.0 {
+            return 0.0;
+        }
+        100.0 * self.category_time(c).as_secs_f64() / total
+    }
+
+    /// The Figure 1 split: (pre+post %, ai %).
+    pub fn fig1_split(&self) -> (f64, f64) {
+        let pre = self.category_pct(Category::Pre) + self.category_pct(Category::Post);
+        let ai = self.category_pct(Category::Ai);
+        (pre, ai)
+    }
+
+    /// Render a per-stage table.
+    pub fn table(&self) -> crate::util::fmt::Table {
+        let mut t =
+            crate::util::fmt::Table::new(&["stage", "category", "items", "busy", "% of total"]);
+        let total = self.total().as_secs_f64().max(1e-12);
+        for s in &self.stages {
+            t.row(&[
+                s.name.clone(),
+                s.category.label().to_string(),
+                s.items.to_string(),
+                crate::util::fmt::dur(s.busy),
+                format!("{:.1}%", 100.0 * s.busy.as_secs_f64() / total),
+            ]);
+        }
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_aggregates() {
+        let tel = Telemetry::new();
+        let pre = tel.stage("ingest", Category::Pre);
+        let ai = tel.stage("model", Category::Ai);
+        pre.record(Duration::from_millis(30), 10);
+        ai.record(Duration::from_millis(10), 10);
+        let r = tel.report();
+        assert_eq!(r.stages.len(), 2);
+        assert_eq!(r.total(), Duration::from_millis(40));
+        let (pre_pct, ai_pct) = r.fig1_split();
+        assert!((pre_pct - 75.0).abs() < 1e-9);
+        assert!((ai_pct - 25.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn time_closure_counts_an_item() {
+        let tel = Telemetry::new();
+        let h = tel.stage("s", Category::Post);
+        let v = h.time(|| 5);
+        assert_eq!(v, 5);
+        let r = tel.report();
+        assert_eq!(r.stages[0].items, 1);
+        assert!(r.category_pct(Category::Post) > 99.0);
+    }
+
+    #[test]
+    fn empty_report_is_zero() {
+        let r = Telemetry::new().report();
+        assert_eq!(r.total(), Duration::ZERO);
+        assert_eq!(r.fig1_split(), (0.0, 0.0));
+    }
+
+    #[test]
+    fn table_renders() {
+        let tel = Telemetry::new();
+        tel.stage("a", Category::Pre).record(Duration::from_millis(1), 2);
+        let s = tel.report().table().render();
+        assert!(s.contains("a"), "{s}");
+        assert!(s.contains("pre"));
+    }
+}

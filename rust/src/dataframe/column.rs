@@ -1,0 +1,493 @@
+//! Typed columns with null masks, plus the boxed [`Value`] used by the
+//! baseline row-interpreter.
+
+/// Column data type.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F64,
+    I64,
+    Str,
+    Bool,
+}
+
+impl DType {
+    /// Name for error messages.
+    pub fn name(self) -> &'static str {
+        match self {
+            DType::F64 => "f64",
+            DType::I64 => "i64",
+            DType::Str => "str",
+            DType::Bool => "bool",
+        }
+    }
+}
+
+/// A boxed scalar cell — the baseline engine's per-cell representation,
+/// modeling the pandas object path (every access allocates/clones).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    F64(f64),
+    I64(i64),
+    Str(String),
+    Bool(bool),
+    Null,
+}
+
+impl Value {
+    /// Numeric view (i64 widens to f64; bool is 0/1), `None` for
+    /// null/string.
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::F64(x) => Some(*x),
+            Value::I64(x) => Some(*x as f64),
+            Value::Bool(b) => Some(if *b { 1.0 } else { 0.0 }),
+            _ => None,
+        }
+    }
+
+    /// Truthiness for filter predicates.
+    pub fn is_truthy(&self) -> bool {
+        matches!(self, Value::Bool(true))
+    }
+
+    /// Type name for diagnostics.
+    pub fn type_name(&self) -> &'static str {
+        match self {
+            Value::F64(_) => "f64",
+            Value::I64(_) => "i64",
+            Value::Str(_) => "str",
+            Value::Bool(_) => "bool",
+            Value::Null => "null",
+        }
+    }
+}
+
+/// A typed column. Nulls are tracked in an optional validity mask
+/// (`true` = valid); a missing mask means all-valid.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Column {
+    F64(Vec<f64>, Option<Vec<bool>>),
+    I64(Vec<i64>, Option<Vec<bool>>),
+    Str(Vec<String>, Option<Vec<bool>>),
+    Bool(Vec<bool>, Option<Vec<bool>>),
+}
+
+impl Column {
+    /// All-valid f64 column.
+    pub fn f64(v: Vec<f64>) -> Column {
+        Column::F64(v, None)
+    }
+
+    /// All-valid i64 column.
+    pub fn i64(v: Vec<i64>) -> Column {
+        Column::I64(v, None)
+    }
+
+    /// All-valid string column.
+    pub fn str(v: Vec<String>) -> Column {
+        Column::Str(v, None)
+    }
+
+    /// All-valid bool column.
+    pub fn bool(v: Vec<bool>) -> Column {
+        Column::Bool(v, None)
+    }
+
+    /// Number of rows.
+    pub fn len(&self) -> usize {
+        match self {
+            Column::F64(v, _) => v.len(),
+            Column::I64(v, _) => v.len(),
+            Column::Str(v, _) => v.len(),
+            Column::Bool(v, _) => v.len(),
+        }
+    }
+
+    /// True if empty.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Data type tag.
+    pub fn dtype(&self) -> DType {
+        match self {
+            Column::F64(..) => DType::F64,
+            Column::I64(..) => DType::I64,
+            Column::Str(..) => DType::Str,
+            Column::Bool(..) => DType::Bool,
+        }
+    }
+
+    /// Is row `i` valid (non-null)?
+    pub fn is_valid(&self, i: usize) -> bool {
+        let mask = match self {
+            Column::F64(_, m) | Column::I64(_, m) | Column::Str(_, m) | Column::Bool(_, m) => m,
+        };
+        mask.as_ref().map(|m| m[i]).unwrap_or(true)
+    }
+
+    /// Number of null entries.
+    pub fn null_count(&self) -> usize {
+        let mask = match self {
+            Column::F64(_, m) | Column::I64(_, m) | Column::Str(_, m) | Column::Bool(_, m) => m,
+        };
+        mask.as_ref().map(|m| m.iter().filter(|v| !**v).count()).unwrap_or(0)
+    }
+
+    /// Boxed cell at row `i` (the baseline engine's access path; clones
+    /// strings by design — that cost is the thing being modeled).
+    pub fn value(&self, i: usize) -> Value {
+        if !self.is_valid(i) {
+            return Value::Null;
+        }
+        match self {
+            Column::F64(v, _) => Value::F64(v[i]),
+            Column::I64(v, _) => Value::I64(v[i]),
+            Column::Str(v, _) => Value::Str(v[i].clone()),
+            Column::Bool(v, _) => Value::Bool(v[i]),
+        }
+    }
+
+    /// Typed view of an f64 column.
+    pub fn as_f64(&self) -> Option<&[f64]> {
+        match self {
+            Column::F64(v, _) => Some(v),
+            _ => None,
+        }
+    }
+
+    /// Typed view of an i64 column.
+    pub fn as_i64(&self) -> Option<&[i64]> {
+        match self {
+            Column::I64(v, _) => Some(v),
+            _ => None,
+        }
+    }
+
+    /// Typed view of a string column.
+    pub fn as_str(&self) -> Option<&[String]> {
+        match self {
+            Column::Str(v, _) => Some(v),
+            _ => None,
+        }
+    }
+
+    /// Typed view of a bool column.
+    pub fn as_bool(&self) -> Option<&[bool]> {
+        match self {
+            Column::Bool(v, _) => Some(v),
+            _ => None,
+        }
+    }
+
+    /// Validity mask if present.
+    pub fn mask(&self) -> Option<&[bool]> {
+        match self {
+            Column::F64(_, m) | Column::I64(_, m) | Column::Str(_, m) | Column::Bool(_, m) => {
+                m.as_deref()
+            }
+        }
+    }
+
+    /// Build a column by appending boxed values (baseline construction
+    /// path). Picks the type from the first non-null value; numeric columns
+    /// widen i64→f64 if mixed.
+    pub fn from_values(vals: &[Value]) -> Column {
+        // Decide dtype.
+        let mut dtype: Option<DType> = None;
+        let mut saw_f64 = false;
+        for v in vals {
+            match v {
+                Value::F64(_) => {
+                    saw_f64 = true;
+                    dtype.get_or_insert(DType::F64);
+                }
+                Value::I64(_) => {
+                    dtype.get_or_insert(DType::I64);
+                }
+                Value::Str(_) => {
+                    dtype.get_or_insert(DType::Str);
+                }
+                Value::Bool(_) => {
+                    dtype.get_or_insert(DType::Bool);
+                }
+                Value::Null => {}
+            }
+        }
+        let dtype = match (dtype, saw_f64) {
+            (Some(DType::I64), true) | (Some(DType::F64), _) => DType::F64,
+            (Some(d), _) => d,
+            (None, _) => DType::F64, // all-null: default numeric
+        };
+        let n = vals.len();
+        let mut mask = vec![true; n];
+        let mut any_null = false;
+        match dtype {
+            DType::F64 => {
+                let mut out = vec![0.0f64; n];
+                for (i, v) in vals.iter().enumerate() {
+                    match v.as_f64() {
+                        Some(x) => out[i] = x,
+                        None => {
+                            mask[i] = false;
+                            any_null = true;
+                        }
+                    }
+                }
+                Column::F64(out, any_null.then_some(mask))
+            }
+            DType::I64 => {
+                let mut out = vec![0i64; n];
+                for (i, v) in vals.iter().enumerate() {
+                    match v {
+                        Value::I64(x) => out[i] = *x,
+                        Value::Bool(b) => out[i] = *b as i64,
+                        _ => {
+                            mask[i] = false;
+                            any_null = true;
+                        }
+                    }
+                }
+                Column::I64(out, any_null.then_some(mask))
+            }
+            DType::Str => {
+                let mut out = vec![String::new(); n];
+                for (i, v) in vals.iter().enumerate() {
+                    match v {
+                        Value::Str(s) => out[i] = s.clone(),
+                        _ => {
+                            mask[i] = false;
+                            any_null = true;
+                        }
+                    }
+                }
+                Column::Str(out, any_null.then_some(mask))
+            }
+            DType::Bool => {
+                let mut out = vec![false; n];
+                for (i, v) in vals.iter().enumerate() {
+                    match v {
+                        Value::Bool(b) => out[i] = *b,
+                        _ => {
+                            mask[i] = false;
+                            any_null = true;
+                        }
+                    }
+                }
+                Column::Bool(out, any_null.then_some(mask))
+            }
+        }
+    }
+
+    /// Gather rows at `idx` into a new column.
+    pub fn take(&self, idx: &[usize]) -> Column {
+        let gather_mask = |m: &Option<Vec<bool>>| -> Option<Vec<bool>> {
+            m.as_ref().map(|m| idx.iter().map(|&i| m[i]).collect())
+        };
+        match self {
+            Column::F64(v, m) => Column::F64(idx.iter().map(|&i| v[i]).collect(), gather_mask(m)),
+            Column::I64(v, m) => Column::I64(idx.iter().map(|&i| v[i]).collect(), gather_mask(m)),
+            Column::Str(v, m) => {
+                Column::Str(idx.iter().map(|&i| v[i].clone()).collect(), gather_mask(m))
+            }
+            Column::Bool(v, m) => {
+                Column::Bool(idx.iter().map(|&i| v[i]).collect(), gather_mask(m))
+            }
+        }
+    }
+
+    /// Filter by a boolean keep-mask (vectorized path).
+    pub fn filter(&self, keep: &[bool]) -> Column {
+        debug_assert_eq!(keep.len(), self.len());
+        let fm = |m: &Option<Vec<bool>>| -> Option<Vec<bool>> {
+            m.as_ref().map(|m| {
+                m.iter().zip(keep).filter(|(_, k)| **k).map(|(v, _)| *v).collect()
+            })
+        };
+        match self {
+            Column::F64(v, m) => Column::F64(
+                v.iter().zip(keep).filter(|(_, k)| **k).map(|(x, _)| *x).collect(),
+                fm(m),
+            ),
+            Column::I64(v, m) => Column::I64(
+                v.iter().zip(keep).filter(|(_, k)| **k).map(|(x, _)| *x).collect(),
+                fm(m),
+            ),
+            Column::Str(v, m) => Column::Str(
+                v.iter().zip(keep).filter(|(_, k)| **k).map(|(x, _)| x.clone()).collect(),
+                fm(m),
+            ),
+            Column::Bool(v, m) => Column::Bool(
+                v.iter().zip(keep).filter(|(_, k)| **k).map(|(x, _)| *x).collect(),
+                fm(m),
+            ),
+        }
+    }
+
+    /// Cast to another dtype (vectorized). Strings parse numerically;
+    /// failures become null.
+    pub fn cast(&self, to: DType) -> Column {
+        let n = self.len();
+        match to {
+            DType::F64 => {
+                let mut out = vec![0.0f64; n];
+                let mut mask = vec![true; n];
+                let mut any_null = false;
+                for i in 0..n {
+                    if !self.is_valid(i) {
+                        mask[i] = false;
+                        any_null = true;
+                        continue;
+                    }
+                    let v = match self {
+                        Column::F64(v, _) => Some(v[i]),
+                        Column::I64(v, _) => Some(v[i] as f64),
+                        Column::Bool(v, _) => Some(v[i] as i64 as f64),
+                        Column::Str(v, _) => v[i].trim().parse::<f64>().ok(),
+                    };
+                    match v {
+                        Some(x) => out[i] = x,
+                        None => {
+                            mask[i] = false;
+                            any_null = true;
+                        }
+                    }
+                }
+                Column::F64(out, any_null.then_some(mask))
+            }
+            DType::I64 => {
+                let mut out = vec![0i64; n];
+                let mut mask = vec![true; n];
+                let mut any_null = false;
+                for i in 0..n {
+                    if !self.is_valid(i) {
+                        mask[i] = false;
+                        any_null = true;
+                        continue;
+                    }
+                    let v = match self {
+                        Column::F64(v, _) => Some(v[i] as i64),
+                        Column::I64(v, _) => Some(v[i]),
+                        Column::Bool(v, _) => Some(v[i] as i64),
+                        Column::Str(v, _) => v[i].trim().parse::<i64>().ok(),
+                    };
+                    match v {
+                        Some(x) => out[i] = x,
+                        None => {
+                            mask[i] = false;
+                            any_null = true;
+                        }
+                    }
+                }
+                Column::I64(out, any_null.then_some(mask))
+            }
+            DType::Str => {
+                let out: Vec<String> = (0..n)
+                    .map(|i| match self {
+                        Column::F64(v, _) => v[i].to_string(),
+                        Column::I64(v, _) => v[i].to_string(),
+                        Column::Bool(v, _) => v[i].to_string(),
+                        Column::Str(v, _) => v[i].clone(),
+                    })
+                    .collect();
+                let mask = self.mask().map(|m| m.to_vec());
+                Column::Str(out, mask)
+            }
+            DType::Bool => {
+                let mut out = vec![false; n];
+                let mut mask = vec![true; n];
+                let mut any_null = false;
+                for i in 0..n {
+                    if !self.is_valid(i) {
+                        mask[i] = false;
+                        any_null = true;
+                        continue;
+                    }
+                    out[i] = match self {
+                        Column::F64(v, _) => v[i] != 0.0,
+                        Column::I64(v, _) => v[i] != 0,
+                        Column::Bool(v, _) => v[i],
+                        Column::Str(v, _) => v[i] == "true" || v[i] == "1",
+                    };
+                }
+                Column::Bool(out, any_null.then_some(mask))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn value_round_trip() {
+        let c = Column::f64(vec![1.0, 2.0]);
+        assert_eq!(c.value(0), Value::F64(1.0));
+        assert_eq!(c.dtype(), DType::F64);
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.null_count(), 0);
+    }
+
+    #[test]
+    fn nulls_tracked() {
+        let c = Column::F64(vec![1.0, 2.0, 3.0], Some(vec![true, false, true]));
+        assert_eq!(c.value(1), Value::Null);
+        assert_eq!(c.null_count(), 1);
+        assert!(c.is_valid(0));
+        assert!(!c.is_valid(1));
+    }
+
+    #[test]
+    fn from_values_infers_types() {
+        let c = Column::from_values(&[Value::I64(1), Value::Null, Value::I64(3)]);
+        assert_eq!(c.dtype(), DType::I64);
+        assert_eq!(c.null_count(), 1);
+
+        let c = Column::from_values(&[Value::I64(1), Value::F64(0.5)]);
+        assert_eq!(c.dtype(), DType::F64);
+        assert_eq!(c.value(0), Value::F64(1.0));
+
+        let c = Column::from_values(&[Value::Str("a".into())]);
+        assert_eq!(c.dtype(), DType::Str);
+    }
+
+    #[test]
+    fn take_gathers_with_mask() {
+        let c = Column::I64(vec![10, 20, 30], Some(vec![true, false, true]));
+        let t = c.take(&[2, 1]);
+        assert_eq!(t.value(0), Value::I64(30));
+        assert_eq!(t.value(1), Value::Null);
+    }
+
+    #[test]
+    fn filter_keeps_marked_rows() {
+        let c = Column::str(vec!["a".into(), "b".into(), "c".into()]);
+        let f = c.filter(&[true, false, true]);
+        assert_eq!(f.as_str().unwrap(), &["a".to_string(), "c".to_string()]);
+    }
+
+    #[test]
+    fn cast_str_to_f64_with_failures() {
+        let c = Column::str(vec!["1.5".into(), "oops".into(), " 2 ".into()]);
+        let f = c.cast(DType::F64);
+        assert_eq!(f.value(0), Value::F64(1.5));
+        assert_eq!(f.value(1), Value::Null);
+        assert_eq!(f.value(2), Value::F64(2.0));
+    }
+
+    #[test]
+    fn cast_preserves_nulls() {
+        let c = Column::I64(vec![1, 2], Some(vec![false, true]));
+        let f = c.cast(DType::F64);
+        assert_eq!(f.value(0), Value::Null);
+        assert_eq!(f.value(1), Value::F64(2.0));
+    }
+
+    #[test]
+    fn cast_to_bool_and_str() {
+        let c = Column::i64(vec![0, 3]);
+        assert_eq!(c.cast(DType::Bool).as_bool().unwrap(), &[false, true]);
+        assert_eq!(c.cast(DType::Str).as_str().unwrap(), &["0".to_string(), "3".to_string()]);
+    }
+}

@@ -1,0 +1,322 @@
+//! The [`DataFrame`]: named columns of equal length.
+
+use super::column::{Column, DType, Value};
+use super::FrameError;
+
+/// A named-column dataframe. All columns have the same length.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct DataFrame {
+    names: Vec<String>,
+    cols: Vec<Column>,
+}
+
+impl DataFrame {
+    /// Empty frame.
+    pub fn new() -> Self {
+        DataFrame::default()
+    }
+
+    /// Build from `(name, column)` pairs. Panics on length mismatch
+    /// (constructor misuse is a programming error).
+    pub fn from_cols(pairs: Vec<(&str, Column)>) -> Self {
+        let mut df = DataFrame::new();
+        for (name, col) in pairs {
+            df.push(name, col).expect("from_cols length mismatch");
+        }
+        df
+    }
+
+    /// Number of rows.
+    pub fn nrows(&self) -> usize {
+        self.cols.first().map(|c| c.len()).unwrap_or(0)
+    }
+
+    /// Number of columns.
+    pub fn ncols(&self) -> usize {
+        self.cols.len()
+    }
+
+    /// Column names in order.
+    pub fn names(&self) -> &[String] {
+        &self.names
+    }
+
+    /// Append a column. Errors if the length disagrees with the frame.
+    pub fn push(&mut self, name: &str, col: Column) -> Result<(), FrameError> {
+        if !self.cols.is_empty() && col.len() != self.nrows() {
+            return Err(FrameError::LengthMismatch {
+                col: name.to_string(),
+                got: col.len(),
+                want: self.nrows(),
+            });
+        }
+        if let Some(i) = self.index_of(name) {
+            self.cols[i] = col; // replace in place, pandas-style assignment
+        } else {
+            self.names.push(name.to_string());
+            self.cols.push(col);
+        }
+        Ok(())
+    }
+
+    /// Column index by name.
+    pub fn index_of(&self, name: &str) -> Option<usize> {
+        self.names.iter().position(|n| n == name)
+    }
+
+    /// Borrow a column by name.
+    pub fn col(&self, name: &str) -> Result<&Column, FrameError> {
+        self.index_of(name)
+            .map(|i| &self.cols[i])
+            .ok_or_else(|| FrameError::UnknownColumn(name.to_string()))
+    }
+
+    /// Borrow a column by position.
+    pub fn col_at(&self, i: usize) -> &Column {
+        &self.cols[i]
+    }
+
+    /// Typed f64 slice of a column.
+    pub fn f64s(&self, name: &str) -> Result<&[f64], FrameError> {
+        let c = self.col(name)?;
+        c.as_f64().ok_or_else(|| FrameError::TypeMismatch {
+            col: name.to_string(),
+            expected: "f64",
+            got: c.dtype().name(),
+        })
+    }
+
+    /// Typed i64 slice of a column.
+    pub fn i64s(&self, name: &str) -> Result<&[i64], FrameError> {
+        let c = self.col(name)?;
+        c.as_i64().ok_or_else(|| FrameError::TypeMismatch {
+            col: name.to_string(),
+            expected: "i64",
+            got: c.dtype().name(),
+        })
+    }
+
+    /// Typed str slice of a column.
+    pub fn strs(&self, name: &str) -> Result<&[String], FrameError> {
+        let c = self.col(name)?;
+        c.as_str().ok_or_else(|| FrameError::TypeMismatch {
+            col: name.to_string(),
+            expected: "str",
+            got: c.dtype().name(),
+        })
+    }
+
+    /// Boxed row view (baseline engine access path).
+    pub fn row_values(&self, i: usize) -> Vec<Value> {
+        self.cols.iter().map(|c| c.value(i)).collect()
+    }
+
+    /// Schema as `(name, dtype)` pairs.
+    pub fn schema(&self) -> Vec<(String, DType)> {
+        self.names.iter().cloned().zip(self.cols.iter().map(|c| c.dtype())).collect()
+    }
+
+    /// Keep only the named columns, in the given order.
+    pub fn select(&self, keep: &[&str]) -> Result<DataFrame, FrameError> {
+        let mut out = DataFrame::new();
+        for &name in keep {
+            out.push(name, self.col(name)?.clone())?;
+        }
+        Ok(out)
+    }
+
+    /// Drop the named columns (ignores unknown names, like
+    /// `df.drop(columns=…, errors="ignore")`).
+    pub fn drop_cols(&self, drop: &[&str]) -> DataFrame {
+        let mut out = DataFrame::new();
+        for (name, col) in self.names.iter().zip(&self.cols) {
+            if !drop.contains(&name.as_str()) {
+                out.push(name, col.clone()).unwrap();
+            }
+        }
+        out
+    }
+
+    /// Gather rows by index.
+    pub fn take(&self, idx: &[usize]) -> DataFrame {
+        let mut out = DataFrame::new();
+        for (name, col) in self.names.iter().zip(&self.cols) {
+            out.push(name, col.take(idx)).unwrap();
+        }
+        out
+    }
+
+    /// Keep rows where `keep[i]` is true.
+    pub fn filter_rows(&self, keep: &[bool]) -> DataFrame {
+        let mut out = DataFrame::new();
+        for (name, col) in self.names.iter().zip(&self.cols) {
+            out.push(name, col.filter(keep)).unwrap();
+        }
+        out
+    }
+
+    /// First `n` rows (for display/debug).
+    pub fn head(&self, n: usize) -> DataFrame {
+        let idx: Vec<usize> = (0..self.nrows().min(n)).collect();
+        self.take(&idx)
+    }
+
+    /// Vertically concatenate frames with identical schemas.
+    pub fn concat(frames: &[DataFrame]) -> Result<DataFrame, FrameError> {
+        let first = match frames.first() {
+            Some(f) => f,
+            None => return Ok(DataFrame::new()),
+        };
+        let mut out = first.clone();
+        for f in &frames[1..] {
+            if f.names != first.names {
+                return Err(FrameError::Other("concat: schema mismatch".into()));
+            }
+            for (i, col) in f.cols.iter().enumerate() {
+                out.cols[i] = concat_cols(&out.cols[i], col)?;
+            }
+        }
+        Ok(out)
+    }
+
+    /// Render the first rows as a small table (debugging aid).
+    pub fn preview(&self, n: usize) -> String {
+        let mut t = crate::util::fmt::Table::new(
+            &self.names.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
+        );
+        for i in 0..self.nrows().min(n) {
+            let row: Vec<String> = self
+                .row_values(i)
+                .iter()
+                .map(|v| match v {
+                    Value::F64(x) => format!("{x:.4}"),
+                    Value::I64(x) => x.to_string(),
+                    Value::Str(s) => s.clone(),
+                    Value::Bool(b) => b.to_string(),
+                    Value::Null => "null".into(),
+                })
+                .collect();
+            t.row(&row);
+        }
+        t.render()
+    }
+}
+
+fn concat_cols(a: &Column, b: &Column) -> Result<Column, FrameError> {
+    let join_masks = |ma: Option<&[bool]>, mb: Option<&[bool]>, la: usize, lb: usize| {
+        if ma.is_none() && mb.is_none() {
+            None
+        } else {
+            let mut m = ma.map(|m| m.to_vec()).unwrap_or_else(|| vec![true; la]);
+            m.extend(mb.map(|m| m.to_vec()).unwrap_or_else(|| vec![true; lb]));
+            Some(m)
+        }
+    };
+    match (a, b) {
+        (Column::F64(va, ma), Column::F64(vb, mb)) => {
+            let mut v = va.clone();
+            v.extend_from_slice(vb);
+            Ok(Column::F64(v, join_masks(ma.as_deref(), mb.as_deref(), va.len(), vb.len())))
+        }
+        (Column::I64(va, ma), Column::I64(vb, mb)) => {
+            let mut v = va.clone();
+            v.extend_from_slice(vb);
+            Ok(Column::I64(v, join_masks(ma.as_deref(), mb.as_deref(), va.len(), vb.len())))
+        }
+        (Column::Str(va, ma), Column::Str(vb, mb)) => {
+            let mut v = va.clone();
+            v.extend_from_slice(vb);
+            Ok(Column::Str(v, join_masks(ma.as_deref(), mb.as_deref(), va.len(), vb.len())))
+        }
+        (Column::Bool(va, ma), Column::Bool(vb, mb)) => {
+            let mut v = va.clone();
+            v.extend_from_slice(vb);
+            Ok(Column::Bool(v, join_masks(ma.as_deref(), mb.as_deref(), va.len(), vb.len())))
+        }
+        _ => Err(FrameError::Other("concat: dtype mismatch".into())),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> DataFrame {
+        DataFrame::from_cols(vec![
+            ("a", Column::f64(vec![1.0, 2.0, 3.0])),
+            ("b", Column::i64(vec![10, 20, 30])),
+            ("c", Column::str(vec!["x".into(), "y".into(), "z".into()])),
+        ])
+    }
+
+    #[test]
+    fn shape_and_schema() {
+        let df = sample();
+        assert_eq!(df.nrows(), 3);
+        assert_eq!(df.ncols(), 3);
+        assert_eq!(df.schema()[1], ("b".to_string(), DType::I64));
+    }
+
+    #[test]
+    fn select_and_drop() {
+        let df = sample();
+        let s = df.select(&["c", "a"]).unwrap();
+        assert_eq!(s.names(), &["c".to_string(), "a".to_string()]);
+        let d = df.drop_cols(&["b", "missing"]);
+        assert_eq!(d.ncols(), 2);
+    }
+
+    #[test]
+    fn unknown_column_errors() {
+        let df = sample();
+        assert!(matches!(df.col("nope"), Err(FrameError::UnknownColumn(_))));
+        assert!(df.select(&["nope"]).is_err());
+    }
+
+    #[test]
+    fn typed_access_checks_types() {
+        let df = sample();
+        assert!(df.f64s("a").is_ok());
+        assert!(matches!(df.f64s("c"), Err(FrameError::TypeMismatch { .. })));
+    }
+
+    #[test]
+    fn push_length_mismatch() {
+        let mut df = sample();
+        assert!(df.push("bad", Column::f64(vec![1.0])).is_err());
+    }
+
+    #[test]
+    fn push_replaces_existing() {
+        let mut df = sample();
+        df.push("a", Column::f64(vec![9.0, 9.0, 9.0])).unwrap();
+        assert_eq!(df.f64s("a").unwrap(), &[9.0, 9.0, 9.0]);
+        assert_eq!(df.ncols(), 3);
+    }
+
+    #[test]
+    fn take_and_filter() {
+        let df = sample();
+        let t = df.take(&[2, 0]);
+        assert_eq!(t.f64s("a").unwrap(), &[3.0, 1.0]);
+        let f = df.filter_rows(&[false, true, false]);
+        assert_eq!(f.nrows(), 1);
+        assert_eq!(f.strs("c").unwrap(), &["y".to_string()]);
+    }
+
+    #[test]
+    fn concat_frames() {
+        let df = sample();
+        let both = DataFrame::concat(&[df.clone(), df.clone()]).unwrap();
+        assert_eq!(both.nrows(), 6);
+        let other = DataFrame::from_cols(vec![("z", Column::f64(vec![1.0]))]);
+        assert!(DataFrame::concat(&[df, other]).is_err());
+    }
+
+    #[test]
+    fn preview_renders() {
+        let s = sample().preview(2);
+        assert!(s.contains("| a "), "{s}");
+        assert_eq!(s.lines().count(), 4);
+    }
+}

@@ -1,0 +1,442 @@
+//! Group-by aggregation — the PLAsTiCC pipeline's dominant preprocessing op.
+//!
+//! Baseline: per-row boxed-key dictionary building with `Value` clones per
+//! row (the pandas object path for `groupby().agg()`).
+//! Optimized: key columns are dictionary-encoded to dense `u64` ids once,
+//! then a single vectorized pass accumulates per-group states in flat
+//! arrays.
+
+use std::collections::HashMap;
+
+use super::column::{Column, Value};
+use super::frame::DataFrame;
+use super::{Engine, FrameError};
+
+/// Aggregation function over an f64 (or i64, widened) column.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Agg {
+    Sum,
+    Mean,
+    Min,
+    Max,
+    Count,
+    /// Population standard deviation.
+    Std,
+}
+
+impl Agg {
+    /// Output column suffix, pandas-style (`flux_mean`, …).
+    pub fn suffix(self) -> &'static str {
+        match self {
+            Agg::Sum => "sum",
+            Agg::Mean => "mean",
+            Agg::Min => "min",
+            Agg::Max => "max",
+            Agg::Count => "count",
+            Agg::Std => "std",
+        }
+    }
+}
+
+/// Per-group accumulator (Welford for Std).
+#[derive(Debug, Clone, Copy)]
+struct Acc {
+    n: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+    mean: f64,
+    m2: f64,
+}
+
+impl Acc {
+    fn new() -> Acc {
+        Acc { n: 0, sum: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY, mean: 0.0, m2: 0.0 }
+    }
+
+    #[inline(always)]
+    fn push(&mut self, x: f64) {
+        self.n += 1;
+        self.sum += x;
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+    }
+
+    fn finish(&self, agg: Agg) -> f64 {
+        match agg {
+            Agg::Sum => self.sum,
+            Agg::Mean => {
+                if self.n == 0 {
+                    f64::NAN
+                } else {
+                    self.sum / self.n as f64
+                }
+            }
+            Agg::Min => self.min,
+            Agg::Max => self.max,
+            Agg::Count => self.n as f64,
+            Agg::Std => {
+                if self.n == 0 {
+                    f64::NAN
+                } else {
+                    (self.m2 / self.n as f64).sqrt()
+                }
+            }
+        }
+    }
+}
+
+/// `df.groupby(keys).agg({col: aggs})`. Output columns: the key columns
+/// (one row per group, insertion order of first appearance) followed by
+/// `"{col}_{agg}"` per requested aggregation. Null measure values are
+/// skipped (pandas semantics).
+pub fn groupby_agg(
+    df: &DataFrame,
+    keys: &[&str],
+    aggs: &[(&str, Agg)],
+    engine: Engine,
+) -> Result<DataFrame, FrameError> {
+    match engine {
+        Engine::Baseline => groupby_baseline(df, keys, aggs),
+        Engine::Optimized => groupby_optimized(df, keys, aggs),
+    }
+}
+
+/// Baseline: boxed composite keys in a HashMap<Vec<Value>, …> with a clone
+/// per row per key column.
+fn groupby_baseline(
+    df: &DataFrame,
+    keys: &[&str],
+    aggs: &[(&str, Agg)],
+) -> Result<DataFrame, FrameError> {
+    for k in keys {
+        df.col(k)?;
+    }
+    let n = df.nrows();
+    // Key → (group index). Keys are stringified boxed values (the object
+    // path: every row allocates).
+    let mut groups: HashMap<String, usize> = HashMap::new();
+    let mut order: Vec<Vec<Value>> = Vec::new(); // first-seen key tuples
+    let mut accs: Vec<Vec<Acc>> = Vec::new(); // [group][agg]
+    for i in 0..n {
+        let key_vals: Vec<Value> = keys.iter().map(|k| df.col(k).unwrap().value(i)).collect();
+        let key_str = format!("{key_vals:?}");
+        let g = *groups.entry(key_str).or_insert_with(|| {
+            order.push(key_vals.clone());
+            accs.push(vec![Acc::new(); aggs.len()]);
+            order.len() - 1
+        });
+        for (a, (col, _)) in aggs.iter().enumerate() {
+            if let Some(x) = df.col(col)?.value(i).as_f64() {
+                accs[g][a].push(x);
+            }
+        }
+    }
+    build_output(df, keys, aggs, &order, &accs)
+}
+
+/// Optimized: dictionary-encode keys to dense ids, then one flat pass.
+fn groupby_optimized(
+    df: &DataFrame,
+    keys: &[&str],
+    aggs: &[(&str, Agg)],
+) -> Result<DataFrame, FrameError> {
+    let n = df.nrows();
+    // Encode each key column to dense u32 ids.
+    let mut key_ids: Vec<Vec<u32>> = Vec::with_capacity(keys.len());
+    let mut key_cards: Vec<usize> = Vec::with_capacity(keys.len());
+    for k in keys {
+        let (ids, card) = encode_column(df.col(k)?);
+        key_ids.push(ids);
+        key_cards.push(card);
+    }
+    // Combine per-column ids into one dense group id via mixed-radix, then
+    // remap to first-seen order for output stability.
+    let mut radix = vec![1u64; keys.len()];
+    for i in (0..keys.len().saturating_sub(1)).rev() {
+        radix[i] = radix[i + 1] * key_cards[i + 1] as u64;
+    }
+    let key_space: u64 = radix.first().copied().unwrap_or(1) * key_cards.first().copied().unwrap_or(1) as u64;
+    let mut first_row: Vec<usize> = Vec::new();
+    let mut gids: Vec<usize> = Vec::with_capacity(n);
+    // §Perf: when the combined key space is small (the common case —
+    // dictionary ids are dense), a flat remap table beats the HashMap by
+    // ~2× on the per-row hot loop; fall back to hashing for huge spaces.
+    const DENSE_LIMIT: u64 = 1 << 22;
+    let ngroups = if key_space <= DENSE_LIMIT {
+        let mut table: Vec<u32> = vec![u32::MAX; key_space as usize];
+        for i in 0..n {
+            let mut combined = 0usize;
+            for (c, ids) in key_ids.iter().enumerate() {
+                combined += ids[i] as usize * radix[c] as usize;
+            }
+            let slot = &mut table[combined];
+            if *slot == u32::MAX {
+                *slot = first_row.len() as u32;
+                first_row.push(i);
+            }
+            gids.push(*slot as usize);
+        }
+        first_row.len()
+    } else {
+        let mut remap: HashMap<u64, usize> = HashMap::new();
+        for i in 0..n {
+            let mut combined = 0u64;
+            for (c, ids) in key_ids.iter().enumerate() {
+                combined += ids[i] as u64 * radix[c];
+            }
+            let next = remap.len();
+            let g = *remap.entry(combined).or_insert_with(|| {
+                first_row.push(i);
+                next
+            });
+            gids.push(g);
+        }
+        remap.len()
+    };
+    // Vectorized accumulation per (agg, group): one pass over each measure
+    // column with typed access, no boxing.
+    let mut accs: Vec<Vec<Acc>> = vec![vec![Acc::new(); aggs.len()]; ngroups];
+    for (a, (col, _)) in aggs.iter().enumerate() {
+        let c = df.col(col)?;
+        match c {
+            Column::F64(v, None) => {
+                for i in 0..n {
+                    accs[gids[i]][a].push(v[i]);
+                }
+            }
+            Column::F64(v, Some(m)) => {
+                for i in 0..n {
+                    if m[i] {
+                        accs[gids[i]][a].push(v[i]);
+                    }
+                }
+            }
+            Column::I64(v, None) => {
+                for i in 0..n {
+                    accs[gids[i]][a].push(v[i] as f64);
+                }
+            }
+            Column::I64(v, Some(m)) => {
+                for i in 0..n {
+                    if m[i] {
+                        accs[gids[i]][a].push(v[i] as f64);
+                    }
+                }
+            }
+            _ => {
+                return Err(FrameError::TypeMismatch {
+                    col: col.to_string(),
+                    expected: "numeric",
+                    got: c.dtype().name(),
+                })
+            }
+        }
+    }
+    let order: Vec<Vec<Value>> = first_row
+        .iter()
+        .map(|&i| keys.iter().map(|k| df.col(k).unwrap().value(i)).collect())
+        .collect();
+    build_output(df, keys, aggs, &order, &accs)
+}
+
+/// Dictionary-encode a column to `(ids, cardinality)`.
+fn encode_column(c: &Column) -> (Vec<u32>, usize) {
+    match c {
+        Column::I64(v, _) => {
+            let mut map: HashMap<i64, u32> = HashMap::new();
+            let ids = v
+                .iter()
+                .map(|x| {
+                    let next = map.len() as u32;
+                    *map.entry(*x).or_insert(next)
+                })
+                .collect();
+            (ids, map.len().max(1))
+        }
+        Column::Str(v, _) => {
+            let mut map: HashMap<&str, u32> = HashMap::new();
+            let ids = v
+                .iter()
+                .map(|x| {
+                    let next = map.len() as u32;
+                    *map.entry(x.as_str()).or_insert(next)
+                })
+                .collect();
+            (ids, map.len().max(1))
+        }
+        Column::Bool(v, _) => (v.iter().map(|b| *b as u32).collect(), 2),
+        Column::F64(v, _) => {
+            // Group by bit pattern (exact equality), like pandas.
+            let mut map: HashMap<u64, u32> = HashMap::new();
+            let ids = v
+                .iter()
+                .map(|x| {
+                    let next = map.len() as u32;
+                    *map.entry(x.to_bits()).or_insert(next)
+                })
+                .collect();
+            (ids, map.len().max(1))
+        }
+    }
+}
+
+fn build_output(
+    df: &DataFrame,
+    keys: &[&str],
+    aggs: &[(&str, Agg)],
+    order: &[Vec<Value>],
+    accs: &[Vec<Acc>],
+) -> Result<DataFrame, FrameError> {
+    let mut out = DataFrame::new();
+    for (c, key) in keys.iter().enumerate() {
+        let vals: Vec<Value> = order.iter().map(|k| k[c].clone()).collect();
+        let col = if vals.is_empty() {
+            match df.col(key)?.dtype() {
+                super::column::DType::F64 => Column::f64(vec![]),
+                super::column::DType::I64 => Column::i64(vec![]),
+                super::column::DType::Str => Column::str(vec![]),
+                super::column::DType::Bool => Column::bool(vec![]),
+            }
+        } else {
+            Column::from_values(&vals)
+        };
+        out.push(key, col)?;
+    }
+    for (a, (col, agg)) in aggs.iter().enumerate() {
+        let vals: Vec<f64> = accs.iter().map(|g| g[a].finish(*agg)).collect();
+        out.push(&format!("{col}_{}", agg.suffix()), Column::f64(vals))?;
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{prop, Rng};
+
+    fn sample() -> DataFrame {
+        DataFrame::from_cols(vec![
+            (
+                "object",
+                Column::str(vec!["a".into(), "b".into(), "a".into(), "b".into(), "a".into()]),
+            ),
+            ("band", Column::i64(vec![1, 1, 2, 1, 2])),
+            ("flux", Column::f64(vec![1.0, 2.0, 3.0, 4.0, 5.0])),
+        ])
+    }
+
+    #[test]
+    fn single_key_sums() {
+        let df = sample();
+        for eng in [Engine::Baseline, Engine::Optimized] {
+            let g = groupby_agg(&df, &["object"], &[("flux", Agg::Sum)], eng).unwrap();
+            assert_eq!(g.nrows(), 2, "{eng:?}");
+            assert_eq!(g.strs("object").unwrap(), &["a".to_string(), "b".to_string()]);
+            assert_eq!(g.f64s("flux_sum").unwrap(), &[9.0, 6.0]);
+        }
+    }
+
+    #[test]
+    fn multi_key_multi_agg() {
+        let df = sample();
+        for eng in [Engine::Baseline, Engine::Optimized] {
+            let g = groupby_agg(
+                &df,
+                &["object", "band"],
+                &[("flux", Agg::Mean), ("flux", Agg::Count)],
+                eng,
+            )
+            .unwrap();
+            // Distinct (object, band) pairs: (a,1), (b,1), (a,2).
+            assert_eq!(g.nrows(), 3, "{eng:?}");
+            // group (a,1): flux=1 → mean 1, count 1
+            assert_eq!(g.f64s("flux_mean").unwrap()[0], 1.0);
+            assert_eq!(g.f64s("flux_count").unwrap()[0], 1.0);
+            // group (a,2): flux {3,5} → mean 4
+            let idx = (0..g.nrows())
+                .find(|&i| {
+                    g.strs("object").unwrap()[i] == "a" && g.i64s("band").unwrap()[i] == 2
+                })
+                .unwrap();
+            assert_eq!(g.f64s("flux_mean").unwrap()[idx], 4.0);
+        }
+    }
+
+    #[test]
+    fn null_measures_skipped() {
+        let df = DataFrame::from_cols(vec![
+            ("k", Column::i64(vec![1, 1, 2])),
+            ("x", Column::F64(vec![1.0, 99.0, 2.0], Some(vec![true, false, true]))),
+        ]);
+        for eng in [Engine::Baseline, Engine::Optimized] {
+            let g = groupby_agg(&df, &["k"], &[("x", Agg::Sum), ("x", Agg::Count)], eng).unwrap();
+            assert_eq!(g.f64s("x_sum").unwrap(), &[1.0, 2.0], "{eng:?}");
+            assert_eq!(g.f64s("x_count").unwrap(), &[1.0, 1.0]);
+        }
+    }
+
+    #[test]
+    fn engines_agree_property() {
+        prop::check("groupby engines agree", 12, |rng| {
+            let n = 1 + rng.below(200);
+            let df = DataFrame::from_cols(vec![
+                ("g1", Column::i64((0..n).map(|_| rng.range_i64(0, 5)).collect())),
+                ("g2", Column::str((0..n).map(|_| rng.ascii_lower(1)).collect())),
+                ("x", Column::f64((0..n).map(|_| rng.normal()).collect())),
+            ]);
+            let aggs = [
+                ("x", Agg::Sum),
+                ("x", Agg::Mean),
+                ("x", Agg::Min),
+                ("x", Agg::Max),
+                ("x", Agg::Count),
+                ("x", Agg::Std),
+            ];
+            let a = groupby_agg(&df, &["g1", "g2"], &aggs, Engine::Baseline)
+                .map_err(|e| e.to_string())?;
+            let b = groupby_agg(&df, &["g1", "g2"], &aggs, Engine::Optimized)
+                .map_err(|e| e.to_string())?;
+            if a.nrows() != b.nrows() {
+                return Err(format!("group counts differ: {} vs {}", a.nrows(), b.nrows()));
+            }
+            for agg in &aggs {
+                let name = format!("x_{}", agg.1.suffix());
+                prop::assert_close(a.f64s(&name).unwrap(), b.f64s(&name).unwrap(), 1e-9)?;
+            }
+            // Key order (first appearance) must match too.
+            if a.i64s("g1").unwrap() != b.i64s("g1").unwrap() {
+                return Err("key order differs".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn empty_frame_gives_empty_groups() {
+        let df = DataFrame::from_cols(vec![
+            ("k", Column::i64(vec![])),
+            ("x", Column::f64(vec![])),
+        ]);
+        for eng in [Engine::Baseline, Engine::Optimized] {
+            let g = groupby_agg(&df, &["k"], &[("x", Agg::Sum)], eng).unwrap();
+            assert_eq!(g.nrows(), 0);
+        }
+    }
+
+    #[test]
+    fn welford_std_matches_two_pass() {
+        let mut rng = Rng::new(4);
+        let xs: Vec<f64> = (0..1000).map(|_| rng.normal_with(5.0, 3.0)).collect();
+        let mut acc = Acc::new();
+        for &x in &xs {
+            acc.push(x);
+        }
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / xs.len() as f64;
+        assert!((acc.finish(Agg::Std) - var.sqrt()).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,396 @@
+//! Engine-dispatched dataframe operations.
+//!
+//! Each operation takes an [`Engine`] and routes to a row-interpreted
+//! (baseline) or columnar (optimized) implementation. These are the exact
+//! preprocessing verbs Table 1 of the paper lists: drop columns, remove
+//! rows, arithmetic ops, type conversion, train/test split, sort.
+
+use super::column::{Column, DType, Value};
+use super::expr::Expr;
+use super::frame::DataFrame;
+use super::{Engine, FrameError};
+use crate::util::Rng;
+
+/// Filter rows where `pred` evaluates true.
+pub fn filter(df: &DataFrame, pred: &Expr, engine: Engine) -> Result<DataFrame, FrameError> {
+    match engine {
+        Engine::Baseline => {
+            // Row-at-a-time: evaluate the predicate per row on boxed cells,
+            // then rebuild the frame by appending boxed rows (two full
+            // passes of boxing, like the pandas object path).
+            let n = df.nrows();
+            let mut keep_rows: Vec<usize> = Vec::new();
+            for i in 0..n {
+                if pred.eval_row(df, i)?.is_truthy() {
+                    keep_rows.push(i);
+                }
+            }
+            let mut out_rows: Vec<Vec<Value>> = Vec::with_capacity(keep_rows.len());
+            for &i in &keep_rows {
+                out_rows.push(df.row_values(i));
+            }
+            Ok(rebuild_from_rows(df, &out_rows))
+        }
+        Engine::Optimized => {
+            let mask_col = pred.eval_column(df)?;
+            let keep: Vec<bool> = match &mask_col {
+                Column::Bool(v, None) => v.clone(),
+                Column::Bool(v, Some(m)) => {
+                    v.iter().zip(m).map(|(b, valid)| *b && *valid).collect()
+                }
+                other => {
+                    return Err(FrameError::Other(format!(
+                        "filter predicate must be bool, got {}",
+                        other.dtype().name()
+                    )))
+                }
+            };
+            Ok(df.filter_rows(&keep))
+        }
+    }
+}
+
+/// Add (or replace) a column computed from `expr`.
+pub fn with_column(
+    df: &DataFrame,
+    name: &str,
+    expr: &Expr,
+    engine: Engine,
+) -> Result<DataFrame, FrameError> {
+    let col = match engine {
+        Engine::Baseline => {
+            let n = df.nrows();
+            let mut vals = Vec::with_capacity(n);
+            for i in 0..n {
+                vals.push(expr.eval_row(df, i)?);
+            }
+            Column::from_values(&vals)
+        }
+        Engine::Optimized => expr.eval_column(df)?,
+    };
+    let mut out = df.clone();
+    out.push(name, col)?;
+    Ok(out)
+}
+
+/// Cast a column to `to`.
+pub fn astype(
+    df: &DataFrame,
+    name: &str,
+    to: DType,
+    engine: Engine,
+) -> Result<DataFrame, FrameError> {
+    let col = df.col(name)?;
+    let cast = match engine {
+        Engine::Baseline => {
+            // Box every cell, re-infer on the way back (the object path).
+            let n = col.len();
+            let mut vals = Vec::with_capacity(n);
+            for i in 0..n {
+                let v = col.value(i);
+                vals.push(cast_value(&v, to));
+            }
+            Column::from_values(&vals)
+        }
+        Engine::Optimized => col.cast(to),
+    };
+    let mut out = df.clone();
+    out.push(name, cast)?;
+    Ok(out)
+}
+
+fn cast_value(v: &Value, to: DType) -> Value {
+    match (v, to) {
+        (Value::Null, _) => Value::Null,
+        (v, DType::F64) => v.as_f64().map(Value::F64).unwrap_or_else(|| match v {
+            Value::Str(s) => {
+                s.trim().parse::<f64>().map(Value::F64).unwrap_or(Value::Null)
+            }
+            _ => Value::Null,
+        }),
+        (v, DType::I64) => match v {
+            Value::I64(x) => Value::I64(*x),
+            Value::F64(x) => Value::I64(*x as i64),
+            Value::Bool(b) => Value::I64(*b as i64),
+            Value::Str(s) => s.trim().parse::<i64>().map(Value::I64).unwrap_or(Value::Null),
+            Value::Null => Value::Null,
+        },
+        (v, DType::Str) => Value::Str(match v {
+            Value::F64(x) => x.to_string(),
+            Value::I64(x) => x.to_string(),
+            Value::Bool(b) => b.to_string(),
+            Value::Str(s) => s.clone(),
+            Value::Null => unreachable!(),
+        }),
+        (v, DType::Bool) => match v {
+            Value::Bool(b) => Value::Bool(*b),
+            Value::F64(x) => Value::Bool(*x != 0.0),
+            Value::I64(x) => Value::Bool(*x != 0),
+            Value::Str(s) => Value::Bool(s == "true" || s == "1"),
+            Value::Null => Value::Null,
+        },
+    }
+}
+
+/// Drop rows containing any null in the named columns (all columns when
+/// `cols` is empty) — `dropna`.
+pub fn dropna(df: &DataFrame, cols: &[&str], engine: Engine) -> Result<DataFrame, FrameError> {
+    let check: Vec<usize> = if cols.is_empty() {
+        (0..df.ncols()).collect()
+    } else {
+        cols.iter()
+            .map(|c| df.index_of(c).ok_or_else(|| FrameError::UnknownColumn(c.to_string())))
+            .collect::<Result<_, _>>()?
+    };
+    match engine {
+        Engine::Baseline => {
+            let mut rows: Vec<Vec<Value>> = Vec::new();
+            for i in 0..df.nrows() {
+                let vals = df.row_values(i);
+                if check.iter().all(|&c| !matches!(vals[c], Value::Null)) {
+                    rows.push(vals);
+                }
+            }
+            Ok(rebuild_from_rows(df, &rows))
+        }
+        Engine::Optimized => {
+            let n = df.nrows();
+            let mut keep = vec![true; n];
+            for &c in &check {
+                if let Some(mask) = df.col_at(c).mask() {
+                    for i in 0..n {
+                        keep[i] &= mask[i];
+                    }
+                }
+            }
+            Ok(df.filter_rows(&keep))
+        }
+    }
+}
+
+/// Fill nulls in an f64 column with `value` (`fillna`).
+pub fn fillna_f64(
+    df: &DataFrame,
+    name: &str,
+    value: f64,
+    engine: Engine,
+) -> Result<DataFrame, FrameError> {
+    let col = df.col(name)?;
+    let filled = match engine {
+        Engine::Baseline => {
+            let mut vals = Vec::with_capacity(col.len());
+            for i in 0..col.len() {
+                let v = col.value(i);
+                vals.push(match v {
+                    Value::Null => Value::F64(value),
+                    v => v,
+                });
+            }
+            Column::from_values(&vals)
+        }
+        Engine::Optimized => match col {
+            Column::F64(v, Some(m)) => {
+                let out: Vec<f64> =
+                    v.iter().zip(m).map(|(x, ok)| if *ok { *x } else { value }).collect();
+                Column::f64(out)
+            }
+            c => c.clone(),
+        },
+    };
+    let mut out = df.clone();
+    out.push(name, filled)?;
+    Ok(out)
+}
+
+/// Stable sort by an f64 or i64 column.
+pub fn sort_by(df: &DataFrame, name: &str, ascending: bool) -> Result<DataFrame, FrameError> {
+    let col = df.col(name)?;
+    let mut idx: Vec<usize> = (0..df.nrows()).collect();
+    match col {
+        Column::F64(v, _) => idx.sort_by(|&a, &b| {
+            let o = v[a].partial_cmp(&v[b]).unwrap_or(std::cmp::Ordering::Equal);
+            if ascending { o } else { o.reverse() }
+        }),
+        Column::I64(v, _) => idx.sort_by(|&a, &b| {
+            let o = v[a].cmp(&v[b]);
+            if ascending { o } else { o.reverse() }
+        }),
+        Column::Str(v, _) => idx.sort_by(|&a, &b| {
+            let o = v[a].cmp(&v[b]);
+            if ascending { o } else { o.reverse() }
+        }),
+        Column::Bool(..) => return Err(FrameError::Other("sort by bool unsupported".into())),
+    }
+    Ok(df.take(&idx))
+}
+
+/// Shuffled train/test split (the final preprocessing step of every ML
+/// pipeline in Table 1). Deterministic in `seed`.
+pub fn train_test_split(
+    df: &DataFrame,
+    test_fraction: f64,
+    seed: u64,
+) -> (DataFrame, DataFrame) {
+    let n = df.nrows();
+    let mut idx: Vec<usize> = (0..n).collect();
+    let mut rng = Rng::new(seed);
+    rng.shuffle(&mut idx);
+    let n_test = ((n as f64) * test_fraction).round() as usize;
+    let (test_idx, train_idx) = idx.split_at(n_test.min(n));
+    (df.take(train_idx), df.take(test_idx))
+}
+
+/// Rebuild a frame (same schema as `like`) from boxed rows — the baseline
+/// engine's materialization path.
+fn rebuild_from_rows(like: &DataFrame, rows: &[Vec<Value>]) -> DataFrame {
+    let mut out = DataFrame::new();
+    for (c, name) in like.names().iter().enumerate() {
+        let vals: Vec<Value> = rows.iter().map(|r| r[c].clone()).collect();
+        let col = if rows.is_empty() {
+            // Preserve dtype for empty results.
+            match like.col_at(c).dtype() {
+                DType::F64 => Column::f64(vec![]),
+                DType::I64 => Column::i64(vec![]),
+                DType::Str => Column::str(vec![]),
+                DType::Bool => Column::bool(vec![]),
+            }
+        } else {
+            Column::from_values(&vals)
+        };
+        out.push(name, col).unwrap();
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    fn sample() -> DataFrame {
+        DataFrame::from_cols(vec![
+            ("age", Column::i64(vec![25, 40, 17, 60, 33])),
+            (
+                "income",
+                Column::F64(
+                    vec![30e3, 80e3, 0.0, 120e3, 55e3],
+                    Some(vec![true, true, false, true, true]),
+                ),
+            ),
+            (
+                "state",
+                Column::str(vec!["ca".into(), "ny".into(), "ca".into(), "wa".into(), "ca".into()]),
+            ),
+        ])
+    }
+
+    #[test]
+    fn filter_engines_agree() {
+        let df = sample();
+        let pred = Expr::col("age").ge(Expr::lit_i64(18)).and(
+            Expr::col("income").gt(Expr::lit(40e3)),
+        );
+        let a = filter(&df, &pred, Engine::Baseline).unwrap();
+        let b = filter(&df, &pred, Engine::Optimized).unwrap();
+        assert_eq!(a.nrows(), 3);
+        assert_eq!(a.i64s("age").unwrap(), b.i64s("age").unwrap());
+        assert_eq!(a.strs("state").unwrap(), b.strs("state").unwrap());
+    }
+
+    #[test]
+    fn with_column_engines_agree() {
+        let df = sample();
+        let e = Expr::col("income").div(Expr::lit(1000.0));
+        let a = with_column(&df, "income_k", &e, Engine::Baseline).unwrap();
+        let b = with_column(&df, "income_k", &e, Engine::Optimized).unwrap();
+        for i in 0..df.nrows() {
+            assert_eq!(a.col("income_k").unwrap().value(i), b.col("income_k").unwrap().value(i));
+        }
+    }
+
+    #[test]
+    fn astype_engines_agree() {
+        let df = sample();
+        for eng in [Engine::Baseline, Engine::Optimized] {
+            let out = astype(&df, "age", DType::F64, eng).unwrap();
+            assert_eq!(out.f64s("age").unwrap()[0], 25.0);
+        }
+    }
+
+    #[test]
+    fn dropna_removes_null_rows() {
+        let df = sample();
+        for eng in [Engine::Baseline, Engine::Optimized] {
+            let out = dropna(&df, &["income"], eng).unwrap();
+            assert_eq!(out.nrows(), 4, "{eng:?}");
+            assert_eq!(out.col("income").unwrap().null_count(), 0);
+        }
+    }
+
+    #[test]
+    fn dropna_all_columns_default() {
+        let df = sample();
+        for eng in [Engine::Baseline, Engine::Optimized] {
+            assert_eq!(dropna(&df, &[], eng).unwrap().nrows(), 4);
+        }
+    }
+
+    #[test]
+    fn fillna_replaces() {
+        let df = sample();
+        for eng in [Engine::Baseline, Engine::Optimized] {
+            let out = fillna_f64(&df, "income", -1.0, eng).unwrap();
+            assert_eq!(out.f64s("income").unwrap()[2], -1.0);
+            assert_eq!(out.col("income").unwrap().null_count(), 0);
+        }
+    }
+
+    #[test]
+    fn sort_orders_rows() {
+        let df = sample();
+        let s = sort_by(&df, "age", true).unwrap();
+        assert_eq!(s.i64s("age").unwrap(), &[17, 25, 33, 40, 60]);
+        let d = sort_by(&df, "age", false).unwrap();
+        assert_eq!(d.i64s("age").unwrap(), &[60, 40, 33, 25, 17]);
+    }
+
+    #[test]
+    fn split_partitions_rows() {
+        let df = sample();
+        let (train, test) = train_test_split(&df, 0.4, 7);
+        assert_eq!(train.nrows(), 3);
+        assert_eq!(test.nrows(), 2);
+        // Same seed → same split.
+        let (t2, _) = train_test_split(&df, 0.4, 7);
+        assert_eq!(train.i64s("age").unwrap(), t2.i64s("age").unwrap());
+    }
+
+    #[test]
+    fn empty_filter_preserves_schema() {
+        let df = sample();
+        let pred = Expr::col("age").gt(Expr::lit_i64(1000));
+        for eng in [Engine::Baseline, Engine::Optimized] {
+            let out = filter(&df, &pred, eng).unwrap();
+            assert_eq!(out.nrows(), 0);
+            assert_eq!(out.schema(), df.schema());
+        }
+    }
+
+    #[test]
+    fn engines_agree_property() {
+        prop::check("filter engines agree", 15, |rng| {
+            let n = 1 + rng.below(60);
+            let df = DataFrame::from_cols(vec![
+                ("x", Column::f64((0..n).map(|_| rng.normal()).collect())),
+                ("g", Column::i64((0..n).map(|_| rng.range_i64(0, 4)).collect())),
+            ]);
+            let pred = Expr::col("x").gt(Expr::lit(0.0)).or(Expr::col("g").eq(Expr::lit_i64(1)));
+            let a = filter(&df, &pred, Engine::Baseline).map_err(|e| e.to_string())?;
+            let b = filter(&df, &pred, Engine::Optimized).map_err(|e| e.to_string())?;
+            if a.nrows() != b.nrows() {
+                return Err(format!("{} vs {}", a.nrows(), b.nrows()));
+            }
+            prop::assert_close(a.f64s("x").unwrap(), b.f64s("x").unwrap(), 1e-12)
+        });
+    }
+}

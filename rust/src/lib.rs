@@ -1,0 +1,74 @@
+//! # repro — End-to-End AI Pipeline Optimization on CPU
+//!
+//! Reproduction of *"Strategies for Optimizing End-to-End AI Pipelines on
+//! Intel® Xeon® Processors"* (Arunachalam et al., 2022) as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — a streaming pipeline orchestrator
+//!   ([`coordinator`]) plus every substrate the paper's eight pipelines
+//!   depend on: a columnar dataframe engine ([`dataframe`]), classical ML
+//!   ([`ml`]), media/vision/text processing ([`media`], [`vision`],
+//!   [`text`]), recommendation preprocessing ([`recsys`]), INT8
+//!   quantization ([`quant`]) and hyperparameter tuning ([`tune`]).
+//! * **Layer 2** — JAX models (`python/compile/model.py`) AOT-lowered to
+//!   HLO text artifacts.
+//! * **Layer 1** — Pallas kernels (`python/compile/kernels/`) called by the
+//!   L2 models.
+//!
+//! The [`runtime`] module loads the AOT artifacts through the PJRT C API
+//! (`xla` crate) so Python never runs on the request path.
+//!
+//! Every pipeline stage exists in a **baseline** and an **optimized**
+//! variant (see [`OptLevel`]); benchmarks toggle them to regenerate the
+//! paper's Figure 1, Table 2 and Figure 11. See `DESIGN.md` for the full
+//! experiment index.
+
+pub mod util;
+pub mod parallel;
+pub mod dataframe;
+pub mod linalg;
+pub mod ml;
+pub mod media;
+pub mod vision;
+pub mod text;
+pub mod recsys;
+pub mod quant;
+pub mod tune;
+pub mod runtime;
+pub mod coordinator;
+pub mod pipelines;
+
+/// Which implementation variant of a pipeline stage to use.
+///
+/// `Baseline` reproduces the *algorithmic* behaviour of the unoptimized
+/// stack the paper starts from (row-at-a-time pandas-like dataframe
+/// interpretation, exact tree splits, unfused op-by-op DL graphs, FP32
+/// inference). `Optimized` is the paper's tuned stack (columnar vectorized
+/// dataframes, histogram trees, fused graphs, INT8).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum OptLevel {
+    /// Stock/unoptimized software stack (pandas, sklearn, op-by-op FP32 DL).
+    Baseline,
+    /// Fully optimized stack (Modin/sklearnex/XGBoost-hist analogues,
+    /// fused graphs, INT8 where the paper quantizes).
+    Optimized,
+}
+
+impl OptLevel {
+    /// All variants, in bench order.
+    pub const ALL: [OptLevel; 2] = [OptLevel::Baseline, OptLevel::Optimized];
+
+    /// Short human-readable label used in reports.
+    pub fn label(self) -> &'static str {
+        match self {
+            OptLevel::Baseline => "baseline",
+            OptLevel::Optimized => "optimized",
+        }
+    }
+}
+
+impl std::fmt::Display for OptLevel {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.label())
+    }
+}

@@ -1,0 +1,201 @@
+//! Matrix decompositions: Cholesky (ridge normal equations) and a Jacobi
+//! eigensolver (PCA for the anomaly-detection pipeline).
+
+use super::matrix::Matrix;
+
+/// Cholesky factorization `a = l lᵀ` of a symmetric positive-definite
+/// matrix; returns lower-triangular `l`. `None` if not SPD (within
+/// tolerance) — callers add ridge/jitter and retry.
+pub fn cholesky(a: &Matrix) -> Option<Matrix> {
+    assert_eq!(a.rows, a.cols, "cholesky needs a square matrix");
+    let n = a.rows;
+    let mut l = Matrix::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            let mut sum = a.get(i, j);
+            for k in 0..j {
+                sum -= l.get(i, k) * l.get(j, k);
+            }
+            if i == j {
+                if sum <= 0.0 {
+                    return None;
+                }
+                l.set(i, j, sum.sqrt());
+            } else {
+                l.set(i, j, sum / l.get(j, j));
+            }
+        }
+    }
+    Some(l)
+}
+
+/// Solve `a x = b` for SPD `a` via Cholesky (forward + back substitution).
+pub fn cholesky_solve(a: &Matrix, b: &[f64]) -> Option<Vec<f64>> {
+    let n = a.rows;
+    assert_eq!(b.len(), n);
+    let l = cholesky(a)?;
+    // Forward: l y = b
+    let mut y = vec![0.0; n];
+    for i in 0..n {
+        let mut sum = b[i];
+        for k in 0..i {
+            sum -= l.get(i, k) * y[k];
+        }
+        y[i] = sum / l.get(i, i);
+    }
+    // Back: lᵀ x = y
+    let mut x = vec![0.0; n];
+    for i in (0..n).rev() {
+        let mut sum = y[i];
+        for k in i + 1..n {
+            sum -= l.get(k, i) * x[k];
+        }
+        x[i] = sum / l.get(i, i);
+    }
+    Some(x)
+}
+
+/// Symmetric eigendecomposition by cyclic Jacobi rotations.
+///
+/// Returns `(eigenvalues, eigenvectors)` with eigenvalues sorted
+/// descending; eigenvector `i` is column `i` of the returned matrix.
+/// O(n³) per sweep — fine for the ≤ 256-dim feature spaces PCA reduces
+/// here (the paper's anomaly detector PCA-reduces ResNet feature maps).
+pub fn eigh_jacobi(a: &Matrix, max_sweeps: usize) -> (Vec<f64>, Matrix) {
+    assert_eq!(a.rows, a.cols);
+    let n = a.rows;
+    let mut m = a.clone();
+    let mut v = Matrix::eye(n);
+    for _ in 0..max_sweeps {
+        // Largest off-diagonal magnitude (convergence check).
+        let mut off = 0.0f64;
+        for i in 0..n {
+            for j in i + 1..n {
+                off = off.max(m.get(i, j).abs());
+            }
+        }
+        if off < 1e-12 {
+            break;
+        }
+        for p in 0..n {
+            for q in p + 1..n {
+                let apq = m.get(p, q);
+                if apq.abs() < 1e-15 {
+                    continue;
+                }
+                let app = m.get(p, p);
+                let aqq = m.get(q, q);
+                let theta = 0.5 * (aqq - app) / apq;
+                let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+                // Rotate rows/cols p and q of m.
+                for k in 0..n {
+                    let mkp = m.get(k, p);
+                    let mkq = m.get(k, q);
+                    m.set(k, p, c * mkp - s * mkq);
+                    m.set(k, q, s * mkp + c * mkq);
+                }
+                for k in 0..n {
+                    let mpk = m.get(p, k);
+                    let mqk = m.get(q, k);
+                    m.set(p, k, c * mpk - s * mqk);
+                    m.set(q, k, s * mpk + c * mqk);
+                }
+                // Accumulate eigenvectors.
+                for k in 0..n {
+                    let vkp = v.get(k, p);
+                    let vkq = v.get(k, q);
+                    v.set(k, p, c * vkp - s * vkq);
+                    v.set(k, q, s * vkp + c * vkq);
+                }
+            }
+        }
+    }
+    let mut order: Vec<usize> = (0..n).collect();
+    let eig: Vec<f64> = (0..n).map(|i| m.get(i, i)).collect();
+    order.sort_by(|&i, &j| eig[j].partial_cmp(&eig[i]).unwrap());
+    let vals: Vec<f64> = order.iter().map(|&i| eig[i]).collect();
+    let mut vecs = Matrix::zeros(n, n);
+    for (new_c, &old_c) in order.iter().enumerate() {
+        for r in 0..n {
+            vecs.set(r, new_c, v.get(r, old_c));
+        }
+    }
+    (vals, vecs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm::{matmul_naive, gram};
+    use crate::util::{prop, Rng};
+
+    fn random_spd(n: usize, rng: &mut Rng) -> Matrix {
+        let a = Matrix::randn(n + 3, n, rng);
+        let mut g = gram(&a);
+        for i in 0..n {
+            g.data[i * n + i] += 1e-3; // ensure strictly PD
+        }
+        g
+    }
+
+    #[test]
+    fn cholesky_reconstructs() {
+        prop::check("l l^T == a", 15, |rng| {
+            let n = 1 + rng.below(12);
+            let a = random_spd(n, rng);
+            let l = cholesky(&a).ok_or("not spd")?;
+            let recon = matmul_naive(&l, &l.transpose());
+            prop::assert_close(&a.data, &recon.data, 1e-8)
+        });
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let a = Matrix::from_vec(2, 2, vec![1.0, 2.0, 2.0, 1.0]); // eig -1, 3
+        assert!(cholesky(&a).is_none());
+    }
+
+    #[test]
+    fn solve_recovers_known_x() {
+        prop::check("a x == b round trip", 15, |rng| {
+            let n = 1 + rng.below(10);
+            let a = random_spd(n, rng);
+            let x_true: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let b = crate::linalg::matvec(&a, &x_true);
+            let x = cholesky_solve(&a, &b).ok_or("not spd")?;
+            prop::assert_close(&x_true, &x, 1e-6)
+        });
+    }
+
+    #[test]
+    fn jacobi_diagonalizes() {
+        prop::check("v diag(e) v^T == a", 10, |rng| {
+            let n = 2 + rng.below(8);
+            let a = random_spd(n, rng);
+            let (vals, vecs) = eigh_jacobi(&a, 50);
+            // Check a * v_i == lambda_i * v_i for each pair.
+            for i in 0..n {
+                let vi = vecs.col(i);
+                let av = crate::linalg::matvec(&a, &vi);
+                let lv: Vec<f64> = vi.iter().map(|x| x * vals[i]).collect();
+                prop::assert_close(&av, &lv, 1e-6)?;
+            }
+            // Sorted descending.
+            for w in vals.windows(2) {
+                if w[1] > w[0] + 1e-9 {
+                    return Err(format!("not sorted: {w:?}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn jacobi_eigenvalues_of_diagonal() {
+        let a = Matrix::from_vec(3, 3, vec![3., 0., 0., 0., 1., 0., 0., 0., 2.]);
+        let (vals, _) = eigh_jacobi(&a, 10);
+        prop::assert_close(&vals, &[3., 2., 1.], 1e-12).unwrap();
+    }
+}

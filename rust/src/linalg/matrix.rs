@@ -1,0 +1,168 @@
+//! Row-major dense `f64` matrix.
+
+use crate::util::Rng;
+
+/// Dense row-major matrix of `f64`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Matrix {
+    /// Number of rows.
+    pub rows: usize,
+    /// Number of columns.
+    pub cols: usize,
+    /// Row-major storage, `rows * cols` long.
+    pub data: Vec<f64>,
+}
+
+impl Matrix {
+    /// Zero matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Build from a row-major vec. Panics on length mismatch.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Self {
+        assert_eq!(data.len(), rows * cols, "matrix shape mismatch");
+        Matrix { rows, cols, data }
+    }
+
+    /// Identity matrix.
+    pub fn eye(n: usize) -> Self {
+        let mut m = Matrix::zeros(n, n);
+        for i in 0..n {
+            m.data[i * n + i] = 1.0;
+        }
+        m
+    }
+
+    /// Matrix with i.i.d. standard-normal entries.
+    pub fn randn(rows: usize, cols: usize, rng: &mut Rng) -> Self {
+        Matrix { rows, cols, data: (0..rows * cols).map(|_| rng.normal()).collect() }
+    }
+
+    /// Element access.
+    #[inline(always)]
+    pub fn get(&self, r: usize, c: usize) -> f64 {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c]
+    }
+
+    /// Element assignment.
+    #[inline(always)]
+    pub fn set(&mut self, r: usize, c: usize, v: f64) {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c] = v;
+    }
+
+    /// Borrow row `r` as a slice.
+    #[inline(always)]
+    pub fn row(&self, r: usize) -> &[f64] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Mutable row slice.
+    #[inline(always)]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f64] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Transposed copy.
+    pub fn transpose(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                out.data[c * self.rows + r] = self.data[r * self.cols + c];
+            }
+        }
+        out
+    }
+
+    /// Column `c` as a new vector.
+    pub fn col(&self, c: usize) -> Vec<f64> {
+        (0..self.rows).map(|r| self.get(r, c)).collect()
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f64 {
+        self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
+    }
+
+    /// Per-column means.
+    pub fn col_means(&self) -> Vec<f64> {
+        let mut m = vec![0.0; self.cols];
+        for r in 0..self.rows {
+            for (c, v) in self.row(r).iter().enumerate() {
+                m[c] += v;
+            }
+        }
+        let n = self.rows.max(1) as f64;
+        m.iter_mut().for_each(|x| *x /= n);
+        m
+    }
+
+    /// Subtract per-column means in place; returns the means.
+    pub fn center_columns(&mut self) -> Vec<f64> {
+        let means = self.col_means();
+        for r in 0..self.rows {
+            let row = self.row_mut(r);
+            for (c, v) in row.iter_mut().enumerate() {
+                *v -= means[c];
+            }
+        }
+        means
+    }
+
+    /// `self * other` elementwise check helper: max |a-b|.
+    pub fn max_abs_diff(&self, other: &Matrix) -> f64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eye_diagonal() {
+        let m = Matrix::eye(3);
+        assert_eq!(m.get(0, 0), 1.0);
+        assert_eq!(m.get(1, 2), 0.0);
+    }
+
+    #[test]
+    fn transpose_round_trip() {
+        let m = Matrix::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        let t = m.transpose();
+        assert_eq!(t.rows, 3);
+        assert_eq!(t.get(2, 1), 6.0);
+        assert_eq!(t.transpose(), m);
+    }
+
+    #[test]
+    fn center_columns_zeroes_means() {
+        let mut rng = Rng::new(1);
+        let mut m = Matrix::randn(50, 4, &mut rng);
+        m.center_columns();
+        for mean in m.col_means() {
+            assert!(mean.abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "shape mismatch")]
+    fn from_vec_validates() {
+        Matrix::from_vec(2, 2, vec![1.0]);
+    }
+
+    #[test]
+    fn row_and_col_access() {
+        let m = Matrix::from_vec(2, 2, vec![1., 2., 3., 4.]);
+        assert_eq!(m.row(1), &[3., 4.]);
+        assert_eq!(m.col(0), vec![1., 3.]);
+        assert!((m.fro_norm() - (30f64).sqrt()).abs() < 1e-12);
+    }
+}

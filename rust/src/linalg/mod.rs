@@ -1,0 +1,17 @@
+//! Dense linear algebra substrate.
+//!
+//! The paper's classical-ML wins (Intel Extension for Scikit-learn, Table 2)
+//! come from replacing naive loops with vectorized, cache-blocked,
+//! multithreaded kernels. This module provides both ends of that spectrum:
+//! [`matmul_naive`] is the textbook triple loop (the "stock sklearn"
+//! behaviour), [`matmul_blocked`] is a cache-blocked, unrolled kernel (the
+//! "sklearnex" behaviour). Ridge regression, PCA and the Gaussian anomaly
+//! model in [`crate::ml`] are built on these plus [`cholesky`]/[`eigh`].
+
+pub mod matrix;
+pub mod gemm;
+pub mod decomp;
+
+pub use decomp::{cholesky, cholesky_solve, eigh_jacobi};
+pub use gemm::{matmul, matmul_blocked, matmul_naive, matvec, GemmKind};
+pub use matrix::Matrix;

@@ -1,0 +1,187 @@
+//! `repro` — CLI for the E2E-AI-pipeline reproduction.
+//!
+//! ```text
+//! repro list                       # Table 1: the eight pipelines
+//! repro run <pipeline> [--opt baseline|optimized] [--scale F] [--seed N]
+//! repro fig1 [--scale F]           # Figure 1 stage breakdown, all pipelines
+//! repro config                     # Table 3 analogue: software config
+//! repro models                     # AOT artifacts available to the runtime
+//! ```
+
+use repro::pipelines::{registry, run_by_name, RunConfig, Toggles};
+use repro::util::cli::Args;
+use repro::util::fmt::{self, Table};
+use repro::OptLevel;
+
+fn main() {
+    let args = Args::from_env();
+    let code = match args.command.as_str() {
+        "list" => cmd_list(),
+        "run" => cmd_run(&args),
+        "fig1" => cmd_fig1(&args),
+        "config" => cmd_config(),
+        "models" => cmd_models(),
+        "" | "help" | "--help" => {
+            print_help();
+            0
+        }
+        other => {
+            eprintln!("unknown command: {other}\n");
+            print_help();
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn print_help() {
+    println!(
+        "repro — E2E AI pipeline optimization reproduction\n\
+         \n\
+         USAGE:\n  repro <command> [options]\n\
+         \n\
+         COMMANDS:\n\
+         \x20 list                 list the eight pipelines (Table 1)\n\
+         \x20 run <pipeline>       run one pipeline and print its report\n\
+         \x20 fig1                 stage-time breakdown for every pipeline (Figure 1)\n\
+         \x20 config               print the software configuration (Table 3)\n\
+         \x20 models               list AOT model artifacts\n\
+         \n\
+         OPTIONS (run/fig1):\n\
+         \x20 --opt baseline|optimized   optimization level (default optimized)\n\
+         \x20 --scale F                  dataset scale multiplier (default 1.0)\n\
+         \x20 --seed N                   RNG seed (default 0xE2E)\n"
+    );
+}
+
+fn parse_cfg(args: &Args) -> RunConfig {
+    let opt = match args.get_or("opt", "optimized") {
+        "baseline" => OptLevel::Baseline,
+        "optimized" => OptLevel::Optimized,
+        other => {
+            eprintln!("invalid --opt {other:?}; use baseline|optimized");
+            std::process::exit(2);
+        }
+    };
+    RunConfig {
+        toggles: Toggles::all(opt),
+        scale: args.get_parse("scale", 1.0f64),
+        seed: args.get_parse("seed", 0xE2Eu64),
+    }
+}
+
+fn cmd_list() -> i32 {
+    let mut t = Table::new(&["pipeline", "description"]);
+    for e in registry() {
+        t.row(&[e.name.to_string(), e.description.to_string()]);
+    }
+    t.print();
+    0
+}
+
+fn cmd_run(args: &Args) -> i32 {
+    let Some(name) = args.positional.first() else {
+        eprintln!("usage: repro run <pipeline> [--opt …] [--scale …]");
+        return 2;
+    };
+    let cfg = parse_cfg(args);
+    match run_by_name(name, &cfg) {
+        Ok(res) => {
+            println!("pipeline: {name}   ({} items)", res.items);
+            res.report.table().print();
+            let (pre, ai) = res.report.fig1_split();
+            println!(
+                "breakdown: {pre:.1}% pre/post, {ai:.1}% ai   total {}",
+                fmt::dur(res.report.total())
+            );
+            println!("throughput: {:.1} items/s", res.throughput());
+            for (k, v) in &res.metrics {
+                println!("metric {k} = {v:.4}");
+            }
+            0
+        }
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    }
+}
+
+fn cmd_fig1(args: &Args) -> i32 {
+    let cfg = parse_cfg(args);
+    let mut t = Table::new(&["pipeline", "% pre/post", "% ai", "total", "items/s"]);
+    for e in registry() {
+        match (e.run)(&cfg) {
+            Ok(res) => {
+                let (pre, ai) = res.report.fig1_split();
+                t.row(&[
+                    e.name.to_string(),
+                    format!("{pre:.1}%"),
+                    format!("{ai:.1}%"),
+                    fmt::dur(res.report.total()),
+                    format!("{:.1}", res.throughput()),
+                ]);
+            }
+            Err(err) => {
+                t.row(&[
+                    e.name.to_string(),
+                    format!("error: {err}"),
+                    String::new(),
+                    String::new(),
+                    String::new(),
+                ]);
+            }
+        }
+    }
+    println!(
+        "Figure 1 — percent time in pre/post-processing vs AI ({}, scale {}):",
+        cfg.toggles.dataframe.label(),
+        cfg.scale
+    );
+    t.print();
+    0
+}
+
+fn cmd_config() -> i32 {
+    println!("software configuration (Table 3 analogue):");
+    let mut t = Table::new(&["component", "version / detail"]);
+    t.row(&["rustc".into(), "1.95 (offline sandbox)".into()]);
+    t.row(&["xla crate".into(), "0.1.6 (xla_extension 0.5.1, PJRT CPU)".into()]);
+    t.row(&["jax (build-time)".into(), "0.8.x — Pallas interpret-mode kernels".into()]);
+    t.row(&[
+        "artifacts".into(),
+        format!("{}", repro::runtime::default_artifacts_dir().display()),
+    ]);
+    t.row(&["threads".into(), format!("{}", repro::parallel::default_threads())]);
+    t.print();
+    0
+}
+
+fn cmd_models() -> i32 {
+    match repro::runtime::Engine::local() {
+        Ok(engine) => {
+            let mut t = Table::new(&["artifact", "inputs", "outputs"]);
+            let manifest = engine.manifest();
+            for name in manifest.names() {
+                let m = manifest.model(name).unwrap();
+                let specs = |v: &[repro::runtime::TensorSpec]| {
+                    v.iter()
+                        .map(|s| format!("{:?}:{}", s.shape, s.dtype))
+                        .collect::<Vec<_>>()
+                        .join(", ")
+                };
+                t.row(&[name.to_string(), specs(&m.inputs), specs(&m.outputs)]);
+            }
+            t.print();
+            println!(
+                "stage chains: {:?}",
+                manifest.stage_chains.keys().collect::<Vec<_>>()
+            );
+            0
+        }
+        Err(e) => {
+            eprintln!("cannot load artifacts ({e}); run `make artifacts` first");
+            1
+        }
+    }
+}

@@ -1,0 +1,133 @@
+//! Toy intra-frame codec (quantize → delta → RLE) standing in for the
+//! paper's GStreamer H.264 decode stage.
+//!
+//! What matters for the pipeline study is that *decode does real per-frame
+//! byte work proportional to resolution and scene complexity* — that is
+//! what makes preprocessing 25% of the video-streamer E2E time (Fig 1).
+//! Encoding quantizes each channel to 8 bits, delta-codes within a row,
+//! and run-length-encodes the deltas; decode inverts the three steps.
+
+/// An encoded frame.
+#[derive(Debug, Clone)]
+pub struct EncodedFrame {
+    pub height: usize,
+    pub width: usize,
+    /// RLE stream of (count, value) pairs over row-delta bytes.
+    pub payload: Vec<(u8, u8)>,
+}
+
+impl EncodedFrame {
+    /// Compressed size in bytes (2 per RLE pair + header).
+    pub fn nbytes(&self) -> usize {
+        self.payload.len() * 2 + 8
+    }
+}
+
+/// Encode an image (lossy: 8-bit quantization).
+pub fn encode(img: &crate::media::Image) -> EncodedFrame {
+    let mut deltas = Vec::with_capacity(img.data.len());
+    // Quantize + delta within each row (per channel interleaved).
+    let row_len = img.width * 3;
+    for row in img.data.chunks_exact(row_len) {
+        let mut prev = 0u8;
+        for &v in row {
+            let q = (v.clamp(0.0, 1.0) * 255.0).round() as u8;
+            deltas.push(q.wrapping_sub(prev));
+            prev = q;
+        }
+    }
+    // RLE.
+    let mut payload = Vec::new();
+    let mut i = 0;
+    while i < deltas.len() {
+        let v = deltas[i];
+        let mut run = 1usize;
+        while run < 255 && i + run < deltas.len() && deltas[i + run] == v {
+            run += 1;
+        }
+        payload.push((run as u8, v));
+        i += run;
+    }
+    EncodedFrame { height: img.height, width: img.width, payload }
+}
+
+/// Decode back to an image.
+///
+/// §Perf: single fused pass — RLE expansion, delta-undo and u8→f32
+/// conversion happen per element without materializing the intermediate
+/// delta buffer (was: two passes + one full-size temporary).
+pub fn decode(frame: &EncodedFrame) -> crate::media::Image {
+    let total = frame.height * frame.width * 3;
+    let row_len = frame.width * 3;
+    let mut data = Vec::with_capacity(total);
+    let mut prev = 0u8;
+    let mut col = 0usize;
+    const INV255: f32 = 1.0 / 255.0;
+    for &(run, v) in &frame.payload {
+        for _ in 0..run {
+            if col == row_len {
+                prev = 0;
+                col = 0;
+            }
+            prev = prev.wrapping_add(v);
+            data.push(prev as f32 * INV255);
+            col += 1;
+        }
+    }
+    debug_assert_eq!(data.len(), total, "corrupt payload");
+    data.resize(total, 0.0);
+    crate::media::Image { height: frame.height, width: frame.width, data }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::media::Image;
+    use crate::util::Rng;
+
+    #[test]
+    fn round_trip_within_quantization_error() {
+        let mut rng = Rng::new(1);
+        let mut img = Image::zeros(16, 16);
+        for v in img.data.iter_mut() {
+            *v = rng.f32();
+        }
+        let dec = decode(&encode(&img));
+        assert_eq!((dec.height, dec.width), (16, 16));
+        for (a, b) in img.data.iter().zip(&dec.data) {
+            assert!((a - b).abs() <= 0.5 / 255.0 + 1e-6, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn flat_image_compresses_well() {
+        let img = Image::filled(32, 32, [0.5; 3]);
+        let enc = encode(&img);
+        // 32*32*3 = 3072 raw bytes; flat rows RLE to a handful of pairs.
+        assert!(enc.nbytes() < 1200, "{}", enc.nbytes());
+        let dec = decode(&enc);
+        assert!((dec.get(10, 10)[0] - 0.5).abs() < 1e-2);
+    }
+
+    #[test]
+    fn noisy_image_still_round_trips() {
+        let mut rng = Rng::new(2);
+        let mut img = Image::zeros(8, 8);
+        for v in img.data.iter_mut() {
+            *v = rng.f32();
+        }
+        let enc = encode(&img);
+        assert!(enc.nbytes() > 100); // noise shouldn't compress much
+        let dec = decode(&enc);
+        assert_eq!(dec.data.len(), img.data.len());
+    }
+
+    #[test]
+    fn values_clamped_to_unit_range() {
+        let mut img = Image::zeros(2, 2);
+        img.set(0, 0, [2.0, -1.0, 0.5]);
+        let dec = decode(&encode(&img));
+        assert_eq!(dec.get(0, 0)[0], 1.0);
+        assert_eq!(dec.get(0, 0)[1], 0.0);
+    }
+}

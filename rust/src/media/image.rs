@@ -1,0 +1,232 @@
+//! Planar RGB f32 images and the resize/normalize ops the DL pipelines
+//! run before inference.
+
+/// An interleaved RGB image, `f32` in `[0, 1]`, row-major HWC layout.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Image {
+    pub height: usize,
+    pub width: usize,
+    /// `height * width * 3` interleaved RGB.
+    pub data: Vec<f32>,
+}
+
+/// Interpolation used by [`resize`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ResizeFilter {
+    Nearest,
+    Bilinear,
+}
+
+impl Image {
+    /// Solid-color image.
+    pub fn filled(height: usize, width: usize, rgb: [f32; 3]) -> Image {
+        let mut data = Vec::with_capacity(height * width * 3);
+        for _ in 0..height * width {
+            data.extend_from_slice(&rgb);
+        }
+        Image { height, width, data }
+    }
+
+    /// Zeroed image.
+    pub fn zeros(height: usize, width: usize) -> Image {
+        Image { height, width, data: vec![0.0; height * width * 3] }
+    }
+
+    /// Pixel accessor.
+    #[inline(always)]
+    pub fn get(&self, y: usize, x: usize) -> [f32; 3] {
+        let i = (y * self.width + x) * 3;
+        [self.data[i], self.data[i + 1], self.data[i + 2]]
+    }
+
+    /// Pixel assignment.
+    #[inline(always)]
+    pub fn set(&mut self, y: usize, x: usize, rgb: [f32; 3]) {
+        let i = (y * self.width + x) * 3;
+        self.data[i..i + 3].copy_from_slice(&rgb);
+    }
+
+    /// Fill an axis-aligned rectangle (clamped to bounds).
+    pub fn fill_rect(&mut self, y0: usize, x0: usize, h: usize, w: usize, rgb: [f32; 3]) {
+        for y in y0..(y0 + h).min(self.height) {
+            for x in x0..(x0 + w).min(self.width) {
+                self.set(y, x, rgb);
+            }
+        }
+    }
+
+    /// Mean over all channels (test helper / cheap brightness stat).
+    pub fn mean(&self) -> f32 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        self.data.iter().sum::<f32>() / self.data.len() as f32
+    }
+
+    /// Luma (grayscale) plane.
+    pub fn to_gray(&self) -> Vec<f32> {
+        (0..self.height * self.width)
+            .map(|i| {
+                let p = &self.data[i * 3..i * 3 + 3];
+                0.299 * p[0] + 0.587 * p[1] + 0.114 * p[2]
+            })
+            .collect()
+    }
+
+    /// Crop a rectangle (clamped); returns an owned image.
+    pub fn crop(&self, y0: usize, x0: usize, h: usize, w: usize) -> Image {
+        let y1 = (y0 + h).min(self.height);
+        let x1 = (x0 + w).min(self.width);
+        let (y0, x0) = (y0.min(y1), x0.min(x1));
+        let mut out = Image::zeros(y1 - y0, x1 - x0);
+        for y in y0..y1 {
+            for x in x0..x1 {
+                out.set(y - y0, x - x0, self.get(y, x));
+            }
+        }
+        out
+    }
+}
+
+/// Resize to `(out_h, out_w)`.
+pub fn resize(img: &Image, out_h: usize, out_w: usize, filter: ResizeFilter) -> Image {
+    let mut out = Image::zeros(out_h, out_w);
+    if img.height == 0 || img.width == 0 || out_h == 0 || out_w == 0 {
+        return out;
+    }
+    let sy = img.height as f32 / out_h as f32;
+    let sx = img.width as f32 / out_w as f32;
+    match filter {
+        ResizeFilter::Nearest => {
+            for y in 0..out_h {
+                let src_y = ((y as f32 + 0.5) * sy) as usize;
+                let src_y = src_y.min(img.height - 1);
+                for x in 0..out_w {
+                    let src_x = (((x as f32 + 0.5) * sx) as usize).min(img.width - 1);
+                    out.set(y, x, img.get(src_y, src_x));
+                }
+            }
+        }
+        ResizeFilter::Bilinear => {
+            for y in 0..out_h {
+                let fy = ((y as f32 + 0.5) * sy - 0.5).clamp(0.0, (img.height - 1) as f32);
+                let y0 = fy as usize;
+                let y1 = (y0 + 1).min(img.height - 1);
+                let wy = fy - y0 as f32;
+                for x in 0..out_w {
+                    let fx = ((x as f32 + 0.5) * sx - 0.5).clamp(0.0, (img.width - 1) as f32);
+                    let x0 = fx as usize;
+                    let x1 = (x0 + 1).min(img.width - 1);
+                    let wx = fx - x0 as f32;
+                    let p00 = img.get(y0, x0);
+                    let p01 = img.get(y0, x1);
+                    let p10 = img.get(y1, x0);
+                    let p11 = img.get(y1, x1);
+                    let mut rgb = [0f32; 3];
+                    for c in 0..3 {
+                        let top = p00[c] * (1.0 - wx) + p01[c] * wx;
+                        let bot = p10[c] * (1.0 - wx) + p11[c] * wx;
+                        rgb[c] = top * (1.0 - wy) + bot * wy;
+                    }
+                    out.set(y, x, rgb);
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Channel-wise normalization `(x - mean) / std`, in place.
+pub fn normalize(img: &mut Image, mean: [f32; 3], std: [f32; 3]) {
+    for px in img.data.chunks_exact_mut(3) {
+        for c in 0..3 {
+            px[c] = (px[c] - mean[c]) / std[c];
+        }
+    }
+}
+
+/// Flatten to the NHWC f32 buffer the DL models expect (single image).
+pub fn to_tensor(img: &Image) -> Vec<f32> {
+    img.data.clone()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fill_and_get() {
+        let mut img = Image::zeros(4, 4);
+        img.fill_rect(1, 1, 2, 2, [1.0, 0.5, 0.25]);
+        assert_eq!(img.get(1, 1), [1.0, 0.5, 0.25]);
+        assert_eq!(img.get(0, 0), [0.0, 0.0, 0.0]);
+        assert_eq!(img.get(3, 3), [0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn fill_rect_clamps() {
+        let mut img = Image::zeros(3, 3);
+        img.fill_rect(2, 2, 10, 10, [1.0; 3]);
+        assert_eq!(img.get(2, 2), [1.0; 3]);
+    }
+
+    #[test]
+    fn resize_identity() {
+        let mut img = Image::zeros(5, 7);
+        img.fill_rect(0, 0, 5, 7, [0.3, 0.6, 0.9]);
+        for f in [ResizeFilter::Nearest, ResizeFilter::Bilinear] {
+            let out = resize(&img, 5, 7, f);
+            assert_eq!(out.data, img.data, "{f:?}");
+        }
+    }
+
+    #[test]
+    fn resize_preserves_constant_images() {
+        let img = Image::filled(8, 8, [0.2, 0.4, 0.8]);
+        let out = resize(&img, 3, 5, ResizeFilter::Bilinear);
+        for y in 0..3 {
+            for x in 0..5 {
+                let p = out.get(y, x);
+                assert!((p[0] - 0.2).abs() < 1e-6);
+                assert!((p[2] - 0.8).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn downscale_averages_regions_bilinear() {
+        // Left half black, right half white → 1x2 resize ≈ [dark, light].
+        let mut img = Image::zeros(4, 8);
+        img.fill_rect(0, 4, 4, 4, [1.0; 3]);
+        let out = resize(&img, 1, 2, ResizeFilter::Bilinear);
+        assert!(out.get(0, 0)[0] < 0.5);
+        assert!(out.get(0, 1)[0] > 0.5);
+    }
+
+    #[test]
+    fn normalize_zero_means_unit_output() {
+        let mut img = Image::filled(2, 2, [0.5, 0.5, 0.5]);
+        normalize(&mut img, [0.5; 3], [0.25; 3]);
+        assert!(img.data.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn gray_weights_sum_to_one() {
+        let img = Image::filled(1, 1, [1.0, 1.0, 1.0]);
+        let g = img.to_gray();
+        assert!((g[0] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn crop_bounds() {
+        let mut img = Image::zeros(6, 6);
+        img.set(2, 3, [1.0; 3]);
+        let c = img.crop(2, 2, 2, 3);
+        assert_eq!(c.height, 2);
+        assert_eq!(c.width, 3);
+        assert_eq!(c.get(0, 1), [1.0; 3]);
+        // Out-of-range crop clamps to empty-ish.
+        let c2 = img.crop(5, 5, 10, 10);
+        assert_eq!((c2.height, c2.width), (1, 1));
+    }
+}

@@ -1,0 +1,20 @@
+//! Media substrate: synthetic video, a toy codec, and image ops.
+//!
+//! The video-streamer and face-recognition pipelines start with GStreamer
+//! decode and OpenCV resize/normalize (Table 1). This sandbox has neither
+//! GStreamer nor camera input, so per the substitution rule we implement
+//! the closest synthetic equivalents that exercise the same code path:
+//!
+//! * [`synth`]  — a deterministic scene generator ("mall camera"): moving
+//!   rectangles (people/objects) over a textured background.
+//! * [`codec`]  — a toy intra-frame codec (delta + run-length encoding) so
+//!   that the *decode* stage does real per-frame byte work, like the
+//!   paper's H.264 decode does.
+//! * [`image`]  — resize (nearest + bilinear), normalization, RGB↔gray.
+
+pub mod image;
+pub mod codec;
+pub mod synth;
+
+pub use image::{normalize, resize, Image, ResizeFilter};
+pub use synth::{SceneObject, VideoSource};

@@ -1,0 +1,167 @@
+//! Deterministic synthetic video source — the "mall camera" substitute.
+//!
+//! Generates frames of moving rectangles (people/objects) over a textured
+//! background, with planted ground-truth boxes so the detection pipelines
+//! can report real quality metrics. Frames are pre-encoded with the toy
+//! codec so the pipeline's first stage does actual decode work.
+
+use super::codec::{encode, EncodedFrame};
+use super::image::Image;
+use crate::util::Rng;
+
+/// One moving object in the scene.
+#[derive(Debug, Clone)]
+pub struct SceneObject {
+    pub y: f32,
+    pub x: f32,
+    pub vy: f32,
+    pub vx: f32,
+    pub h: f32,
+    pub w: f32,
+    pub color: [f32; 3],
+    /// Class id (1 = person, 2 = object — 0 is background).
+    pub class: usize,
+}
+
+/// Ground truth for one frame.
+#[derive(Debug, Clone)]
+pub struct FrameTruth {
+    /// (y0, x0, y1, x1) in pixels.
+    pub boxes: Vec<[f32; 4]>,
+    pub classes: Vec<usize>,
+}
+
+/// A deterministic stream of encoded frames + ground truth.
+pub struct VideoSource {
+    pub height: usize,
+    pub width: usize,
+    objects: Vec<SceneObject>,
+    background: Image,
+    frame_no: usize,
+}
+
+impl VideoSource {
+    /// New scene with `n_objects` movers, deterministic in `seed`.
+    pub fn new(height: usize, width: usize, n_objects: usize, seed: u64) -> VideoSource {
+        let mut rng = Rng::new(seed);
+        // Textured background: low-amplitude noise around mid-gray.
+        let mut background = Image::zeros(height, width);
+        for v in background.data.iter_mut() {
+            *v = 0.35 + 0.1 * rng.f32();
+        }
+        let objects = (0..n_objects)
+            .map(|i| {
+                let class = 1 + (i % 2);
+                SceneObject {
+                    y: rng.range_f64(0.0, height as f64 * 0.7) as f32,
+                    x: rng.range_f64(0.0, width as f64 * 0.7) as f32,
+                    vy: rng.range_f64(-2.0, 2.0) as f32,
+                    vx: rng.range_f64(-2.0, 2.0) as f32,
+                    h: rng.range_f64(height as f64 * 0.15, height as f64 * 0.3) as f32,
+                    w: rng.range_f64(width as f64 * 0.1, width as f64 * 0.2) as f32,
+                    color: if class == 1 {
+                        [0.9, 0.2, 0.2] // "person"
+                    } else {
+                        [0.2, 0.4, 0.9] // "object"
+                    },
+                    class,
+                }
+            })
+            .collect();
+        VideoSource { height, width, objects, background, frame_no: 0 }
+    }
+
+    /// Render, advance and encode the next frame.
+    pub fn next_frame(&mut self) -> (EncodedFrame, FrameTruth) {
+        let mut img = self.background.clone();
+        let mut truth = FrameTruth { boxes: Vec::new(), classes: Vec::new() };
+        for obj in &mut self.objects {
+            // Bounce at the walls.
+            obj.y += obj.vy;
+            obj.x += obj.vx;
+            if obj.y < 0.0 || obj.y + obj.h >= self.height as f32 {
+                obj.vy = -obj.vy;
+                obj.y = obj.y.clamp(0.0, (self.height as f32 - obj.h).max(0.0));
+            }
+            if obj.x < 0.0 || obj.x + obj.w >= self.width as f32 {
+                obj.vx = -obj.vx;
+                obj.x = obj.x.clamp(0.0, (self.width as f32 - obj.w).max(0.0));
+            }
+            img.fill_rect(
+                obj.y as usize,
+                obj.x as usize,
+                obj.h as usize,
+                obj.w as usize,
+                obj.color,
+            );
+            truth.boxes.push([obj.y, obj.x, obj.y + obj.h, obj.x + obj.w]);
+            truth.classes.push(obj.class);
+        }
+        self.frame_no += 1;
+        (encode(&img), truth)
+    }
+
+    /// Frames rendered so far.
+    pub fn frames_emitted(&self) -> usize {
+        self.frame_no
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::media::codec::decode;
+
+    #[test]
+    fn deterministic_stream() {
+        let mut a = VideoSource::new(32, 48, 2, 7);
+        let mut b = VideoSource::new(32, 48, 2, 7);
+        for _ in 0..5 {
+            let (fa, ta) = a.next_frame();
+            let (fb, tb) = b.next_frame();
+            assert_eq!(fa.payload, fb.payload);
+            assert_eq!(ta.boxes.len(), tb.boxes.len());
+        }
+    }
+
+    #[test]
+    fn truth_boxes_in_bounds() {
+        let mut src = VideoSource::new(64, 64, 3, 1);
+        for _ in 0..50 {
+            let (_, truth) = src.next_frame();
+            assert_eq!(truth.boxes.len(), 3);
+            for b in &truth.boxes {
+                assert!(b[0] >= -1.0 && b[2] <= 65.0, "{b:?}");
+                assert!(b[1] >= -1.0 && b[3] <= 65.0, "{b:?}");
+                assert!(b[2] > b[0] && b[3] > b[1]);
+            }
+        }
+        assert_eq!(src.frames_emitted(), 50);
+    }
+
+    #[test]
+    fn objects_visible_in_decoded_frame() {
+        let mut src = VideoSource::new(32, 32, 1, 3);
+        let (enc, truth) = src.next_frame();
+        let img = decode(&enc);
+        let b = truth.boxes[0];
+        let cy = ((b[0] + b[2]) / 2.0) as usize;
+        let cx = ((b[1] + b[3]) / 2.0) as usize;
+        let px = img.get(cy.min(31), cx.min(31));
+        // The planted "person" rectangle is saturated red-ish.
+        assert!(px[0] > 0.7, "{px:?}");
+    }
+
+    #[test]
+    fn objects_move_between_frames() {
+        let mut src = VideoSource::new(64, 64, 1, 5);
+        let (_, t1) = src.next_frame();
+        for _ in 0..9 {
+            src.next_frame();
+        }
+        let (_, t2) = src.next_frame();
+        let d = (t1.boxes[0][0] - t2.boxes[0][0]).abs()
+            + (t1.boxes[0][1] - t2.boxes[0][1]).abs();
+        assert!(d > 1.0, "object did not move: {d}");
+    }
+}

@@ -1,0 +1,90 @@
+//! Label encoding — DIEN preprocessing ("label encoding", Table 1).
+
+use std::collections::HashMap;
+
+/// Maps string categories to dense integer ids (fit-then-transform).
+#[derive(Debug, Clone, Default)]
+pub struct LabelEncoder {
+    map: HashMap<String, i64>,
+    inverse: Vec<String>,
+}
+
+impl LabelEncoder {
+    /// Empty encoder.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Learn ids from `values` in first-appearance order.
+    pub fn fit<S: AsRef<str>>(&mut self, values: &[S]) {
+        for v in values {
+            let v = v.as_ref();
+            if !self.map.contains_key(v) {
+                let id = self.inverse.len() as i64;
+                self.map.insert(v.to_string(), id);
+                self.inverse.push(v.to_string());
+            }
+        }
+    }
+
+    /// Encode; unseen categories get `-1` (a sentinel the pipelines filter).
+    pub fn transform<S: AsRef<str>>(&self, values: &[S]) -> Vec<i64> {
+        values.iter().map(|v| *self.map.get(v.as_ref()).unwrap_or(&-1)).collect()
+    }
+
+    /// Fit and encode in one pass.
+    pub fn fit_transform<S: AsRef<str>>(&mut self, values: &[S]) -> Vec<i64> {
+        self.fit(values);
+        self.transform(values)
+    }
+
+    /// Decode an id.
+    pub fn inverse(&self, id: i64) -> Option<&str> {
+        if id < 0 {
+            return None;
+        }
+        self.inverse.get(id as usize).map(|s| s.as_str())
+    }
+
+    /// Number of distinct categories.
+    pub fn len(&self) -> usize {
+        self.inverse.len()
+    }
+
+    /// True when nothing has been fit.
+    pub fn is_empty(&self) -> bool {
+        self.inverse.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_appearance_order() {
+        let mut e = LabelEncoder::new();
+        let ids = e.fit_transform(&["b", "a", "b", "c"]);
+        assert_eq!(ids, vec![0, 1, 0, 2]);
+        assert_eq!(e.len(), 3);
+        assert_eq!(e.inverse(1), Some("a"));
+    }
+
+    #[test]
+    fn unseen_is_sentinel() {
+        let mut e = LabelEncoder::new();
+        e.fit(&["x"]);
+        assert_eq!(e.transform(&["x", "y"]), vec![0, -1]);
+        assert_eq!(e.inverse(-1), None);
+        assert_eq!(e.inverse(99), None);
+    }
+
+    #[test]
+    fn refit_is_idempotent() {
+        let mut e = LabelEncoder::new();
+        e.fit(&["a", "b"]);
+        e.fit(&["b", "a"]);
+        assert_eq!(e.len(), 2);
+        assert_eq!(e.transform(&["a"]), vec![0]);
+    }
+}

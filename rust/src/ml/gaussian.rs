@@ -1,0 +1,164 @@
+//! Multivariate Gaussian density model — the anomaly score (§2.7).
+//!
+//! "A model of normality is learned over feature maps … in an unsupervised
+//! manner. Deviations from the model are flagged as anomalies." The model
+//! is a full-covariance Gaussian over PCA-reduced features; the anomaly
+//! score is the squared Mahalanobis distance.
+
+use crate::linalg::{cholesky, Matrix};
+
+/// Gaussian model of normality with a Cholesky-factored covariance.
+#[derive(Debug, Clone)]
+pub struct GaussianModel {
+    /// Feature means.
+    pub mean: Vec<f64>,
+    /// Lower Cholesky factor of the (regularized) covariance.
+    chol: Matrix,
+}
+
+impl GaussianModel {
+    /// Fit on rows of `x` (normal data only). `eps` regularizes the
+    /// covariance diagonal (the role PCA plays upstream; both guards are
+    /// kept, as the paper does).
+    pub fn fit(x: &Matrix, eps: f64) -> Option<GaussianModel> {
+        let n = x.rows.max(2);
+        let d = x.cols;
+        let mut xc = x.clone();
+        let mean = xc.center_columns();
+        let mut cov = crate::linalg::gemm::gram(&xc);
+        cov.data.iter_mut().for_each(|v| *v /= (n - 1) as f64);
+        for i in 0..d {
+            cov.data[i * d + i] += eps;
+        }
+        let chol = cholesky(&cov)?;
+        Some(GaussianModel { mean, chol })
+    }
+
+    /// Squared Mahalanobis distance of one row (the anomaly score).
+    pub fn score_row(&self, row: &[f64]) -> f64 {
+        debug_assert_eq!(row.len(), self.mean.len());
+        // Solve L z = (row - mean); score = ||z||².
+        let d = self.mean.len();
+        let mut z = vec![0.0; d];
+        for i in 0..d {
+            let mut sum = row[i] - self.mean[i];
+            for k in 0..i {
+                sum -= self.chol.get(i, k) * z[k];
+            }
+            z[i] = sum / self.chol.get(i, i);
+        }
+        z.iter().map(|v| v * v).sum()
+    }
+
+    /// Scores for every row of `x`.
+    pub fn score(&self, x: &Matrix) -> Vec<f64> {
+        (0..x.rows).map(|i| self.score_row(x.row(i))).collect()
+    }
+
+    /// Threshold at the `q`-quantile of training scores: scores above are
+    /// anomalies.
+    pub fn threshold(&self, train: &Matrix, q: f64) -> f64 {
+        let mut s = self.score(train);
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let i = ((s.len() as f64 - 1.0) * q.clamp(0.0, 1.0)).round() as usize;
+        s[i]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ml::metrics;
+    use crate::util::Rng;
+
+    fn normal_data(rng: &mut Rng, n: usize, d: usize) -> Matrix {
+        let mut x = Matrix::zeros(n, d);
+        for i in 0..n {
+            for j in 0..d {
+                x.set(i, j, rng.normal_with(j as f64, 1.0 + j as f64 * 0.2));
+            }
+        }
+        x
+    }
+
+    #[test]
+    fn inliers_score_low_outliers_high() {
+        let mut rng = Rng::new(1);
+        let train = normal_data(&mut rng, 500, 4);
+        let model = GaussianModel::fit(&train, 1e-6).unwrap();
+        let inlier_scores = model.score(&normal_data(&mut rng, 100, 4));
+        // Outliers: shift every feature by 6 sigma.
+        let mut outliers = normal_data(&mut rng, 100, 4);
+        for v in outliers.data.iter_mut() {
+            *v += 8.0;
+        }
+        let outlier_scores = model.score(&outliers);
+        let mean_in: f64 = inlier_scores.iter().sum::<f64>() / 100.0;
+        let mean_out: f64 = outlier_scores.iter().sum::<f64>() / 100.0;
+        assert!(mean_out > mean_in * 5.0, "in={mean_in} out={mean_out}");
+    }
+
+    #[test]
+    fn auc_separates_planted_anomalies() {
+        let mut rng = Rng::new(2);
+        let train = normal_data(&mut rng, 400, 3);
+        let model = GaussianModel::fit(&train, 1e-6).unwrap();
+        let mut scores = Vec::new();
+        let mut labels = Vec::new();
+        for _ in 0..200 {
+            let anomalous = rng.chance(0.3);
+            let row: Vec<f64> = (0..3)
+                .map(|j| {
+                    rng.normal_with(j as f64 + if anomalous { 5.0 } else { 0.0 }, 1.0)
+                })
+                .collect();
+            scores.push(model.score_row(&row));
+            labels.push(anomalous as i64 as f64);
+        }
+        let auc = metrics::auc(&labels, &scores);
+        assert!(auc > 0.95, "auc={auc}");
+    }
+
+    #[test]
+    fn mahalanobis_of_mean_is_zero() {
+        let mut rng = Rng::new(3);
+        let train = normal_data(&mut rng, 200, 4);
+        let model = GaussianModel::fit(&train, 1e-6).unwrap();
+        assert!(model.score_row(&model.mean.clone()) < 1e-18);
+    }
+
+    #[test]
+    fn expected_score_is_dimension() {
+        // E[Mahalanobis²] = d for data drawn from the fitted Gaussian.
+        let mut rng = Rng::new(4);
+        let train = normal_data(&mut rng, 2000, 5);
+        let model = GaussianModel::fit(&train, 1e-9).unwrap();
+        let scores = model.score(&train);
+        let mean: f64 = scores.iter().sum::<f64>() / scores.len() as f64;
+        assert!((mean - 5.0).abs() < 0.3, "mean score={mean}");
+    }
+
+    #[test]
+    fn threshold_quantile_behaves() {
+        let mut rng = Rng::new(5);
+        let train = normal_data(&mut rng, 500, 3);
+        let model = GaussianModel::fit(&train, 1e-6).unwrap();
+        let thr = model.threshold(&train, 0.95);
+        let above = model.score(&train).iter().filter(|&&s| s > thr).count();
+        assert!(above <= 500 * 6 / 100, "{above} above the 95% threshold");
+    }
+
+    #[test]
+    fn degenerate_covariance_needs_regularization() {
+        // Two identical columns → singular covariance; eps rescues it.
+        let mut rng = Rng::new(6);
+        let mut x = Matrix::zeros(50, 2);
+        for i in 0..50 {
+            let v = rng.normal();
+            x.set(i, 0, v);
+            x.set(i, 1, v);
+        }
+        assert!(GaussianModel::fit(&x, 0.0).is_none());
+        assert!(GaussianModel::fit(&x, 1e-6).is_some());
+    }
+}

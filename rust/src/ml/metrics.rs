@@ -1,0 +1,149 @@
+//! Evaluation metrics shared by the pipelines and benches.
+
+/// Mean squared error.
+pub fn mse(y_true: &[f64], y_pred: &[f64]) -> f64 {
+    assert_eq!(y_true.len(), y_pred.len());
+    if y_true.is_empty() {
+        return 0.0;
+    }
+    y_true
+        .iter()
+        .zip(y_pred)
+        .map(|(t, p)| (t - p) * (t - p))
+        .sum::<f64>()
+        / y_true.len() as f64
+}
+
+/// Coefficient of determination R².
+pub fn r2_score(y_true: &[f64], y_pred: &[f64]) -> f64 {
+    assert_eq!(y_true.len(), y_pred.len());
+    let mean = y_true.iter().sum::<f64>() / y_true.len().max(1) as f64;
+    let ss_tot: f64 = y_true.iter().map(|t| (t - mean) * (t - mean)).sum();
+    let ss_res: f64 = y_true.iter().zip(y_pred).map(|(t, p)| (t - p) * (t - p)).sum();
+    if ss_tot == 0.0 {
+        if ss_res == 0.0 {
+            1.0
+        } else {
+            0.0
+        }
+    } else {
+        1.0 - ss_res / ss_tot
+    }
+}
+
+/// Fraction of exact matches (binary or already-thresholded labels).
+pub fn accuracy(y_true: &[f64], y_pred: &[f64]) -> f64 {
+    assert_eq!(y_true.len(), y_pred.len());
+    if y_true.is_empty() {
+        return 0.0;
+    }
+    y_true.iter().zip(y_pred).filter(|(t, p)| (*t - *p).abs() < 0.5).count() as f64
+        / y_true.len() as f64
+}
+
+/// Binary F1 at the 0.5 threshold (positive class = 1).
+pub fn f1(y_true: &[f64], y_pred: &[f64]) -> f64 {
+    let mut tp = 0.0;
+    let mut fp = 0.0;
+    let mut fne = 0.0;
+    for (&t, &p) in y_true.iter().zip(y_pred) {
+        let t = t >= 0.5;
+        let p = p >= 0.5;
+        match (t, p) {
+            (true, true) => tp += 1.0,
+            (false, true) => fp += 1.0,
+            (true, false) => fne += 1.0,
+            _ => {}
+        }
+    }
+    if tp == 0.0 {
+        return 0.0;
+    }
+    let prec = tp / (tp + fp);
+    let rec = tp / (tp + fne);
+    2.0 * prec * rec / (prec + rec)
+}
+
+/// ROC AUC via the rank-sum (Mann–Whitney) formulation; ties get the
+/// average rank.
+pub fn auc(y_true: &[f64], scores: &[f64]) -> f64 {
+    assert_eq!(y_true.len(), scores.len());
+    let n = y_true.len();
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| scores[a].partial_cmp(&scores[b]).unwrap());
+    // Average ranks over tie groups.
+    let mut ranks = vec![0.0; n];
+    let mut i = 0;
+    while i < n {
+        let mut j = i;
+        while j + 1 < n && scores[order[j + 1]] == scores[order[i]] {
+            j += 1;
+        }
+        let avg = (i + j) as f64 / 2.0 + 1.0;
+        for k in i..=j {
+            ranks[order[k]] = avg;
+        }
+        i = j + 1;
+    }
+    let n_pos = y_true.iter().filter(|&&t| t >= 0.5).count() as f64;
+    let n_neg = n as f64 - n_pos;
+    if n_pos == 0.0 || n_neg == 0.0 {
+        return 0.5;
+    }
+    let rank_sum: f64 =
+        y_true.iter().zip(&ranks).filter(|(t, _)| **t >= 0.5).map(|(_, r)| r).sum();
+    (rank_sum - n_pos * (n_pos + 1.0) / 2.0) / (n_pos * n_neg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mse_basic() {
+        assert_eq!(mse(&[1.0, 2.0], &[1.0, 4.0]), 2.0);
+        assert_eq!(mse(&[], &[]), 0.0);
+    }
+
+    #[test]
+    fn r2_perfect_and_mean() {
+        assert_eq!(r2_score(&[1.0, 2.0, 3.0], &[1.0, 2.0, 3.0]), 1.0);
+        let r = r2_score(&[1.0, 2.0, 3.0], &[2.0, 2.0, 2.0]);
+        assert!(r.abs() < 1e-12, "{r}");
+    }
+
+    #[test]
+    fn accuracy_counts_matches() {
+        assert_eq!(accuracy(&[1.0, 0.0, 1.0, 0.0], &[1.0, 1.0, 1.0, 0.0]), 0.75);
+    }
+
+    #[test]
+    fn f1_known_case() {
+        // tp=1 fp=1 fn=1 → precision 0.5, recall 0.5, f1 0.5
+        let f = f1(&[1.0, 0.0, 1.0], &[1.0, 1.0, 0.0]);
+        assert!((f - 0.5).abs() < 1e-12);
+        assert_eq!(f1(&[1.0], &[0.0]), 0.0);
+    }
+
+    #[test]
+    fn auc_perfect_random_inverted() {
+        let y = [0.0, 0.0, 1.0, 1.0];
+        assert_eq!(auc(&y, &[0.1, 0.2, 0.8, 0.9]), 1.0);
+        assert_eq!(auc(&y, &[0.9, 0.8, 0.2, 0.1]), 0.0);
+        let a = auc(&y, &[0.5, 0.5, 0.5, 0.5]);
+        assert!((a - 0.5).abs() < 1e-12, "{a}");
+    }
+
+    #[test]
+    fn auc_handles_ties_symmetrically() {
+        let y = [1.0, 0.0, 1.0, 0.0, 1.0];
+        let s = [0.9, 0.5, 0.5, 0.5, 0.1];
+        let a = auc(&y, &s);
+        assert!(a > 0.0 && a < 1.0);
+    }
+
+    #[test]
+    fn auc_degenerate_single_class() {
+        assert_eq!(auc(&[1.0, 1.0], &[0.3, 0.7]), 0.5);
+    }
+}

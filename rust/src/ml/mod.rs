@@ -1,0 +1,32 @@
+//! Classical-ML substrate: the estimators the paper's tabular pipelines
+//! train (Table 1), each in a **baseline** (stock-sklearn-like) and an
+//! **optimized** (sklearnex/XGBoost-hist-like) variant — the Table 2
+//! "Intel Extension for Scikit-learn" and "XGBoost" columns.
+//!
+//! * [`ridge`]   — ridge regression (Census): naive normal equations vs
+//!   blocked-GEMM + Cholesky.
+//! * [`gbt`]     — gradient-boosted trees (PLAsTiCC): exact greedy split
+//!   enumeration vs histogram method.
+//! * [`forest`]  — random forest classifier (IIoT): per-node full sort vs
+//!   histogram splits + subsampled features.
+//! * [`pca`]     — PCA via covariance + Jacobi eigensolver (anomaly
+//!   detection dimensionality reduction).
+//! * [`gaussian`]— multivariate Gaussian density model over PCA features
+//!   (the anomaly score).
+//! * [`encoder`] — label encoding for categorical features (DIEN).
+//! * [`metrics`] — mse/r2/accuracy/f1/auc.
+
+pub mod ridge;
+pub mod gbt;
+pub mod forest;
+pub mod pca;
+pub mod gaussian;
+pub mod encoder;
+pub mod metrics;
+
+pub use encoder::LabelEncoder;
+pub use forest::{RandomForest, RandomForestParams};
+pub use gaussian::GaussianModel;
+pub use gbt::{Gbt, GbtParams, TreeMethod};
+pub use pca::Pca;
+pub use ridge::Ridge;

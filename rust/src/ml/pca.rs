@@ -1,0 +1,140 @@
+//! PCA — dimensionality reduction before the anomaly-detection Gaussian.
+//!
+//! The paper: "the dimension of the feature space is reduced using PCA to
+//! prevent matrix singularities and rank deficiencies … while estimating
+//! the parameters of the distribution" (§2.7). Covariance + Jacobi
+//! eigensolver (feature dims here are ≤ 64, see `eigh_jacobi`).
+
+use crate::linalg::{eigh_jacobi, Matrix};
+
+/// A fitted PCA transform.
+#[derive(Debug, Clone)]
+pub struct Pca {
+    /// Per-feature means subtracted before projection.
+    pub means: Vec<f64>,
+    /// Projection matrix (features × components), columns = eigenvectors.
+    pub components: Matrix,
+    /// Eigenvalues (descending) of the retained components.
+    pub explained: Vec<f64>,
+}
+
+impl Pca {
+    /// Fit retaining `k` components (clamped to the feature count).
+    pub fn fit(x: &Matrix, k: usize) -> Pca {
+        let k = k.clamp(1, x.cols);
+        let mut xc = x.clone();
+        let means = xc.center_columns();
+        // Covariance = XᵀX / (n-1) over centered data (symmetric Gram).
+        let mut cov = crate::linalg::gemm::gram(&xc);
+        let denom = (x.rows.max(2) - 1) as f64;
+        cov.data.iter_mut().for_each(|v| *v /= denom);
+        let (vals, vecs) = eigh_jacobi(&cov, 100);
+        // Keep the top-k eigenvector columns.
+        let mut components = Matrix::zeros(x.cols, k);
+        for c in 0..k {
+            for r in 0..x.cols {
+                components.set(r, c, vecs.get(r, c));
+            }
+        }
+        Pca { means, components, explained: vals[..k].to_vec() }
+    }
+
+    /// Project rows into the component space: (n × features) → (n × k).
+    pub fn transform(&self, x: &Matrix) -> Matrix {
+        let mut xc = x.clone();
+        for r in 0..xc.rows {
+            let row = xc.row_mut(r);
+            for (c, v) in row.iter_mut().enumerate() {
+                *v -= self.means[c];
+            }
+        }
+        crate::linalg::matmul_blocked(&xc, &self.components)
+    }
+
+    /// Fraction of variance captured by the retained components.
+    pub fn explained_ratio(&self, x: &Matrix) -> f64 {
+        let mut xc = x.clone();
+        xc.center_columns();
+        let total: f64 = xc.data.iter().map(|v| v * v).sum::<f64>()
+            / (x.rows.max(2) - 1) as f64;
+        if total == 0.0 {
+            return 1.0;
+        }
+        self.explained.iter().sum::<f64>() / total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{prop, Rng};
+
+    /// Data with a planted low-rank structure + small noise.
+    fn low_rank(rng: &mut Rng, n: usize, d: usize, rank: usize, noise: f64) -> Matrix {
+        let basis = Matrix::randn(rank, d, rng);
+        let mut x = Matrix::zeros(n, d);
+        for i in 0..n {
+            let coefs: Vec<f64> = (0..rank).map(|_| rng.normal_with(0.0, 3.0)).collect();
+            for j in 0..d {
+                let mut v = 0.0;
+                for (r, c) in coefs.iter().enumerate() {
+                    v += c * basis.get(r, j);
+                }
+                x.set(i, j, v + noise * rng.normal());
+            }
+        }
+        x
+    }
+
+    #[test]
+    fn captures_planted_rank() {
+        let mut rng = Rng::new(1);
+        let x = low_rank(&mut rng, 300, 10, 2, 0.01);
+        let pca = Pca::fit(&x, 2);
+        assert!(pca.explained_ratio(&x) > 0.99, "{}", pca.explained_ratio(&x));
+    }
+
+    #[test]
+    fn transform_shape_and_centering() {
+        let mut rng = Rng::new(2);
+        let x = low_rank(&mut rng, 100, 8, 3, 0.1);
+        let pca = Pca::fit(&x, 3);
+        let z = pca.transform(&x);
+        assert_eq!((z.rows, z.cols), (100, 3));
+        for c in 0..3 {
+            let mean: f64 = z.col(c).iter().sum::<f64>() / 100.0;
+            assert!(mean.abs() < 1e-9, "component {c} mean {mean}");
+        }
+    }
+
+    #[test]
+    fn components_are_orthonormal() {
+        prop::check("pca components orthonormal", 8, |rng| {
+            let x = low_rank(rng, 80, 6, 4, 0.5);
+            let pca = Pca::fit(&x, 4);
+            let ctc = crate::linalg::matmul_naive(
+                &pca.components.transpose(),
+                &pca.components,
+            );
+            prop::assert_close(&ctc.data, &Matrix::eye(4).data, 1e-6)
+        });
+    }
+
+    #[test]
+    fn k_clamps_to_feature_count() {
+        let mut rng = Rng::new(3);
+        let x = Matrix::randn(20, 3, &mut rng);
+        let pca = Pca::fit(&x, 10);
+        assert_eq!(pca.components.cols, 3);
+    }
+
+    #[test]
+    fn explained_sorted_descending() {
+        let mut rng = Rng::new(4);
+        let x = low_rank(&mut rng, 150, 8, 8, 0.3);
+        let pca = Pca::fit(&x, 8);
+        for w in pca.explained.windows(2) {
+            assert!(w[0] >= w[1] - 1e-9);
+        }
+    }
+}

@@ -1,0 +1,302 @@
+//! Bounded MPMC channel with blocking send — the backpressure primitive.
+//!
+//! `std::sync::mpsc` is MPSC and its `sync_channel` cannot be cloned on the
+//! receiving side, which the pipeline coordinator needs for multi-consumer
+//! stages (e.g. several inference instances pulling from one preprocessing
+//! queue). This is a classic Mutex+Condvar ring buffer:
+//!
+//! * `send` blocks while the queue is full → upstream stages slow down to
+//!   the rate of the slowest downstream stage (the paper's pipelines are
+//!   throughput-bound; unbounded queues would hide that and blow memory).
+//! * dropping all senders closes the channel; receivers drain then get
+//!   `RecvError::Closed`.
+//! * dropping all receivers makes `send` fail fast with `SendError`.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+
+struct Inner<T> {
+    q: Mutex<Ring<T>>,
+    not_full: Condvar,
+    not_empty: Condvar,
+}
+
+struct Ring<T> {
+    buf: VecDeque<T>,
+    cap: usize,
+    senders: usize,
+    receivers: usize,
+}
+
+/// Error returned by [`Sender::send`] when all receivers are gone; carries
+/// the rejected value back to the caller.
+#[derive(Debug)]
+pub struct SendError<T>(pub T);
+
+/// Error returned by [`Receiver::recv`].
+#[derive(Debug, PartialEq, Eq)]
+pub enum RecvError {
+    /// All senders dropped and the queue is drained.
+    Closed,
+}
+
+/// Sending half; cloneable.
+pub struct Sender<T> {
+    inner: Arc<Inner<T>>,
+}
+
+/// Receiving half; cloneable (MPMC).
+pub struct Receiver<T> {
+    inner: Arc<Inner<T>>,
+}
+
+/// Create a bounded channel with capacity `cap` (>= 1).
+pub fn bounded<T>(cap: usize) -> (Sender<T>, Receiver<T>) {
+    let inner = Arc::new(Inner {
+        q: Mutex::new(Ring {
+            buf: VecDeque::with_capacity(cap.max(1)),
+            cap: cap.max(1),
+            senders: 1,
+            receivers: 1,
+        }),
+        not_full: Condvar::new(),
+        not_empty: Condvar::new(),
+    });
+    (Sender { inner: Arc::clone(&inner) }, Receiver { inner })
+}
+
+impl<T> Sender<T> {
+    /// Blocking send; waits while the queue is full (backpressure).
+    pub fn send(&self, v: T) -> Result<(), SendError<T>> {
+        let mut q = self.inner.q.lock().unwrap();
+        loop {
+            if q.receivers == 0 {
+                return Err(SendError(v));
+            }
+            if q.buf.len() < q.cap {
+                q.buf.push_back(v);
+                drop(q);
+                self.inner.not_empty.notify_one();
+                return Ok(());
+            }
+            q = self.inner.not_full.wait(q).unwrap();
+        }
+    }
+
+    /// Non-blocking send; returns the value back if the queue is full.
+    pub fn try_send(&self, v: T) -> Result<(), SendError<T>> {
+        let mut q = self.inner.q.lock().unwrap();
+        if q.receivers == 0 || q.buf.len() >= q.cap {
+            return Err(SendError(v));
+        }
+        q.buf.push_back(v);
+        drop(q);
+        self.inner.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Current queue depth (for telemetry).
+    pub fn depth(&self) -> usize {
+        self.inner.q.lock().unwrap().buf.len()
+    }
+}
+
+impl<T> Receiver<T> {
+    /// Blocking receive; `Err(Closed)` after the last sender drops and the
+    /// queue drains.
+    pub fn recv(&self) -> Result<T, RecvError> {
+        let mut q = self.inner.q.lock().unwrap();
+        loop {
+            if let Some(v) = q.buf.pop_front() {
+                drop(q);
+                self.inner.not_full.notify_one();
+                return Ok(v);
+            }
+            if q.senders == 0 {
+                return Err(RecvError::Closed);
+            }
+            q = self.inner.not_empty.wait(q).unwrap();
+        }
+    }
+
+    /// Receive with a timeout: `Ok(v)`, `Err(true)` on timeout, or
+    /// `Err(false)` when closed (drained + no senders). Used by the
+    /// dynamic batcher's max-wait flush.
+    pub fn recv_timeout(&self, timeout: std::time::Duration) -> Result<T, bool> {
+        let deadline = std::time::Instant::now() + timeout;
+        let mut q = self.inner.q.lock().unwrap();
+        loop {
+            if let Some(v) = q.buf.pop_front() {
+                drop(q);
+                self.inner.not_full.notify_one();
+                return Ok(v);
+            }
+            if q.senders == 0 {
+                return Err(false);
+            }
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return Err(true);
+            }
+            let (guard, res) =
+                self.inner.not_empty.wait_timeout(q, deadline - now).unwrap();
+            q = guard;
+            if res.timed_out() && q.buf.is_empty() {
+                if q.senders == 0 {
+                    return Err(false);
+                }
+                return Err(true);
+            }
+        }
+    }
+
+    /// Non-blocking receive.
+    pub fn try_recv(&self) -> Option<T> {
+        let mut q = self.inner.q.lock().unwrap();
+        let v = q.buf.pop_front();
+        if v.is_some() {
+            drop(q);
+            self.inner.not_full.notify_one();
+        }
+        v
+    }
+
+    /// Drain into an iterator until closed (convenience for sink stages).
+    pub fn iter(&self) -> impl Iterator<Item = T> + '_ {
+        std::iter::from_fn(move || self.recv().ok())
+    }
+}
+
+impl<T> Clone for Sender<T> {
+    fn clone(&self) -> Self {
+        self.inner.q.lock().unwrap().senders += 1;
+        Sender { inner: Arc::clone(&self.inner) }
+    }
+}
+
+impl<T> Clone for Receiver<T> {
+    fn clone(&self) -> Self {
+        self.inner.q.lock().unwrap().receivers += 1;
+        Receiver { inner: Arc::clone(&self.inner) }
+    }
+}
+
+impl<T> Drop for Sender<T> {
+    fn drop(&mut self) {
+        let mut q = self.inner.q.lock().unwrap();
+        q.senders -= 1;
+        if q.senders == 0 {
+            drop(q);
+            self.inner.not_empty.notify_all();
+        }
+    }
+}
+
+impl<T> Drop for Receiver<T> {
+    fn drop(&mut self) {
+        let mut q = self.inner.q.lock().unwrap();
+        q.receivers -= 1;
+        if q.receivers == 0 {
+            drop(q);
+            self.inner.not_full.notify_all();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn fifo_order_single_thread() {
+        let (tx, rx) = bounded(10);
+        for i in 0..5 {
+            tx.send(i).unwrap();
+        }
+        drop(tx);
+        let got: Vec<i32> = rx.iter().collect();
+        assert_eq!(got, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn recv_after_close_drains_then_errors() {
+        let (tx, rx) = bounded(4);
+        tx.send(1).unwrap();
+        drop(tx);
+        assert_eq!(rx.recv(), Ok(1));
+        assert_eq!(rx.recv(), Err(RecvError::Closed));
+    }
+
+    #[test]
+    fn send_fails_when_receivers_gone() {
+        let (tx, rx) = bounded::<u32>(1);
+        drop(rx);
+        assert!(tx.send(5).is_err());
+    }
+
+    #[test]
+    fn backpressure_blocks_until_consumed() {
+        let (tx, rx) = bounded(1);
+        tx.send(0u32).unwrap();
+        let t = std::thread::spawn(move || {
+            tx.send(1).unwrap(); // blocks until main recv()s
+            tx.send(2).unwrap();
+        });
+        std::thread::sleep(Duration::from_millis(20));
+        assert_eq!(rx.recv(), Ok(0));
+        assert_eq!(rx.recv(), Ok(1));
+        assert_eq!(rx.recv(), Ok(2));
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn try_send_full_returns_value() {
+        let (tx, _rx) = bounded(1);
+        tx.try_send(1).unwrap();
+        let e = tx.try_send(2).unwrap_err();
+        assert_eq!(e.0, 2);
+    }
+
+    #[test]
+    fn mpmc_all_items_delivered_exactly_once() {
+        let (tx, rx) = bounded(8);
+        let producers: Vec<_> = (0..3)
+            .map(|p| {
+                let tx = tx.clone();
+                std::thread::spawn(move || {
+                    for i in 0..100 {
+                        tx.send(p * 1000 + i).unwrap();
+                    }
+                })
+            })
+            .collect();
+        drop(tx);
+        let consumers: Vec<_> = (0..2)
+            .map(|_| {
+                let rx = rx.clone();
+                std::thread::spawn(move || rx.iter().collect::<Vec<i32>>())
+            })
+            .collect();
+        drop(rx);
+        for p in producers {
+            p.join().unwrap();
+        }
+        let mut all: Vec<i32> = consumers.into_iter().flat_map(|c| c.join().unwrap()).collect();
+        all.sort_unstable();
+        let mut want: Vec<i32> =
+            (0..3).flat_map(|p| (0..100).map(move |i| p * 1000 + i)).collect();
+        want.sort_unstable();
+        assert_eq!(all, want);
+    }
+
+    #[test]
+    fn depth_reports_queue_len() {
+        let (tx, rx) = bounded(4);
+        tx.send(1).unwrap();
+        tx.send(2).unwrap();
+        assert_eq!(tx.depth(), 2);
+        rx.recv().unwrap();
+        assert_eq!(tx.depth(), 1);
+    }
+}

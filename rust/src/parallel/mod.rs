@@ -1,0 +1,131 @@
+//! Threading primitives built on `std` (rayon/tokio unavailable offline).
+//!
+//! * [`ThreadPool`] — fixed-size worker pool with a shared FIFO queue.
+//! * [`parallel_for_chunks`] — scoped data-parallel map over index chunks.
+//! * [`bounded`] — MPMC bounded channel with blocking send (the
+//!   backpressure primitive the pipeline coordinator is built on).
+//!
+//! The sandbox exposes a single hardware thread, so these primitives are
+//! exercised for *correctness* (ordering, backpressure, shutdown) and the
+//! scaling benches report what the abstractions would deliver with more
+//! cores; see DESIGN.md §2.
+
+pub mod pool;
+pub mod channel;
+
+pub use channel::{bounded, Receiver, RecvError, SendError, Sender};
+pub use pool::ThreadPool;
+
+/// Number of worker threads to use by default: `REPRO_THREADS` env var or
+/// `std::thread::available_parallelism()`.
+pub fn default_threads() -> usize {
+    if let Ok(v) = std::env::var("REPRO_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Scoped parallel-for over `0..n` in `chunks` contiguous ranges. `f`
+/// receives `(start, end)` of its range. Falls back to a serial loop when
+/// `chunks <= 1` or `n` is small.
+pub fn parallel_for_chunks(n: usize, chunks: usize, f: impl Fn(usize, usize) + Sync) {
+    let chunks = chunks.clamp(1, n.max(1));
+    if chunks == 1 || n < 2 {
+        f(0, n);
+        return;
+    }
+    let per = n.div_ceil(chunks);
+    std::thread::scope(|scope| {
+        for c in 0..chunks {
+            let start = c * per;
+            let end = ((c + 1) * per).min(n);
+            if start >= end {
+                break;
+            }
+            let f = &f;
+            scope.spawn(move || f(start, end));
+        }
+    });
+}
+
+/// Parallel map: applies `f` to every index in `0..n` writing into a
+/// preallocated output vector, splitting work across `threads`.
+pub fn parallel_map<T: Send + Sync + Default + Clone>(
+    n: usize,
+    threads: usize,
+    f: impl Fn(usize) -> T + Sync,
+) -> Vec<T> {
+    let mut out = vec![T::default(); n];
+    {
+        let slots: Vec<(usize, &mut T)> = out.iter_mut().enumerate().collect();
+        let chunked: Vec<Vec<(usize, &mut T)>> = split_owned(slots, threads);
+        std::thread::scope(|scope| {
+            for chunk in chunked {
+                let f = &f;
+                scope.spawn(move || {
+                    for (i, slot) in chunk {
+                        *slot = f(i);
+                    }
+                });
+            }
+        });
+    }
+    out
+}
+
+fn split_owned<T>(mut v: Vec<T>, parts: usize) -> Vec<Vec<T>> {
+    let parts = parts.clamp(1, v.len().max(1));
+    let per = v.len().div_ceil(parts);
+    let mut out = Vec::with_capacity(parts);
+    while !v.is_empty() {
+        let rest = v.split_off(per.min(v.len()));
+        out.push(v);
+        v = rest;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn parallel_for_covers_every_index_once() {
+        let hits: Vec<AtomicUsize> = (0..1000).map(|_| AtomicUsize::new(0)).collect();
+        parallel_for_chunks(1000, 4, |s, e| {
+            for i in s..e {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn parallel_for_serial_fallback() {
+        let count = AtomicUsize::new(0);
+        parallel_for_chunks(5, 1, |s, e| {
+            count.fetch_add(e - s, Ordering::Relaxed);
+        });
+        assert_eq!(count.load(Ordering::Relaxed), 5);
+    }
+
+    #[test]
+    fn parallel_for_zero_items() {
+        parallel_for_chunks(0, 4, |s, e| assert_eq!(s, e));
+    }
+
+    #[test]
+    fn parallel_map_matches_serial() {
+        let got = parallel_map(100, 3, |i| i * i);
+        let want: Vec<usize> = (0..100).map(|i| i * i).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn default_threads_at_least_one() {
+        assert!(default_threads() >= 1);
+    }
+}

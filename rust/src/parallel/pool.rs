@@ -1,0 +1,175 @@
+//! Fixed-size worker thread pool with a shared FIFO job queue.
+//!
+//! Used by the multi-instance scaler and the optimized dataframe engine for
+//! coarse-grained task parallelism. Jobs are `FnOnce() + Send` closures;
+//! `join()` blocks until the queue drains and all in-flight jobs finish.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct Shared {
+    queue: Mutex<State>,
+    /// Signals workers that a job arrived or shutdown began.
+    work_cv: Condvar,
+    /// Signals `join()` that the pool may have gone idle.
+    idle_cv: Condvar,
+}
+
+struct State {
+    jobs: VecDeque<Job>,
+    in_flight: usize,
+    shutdown: bool,
+}
+
+/// A fixed-size thread pool.
+pub struct ThreadPool {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl ThreadPool {
+    /// Spawn a pool with `n` workers (clamped to at least 1).
+    pub fn new(n: usize) -> Self {
+        let n = n.max(1);
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(State { jobs: VecDeque::new(), in_flight: 0, shutdown: false }),
+            work_cv: Condvar::new(),
+            idle_cv: Condvar::new(),
+        });
+        let workers = (0..n)
+            .map(|i| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("repro-pool-{i}"))
+                    .spawn(move || worker_loop(shared))
+                    .expect("spawn worker")
+            })
+            .collect();
+        ThreadPool { shared, workers }
+    }
+
+    /// Number of workers.
+    pub fn size(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Enqueue a job. Panics if the pool is shut down (programming error).
+    pub fn execute(&self, job: impl FnOnce() + Send + 'static) {
+        let mut st = self.shared.queue.lock().unwrap();
+        assert!(!st.shutdown, "execute() after shutdown");
+        st.jobs.push_back(Box::new(job));
+        drop(st);
+        self.shared.work_cv.notify_one();
+    }
+
+    /// Block until every queued job has completed.
+    pub fn join(&self) {
+        let mut st = self.shared.queue.lock().unwrap();
+        while !st.jobs.is_empty() || st.in_flight > 0 {
+            st = self.shared.idle_cv.wait(st).unwrap();
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.queue.lock().unwrap();
+            st.shutdown = true;
+        }
+        self.shared.work_cv.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(shared: Arc<Shared>) {
+    loop {
+        let job = {
+            let mut st = shared.queue.lock().unwrap();
+            loop {
+                if let Some(j) = st.jobs.pop_front() {
+                    st.in_flight += 1;
+                    break j;
+                }
+                if st.shutdown {
+                    return;
+                }
+                st = shared.work_cv.wait(st).unwrap();
+            }
+        };
+        job();
+        let mut st = shared.queue.lock().unwrap();
+        st.in_flight -= 1;
+        if st.jobs.is_empty() && st.in_flight == 0 {
+            shared.idle_cv.notify_all();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn executes_all_jobs() {
+        let pool = ThreadPool::new(3);
+        let count = Arc::new(AtomicUsize::new(0));
+        for _ in 0..50 {
+            let c = Arc::clone(&count);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        pool.join();
+        assert_eq!(count.load(Ordering::Relaxed), 50);
+    }
+
+    #[test]
+    fn join_on_empty_pool_returns() {
+        let pool = ThreadPool::new(2);
+        pool.join();
+    }
+
+    #[test]
+    fn drop_completes_queued_work_or_exits_cleanly() {
+        let count = Arc::new(AtomicUsize::new(0));
+        {
+            let pool = ThreadPool::new(1);
+            for _ in 0..10 {
+                let c = Arc::clone(&count);
+                pool.execute(move || {
+                    c.fetch_add(1, Ordering::Relaxed);
+                });
+            }
+            pool.join();
+        } // drop
+        assert_eq!(count.load(Ordering::Relaxed), 10);
+    }
+
+    #[test]
+    fn size_clamped() {
+        assert_eq!(ThreadPool::new(0).size(), 1);
+    }
+
+    #[test]
+    fn reusable_after_join() {
+        let pool = ThreadPool::new(2);
+        let count = Arc::new(AtomicUsize::new(0));
+        for round in 0..3 {
+            for _ in 0..10 {
+                let c = Arc::clone(&count);
+                pool.execute(move || {
+                    c.fetch_add(1, Ordering::Relaxed);
+                });
+            }
+            pool.join();
+            assert_eq!(count.load(Ordering::Relaxed), (round + 1) * 10);
+        }
+    }
+}

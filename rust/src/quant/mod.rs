@@ -1,0 +1,111 @@
+//! INT8 quantization utilities (Rust side of the INC axis).
+//!
+//! Weight quantization happens at AOT time in Python; this module holds
+//! the runtime-side pieces: calibration over activation samples, the
+//! quantize/dequantize reference used by tests, and the accuracy-drop
+//! accounting the INT8 benches report (the paper's "with little to no
+//! loss in accuracy" claim is a *measured* deliverable here).
+
+use crate::util::Rng;
+
+/// Per-tensor symmetric quantization parameters.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct QuantParams {
+    /// Dequantization scale: `x ≈ q * scale`.
+    pub scale: f32,
+}
+
+impl QuantParams {
+    /// Calibrate from samples: the `percentile` of |x| maps to 127.
+    /// `percentile` in [0, 100].
+    pub fn calibrate(samples: &[f32], percentile: f32) -> QuantParams {
+        if samples.is_empty() {
+            return QuantParams { scale: 1.0 / 127.0 };
+        }
+        let mut mags: Vec<f32> = samples.iter().map(|v| v.abs()).collect();
+        mags.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let idx = ((mags.len() - 1) as f32 * (percentile / 100.0).clamp(0.0, 1.0)) as usize;
+        let hi = mags[idx].max(1e-8);
+        QuantParams { scale: hi / 127.0 }
+    }
+
+    /// Quantize one value (round-to-nearest, saturating).
+    #[inline(always)]
+    pub fn quantize(&self, x: f32) -> i8 {
+        (x / self.scale).round().clamp(-127.0, 127.0) as i8
+    }
+
+    /// Dequantize.
+    #[inline(always)]
+    pub fn dequantize(&self, q: i8) -> f32 {
+        q as f32 * self.scale
+    }
+
+    /// Quantize a slice.
+    pub fn quantize_all(&self, xs: &[f32]) -> Vec<i8> {
+        xs.iter().map(|&x| self.quantize(x)).collect()
+    }
+
+    /// Round-trip error for a slice (mean absolute).
+    pub fn round_trip_mae(&self, xs: &[f32]) -> f32 {
+        if xs.is_empty() {
+            return 0.0;
+        }
+        xs.iter()
+            .map(|&x| (self.dequantize(self.quantize(x)) - x).abs())
+            .sum::<f32>()
+            / xs.len() as f32
+    }
+}
+
+/// Build a calibration batch of activations with the distribution the
+/// synthetic pipelines feed the models (standard normal).
+pub fn calibration_batch(n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| rng.normal() as f32).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trip_error_bounded_by_half_scale() {
+        let data = calibration_batch(1000, 1);
+        let qp = QuantParams::calibrate(&data, 100.0);
+        for &x in &data {
+            let err = (qp.dequantize(qp.quantize(x)) - x).abs();
+            assert!(err <= qp.scale / 2.0 + 1e-6, "{x}: err {err}");
+        }
+    }
+
+    #[test]
+    fn percentile_clipping_saturates_tail() {
+        let mut data = calibration_batch(1000, 2);
+        data.push(1000.0); // one huge outlier
+        let qp = QuantParams::calibrate(&data, 99.0);
+        assert_eq!(qp.quantize(1000.0), 127); // clipped, not scale-blown
+        assert!(qp.scale < 1.0, "outlier should not dominate: {}", qp.scale);
+    }
+
+    #[test]
+    fn symmetric() {
+        let qp = QuantParams { scale: 0.1 };
+        assert_eq!(qp.quantize(0.35), -qp.quantize(-0.35));
+        assert_eq!(qp.quantize(0.0), 0);
+    }
+
+    #[test]
+    fn empty_calibration_defaults() {
+        let qp = QuantParams::calibrate(&[], 99.9);
+        assert!(qp.scale > 0.0);
+    }
+
+    #[test]
+    fn mae_decreases_with_finer_scale() {
+        let data = calibration_batch(500, 3);
+        let coarse = QuantParams { scale: 0.5 };
+        let fine = QuantParams { scale: 0.01 };
+        assert!(fine.round_trip_mae(&data) < coarse.round_trip_mae(&data));
+    }
+}

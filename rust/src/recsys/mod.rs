@@ -1,0 +1,14 @@
+//! Recommendation preprocessing substrate — the DIEN pipeline's front end.
+//!
+//! The paper (§2.5): "json input is parsed into dataframes, and feature
+//! engineering tasks are further optimized to reduce serial code and
+//! intermediate data" — then history sequences and negative samples are
+//! built for the model. This module provides the synthetic Amazon-Books
+//! stand-in (a JSON review log with Zipf-distributed item popularity) and
+//! the feature-engineering steps in baseline/optimized variants.
+
+pub mod log;
+pub mod features;
+
+pub use features::{build_examples, DienExample};
+pub use log::{generate_log, parse_log, parse_log_via_dataframe, ReviewEvent};

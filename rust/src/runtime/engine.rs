@@ -1,0 +1,275 @@
+//! The PJRT execution engine: compile-on-first-use cache over the AOT
+//! artifacts, typed execution, and unfused stage-chain execution.
+
+use super::manifest::{Manifest, ModelSpec};
+use super::tensor::Tensor;
+use std::collections::HashMap;
+use std::path::Path;
+use std::rc::Rc;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Engine errors.
+#[derive(Debug, thiserror::Error)]
+pub enum EngineError {
+    #[error("unknown model: {0}")]
+    UnknownModel(String),
+    #[error("{model}: input {index}: expected {expected}, got {got}")]
+    BadInput { model: String, index: usize, expected: String, got: String },
+    #[error("xla error: {0}")]
+    Xla(String),
+    #[error("manifest error: {0}")]
+    Manifest(#[from] super::manifest::ManifestError),
+}
+
+impl From<xla::Error> for EngineError {
+    fn from(e: xla::Error) -> Self {
+        EngineError::Xla(e.to_string())
+    }
+}
+
+struct Compiled {
+    exe: xla::PjRtLoadedExecutable,
+    spec: ModelSpec,
+}
+
+/// Cumulative execution statistics (telemetry surface).
+#[derive(Debug, Clone, Default)]
+pub struct EngineStats {
+    pub executions: usize,
+    pub compile_time: Duration,
+    pub exec_time: Duration,
+}
+
+/// The model engine.
+///
+/// **Thread-confined**: the `xla` crate's `PjRtClient` is `Rc`-based, so
+/// an `Engine` cannot cross threads. Cross-thread access goes through
+/// [`crate::runtime::server::ModelServer`], which owns one engine on a
+/// dedicated thread — that is also the deployment shape the paper's
+/// multi-instance serving uses (inference endpoints behind a queue).
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: Mutex<HashMap<String, Rc<Compiled>>>,
+    stats: Mutex<EngineStats>,
+}
+
+thread_local! {
+    static LOCAL: std::cell::RefCell<Option<Rc<Engine>>> = const { std::cell::RefCell::new(None) };
+}
+
+impl Engine {
+    /// Create an engine over an artifacts directory.
+    pub fn new(artifacts_dir: &Path) -> Result<Engine, EngineError> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Engine {
+            client,
+            manifest,
+            cache: Mutex::new(HashMap::new()),
+            stats: Mutex::new(EngineStats::default()),
+        })
+    }
+
+    /// Thread-local shared engine over [`super::default_artifacts_dir`].
+    /// PJRT client creation is expensive; everything on this thread
+    /// (pipelines, benches, examples) shares the instance.
+    pub fn local() -> Result<Rc<Engine>, EngineError> {
+        LOCAL.with(|slot| {
+            let mut slot = slot.borrow_mut();
+            if let Some(e) = slot.as_ref() {
+                return Ok(Rc::clone(e));
+            }
+            let engine = Rc::new(Engine::new(&super::default_artifacts_dir())?);
+            *slot = Some(Rc::clone(&engine));
+            Ok(Rc::clone(slot.as_ref().unwrap()))
+        })
+    }
+
+    /// The manifest in use.
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Compile (or fetch from cache) a model.
+    fn compiled(&self, name: &str) -> Result<Rc<Compiled>, EngineError> {
+        if let Some(c) = self.cache.lock().unwrap().get(name) {
+            return Ok(Rc::clone(c));
+        }
+        let spec = self
+            .manifest
+            .model(name)
+            .ok_or_else(|| EngineError::UnknownModel(name.to_string()))?
+            .clone();
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            self.manifest.hlo_path(&spec).to_str().expect("utf-8 path"),
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        self.stats.lock().unwrap().compile_time += t0.elapsed();
+        let compiled = Rc::new(Compiled { exe, spec });
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), Rc::clone(&compiled));
+        Ok(compiled)
+    }
+
+    /// Eagerly compile a set of models (warm-up before serving).
+    pub fn warmup(&self, names: &[&str]) -> Result<(), EngineError> {
+        for n in names {
+            self.compiled(n)?;
+        }
+        Ok(())
+    }
+
+    /// Execute a model on typed inputs; returns its (tuple) outputs.
+    pub fn run(&self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>, EngineError> {
+        let compiled = self.compiled(name)?;
+        self.validate(&compiled.spec, inputs)?;
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<_, _>>()?;
+        let t0 = Instant::now();
+        let result = compiled.exe.execute::<xla::Literal>(&literals)?;
+        let out_lit = result[0][0].to_literal_sync()?;
+        // Models are lowered with return_tuple=True.
+        let parts = out_lit.to_tuple()?;
+        let outputs: Vec<Tensor> = parts
+            .iter()
+            .map(Tensor::from_literal)
+            .collect::<Result<_, _>>()?;
+        let mut stats = self.stats.lock().unwrap();
+        stats.executions += 1;
+        stats.exec_time += t0.elapsed();
+        Ok(outputs)
+    }
+
+    /// Execute an unfused stage chain (host round-trip between stages —
+    /// the graph-break model). The input feeds stage 0; each stage's first
+    /// output feeds the next stage.
+    pub fn run_chain(&self, chain: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>, EngineError> {
+        let stages = self
+            .manifest
+            .stage_chains
+            .get(chain)
+            .ok_or_else(|| EngineError::UnknownModel(chain.to_string()))?
+            .clone();
+        let mut cur: Vec<Tensor> = inputs.to_vec();
+        for stage in &stages {
+            cur = self.run(stage, &cur)?;
+        }
+        Ok(cur)
+    }
+
+    /// Names of runnable models (manifest order).
+    pub fn model_names(&self) -> Vec<String> {
+        self.manifest.names().map(|s| s.to_string()).collect()
+    }
+
+    /// Snapshot of execution statistics.
+    pub fn stats(&self) -> EngineStats {
+        self.stats.lock().unwrap().clone()
+    }
+
+    fn validate(&self, spec: &ModelSpec, inputs: &[Tensor]) -> Result<(), EngineError> {
+        if inputs.len() != spec.inputs.len() {
+            return Err(EngineError::BadInput {
+                model: spec.name.clone(),
+                index: inputs.len(),
+                expected: format!("{} inputs", spec.inputs.len()),
+                got: format!("{} inputs", inputs.len()),
+            });
+        }
+        for (i, (t, s)) in inputs.iter().zip(&spec.inputs).enumerate() {
+            if t.shape() != s.shape.as_slice() || t.dtype() != s.dtype {
+                return Err(EngineError::BadInput {
+                    model: spec.name.clone(),
+                    index: i,
+                    expected: format!("{:?} {}", s.shape, s.dtype),
+                    got: format!("{:?} {}", t.shape(), t.dtype()),
+                });
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    //! Engine tests run only when `make artifacts` has produced the
+    //! manifest (they are integration-grade but cheap: tiny models).
+    use super::*;
+
+    fn engine() -> Option<Rc<Engine>> {
+        if !crate::runtime::default_artifacts_dir().join("manifest.json").exists() {
+            return None;
+        }
+        Some(Engine::local().expect("engine"))
+    }
+
+    #[test]
+    fn runs_ssd_and_shapes_match_manifest() {
+        let Some(eng) = engine() else { return };
+        let spec = eng.manifest().model("ssd_fused_b1").unwrap().clone();
+        let input = Tensor::f32(
+            &spec.inputs[0].shape,
+            vec![0.5; spec.inputs[0].numel()],
+        );
+        let out = eng.run("ssd_fused_b1", &[input]).unwrap();
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].shape(), spec.outputs[0].shape.as_slice());
+        assert_eq!(out[1].shape(), spec.outputs[1].shape.as_slice());
+        assert!(out[0].as_f32().unwrap().iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn unknown_model_errors() {
+        let Some(eng) = engine() else { return };
+        assert!(matches!(
+            eng.run("nope", &[]),
+            Err(EngineError::UnknownModel(_))
+        ));
+    }
+
+    #[test]
+    fn bad_shape_rejected_before_execution() {
+        let Some(eng) = engine() else { return };
+        let bad = Tensor::f32(&[1, 2, 2, 3], vec![0.0; 12]);
+        assert!(matches!(
+            eng.run("ssd_fused_b1", &[bad]),
+            Err(EngineError::BadInput { .. })
+        ));
+    }
+
+    #[test]
+    fn chain_matches_fused_bert() {
+        let Some(eng) = engine() else { return };
+        // Same token ids through the fused graph and the unfused chain
+        // must produce (nearly) identical logits.
+        let spec = eng.manifest().model("bert_fused_b8").unwrap().clone();
+        let ids: Vec<i32> = (0..spec.inputs[0].numel()).map(|i| (i % 512) as i32).collect();
+        let input = Tensor::i32(&spec.inputs[0].shape, ids);
+        let fused = eng.run("bert_fused_b8", &[input.clone()]).unwrap();
+        let chained = eng.run_chain("bert_unfused_b8", &[input]).unwrap();
+        let a = fused[0].as_f32().unwrap();
+        let b = chained[0].as_f32().unwrap();
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(b) {
+            assert!((x - y).abs() < 2e-3, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn stats_accumulate() {
+        let Some(eng) = engine() else { return };
+        let before = eng.stats().executions;
+        let spec = eng.manifest().model("ssd_fused_b1").unwrap().clone();
+        let input = Tensor::f32(&spec.inputs[0].shape, vec![0.1; spec.inputs[0].numel()]);
+        eng.run("ssd_fused_b1", &[input]).unwrap();
+        assert_eq!(eng.stats().executions, before + 1);
+    }
+}

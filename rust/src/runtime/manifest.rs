@@ -1,0 +1,205 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! Rust runtime (shapes, dtypes, files, unfused stage chains).
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Shape + dtype of one model input/output.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    /// `"float32"`, `"int32"`, `"int8"`.
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    /// Total element count.
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One AOT-compiled model.
+#[derive(Debug, Clone)]
+pub struct ModelSpec {
+    pub name: String,
+    /// File name within the artifacts directory.
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    pub models: BTreeMap<String, ModelSpec>,
+    /// Unfused execution chains: logical name → ordered artifact names.
+    pub stage_chains: BTreeMap<String, Vec<String>>,
+    dir: PathBuf,
+}
+
+/// Manifest load/parse errors.
+#[derive(Debug, thiserror::Error)]
+pub enum ManifestError {
+    #[error("cannot read {0}: {1}")]
+    Io(PathBuf, std::io::Error),
+    #[error("manifest parse error: {0}")]
+    Parse(String),
+}
+
+impl Manifest {
+    /// Load `manifest.json` from an artifacts directory.
+    pub fn load(dir: &Path) -> Result<Manifest, ManifestError> {
+        let path = dir.join("manifest.json");
+        let text =
+            std::fs::read_to_string(&path).map_err(|e| ManifestError::Io(path.clone(), e))?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest JSON text.
+    pub fn parse(text: &str, dir: &Path) -> Result<Manifest, ManifestError> {
+        let v = Json::parse(text).map_err(|e| ManifestError::Parse(e.to_string()))?;
+        let mut models = BTreeMap::new();
+        for m in v.get("models").map(Json::items).unwrap_or(&[]) {
+            let spec = parse_model(m)?;
+            models.insert(spec.name.clone(), spec);
+        }
+        let mut stage_chains = BTreeMap::new();
+        if let Some(Json::Obj(chains)) = v.get("stage_chains") {
+            for (name, chain) in chains {
+                let stages: Vec<String> = chain
+                    .items()
+                    .iter()
+                    .filter_map(|s| s.as_str().map(|s| s.to_string()))
+                    .collect();
+                stage_chains.insert(name.clone(), stages);
+            }
+        }
+        // Validate chains resolve.
+        for (name, chain) in &stage_chains {
+            for stage in chain {
+                if !models.contains_key(stage) {
+                    return Err(ManifestError::Parse(format!(
+                        "chain {name} references unknown model {stage}"
+                    )));
+                }
+            }
+        }
+        Ok(Manifest { models, stage_chains, dir: dir.to_path_buf() })
+    }
+
+    /// Spec by model name.
+    pub fn model(&self, name: &str) -> Option<&ModelSpec> {
+        self.models.get(name)
+    }
+
+    /// Absolute path of a model's HLO text file.
+    pub fn hlo_path(&self, spec: &ModelSpec) -> PathBuf {
+        self.dir.join(&spec.file)
+    }
+
+    /// All model names.
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.models.keys().map(|s| s.as_str())
+    }
+}
+
+fn parse_model(m: &Json) -> Result<ModelSpec, ManifestError> {
+    let name = m
+        .get("name")
+        .and_then(Json::as_str)
+        .ok_or_else(|| ManifestError::Parse("model missing name".into()))?
+        .to_string();
+    let file = m
+        .get("file")
+        .and_then(Json::as_str)
+        .ok_or_else(|| ManifestError::Parse(format!("{name}: missing file")))?
+        .to_string();
+    let specs = |key: &str| -> Result<Vec<TensorSpec>, ManifestError> {
+        m.get(key)
+            .map(Json::items)
+            .unwrap_or(&[])
+            .iter()
+            .map(|s| {
+                let shape = s
+                    .get("shape")
+                    .map(Json::items)
+                    .unwrap_or(&[])
+                    .iter()
+                    .filter_map(Json::as_i64)
+                    .map(|d| d as usize)
+                    .collect::<Vec<_>>();
+                let dtype = s
+                    .get("dtype")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| ManifestError::Parse(format!("{name}: bad {key} spec")))?
+                    .to_string();
+                if shape.is_empty() {
+                    return Err(ManifestError::Parse(format!("{name}: empty shape in {key}")));
+                }
+                Ok(TensorSpec { shape, dtype })
+            })
+            .collect()
+    };
+    let inputs = specs("inputs")?;
+    let outputs = specs("outputs")?;
+    if inputs.is_empty() || outputs.is_empty() {
+        return Err(ManifestError::Parse(format!("{name}: missing inputs/outputs")));
+    }
+    Ok(ModelSpec { name, file, inputs, outputs })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "models": [
+        {"name": "m1", "file": "m1.hlo.txt",
+         "inputs": [{"shape": [2, 3], "dtype": "float32"}],
+         "outputs": [{"shape": [2], "dtype": "float32"}]},
+        {"name": "m2", "file": "m2.hlo.txt",
+         "inputs": [{"shape": [2], "dtype": "float32"}],
+         "outputs": [{"shape": [1], "dtype": "int32"}]}
+      ],
+      "stage_chains": {"chain": ["m1", "m2"]}
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp/a")).unwrap();
+        assert_eq!(m.models.len(), 2);
+        let m1 = m.model("m1").unwrap();
+        assert_eq!(m1.inputs[0].shape, vec![2, 3]);
+        assert_eq!(m1.inputs[0].numel(), 6);
+        assert_eq!(m.hlo_path(m1), PathBuf::from("/tmp/a/m1.hlo.txt"));
+        assert_eq!(m.stage_chains["chain"], vec!["m1", "m2"]);
+    }
+
+    #[test]
+    fn rejects_dangling_chain() {
+        let bad = SAMPLE.replace("\"m2\"]", "\"missing\"]");
+        assert!(Manifest::parse(&bad, Path::new("/tmp")).is_err());
+    }
+
+    #[test]
+    fn rejects_model_without_io() {
+        let bad = r#"{"models": [{"name": "x", "file": "x.hlo.txt", "inputs": [], "outputs": []}]}"#;
+        assert!(Manifest::parse(bad, Path::new("/tmp")).is_err());
+    }
+
+    #[test]
+    fn real_manifest_loads_if_built() {
+        let dir = crate::runtime::default_artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            return; // artifacts not built in this environment
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.models.len() >= 20, "{}", m.models.len());
+        assert!(m.model("bert_fused_b8").is_some());
+        for chain in m.stage_chains.values() {
+            assert!(!chain.is_empty());
+        }
+    }
+}

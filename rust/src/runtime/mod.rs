@@ -1,0 +1,24 @@
+//! Model runtime: loads AOT HLO-text artifacts and executes them on the
+//! PJRT CPU client — the bridge that keeps Python off the request path.
+//!
+//! `make artifacts` (Python, build time) lowers every L2 model to
+//! `artifacts/<name>.hlo.txt` plus `manifest.json`; this module parses the
+//! manifest ([`manifest`]), compiles artifacts on first use with a cache
+//! ([`engine`]), and exposes typed tensor I/O ([`tensor`]).
+
+pub mod manifest;
+pub mod tensor;
+pub mod engine;
+pub mod server;
+
+pub use engine::{Engine, EngineError};
+pub use manifest::{Manifest, ModelSpec, TensorSpec};
+pub use server::{ModelClient, ModelServer};
+pub use tensor::Tensor;
+
+/// Default artifacts directory: `$REPRO_ARTIFACTS` or `./artifacts`.
+pub fn default_artifacts_dir() -> std::path::PathBuf {
+    std::env::var("REPRO_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| std::path::PathBuf::from("artifacts"))
+}

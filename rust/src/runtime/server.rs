@@ -1,0 +1,216 @@
+//! Model server: cross-thread access to the thread-confined [`Engine`].
+//!
+//! One dedicated thread owns a PJRT engine and serves execution requests
+//! from a bounded queue; any number of pipeline threads hold cloneable
+//! [`ModelClient`] handles. This is the inference-endpoint shape of the
+//! paper's serving pipelines (DLSA "inference instances", anomaly camera
+//! streams) and the unit the multi-instance scaler replicates.
+
+use super::engine::{Engine, EngineError};
+use super::tensor::Tensor;
+use crate::parallel::channel::{bounded, Sender};
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+
+enum Request {
+    Run {
+        model: String,
+        inputs: Vec<Tensor>,
+        reply: mpsc::SyncSender<Result<Vec<Tensor>, String>>,
+    },
+    RunChain {
+        chain: String,
+        inputs: Vec<Tensor>,
+        reply: mpsc::SyncSender<Result<Vec<Tensor>, String>>,
+    },
+    Warmup {
+        models: Vec<String>,
+        reply: mpsc::SyncSender<Result<(), String>>,
+    },
+}
+
+/// Handle to a running model server; cloneable and `Send`.
+#[derive(Clone)]
+pub struct ModelClient {
+    tx: Sender<Request>,
+}
+
+/// A model server: a thread owning one [`Engine`].
+pub struct ModelServer {
+    client: ModelClient,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl ModelServer {
+    /// Process-wide shared server over [`crate::runtime::default_artifacts_dir`]
+    /// — PJRT client creation and artifact compilation are expensive, so
+    /// repeated pipeline runs (benches, tests) share one server thread and
+    /// its compile cache. §Perf: dropped per-run client setup (~150 ms +
+    /// recompiles) from the video/face bench loops.
+    pub fn shared() -> Result<ModelClient, EngineError> {
+        use std::sync::OnceLock;
+        static SHARED: OnceLock<Result<ModelClient, String>> = OnceLock::new();
+        SHARED
+            .get_or_init(|| {
+                ModelServer::spawn(crate::runtime::default_artifacts_dir(), 64)
+                    .map(|s| {
+                        let client = s.client();
+                        // Detach: the shared server lives for the process.
+                        std::mem::forget(s);
+                        client
+                    })
+                    .map_err(|e| e.to_string())
+            })
+            .clone()
+            .map_err(EngineError::Xla)
+    }
+
+    /// Spawn a server over `artifacts_dir` with a request queue of
+    /// `queue_cap` (backpressure bound).
+    pub fn spawn(artifacts_dir: PathBuf, queue_cap: usize) -> Result<ModelServer, EngineError> {
+        let (tx, rx) = bounded::<Request>(queue_cap.max(1));
+        // Engine construction happens on the server thread (PJRT client is
+        // thread-confined); errors are reported back through a channel.
+        let (init_tx, init_rx) = mpsc::sync_channel(1);
+        let handle = std::thread::Builder::new()
+            .name("repro-model-server".to_string())
+            .spawn(move || {
+                let engine = match Engine::new(&artifacts_dir) {
+                    Ok(e) => {
+                        let _ = init_tx.send(Ok(()));
+                        e
+                    }
+                    Err(e) => {
+                        let _ = init_tx.send(Err(e));
+                        return;
+                    }
+                };
+                while let Ok(req) = rx.recv() {
+                    match req {
+                        Request::Run { model, inputs, reply } => {
+                            let out =
+                                engine.run(&model, &inputs).map_err(|e| e.to_string());
+                            let _ = reply.send(out);
+                        }
+                        Request::RunChain { chain, inputs, reply } => {
+                            let out =
+                                engine.run_chain(&chain, &inputs).map_err(|e| e.to_string());
+                            let _ = reply.send(out);
+                        }
+                        Request::Warmup { models, reply } => {
+                            let names: Vec<&str> =
+                                models.iter().map(|s| s.as_str()).collect();
+                            let _ = reply.send(engine.warmup(&names).map_err(|e| e.to_string()));
+                        }
+                    }
+                }
+            })
+            .expect("spawn model server");
+        init_rx.recv().map_err(|_| {
+            EngineError::Xla("model server thread died during init".to_string())
+        })??;
+        Ok(ModelServer { client: ModelClient { tx }, handle: Some(handle) })
+    }
+
+    /// A client handle (cloneable, Send).
+    pub fn client(&self) -> ModelClient {
+        self.client.clone()
+    }
+}
+
+impl Drop for ModelServer {
+    fn drop(&mut self) {
+        // Drop our sender; the server thread exits once every cloned
+        // client is gone too. Don't join: outstanding clients may keep the
+        // thread alive past this drop by design (detached service thread).
+        let (tx, _rx_dropped) = bounded::<Request>(1);
+        self.client = ModelClient { tx };
+        drop(self.handle.take());
+    }
+}
+
+impl ModelClient {
+    /// Execute a model (blocking round trip through the server queue).
+    pub fn run(&self, model: &str, inputs: Vec<Tensor>) -> Result<Vec<Tensor>, EngineError> {
+        let (reply, rx) = mpsc::sync_channel(1);
+        self.tx
+            .send(Request::Run { model: model.to_string(), inputs, reply })
+            .map_err(|_| EngineError::Xla("model server gone".into()))?;
+        rx.recv()
+            .map_err(|_| EngineError::Xla("model server dropped request".into()))?
+            .map_err(EngineError::Xla)
+    }
+
+    /// Execute an unfused stage chain.
+    pub fn run_chain(&self, chain: &str, inputs: Vec<Tensor>) -> Result<Vec<Tensor>, EngineError> {
+        let (reply, rx) = mpsc::sync_channel(1);
+        self.tx
+            .send(Request::RunChain { chain: chain.to_string(), inputs, reply })
+            .map_err(|_| EngineError::Xla("model server gone".into()))?;
+        rx.recv()
+            .map_err(|_| EngineError::Xla("model server dropped request".into()))?
+            .map_err(EngineError::Xla)
+    }
+
+    /// Pre-compile models before serving.
+    pub fn warmup(&self, models: &[&str]) -> Result<(), EngineError> {
+        let (reply, rx) = mpsc::sync_channel(1);
+        self.tx
+            .send(Request::Warmup {
+                models: models.iter().map(|s| s.to_string()).collect(),
+                reply,
+            })
+            .map_err(|_| EngineError::Xla("model server gone".into()))?;
+        rx.recv()
+            .map_err(|_| EngineError::Xla("model server dropped request".into()))?
+            .map_err(EngineError::Xla)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn server() -> Option<ModelServer> {
+        let dir = crate::runtime::default_artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            return None;
+        }
+        Some(ModelServer::spawn(dir, 8).expect("server"))
+    }
+
+    #[test]
+    fn serves_requests_from_multiple_threads() {
+        let Some(srv) = server() else { return };
+        srv.client().warmup(&["ssd_fused_b1"]).unwrap();
+        let clients: Vec<ModelClient> = (0..3).map(|_| srv.client()).collect();
+        let handles: Vec<_> = clients
+            .into_iter()
+            .enumerate()
+            .map(|(i, c)| {
+                std::thread::spawn(move || {
+                    let input = Tensor::f32(&[1, 32, 32, 3], vec![0.1 * i as f32; 32 * 32 * 3]);
+                    c.run("ssd_fused_b1", vec![input]).unwrap()
+                })
+            })
+            .collect();
+        for h in handles {
+            let out = h.join().unwrap();
+            assert_eq!(out.len(), 2);
+        }
+    }
+
+    #[test]
+    fn error_propagates_to_client() {
+        let Some(srv) = server() else { return };
+        let err = srv.client().run("missing_model", vec![]).unwrap_err();
+        assert!(err.to_string().contains("missing_model"), "{err}");
+    }
+
+    #[test]
+    fn bad_artifacts_dir_fails_spawn() {
+        let r = ModelServer::spawn(PathBuf::from("/nonexistent/dir"), 2);
+        assert!(r.is_err());
+    }
+}

@@ -1,0 +1,119 @@
+//! Typed host tensors crossing the Rust ⇄ PJRT boundary.
+
+/// A host tensor: shape + typed data. Only the dtypes the L2 models
+/// exchange at their boundaries (int8 weights are baked into the HLO).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Tensor {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl Tensor {
+    /// f32 tensor; panics on shape/data mismatch (programming error).
+    pub fn f32(shape: &[usize], data: Vec<f32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "tensor shape mismatch");
+        Tensor::F32 { shape: shape.to_vec(), data }
+    }
+
+    /// i32 tensor.
+    pub fn i32(shape: &[usize], data: Vec<i32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "tensor shape mismatch");
+        Tensor::I32 { shape: shape.to_vec(), data }
+    }
+
+    /// Shape accessor.
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Tensor::F32 { shape, .. } | Tensor::I32 { shape, .. } => shape,
+        }
+    }
+
+    /// Element count.
+    pub fn len(&self) -> usize {
+        self.shape().iter().product()
+    }
+
+    /// True if zero elements.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// dtype name matching the manifest encoding.
+    pub fn dtype(&self) -> &'static str {
+        match self {
+            Tensor::F32 { .. } => "float32",
+            Tensor::I32 { .. } => "int32",
+        }
+    }
+
+    /// f32 data view (None for other dtypes).
+    pub fn as_f32(&self) -> Option<&[f32]> {
+        match self {
+            Tensor::F32 { data, .. } => Some(data),
+            _ => None,
+        }
+    }
+
+    /// i32 data view.
+    pub fn as_i32(&self) -> Option<&[i32]> {
+        match self {
+            Tensor::I32 { data, .. } => Some(data),
+            _ => None,
+        }
+    }
+
+    /// Convert to an XLA literal.
+    pub fn to_literal(&self) -> Result<xla::Literal, xla::Error> {
+        let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
+        match self {
+            Tensor::F32 { data, .. } => xla::Literal::vec1(data).reshape(&dims),
+            Tensor::I32 { data, .. } => xla::Literal::vec1(data).reshape(&dims),
+        }
+    }
+
+    /// Build from an XLA literal (f32/s32 only).
+    pub fn from_literal(lit: &xla::Literal) -> Result<Tensor, xla::Error> {
+        let shape: Vec<usize> = lit.array_shape()?.dims().iter().map(|&d| d as usize).collect();
+        match lit.ty()? {
+            xla::ElementType::F32 => Ok(Tensor::F32 { shape, data: lit.to_vec::<f32>()? }),
+            xla::ElementType::S32 => Ok(Tensor::I32 { shape, data: lit.to_vec::<i32>()? }),
+            other => Err(xla::Error::UnexpectedElementType(other as i32)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_accessors() {
+        let t = Tensor::f32(&[2, 3], vec![0.0; 6]);
+        assert_eq!(t.shape(), &[2, 3]);
+        assert_eq!(t.len(), 6);
+        assert_eq!(t.dtype(), "float32");
+        assert!(t.as_f32().is_some());
+        assert!(t.as_i32().is_none());
+    }
+
+    #[test]
+    #[should_panic(expected = "shape mismatch")]
+    fn shape_checked() {
+        Tensor::i32(&[2, 2], vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn literal_round_trip_f32() {
+        let t = Tensor::f32(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let lit = t.to_literal().unwrap();
+        let back = Tensor::from_literal(&lit).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn literal_round_trip_i32() {
+        let t = Tensor::i32(&[3], vec![7, -1, 0]);
+        let back = Tensor::from_literal(&t.to_literal().unwrap()).unwrap();
+        assert_eq!(t, back);
+    }
+}

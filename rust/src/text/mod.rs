@@ -1,0 +1,13 @@
+//! Text substrate: WordPiece-style tokenization + synthetic reviews.
+//!
+//! DLSA's preprocessing is "load data, initialize tokenizer, data
+//! encoding" (Table 1) — tokenization is most of the non-model time at
+//! small batch sizes. Two tokenizer paths mirror the optimization axis:
+//! a per-call scanning baseline and a trie-based longest-match optimized
+//! path (what HF "fast" tokenizers do in Rust).
+
+pub mod tokenizer;
+pub mod reviews;
+
+pub use reviews::ReviewGenerator;
+pub use tokenizer::{TokenizerKind, Vocab, WordPiece};

@@ -1,0 +1,121 @@
+//! Synthetic movie-review generator — the IMDb/SST-2 stand-in for DLSA.
+//!
+//! Reviews are built from sentiment-bearing word pools with a planted
+//! label, so the pipeline has real documents to tokenize and a ground
+//! truth to report accuracy against. Lengths follow a clipped exponential
+//! like real review corpora (many short, few very long).
+
+use crate::util::Rng;
+
+const POSITIVE: &[&str] = &[
+    "great", "wonderful", "superb", "delightful", "masterpiece", "moving",
+    "brilliant", "captivating", "excellent", "charming",
+];
+const NEGATIVE: &[&str] = &[
+    "terrible", "boring", "awful", "dreadful", "disaster", "bland",
+    "tedious", "clumsy", "forgettable", "painful",
+];
+const NEUTRAL: &[&str] = &[
+    "the", "movie", "film", "plot", "was", "acting", "scene", "director",
+    "story", "character", "and", "with", "watch", "screen", "ending",
+    "a", "of", "in", "it", "very",
+];
+
+/// A labeled synthetic review.
+#[derive(Debug, Clone)]
+pub struct Review {
+    pub text: String,
+    /// 1 = positive, 0 = negative.
+    pub label: i64,
+}
+
+/// Deterministic review stream.
+pub struct ReviewGenerator {
+    rng: Rng,
+    mean_len: usize,
+}
+
+impl ReviewGenerator {
+    /// New generator; `mean_len` is the average word count.
+    pub fn new(seed: u64, mean_len: usize) -> ReviewGenerator {
+        ReviewGenerator { rng: Rng::new(seed), mean_len: mean_len.max(4) }
+    }
+
+    /// Generate one review.
+    pub fn next_review(&mut self) -> Review {
+        let label = self.rng.chance(0.5) as i64;
+        let pool = if label == 1 { POSITIVE } else { NEGATIVE };
+        let len = (self.rng.exp(1.0 / self.mean_len as f64) as usize).clamp(4, 6 * self.mean_len);
+        let mut words = Vec::with_capacity(len);
+        for _ in 0..len {
+            // ~30% sentiment words, rest neutral filler.
+            if self.rng.chance(0.3) {
+                words.push(*self.rng.choice(pool));
+            } else {
+                words.push(*self.rng.choice(NEUTRAL));
+            }
+        }
+        Review { text: words.join(" "), label }
+    }
+
+    /// Generate a batch.
+    pub fn batch(&mut self, n: usize) -> Vec<Review> {
+        (0..n).map(|_| self.next_review()).collect()
+    }
+
+    /// All corpus words (for vocabulary construction).
+    pub fn lexicon() -> Vec<String> {
+        POSITIVE
+            .iter()
+            .chain(NEGATIVE)
+            .chain(NEUTRAL)
+            .map(|s| s.to_string())
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = ReviewGenerator::new(1, 20);
+        let mut b = ReviewGenerator::new(1, 20);
+        for _ in 0..10 {
+            let (ra, rb) = (a.next_review(), b.next_review());
+            assert_eq!(ra.text, rb.text);
+            assert_eq!(ra.label, rb.label);
+        }
+    }
+
+    #[test]
+    fn labels_roughly_balanced() {
+        let mut g = ReviewGenerator::new(2, 15);
+        let pos: i64 = g.batch(1000).iter().map(|r| r.label).sum();
+        assert!((350..=650).contains(&pos), "{pos}");
+    }
+
+    #[test]
+    fn sentiment_words_match_label() {
+        let mut g = ReviewGenerator::new(3, 40);
+        for r in g.batch(50) {
+            let has_wrong = if r.label == 1 {
+                NEGATIVE.iter().any(|w| r.text.contains(w))
+            } else {
+                POSITIVE.iter().any(|w| r.text.contains(w))
+            };
+            assert!(!has_wrong, "{r:?}");
+        }
+    }
+
+    #[test]
+    fn lengths_vary_but_bounded() {
+        let mut g = ReviewGenerator::new(4, 10);
+        let lens: Vec<usize> =
+            g.batch(200).iter().map(|r| r.text.split(' ').count()).collect();
+        assert!(lens.iter().all(|&l| (4..=60).contains(&l)));
+        let distinct: std::collections::HashSet<usize> = lens.iter().copied().collect();
+        assert!(distinct.len() > 5, "lengths should vary");
+    }
+}

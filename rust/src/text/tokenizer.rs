@@ -1,0 +1,369 @@
+//! WordPiece tokenizer: greedy longest-match subword segmentation.
+//!
+//! Baseline: for each word position, linearly probe progressively shorter
+//! substrings against a `HashMap` (each probe hashes a fresh `String`) —
+//! the "slow" Python-tokenizer shape.
+//! Optimized: walk a prefix trie over bytes once per match — the HF
+//! fast-tokenizer shape. Both produce identical ids (property-tested).
+
+use std::collections::HashMap;
+
+/// Tokenizer implementation choice (DLSA preprocessing axis).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokenizerKind {
+    /// Substring-probing baseline.
+    Baseline,
+    /// Trie longest-match.
+    Optimized,
+}
+
+/// Special token ids (fixed positions at the front of the vocab).
+pub const PAD: i64 = 0;
+pub const UNK: i64 = 1;
+pub const CLS: i64 = 2;
+pub const SEP: i64 = 3;
+
+/// A WordPiece vocabulary: full words plus `##`-prefixed continuations.
+#[derive(Debug, Clone)]
+pub struct Vocab {
+    map: HashMap<String, i64>,
+    trie: Trie,
+    size: usize,
+}
+
+/// Byte-trie for longest-match lookup.
+#[derive(Debug, Clone, Default)]
+struct Trie {
+    /// Node storage; node 0 is the root. Each node: child edges + optional
+    /// token id terminating here.
+    nodes: Vec<TrieNode>,
+}
+
+#[derive(Debug, Clone, Default)]
+struct TrieNode {
+    children: Vec<(u8, u32)>,
+    id: Option<i64>,
+}
+
+impl Trie {
+    fn new() -> Trie {
+        Trie { nodes: vec![TrieNode::default()] }
+    }
+
+    fn insert(&mut self, key: &str, id: i64) {
+        let mut cur = 0usize;
+        for &b in key.as_bytes() {
+            let next = match self.nodes[cur].children.iter().find(|(c, _)| *c == b) {
+                Some((_, n)) => *n as usize,
+                None => {
+                    let n = self.nodes.len() as u32;
+                    self.nodes.push(TrieNode::default());
+                    self.nodes[cur].children.push((b, n));
+                    n as usize
+                }
+            };
+            cur = next;
+        }
+        self.nodes[cur].id = Some(id);
+    }
+
+    /// Longest prefix of `s` that is a token; returns (byte_len, id).
+    fn longest_match(&self, s: &[u8]) -> Option<(usize, i64)> {
+        let mut cur = 0usize;
+        let mut best: Option<(usize, i64)> = None;
+        for (i, &b) in s.iter().enumerate() {
+            match self.nodes[cur].children.iter().find(|(c, _)| *c == b) {
+                Some((_, n)) => cur = *n as usize,
+                None => break,
+            }
+            if let Some(id) = self.nodes[cur].id {
+                best = Some((i + 1, id));
+            }
+        }
+        best
+    }
+}
+
+impl Vocab {
+    /// Build from word and subword pieces. Pieces beginning with `##` are
+    /// continuations. Specials occupy ids 0..4.
+    pub fn new(pieces: &[&str]) -> Vocab {
+        let mut map = HashMap::new();
+        let mut trie = Trie::new();
+        for (i, s) in ["[PAD]", "[UNK]", "[CLS]", "[SEP]"].iter().enumerate() {
+            map.insert(s.to_string(), i as i64);
+        }
+        let mut next = 4i64;
+        for &p in pieces {
+            if map.contains_key(p) {
+                continue;
+            }
+            map.insert(p.to_string(), next);
+            trie.insert(p, next);
+            next += 1;
+        }
+        Vocab { map, trie, size: next as usize }
+    }
+
+    /// Derive a character-complete vocab from a corpus: all single chars
+    /// and their `##` continuations plus the `max_words` most frequent
+    /// whole words. Guarantees no word ever maps to UNK unless it contains
+    /// an unseen character.
+    pub fn build_from_corpus(texts: &[String], max_words: usize) -> Vocab {
+        let mut freq: HashMap<String, usize> = HashMap::new();
+        let mut chars: Vec<String> = Vec::new();
+        let mut seen_chars = std::collections::HashSet::new();
+        for t in texts {
+            for w in split_words(t) {
+                *freq.entry(w.to_string()).or_insert(0) += 1;
+                for c in w.chars() {
+                    if seen_chars.insert(c) {
+                        chars.push(c.to_string());
+                        chars.push(format!("##{c}"));
+                    }
+                }
+            }
+        }
+        let mut words: Vec<(String, usize)> = freq.into_iter().collect();
+        words.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+        let mut pieces: Vec<String> = chars;
+        pieces.extend(words.into_iter().take(max_words).map(|(w, _)| w));
+        let refs: Vec<&str> = pieces.iter().map(|s| s.as_str()).collect();
+        Vocab::new(&refs)
+    }
+
+    /// Vocabulary size including specials.
+    pub fn len(&self) -> usize {
+        self.size
+    }
+
+    /// True if only specials are present.
+    pub fn is_empty(&self) -> bool {
+        self.size <= 4
+    }
+
+    /// Exact-piece lookup.
+    pub fn id(&self, piece: &str) -> Option<i64> {
+        self.map.get(piece).copied()
+    }
+}
+
+fn split_words(text: &str) -> impl Iterator<Item = &str> {
+    text.split(|c: char| !c.is_ascii_alphanumeric()).filter(|w| !w.is_empty())
+}
+
+/// The tokenizer: lowercase → whitespace/punct split → WordPiece pieces →
+/// `[CLS] … [SEP]` → pad/truncate to `max_len`.
+#[derive(Debug, Clone)]
+pub struct WordPiece {
+    vocab: Vocab,
+    pub max_len: usize,
+}
+
+impl WordPiece {
+    /// New tokenizer over `vocab` emitting sequences of `max_len`.
+    pub fn new(vocab: Vocab, max_len: usize) -> WordPiece {
+        WordPiece { vocab, max_len }
+    }
+
+    /// Encode one text to `max_len` ids.
+    pub fn encode(&self, text: &str, kind: TokenizerKind) -> Vec<i64> {
+        let lower = text.to_ascii_lowercase();
+        let mut ids = vec![CLS];
+        'words: for word in split_words(&lower) {
+            if ids.len() >= self.max_len - 1 {
+                break;
+            }
+            let bytes = word.as_bytes();
+            let mut pos = 0usize;
+            let mut word_ids = Vec::new();
+            while pos < bytes.len() {
+                let (m, id) = match kind {
+                    TokenizerKind::Optimized => {
+                        let probe: Option<(usize, i64)> = if pos == 0 {
+                            self.vocab.trie.longest_match(&bytes[pos..])
+                        } else {
+                            // Continuation: probe with the ## prefix.
+                            let mut buf = Vec::with_capacity(bytes.len() - pos + 2);
+                            buf.extend_from_slice(b"##");
+                            buf.extend_from_slice(&bytes[pos..]);
+                            self.vocab
+                                .trie
+                                .longest_match(&buf)
+                                .and_then(|(l, id)| l.checked_sub(2).map(|l| (l, id)))
+                        };
+                        match probe {
+                            Some(x) if x.0 > 0 => x,
+                            _ => {
+                                ids.push(UNK);
+                                continue 'words;
+                            }
+                        }
+                    }
+                    TokenizerKind::Baseline => {
+                        // Probe progressively shorter substrings, each
+                        // allocating a lookup key (the slow path).
+                        let mut found = None;
+                        for end in (pos + 1..=bytes.len()).rev() {
+                            let cand = if pos == 0 {
+                                String::from_utf8_lossy(&bytes[pos..end]).into_owned()
+                            } else {
+                                format!("##{}", String::from_utf8_lossy(&bytes[pos..end]))
+                            };
+                            if let Some(&id) = self.vocab.map.get(&cand) {
+                                found = Some((end - pos, id));
+                                break;
+                            }
+                        }
+                        match found {
+                            Some(x) => x,
+                            None => {
+                                ids.push(UNK);
+                                continue 'words;
+                            }
+                        }
+                    }
+                };
+                word_ids.push(id);
+                pos += m;
+            }
+            for id in word_ids {
+                if ids.len() >= self.max_len - 1 {
+                    break;
+                }
+                ids.push(id);
+            }
+        }
+        ids.push(SEP);
+        ids.resize(self.max_len, PAD);
+        ids
+    }
+
+    /// Encode a batch.
+    pub fn encode_batch(&self, texts: &[String], kind: TokenizerKind) -> Vec<Vec<i64>> {
+        texts.iter().map(|t| self.encode(t, kind)).collect()
+    }
+
+    /// Vocabulary accessor.
+    pub fn vocab(&self) -> &Vocab {
+        &self.vocab
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    fn vocab() -> Vocab {
+        Vocab::new(&[
+            "the", "movie", "was", "great", "bad", "act", "##ing", "##or", "un",
+            "##great", "a", "##c", "##t", "g", "##r", "b", "##a", "##d",
+        ])
+    }
+
+    #[test]
+    fn encodes_known_words() {
+        let tok = WordPiece::new(vocab(), 12);
+        let ids = tok.encode("The movie was great", TokenizerKind::Optimized);
+        assert_eq!(ids.len(), 12);
+        assert_eq!(ids[0], CLS);
+        let the = tok.vocab().id("the").unwrap();
+        assert_eq!(ids[1], the);
+        assert!(ids.contains(&SEP));
+        assert_eq!(*ids.last().unwrap(), PAD);
+    }
+
+    #[test]
+    fn subword_split() {
+        let tok = WordPiece::new(vocab(), 12);
+        let ids = tok.encode("acting", TokenizerKind::Optimized);
+        let act = tok.vocab().id("act").unwrap();
+        let ing = tok.vocab().id("##ing").unwrap();
+        assert_eq!(&ids[1..3], &[act, ing]);
+    }
+
+    #[test]
+    fn unknown_word_is_unk() {
+        let tok = WordPiece::new(vocab(), 8);
+        let ids = tok.encode("xyzzy", TokenizerKind::Optimized);
+        assert_eq!(ids[1], UNK);
+        let ids_b = tok.encode("xyzzy", TokenizerKind::Baseline);
+        assert_eq!(ids, ids_b);
+    }
+
+    #[test]
+    fn baseline_and_optimized_agree() {
+        let tok = WordPiece::new(vocab(), 16);
+        for text in [
+            "the movie was great",
+            "acting actor",
+            "ungreat bad acting",
+            "THE MOVIE!!! was... bad?",
+            "",
+            "a b g",
+        ] {
+            let a = tok.encode(text, TokenizerKind::Baseline);
+            let b = tok.encode(text, TokenizerKind::Optimized);
+            assert_eq!(a, b, "{text:?}");
+        }
+    }
+
+    #[test]
+    fn agree_on_random_corpus_property() {
+        prop::check("tokenizer paths agree", 15, |rng| {
+            // Build a random corpus + char-complete vocab from it.
+            let texts: Vec<String> = (0..10)
+                .map(|_| {
+                    (0..1 + rng.below(8))
+                        .map(|_| {
+                            let len = 1 + rng.below(7);
+                            rng.ascii_lower(len)
+                        })
+                        .collect::<Vec<_>>()
+                        .join(" ")
+                })
+                .collect();
+            let vocab = Vocab::build_from_corpus(&texts, 30);
+            let tok = WordPiece::new(vocab, 24);
+            for t in &texts {
+                let a = tok.encode(t, TokenizerKind::Baseline);
+                let b = tok.encode(t, TokenizerKind::Optimized);
+                if a != b {
+                    return Err(format!("{t:?}: {a:?} vs {b:?}"));
+                }
+                if a.len() != 24 {
+                    return Err("bad length".into());
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn char_complete_vocab_never_unks() {
+        let texts = vec!["hello world".to_string(), "held low".to_string()];
+        let vocab = Vocab::build_from_corpus(&texts, 2);
+        let tok = WordPiece::new(vocab, 32);
+        let ids = tok.encode("hollow dell", TokenizerKind::Optimized);
+        assert!(!ids.contains(&UNK), "{ids:?}");
+    }
+
+    #[test]
+    fn truncates_long_inputs() {
+        let tok = WordPiece::new(vocab(), 6);
+        let ids = tok.encode("the movie was great bad acting actor", TokenizerKind::Optimized);
+        assert_eq!(ids.len(), 6);
+        assert_eq!(ids[0], CLS);
+        assert_eq!(ids[5], SEP);
+    }
+
+    #[test]
+    fn batch_matches_singles() {
+        let tok = WordPiece::new(vocab(), 10);
+        let texts = vec!["the movie".to_string(), "bad acting".to_string()];
+        let batch = tok.encode_batch(&texts, TokenizerKind::Optimized);
+        assert_eq!(batch[0], tok.encode(&texts[0], TokenizerKind::Optimized));
+        assert_eq!(batch[1], tok.encode(&texts[1], TokenizerKind::Optimized));
+    }
+}

@@ -1,0 +1,125 @@
+//! Tiny command-line argument parser (clap is unavailable offline).
+//!
+//! Grammar: `prog <subcommand> [positionals] [--key value | --flag]…`.
+//! Unknown flags are an error; `--help` is left to the caller.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: a subcommand, positional args, and `--key value`
+/// options (`--flag` with no value parses as `"true"`).
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    /// First non-flag token (empty when none given).
+    pub command: String,
+    /// Remaining non-flag tokens.
+    pub positional: Vec<String>,
+    opts: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse from an iterator of tokens (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(tokens: I) -> Args {
+        let mut out = Args::default();
+        let mut it = tokens.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(key) = tok.strip_prefix("--") {
+                // `--key=value` or `--key value` or bare `--flag`.
+                if let Some((k, v)) = key.split_once('=') {
+                    out.opts.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    out.opts.insert(key.to_string(), v);
+                } else {
+                    out.opts.insert(key.to_string(), "true".to_string());
+                }
+            } else if out.command.is_empty() {
+                out.command = tok;
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        out
+    }
+
+    /// Parse the process's own argv (skipping argv[0]).
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    /// String option.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.opts.get(key).map(|s| s.as_str())
+    }
+
+    /// String option with default.
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    /// Typed option with default; panics with a friendly message on a
+    /// malformed value (CLI surface, so a panic is the right UX).
+    pub fn get_parse<T: std::str::FromStr>(&self, key: &str, default: T) -> T {
+        match self.get(key) {
+            None => default,
+            Some(v) => v
+                .parse()
+                .unwrap_or_else(|_| panic!("invalid value for --{key}: {v:?}")),
+        }
+    }
+
+    /// Boolean flag (`--flag`, `--flag=true/false`).
+    pub fn flag(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+
+    /// All option keys (for unknown-flag validation).
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.opts.keys().map(|s| s.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|t| t.to_string()))
+    }
+
+    #[test]
+    fn subcommand_and_positional() {
+        let a = parse("run census extra");
+        assert_eq!(a.command, "run");
+        assert_eq!(a.positional, vec!["census", "extra"]);
+    }
+
+    #[test]
+    fn key_value_forms() {
+        let a = parse("run --rows 100 --mode=fast --verbose");
+        assert_eq!(a.get("rows"), Some("100"));
+        assert_eq!(a.get("mode"), Some("fast"));
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn typed_parse() {
+        let a = parse("x --n 42");
+        assert_eq!(a.get_parse("n", 0usize), 42);
+        assert_eq!(a.get_parse("m", 7usize), 7);
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid value")]
+    fn typed_parse_panics_on_garbage() {
+        let a = parse("x --n abc");
+        let _: usize = a.get_parse("n", 0usize);
+    }
+
+    #[test]
+    fn empty() {
+        let a = parse("");
+        assert_eq!(a.command, "");
+        assert!(a.positional.is_empty());
+    }
+}

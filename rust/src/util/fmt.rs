@@ -1,0 +1,142 @@
+//! Human-readable formatting for durations, throughputs and report tables.
+
+use std::time::Duration;
+
+/// Format a duration compactly: `1.23s`, `45.6ms`, `789µs`, `12ns`.
+pub fn dur(d: Duration) -> String {
+    let ns = d.as_nanos();
+    if ns >= 1_000_000_000 {
+        format!("{:.2}s", ns as f64 / 1e9)
+    } else if ns >= 1_000_000 {
+        format!("{:.1}ms", ns as f64 / 1e6)
+    } else if ns >= 1_000 {
+        format!("{:.0}µs", ns as f64 / 1e3)
+    } else {
+        format!("{ns}ns")
+    }
+}
+
+/// Format a count with SI suffix: `1.2k`, `3.4M`.
+pub fn count(n: f64) -> String {
+    if n >= 1e9 {
+        format!("{:.1}G", n / 1e9)
+    } else if n >= 1e6 {
+        format!("{:.1}M", n / 1e6)
+    } else if n >= 1e3 {
+        format!("{:.1}k", n / 1e3)
+    } else {
+        format!("{n:.0}")
+    }
+}
+
+/// Format a speedup factor the way the paper does: `59x`, `1.36x`.
+pub fn speedup(x: f64) -> String {
+    if x >= 10.0 {
+        format!("{x:.1}x")
+    } else {
+        format!("{x:.2}x")
+    }
+}
+
+/// Plain-text table printer with column auto-widths (markdown-ish output).
+#[derive(Debug, Default)]
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    /// New table with the given header cells.
+    pub fn new(header: &[&str]) -> Self {
+        Table { header: header.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    /// Append a data row (padded/truncated to header width).
+    pub fn row(&mut self, cells: &[String]) {
+        let mut r: Vec<String> = cells.to_vec();
+        r.resize(self.header.len(), String::new());
+        self.rows.push(r);
+    }
+
+    /// Render to a string, pipe-separated with aligned columns.
+    pub fn render(&self) -> String {
+        let ncols = self.header.len();
+        let mut widths = vec![0usize; ncols];
+        for (i, h) in self.header.iter().enumerate() {
+            widths[i] = widths[i].max(h.chars().count());
+        }
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.chars().count());
+            }
+        }
+        let fmt_row = |cells: &[String]| {
+            let body = cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:<w$}", c, w = widths[i]))
+                .collect::<Vec<_>>()
+                .join(" | ");
+            format!("| {body} |")
+        };
+        let mut out = String::new();
+        out.push_str(&fmt_row(&self.header));
+        out.push('\n');
+        let sep = widths.iter().map(|w| "-".repeat(*w)).collect::<Vec<_>>().join("-|-");
+        out.push_str(&format!("|-{sep}-|\n"));
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Print to stdout.
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dur_units() {
+        assert_eq!(dur(Duration::from_secs(2)), "2.00s");
+        assert_eq!(dur(Duration::from_millis(45)), "45.0ms");
+        assert_eq!(dur(Duration::from_micros(789)), "789µs");
+        assert_eq!(dur(Duration::from_nanos(12)), "12ns");
+    }
+
+    #[test]
+    fn count_suffix() {
+        assert_eq!(count(999.0), "999");
+        assert_eq!(count(1200.0), "1.2k");
+        assert_eq!(count(3_400_000.0), "3.4M");
+    }
+
+    #[test]
+    fn speedup_precision() {
+        assert_eq!(speedup(59.0), "59.0x");
+        assert_eq!(speedup(1.3612), "1.36x");
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["name", "value"]);
+        t.row(&["a".into(), "1".into()]);
+        t.row(&["long-name".into(), "22".into()]);
+        let s = t.render();
+        assert!(s.contains("| name      | value |"), "{s}");
+        assert!(s.contains("| long-name | 22    |"), "{s}");
+        assert_eq!(s.lines().count(), 4);
+    }
+
+    #[test]
+    fn table_pads_short_rows() {
+        let mut t = Table::new(&["a", "b", "c"]);
+        t.row(&["x".into()]);
+        assert!(t.render().lines().count() == 3);
+    }
+}

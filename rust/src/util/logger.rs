@@ -1,0 +1,96 @@
+//! Minimal leveled stderr logger (no `log`/`env_logger` backend offline).
+//!
+//! Controlled by `REPRO_LOG` (`error|warn|info|debug|trace`, default
+//! `warn`), evaluated once.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Log severity, ordered.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(u8::MAX);
+
+fn level_from_env() -> u8 {
+    match std::env::var("REPRO_LOG").as_deref() {
+        Ok("error") => 0,
+        Ok("info") => 2,
+        Ok("debug") => 3,
+        Ok("trace") => 4,
+        _ => 1,
+    }
+}
+
+/// Current threshold level.
+pub fn threshold() -> u8 {
+    let v = LEVEL.load(Ordering::Relaxed);
+    if v != u8::MAX {
+        return v;
+    }
+    let lv = level_from_env();
+    LEVEL.store(lv, Ordering::Relaxed);
+    lv
+}
+
+/// Override the threshold programmatically (tests, CLI `--verbose`).
+pub fn set_level(l: Level) {
+    LEVEL.store(l as u8, Ordering::Relaxed);
+}
+
+/// True if a message at `l` would be emitted.
+pub fn enabled(l: Level) -> bool {
+    (l as u8) <= threshold()
+}
+
+/// Emit a message (used by the macros below).
+pub fn emit(l: Level, module: &str, msg: std::fmt::Arguments<'_>) {
+    if enabled(l) {
+        let tag = match l {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        };
+        eprintln!("[{tag}] {module}: {msg}");
+    }
+}
+
+/// Log at info level.
+#[macro_export]
+macro_rules! log_info {
+    ($($t:tt)*) => { $crate::util::logger::emit($crate::util::logger::Level::Info, module_path!(), format_args!($($t)*)) };
+}
+
+/// Log at warn level.
+#[macro_export]
+macro_rules! log_warn {
+    ($($t:tt)*) => { $crate::util::logger::emit($crate::util::logger::Level::Warn, module_path!(), format_args!($($t)*)) };
+}
+
+/// Log at debug level.
+#[macro_export]
+macro_rules! log_debug {
+    ($($t:tt)*) => { $crate::util::logger::emit($crate::util::logger::Level::Debug, module_path!(), format_args!($($t)*)) };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn set_level_controls_enabled() {
+        set_level(Level::Error);
+        assert!(enabled(Level::Error));
+        assert!(!enabled(Level::Info));
+        set_level(Level::Trace);
+        assert!(enabled(Level::Debug));
+        set_level(Level::Warn); // restore default-ish
+    }
+}

@@ -1,0 +1,17 @@
+//! Small self-contained utilities the rest of the crate builds on.
+//!
+//! The sandbox has no network access and only the crates vendored with the
+//! `xla` example are available, so facilities that would normally come from
+//! `rand`, `serde_json`, `clap`, `env_logger` or `proptest` are implemented
+//! here from `std`. Each submodule is deliberately tiny and fully tested.
+
+pub mod rng;
+pub mod timer;
+pub mod fmt;
+pub mod json;
+pub mod cli;
+pub mod prop;
+pub mod logger;
+
+pub use rng::Rng;
+pub use timer::Stopwatch;

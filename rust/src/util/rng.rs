@@ -1,0 +1,273 @@
+//! Deterministic pseudo-random number generation (splitmix64 core).
+//!
+//! Every synthetic dataset, property test and sampler in the crate draws
+//! from this RNG so runs are reproducible from a single `u64` seed. The
+//! generator is splitmix64 (Steele et al., "Fast splittable pseudorandom
+//! number generators", OOPSLA 2014): tiny state, passes BigCrush when used
+//! as a 64-bit stream, and `split()` derives statistically independent
+//! child streams — which is how pipeline instances get per-instance RNGs.
+
+/// Splitmix64 pseudo-random generator.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    state: u64,
+}
+
+impl Rng {
+    /// Create a generator from a seed. Distinct seeds give independent
+    /// streams.
+    pub fn new(seed: u64) -> Self {
+        // Avoid the all-zeros fixed point of a raw 0 seed by mixing once.
+        Rng { state: seed.wrapping_add(0x9E37_79B9_7F4A_7C15) }
+    }
+
+    /// Derive an independent child generator (for per-instance streams).
+    pub fn split(&mut self) -> Rng {
+        Rng::new(self.next_u64())
+    }
+
+    /// Next raw 64-bit value.
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+
+    /// Next 32-bit value.
+    pub fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    /// Uniform `f64` in `[0, 1)`.
+    pub fn f64(&mut self) -> f64 {
+        // 53 random mantissa bits.
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform `f32` in `[0, 1)`.
+    pub fn f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 * (1.0 / (1u32 << 24) as f32)
+    }
+
+    /// Uniform `f64` in `[lo, hi)`.
+    pub fn range_f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.f64()
+    }
+
+    /// Uniform integer in `[0, n)`. `n` must be > 0.
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0, "Rng::below(0)");
+        // Lemire's multiply-shift rejection-free variant is overkill here;
+        // 64-bit modulo bias over usize ranges used in this crate (< 2^40)
+        // is negligible, but use widening multiply anyway - it is cheaper.
+        ((self.next_u64() as u128 * n as u128) >> 64) as usize
+    }
+
+    /// Uniform integer in `[lo, hi)`.
+    pub fn range_i64(&mut self, lo: i64, hi: i64) -> i64 {
+        debug_assert!(hi > lo);
+        lo + self.below((hi - lo) as usize) as i64
+    }
+
+    /// Bernoulli trial with probability `p`.
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Standard normal deviate (Box–Muller; one value per call, the pair's
+    /// second half is discarded to keep state per-call deterministic).
+    pub fn normal(&mut self) -> f64 {
+        let u1 = self.f64().max(1e-300); // avoid ln(0)
+        let u2 = self.f64();
+        (-2.0 * u1.ln()).sqrt() * (std::f64::consts::TAU * u2).cos()
+    }
+
+    /// Normal deviate with the given mean and standard deviation.
+    pub fn normal_with(&mut self, mean: f64, std: f64) -> f64 {
+        mean + std * self.normal()
+    }
+
+    /// Exponential deviate with rate `lambda`.
+    pub fn exp(&mut self, lambda: f64) -> f64 {
+        -(1.0 - self.f64()).ln() / lambda
+    }
+
+    /// Zipf-distributed integer in `[0, n)` with exponent `s` (rejection
+    /// sampling over the harmonic CDF approximation). Used for synthetic
+    /// recommendation catalogs where item popularity is heavy-tailed.
+    pub fn zipf(&mut self, n: usize, s: f64) -> usize {
+        debug_assert!(n > 0);
+        // Inverse-CDF on the continuous approximation, clamped to range.
+        let hmax = harmonic_approx(n as f64, s);
+        let u = self.f64() * hmax;
+        let x = inv_harmonic_approx(u, s);
+        // The continuous rank x lives in [1, n+1); shift to 0-based.
+        ((x - 1.0).max(0.0) as usize).min(n - 1)
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Choose one element uniformly.
+    pub fn choice<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.below(xs.len())]
+    }
+
+    /// Sample `k` distinct indices from `[0, n)` (partial Fisher–Yates).
+    pub fn sample_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
+        let k = k.min(n);
+        let mut idx: Vec<usize> = (0..n).collect();
+        for i in 0..k {
+            let j = i + self.below(n - i);
+            idx.swap(i, j);
+        }
+        idx.truncate(k);
+        idx
+    }
+
+    /// Random lowercase ASCII string of length `len`.
+    pub fn ascii_lower(&mut self, len: usize) -> String {
+        (0..len).map(|_| (b'a' + self.below(26) as u8) as char).collect()
+    }
+}
+
+fn harmonic_approx(n: f64, s: f64) -> f64 {
+    if (s - 1.0).abs() < 1e-9 {
+        n.ln() + 0.5772156649
+    } else {
+        (n.powf(1.0 - s) - 1.0) / (1.0 - s)
+    }
+}
+
+fn inv_harmonic_approx(h: f64, s: f64) -> f64 {
+    if (s - 1.0).abs() < 1e-9 {
+        (h - 0.5772156649).exp()
+    } else {
+        (h * (1.0 - s) + 1.0).powf(1.0 / (1.0 - s))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_seed() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = Rng::new(7);
+        for _ in 0..10_000 {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x), "{x}");
+        }
+    }
+
+    #[test]
+    fn f64_mean_near_half() {
+        let mut r = Rng::new(3);
+        let n = 100_000;
+        let mean: f64 = (0..n).map(|_| r.f64()).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn below_bounds() {
+        let mut r = Rng::new(9);
+        for _ in 0..10_000 {
+            assert!(r.below(7) < 7);
+        }
+    }
+
+    #[test]
+    fn below_covers_all_values() {
+        let mut r = Rng::new(11);
+        let mut seen = [false; 5];
+        for _ in 0..1000 {
+            seen[r.below(5)] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(5);
+        let n = 200_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.03, "var={var}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(8);
+        let mut xs: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<u32>>());
+    }
+
+    #[test]
+    fn sample_indices_distinct() {
+        let mut r = Rng::new(13);
+        let s = r.sample_indices(50, 20);
+        assert_eq!(s.len(), 20);
+        let mut d = s.clone();
+        d.sort_unstable();
+        d.dedup();
+        assert_eq!(d.len(), 20);
+        assert!(s.iter().all(|&i| i < 50));
+    }
+
+    #[test]
+    fn zipf_is_heavy_headed() {
+        let mut r = Rng::new(21);
+        let mut counts = vec![0usize; 100];
+        for _ in 0..50_000 {
+            counts[r.zipf(100, 1.1)] += 1;
+        }
+        // Rank 0 must be sampled far more often than rank 50.
+        assert!(counts[0] > counts[50] * 3, "c0={} c50={}", counts[0], counts[50]);
+    }
+
+    #[test]
+    fn split_streams_are_independent() {
+        let mut parent = Rng::new(100);
+        let mut c1 = parent.split();
+        let mut c2 = parent.split();
+        let a: Vec<u64> = (0..16).map(|_| c1.next_u64()).collect();
+        let b: Vec<u64> = (0..16).map(|_| c2.next_u64()).collect();
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn ascii_lower_shape() {
+        let mut r = Rng::new(17);
+        let s = r.ascii_lower(12);
+        assert_eq!(s.len(), 12);
+        assert!(s.bytes().all(|b| b.is_ascii_lowercase()));
+    }
+}

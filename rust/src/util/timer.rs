@@ -1,0 +1,101 @@
+//! Wall-clock timing helpers used by the per-stage telemetry and benches.
+
+use std::time::{Duration, Instant};
+
+/// A simple stopwatch accumulating named laps.
+#[derive(Debug)]
+pub struct Stopwatch {
+    start: Instant,
+    last: Instant,
+    laps: Vec<(String, Duration)>,
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Stopwatch {
+    /// Start a new stopwatch.
+    pub fn new() -> Self {
+        let now = Instant::now();
+        Stopwatch { start: now, last: now, laps: Vec::new() }
+    }
+
+    /// Record the time since the previous lap (or start) under `name`.
+    pub fn lap(&mut self, name: &str) -> Duration {
+        let now = Instant::now();
+        let d = now - self.last;
+        self.last = now;
+        self.laps.push((name.to_string(), d));
+        d
+    }
+
+    /// Total elapsed time since construction.
+    pub fn total(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    /// All recorded laps.
+    pub fn laps(&self) -> &[(String, Duration)] {
+        &self.laps
+    }
+}
+
+/// Time a closure, returning `(result, elapsed)`.
+pub fn timed<T>(f: impl FnOnce() -> T) -> (T, Duration) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed())
+}
+
+/// Run `f` `iters` times after `warmup` untimed runs; return the median
+/// per-iteration duration. The self-contained replacement for criterion
+/// (unavailable offline) used by `benches/`.
+pub fn bench_median(warmup: usize, iters: usize, mut f: impl FnMut()) -> Duration {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples: Vec<Duration> = (0..iters.max(1))
+        .map(|_| {
+            let t0 = Instant::now();
+            f();
+            t0.elapsed()
+        })
+        .collect();
+    samples.sort_unstable();
+    samples[samples.len() / 2]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn laps_accumulate() {
+        let mut sw = Stopwatch::new();
+        std::thread::sleep(Duration::from_millis(2));
+        sw.lap("a");
+        sw.lap("b");
+        assert_eq!(sw.laps().len(), 2);
+        assert_eq!(sw.laps()[0].0, "a");
+        assert!(sw.laps()[0].1 >= Duration::from_millis(1));
+        assert!(sw.total() >= sw.laps()[0].1);
+    }
+
+    #[test]
+    fn timed_returns_value() {
+        let (v, d) = timed(|| 41 + 1);
+        assert_eq!(v, 42);
+        assert!(d < Duration::from_secs(1));
+    }
+
+    #[test]
+    fn bench_median_runs() {
+        let mut count = 0usize;
+        let d = bench_median(2, 5, || count += 1);
+        assert_eq!(count, 7);
+        assert!(d < Duration::from_secs(1));
+    }
+}

@@ -1,0 +1,158 @@
+//! Anchor-grid box decoding for the `ssd_tiny` detector head.
+
+/// One decoded detection in pixel coordinates.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Detection {
+    /// (y0, x0, y1, x1) in pixels of the *input* image.
+    pub bbox: [f32; 4],
+    /// Class id (0 is background and is never emitted).
+    pub class: usize,
+    /// Softmax confidence of `class`.
+    pub score: f32,
+}
+
+/// Intersection-over-union of two (y0, x0, y1, x1) boxes.
+pub fn iou(a: &[f32; 4], b: &[f32; 4]) -> f32 {
+    let y0 = a[0].max(b[0]);
+    let x0 = a[1].max(b[1]);
+    let y1 = a[2].min(b[2]);
+    let x1 = a[3].min(b[3]);
+    let inter = (y1 - y0).max(0.0) * (x1 - x0).max(0.0);
+    let area = |r: &[f32; 4]| (r[2] - r[0]).max(0.0) * (r[3] - r[1]).max(0.0);
+    let union = area(a) + area(b) - inter;
+    if union <= 0.0 {
+        0.0
+    } else {
+        inter / union
+    }
+}
+
+/// Decode the `ssd_tiny` head outputs into detections.
+///
+/// * `loc`: `grid*grid*anchors` rows of (dy, dx, dh, dw) in `[-1, 1]`
+///   (tanh head) relative to the anchor cell.
+/// * `cls`: matching rows of unnormalized class logits.
+///
+/// Anchors form a uniform `grid×grid` lattice over an `img_size²` input;
+/// anchor k in a cell has base size `img_size/grid * (1 + k)`.
+pub fn decode_detections(
+    loc: &[f32],
+    cls: &[f32],
+    grid: usize,
+    anchors: usize,
+    classes: usize,
+    img_size: f32,
+    score_threshold: f32,
+) -> Vec<Detection> {
+    let n = grid * grid * anchors;
+    assert_eq!(loc.len(), n * 4, "loc shape");
+    assert_eq!(cls.len(), n * classes, "cls shape");
+    let cell = img_size / grid as f32;
+    let mut out = Vec::new();
+    for idx in 0..n {
+        let a = idx % anchors;
+        let cell_idx = idx / anchors;
+        let gy = (cell_idx / grid) as f32;
+        let gx = (cell_idx % grid) as f32;
+        // Anchor center + base size.
+        let cy = (gy + 0.5) * cell;
+        let cx = (gx + 0.5) * cell;
+        let base = cell * (1.0 + a as f32);
+        let d = &loc[idx * 4..idx * 4 + 4];
+        let by = cy + d[0] * cell;
+        let bx = cx + d[1] * cell;
+        let bh = base * (1.0 + 0.5 * d[2]);
+        let bw = base * (1.0 + 0.5 * d[3]);
+        // Softmax over classes; skip background (class 0).
+        let logits = &cls[idx * classes..(idx + 1) * classes];
+        let m = logits.iter().fold(f32::NEG_INFINITY, |acc, &v| acc.max(v));
+        let exps: Vec<f32> = logits.iter().map(|&v| (v - m).exp()).collect();
+        let z: f32 = exps.iter().sum();
+        let (best, &best_e) = exps
+            .iter()
+            .enumerate()
+            .skip(1)
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap();
+        let score = best_e / z;
+        if score >= score_threshold {
+            out.push(Detection {
+                bbox: [
+                    (by - bh / 2.0).max(0.0),
+                    (bx - bw / 2.0).max(0.0),
+                    (by + bh / 2.0).min(img_size),
+                    (bx + bw / 2.0).min(img_size),
+                ],
+                class: best,
+                score,
+            });
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn iou_identical_and_disjoint() {
+        let a = [0.0, 0.0, 2.0, 2.0];
+        assert_eq!(iou(&a, &a), 1.0);
+        assert_eq!(iou(&a, &[3.0, 3.0, 4.0, 4.0]), 0.0);
+    }
+
+    #[test]
+    fn iou_half_overlap() {
+        let a = [0.0, 0.0, 2.0, 2.0];
+        let b = [0.0, 1.0, 2.0, 3.0];
+        // inter = 2, union = 6
+        assert!((iou(&a, &b) - 1.0 / 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn iou_degenerate_boxes() {
+        let a = [1.0, 1.0, 1.0, 1.0];
+        assert_eq!(iou(&a, &a), 0.0);
+    }
+
+    #[test]
+    fn decode_centers_on_anchor_grid() {
+        let grid = 2;
+        let anchors = 1;
+        let classes = 2;
+        let n = grid * grid * anchors;
+        let loc = vec![0.0f32; n * 4];
+        // All anchors strongly predict class 1.
+        let mut cls = vec![0.0f32; n * classes];
+        for i in 0..n {
+            cls[i * classes + 1] = 10.0;
+        }
+        let dets = decode_detections(&loc, &cls, grid, anchors, classes, 32.0, 0.5);
+        assert_eq!(dets.len(), 4);
+        // First cell's box centered at (8, 8) with base 16.
+        let b = &dets[0].bbox;
+        assert!((b[0] - 0.0).abs() < 1e-4 && (b[2] - 16.0).abs() < 1e-4, "{b:?}");
+        assert_eq!(dets[0].class, 1);
+        assert!(dets[0].score > 0.99);
+    }
+
+    #[test]
+    fn decode_thresholds_low_scores() {
+        let grid = 2;
+        let n = grid * grid;
+        let loc = vec![0.0f32; n * 4];
+        let cls = vec![0.0f32; n * 3]; // uniform → score 1/3 per class
+        let dets = decode_detections(&loc, &cls, grid, 1, 3, 32.0, 0.5);
+        assert!(dets.is_empty());
+    }
+
+    #[test]
+    fn boxes_clamped_to_image() {
+        let loc = vec![-1.0f32, -1.0, 1.0, 1.0]; // push box out of bounds
+        let cls = vec![0.0f32, 5.0];
+        let dets = decode_detections(&loc, &cls, 1, 1, 2, 32.0, 0.1);
+        let b = &dets[0].bbox;
+        assert!(b[0] >= 0.0 && b[1] >= 0.0 && b[2] <= 32.0 && b[3] <= 32.0, "{b:?}");
+    }
+}

@@ -1,0 +1,12 @@
+//! Vision postprocessing: box decode, NMS, and the metadata sink.
+//!
+//! These are the video-streamer / face-recognition *post*processing stages
+//! of Table 1 ("bounding box and labelling, data uploading").
+
+pub mod boxes;
+pub mod nms;
+pub mod sink;
+
+pub use boxes::{decode_detections, iou, Detection};
+pub use nms::{nms, NmsKind};
+pub use sink::MetadataSink;

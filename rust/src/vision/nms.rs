@@ -1,0 +1,178 @@
+//! Non-maximum suppression — baseline O(n²) vs sorted early-exit variant.
+//!
+//! NMS is part of the paper's postprocessing cost in both detection
+//! pipelines; the optimized variant is the classic "sort by score, skip
+//! suppressed, stop at score floor" formulation that cuts the constant
+//! dramatically on dense anchor grids.
+
+use super::boxes::{iou, Detection};
+
+/// NMS implementation choice (postprocessing optimization axis).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NmsKind {
+    /// Quadratic all-pairs suppression on the unsorted list.
+    Naive,
+    /// Sort-by-score with early exit and per-class partitioning.
+    Sorted,
+}
+
+/// Suppress overlapping detections (per class) above `iou_threshold`.
+/// Returns survivors sorted by descending score.
+pub fn nms(dets: &[Detection], iou_threshold: f32, kind: NmsKind) -> Vec<Detection> {
+    match kind {
+        NmsKind::Naive => nms_naive(dets, iou_threshold),
+        NmsKind::Sorted => nms_sorted(dets, iou_threshold),
+    }
+}
+
+/// Baseline: same greedy semantics as [`nms_sorted`] but without the sort —
+/// each round re-scans the whole list for the best unprocessed detection
+/// (O(n²) selection) and then re-scans again to suppress. This is the
+/// no-data-structure implementation a naive port produces.
+fn nms_naive(dets: &[Detection], thr: f32) -> Vec<Detection> {
+    let n = dets.len();
+    let mut dead = vec![false; n]; // suppressed or already kept
+    let mut keep: Vec<Detection> = Vec::new();
+    loop {
+        // Full scan for the best remaining detection (ties: lowest index).
+        let mut best: Option<usize> = None;
+        for i in 0..n {
+            if dead[i] {
+                continue;
+            }
+            match best {
+                None => best = Some(i),
+                Some(b) if dets[i].score > dets[b].score => best = Some(i),
+                _ => {}
+            }
+        }
+        let Some(b) = best else { break };
+        dead[b] = true;
+        keep.push(dets[b].clone());
+        // Full suppression scan.
+        for i in 0..n {
+            if !dead[i]
+                && dets[i].class == dets[b].class
+                && iou(&dets[i].bbox, &dets[b].bbox) > thr
+            {
+                dead[i] = true;
+            }
+        }
+    }
+    keep
+}
+
+/// Optimized: sort once, greedily keep, only compare against survivors of
+/// the same class.
+fn nms_sorted(dets: &[Detection], thr: f32) -> Vec<Detection> {
+    let mut order: Vec<usize> = (0..dets.len()).collect();
+    order.sort_by(|&a, &b| {
+        dets[b]
+            .score
+            .partial_cmp(&dets[a].score)
+            .unwrap()
+            .then(a.cmp(&b)) // deterministic ties: earlier index wins
+    });
+    let mut keep: Vec<Detection> = Vec::new();
+    for &i in &order {
+        let d = &dets[i];
+        let mut suppressed = false;
+        for k in &keep {
+            if k.class == d.class && iou(&k.bbox, &d.bbox) > thr {
+                suppressed = true;
+                break;
+            }
+        }
+        if !suppressed {
+            keep.push(d.clone());
+        }
+    }
+    keep
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    fn det(bbox: [f32; 4], class: usize, score: f32) -> Detection {
+        Detection { bbox, class, score }
+    }
+
+    #[test]
+    fn suppresses_overlapping_lower_score() {
+        let dets = vec![
+            det([0.0, 0.0, 10.0, 10.0], 1, 0.9),
+            det([1.0, 1.0, 11.0, 11.0], 1, 0.8), // heavy overlap, lower score
+            det([20.0, 20.0, 30.0, 30.0], 1, 0.7), // disjoint
+        ];
+        for kind in [NmsKind::Naive, NmsKind::Sorted] {
+            let out = nms(&dets, 0.5, kind);
+            assert_eq!(out.len(), 2, "{kind:?}");
+            assert_eq!(out[0].score, 0.9);
+            assert_eq!(out[1].score, 0.7);
+        }
+    }
+
+    #[test]
+    fn different_classes_do_not_suppress() {
+        let dets = vec![
+            det([0.0, 0.0, 10.0, 10.0], 1, 0.9),
+            det([0.0, 0.0, 10.0, 10.0], 2, 0.8),
+        ];
+        for kind in [NmsKind::Naive, NmsKind::Sorted] {
+            assert_eq!(nms(&dets, 0.5, kind).len(), 2);
+        }
+    }
+
+    #[test]
+    fn variants_agree_property() {
+        prop::check("nms variants agree", 20, |rng| {
+            let n = rng.below(60);
+            let dets: Vec<Detection> = (0..n)
+                .map(|_| {
+                    let y = rng.range_f64(0.0, 20.0) as f32;
+                    let x = rng.range_f64(0.0, 20.0) as f32;
+                    det(
+                        [y, x, y + rng.range_f64(1.0, 10.0) as f32, x + rng.range_f64(1.0, 10.0) as f32],
+                        1 + rng.below(2),
+                        (rng.f32() * 1000.0).round() / 1000.0,
+                    )
+                })
+                .collect();
+            let a = nms(&dets, 0.4, NmsKind::Naive);
+            let b = nms(&dets, 0.4, NmsKind::Sorted);
+            if a.len() != b.len() {
+                return Err(format!("lengths {} vs {}", a.len(), b.len()));
+            }
+            for (x, y) in a.iter().zip(&b) {
+                if x.bbox != y.bbox || x.class != y.class {
+                    return Err(format!("{x:?} vs {y:?}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn empty_input() {
+        assert!(nms(&[], 0.5, NmsKind::Sorted).is_empty());
+        assert!(nms(&[], 0.5, NmsKind::Naive).is_empty());
+    }
+
+    #[test]
+    fn chain_suppression_is_greedy_not_transitive() {
+        // A(0.9) overlaps B(0.8), B overlaps C(0.7), A does not overlap C:
+        // greedy NMS keeps A and C.
+        let dets = vec![
+            det([0.0, 0.0, 10.0, 10.0], 1, 0.9),
+            det([0.0, 6.0, 10.0, 16.0], 1, 0.8),
+            det([0.0, 12.0, 10.0, 22.0], 1, 0.7),
+        ];
+        for kind in [NmsKind::Naive, NmsKind::Sorted] {
+            let out = nms(&dets, 0.2, kind);
+            assert_eq!(out.len(), 2, "{kind:?}");
+            assert_eq!(out[1].score, 0.7);
+        }
+    }
+}

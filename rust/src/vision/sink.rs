@@ -1,0 +1,166 @@
+//! Metadata sink — the "upload results to a database for curation" stage
+//! of the video-streamer pipeline (the paper uses VDMS).
+//!
+//! In-process store with real serialization cost: each record is encoded
+//! to JSON before insertion (the bytes a networked VDMS client would put
+//! on the wire), and queries deserialize on the way out.
+
+use crate::util::json::Json;
+use crate::vision::Detection;
+use std::collections::BTreeMap;
+
+/// One stored frame record.
+#[derive(Debug, Clone)]
+pub struct FrameRecord {
+    pub frame_no: usize,
+    pub detections: Vec<Detection>,
+}
+
+/// In-memory metadata "database" with JSON (de)serialization at the API
+/// boundary, standing in for VDMS.
+#[derive(Debug, Default)]
+pub struct MetadataSink {
+    rows: Vec<String>,
+    bytes_written: usize,
+}
+
+impl MetadataSink {
+    /// Empty sink.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Serialize + store one frame's detections; returns encoded size.
+    pub fn upload(&mut self, rec: &FrameRecord) -> usize {
+        let mut obj = BTreeMap::new();
+        obj.insert("frame".to_string(), Json::Num(rec.frame_no as f64));
+        obj.insert(
+            "detections".to_string(),
+            Json::Arr(
+                rec.detections
+                    .iter()
+                    .map(|d| {
+                        let mut m = BTreeMap::new();
+                        m.insert(
+                            "bbox".to_string(),
+                            Json::Arr(d.bbox.iter().map(|&v| Json::Num(v as f64)).collect()),
+                        );
+                        m.insert("class".to_string(), Json::Num(d.class as f64));
+                        m.insert("score".to_string(), Json::Num(d.score as f64));
+                        Json::Obj(m)
+                    })
+                    .collect(),
+            ),
+        );
+        let encoded = Json::Obj(obj).to_string_compact();
+        let n = encoded.len();
+        self.bytes_written += n;
+        self.rows.push(encoded);
+        n
+    }
+
+    /// Number of stored frames.
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// True when nothing was uploaded.
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// Total serialized bytes (throughput accounting).
+    pub fn bytes_written(&self) -> usize {
+        self.bytes_written
+    }
+
+    /// Deserialize a stored record (query path).
+    pub fn fetch(&self, idx: usize) -> Option<FrameRecord> {
+        let v = Json::parse(self.rows.get(idx)?).ok()?;
+        let frame_no = v.get("frame")?.as_i64()? as usize;
+        let detections = v
+            .get("detections")?
+            .items()
+            .iter()
+            .map(|d| {
+                let b = d.get("bbox").map(Json::items).unwrap_or(&[]);
+                let mut bbox = [0f32; 4];
+                for (i, x) in b.iter().take(4).enumerate() {
+                    bbox[i] = x.as_f64().unwrap_or(0.0) as f32;
+                }
+                Detection {
+                    bbox,
+                    class: d.get("class").and_then(Json::as_i64).unwrap_or(0) as usize,
+                    score: d.get("score").and_then(Json::as_f64).unwrap_or(0.0) as f32,
+                }
+            })
+            .collect();
+        Some(FrameRecord { frame_no, detections })
+    }
+
+    /// Count detections of a class across all frames (a "curation" query).
+    pub fn count_class(&self, class: usize) -> usize {
+        (0..self.rows.len())
+            .filter_map(|i| self.fetch(i))
+            .map(|r| r.detections.iter().filter(|d| d.class == class).count())
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(frame_no: usize, n: usize) -> FrameRecord {
+        FrameRecord {
+            frame_no,
+            detections: (0..n)
+                .map(|i| Detection {
+                    bbox: [i as f32, 0.0, i as f32 + 5.0, 5.0],
+                    class: 1 + i % 2,
+                    score: 0.5 + 0.1 * i as f32,
+                })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn upload_fetch_round_trip() {
+        let mut sink = MetadataSink::new();
+        let n = sink.upload(&rec(3, 2));
+        assert!(n > 10);
+        assert_eq!(sink.len(), 1);
+        let back = sink.fetch(0).unwrap();
+        assert_eq!(back.frame_no, 3);
+        assert_eq!(back.detections.len(), 2);
+        assert_eq!(back.detections[1].class, 2);
+        assert!((back.detections[1].score - 0.6).abs() < 1e-5);
+        assert_eq!(back.detections[1].bbox[0], 1.0);
+    }
+
+    #[test]
+    fn bytes_accumulate() {
+        let mut sink = MetadataSink::new();
+        sink.upload(&rec(0, 1));
+        let b1 = sink.bytes_written();
+        sink.upload(&rec(1, 3));
+        assert!(sink.bytes_written() > b1);
+    }
+
+    #[test]
+    fn count_class_query() {
+        let mut sink = MetadataSink::new();
+        sink.upload(&rec(0, 4)); // classes 1,2,1,2
+        sink.upload(&rec(1, 2)); // classes 1,2
+        assert_eq!(sink.count_class(1), 3);
+        assert_eq!(sink.count_class(2), 3);
+        assert_eq!(sink.count_class(9), 0);
+    }
+
+    #[test]
+    fn fetch_out_of_range() {
+        let sink = MetadataSink::new();
+        assert!(sink.is_empty());
+        assert!(sink.fetch(0).is_none());
+    }
+}

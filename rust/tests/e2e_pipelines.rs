@@ -1,0 +1,119 @@
+//! Integration: every pipeline runs end-to-end at both optimization
+//! levels, produces sane metrics, and the cross-level quality invariants
+//! hold (optimizations must not change answers beyond tolerance).
+
+use repro::pipelines::{registry, run_by_name, RunConfig, Toggles};
+use repro::OptLevel;
+
+fn artifacts_ready() -> bool {
+    repro::runtime::default_artifacts_dir().join("manifest.json").exists()
+}
+
+fn tiny(opt: OptLevel) -> RunConfig {
+    RunConfig { toggles: Toggles::all(opt), scale: 0.1, seed: 0x1E57 }
+}
+
+#[test]
+fn every_pipeline_runs_at_both_levels() {
+    if !artifacts_ready() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    for e in registry() {
+        for opt in OptLevel::ALL {
+            let res = (e.run)(&tiny(opt))
+                .unwrap_or_else(|err| panic!("{} @ {opt}: {err:#}", e.name));
+            assert!(res.items > 0, "{} @ {opt}", e.name);
+            assert!(!res.metrics.is_empty(), "{} @ {opt}", e.name);
+            assert!(!res.report.stages.is_empty(), "{} @ {opt}", e.name);
+            assert!(
+                res.report.total().as_nanos() > 0,
+                "{} @ {opt}: empty telemetry",
+                e.name
+            );
+            // Every stage must have been visited.
+            for s in &res.report.stages {
+                assert!(s.items > 0, "{} @ {opt}: stage {} idle", e.name, s.name);
+            }
+        }
+    }
+}
+
+#[test]
+fn quality_metrics_meet_floors_when_optimized() {
+    if !artifacts_ready() {
+        return;
+    }
+    let floors: &[(&str, &str, f64)] = &[
+        ("census", "r2", 0.85),
+        ("plasticc", "auc", 0.8),
+        ("iiot", "auc", 0.75),
+        ("dlsa", "agreement_vs_fp32", 0.85),
+        ("anomaly", "auc", 0.7),
+        ("face", "match_rate", 0.6),
+    ];
+    for (name, metric, floor) in floors {
+        let cfg = RunConfig { toggles: Toggles::optimized(), scale: 0.4, seed: 0xF100 };
+        let res = run_by_name(name, &cfg).unwrap();
+        let v = res.metric(metric).unwrap_or(f64::NAN);
+        assert!(v >= *floor, "{name}.{metric} = {v} < {floor}");
+    }
+}
+
+#[test]
+fn figure1_shape_holds() {
+    if !artifacts_ready() {
+        return;
+    }
+    // The paper's Figure 1 spread: tabular pipelines preprocessing-heavy,
+    // DL pipelines AI-heavy. Check the ordering at a mid scale.
+    let cfg = RunConfig { toggles: Toggles::optimized(), scale: 0.4, seed: 0xF1 };
+    let pre_pct = |name: &str| {
+        let res = run_by_name(name, &cfg).unwrap();
+        res.report.fig1_split().0
+    };
+    let census = pre_pct("census");
+    let plasticc = pre_pct("plasticc");
+    let dlsa = pre_pct("dlsa");
+    let anomaly = pre_pct("anomaly");
+    assert!(census > 50.0, "census pre={census}");
+    assert!(plasticc > 50.0, "plasticc pre={plasticc}");
+    assert!(dlsa < 50.0, "dlsa pre={dlsa}");
+    assert!(anomaly < 50.0, "anomaly pre={anomaly}");
+}
+
+#[test]
+fn seeds_are_deterministic() {
+    if !artifacts_ready() {
+        return;
+    }
+    for name in ["census", "plasticc", "iiot"] {
+        let cfg = RunConfig { toggles: Toggles::optimized(), scale: 0.1, seed: 77 };
+        let a = run_by_name(name, &cfg).unwrap();
+        let b = run_by_name(name, &cfg).unwrap();
+        for (k, v) in &a.metrics {
+            let w = b.metric(k).unwrap();
+            assert!((v - w).abs() < 1e-9, "{name}.{k}: {v} vs {w}");
+        }
+    }
+}
+
+#[test]
+fn e2e_speedup_spread_direction() {
+    if !artifacts_ready() {
+        return;
+    }
+    // Figure 11's direction on a preprocessing-bound pipeline: optimized
+    // beats baseline end-to-end at moderate scale.
+    for name in ["census", "plasticc"] {
+        let base = run_by_name(name, &tiny_scaled(name, OptLevel::Baseline)).unwrap();
+        let opt = run_by_name(name, &tiny_scaled(name, OptLevel::Optimized)).unwrap();
+        let speedup =
+            base.report.total().as_secs_f64() / opt.report.total().as_secs_f64();
+        assert!(speedup > 1.1, "{name}: E2E speedup {speedup}");
+    }
+}
+
+fn tiny_scaled(_name: &str, opt: OptLevel) -> RunConfig {
+    RunConfig { toggles: Toggles::all(opt), scale: 0.5, seed: 0x5EED }
+}

@@ -1,0 +1,174 @@
+//! Integration property tests: the baseline and optimized execution
+//! engines must be *observationally identical* across the dataframe, NMS,
+//! tokenizer and recsys substrates — broader random sweeps than the unit
+//! tests, exercising whole operation chains.
+
+use repro::dataframe::{self as df, groupby::Agg, Column, DataFrame, DType, Engine, Expr};
+use repro::util::{prop, Rng};
+
+/// Random frame with mixed dtypes and nulls.
+fn random_frame(rng: &mut Rng, n: usize) -> DataFrame {
+    let mask: Option<Vec<bool>> = if rng.chance(0.5) {
+        Some((0..n).map(|_| rng.chance(0.85)).collect())
+    } else {
+        None
+    };
+    DataFrame::from_cols(vec![
+        ("f", Column::F64((0..n).map(|_| rng.normal()).collect(), mask)),
+        ("i", Column::i64((0..n).map(|_| rng.range_i64(-20, 20)).collect())),
+        ("g", Column::str((0..n).map(|_| rng.ascii_lower(1)).collect())),
+        ("b", Column::bool((0..n).map(|_| rng.chance(0.5)).collect())),
+    ])
+}
+
+#[test]
+fn whole_chain_equivalence() {
+    prop::check("df chain: filter→with_column→astype→groupby", 12, |rng| {
+        let n = 1 + rng.below(300);
+        let frame = random_frame(rng, n);
+        let run = |engine: Engine| -> Result<DataFrame, String> {
+            let pred = Expr::col("f")
+                .gt(Expr::lit(-0.5))
+                .and(Expr::col("i").ne(Expr::lit_i64(0)));
+            let x = df::ops::filter(&frame, &pred, engine).map_err(|e| e.to_string())?;
+            let x = df::ops::with_column(
+                &x,
+                "fi",
+                &Expr::col("f").mul(Expr::col("i")),
+                engine,
+            )
+            .map_err(|e| e.to_string())?;
+            let x = df::ops::astype(&x, "i", DType::F64, engine).map_err(|e| e.to_string())?;
+            df::groupby::groupby_agg(
+                &x,
+                &["g"],
+                &[("fi", Agg::Sum), ("fi", Agg::Mean), ("i", Agg::Count)],
+                engine,
+            )
+            .map_err(|e| e.to_string())
+        };
+        let a = run(Engine::Baseline)?;
+        let b = run(Engine::Optimized)?;
+        if a.nrows() != b.nrows() {
+            return Err(format!("group counts {} vs {}", a.nrows(), b.nrows()));
+        }
+        if a.strs("g").map_err(|e| e.to_string())? != b.strs("g").map_err(|e| e.to_string())? {
+            return Err("group keys differ".into());
+        }
+        for col in ["fi_sum", "fi_mean", "i_count"] {
+            prop::assert_close(
+                a.f64s(col).map_err(|e| e.to_string())?,
+                b.f64s(col).map_err(|e| e.to_string())?,
+                1e-9,
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn csv_round_trip_equivalence() {
+    prop::check("csv write→read equivalence across engines", 8, |rng| {
+        let n = 1 + rng.below(200);
+        let frame = random_frame(rng, n);
+        let text = df::csv::write_str(&frame);
+        let a = df::csv::read_str(&text, Engine::Baseline).map_err(|e| e.to_string())?;
+        let b = df::csv::read_str(&text, Engine::Optimized).map_err(|e| e.to_string())?;
+        if a.nrows() != b.nrows() || a.ncols() != b.ncols() {
+            return Err("shape mismatch".into());
+        }
+        for i in 0..a.nrows() {
+            if a.row_values(i) != b.row_values(i) {
+                return Err(format!("row {i} differs"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn sort_then_split_is_engine_independent() {
+    prop::check("sort+split determinism", 8, |rng| {
+        let n = 2 + rng.below(150);
+        let frame = random_frame(rng, n);
+        let sorted = df::ops::sort_by(&frame, "f", true).map_err(|e| e.to_string())?;
+        let (tr1, te1) = df::ops::train_test_split(&sorted, 0.3, 9);
+        let (tr2, te2) = df::ops::train_test_split(&sorted, 0.3, 9);
+        if tr1 != tr2 || te1 != te2 {
+            return Err("split not deterministic".into());
+        }
+        if tr1.nrows() + te1.nrows() != n {
+            return Err("split loses rows".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn recsys_feature_engineering_equivalence() {
+    use repro::recsys::{build_examples, generate_log, parse_log};
+    use repro::OptLevel;
+    prop::check("recsys baseline == optimized", 6, |rng| {
+        let n = 50 + rng.below(400);
+        let (events, _) = parse_log(&generate_log(n, 10 + rng.below(20), 60, rng.next_u64()));
+        let (a, _, _) = build_examples(&events, 8, 64, 5, OptLevel::Baseline);
+        let (b, _, _) = build_examples(&events, 8, 64, 5, OptLevel::Optimized);
+        let key = |e: &repro::recsys::DienExample| (e.history.clone(), e.candidate, e.label);
+        let mut ka: Vec<_> = a.iter().map(key).collect();
+        let mut kb: Vec<_> = b.iter().map(key).collect();
+        ka.sort();
+        kb.sort();
+        if ka != kb {
+            return Err(format!("{} vs {} examples differ", a.len(), b.len()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn nms_equivalence_dense_scenes() {
+    use repro::vision::{nms, Detection, NmsKind};
+    prop::check("nms dense-scene equivalence", 10, |rng| {
+        let n = 200 + rng.below(400);
+        let dets: Vec<Detection> = (0..n)
+            .map(|_| {
+                let y = rng.range_f64(0.0, 50.0) as f32;
+                let x = rng.range_f64(0.0, 50.0) as f32;
+                Detection {
+                    bbox: [y, x, y + 6.0, x + 6.0],
+                    class: 1 + rng.below(3),
+                    score: (rng.f32() * 100.0).round() / 100.0,
+                }
+            })
+            .collect();
+        let a = nms(&dets, 0.3, NmsKind::Naive);
+        let b = nms(&dets, 0.3, NmsKind::Sorted);
+        if a.len() != b.len() {
+            return Err(format!("{} vs {}", a.len(), b.len()));
+        }
+        for (x, y) in a.iter().zip(&b) {
+            if x.bbox != y.bbox {
+                return Err("survivor sets differ".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn tokenizer_equivalence_wide_sweep() {
+    use repro::text::{ReviewGenerator, TokenizerKind, Vocab, WordPiece};
+    prop::check("tokenizer equivalence", 8, |rng| {
+        let vocab = Vocab::build_from_corpus(&ReviewGenerator::lexicon(), 40);
+        let tok = WordPiece::new(vocab, 48);
+        let mut gen = ReviewGenerator::new(rng.next_u64(), 20);
+        for r in gen.batch(30) {
+            let a = tok.encode(&r.text, TokenizerKind::Baseline);
+            let b = tok.encode(&r.text, TokenizerKind::Optimized);
+            if a != b {
+                return Err(format!("{:?}", r.text));
+            }
+        }
+        Ok(())
+    });
+}

