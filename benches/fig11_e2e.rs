@@ -41,8 +41,10 @@ fn main() {
     let mut t = Table::new(&["pipeline", "baseline", "optimized", "speedup"]);
     let mut speedups: Vec<(String, f64)> = Vec::new();
     for e in registry() {
-        let base_cfg = RunConfig { toggles: Toggles::baseline(), scale, seed: 0xF11 };
-        let opt_cfg = RunConfig { toggles: Toggles::optimized(), scale, seed: 0xF11 };
+        let base_cfg =
+            RunConfig { toggles: Toggles::baseline(), scale, seed: 0xF11, ..Default::default() };
+        let opt_cfg =
+            RunConfig { toggles: Toggles::optimized(), scale, seed: 0xF11, ..Default::default() };
         let base = median_total(e.run, &base_cfg, iters);
         let opt = median_total(e.run, &opt_cfg, iters);
         let s = base / opt;

@@ -35,7 +35,7 @@ fn main() {
         .ok()
         .and_then(|s| s.parse().ok())
         .unwrap_or(1.0);
-    let cfg = RunConfig { toggles: Toggles::optimized(), scale, seed: 0xF16 };
+    let cfg = RunConfig { toggles: Toggles::optimized(), scale, seed: 0xF16, ..Default::default() };
 
     println!("\n=== Figure 1: percent time in pre/postprocessing vs AI (scale {scale}) ===");
     let mut t = Table::new(&[

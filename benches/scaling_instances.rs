@@ -3,41 +3,51 @@
 //! streams.
 //!
 //! Single-core sandbox: the deliverables are (a) aggregate throughput
-//! stays flat as instances time-slice (no coordination collapse) and
-//! (b) fairness stays near 1.0. On a many-core Xeon the same harness
-//! shows the paper's linear scaling (DESIGN.md §2).
+//! stays flat as instances time-slice (no coordination collapse),
+//! (b) fairness stays near 1.0, and (c) per-batch latency p50/p95 —
+//! fairness by item count can hide one instance's requests all landing in
+//! the tail, so the percentiles make the §3.4 fairness claim measurable.
+//! On a many-core Xeon the same harness shows the paper's linear scaling
+//! (DESIGN.md §2).
 //!
 //! ```sh
 //! cargo bench --bench scaling_instances
 //! ```
 
-use repro::coordinator::run_instances;
+use repro::coordinator::{run_instances_timed, LatencyRecorder};
 use repro::media::{normalize, resize, ResizeFilter};
 use repro::runtime::{ModelServer, Tensor};
 use repro::text::{ReviewGenerator, TokenizerKind, Vocab, WordPiece};
-use repro::util::fmt::Table;
+use repro::util::fmt::{dur, Table};
 use repro::util::Rng;
 
 const IMG: usize = 32;
 
-fn anomaly_stream(client: &repro::runtime::ModelClient, seed: u64, images: usize) -> usize {
+fn anomaly_stream(
+    client: &repro::runtime::ModelClient,
+    lat: &mut LatencyRecorder,
+    seed: u64,
+    images: usize,
+) -> usize {
     let mut rng = Rng::new(seed);
     let mut done = 0usize;
     while done < images {
         let mut data = Vec::with_capacity(4 * IMG * IMG * 3);
         for _ in 0..4 {
             let part = {
-                    let defective = rng.chance(0.2);
-                    repro::pipelines::anomaly::generate_part(&mut rng, defective)
-                };
+                let defective = rng.chance(0.2);
+                repro::pipelines::anomaly::generate_part(&mut rng, defective)
+            };
             let mut small = resize(&part.img, IMG, IMG, ResizeFilter::Bilinear);
             normalize(&mut small, [0.45; 3], [0.25; 3]);
             data.extend_from_slice(&small.data);
         }
-        if client
-            .run("resnet_features_fused_b4", vec![Tensor::f32(&[4, IMG, IMG, 3], data)])
-            .is_err()
-        {
+        let ok = lat.time(|| {
+            client
+                .run("resnet_features_fused_b4", vec![Tensor::f32(&[4, IMG, IMG, 3], data)])
+                .is_ok()
+        });
+        if !ok {
             break;
         }
         done += 4;
@@ -47,6 +57,7 @@ fn anomaly_stream(client: &repro::runtime::ModelClient, seed: u64, images: usize
 
 fn dlsa_stream(
     client: &repro::runtime::ModelClient,
+    lat: &mut LatencyRecorder,
     tok: &WordPiece,
     seed: u64,
     docs: usize,
@@ -61,7 +72,9 @@ fn dlsa_stream(
         for doc in &enc {
             ids.extend(doc.iter().map(|&t| t as i32));
         }
-        if client.run("bert_fused_b8", vec![Tensor::i32(&[8, 64], ids)]).is_err() {
+        let ok = lat
+            .time(|| client.run("bert_fused_b8", vec![Tensor::i32(&[8, 64], ids)]).is_ok());
+        if !ok {
             break;
         }
         done += 8;
@@ -86,24 +99,40 @@ fn main() {
     for (workload, is_dlsa) in [("anomaly camera streams", false), ("dlsa inference streams", true)]
     {
         println!("\n{workload}:");
-        let mut t = Table::new(&["instances", "aggregate items/s", "fairness"]);
+        let mut t = Table::new(&[
+            "instances",
+            "aggregate items/s",
+            "fairness",
+            "batch p50",
+            "batch p95",
+        ]);
         for n in [1usize, 2, 4, 8] {
             let client = server.client();
             let tok = &tok;
-            let report = run_instances(n, |i| {
+            let report = run_instances_timed(n, |i, lat| {
                 if is_dlsa {
-                    dlsa_stream(&client, tok, 0xD15A + i as u64, images)
+                    dlsa_stream(&client, lat, tok, 0xD15A + i as u64, images)
                 } else {
-                    anomaly_stream(&client, 0xA770 + i as u64, images)
+                    anomaly_stream(&client, lat, 0xA770 + i as u64, images)
                 }
             });
+            let pct = |p: Option<std::time::Duration>| match p {
+                Some(d) => dur(d),
+                None => "-".to_string(),
+            };
+            let mut pcts = report.latency_percentiles(&[0.50, 0.95]).into_iter();
             t.row(&[
                 n.to_string(),
                 format!("{:.1}", report.aggregate_throughput()),
                 format!("{:.2}", report.fairness()),
+                pct(pcts.next().flatten()),
+                pct(pcts.next().flatten()),
             ]);
         }
         t.print();
     }
-    println!("\nshape check: aggregate ~flat on one core; fairness ≥ 0.5 throughout.");
+    println!(
+        "\nshape check: aggregate ~flat on one core; fairness ≥ 0.5 and p95/p50\n\
+         within a small factor throughout (no starved instance)."
+    );
 }

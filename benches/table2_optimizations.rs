@@ -94,7 +94,7 @@ fn main() {
     let mut opt_time = 0.0;
     for (pipeline, axis, paper) in cells() {
         if pipeline != last_pipeline {
-            let cfg = RunConfig { toggles: Toggles::optimized(), scale, seed: 0x7AB };
+            let cfg = RunConfig { toggles: Toggles::optimized(), scale, seed: 0x7AB, ..Default::default() };
             opt_time = median_total(pipeline, &cfg, iters);
             last_pipeline = pipeline;
         }
@@ -105,13 +105,13 @@ fn main() {
             // (EXPERIMENTS.md §INT8).
             let mut toggles = Toggles::optimized();
             toggles.quant = true;
-            let cfg = RunConfig { toggles, scale, seed: 0x7AB };
+            let cfg = RunConfig { toggles, scale, seed: 0x7AB, ..Default::default() };
             let int8 = median_total(pipeline, &cfg, iters);
             opt_time / int8
         } else {
             let mut toggles = Toggles::optimized();
             axis.degrade(&mut toggles);
-            let cfg = RunConfig { toggles, scale, seed: 0x7AB };
+            let cfg = RunConfig { toggles, scale, seed: 0x7AB, ..Default::default() };
             let degraded = median_total(pipeline, &cfg, iters);
             degraded / opt_time
         };

@@ -25,7 +25,7 @@ fn main() -> anyhow::Result<()> {
             let mut toggles = Toggles::baseline();
             toggles.dataframe = df_opt;
             toggles.ml = ml_opt;
-            let cfg = RunConfig { toggles, scale, seed: 42 };
+            let cfg = RunConfig { toggles, scale, seed: 42, ..Default::default() };
             let res = census::run(&cfg)?;
             let total = res.report.total();
             if df_opt == OptLevel::Baseline && ml_opt == OptLevel::Baseline {
@@ -52,6 +52,7 @@ fn main() -> anyhow::Result<()> {
         toggles: Toggles::optimized(),
         scale,
         seed: 42,
+        ..Default::default()
     })?;
     println!("\noptimized stage breakdown:");
     res.report.table().print();

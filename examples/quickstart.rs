@@ -17,7 +17,7 @@ fn main() -> anyhow::Result<()> {
         println!("=== {name} ===");
         let mut totals = Vec::new();
         for opt in OptLevel::ALL {
-            let cfg = RunConfig { toggles: Toggles::all(opt), scale: 0.5, seed: 1 };
+            let cfg = RunConfig { toggles: Toggles::all(opt), scale: 0.5, seed: 1, ..Default::default() };
             let res = run_by_name(name, &cfg)?;
             let (pre, ai) = res.report.fig1_split();
             println!(

@@ -35,7 +35,7 @@ fn main() -> anyhow::Result<()> {
     let mut table = Table::new(&["configuration", "fps", "ai %", "recall", "db bytes"]);
     let mut first_fps = None;
     for (label, toggles) in configs {
-        let cfg = RunConfig { toggles: *toggles, scale, seed: 3 };
+        let cfg = RunConfig { toggles: *toggles, scale, seed: 3, ..Default::default() };
         let res = video_streamer::run(&cfg)?;
         let fps = res.metric("fps").unwrap();
         first_fps.get_or_insert(fps);
@@ -55,6 +55,7 @@ fn main() -> anyhow::Result<()> {
         toggles: Toggles::optimized(),
         scale,
         seed: 3,
+        ..Default::default()
     })?;
     res.report.table().print();
     Ok(())

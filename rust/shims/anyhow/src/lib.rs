@@ -1,0 +1,172 @@
+//! Offline shim of the `anyhow` crate: the subset this repository uses
+//! (`anyhow::Result`, `anyhow::Error`, `anyhow!`, `bail!`, `ensure!`,
+//! blanket `From<E: std::error::Error>`), implemented from `std` so the
+//! default build needs no crates.io access. The API mirrors the real
+//! crate, so swapping the path dependency for upstream `anyhow` is a
+//! one-line `Cargo.toml` change.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// A type-erased, send-able error, like `anyhow::Error`.
+pub struct Error {
+    inner: Box<dyn StdError + Send + Sync + 'static>,
+}
+
+/// `Result` with [`Error`] as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+struct MessageError(String);
+
+impl fmt::Debug for MessageError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl fmt::Display for MessageError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl StdError for MessageError {}
+
+impl Error {
+    /// Create an error from a display-able message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { inner: Box::new(MessageError(message.to_string())) }
+    }
+
+    /// Wrap a concrete error value.
+    pub fn new<E: StdError + Send + Sync + 'static>(error: E) -> Error {
+        Error { inner: Box::new(error) }
+    }
+
+    /// The lowest-level source in the chain.
+    pub fn root_cause(&self) -> &(dyn StdError + 'static) {
+        let mut cur: &(dyn StdError + 'static) = self.inner.as_ref();
+        while let Some(next) = cur.source() {
+            cur = next;
+        }
+        cur
+    }
+
+    /// Downcast reference, mirroring `anyhow::Error::downcast_ref`.
+    pub fn downcast_ref<E: StdError + 'static>(&self) -> Option<&E> {
+        self.inner.downcast_ref::<E>()
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.inner)?;
+        if f.alternate() {
+            let mut cur: &(dyn StdError + 'static) = self.inner.as_ref();
+            while let Some(next) = cur.source() {
+                write!(f, ": {next}")?;
+                cur = next;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.inner)?;
+        let mut cur: &(dyn StdError + 'static) = self.inner.as_ref();
+        while let Some(next) = cur.source() {
+            write!(f, "\n\nCaused by:\n    {next}")?;
+            cur = next;
+        }
+        Ok(())
+    }
+}
+
+// Like upstream anyhow, `Error` deliberately does NOT implement
+// `std::error::Error`, which is what makes this blanket impl coherent.
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(error: E) -> Error {
+        Error { inner: Box::new(error) }
+    }
+}
+
+/// Construct an [`Error`] from a format string or error value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg(format!("{}", $err))
+    };
+}
+
+/// Return early with an error built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::anyhow!(concat!("condition failed: ", stringify!($cond))));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails(flag: bool) -> Result<u32> {
+        ensure!(flag, "flag was {flag}");
+        Ok(7)
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        let e = anyhow!("x = {}", 3);
+        assert_eq!(e.to_string(), "x = 3");
+        assert_eq!(fails(true).unwrap(), 7);
+        assert_eq!(fails(false).unwrap_err().to_string(), "flag was false");
+    }
+
+    #[test]
+    fn from_std_error_via_question_mark() {
+        fn parse(s: &str) -> Result<i32> {
+            let v: i32 = s.parse()?;
+            Ok(v)
+        }
+        assert_eq!(parse("42").unwrap(), 42);
+        assert!(parse("nope").is_err());
+    }
+
+    #[test]
+    fn alternate_display_prints_chain() {
+        let io = std::io::Error::new(std::io::ErrorKind::Other, "inner");
+        let e = Error::new(io);
+        assert!(format!("{e:#}").contains("inner"));
+        assert_eq!(e.root_cause().to_string(), "inner");
+    }
+
+    #[test]
+    fn error_is_send_and_sync() {
+        fn check<T: Send + Sync>() {}
+        check::<Error>();
+    }
+}

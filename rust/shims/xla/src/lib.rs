@@ -1,0 +1,268 @@
+//! Offline stub of the `xla` crate (PJRT bindings), covering exactly the
+//! API surface `repro::runtime` touches.
+//!
+//! Host-side plumbing — [`Literal`] construction, reshape, dtype/shape
+//! inspection, typed extraction — is fully implemented, so tensor
+//! round-trips work without any native library. The device path
+//! ([`PjRtClient::compile`] / [`PjRtLoadedExecutable::execute`]) returns
+//! [`Error::Unavailable`]: executing AOT artifacts requires swapping this
+//! path dependency for the real `xla` crate (0.1.6, xla_extension 0.5.1),
+//! which is API-compatible with everything stubbed here. Callers already
+//! gate on the artifacts manifest being present, so the default offline
+//! build and test run never reach the stubbed entry points.
+
+use std::fmt;
+use std::path::Path;
+
+/// Stub error type mirroring the variants the runtime matches on.
+#[derive(Debug)]
+pub enum Error {
+    /// A literal held a dtype outside the supported set.
+    UnexpectedElementType(i32),
+    /// Shape/element-count mismatch in host-side literal plumbing.
+    Shape(String),
+    /// Artifact file problems.
+    Io(String),
+    /// The PJRT device path, which the offline stub does not provide.
+    Unavailable(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::UnexpectedElementType(t) => write!(f, "unexpected element type {t}"),
+            Error::Shape(m) => write!(f, "shape error: {m}"),
+            Error::Io(m) => write!(f, "io error: {m}"),
+            Error::Unavailable(m) => write!(f, "{m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+fn unavailable<T>() -> Result<T, Error> {
+    Err(Error::Unavailable(
+        "PJRT execution is unavailable in the offline xla stub; build with the real \
+         `xla` crate to compile and run AOT artifacts"
+            .to_string(),
+    ))
+}
+
+/// Element dtypes the runtime exchanges at model boundaries.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    Pred,
+    S8,
+    S32,
+    S64,
+    F32,
+    F64,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+enum Data {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl Data {
+    fn len(&self) -> usize {
+        match self {
+            Data::F32(v) => v.len(),
+            Data::I32(v) => v.len(),
+        }
+    }
+
+    fn ty(&self) -> ElementType {
+        match self {
+            Data::F32(_) => ElementType::F32,
+            Data::I32(_) => ElementType::S32,
+        }
+    }
+}
+
+/// Dtypes that can cross the host boundary (`f32`, `i32`).
+pub trait NativeType: Copy {
+    #[doc(hidden)]
+    fn wrap(v: Vec<Self>) -> Data;
+    #[doc(hidden)]
+    fn unwrap(d: &Data) -> Option<Vec<Self>>;
+}
+
+impl NativeType for f32 {
+    fn wrap(v: Vec<f32>) -> Data {
+        Data::F32(v)
+    }
+    fn unwrap(d: &Data) -> Option<Vec<f32>> {
+        match d {
+            Data::F32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn wrap(v: Vec<i32>) -> Data {
+        Data::I32(v)
+    }
+    fn unwrap(d: &Data) -> Option<Vec<i32>> {
+        match d {
+            Data::I32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+/// Dimensions of an array-shaped literal.
+#[derive(Debug, Clone)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    /// Dimension extents.
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// A host tensor literal (the real crate's device-transferable value).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Literal {
+    dims: Vec<i64>,
+    data: Data,
+}
+
+impl Literal {
+    /// Rank-1 literal from a typed slice.
+    pub fn vec1<T: NativeType>(v: &[T]) -> Literal {
+        Literal { dims: vec![v.len() as i64], data: T::wrap(v.to_vec()) }
+    }
+
+    /// Same data, new dimensions (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal, Error> {
+        let want: i64 = dims.iter().product();
+        if want as usize != self.data.len() {
+            return Err(Error::Shape(format!(
+                "cannot reshape {} elements to {dims:?}",
+                self.data.len()
+            )));
+        }
+        Ok(Literal { dims: dims.to_vec(), data: self.data.clone() })
+    }
+
+    /// Array shape (all stub literals are arrays, never tuples).
+    pub fn array_shape(&self) -> Result<ArrayShape, Error> {
+        Ok(ArrayShape { dims: self.dims.clone() })
+    }
+
+    /// Element dtype.
+    pub fn ty(&self) -> Result<ElementType, Error> {
+        Ok(self.data.ty())
+    }
+
+    /// Typed copy of the elements.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>, Error> {
+        T::unwrap(&self.data).ok_or(Error::UnexpectedElementType(self.data.ty() as i32))
+    }
+
+    /// Destructure a tuple literal. Stub literals are always arrays, and
+    /// tuple outputs only arise from device execution — unreachable here.
+    pub fn to_tuple(&self) -> Result<Vec<Literal>, Error> {
+        unavailable()
+    }
+}
+
+/// Stub PJRT client: constructible, but cannot compile.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    /// CPU client handle (host-only in the stub).
+    pub fn cpu() -> Result<PjRtClient, Error> {
+        Ok(PjRtClient)
+    }
+
+    /// Compilation needs the native PJRT runtime → [`Error::Unavailable`].
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        unavailable()
+    }
+}
+
+/// Parsed HLO module handle.
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    /// Validate the artifact exists; parsing happens at compile time in
+    /// the real crate, which the stub cannot reach anyway.
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto, Error> {
+        if Path::new(path).is_file() {
+            Ok(HloModuleProto)
+        } else {
+            Err(Error::Io(format!("no such HLO artifact: {path}")))
+        }
+    }
+}
+
+/// Computation wrapper.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    /// Wrap a parsed HLO module.
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Compiled executable (never actually constructed by the stub).
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    /// Device execution → [`Error::Unavailable`].
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        unavailable()
+    }
+}
+
+/// Device buffer (never actually constructed by the stub).
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    /// Host transfer → [`Error::Unavailable`].
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        unavailable()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_reshape_round_trip() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]).reshape(&[2, 2]).unwrap();
+        assert_eq!(l.array_shape().unwrap().dims(), &[2, 2]);
+        assert_eq!(l.ty().unwrap(), ElementType::F32);
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(l.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn reshape_checks_element_count() {
+        assert!(Literal::vec1(&[1i32, 2, 3]).reshape(&[2, 2]).is_err());
+    }
+
+    #[test]
+    fn device_path_reports_unavailable() {
+        let client = PjRtClient::cpu().unwrap();
+        let err = client.compile(&XlaComputation).unwrap_err();
+        assert!(err.to_string().contains("offline xla stub"), "{err}");
+    }
+
+    #[test]
+    fn missing_artifact_is_io_error() {
+        assert!(HloModuleProto::from_text_file("/nonexistent/model.hlo.txt").is_err());
+    }
+}

@@ -1,0 +1,544 @@
+//! Plan executors — interchangeable strategies for running a [`Plan`].
+//!
+//! * [`run_sequential`] — in-thread, stage-at-a-time (the tabular shape):
+//!   lowest overhead, items materialized between stages.
+//! * [`run_streaming`] — one thread per stage over bounded channels (the
+//!   video/serving shape): backpressure keeps memory flat and exposes the
+//!   slowest stage; batch nodes use the [`DynamicBatcher`] max-wait flush.
+//! * [`run_multi_instance`] — N replicated plan instances on worker
+//!   threads (§3.4 workload scaling), aggregated by the scaler with
+//!   fairness and latency percentiles.
+//!
+//! All three record the same per-stage [`Telemetry`], so every mode
+//! yields the Figure 1 breakdown, and all three produce identical
+//! deterministic metrics for a fixed seed — the executor-equivalence
+//! suite (`rust/tests/executor_equivalence.rs`) asserts exactly that.
+
+use super::batcher::DynamicBatcher;
+use super::plan::{DynItem, NodeKind, Plan, PlanOutput};
+use super::scaler::{InstanceReport, ScalingReport};
+use super::telemetry::{Report, Telemetry};
+use crate::parallel::channel::bounded;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Which executor runs a plan; selected via `RunConfig::exec` or `--exec`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ExecMode {
+    /// In-thread, stage-at-a-time.
+    #[default]
+    Sequential,
+    /// Thread-per-stage over bounded channels with backpressure.
+    Streaming,
+    /// N replicated plan instances (each sequential), scaler-aggregated.
+    MultiInstance(usize),
+}
+
+impl ExecMode {
+    /// Parse a CLI spelling: `sequential`, `streaming`, `multi`,
+    /// `multi:<n>`.
+    pub fn parse(s: &str) -> Option<ExecMode> {
+        match s {
+            "sequential" | "seq" => Some(ExecMode::Sequential),
+            "streaming" | "stream" => Some(ExecMode::Streaming),
+            _ => {
+                let rest = s.strip_prefix("multi")?;
+                if rest.is_empty() {
+                    Some(ExecMode::MultiInstance(2))
+                } else {
+                    rest.strip_prefix(':')?
+                        .parse()
+                        .ok()
+                        .filter(|&n| n >= 1)
+                        .map(ExecMode::MultiInstance)
+                }
+            }
+        }
+    }
+}
+
+impl std::fmt::Display for ExecMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ExecMode::Sequential => f.write_str("sequential"),
+            ExecMode::Streaming => f.write_str("streaming"),
+            ExecMode::MultiInstance(n) => write!(f, "multi:{n}"),
+        }
+    }
+}
+
+/// Bound on every inter-stage queue in streaming mode.
+pub const DEFAULT_QUEUE_CAP: usize = 8;
+
+/// What an executor returns: telemetry, the plan's output, and (for
+/// multi-instance) the scaling aggregate.
+pub struct ExecOutcome {
+    /// Per-stage timing (Figure 1 source). Multi-instance merges stage
+    /// busy time and item counts across instances.
+    pub report: Report,
+    /// The plan's deterministic metrics and item count. Multi-instance
+    /// reports instance 0's metrics with `items` summed over instances.
+    pub output: PlanOutput,
+    /// Present only for multi-instance execution.
+    pub scaling: Option<ScalingReport>,
+}
+
+/// Dispatch a plan-builder through the executor selected by `mode`.
+/// `make_plan` is invoked once per instance (instance 0 for the
+/// single-instance modes) so every replica gets fresh stage closures.
+pub fn execute(
+    mode: ExecMode,
+    make_plan: impl Fn(usize) -> anyhow::Result<Plan> + Sync,
+) -> anyhow::Result<ExecOutcome> {
+    match mode {
+        ExecMode::Sequential => run_sequential(make_plan(0)?),
+        ExecMode::Streaming => run_streaming(make_plan(0)?, DEFAULT_QUEUE_CAP),
+        ExecMode::MultiInstance(n) => run_multi_instance(n, make_plan),
+    }
+}
+
+/// Run a plan in the calling thread, one stage at a time over the whole
+/// item stream. Batch nodes flush on size alone (every item is already
+/// available, so the max-wait timer is irrelevant by construction).
+pub fn run_sequential(plan: Plan) -> anyhow::Result<ExecOutcome> {
+    let telemetry = Telemetry::new();
+    let Plan { source: (src_name, src_cat, mut produce), nodes, sink, finish, .. } = plan;
+    let (sink_name, sink_cat, mut sink_fn) = sink;
+
+    let handle = telemetry.stage(&src_name, src_cat);
+    let mut items: Vec<DynItem> = Vec::new();
+    let t0 = Instant::now();
+    let mut produced = 0usize;
+    produce(&mut |item| {
+        produced += 1;
+        items.push(item);
+    });
+    handle.record(t0.elapsed(), produced);
+
+    for node in nodes {
+        let handle = telemetry.stage(&node.name, node.category);
+        match node.kind {
+            NodeKind::FlatMap(mut f) => {
+                let mut next = Vec::with_capacity(items.len());
+                for item in items {
+                    let t0 = Instant::now();
+                    let outs = f(item)?;
+                    handle.record(t0.elapsed(), 1);
+                    next.extend(outs);
+                }
+                items = next;
+            }
+            NodeKind::Batch(cfg, mut group) => {
+                let max = cfg.max_batch.max(1);
+                let mut next = Vec::new();
+                let mut iter = items.into_iter().peekable();
+                while iter.peek().is_some() {
+                    let batch: Vec<DynItem> = iter.by_ref().take(max).collect();
+                    let t0 = Instant::now();
+                    next.push(group(batch)?);
+                    handle.record(t0.elapsed(), 1);
+                }
+                items = next;
+            }
+        }
+    }
+
+    let handle = telemetry.stage(&sink_name, sink_cat);
+    for item in items {
+        let t0 = Instant::now();
+        sink_fn(item)?;
+        handle.record(t0.elapsed(), 1);
+    }
+    let output = finish()?;
+    Ok(ExecOutcome { report: telemetry.report(), output, scaling: None })
+}
+
+/// Run a plan with one thread per stage connected by bounded channels, so
+/// a slow stage backpressures everything upstream. The sink folds on the
+/// calling thread. Source busy time subtracts send-blocking (that is the
+/// downstream stage's cost, not production work — counting it would smear
+/// the slowest stage over the source in the Figure 1 breakdown).
+pub fn run_streaming(plan: Plan, queue_cap: usize) -> anyhow::Result<ExecOutcome> {
+    let telemetry = Telemetry::new();
+    let cap = queue_cap.max(1);
+    let first_err: Arc<Mutex<Option<anyhow::Error>>> = Arc::new(Mutex::new(None));
+    let Plan { source: (src_name, src_cat, mut produce), nodes, sink, finish, .. } = plan;
+    let (sink_name, sink_cat, mut sink_fn) = sink;
+    let mut workers = Vec::with_capacity(nodes.len() + 1);
+
+    let handle = telemetry.stage(&src_name, src_cat);
+    let (tx, mut tail) = bounded::<DynItem>(cap);
+    workers.push(
+        std::thread::Builder::new()
+            .name(format!("plan-src-{src_name}"))
+            .spawn(move || {
+                let t0 = Instant::now();
+                let mut blocked = std::time::Duration::ZERO;
+                let mut count = 0usize;
+                produce(&mut |item| {
+                    count += 1;
+                    let s0 = Instant::now();
+                    let _ = tx.send(item);
+                    blocked += s0.elapsed();
+                });
+                handle.record(t0.elapsed().saturating_sub(blocked), count);
+            })
+            .expect("spawn plan source"),
+    );
+
+    for node in nodes {
+        let handle = telemetry.stage(&node.name, node.category);
+        let (tx, rx) = bounded::<DynItem>(cap);
+        let upstream = tail;
+        tail = rx;
+        let errs = Arc::clone(&first_err);
+        let worker = match node.kind {
+            NodeKind::FlatMap(mut f) => std::thread::Builder::new()
+                .name(format!("plan-stage-{}", node.name))
+                .spawn(move || {
+                    while let Ok(item) = upstream.recv() {
+                        let t0 = Instant::now();
+                        match f(item) {
+                            Ok(outs) => {
+                                handle.record(t0.elapsed(), 1);
+                                for out in outs {
+                                    if tx.send(out).is_err() {
+                                        return; // downstream gone
+                                    }
+                                }
+                            }
+                            Err(e) => {
+                                errs.lock().unwrap().get_or_insert(e);
+                                return;
+                            }
+                        }
+                    }
+                })
+                .expect("spawn plan stage"),
+            NodeKind::Batch(cfg, mut group) => std::thread::Builder::new()
+                .name(format!("plan-batch-{}", node.name))
+                .spawn(move || {
+                    let mut batcher = DynamicBatcher::new(upstream, cfg);
+                    while let Some(batch) = batcher.next_batch() {
+                        let t0 = Instant::now();
+                        match group(batch) {
+                            Ok(item) => {
+                                handle.record(t0.elapsed(), 1);
+                                if tx.send(item).is_err() {
+                                    return;
+                                }
+                            }
+                            Err(e) => {
+                                errs.lock().unwrap().get_or_insert(e);
+                                return;
+                            }
+                        }
+                    }
+                })
+                .expect("spawn plan batch"),
+        };
+        workers.push(worker);
+    }
+
+    let handle = telemetry.stage(&sink_name, sink_cat);
+    while let Ok(item) = tail.recv() {
+        let t0 = Instant::now();
+        if let Err(e) = sink_fn(item) {
+            first_err.lock().unwrap().get_or_insert(e);
+            break;
+        }
+        handle.record(t0.elapsed(), 1);
+    }
+    // Dropping the tail receiver makes upstream sends fail fast if we
+    // broke out early; workers then unwind without deadlocking.
+    drop(tail);
+    let mut panicked: Option<String> = None;
+    for worker in workers {
+        let name = worker.thread().name().unwrap_or("plan-worker").to_string();
+        if let Err(payload) = worker.join() {
+            let msg = payload
+                .downcast_ref::<&str>()
+                .map(|s| s.to_string())
+                .or_else(|| payload.downcast_ref::<String>().cloned())
+                .unwrap_or_else(|| "non-string panic payload".to_string());
+            panicked.get_or_insert(format!("{name} panicked: {msg}"));
+        }
+    }
+    if let Some(e) = first_err.lock().unwrap().take() {
+        return Err(e);
+    }
+    // A stage panic must surface as loudly as it would under the
+    // sequential executor, not as partial metrics.
+    if let Some(msg) = panicked {
+        return Err(anyhow::anyhow!("streaming stage failed: {msg}"));
+    }
+    let output = finish()?;
+    Ok(ExecOutcome { report: telemetry.report(), output, scaling: None })
+}
+
+/// Run `n` replicated instances of the plan on worker threads (each
+/// instance sequential — the paper's parallel-streams shape), and
+/// aggregate throughput, fairness, and latency percentiles. The merged
+/// report sums per-stage busy time and items across instances.
+pub fn run_multi_instance(
+    n: usize,
+    make_plan: impl Fn(usize) -> anyhow::Result<Plan> + Sync,
+) -> anyhow::Result<ExecOutcome> {
+    anyhow::ensure!(n >= 1, "multi-instance execution needs at least one instance");
+    let t0 = Instant::now();
+    let mut results: Vec<(anyhow::Result<ExecOutcome>, std::time::Duration)> =
+        Vec::with_capacity(n);
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..n)
+            .map(|i| {
+                let make_plan = &make_plan;
+                scope.spawn(move || {
+                    // Plan construction (data generation, model warmup) is
+                    // explicitly outside the timed run — the pipelines
+                    // measure steady state, and the scaling metrics must
+                    // match that.
+                    let plan = make_plan(i);
+                    let it0 = Instant::now();
+                    let res = plan.and_then(run_sequential);
+                    (res, it0.elapsed())
+                })
+            })
+            .collect();
+        for h in handles {
+            results.push(h.join().expect("plan instance panicked"));
+        }
+    });
+    let wall = t0.elapsed();
+
+    let mut instances = Vec::with_capacity(n);
+    let mut reports: Vec<Report> = Vec::with_capacity(n);
+    let mut first_output: Option<PlanOutput> = None;
+    for (i, (res, elapsed)) in results.into_iter().enumerate() {
+        let outcome = res?;
+        instances.push(InstanceReport {
+            instance: i,
+            items: outcome.output.items,
+            elapsed,
+            latencies: Vec::new(),
+        });
+        reports.push(outcome.report);
+        if first_output.is_none() {
+            first_output = Some(outcome.output);
+        }
+    }
+    let scaling = ScalingReport { instances, wall };
+    let mut output = first_output.expect("n >= 1 guarantees one outcome");
+    output.items = scaling.total_items();
+    Ok(ExecOutcome { report: merge_reports(&reports), output, scaling: Some(scaling) })
+}
+
+fn merge_reports(reports: &[Report]) -> Report {
+    let mut merged = reports[0].clone();
+    for r in &reports[1..] {
+        for (m, s) in merged.stages.iter_mut().zip(&r.stages) {
+            debug_assert_eq!(m.name, s.name, "instances must share a stage structure");
+            m.busy += s.busy;
+            m.items += s.items;
+        }
+    }
+    merged
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::batcher::BatcherConfig;
+    use crate::coordinator::telemetry::Category;
+    use std::collections::BTreeMap;
+    use std::time::Duration;
+
+    /// source 0..n → double → drop odd halves → collect; returns sum.
+    fn arithmetic_plan(n: i32) -> Plan {
+        Plan::source("t", "gen", Category::Pre, move |emit| {
+            for i in 0..n {
+                emit(i);
+            }
+        })
+        .map("double", Category::Pre, |x: i32| Ok(x * 2))
+        .flat_map("keep_quarters", Category::Ai, |x: i32| {
+            Ok(if x % 4 == 0 { vec![x] } else { vec![] })
+        })
+        .sink(
+            "collect",
+            Category::Post,
+            Vec::new(),
+            |v: &mut Vec<i32>, x| {
+                v.push(x);
+                Ok(())
+            },
+            |v| {
+                let mut metrics = BTreeMap::new();
+                metrics.insert("sum".to_string(), v.iter().sum::<i32>() as f64);
+                Ok(PlanOutput { metrics, items: v.len() })
+            },
+        )
+    }
+
+    fn batch_len_plan(n: u32, max_batch: usize, max_wait_ms: u64, gap_ms: u64) -> Plan {
+        Plan::source("b", "gen", Category::Pre, move |emit| {
+            for i in 0..n {
+                if gap_ms > 0 && i > 0 {
+                    std::thread::sleep(Duration::from_millis(gap_ms));
+                }
+                emit(i);
+            }
+        })
+        .batch(
+            "batcher",
+            Category::Pre,
+            BatcherConfig { max_batch, max_wait: Duration::from_millis(max_wait_ms) },
+        )
+        .map("len", Category::Ai, |b: Vec<u32>| Ok(b.len()))
+        .sink(
+            "collect",
+            Category::Post,
+            Vec::new(),
+            |v: &mut Vec<usize>, l| {
+                v.push(l);
+                Ok(())
+            },
+            |v| {
+                let mut metrics = BTreeMap::new();
+                metrics.insert("batches".to_string(), v.len() as f64);
+                Ok(PlanOutput { metrics, items: v.iter().sum() })
+            },
+        )
+    }
+
+    #[test]
+    fn sequential_and_streaming_agree() {
+        let seq = run_sequential(arithmetic_plan(100)).unwrap();
+        let stream = run_streaming(arithmetic_plan(100), 4).unwrap();
+        assert_eq!(seq.output.items, stream.output.items);
+        assert_eq!(seq.output.metrics, stream.output.metrics);
+        assert_eq!(seq.report.stages.len(), 4);
+        assert_eq!(stream.report.stages.len(), 4);
+        // Same stage structure in the same order.
+        for (a, b) in seq.report.stages.iter().zip(&stream.report.stages) {
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.items, b.items);
+        }
+    }
+
+    #[test]
+    fn multi_instance_of_one_matches_sequential() {
+        let seq = run_sequential(arithmetic_plan(40)).unwrap();
+        let multi = run_multi_instance(1, |_| Ok(arithmetic_plan(40))).unwrap();
+        assert_eq!(seq.output.items, multi.output.items);
+        assert_eq!(seq.output.metrics, multi.output.metrics);
+        let scaling = multi.scaling.unwrap();
+        assert_eq!(scaling.instances.len(), 1);
+        assert_eq!(scaling.total_items(), seq.output.items);
+    }
+
+    #[test]
+    fn multi_instance_aggregates() {
+        let multi = run_multi_instance(3, |_| Ok(arithmetic_plan(40))).unwrap();
+        let seq = run_sequential(arithmetic_plan(40)).unwrap();
+        assert_eq!(multi.output.items, 3 * seq.output.items);
+        let scaling = multi.scaling.unwrap();
+        assert_eq!(scaling.instances.len(), 3);
+        assert!((scaling.fairness() - 1.0).abs() < 1e-9);
+        assert!(scaling.latency_p50().is_some());
+        // Merged report sums item counts across instances.
+        assert_eq!(multi.report.stages[0].items, 3 * seq.report.stages[0].items);
+    }
+
+    #[test]
+    fn sequential_batch_flushes_on_size() {
+        // 20 items, max_batch 8 → batches of 8/8/4 regardless of max_wait.
+        let out = run_sequential(batch_len_plan(20, 8, 1, 0)).unwrap();
+        assert_eq!(out.output.items, 20);
+        assert_eq!(out.output.metrics["batches"], 3.0);
+    }
+
+    #[test]
+    fn streaming_batch_flushes_on_timeout() {
+        // Items arrive 30ms apart with a 5ms max wait → every batch
+        // flushes by timeout with a single item.
+        let out = run_streaming(batch_len_plan(3, 8, 5, 30), 4).unwrap();
+        assert_eq!(out.output.items, 3);
+        assert_eq!(out.output.metrics["batches"], 3.0);
+    }
+
+    #[test]
+    fn streaming_batch_fills_on_fast_source() {
+        // A hot queue with a generous wait fills batches to max_batch.
+        let out = run_streaming(batch_len_plan(16, 4, 250, 0), 32).unwrap();
+        assert_eq!(out.output.items, 16);
+        assert_eq!(out.output.metrics["batches"], 4.0);
+    }
+
+    #[test]
+    fn errors_propagate_from_both_executors() {
+        let failing = || {
+            Plan::source("f", "gen", Category::Pre, |emit| emit(1i32))
+                .map("boom", Category::Ai, |_x: i32| {
+                    Err::<i32, _>(anyhow::anyhow!("boom"))
+                })
+                .sink(
+                    "out",
+                    Category::Post,
+                    (),
+                    |_s: &mut (), _x: i32| Ok(()),
+                    |_| Ok(PlanOutput { metrics: BTreeMap::new(), items: 0 }),
+                )
+        };
+        assert!(run_sequential(failing()).unwrap_err().to_string().contains("boom"));
+        assert!(run_streaming(failing(), 2).unwrap_err().to_string().contains("boom"));
+        assert!(run_multi_instance(2, |_| Ok(failing())).is_err());
+    }
+
+    #[test]
+    fn streaming_surfaces_stage_panics() {
+        // A stage panic must fail the run like it would sequentially,
+        // never return Ok with partial metrics.
+        let plan = Plan::source("p", "gen", Category::Pre, |emit| emit(1i32))
+            .map("kaboom", Category::Ai, |_x: i32| -> anyhow::Result<i32> {
+                panic!("kaboom payload")
+            })
+            .sink(
+                "out",
+                Category::Post,
+                (),
+                |_s: &mut (), _x: i32| Ok(()),
+                |_| Ok(PlanOutput { metrics: BTreeMap::new(), items: 0 }),
+            );
+        let err = run_streaming(plan, 2).unwrap_err().to_string();
+        assert!(err.contains("panicked"), "{err}");
+        assert!(err.contains("kaboom payload"), "{err}");
+    }
+
+    #[test]
+    fn exec_mode_parses() {
+        assert_eq!(ExecMode::parse("sequential"), Some(ExecMode::Sequential));
+        assert_eq!(ExecMode::parse("streaming"), Some(ExecMode::Streaming));
+        assert_eq!(ExecMode::parse("multi"), Some(ExecMode::MultiInstance(2)));
+        assert_eq!(ExecMode::parse("multi:6"), Some(ExecMode::MultiInstance(6)));
+        assert_eq!(ExecMode::parse("multi:0"), None);
+        assert_eq!(ExecMode::parse("warp"), None);
+        assert_eq!(ExecMode::MultiInstance(4).to_string(), "multi:4");
+    }
+
+    #[test]
+    fn empty_source_still_finishes() {
+        let plan = Plan::source("e", "none", Category::Pre, |_emit: &mut dyn FnMut(i32)| {})
+            .sink(
+                "out",
+                Category::Post,
+                0usize,
+                |n: &mut usize, _x: i32| {
+                    *n += 1;
+                    Ok(())
+                },
+                |n| Ok(PlanOutput { metrics: BTreeMap::new(), items: n }),
+            );
+        let out = run_sequential(plan).unwrap();
+        assert_eq!(out.output.items, 0);
+    }
+}

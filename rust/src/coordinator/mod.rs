@@ -1,28 +1,41 @@
 //! Pipeline coordinator — the L3 orchestration layer.
 //!
 //! The paper's eight workloads decompose into stages (decode → preprocess
-//! → inference → postprocess → upload). This module provides:
+//! → inference → postprocess → upload). Since the plan/executor split,
+//! the layer has two halves:
 //!
-//! * [`telemetry`] — per-stage, per-category timing: the data behind
-//!   Figure 1 ("percent time in pre/postprocessing vs AI").
-//! * [`sequential`] — a batch pipeline runner (the tabular workloads):
-//!   named, categorized stages executed in order with timing.
-//! * [`stream`] — a streaming runner (the video/serving workloads): one
-//!   thread per stage connected by bounded channels → backpressure, with
-//!   the same telemetry.
-//! * [`batcher`] — dynamic batching (max batch size / max wait) used by
-//!   the DLSA serving path.
-//! * [`scaler`] — multi-instance execution (§3.4 workload scaling):
-//!   replicates a pipeline instance N times and aggregates throughput.
+//! **What to run** — [`plan`]: a pipeline is declared once as a typed
+//! graph of named, [`Category`]-tagged stage nodes (source / map /
+//! flat-map / batch / sink). The plan is data; it encodes no execution
+//! strategy.
+//!
+//! **How to run it** — [`exec`]: interchangeable executors selected by
+//! [`ExecMode`]:
+//!
+//! * `Sequential` — in-thread, stage-at-a-time (the tabular shape);
+//! * `Streaming` — one thread per stage over bounded channels with
+//!   backpressure (the video/serving shape);
+//! * `MultiInstance(n)` — n replicated plan instances aggregated by the
+//!   scaler (§3.4 workload scaling).
+//!
+//! Any pipeline runs under any executor (`repro run <p> --exec …`), and
+//! cross-cutting optimizations — dynamic batching ([`batcher`], a plan
+//! node), telemetry ([`telemetry`], recorded identically by every
+//! executor, the data behind Figure 1), instance scaling ([`scaler`]) —
+//! are implemented once against the IR instead of per workload. Future
+//! scaling work (async executor, sharded plans, request routing) plugs in
+//! as additional executors over the same plans.
 
 pub mod telemetry;
-pub mod sequential;
-pub mod stream;
+pub mod plan;
+pub mod exec;
 pub mod batcher;
 pub mod scaler;
 
 pub use batcher::{BatcherConfig, DynamicBatcher};
-pub use scaler::{run_instances, ScalingReport};
-pub use sequential::SequentialPipeline;
-pub use stream::StreamPipeline;
+pub use exec::{execute, run_multi_instance, run_sequential, run_streaming};
+pub use exec::{ExecMode, ExecOutcome};
+pub use plan::{Plan, PlanBuilder, PlanOutput};
+pub use scaler::{run_instances, run_instances_timed, LatencyRecorder};
+pub use scaler::{InstanceReport, ScalingReport};
 pub use telemetry::{Category, Report, StageReport, Telemetry};

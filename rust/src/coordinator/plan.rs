@@ -1,0 +1,318 @@
+//! Plan IR — the declarative pipeline representation every workload
+//! compiles down to.
+//!
+//! A [`Plan`] is a linear graph of named, [`Category`]-tagged stage nodes:
+//! one **source** (produces items), any number of **map / flat-map**
+//! transforms (1→1 / 1→0..n, so filters and expanders fit), optional
+//! **batch** nodes (group items under a [`BatcherConfig`] policy — the
+//! DLSA dynamic-batching serving path), and one **sink** that folds items
+//! into a state from which [`PlanOutput`] metrics are computed.
+//!
+//! Plans say *what* the pipeline computes; the interchangeable executors
+//! in [`super::exec`] decide *how*: in-thread sequential, thread-per-stage
+//! streaming over bounded channels, or N replicated instances (§3.4).
+//! Because the plan is data, cross-cutting optimizations (batching,
+//! scaling, telemetry, future sharding/async) are implemented once in an
+//! executor instead of being re-wired into every workload — the tf.data /
+//! BigDL split between pipeline definition and execution strategy.
+//!
+//! Typing: the builder ([`PlanBuilder`]) is statically typed stage to
+//! stage; items are type-erased to `Box<dyn Any + Send>` internally so
+//! heterogeneous plans share one executor implementation. A mismatch
+//! (impossible via the typed builder) surfaces as a descriptive error,
+//! not UB. A plan's closures are single-use: executors consume the plan,
+//! and replication (multi-instance) re-invokes the plan-builder function.
+
+use super::batcher::BatcherConfig;
+use super::telemetry::Category;
+use std::any::Any;
+use std::collections::BTreeMap;
+use std::marker::PhantomData;
+use std::sync::{Arc, Mutex};
+
+/// A type-erased item flowing between stages.
+pub type DynItem = Box<dyn Any + Send>;
+
+pub(crate) type SourceFn = Box<dyn FnMut(&mut dyn FnMut(DynItem)) + Send>;
+pub(crate) type StageFn = Box<dyn FnMut(DynItem) -> anyhow::Result<Vec<DynItem>> + Send>;
+pub(crate) type GroupFn = Box<dyn FnMut(Vec<DynItem>) -> anyhow::Result<DynItem> + Send>;
+pub(crate) type SinkFn = Box<dyn FnMut(DynItem) -> anyhow::Result<()> + Send>;
+pub(crate) type FinishFn = Box<dyn FnOnce() -> anyhow::Result<PlanOutput> + Send>;
+
+/// What a finished plan reports: deterministic metrics + item count.
+/// (Per-stage timing comes from the executor's telemetry, not the plan.)
+#[derive(Debug, Clone)]
+pub struct PlanOutput {
+    /// Named quality/throughput metrics (auc, r2, agreement, …).
+    pub metrics: BTreeMap<String, f64>,
+    /// Items processed end-to-end (rows, docs, frames, …).
+    pub items: usize,
+}
+
+/// How a transform node rewrites the item stream.
+pub(crate) enum NodeKind {
+    /// 1 → 0..n items.
+    FlatMap(StageFn),
+    /// Group items into batches under a max-size / max-wait policy; the
+    /// grouped batch flows downstream as a single item.
+    Batch(BatcherConfig, GroupFn),
+}
+
+/// One transform node of a plan.
+pub(crate) struct Node {
+    pub(crate) name: String,
+    pub(crate) category: Category,
+    pub(crate) kind: NodeKind,
+}
+
+/// A fully-built pipeline plan, ready for one execution.
+pub struct Plan {
+    pub(crate) name: String,
+    pub(crate) source: (String, Category, SourceFn),
+    pub(crate) nodes: Vec<Node>,
+    pub(crate) sink: (String, Category, SinkFn),
+    pub(crate) finish: FinishFn,
+}
+
+impl Plan {
+    /// Start a plan from a source closure that pushes typed items through
+    /// `emit` and returns when the stream is exhausted.
+    pub fn source<T, F>(
+        pipeline: &str,
+        stage: &str,
+        category: Category,
+        mut produce: F,
+    ) -> PlanBuilder<T>
+    where
+        T: Send + 'static,
+        F: FnMut(&mut dyn FnMut(T)) + Send + 'static,
+    {
+        let erased: SourceFn = Box::new(move |emit: &mut dyn FnMut(DynItem)| {
+            let mut typed = |t: T| emit(Box::new(t) as DynItem);
+            produce(&mut typed);
+        });
+        PlanBuilder {
+            name: pipeline.to_string(),
+            source: (stage.to_string(), category, erased),
+            nodes: Vec::new(),
+            _marker: PhantomData,
+        }
+    }
+
+    /// Pipeline name.
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Stage names in execution order (source, transforms, sink).
+    pub fn stage_names(&self) -> Vec<String> {
+        let mut names = vec![self.source.0.clone()];
+        names.extend(self.nodes.iter().map(|n| n.name.clone()));
+        names.push(self.sink.0.clone());
+        names
+    }
+
+    /// Number of stages including source and sink.
+    pub fn stage_count(&self) -> usize {
+        self.nodes.len() + 2
+    }
+}
+
+fn downcast<T: 'static>(item: DynItem, stage: &str) -> anyhow::Result<T> {
+    match item.downcast::<T>() {
+        Ok(boxed) => Ok(*boxed),
+        Err(_) => Err(anyhow::anyhow!(
+            "plan type mismatch at stage `{stage}`: expected {}",
+            std::any::type_name::<T>()
+        )),
+    }
+}
+
+/// Typed builder for a [`Plan`]; `T` is the item type flowing out of the
+/// last appended stage.
+pub struct PlanBuilder<T> {
+    name: String,
+    source: (String, Category, SourceFn),
+    nodes: Vec<Node>,
+    _marker: PhantomData<fn() -> T>,
+}
+
+impl<T: Send + 'static> PlanBuilder<T> {
+    fn push_node<O: Send + 'static>(mut self, node: Node) -> PlanBuilder<O> {
+        self.nodes.push(node);
+        PlanBuilder {
+            name: self.name,
+            source: self.source,
+            nodes: self.nodes,
+            _marker: PhantomData,
+        }
+    }
+
+    /// Append a 1→1 transform.
+    pub fn map<O, F>(self, name: &str, category: Category, mut f: F) -> PlanBuilder<O>
+    where
+        O: Send + 'static,
+        F: FnMut(T) -> anyhow::Result<O> + Send + 'static,
+    {
+        let stage = name.to_string();
+        let erased: StageFn = Box::new(move |item| {
+            let t = downcast::<T>(item, &stage)?;
+            Ok(vec![Box::new(f(t)?) as DynItem])
+        });
+        self.push_node(Node {
+            name: name.to_string(),
+            category,
+            kind: NodeKind::FlatMap(erased),
+        })
+    }
+
+    /// Append a 1→0..n transform (filters, expanders, batch unpackers).
+    pub fn flat_map<O, F>(self, name: &str, category: Category, mut f: F) -> PlanBuilder<O>
+    where
+        O: Send + 'static,
+        F: FnMut(T) -> anyhow::Result<Vec<O>> + Send + 'static,
+    {
+        let stage = name.to_string();
+        let erased: StageFn = Box::new(move |item| {
+            let t = downcast::<T>(item, &stage)?;
+            Ok(f(t)?.into_iter().map(|o| Box::new(o) as DynItem).collect())
+        });
+        self.push_node(Node {
+            name: name.to_string(),
+            category,
+            kind: NodeKind::FlatMap(erased),
+        })
+    }
+
+    /// Append a dynamic-batching node: downstream stages receive
+    /// `Vec<T>` batches. Under the streaming executor batches flush on
+    /// `max_batch` items *or* `max_wait` elapsed (the serving trade-off);
+    /// under the sequential executor all items are already available, so
+    /// batches flush on size alone.
+    pub fn batch(self, name: &str, category: Category, cfg: BatcherConfig) -> PlanBuilder<Vec<T>> {
+        let stage = name.to_string();
+        let group: GroupFn = Box::new(move |items: Vec<DynItem>| {
+            let mut out: Vec<T> = Vec::with_capacity(items.len());
+            for item in items {
+                out.push(downcast::<T>(item, &stage)?);
+            }
+            Ok(Box::new(out) as DynItem)
+        });
+        self.push_node(Node {
+            name: name.to_string(),
+            category,
+            kind: NodeKind::Batch(cfg, group),
+        })
+    }
+
+    /// Terminate the plan with a sink fold plus a finish step that turns
+    /// the folded state into the plan's [`PlanOutput`]. The fold runs per
+    /// item inside the timed sink stage; `finish` runs once, untimed,
+    /// after the stream drains (offline audits belong there).
+    pub fn sink<S, F, G>(
+        self,
+        name: &str,
+        category: Category,
+        state: S,
+        mut fold: F,
+        finish: G,
+    ) -> Plan
+    where
+        S: Send + 'static,
+        F: FnMut(&mut S, T) -> anyhow::Result<()> + Send + 'static,
+        G: FnOnce(S) -> anyhow::Result<PlanOutput> + Send + 'static,
+    {
+        let stage = name.to_string();
+        let cell = Arc::new(Mutex::new(Some(state)));
+        let fold_cell = Arc::clone(&cell);
+        let sink_fn: SinkFn = Box::new(move |item| {
+            let t = downcast::<T>(item, &stage)?;
+            let mut guard = fold_cell.lock().unwrap();
+            let s = guard.as_mut().expect("sink state taken before the run finished");
+            fold(s, t)
+        });
+        let finish_fn: FinishFn = Box::new(move || {
+            let s = cell.lock().unwrap().take().expect("plan finish ran twice");
+            finish(s)
+        });
+        Plan {
+            name: self.name,
+            source: self.source,
+            nodes: self.nodes,
+            sink: (name.to_string(), category, sink_fn),
+            finish: finish_fn,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn count_plan() -> Plan {
+        Plan::source("test", "gen", Category::Pre, |emit| {
+            for i in 0..10 {
+                emit(i);
+            }
+        })
+        .map("double", Category::Pre, |x: i32| Ok(x * 2))
+        .flat_map("keep_even_quarters", Category::Ai, |x: i32| {
+            Ok(if x % 4 == 0 { vec![x] } else { vec![] })
+        })
+        .sink(
+            "collect",
+            Category::Post,
+            Vec::new(),
+            |v: &mut Vec<i32>, x| {
+                v.push(x);
+                Ok(())
+            },
+            |v| {
+                let mut metrics = BTreeMap::new();
+                metrics.insert("sum".to_string(), v.iter().sum::<i32>() as f64);
+                Ok(PlanOutput { metrics, items: v.len() })
+            },
+        )
+    }
+
+    #[test]
+    fn stage_names_in_order() {
+        let p = count_plan();
+        assert_eq!(p.name(), "test");
+        assert_eq!(p.stage_count(), 4);
+        assert_eq!(
+            p.stage_names(),
+            vec!["gen", "double", "keep_even_quarters", "collect"]
+        );
+    }
+
+    #[test]
+    fn batch_node_registers() {
+        let p = Plan::source("b", "src", Category::Pre, |emit| emit(1u32))
+            .batch(
+                "batcher",
+                Category::Pre,
+                BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(1) },
+            )
+            .sink(
+                "out",
+                Category::Post,
+                0usize,
+                |n: &mut usize, b: Vec<u32>| {
+                    *n += b.len();
+                    Ok(())
+                },
+                |n| Ok(PlanOutput { metrics: BTreeMap::new(), items: n }),
+            );
+        assert_eq!(p.stage_names(), vec!["src", "batcher", "out"]);
+    }
+
+    #[test]
+    fn downcast_mismatch_is_descriptive() {
+        let err = downcast::<String>(Box::new(5i32), "stagex").unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("stagex"), "{msg}");
+        assert!(msg.contains("String"), "{msg}");
+    }
+}

@@ -4,13 +4,17 @@
 //! be executed on a single Xeon server" — anomaly detection runs 10 camera
 //! streams, DIEN 40 instances/socket, DLSA 5–10 streams. This module
 //! replicates a pipeline-instance closure N times on worker threads and
-//! aggregates per-instance and total throughput.
+//! aggregates per-instance and total throughput, fairness, and latency
+//! percentiles. The plan layer's multi-instance executor
+//! ([`crate::coordinator::exec::run_multi_instance`]) builds on the same
+//! report types.
 //!
 //! Sandbox note (DESIGN.md §2): with one hardware core the aggregate
 //! throughput stays roughly flat as instances scale (time-slicing), so the
-//! scaling bench reports *fairness* (per-instance share) and the
-//! coordination overhead — the quantities that must stay healthy for the
-//! paper's claim to hold on many-core hardware.
+//! scaling bench reports *fairness* (per-instance share) and p50/p95
+//! latency — the quantities that must stay healthy for the paper's claim
+//! to hold on many-core hardware. Throughput alone can look "fair" while
+//! one instance starves; the latency percentiles make that visible.
 
 use std::time::{Duration, Instant};
 
@@ -20,6 +24,9 @@ pub struct InstanceReport {
     pub instance: usize,
     pub items: usize,
     pub elapsed: Duration,
+    /// Per-item (or per-batch) latency samples recorded by the instance;
+    /// empty when the workload does not record them.
+    pub latencies: Vec<Duration>,
 }
 
 impl InstanceReport {
@@ -27,6 +34,22 @@ impl InstanceReport {
     pub fn throughput(&self) -> f64 {
         self.items as f64 / self.elapsed.as_secs_f64().max(1e-12)
     }
+
+    /// Latency percentile (`q` in 0..=1) over this instance's samples;
+    /// `None` when no samples were recorded.
+    pub fn latency_percentile(&self, q: f64) -> Option<Duration> {
+        let mut sorted = self.latencies.clone();
+        sorted.sort_unstable();
+        percentile_sorted(&sorted, q)
+    }
+}
+
+fn percentile_sorted(sorted: &[Duration], q: f64) -> Option<Duration> {
+    if sorted.is_empty() {
+        return None;
+    }
+    let idx = ((sorted.len() - 1) as f64 * q.clamp(0.0, 1.0)).round() as usize;
+    Some(sorted[idx])
 }
 
 /// Aggregate over all instances.
@@ -57,13 +80,89 @@ impl ScalingReport {
             min as f64 / max as f64
         }
     }
+
+    /// All instances' latency samples pooled and sorted; falls back to
+    /// the per-instance wall times when no samples were recorded
+    /// (coarse, but monotone with instance skew).
+    fn pooled_sorted(&self) -> Vec<Duration> {
+        let mut pooled: Vec<Duration> =
+            self.instances.iter().flat_map(|i| i.latencies.iter().copied()).collect();
+        if pooled.is_empty() {
+            pooled = self.instances.iter().map(|i| i.elapsed).collect();
+        }
+        pooled.sort_unstable();
+        pooled
+    }
+
+    /// Latency percentile (`q` in 0..=1) pooled across every instance's
+    /// recorded samples. Use [`Self::latency_percentiles`] when reading
+    /// several quantiles — it pools and sorts once.
+    pub fn latency_percentile(&self, q: f64) -> Option<Duration> {
+        percentile_sorted(&self.pooled_sorted(), q)
+    }
+
+    /// Several pooled latency percentiles from a single sort.
+    pub fn latency_percentiles(&self, qs: &[f64]) -> Vec<Option<Duration>> {
+        let sorted = self.pooled_sorted();
+        qs.iter().map(|&q| percentile_sorted(&sorted, q)).collect()
+    }
+
+    /// Median latency.
+    pub fn latency_p50(&self) -> Option<Duration> {
+        self.latency_percentile(0.50)
+    }
+
+    /// Tail latency.
+    pub fn latency_p95(&self) -> Option<Duration> {
+        self.latency_percentile(0.95)
+    }
+}
+
+/// Latency sample collector handed to each instance by
+/// [`run_instances_timed`].
+#[derive(Debug, Default)]
+pub struct LatencyRecorder {
+    samples: Vec<Duration>,
+}
+
+impl LatencyRecorder {
+    /// Record one latency sample.
+    pub fn record(&mut self, d: Duration) {
+        self.samples.push(d);
+    }
+
+    /// Time a closure and record its duration.
+    pub fn time<T>(&mut self, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.record(t0.elapsed());
+        out
+    }
+
+    /// Samples recorded so far.
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    /// True when nothing was recorded.
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
 }
 
 /// Run `n` instances of `work` concurrently. Each instance gets its id and
 /// must return the number of items it processed.
-pub fn run_instances(
+pub fn run_instances(n: usize, work: impl Fn(usize) -> usize + Sync) -> ScalingReport {
+    run_instances_timed(n, |i, _lat| work(i))
+}
+
+/// Like [`run_instances`], but each instance also gets a
+/// [`LatencyRecorder`] for per-item/per-batch latency samples, so the
+/// report's p50/p95 reflect request latency rather than instance wall
+/// time.
+pub fn run_instances_timed(
     n: usize,
-    work: impl Fn(usize) -> usize + Sync,
+    work: impl Fn(usize, &mut LatencyRecorder) -> usize + Sync,
 ) -> ScalingReport {
     let t0 = Instant::now();
     let mut instances: Vec<InstanceReport> = Vec::with_capacity(n);
@@ -73,8 +172,14 @@ pub fn run_instances(
                 let work = &work;
                 scope.spawn(move || {
                     let it0 = Instant::now();
-                    let items = work(i);
-                    InstanceReport { instance: i, items, elapsed: it0.elapsed() }
+                    let mut recorder = LatencyRecorder::default();
+                    let items = work(i, &mut recorder);
+                    InstanceReport {
+                        instance: i,
+                        items,
+                        elapsed: it0.elapsed(),
+                        latencies: recorder.samples,
+                    }
                 })
             })
             .collect();
@@ -116,6 +221,7 @@ mod tests {
         let r = run_instances(0, |_| 1);
         assert_eq!(r.total_items(), 0);
         assert_eq!(r.fairness(), 1.0);
+        assert!(r.latency_p50().is_none());
     }
 
     #[test]
@@ -124,5 +230,39 @@ mod tests {
         let mut ids: Vec<usize> = r.instances.iter().map(|x| x.items).collect();
         ids.sort_unstable();
         assert_eq!(ids, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn recorded_latencies_drive_percentiles() {
+        let r = run_instances_timed(2, |i, lat| {
+            for k in 1..=10u64 {
+                lat.record(Duration::from_millis(k + i as u64 * 10));
+            }
+            10
+        });
+        // Pooled samples: 1..=10 and 11..=20 ms → p50 ≈ 10–11ms band.
+        let p50 = r.latency_p50().unwrap();
+        assert!(p50 >= Duration::from_millis(9) && p50 <= Duration::from_millis(12), "{p50:?}");
+        let p95 = r.latency_p95().unwrap();
+        assert!(p95 >= Duration::from_millis(18), "{p95:?}");
+        assert!(p95 >= p50);
+    }
+
+    #[test]
+    fn elapsed_fallback_when_no_samples() {
+        let r = run_instances(3, |_| 5);
+        // No recorded samples → percentiles fall back to instance wall
+        // times, which always exist.
+        assert!(r.latency_p50().is_some());
+        assert!(r.latency_p95().unwrap() >= r.latency_p50().unwrap());
+    }
+
+    #[test]
+    fn recorder_time_counts_samples() {
+        let mut lat = LatencyRecorder::default();
+        assert!(lat.is_empty());
+        let v = lat.time(|| 42);
+        assert_eq!(v, 42);
+        assert_eq!(lat.len(), 1);
     }
 }

@@ -48,16 +48,29 @@ impl From<crate::OptLevel> for Engine {
 }
 
 /// Errors from dataframe operations.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum FrameError {
-    #[error("unknown column: {0}")]
     UnknownColumn(String),
-    #[error("type mismatch on column {col}: expected {expected}, got {got}")]
     TypeMismatch { col: String, expected: &'static str, got: &'static str },
-    #[error("length mismatch: column {col} has {got} rows, frame has {want}")]
     LengthMismatch { col: String, got: usize, want: usize },
-    #[error("csv parse error at line {line}: {msg}")]
     Csv { line: usize, msg: String },
-    #[error("{0}")]
     Other(String),
 }
+
+impl std::fmt::Display for FrameError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FrameError::UnknownColumn(c) => write!(f, "unknown column: {c}"),
+            FrameError::TypeMismatch { col, expected, got } => {
+                write!(f, "type mismatch on column {col}: expected {expected}, got {got}")
+            }
+            FrameError::LengthMismatch { col, got, want } => {
+                write!(f, "length mismatch: column {col} has {got} rows, frame has {want}")
+            }
+            FrameError::Csv { line, msg } => write!(f, "csv parse error at line {line}: {msg}"),
+            FrameError::Other(m) => write!(f, "{m}"),
+        }
+    }
+}
+
+impl std::error::Error for FrameError {}

@@ -4,19 +4,26 @@
 //! Intel® Xeon® Processors"* (Arunachalam et al., 2022) as a three-layer
 //! Rust + JAX + Pallas stack:
 //!
-//! * **Layer 3 (this crate)** — a streaming pipeline orchestrator
-//!   ([`coordinator`]) plus every substrate the paper's eight pipelines
-//!   depend on: a columnar dataframe engine ([`dataframe`]), classical ML
-//!   ([`ml`]), media/vision/text processing ([`media`], [`vision`],
-//!   [`text`]), recommendation preprocessing ([`recsys`]), INT8
-//!   quantization ([`quant`]) and hyperparameter tuning ([`tune`]).
+//! * **Layer 3 (this crate)** — a plan-based pipeline orchestrator
+//!   ([`coordinator`]): every workload is declared once as a **plan** (a
+//!   typed graph of categorized stage nodes) and executed by pluggable
+//!   **executors** — sequential, thread-per-stage streaming with
+//!   backpressure, or multi-instance replication (§3.4) — plus every
+//!   substrate the paper's eight pipelines depend on: a columnar
+//!   dataframe engine ([`dataframe`]), classical ML ([`ml`]),
+//!   media/vision/text processing ([`media`], [`vision`], [`text`]),
+//!   recommendation preprocessing ([`recsys`]), INT8 quantization
+//!   ([`quant`]) and hyperparameter tuning ([`tune`]).
 //! * **Layer 2** — JAX models (`python/compile/model.py`) AOT-lowered to
 //!   HLO text artifacts.
 //! * **Layer 1** — Pallas kernels (`python/compile/kernels/`) called by the
 //!   L2 models.
 //!
 //! The [`runtime`] module loads the AOT artifacts through the PJRT C API
-//! (`xla` crate) so Python never runs on the request path.
+//! (`xla` crate; an offline stub under `rust/shims/` by default) so
+//! Python never runs on the request path; cross-thread model access goes
+//! through the [`runtime::ModelServer`], which is how streaming and
+//! multi-instance executors share one compiled engine.
 //!
 //! Every pipeline stage exists in a **baseline** and an **optimized**
 //! variant (see [`OptLevel`]); benchmarks toggle them to regenerate the

@@ -2,12 +2,14 @@
 //!
 //! ```text
 //! repro list                       # Table 1: the eight pipelines
-//! repro run <pipeline> [--opt baseline|optimized] [--scale F] [--seed N]
+//! repro run <pipeline> [--opt baseline|optimized] [--exec sequential|streaming|multi[:N]]
+//!                      [--scale F] [--seed N]
 //! repro fig1 [--scale F]           # Figure 1 stage breakdown, all pipelines
 //! repro config                     # Table 3 analogue: software config
 //! repro models                     # AOT artifacts available to the runtime
 //! ```
 
+use repro::coordinator::ExecMode;
 use repro::pipelines::{registry, run_by_name, RunConfig, Toggles};
 use repro::util::cli::Args;
 use repro::util::fmt::{self, Table};
@@ -48,9 +50,12 @@ fn print_help() {
          \x20 models               list AOT model artifacts\n\
          \n\
          OPTIONS (run/fig1):\n\
-         \x20 --opt baseline|optimized   optimization level (default optimized)\n\
-         \x20 --scale F                  dataset scale multiplier (default 1.0)\n\
-         \x20 --seed N                   RNG seed (default 0xE2E)\n"
+         \x20 --opt baseline|optimized          optimization level (default optimized)\n\
+         \x20 --exec sequential|streaming|multi[:N]\n\
+         \x20                                   executor for the pipeline plan\n\
+         \x20                                   (default sequential; multi defaults to 2 instances)\n\
+         \x20 --scale F                         dataset scale multiplier (default 1.0)\n\
+         \x20 --seed N                          RNG seed (default 0xE2E)\n"
     );
 }
 
@@ -63,10 +68,16 @@ fn parse_cfg(args: &Args) -> RunConfig {
             std::process::exit(2);
         }
     };
+    let exec_spec = args.get_or("exec", "sequential");
+    let Some(exec) = ExecMode::parse(exec_spec) else {
+        eprintln!("invalid --exec {exec_spec:?}; use sequential|streaming|multi[:N]");
+        std::process::exit(2);
+    };
     RunConfig {
         toggles: Toggles::all(opt),
         scale: args.get_parse("scale", 1.0f64),
         seed: args.get_parse("seed", 0xE2Eu64),
+        exec,
     }
 }
 
@@ -81,13 +92,16 @@ fn cmd_list() -> i32 {
 
 fn cmd_run(args: &Args) -> i32 {
     let Some(name) = args.positional.first() else {
-        eprintln!("usage: repro run <pipeline> [--opt …] [--scale …]");
+        eprintln!("usage: repro run <pipeline> [--opt …] [--exec …] [--scale …]");
         return 2;
     };
     let cfg = parse_cfg(args);
     match run_by_name(name, &cfg) {
         Ok(res) => {
-            println!("pipeline: {name}   ({} items)", res.items);
+            println!(
+                "pipeline: {name}   executor: {}   ({} items)",
+                cfg.exec, res.items
+            );
             res.report.table().print();
             let (pre, ai) = res.report.fig1_split();
             println!(
@@ -134,8 +148,9 @@ fn cmd_fig1(args: &Args) -> i32 {
         }
     }
     println!(
-        "Figure 1 — percent time in pre/post-processing vs AI ({}, scale {}):",
+        "Figure 1 — percent time in pre/post-processing vs AI ({}, {}, scale {}):",
         cfg.toggles.dataframe.label(),
+        cfg.exec,
         cfg.scale
     );
     t.print();
@@ -146,7 +161,10 @@ fn cmd_config() -> i32 {
     println!("software configuration (Table 3 analogue):");
     let mut t = Table::new(&["component", "version / detail"]);
     t.row(&["rustc".into(), "1.95 (offline sandbox)".into()]);
-    t.row(&["xla crate".into(), "0.1.6 (xla_extension 0.5.1, PJRT CPU)".into()]);
+    t.row(&[
+        "xla crate".into(),
+        "offline stub (swap rust/shims/xla for xla 0.1.6 + PJRT CPU)".into(),
+    ]);
     t.row(&["jax (build-time)".into(), "0.8.x — Pallas interpret-mode kernels".into()]);
     t.row(&[
         "artifacts".into(),

@@ -5,6 +5,9 @@
 //! features, anomaly scoring. Table 2 axes: Modin 1.12×, sklearnex 3.4×
 //! (PCA/Gaussian side), IPEX 1.8× (fused feature extractor).
 //!
+//! Declared as a [`Plan`] over a single threaded state; feature
+//! extraction goes through the shared [`ModelServer`].
+//!
 //! Dataset: MVTec-like synthetic part images — textured "good" parts vs
 //! parts with a planted bright defect blob. Random-weight conv features
 //! separate these (brightness/edge energy shifts the feature vector), so
@@ -12,15 +15,14 @@
 
 use super::{PipelineResult, RunConfig};
 use crate::coordinator::telemetry::Category;
-use crate::coordinator::SequentialPipeline;
+use crate::coordinator::{Plan, PlanOutput};
 use crate::linalg::Matrix;
 use crate::media::{normalize, resize, Image, ResizeFilter};
 use crate::ml::{metrics, GaussianModel, Pca};
-use crate::runtime::{Engine, Tensor};
+use crate::runtime::{ModelClient, ModelServer, Tensor};
 use crate::util::Rng;
 use crate::OptLevel;
 use std::collections::BTreeMap;
-use std::rc::Rc;
 
 const IMG: usize = 32;
 const RAW: usize = 64;
@@ -65,9 +67,6 @@ struct State {
     test_batches: Vec<Vec<f32>>,
     train_feats: Matrix,
     test_feats: Matrix,
-    engine: Option<Rc<Engine>>,
-    dl: OptLevel,
-    ml: OptLevel,
     scores: Vec<f64>,
 }
 
@@ -94,7 +93,7 @@ fn prepare_batches(parts: &[Part]) -> Vec<Vec<f32>> {
 }
 
 fn extract_features(
-    engine: &Engine,
+    client: &ModelClient,
     dl: OptLevel,
     batches: &[Vec<f32>],
     n_rows: usize,
@@ -103,10 +102,14 @@ fn extract_features(
     for (chunk_i, data) in batches.iter().enumerate() {
         let input = Tensor::f32(&[BATCH, IMG, IMG, 3], data.clone());
         let out = match dl {
-            OptLevel::Optimized => engine.run("resnet_features_fused_b4", &[input])?,
-            OptLevel::Baseline => engine.run_chain("resnet_features_unfused_b4", &[input])?,
+            OptLevel::Optimized => client.run("resnet_features_fused_b4", vec![input])?,
+            OptLevel::Baseline => {
+                client.run_chain("resnet_features_unfused_b4", vec![input])?
+            }
         };
-        let f = out[0].as_f32().expect("features");
+        let f = out[0]
+            .as_f32()
+            .ok_or_else(|| anyhow::anyhow!("resnet returned non-f32 features"))?;
         for j in 0..BATCH {
             let row = chunk_i * BATCH + j;
             if row >= n_rows {
@@ -120,109 +123,98 @@ fn extract_features(
     Ok(feats)
 }
 
-/// Run the anomaly-detection pipeline.
-pub fn run(cfg: &RunConfig) -> anyhow::Result<PipelineResult> {
+/// Build the anomaly-detection plan.
+pub fn plan(cfg: &RunConfig) -> anyhow::Result<Plan> {
     let n_train = cfg.scaled(48, 12);
     let n_test = cfg.scaled(32, 8);
+    let dl = cfg.toggles.dl;
+    let ml = cfg.toggles.ml;
     let mut rng = Rng::new(cfg.seed);
     let train_parts: Vec<Part> = (0..n_train).map(|_| generate_part(&mut rng, false)).collect();
     let test_parts: Vec<Part> =
         (0..n_test).map(|i| generate_part(&mut rng, i % 3 == 0)).collect();
     let items = n_train + n_test;
 
-    let state = State {
+    // Steady-state: compile on the shared server outside the timed plan
+    // (see dlsa.rs).
+    let client = ModelServer::shared()?;
+    match dl {
+        OptLevel::Optimized => client.warmup(&["resnet_features_fused_b4"])?,
+        OptLevel::Baseline => client.warmup_chain("resnet_features_unfused_b4")?,
+    }
+
+    let mut initial = Some(State {
         train_parts,
         test_parts,
         train_batches: vec![],
         test_batches: vec![],
         train_feats: Matrix::zeros(0, 0),
         test_feats: Matrix::zeros(0, 0),
-        engine: None,
-        dl: cfg.toggles.dl,
-        ml: cfg.toggles.ml,
         scores: vec![],
-    };
+    });
 
-    // Steady-state: compile outside the timed pipeline (see dlsa.rs).
-    {
-        let engine = Engine::local()?;
-        match state.dl {
-            OptLevel::Optimized => engine.warmup(&["resnet_features_fused_b4"])?,
-            OptLevel::Baseline => {
-                let chain: Vec<String> = engine
-                    .manifest()
-                    .stage_chains
-                    .get("resnet_features_unfused_b4")
-                    .cloned()
-                    .unwrap_or_default();
-                let refs: Vec<&str> = chain.iter().map(|x| x.as_str()).collect();
-                engine.warmup(&refs)?;
-            }
+    Ok(Plan::source("anomaly", "source", Category::Pre, move |emit| {
+        if let Some(state) = initial.take() {
+            emit(state);
         }
-    }
+    })
+    .map("resize_transform", Category::Pre, |mut s: State| {
+        // Table 1's "image resizing, image transformations" stage.
+        s.train_batches = prepare_batches(&s.train_parts);
+        s.test_batches = prepare_batches(&s.test_parts);
+        Ok(s)
+    })
+    .map("feature_extraction", Category::Ai, move |mut s| {
+        s.train_feats = extract_features(&client, dl, &s.train_batches, s.train_parts.len())?;
+        s.test_feats = extract_features(&client, dl, &s.test_batches, s.test_parts.len())?;
+        Ok(s)
+    })
+    .map("pca_reduction", Category::Ai, move |mut s| {
+        let pca = Pca::fit(&s.train_feats, PCA_K);
+        s.train_feats = pca.transform(&s.train_feats);
+        s.test_feats = pca.transform(&s.test_feats);
+        // The ml toggle chooses the GEMM kernel inside transform via
+        // Pca (blocked); baseline recomputes with the naive kernel to
+        // model stock sklearn. (Cost difference shows at bench scale.)
+        if ml == OptLevel::Baseline {
+            // Redundant naive projection — the stock path's cost shape.
+            let _ = crate::linalg::matmul_naive(&s.train_feats, &Matrix::eye(PCA_K));
+        }
+        Ok(s)
+    })
+    .map("gaussian_scoring", Category::Post, |mut s| {
+        let model = GaussianModel::fit(&s.train_feats, 1e-6)
+            .ok_or_else(|| anyhow::anyhow!("gaussian fit failed"))?;
+        s.scores = model.score(&s.test_feats);
+        Ok(s)
+    })
+    .sink(
+        "finalize",
+        Category::Post,
+        None,
+        |slot: &mut Option<State>, s: State| {
+            *slot = Some(s);
+            Ok(())
+        },
+        move |slot| {
+            let state =
+                slot.ok_or_else(|| anyhow::anyhow!("anomaly pipeline produced no result"))?;
+            let labels: Vec<f64> =
+                state.test_parts.iter().map(|p| p.defective as i64 as f64).collect();
+            let mut m = BTreeMap::new();
+            m.insert("auc".to_string(), metrics::auc(&labels, &state.scores));
+            m.insert(
+                "defect_rate".to_string(),
+                labels.iter().sum::<f64>() / labels.len().max(1) as f64,
+            );
+            Ok(PlanOutput { metrics: m, items })
+        },
+    ))
+}
 
-    let pipeline = SequentialPipeline::new("anomaly")
-        .stage("load_model", Category::Pre, |mut s: State| {
-            let engine = Engine::local()?;
-            match s.dl {
-                OptLevel::Optimized => engine.warmup(&["resnet_features_fused_b4"])?,
-                OptLevel::Baseline => {
-                    let chain: Vec<&str> = engine
-                        .manifest()
-                        .stage_chains
-                        .get("resnet_features_unfused_b4")
-                        .map(|c| c.iter().map(|x| x.as_str()).collect())
-                        .unwrap_or_default();
-                    engine.warmup(&chain)?;
-                }
-            }
-            s.engine = Some(engine);
-            Ok(s)
-        })
-        .stage("resize_transform", Category::Pre, |mut s| {
-            // Table 1's "image resizing, image transformations" stage.
-            s.train_batches = prepare_batches(&s.train_parts);
-            s.test_batches = prepare_batches(&s.test_parts);
-            Ok(s)
-        })
-        .stage("feature_extraction", Category::Ai, |mut s| {
-            let engine = s.engine.as_ref().unwrap();
-            s.train_feats =
-                extract_features(engine, s.dl, &s.train_batches, s.train_parts.len())?;
-            s.test_feats =
-                extract_features(engine, s.dl, &s.test_batches, s.test_parts.len())?;
-            Ok(s)
-        })
-        .stage("pca_reduction", Category::Ai, |mut s| {
-            let pca = Pca::fit(&s.train_feats, PCA_K);
-            s.train_feats = pca.transform(&s.train_feats);
-            s.test_feats = pca.transform(&s.test_feats);
-            // The ml toggle chooses the GEMM kernel inside transform via
-            // Pca (blocked); baseline recomputes with the naive kernel to
-            // model stock sklearn. (Cost difference shows at bench scale.)
-            if s.ml == OptLevel::Baseline {
-                // Redundant naive projection — the stock path's cost shape.
-                let _ = crate::linalg::matmul_naive(&s.train_feats, &Matrix::eye(PCA_K));
-            }
-            Ok(s)
-        })
-        .stage("gaussian_scoring", Category::Post, |mut s| {
-            let model = GaussianModel::fit(&s.train_feats, 1e-6)
-                .ok_or_else(|| anyhow::anyhow!("gaussian fit failed"))?;
-            s.scores = model.score(&s.test_feats);
-            Ok(s)
-        });
-
-    let (state, report) = pipeline.run(state)?;
-    let labels: Vec<f64> =
-        state.test_parts.iter().map(|p| p.defective as i64 as f64).collect();
-    let mut m = BTreeMap::new();
-    m.insert("auc".to_string(), metrics::auc(&labels, &state.scores));
-    m.insert(
-        "defect_rate".to_string(),
-        labels.iter().sum::<f64>() / labels.len().max(1) as f64,
-    );
-    Ok(PipelineResult { report, metrics: m, items })
+/// Run the anomaly-detection pipeline under `cfg.exec`.
+pub fn run(cfg: &RunConfig) -> anyhow::Result<PipelineResult> {
+    super::run_plan(plan, cfg)
 }
 
 #[cfg(test)]
@@ -235,7 +227,7 @@ mod tests {
     }
 
     fn small(toggles: Toggles) -> PipelineResult {
-        run(&RunConfig { toggles, scale: 0.6, seed: 15 }).unwrap()
+        run(&RunConfig { toggles, scale: 0.6, seed: 15, ..Default::default() }).unwrap()
     }
 
     #[test]

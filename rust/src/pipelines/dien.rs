@@ -1,10 +1,14 @@
 //! DIEN pipeline (§2.5): click-through-rate inference over a review log.
 //!
 //! Stages (Table 1): data ingestion (JSON parse), label encoding, get
-//! history sequence, negative sampling, data split, load model, inference.
-//! Table 2 axes: Modin 23.2× (here: the baseline vs optimized feature
-//! engineering + dataframe path) and Intel-TF 9.82× (here: fused vs
-//! unfused `dien_tiny` graphs).
+//! history sequence, negative sampling, data split, inference. Table 2
+//! axes: Modin 23.2× (here: the baseline vs optimized feature engineering
+//! + dataframe path) and Intel-TF 9.82× (here: fused vs unfused
+//! `dien_tiny` graphs).
+//!
+//! Declared as a [`Plan`] over a single threaded state (tabular shape);
+//! inference goes through the shared [`ModelServer`], so the same plan
+//! runs under the streaming and multi-instance executors.
 //!
 //! Quality note: the model is untrained (deterministic random weights), so
 //! CTR AUC hovers at chance — recorded for completeness; the pipeline's
@@ -13,13 +17,14 @@
 
 use super::{PipelineResult, RunConfig};
 use crate::coordinator::telemetry::Category;
-use crate::coordinator::SequentialPipeline;
+use crate::coordinator::{Plan, PlanOutput};
 use crate::ml::metrics;
-use crate::recsys::{build_examples, generate_log, parse_log, parse_log_via_dataframe, DienExample, ReviewEvent};
-use crate::runtime::{Engine, Tensor};
+use crate::recsys::{
+    build_examples, generate_log, parse_log, parse_log_via_dataframe, DienExample, ReviewEvent,
+};
+use crate::runtime::{ModelServer, Tensor};
 use crate::OptLevel;
 use std::collections::BTreeMap;
-use std::rc::Rc;
 
 const HIST: usize = 10;
 const CATALOG: usize = 1024;
@@ -29,10 +34,6 @@ struct State {
     raw: String,
     events: Vec<ReviewEvent>,
     examples: Vec<DienExample>,
-    engine: Option<Rc<Engine>>,
-    opt_df: OptLevel,
-    dl: OptLevel,
-    seed: u64,
     scores: Vec<f32>,
 }
 
@@ -43,111 +44,116 @@ fn model_name(dl: OptLevel) -> &'static str {
     }
 }
 
-/// Run the DIEN pipeline.
-pub fn run(cfg: &RunConfig) -> anyhow::Result<PipelineResult> {
+/// Build the DIEN plan.
+pub fn plan(cfg: &RunConfig) -> anyhow::Result<Plan> {
     let n_events = cfg.scaled(4_000, 300);
     let n_users = (n_events / 12).max(8);
-    let state = State {
+    let opt_df = cfg.toggles.dataframe;
+    let dl = cfg.toggles.dl;
+    let seed = cfg.seed;
+    let model = model_name(dl);
+
+    // Steady-state: compile on the shared server outside the timed plan
+    // (see dlsa.rs).
+    let client = ModelServer::shared()?;
+    match dl {
+        OptLevel::Optimized => client.warmup(&[model])?,
+        OptLevel::Baseline => client.warmup_chain(model)?,
+    }
+
+    let mut initial = Some(State {
         raw: generate_log(n_events, n_users, 400, cfg.seed),
         events: vec![],
         examples: vec![],
-        engine: None,
-        opt_df: cfg.toggles.dataframe,
-        dl: cfg.toggles.dl,
-        seed: cfg.seed,
         scores: vec![],
-    };
+    });
 
-    // Steady-state: compile outside the timed pipeline (see dlsa.rs).
-    {
-        let engine = Engine::local()?;
-        match state.dl {
-            OptLevel::Optimized => engine.warmup(&[model_name(state.dl)])?,
-            OptLevel::Baseline => {
-                let chain: Vec<String> = engine
-                    .manifest()
-                    .stage_chains
-                    .get("dien_unfused_b16")
-                    .cloned()
-                    .unwrap_or_default();
-                let refs: Vec<&str> = chain.iter().map(|x| x.as_str()).collect();
-                engine.warmup(&refs)?;
-            }
+    Ok(Plan::source("dien", "source", Category::Pre, move |emit| {
+        if let Some(state) = initial.take() {
+            emit(state);
         }
-    }
-
-    let pipeline = SequentialPipeline::new("dien")
-        .stage("json_ingestion", Category::Pre, |mut s: State| {
-            // Baseline: json → boxed-row dataframe → events (the paper's
-            // unoptimized "parse into dataframes" path). Optimized: direct
-            // struct parse, no intermediate frame.
-            let (events, skipped) = match s.opt_df {
-                OptLevel::Baseline => parse_log_via_dataframe(&s.raw),
-                OptLevel::Optimized => parse_log(&s.raw),
-            };
-            anyhow::ensure!(skipped == 0, "synthetic log must parse cleanly");
-            s.events = events;
-            s.raw.clear();
-            Ok(s)
-        })
-        .stage("feature_engineering", Category::Pre, |mut s| {
-            // label encoding + history sequences + negative sampling.
-            let (examples, _, _) =
-                build_examples(&s.events, HIST, CATALOG - 1, s.seed, s.opt_df);
-            s.examples = examples;
-            s.events.clear();
-            Ok(s)
-        })
-        .stage("load_model", Category::Pre, |mut s| {
-            s.engine = Some(Engine::local()?);
-            Ok(s)
-        })
-        .stage("ctr_inference", Category::Ai, |mut s| {
-            let engine = s.engine.as_ref().unwrap();
-            let model = model_name(s.dl);
-            let mut scores = Vec::with_capacity(s.examples.len());
-            for chunk in s.examples.chunks(BATCH) {
-                let mut hist: Vec<i32> = Vec::with_capacity(BATCH * HIST);
-                let mut cand: Vec<i32> = Vec::with_capacity(BATCH);
-                for ex in chunk {
-                    hist.extend(ex.history.iter().map(|&h| (h as usize % CATALOG) as i32));
-                    cand.push((ex.candidate as usize % CATALOG) as i32);
-                }
-                // Pad the tail batch by repeating the last example.
-                while cand.len() < BATCH {
-                    let start = hist.len() - HIST;
-                    let last_h: Vec<i32> = hist[start..].to_vec();
-                    hist.extend(last_h);
-                    let last_c = *cand.last().unwrap();
-                    cand.push(last_c);
-                }
-                let inputs =
-                    [Tensor::i32(&[BATCH, HIST], hist), Tensor::i32(&[BATCH], cand)];
-                let out = match s.dl {
-                    OptLevel::Optimized => engine.run(model, &inputs)?,
-                    OptLevel::Baseline => engine.run_chain(model, &inputs)?,
-                };
-                let p = out[0].as_f32().expect("probabilities");
-                scores.extend_from_slice(&p[..chunk.len()]);
+    })
+    .map("json_ingestion", Category::Pre, move |mut s: State| {
+        // Baseline: json → boxed-row dataframe → events (the paper's
+        // unoptimized "parse into dataframes" path). Optimized: direct
+        // struct parse, no intermediate frame.
+        let (events, skipped) = match opt_df {
+            OptLevel::Baseline => parse_log_via_dataframe(&s.raw),
+            OptLevel::Optimized => parse_log(&s.raw),
+        };
+        anyhow::ensure!(skipped == 0, "synthetic log must parse cleanly");
+        s.events = events;
+        s.raw.clear();
+        Ok(s)
+    })
+    .map("feature_engineering", Category::Pre, move |mut s| {
+        // label encoding + history sequences + negative sampling.
+        let (examples, _, _) = build_examples(&s.events, HIST, CATALOG - 1, seed, opt_df);
+        s.examples = examples;
+        s.events.clear();
+        Ok(s)
+    })
+    .map("ctr_inference", Category::Ai, move |mut s| {
+        let mut scores = Vec::with_capacity(s.examples.len());
+        for chunk in s.examples.chunks(BATCH) {
+            let mut hist: Vec<i32> = Vec::with_capacity(BATCH * HIST);
+            let mut cand: Vec<i32> = Vec::with_capacity(BATCH);
+            for ex in chunk {
+                hist.extend(ex.history.iter().map(|&h| (h as usize % CATALOG) as i32));
+                cand.push((ex.candidate as usize % CATALOG) as i32);
             }
-            s.scores = scores;
-            Ok(s)
-        })
-        .stage("ranking_postprocess", Category::Post, |s| {
-            // CTR consumers sort candidates per user; modeled by a sort.
-            let mut ranked: Vec<(usize, f32)> =
-                s.scores.iter().copied().enumerate().collect();
-            ranked.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
-            Ok(s)
-        });
+            // Pad the tail batch by repeating the last example.
+            while cand.len() < BATCH {
+                let start = hist.len() - HIST;
+                let last_h: Vec<i32> = hist[start..].to_vec();
+                hist.extend(last_h);
+                let last_c = *cand.last().unwrap();
+                cand.push(last_c);
+            }
+            let inputs =
+                vec![Tensor::i32(&[BATCH, HIST], hist), Tensor::i32(&[BATCH], cand)];
+            let out = match dl {
+                OptLevel::Optimized => client.run(model, inputs)?,
+                OptLevel::Baseline => client.run_chain(model, inputs)?,
+            };
+            let p = out[0]
+                .as_f32()
+                .ok_or_else(|| anyhow::anyhow!("dien returned non-f32 probabilities"))?;
+            scores.extend_from_slice(&p[..chunk.len()]);
+        }
+        s.scores = scores;
+        Ok(s)
+    })
+    .map("ranking_postprocess", Category::Post, |s: State| {
+        // CTR consumers sort candidates per user; modeled by a sort.
+        let mut ranked: Vec<(usize, f32)> = s.scores.iter().copied().enumerate().collect();
+        ranked.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        Ok(s)
+    })
+    .sink(
+        "finalize",
+        Category::Post,
+        None,
+        |slot: &mut Option<State>, s: State| {
+            *slot = Some(s);
+            Ok(())
+        },
+        move |slot| {
+            let state =
+                slot.ok_or_else(|| anyhow::anyhow!("dien pipeline produced no result"))?;
+            let labels: Vec<f64> = state.examples.iter().map(|e| e.label as f64).collect();
+            let scores: Vec<f64> = state.scores.iter().map(|&p| p as f64).collect();
+            let mut m = BTreeMap::new();
+            m.insert("auc".to_string(), metrics::auc(&labels, &scores));
+            m.insert("examples".to_string(), state.examples.len() as f64);
+            Ok(PlanOutput { metrics: m, items: n_events })
+        },
+    ))
+}
 
-    let (state, report) = pipeline.run(state)?;
-    let labels: Vec<f64> = state.examples.iter().map(|e| e.label as f64).collect();
-    let scores: Vec<f64> = state.scores.iter().map(|&p| p as f64).collect();
-    let mut m = BTreeMap::new();
-    m.insert("auc".to_string(), metrics::auc(&labels, &scores));
-    m.insert("examples".to_string(), state.examples.len() as f64);
-    Ok(PipelineResult { report, metrics: m, items: n_events })
+/// Run the DIEN pipeline under `cfg.exec`.
+pub fn run(cfg: &RunConfig) -> anyhow::Result<PipelineResult> {
+    super::run_plan(plan, cfg)
 }
 
 #[cfg(test)]
@@ -160,7 +166,7 @@ mod tests {
     }
 
     fn small(toggles: Toggles) -> PipelineResult {
-        run(&RunConfig { toggles, scale: 0.2, seed: 6 }).unwrap()
+        run(&RunConfig { toggles, scale: 0.2, seed: 6, ..Default::default() }).unwrap()
     }
 
     #[test]

@@ -4,6 +4,10 @@
 //! (SSD), recognition (ResNet embedding), output generation. Table 2 axis:
 //! Intel-TF 1.7× (fused vs unfused graphs for both models).
 //!
+//! Declared as a [`Plan`]: the source decodes the synthetic video (the
+//! load stage's real work, timed as source busy time), the cascade's two
+//! models run through the shared [`ModelServer`].
+//!
 //! Identity protocol: the scene plants two distinctly-colored "faces"
 //! (per the substitution rule — no real faces in the sandbox). A gallery
 //! of embeddings is enrolled from the first frame's ground-truth crops;
@@ -13,14 +17,13 @@
 
 use super::{PipelineResult, RunConfig};
 use crate::coordinator::telemetry::Category;
-use crate::coordinator::SequentialPipeline;
+use crate::coordinator::{Plan, PlanOutput};
 use crate::media::codec::decode;
 use crate::media::synth::VideoSource;
 use crate::media::{normalize, resize, Image, ResizeFilter};
-use crate::runtime::{Engine, Tensor};
+use crate::runtime::{ModelClient, ModelServer, Tensor};
 use crate::OptLevel;
 use std::collections::BTreeMap;
-use std::rc::Rc;
 
 const IMG: usize = 32;
 const SRC_H: usize = 96;
@@ -30,8 +33,6 @@ const EMB_BATCH: usize = 4;
 
 struct State {
     frames: Vec<(Image, Vec<[f32; 4]>, Vec<usize>)>, // decoded, truth boxes, ids
-    engine: Option<Rc<Engine>>,
-    dl: OptLevel,
     gallery: Vec<[f32; EMB]>,
     matches: usize,
     attempts: usize,
@@ -53,7 +54,7 @@ fn embed_model(dl: OptLevel) -> &'static str {
 }
 
 /// Embed a batch of crops (padded to the artifact batch).
-fn embed(engine: &Engine, dl: OptLevel, crops: &[Image]) -> anyhow::Result<Vec<[f32; EMB]>> {
+fn embed(client: &ModelClient, dl: OptLevel, crops: &[Image]) -> anyhow::Result<Vec<[f32; EMB]>> {
     let mut out = Vec::with_capacity(crops.len());
     for chunk in crops.chunks(EMB_BATCH) {
         let mut data = Vec::with_capacity(EMB_BATCH * IMG * IMG * 3);
@@ -65,12 +66,14 @@ fn embed(engine: &Engine, dl: OptLevel, crops: &[Image]) -> anyhow::Result<Vec<[
             let last: Vec<f32> = data[start..].to_vec();
             data.extend(last);
         }
-        let input = [Tensor::f32(&[EMB_BATCH, IMG, IMG, 3], data)];
+        let input = Tensor::f32(&[EMB_BATCH, IMG, IMG, 3], data);
         let res = match dl {
-            OptLevel::Optimized => engine.run(embed_model(dl), &input)?,
-            OptLevel::Baseline => engine.run_chain(embed_model(dl), &input)?,
+            OptLevel::Optimized => client.run(embed_model(dl), vec![input])?,
+            OptLevel::Baseline => client.run_chain(embed_model(dl), vec![input])?,
         };
-        let e = res[0].as_f32().expect("embeddings");
+        let e = res[0]
+            .as_f32()
+            .ok_or_else(|| anyhow::anyhow!("embed model returned non-f32 output"))?;
         for j in 0..chunk.len() {
             let mut v = [0f32; EMB];
             v.copy_from_slice(&e[j * EMB..(j + 1) * EMB]);
@@ -96,127 +99,131 @@ fn crop_and_prep(img: &Image, b: &[f32; 4]) -> Image {
     small
 }
 
-/// Run the face-recognition pipeline.
-pub fn run(cfg: &RunConfig) -> anyhow::Result<PipelineResult> {
+/// Build the face-recognition plan.
+pub fn plan(cfg: &RunConfig) -> anyhow::Result<Plan> {
     let n_frames = cfg.scaled(24, 6);
-    let state = State {
-        frames: vec![],
-        engine: None,
-        dl: cfg.toggles.dl,
-        gallery: vec![],
-        matches: 0,
-        attempts: 0,
-        detections_run: 0,
-    };
+    let dl = cfg.toggles.dl;
     let seed = cfg.seed;
 
-    // Steady-state: compile outside the timed pipeline (see dlsa.rs).
-    {
-        let engine = Engine::local()?;
-        match state.dl {
-            OptLevel::Optimized => {
-                engine.warmup(&[detector(state.dl), embed_model(state.dl)])?
-            }
-            OptLevel::Baseline => {
-                let mut names: Vec<String> = Vec::new();
-                for chain in ["ssd_unfused_b1", "resnet_embed_unfused_b4"] {
-                    names.extend(
-                        engine
-                            .manifest()
-                            .stage_chains
-                            .get(chain)
-                            .cloned()
-                            .unwrap_or_default(),
-                    );
-                }
-                let refs: Vec<&str> = names.iter().map(|x| x.as_str()).collect();
-                engine.warmup(&refs)?;
-            }
+    // Steady-state: compile both cascade models on the shared server
+    // outside the timed plan (see dlsa.rs).
+    let client = ModelServer::shared()?;
+    match dl {
+        OptLevel::Optimized => client.warmup(&[detector(dl), embed_model(dl)])?,
+        OptLevel::Baseline => {
+            client.warmup_chain("ssd_unfused_b1")?;
+            client.warmup_chain("resnet_embed_unfused_b4")?;
         }
     }
 
-    let pipeline = SequentialPipeline::new("face")
-        .stage("load_video", Category::Pre, move |mut s: State| {
-            let mut src = VideoSource::new(SRC_H, SRC_W, 2, seed);
-            for _ in 0..n_frames {
-                let (enc, truth) = src.next_frame();
-                let ids: Vec<usize> = (0..truth.boxes.len()).collect();
-                s.frames.push((decode(&enc), truth.boxes, ids));
-            }
-            Ok(s)
-        })
-        .stage("load_models", Category::Pre, |mut s| {
-            s.engine = Some(Engine::local()?);
-            Ok(s)
-        })
-        .stage("enroll_gallery", Category::Pre, |mut s| {
-            let engine = Rc::clone(s.engine.as_ref().unwrap());
-            let (img, boxes, _) = &s.frames[0];
-            let crops: Vec<Image> = boxes.iter().map(|b| crop_and_prep(img, b)).collect();
-            s.gallery = embed(&engine, s.dl, &crops)?;
-            Ok(s)
-        })
-        .stage("detection", Category::Ai, |mut s| {
-            // Run the detector on every frame (the cascade's first model).
-            let engine = Rc::clone(s.engine.as_ref().unwrap());
-            let det = detector(s.dl);
-            for (img, _, _) in &s.frames {
-                let mut small = resize(img, IMG, IMG, ResizeFilter::Bilinear);
-                normalize(&mut small, [0.45; 3], [0.25; 3]);
-                let input = Tensor::f32(&[1, IMG, IMG, 3], small.data.clone());
-                match s.dl {
-                    OptLevel::Optimized => engine.run(det, &[input])?,
-                    OptLevel::Baseline => engine.run_chain(det, &[input])?,
-                };
-                s.detections_run += 1;
-            }
-            Ok(s)
-        })
-        .stage("recognition", Category::Ai, |mut s| {
-            // Embed ground-truth crops (identity-labeled) for all frames
-            // past the enrollment frame and match against the gallery.
-            let engine = Rc::clone(s.engine.as_ref().unwrap());
-            let mut crops = Vec::new();
-            let mut want_ids = Vec::new();
-            for (img, boxes, ids) in s.frames.iter().skip(1) {
-                for (b, &id) in boxes.iter().zip(ids) {
-                    crops.push(crop_and_prep(img, b));
-                    want_ids.push(id);
-                }
-            }
-            let embs = embed(&engine, s.dl, &crops)?;
-            for (e, want) in embs.iter().zip(&want_ids) {
-                let best = s
-                    .gallery
-                    .iter()
-                    .enumerate()
-                    .max_by(|a, b| cosine(e, a.1).partial_cmp(&cosine(e, b.1)).unwrap())
-                    .map(|(i, _)| i)
-                    .unwrap_or(usize::MAX);
-                s.attempts += 1;
-                if best == *want {
-                    s.matches += 1;
-                }
-            }
-            Ok(s)
-        })
-        .stage("output_generation", Category::Post, |s| {
-            // Annotated-output stand-in: format one line per match attempt.
-            let mut buf = String::new();
-            for i in 0..s.attempts {
-                buf.push_str(&format!("frame-crop {i}: matched\n"));
-            }
-            Ok(s)
-        });
+    let enroll_client = client.clone();
+    let detect_client = client.clone();
+    let recog_client = client;
+    let mut emitted = false;
 
-    let (state, report) = pipeline.run(state)?;
-    let mut m = BTreeMap::new();
-    m.insert(
-        "match_rate".to_string(),
-        state.matches as f64 / state.attempts.max(1) as f64,
-    );
-    m.insert("detections".to_string(), state.detections_run as f64);
-    Ok(PipelineResult { report, metrics: m, items: n_frames })
+    Ok(Plan::source("face", "load_video", Category::Pre, move |emit| {
+        // Decode the whole synthetic clip — the load stage's real work,
+        // so it is timed as source busy time.
+        if emitted {
+            return;
+        }
+        emitted = true;
+        let mut src = VideoSource::new(SRC_H, SRC_W, 2, seed);
+        let mut frames = Vec::with_capacity(n_frames);
+        for _ in 0..n_frames {
+            let (enc, truth) = src.next_frame();
+            let ids: Vec<usize> = (0..truth.boxes.len()).collect();
+            frames.push((decode(&enc), truth.boxes, ids));
+        }
+        emit(State {
+            frames,
+            gallery: vec![],
+            matches: 0,
+            attempts: 0,
+            detections_run: 0,
+        });
+    })
+    .map("enroll_gallery", Category::Pre, move |mut s: State| {
+        let (img, boxes, _) = &s.frames[0];
+        let crops: Vec<Image> = boxes.iter().map(|b| crop_and_prep(img, b)).collect();
+        s.gallery = embed(&enroll_client, dl, &crops)?;
+        Ok(s)
+    })
+    .map("detection", Category::Ai, move |mut s| {
+        // Run the detector on every frame (the cascade's first model).
+        let det = detector(dl);
+        for (img, _, _) in &s.frames {
+            let mut small = resize(img, IMG, IMG, ResizeFilter::Bilinear);
+            normalize(&mut small, [0.45; 3], [0.25; 3]);
+            let input = Tensor::f32(&[1, IMG, IMG, 3], small.data.clone());
+            match dl {
+                OptLevel::Optimized => detect_client.run(det, vec![input])?,
+                OptLevel::Baseline => detect_client.run_chain(det, vec![input])?,
+            };
+            s.detections_run += 1;
+        }
+        Ok(s)
+    })
+    .map("recognition", Category::Ai, move |mut s| {
+        // Embed ground-truth crops (identity-labeled) for all frames
+        // past the enrollment frame and match against the gallery.
+        let mut crops = Vec::new();
+        let mut want_ids = Vec::new();
+        for (img, boxes, ids) in s.frames.iter().skip(1) {
+            for (b, &id) in boxes.iter().zip(ids) {
+                crops.push(crop_and_prep(img, b));
+                want_ids.push(id);
+            }
+        }
+        let embs = embed(&recog_client, dl, &crops)?;
+        for (e, want) in embs.iter().zip(&want_ids) {
+            let best = s
+                .gallery
+                .iter()
+                .enumerate()
+                .max_by(|a, b| cosine(e, a.1).partial_cmp(&cosine(e, b.1)).unwrap())
+                .map(|(i, _)| i)
+                .unwrap_or(usize::MAX);
+            s.attempts += 1;
+            if best == *want {
+                s.matches += 1;
+            }
+        }
+        Ok(s)
+    })
+    .map("output_generation", Category::Post, |s: State| {
+        // Annotated-output stand-in: format one line per match attempt.
+        let mut buf = String::new();
+        for i in 0..s.attempts {
+            buf.push_str(&format!("frame-crop {i}: matched\n"));
+        }
+        Ok(s)
+    })
+    .sink(
+        "finalize",
+        Category::Post,
+        None,
+        |slot: &mut Option<State>, s: State| {
+            *slot = Some(s);
+            Ok(())
+        },
+        move |slot| {
+            let state =
+                slot.ok_or_else(|| anyhow::anyhow!("face pipeline produced no result"))?;
+            let mut m = BTreeMap::new();
+            m.insert(
+                "match_rate".to_string(),
+                state.matches as f64 / state.attempts.max(1) as f64,
+            );
+            m.insert("detections".to_string(), state.detections_run as f64);
+            Ok(PlanOutput { metrics: m, items: n_frames })
+        },
+    ))
+}
+
+/// Run the face-recognition pipeline under `cfg.exec`.
+pub fn run(cfg: &RunConfig) -> anyhow::Result<PipelineResult> {
+    super::run_plan(plan, cfg)
 }
 
 #[cfg(test)]
@@ -229,7 +236,7 @@ mod tests {
     }
 
     fn small(toggles: Toggles) -> PipelineResult {
-        run(&RunConfig { toggles, scale: 0.5, seed: 21 }).unwrap()
+        run(&RunConfig { toggles, scale: 0.5, seed: 21, ..Default::default() }).unwrap()
     }
 
     #[test]

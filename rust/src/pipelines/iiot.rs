@@ -4,12 +4,14 @@
 //! (drop mostly-null columns, fill the rest), train/test split → random
 //! forest. Table 2 axes: Modin 4.8×, sklearnex 113×.
 //!
+//! Declared as a [`Plan`] over a single threaded state (tabular shape).
+//!
 //! Dataset: a wide, sparse sensor table (Bosch-like): many columns, high
 //! null fraction, a planted failure rule over a few "essential" sensors.
 
 use super::{PipelineResult, RunConfig};
 use crate::coordinator::telemetry::Category;
-use crate::coordinator::SequentialPipeline;
+use crate::coordinator::{Plan, PlanOutput};
 use crate::dataframe::{self as df, DataFrame, Engine};
 use crate::linalg::Matrix;
 use crate::ml::{metrics, RandomForest, RandomForestParams};
@@ -65,11 +67,11 @@ struct State {
     kept_cols: usize,
 }
 
-/// Run the IIoT pipeline.
-pub fn run(cfg: &RunConfig) -> anyhow::Result<PipelineResult> {
+/// Build the IIoT plan.
+pub fn plan(cfg: &RunConfig) -> anyhow::Result<Plan> {
     let rows = cfg.scaled(3_000, 150);
     let engine: Engine = cfg.toggles.dataframe.into();
-    let state = State {
+    let mut initial = Some(State {
         csv: generate_csv(rows, cfg.seed),
         frame: DataFrame::new(),
         engine,
@@ -79,87 +81,109 @@ pub fn run(cfg: &RunConfig) -> anyhow::Result<PipelineResult> {
         proba: vec![],
         truth: vec![],
         kept_cols: 0,
-    };
+    });
 
-    let pipeline = SequentialPipeline::new("iiot")
-        .stage("read_measurements", Category::Pre, |mut s: State| {
-            s.frame = df::csv::read_str(&s.csv, s.engine)?;
-            s.csv.clear();
-            Ok(s)
-        })
-        .stage("drop_inessential_columns", Category::Pre, |mut s| {
-            // Keep columns with < 50% nulls (the "only necessary features"
-            // cleaning step of the paper).
-            let n = s.frame.nrows().max(1);
-            let mut drop: Vec<String> = Vec::new();
-            for (name, _) in s.frame.schema() {
-                if name == "failure" || name == "line_id" {
-                    continue;
-                }
-                let nulls = s.frame.col(&name)?.null_count();
-                if nulls * 2 > n {
-                    drop.push(name);
+    Ok(Plan::source("iiot", "source", Category::Pre, move |emit| {
+        if let Some(state) = initial.take() {
+            emit(state);
+        }
+    })
+    .map("read_measurements", Category::Pre, |mut s: State| {
+        s.frame = df::csv::read_str(&s.csv, s.engine)?;
+        s.csv.clear();
+        Ok(s)
+    })
+    .map("drop_inessential_columns", Category::Pre, |mut s| {
+        // Keep columns with < 50% nulls (the "only necessary features"
+        // cleaning step of the paper).
+        let n = s.frame.nrows().max(1);
+        let mut drop: Vec<String> = Vec::new();
+        for (name, _) in s.frame.schema() {
+            if name == "failure" || name == "line_id" {
+                continue;
+            }
+            let nulls = s.frame.col(&name)?.null_count();
+            if nulls * 2 > n {
+                drop.push(name);
+            }
+        }
+        let drop_refs: Vec<&str> = drop.iter().map(|s| s.as_str()).collect();
+        s.frame = s.frame.drop_cols(&drop_refs);
+        s.frame = s.frame.drop_cols(&["line_id"]);
+        s.kept_cols = s.frame.ncols() - 1;
+        Ok(s)
+    })
+    .map("fill_missing", Category::Pre, |mut s| {
+        let names: Vec<String> = s.frame.schema().into_iter().map(|(n, _)| n).collect();
+        for name in names {
+            if name != "failure" {
+                s.frame = df::ops::fillna_f64(&s.frame, &name, 0.0, s.engine)?;
+            }
+        }
+        Ok(s)
+    })
+    .map("train_test_split", Category::Pre, |s: State| Ok(s))
+    .map("random_forest", Category::Ai, |mut s| {
+        let (train, test) = df::ops::train_test_split(&s.frame, 0.3, s.seed);
+        let to_xy = |frame: &DataFrame| -> anyhow::Result<(Matrix, Vec<usize>)> {
+            let feats: Vec<String> = frame
+                .schema()
+                .into_iter()
+                .map(|(n, _)| n)
+                .filter(|n| n != "failure")
+                .collect();
+            let n = frame.nrows();
+            let mut x = Matrix::zeros(n, feats.len());
+            for (j, f) in feats.iter().enumerate() {
+                let col = frame.f64s(f)?;
+                for i in 0..n {
+                    x.set(i, j, col[i]);
                 }
             }
-            let drop_refs: Vec<&str> = drop.iter().map(|s| s.as_str()).collect();
-            s.frame = s.frame.drop_cols(&drop_refs);
-            s.frame = s.frame.drop_cols(&["line_id"]);
-            s.kept_cols = s.frame.ncols() - 1;
-            Ok(s)
-        })
-        .stage("fill_missing", Category::Pre, |mut s| {
-            let names: Vec<String> =
-                s.frame.schema().into_iter().map(|(n, _)| n).collect();
-            for name in names {
-                if name != "failure" {
-                    s.frame = df::ops::fillna_f64(&s.frame, &name, 0.0, s.engine)?;
-                }
-            }
-            Ok(s)
-        })
-        .stage("train_test_split", Category::Pre, |s| Ok(s))
-        .stage("random_forest", Category::Ai, |mut s| {
-            let (train, test) = df::ops::train_test_split(&s.frame, 0.3, s.seed);
-            let to_xy = |frame: &DataFrame| -> anyhow::Result<(Matrix, Vec<usize>)> {
-                let feats: Vec<String> = frame
-                    .schema()
-                    .into_iter()
-                    .map(|(n, _)| n)
-                    .filter(|n| n != "failure")
-                    .collect();
-                let n = frame.nrows();
-                let mut x = Matrix::zeros(n, feats.len());
-                for (j, f) in feats.iter().enumerate() {
-                    let col = frame.f64s(f)?;
-                    for i in 0..n {
-                        x.set(i, j, col[i]);
-                    }
-                }
-                let y: Vec<usize> =
-                    frame.i64s("failure")?.iter().map(|&v| v as usize).collect();
-                Ok((x, y))
-            };
-            let (xt, yt) = to_xy(&train)?;
-            let (xs, ys) = to_xy(&test)?;
-            let rf = RandomForest::fit(
-                &xt,
-                &yt,
-                &RandomForestParams { n_trees: 20, max_depth: 8, ..Default::default() },
-                s.ml,
-            );
-            s.pred = rf.predict(&xs).iter().map(|&c| c as f64).collect();
-            s.proba = rf.predict_proba(&xs).iter().map(|p| p.get(1).copied().unwrap_or(0.0)).collect();
-            s.truth = ys.iter().map(|&c| c as f64).collect();
-            Ok(s)
-        });
+            let y: Vec<usize> = frame.i64s("failure")?.iter().map(|&v| v as usize).collect();
+            Ok((x, y))
+        };
+        let (xt, yt) = to_xy(&train)?;
+        let (xs, ys) = to_xy(&test)?;
+        let rf = RandomForest::fit(
+            &xt,
+            &yt,
+            &RandomForestParams { n_trees: 20, max_depth: 8, ..Default::default() },
+            s.ml,
+        );
+        s.pred = rf.predict(&xs).iter().map(|&c| c as f64).collect();
+        s.proba = rf
+            .predict_proba(&xs)
+            .iter()
+            .map(|p| p.get(1).copied().unwrap_or(0.0))
+            .collect();
+        s.truth = ys.iter().map(|&c| c as f64).collect();
+        Ok(s)
+    })
+    .sink(
+        "finalize",
+        Category::Post,
+        None,
+        |slot: &mut Option<State>, s: State| {
+            *slot = Some(s);
+            Ok(())
+        },
+        move |slot| {
+            let state =
+                slot.ok_or_else(|| anyhow::anyhow!("iiot pipeline produced no result"))?;
+            let mut m = BTreeMap::new();
+            m.insert("f1".to_string(), metrics::f1(&state.truth, &state.pred));
+            m.insert("accuracy".to_string(), metrics::accuracy(&state.truth, &state.pred));
+            m.insert("auc".to_string(), metrics::auc(&state.truth, &state.proba));
+            m.insert("kept_columns".to_string(), state.kept_cols as f64);
+            Ok(PlanOutput { metrics: m, items: rows })
+        },
+    ))
+}
 
-    let (state, report) = pipeline.run(state)?;
-    let mut m = BTreeMap::new();
-    m.insert("f1".to_string(), metrics::f1(&state.truth, &state.pred));
-    m.insert("accuracy".to_string(), metrics::accuracy(&state.truth, &state.pred));
-    m.insert("auc".to_string(), metrics::auc(&state.truth, &state.proba));
-    m.insert("kept_columns".to_string(), state.kept_cols as f64);
-    Ok(PipelineResult { report, metrics: m, items: rows })
+/// Run the IIoT pipeline under `cfg.exec`.
+pub fn run(cfg: &RunConfig) -> anyhow::Result<PipelineResult> {
+    super::run_plan(plan, cfg)
 }
 
 #[cfg(test)]
@@ -168,7 +192,7 @@ mod tests {
     use crate::pipelines::Toggles;
 
     fn small(toggles: Toggles) -> PipelineResult {
-        run(&RunConfig { toggles, scale: 0.15, seed: 4 }).unwrap()
+        run(&RunConfig { toggles, scale: 0.15, seed: 4, ..Default::default() }).unwrap()
     }
 
     #[test]
@@ -199,8 +223,20 @@ mod tests {
 
     #[test]
     fn optimized_faster_e2e() {
-        let base = run(&RunConfig { toggles: Toggles::baseline(), scale: 0.4, seed: 5 }).unwrap();
-        let opt = run(&RunConfig { toggles: Toggles::optimized(), scale: 0.4, seed: 5 }).unwrap();
+        let base = run(&RunConfig {
+            toggles: Toggles::baseline(),
+            scale: 0.4,
+            seed: 5,
+            ..Default::default()
+        })
+        .unwrap();
+        let opt = run(&RunConfig {
+            toggles: Toggles::optimized(),
+            scale: 0.4,
+            seed: 5,
+            ..Default::default()
+        })
+        .unwrap();
         let speedup = base.report.total().as_secs_f64() / opt.report.total().as_secs_f64();
         assert!(speedup > 1.2, "iiot speedup {speedup}");
     }

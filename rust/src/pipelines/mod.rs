@@ -12,9 +12,12 @@
 //! | [`anomaly`] | Anomaly detection | `resnet_tiny` + PCA/Gaussian | Modin, sklearnex, IPEX |
 //! | [`face`] | Face recognition | `ssd_tiny` + `resnet_embed` | Intel-TF (fused) |
 //!
-//! Every pipeline is a function `run(&RunConfig) -> PipelineResult` whose
-//! telemetry report carries the Figure 1 stage breakdown; the benches
-//! toggle [`Toggles`] axes to regenerate Table 2 and Figure 11.
+//! Every pipeline is declared once as a [`Plan`] (`plan(&RunConfig)`) and
+//! executed by whichever executor [`RunConfig::exec`] selects — see
+//! [`crate::coordinator`]. `run(&RunConfig)` is the convenience wrapper
+//! the benches and CLI use; its telemetry report carries the Figure 1
+//! stage breakdown, and the benches toggle [`Toggles`] axes to regenerate
+//! Table 2 and Figure 11.
 
 pub mod census;
 pub mod plasticc;
@@ -26,6 +29,7 @@ pub mod anomaly;
 pub mod face;
 
 use crate::coordinator::telemetry::Report;
+use crate::coordinator::{exec, ExecMode, Plan};
 use crate::OptLevel;
 use std::collections::BTreeMap;
 
@@ -85,11 +89,18 @@ pub struct RunConfig {
     /// tests; benches raise it).
     pub scale: f64,
     pub seed: u64,
+    /// Which executor runs the plan (sequential / streaming / multi).
+    pub exec: ExecMode,
 }
 
 impl Default for RunConfig {
     fn default() -> Self {
-        RunConfig { toggles: Toggles::optimized(), scale: 1.0, seed: 0xE2E }
+        RunConfig {
+            toggles: Toggles::optimized(),
+            scale: 1.0,
+            seed: 0xE2E,
+            exec: ExecMode::Sequential,
+        }
     }
 }
 
@@ -123,10 +134,47 @@ impl PipelineResult {
     }
 }
 
+/// A pipeline's plan-builder entry point.
+pub type PlanFn = fn(&RunConfig) -> anyhow::Result<Plan>;
+
+/// Execute a plan-builder under the executor `cfg.exec` selects. Each
+/// multi-instance replica gets a distinct stream (`seed + instance`), so
+/// instance i processes its own data like the paper's parallel streams;
+/// `MultiInstance(1)` is therefore bit-identical to `Sequential`. For
+/// n > 1 the scaling aggregate is appended as `scaling_*` metrics.
+pub fn run_plan(plan_fn: PlanFn, cfg: &RunConfig) -> anyhow::Result<PipelineResult> {
+    let base = *cfg;
+    let outcome = exec::execute(cfg.exec, move |instance| {
+        let mut instance_cfg = base;
+        instance_cfg.seed = base.seed.wrapping_add(instance as u64);
+        plan_fn(&instance_cfg)
+    })?;
+    let mut metrics = outcome.output.metrics;
+    if let Some(scaling) = &outcome.scaling {
+        if scaling.instances.len() > 1 {
+            metrics.insert("scaling_instances".to_string(), scaling.instances.len() as f64);
+            metrics
+                .insert("scaling_throughput".to_string(), scaling.aggregate_throughput());
+            metrics.insert("scaling_fairness".to_string(), scaling.fairness());
+            let pcts = scaling.latency_percentiles(&[0.50, 0.95]);
+            for (name, p) in ["scaling_latency_p50_ms", "scaling_latency_p95_ms"].iter().zip(pcts)
+            {
+                if let Some(p) = p {
+                    metrics.insert(name.to_string(), p.as_secs_f64() * 1e3);
+                }
+            }
+        }
+    }
+    Ok(PipelineResult { report: outcome.report, metrics, items: outcome.output.items })
+}
+
 /// A registered pipeline.
 pub struct PipelineEntry {
     pub name: &'static str,
     pub description: &'static str,
+    /// The declarative plan — the single definition of the pipeline.
+    pub plan: PlanFn,
+    /// Convenience runner: executes the plan under `cfg.exec`.
     pub run: fn(&RunConfig) -> anyhow::Result<PipelineResult>,
 }
 
@@ -136,53 +184,61 @@ pub fn registry() -> Vec<PipelineEntry> {
         PipelineEntry {
             name: "census",
             description: "Ridge regression over synthetic IPUMS-like census data",
+            plan: census::plan,
             run: census::run,
         },
         PipelineEntry {
             name: "plasticc",
             description: "GBT classification of synthetic LSST light curves",
+            plan: plasticc::plan,
             run: plasticc::run,
         },
         PipelineEntry {
             name: "iiot",
             description: "Random-forest failure prediction on a wide sensor table",
+            plan: iiot::plan,
             run: iiot::run,
         },
         PipelineEntry {
             name: "dlsa",
             description: "BERT-tiny document sentiment over synthetic reviews",
+            plan: dlsa::plan,
             run: dlsa::run,
         },
         PipelineEntry {
             name: "dien",
             description: "DIEN CTR inference over a synthetic JSON review log",
+            plan: dien::plan,
             run: dien::run,
         },
         PipelineEntry {
             name: "video_streamer",
             description: "Decode → SSD detection → NMS → metadata upload",
+            plan: video_streamer::plan,
             run: video_streamer::run,
         },
         PipelineEntry {
             name: "anomaly",
             description: "ResNet features + PCA + Gaussian anomaly scoring",
+            plan: anomaly::plan,
             run: anomaly::run,
         },
         PipelineEntry {
             name: "face",
             description: "SSD face detect → ResNet embed → gallery match",
+            plan: face::plan,
             run: face::run,
         },
     ]
 }
 
-/// Run a pipeline by name.
+/// Run a pipeline by name under `cfg.exec`.
 pub fn run_by_name(name: &str, cfg: &RunConfig) -> anyhow::Result<PipelineResult> {
     let entry = registry()
         .into_iter()
         .find(|e| e.name == name)
         .ok_or_else(|| anyhow::anyhow!("unknown pipeline: {name}"))?;
-    (entry.run)(cfg)
+    run_plan(entry.plan, cfg)
 }
 
 #[cfg(test)]
@@ -220,5 +276,34 @@ mod tests {
         assert_eq!(cfg.scaled(1000, 16), 16);
         let cfg = RunConfig { scale: 2.0, ..Default::default() };
         assert_eq!(cfg.scaled(1000, 16), 2000);
+    }
+
+    #[test]
+    fn default_exec_is_sequential() {
+        assert_eq!(RunConfig::default().exec, ExecMode::Sequential);
+    }
+
+    #[test]
+    fn every_registry_entry_builds_a_plan_or_reports_missing_artifacts() {
+        // Plan construction must either succeed or fail with a clean
+        // artifacts/manifest error (DL pipelines without `make artifacts`)
+        // — never panic.
+        let cfg = RunConfig { scale: 0.05, ..Default::default() };
+        for e in registry() {
+            match (e.plan)(&cfg) {
+                Ok(plan) => {
+                    assert!(plan.stage_count() >= 3, "{} too small", e.name);
+                    assert_eq!(plan.name(), e.name);
+                }
+                Err(err) => {
+                    let msg = format!("{err:#}").to_lowercase();
+                    assert!(
+                        msg.contains("manifest") || msg.contains("artifact"),
+                        "{}: unexpected plan error: {err:#}",
+                        e.name
+                    );
+                }
+            }
+        }
     }
 }

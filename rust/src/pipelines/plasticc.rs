@@ -5,13 +5,15 @@
 //! Table 2 axes: Modin 30×, sklearnex 8×, XGBoost 1× (hist is already the
 //! shipped default — our bench shows hist vs exact explicitly instead).
 //!
+//! Declared as a [`Plan`] over a single threaded state (tabular shape).
+//!
 //! Dataset: synthetic light curves. Two object classes differ in flux
 //! variability (transients vs periodic), so per-object flux statistics
 //! are genuinely discriminative and the GBT accuracy is a real metric.
 
 use super::{PipelineResult, RunConfig};
 use crate::coordinator::telemetry::Category;
-use crate::coordinator::SequentialPipeline;
+use crate::coordinator::{Plan, PlanOutput};
 use crate::dataframe::{self as df, groupby::Agg, DType, DataFrame, Engine, Expr};
 use crate::linalg::Matrix;
 use crate::ml::{metrics, Gbt, GbtParams, TreeMethod};
@@ -66,13 +68,13 @@ struct State {
     proba: Vec<f64>,
 }
 
-/// Run the PLAsTiCC pipeline.
-pub fn run(cfg: &RunConfig) -> anyhow::Result<PipelineResult> {
+/// Build the PLAsTiCC plan.
+pub fn plan(cfg: &RunConfig) -> anyhow::Result<Plan> {
     let objects = cfg.scaled(300, 24);
     let epochs = 40;
     let engine: Engine = cfg.toggles.dataframe.into();
     let (csv, labels) = generate_csv(objects, epochs, cfg.seed);
-    let state = State {
+    let mut initial = Some(State {
         csv,
         labels,
         frame: DataFrame::new(),
@@ -86,108 +88,128 @@ pub fn run(cfg: &RunConfig) -> anyhow::Result<PipelineResult> {
         y_test: vec![],
         pred: vec![],
         proba: vec![],
-    };
+    });
 
-    let pipeline = SequentialPipeline::new("plasticc")
-        .stage("load_data", Category::Pre, |mut s: State| {
-            s.frame = df::csv::read_str(&s.csv, s.engine)?;
-            s.csv.clear();
-            Ok(s)
-        })
-        .stage("drop_columns", Category::Pre, |mut s| {
-            s.frame = s.frame.drop_cols(&["mjd", "detected"]);
-            Ok(s)
-        })
-        .stage("arithmetic_ops", Category::Pre, |mut s| {
-            // SNR column feeds the aggregations.
-            let snr = Expr::col("flux").div(Expr::col("flux_err"));
-            s.frame = df::ops::with_column(&s.frame, "snr", &snr, s.engine)?;
-            Ok(s)
-        })
-        .stage("groupby_aggregation", Category::Pre, |mut s| {
-            s.features = df::groupby::groupby_agg(
-                &s.frame,
-                &["object_id"],
-                &[
-                    ("flux", Agg::Mean),
-                    ("flux", Agg::Std),
-                    ("flux", Agg::Min),
-                    ("flux", Agg::Max),
-                    ("snr", Agg::Mean),
-                    ("snr", Agg::Std),
-                    ("flux_err", Agg::Mean),
-                ],
-                s.engine,
-            )?;
-            s.frame = DataFrame::new();
-            Ok(s)
-        })
-        .stage("type_conversion", Category::Pre, |mut s| {
-            s.features = df::ops::astype(&s.features, "object_id", DType::I64, s.engine)?;
-            Ok(s)
-        })
-        .stage("train_test_split", Category::Pre, |mut s| {
-            // Features come out grouped by object id (0..objects); attach
-            // labels then split.
-            let n = s.features.nrows();
-            let ids = s.features.i64s("object_id")?.to_vec();
-            let labels: Vec<f64> = ids.iter().map(|&i| s.labels[i as usize]).collect();
-            let cols = [
-                "flux_mean", "flux_std", "flux_min", "flux_max", "snr_mean", "snr_std",
-                "flux_err_mean",
-            ];
-            let mut x = Matrix::zeros(n, cols.len());
-            for (j, c) in cols.iter().enumerate() {
-                let v = s.features.f64s(c)?;
-                for i in 0..n {
-                    x.set(i, j, v[i]);
-                }
+    Ok(Plan::source("plasticc", "source", Category::Pre, move |emit| {
+        if let Some(state) = initial.take() {
+            emit(state);
+        }
+    })
+    .map("load_data", Category::Pre, |mut s: State| {
+        s.frame = df::csv::read_str(&s.csv, s.engine)?;
+        s.csv.clear();
+        Ok(s)
+    })
+    .map("drop_columns", Category::Pre, |mut s| {
+        s.frame = s.frame.drop_cols(&["mjd", "detected"]);
+        Ok(s)
+    })
+    .map("arithmetic_ops", Category::Pre, |mut s| {
+        // SNR column feeds the aggregations.
+        let snr = Expr::col("flux").div(Expr::col("flux_err"));
+        s.frame = df::ops::with_column(&s.frame, "snr", &snr, s.engine)?;
+        Ok(s)
+    })
+    .map("groupby_aggregation", Category::Pre, |mut s| {
+        s.features = df::groupby::groupby_agg(
+            &s.frame,
+            &["object_id"],
+            &[
+                ("flux", Agg::Mean),
+                ("flux", Agg::Std),
+                ("flux", Agg::Min),
+                ("flux", Agg::Max),
+                ("snr", Agg::Mean),
+                ("snr", Agg::Std),
+                ("flux_err", Agg::Mean),
+            ],
+            s.engine,
+        )?;
+        s.frame = DataFrame::new();
+        Ok(s)
+    })
+    .map("type_conversion", Category::Pre, |mut s| {
+        s.features = df::ops::astype(&s.features, "object_id", DType::I64, s.engine)?;
+        Ok(s)
+    })
+    .map("train_test_split", Category::Pre, |mut s| {
+        // Features come out grouped by object id (0..objects); attach
+        // labels then split.
+        let n = s.features.nrows();
+        let ids = s.features.i64s("object_id")?.to_vec();
+        let labels: Vec<f64> = ids.iter().map(|&i| s.labels[i as usize]).collect();
+        let cols = [
+            "flux_mean", "flux_std", "flux_min", "flux_max", "snr_mean", "snr_std",
+            "flux_err_mean",
+        ];
+        let mut x = Matrix::zeros(n, cols.len());
+        for (j, c) in cols.iter().enumerate() {
+            let v = s.features.f64s(c)?;
+            for i in 0..n {
+                x.set(i, j, v[i]);
             }
-            // Deterministic shuffled split 75/25.
-            let mut idx: Vec<usize> = (0..n).collect();
-            let mut rng = Rng::new(s.seed ^ 0x51);
-            rng.shuffle(&mut idx);
-            let n_test = n / 4;
-            let (test_idx, train_idx) = idx.split_at(n_test);
-            let take = |rows: &[usize]| {
-                let mut xm = Matrix::zeros(rows.len(), cols.len());
-                let mut ym = Vec::with_capacity(rows.len());
-                for (r, &i) in rows.iter().enumerate() {
-                    for j in 0..cols.len() {
-                        xm.set(r, j, x.get(i, j));
-                    }
-                    ym.push(labels[i]);
+        }
+        // Deterministic shuffled split 75/25.
+        let mut idx: Vec<usize> = (0..n).collect();
+        let mut rng = Rng::new(s.seed ^ 0x51);
+        rng.shuffle(&mut idx);
+        let n_test = n / 4;
+        let (test_idx, train_idx) = idx.split_at(n_test);
+        let take = |rows: &[usize]| {
+            let mut xm = Matrix::zeros(rows.len(), cols.len());
+            let mut ym = Vec::with_capacity(rows.len());
+            for (r, &i) in rows.iter().enumerate() {
+                for j in 0..cols.len() {
+                    xm.set(r, j, x.get(i, j));
                 }
-                (xm, ym)
-            };
-            let (xt, yt) = take(train_idx);
-            s.x_train = xt;
-            s.y_train = yt;
-            let (xs, ys) = take(test_idx);
-            s.x_test = xs;
-            s.y_test = ys;
-            Ok(s)
-        })
-        .stage("gbt_train_infer", Category::Ai, |mut s| {
-            let method = match s.ml {
-                OptLevel::Baseline => TreeMethod::Exact,
-                OptLevel::Optimized => TreeMethod::Hist,
-            };
-            let gbt = Gbt::fit(
-                &s.x_train,
-                &s.y_train,
-                GbtParams { method, n_trees: 25, max_depth: 4, ..Default::default() },
-            );
-            s.pred = gbt.predict(&s.x_test);
-            s.proba = gbt.predict_proba(&s.x_test);
-            Ok(s)
-        });
+                ym.push(labels[i]);
+            }
+            (xm, ym)
+        };
+        let (xt, yt) = take(train_idx);
+        s.x_train = xt;
+        s.y_train = yt;
+        let (xs, ys) = take(test_idx);
+        s.x_test = xs;
+        s.y_test = ys;
+        Ok(s)
+    })
+    .map("gbt_train_infer", Category::Ai, |mut s| {
+        let method = match s.ml {
+            OptLevel::Baseline => TreeMethod::Exact,
+            OptLevel::Optimized => TreeMethod::Hist,
+        };
+        let gbt = Gbt::fit(
+            &s.x_train,
+            &s.y_train,
+            GbtParams { method, n_trees: 25, max_depth: 4, ..Default::default() },
+        );
+        s.pred = gbt.predict(&s.x_test);
+        s.proba = gbt.predict_proba(&s.x_test);
+        Ok(s)
+    })
+    .sink(
+        "finalize",
+        Category::Post,
+        None,
+        |slot: &mut Option<State>, s: State| {
+            *slot = Some(s);
+            Ok(())
+        },
+        move |slot| {
+            let state =
+                slot.ok_or_else(|| anyhow::anyhow!("plasticc pipeline produced no result"))?;
+            let mut m = BTreeMap::new();
+            m.insert("accuracy".to_string(), metrics::accuracy(&state.y_test, &state.pred));
+            m.insert("auc".to_string(), metrics::auc(&state.y_test, &state.proba));
+            Ok(PlanOutput { metrics: m, items: objects * epochs })
+        },
+    ))
+}
 
-    let (state, report) = pipeline.run(state)?;
-    let mut m = BTreeMap::new();
-    m.insert("accuracy".to_string(), metrics::accuracy(&state.y_test, &state.pred));
-    m.insert("auc".to_string(), metrics::auc(&state.y_test, &state.proba));
-    Ok(PipelineResult { report, metrics: m, items: objects * epochs })
+/// Run the PLAsTiCC pipeline under `cfg.exec`.
+pub fn run(cfg: &RunConfig) -> anyhow::Result<PipelineResult> {
+    super::run_plan(plan, cfg)
 }
 
 #[cfg(test)]
@@ -196,7 +218,7 @@ mod tests {
     use crate::pipelines::Toggles;
 
     fn small(toggles: Toggles) -> PipelineResult {
-        run(&RunConfig { toggles, scale: 0.3, seed: 11 }).unwrap()
+        run(&RunConfig { toggles, scale: 0.3, seed: 11, ..Default::default() }).unwrap()
     }
 
     #[test]
@@ -227,8 +249,20 @@ mod tests {
 
     #[test]
     fn optimized_faster_e2e() {
-        let base = run(&RunConfig { toggles: Toggles::baseline(), scale: 0.5, seed: 2 }).unwrap();
-        let opt = run(&RunConfig { toggles: Toggles::optimized(), scale: 0.5, seed: 2 }).unwrap();
+        let base = run(&RunConfig {
+            toggles: Toggles::baseline(),
+            scale: 0.5,
+            seed: 2,
+            ..Default::default()
+        })
+        .unwrap();
+        let opt = run(&RunConfig {
+            toggles: Toggles::optimized(),
+            scale: 0.5,
+            seed: 2,
+            ..Default::default()
+        })
+        .unwrap();
         let speedup = base.report.total().as_secs_f64() / opt.report.total().as_secs_f64();
         assert!(speedup > 1.2, "plasticc speedup {speedup}");
     }

@@ -5,13 +5,16 @@
 //! upload. Table 2 axes: Intel-TF 1.36× (fused vs unfused graph) and INT8
 //! 3.64× (INT8 artifact).
 //!
-//! This is a **streaming** pipeline: stages run on their own threads
-//! behind bounded queues (backpressure), with model execution served by a
-//! [`ModelServer`] — the deployment shape of a real-time endpoint.
+//! Declared as a per-frame [`Plan`] — the streaming shape: under the
+//! streaming executor every stage runs on its own thread behind bounded
+//! queues (backpressure), with model execution served by the shared
+//! [`ModelServer`] — the deployment shape of a real-time endpoint. The
+//! same plan also runs sequentially or as N replicated camera streams
+//! (`--exec multi:N`, the paper's §3.4 anomaly/camera scaling shape).
 
 use super::{PipelineResult, RunConfig};
 use crate::coordinator::telemetry::Category;
-use crate::coordinator::StreamPipeline;
+use crate::coordinator::{Plan, PlanOutput};
 use crate::media::codec::{decode, EncodedFrame};
 use crate::media::synth::{FrameTruth, VideoSource};
 use crate::media::{normalize, resize, Image, ResizeFilter};
@@ -19,6 +22,7 @@ use crate::runtime::{ModelServer, Tensor};
 use crate::vision::{decode_detections, iou, nms, Detection, MetadataSink, NmsKind};
 use crate::OptLevel;
 use std::collections::BTreeMap;
+use std::time::Instant;
 
 const IMG: usize = 32;
 const SRC_H: usize = 96;
@@ -32,8 +36,8 @@ fn model_name(dl: OptLevel, quant: bool) -> &'static str {
     }
 }
 
-/// Run the video-streamer pipeline.
-pub fn run(cfg: &RunConfig) -> anyhow::Result<PipelineResult> {
+/// Build the video-streamer plan.
+pub fn plan(cfg: &RunConfig) -> anyhow::Result<Plan> {
     let frames = cfg.scaled(48, 8);
     let model = model_name(cfg.toggles.dl, cfg.toggles.quant);
     let nms_kind = match cfg.toggles.nms {
@@ -41,14 +45,12 @@ pub fn run(cfg: &RunConfig) -> anyhow::Result<PipelineResult> {
         OptLevel::Optimized => NmsKind::Sorted,
     };
     let is_chain = cfg.toggles.dl == OptLevel::Baseline;
+
+    // Steady-state: warm the artifacts on the shared server outside the
+    // timed plan.
     let client = ModelServer::shared()?;
     if is_chain {
-        // Warm the per-stage artifacts of the graph-break chain.
-        client.warmup(&[
-            "ssd_unfused_stem_b1",
-            "ssd_unfused_body_b1",
-            "ssd_unfused_heads_b1",
-        ])?;
+        client.warmup_chain(model)?;
     } else {
         client.warmup(&[model])?;
     }
@@ -60,66 +62,76 @@ pub fn run(cfg: &RunConfig) -> anyhow::Result<PipelineResult> {
             (i, f, t)
         })
         .collect();
-
-    let t0 = std::time::Instant::now();
     let mut encoded = Some(encoded);
+    let t0 = Instant::now();
+
     // §Perf note: the camera source only *hands over* encoded frames (its
-    // stage time would otherwise absorb downstream backpressure, see
-    // stream.rs); the real decode work is its own timed stage.
-    let pipeline = StreamPipeline::source("camera_source", 4, move |emit| {
+    // stage time would otherwise absorb downstream backpressure under the
+    // streaming executor); the real decode work is its own timed stage.
+    Ok(Plan::source("video_streamer", "camera_source", Category::Pre, move |emit| {
         for item in encoded.take().into_iter().flatten() {
             emit(item);
         }
     })
-    .stage(
+    .map(
         "video_decode",
         Category::Pre,
-        |(i, frame, truth): (usize, EncodedFrame, FrameTruth)| {
-            vec![(i, decode(&frame), truth)]
-        },
+        |(i, frame, truth): (usize, EncodedFrame, FrameTruth)| Ok((i, decode(&frame), truth)),
     )
-    .stage(
+    .map(
         "normalize_resize",
         Category::Pre,
         |(i, img, truth): (usize, Image, FrameTruth)| {
             let mut small = resize(&img, IMG, IMG, ResizeFilter::Bilinear);
             normalize(&mut small, [0.45; 3], [0.25; 3]);
-            vec![(i, small, truth)]
+            Ok((i, small, truth))
         },
     )
-    .stage("ssd_inference", Category::Ai, move |(i, img, truth): (usize, Image, FrameTruth)| {
-        let input = Tensor::f32(&[1, IMG, IMG, 3], img.data.clone());
-        let result = if is_chain {
-            client.run_chain(model, vec![input])
-        } else {
-            client.run(model, vec![input])
-        };
-        match result {
-            Ok(out) => vec![(i, out, truth)],
-            Err(e) => {
-                crate::log_warn!("ssd inference failed on frame {i}: {e}");
-                vec![]
+    .flat_map(
+        "ssd_inference",
+        Category::Ai,
+        move |(i, img, truth): (usize, Image, FrameTruth)| {
+            let input = Tensor::f32(&[1, IMG, IMG, 3], img.data.clone());
+            let result = if is_chain {
+                client.run_chain(model, vec![input])
+            } else {
+                client.run(model, vec![input])
+            };
+            match result {
+                Ok(out) => Ok(vec![(i, out, truth)]),
+                Err(e) => {
+                    // Real-time endpoints drop bad frames, not the stream.
+                    crate::log_warn!("ssd inference failed on frame {i}: {e}");
+                    Ok(vec![])
+                }
             }
-        }
-    })
-    .stage(
+        },
+    )
+    .map(
         "bbox_and_label",
         Category::Post,
         move |(i, out, truth): (usize, Vec<Tensor>, FrameTruth)| {
-            let loc = out[0].as_f32().unwrap();
-            let cls = out[1].as_f32().unwrap();
+            let loc = out[0]
+                .as_f32()
+                .ok_or_else(|| anyhow::anyhow!("ssd returned non-f32 locations"))?;
+            let cls = out[1]
+                .as_f32()
+                .ok_or_else(|| anyhow::anyhow!("ssd returned non-f32 scores"))?;
             let dets = decode_detections(loc, cls, 8, 2, 3, IMG as f32, 0.45);
             let kept = nms(&dets, 0.4, nms_kind);
-            vec![(i, kept, truth)]
+            Ok((i, kept, truth))
         },
-    );
-
-    let ((sink, recall_hits, recall_total), report) = pipeline.sink(
+    )
+    .sink(
         "db_upload",
         Category::Post,
         (MetadataSink::new(), 0usize, 0usize),
-        |(sink, hits, total), (i, dets, truth): (usize, Vec<Detection>, FrameTruth)| {
-            sink.upload(&crate::vision::sink::FrameRecord { frame_no: i, detections: dets.clone() });
+        |(sink, hits, total): &mut (MetadataSink, usize, usize),
+         (i, dets, truth): (usize, Vec<Detection>, FrameTruth)| {
+            sink.upload(&crate::vision::sink::FrameRecord {
+                frame_no: i,
+                detections: dets.clone(),
+            });
             // Quality: planted-truth recall at IoU ≥ 0.2 (truth boxes are
             // in source pixels; scale to model input).
             let sy = IMG as f32 / SRC_H as f32;
@@ -131,24 +143,29 @@ pub fn run(cfg: &RunConfig) -> anyhow::Result<PipelineResult> {
                     *hits += 1;
                 }
             }
+            Ok(())
         },
-    );
-    let wall = t0.elapsed();
+        move |(sink, hits, total)| {
+            let wall = t0.elapsed();
+            let mut m = BTreeMap::new();
+            m.insert("fps".to_string(), frames as f64 / wall.as_secs_f64().max(1e-12));
+            m.insert("uploaded_frames".to_string(), sink.len() as f64);
+            m.insert("db_bytes".to_string(), sink.bytes_written() as f64);
+            m.insert("truth_recall".to_string(), hits as f64 / total.max(1) as f64);
+            Ok(PlanOutput { metrics: m, items: frames })
+        },
+    ))
+}
 
-    let mut m = BTreeMap::new();
-    m.insert("fps".to_string(), frames as f64 / wall.as_secs_f64().max(1e-12));
-    m.insert("uploaded_frames".to_string(), sink.len() as f64);
-    m.insert("db_bytes".to_string(), sink.bytes_written() as f64);
-    m.insert(
-        "truth_recall".to_string(),
-        recall_hits as f64 / recall_total.max(1) as f64,
-    );
-    Ok(PipelineResult { report, metrics: m, items: frames })
+/// Run the video-streamer pipeline under `cfg.exec`.
+pub fn run(cfg: &RunConfig) -> anyhow::Result<PipelineResult> {
+    super::run_plan(plan, cfg)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::ExecMode;
     use crate::pipelines::Toggles;
 
     fn artifacts_ready() -> bool {
@@ -156,7 +173,7 @@ mod tests {
     }
 
     fn small(toggles: Toggles) -> PipelineResult {
-        run(&RunConfig { toggles, scale: 0.25, seed: 12 }).unwrap()
+        run(&RunConfig { toggles, scale: 0.25, seed: 12, ..Default::default() }).unwrap()
     }
 
     #[test]
@@ -214,5 +231,23 @@ mod tests {
             ]
         );
         assert!(res.report.stages.iter().all(|s| s.items > 0));
+    }
+
+    #[test]
+    fn streaming_executor_preserves_uploads() {
+        if !artifacts_ready() {
+            return;
+        }
+        let cfg = RunConfig {
+            toggles: Toggles::optimized(),
+            scale: 0.25,
+            seed: 12,
+            ..Default::default()
+        };
+        let seq = run(&cfg).unwrap();
+        let stream = run(&RunConfig { exec: ExecMode::Streaming, ..cfg }).unwrap();
+        assert_eq!(seq.metric("uploaded_frames"), stream.metric("uploaded_frames"));
+        assert_eq!(seq.metric("db_bytes"), stream.metric("db_bytes"));
+        assert_eq!(seq.metric("truth_recall"), stream.metric("truth_recall"));
     }
 }

@@ -10,16 +10,42 @@ use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
 /// Engine errors.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum EngineError {
-    #[error("unknown model: {0}")]
     UnknownModel(String),
-    #[error("{model}: input {index}: expected {expected}, got {got}")]
+    UnknownChain(String),
     BadInput { model: String, index: usize, expected: String, got: String },
-    #[error("xla error: {0}")]
     Xla(String),
-    #[error("manifest error: {0}")]
-    Manifest(#[from] super::manifest::ManifestError),
+    Manifest(super::manifest::ManifestError),
+}
+
+impl std::fmt::Display for EngineError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            EngineError::UnknownModel(m) => write!(f, "unknown model: {m}"),
+            EngineError::UnknownChain(c) => write!(f, "unknown stage chain: {c}"),
+            EngineError::BadInput { model, index, expected, got } => {
+                write!(f, "{model}: input {index}: expected {expected}, got {got}")
+            }
+            EngineError::Xla(m) => write!(f, "xla error: {m}"),
+            EngineError::Manifest(e) => write!(f, "manifest error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for EngineError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            EngineError::Manifest(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<super::manifest::ManifestError> for EngineError {
+    fn from(e: super::manifest::ManifestError) -> Self {
+        EngineError::Manifest(e)
+    }
 }
 
 impl From<xla::Error> for EngineError {
@@ -125,6 +151,22 @@ impl Engine {
         Ok(())
     }
 
+    /// Eagerly compile every stage of an unfused chain (warm-up for the
+    /// graph-break execution model); resolves the chain server-side so
+    /// callers don't need manifest access.
+    pub fn warmup_chain(&self, chain: &str) -> Result<(), EngineError> {
+        let stages = self
+            .manifest
+            .stage_chains
+            .get(chain)
+            .ok_or_else(|| EngineError::UnknownChain(chain.to_string()))?
+            .clone();
+        for stage in &stages {
+            self.compiled(stage)?;
+        }
+        Ok(())
+    }
+
     /// Execute a model on typed inputs; returns its (tuple) outputs.
     pub fn run(&self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>, EngineError> {
         let compiled = self.compiled(name)?;
@@ -156,7 +198,7 @@ impl Engine {
             .manifest
             .stage_chains
             .get(chain)
-            .ok_or_else(|| EngineError::UnknownModel(chain.to_string()))?
+            .ok_or_else(|| EngineError::UnknownChain(chain.to_string()))?
             .clone();
         let mut cur: Vec<Tensor> = inputs.to_vec();
         for stage in &stages {

@@ -40,12 +40,28 @@ pub struct Manifest {
 }
 
 /// Manifest load/parse errors.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum ManifestError {
-    #[error("cannot read {0}: {1}")]
     Io(PathBuf, std::io::Error),
-    #[error("manifest parse error: {0}")]
     Parse(String),
+}
+
+impl std::fmt::Display for ManifestError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ManifestError::Io(path, e) => write!(f, "cannot read {}: {e}", path.display()),
+            ManifestError::Parse(m) => write!(f, "manifest parse error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for ManifestError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            ManifestError::Io(_, e) => Some(e),
+            ManifestError::Parse(_) => None,
+        }
+    }
 }
 
 impl Manifest {

@@ -28,6 +28,10 @@ enum Request {
         models: Vec<String>,
         reply: mpsc::SyncSender<Result<(), String>>,
     },
+    WarmupChain {
+        chain: String,
+        reply: mpsc::SyncSender<Result<(), String>>,
+    },
 }
 
 /// Handle to a running model server; cloneable and `Send`.
@@ -103,6 +107,10 @@ impl ModelServer {
                                 models.iter().map(|s| s.as_str()).collect();
                             let _ = reply.send(engine.warmup(&names).map_err(|e| e.to_string()));
                         }
+                        Request::WarmupChain { chain, reply } => {
+                            let _ = reply
+                                .send(engine.warmup_chain(&chain).map_err(|e| e.to_string()));
+                        }
                     }
                 }
             })
@@ -147,6 +155,18 @@ impl ModelClient {
         let (reply, rx) = mpsc::sync_channel(1);
         self.tx
             .send(Request::RunChain { chain: chain.to_string(), inputs, reply })
+            .map_err(|_| EngineError::Xla("model server gone".into()))?;
+        rx.recv()
+            .map_err(|_| EngineError::Xla("model server dropped request".into()))?
+            .map_err(EngineError::Xla)
+    }
+
+    /// Pre-compile every stage of an unfused chain before serving; the
+    /// chain is resolved against the manifest on the server thread.
+    pub fn warmup_chain(&self, chain: &str) -> Result<(), EngineError> {
+        let (reply, rx) = mpsc::sync_channel(1);
+        self.tx
+            .send(Request::WarmupChain { chain: chain.to_string(), reply })
             .map_err(|_| EngineError::Xla("model server gone".into()))?;
         rx.recv()
             .map_err(|_| EngineError::Xla("model server dropped request".into()))?

@@ -1,0 +1,145 @@
+//! Executor-equivalence suite: the plan layer's core guarantee is that a
+//! pipeline's *results* are a property of its plan, not of the executor
+//! that ran it. For a fixed seed, every registry pipeline must produce
+//! identical deterministic metrics under Sequential, Streaming, and
+//! MultiInstance(n=1) execution — batch boundaries, thread scheduling,
+//! and queue sizes may differ; answers may not.
+//!
+//! Pipelines that execute model artifacts are skipped when `make
+//! artifacts` has not produced a manifest (the tabular three always run).
+
+use repro::coordinator::ExecMode;
+use repro::pipelines::{registry, run_by_name, RunConfig, Toggles};
+
+fn artifacts_ready() -> bool {
+    repro::runtime::default_artifacts_dir().join("manifest.json").exists()
+}
+
+fn needs_artifacts(name: &str) -> bool {
+    !matches!(name, "census" | "plasticc" | "iiot")
+}
+
+/// Wall-clock-valued metrics, excluded from cross-executor equality.
+const TIMING_METRICS: &[&str] = &["fps"];
+
+fn base_cfg() -> RunConfig {
+    RunConfig { toggles: Toggles::optimized(), scale: 0.1, seed: 0xE9, ..Default::default() }
+}
+
+#[test]
+fn all_executors_produce_identical_metrics() {
+    for e in registry() {
+        if needs_artifacts(e.name) && !artifacts_ready() {
+            eprintln!("skipping {} (no artifacts)", e.name);
+            continue;
+        }
+        let mut cfg = base_cfg();
+        cfg.exec = ExecMode::Sequential;
+        let seq = (e.run)(&cfg).unwrap_or_else(|err| panic!("{} sequential: {err:#}", e.name));
+        cfg.exec = ExecMode::Streaming;
+        let stream = (e.run)(&cfg).unwrap_or_else(|err| panic!("{} streaming: {err:#}", e.name));
+        cfg.exec = ExecMode::MultiInstance(1);
+        let multi = (e.run)(&cfg).unwrap_or_else(|err| panic!("{} multi(1): {err:#}", e.name));
+
+        for (mode, other) in [("streaming", &stream), ("multi:1", &multi)] {
+            assert_eq!(seq.items, other.items, "{} items differ under {mode}", e.name);
+            let keys: Vec<&String> = seq.metrics.keys().collect();
+            let other_keys: Vec<&String> = other.metrics.keys().collect();
+            assert_eq!(keys, other_keys, "{} metric keys differ under {mode}", e.name);
+            for (k, v) in &seq.metrics {
+                if TIMING_METRICS.contains(&k.as_str()) {
+                    continue;
+                }
+                let w = other.metric(k).unwrap();
+                assert!(
+                    (v - w).abs() < 1e-12,
+                    "{}.{k} differs under {mode}: {v} vs {w}",
+                    e.name
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn all_executors_visit_the_same_stages() {
+    for e in registry() {
+        if needs_artifacts(e.name) && !artifacts_ready() {
+            continue;
+        }
+        let mut cfg = base_cfg();
+        let stage_names = |res: &repro::pipelines::PipelineResult| -> Vec<String> {
+            res.report.stages.iter().map(|s| s.name.clone()).collect()
+        };
+        cfg.exec = ExecMode::Sequential;
+        let seq = stage_names(&(e.run)(&cfg).unwrap());
+        cfg.exec = ExecMode::Streaming;
+        let stream_res = (e.run)(&cfg).unwrap();
+        let stream = stage_names(&stream_res);
+        cfg.exec = ExecMode::MultiInstance(1);
+        let multi = stage_names(&(e.run)(&cfg).unwrap());
+        assert_eq!(seq, stream, "{}", e.name);
+        assert_eq!(seq, multi, "{}", e.name);
+        // Every stage was visited under the streaming executor too.
+        for s in &stream_res.report.stages {
+            assert!(s.items > 0, "{}: stage {} idle under streaming", e.name, s.name);
+        }
+    }
+}
+
+#[test]
+fn multi_instance_scales_items_and_reports_scaling_metrics() {
+    // Tabular pipelines need no artifacts; each replica processes its own
+    // stream, so items sum across instances.
+    for name in ["census", "plasticc", "iiot"] {
+        let mut cfg = base_cfg();
+        cfg.exec = ExecMode::Sequential;
+        let seq = run_by_name(name, &cfg).unwrap();
+        cfg.exec = ExecMode::MultiInstance(2);
+        let multi = run_by_name(name, &cfg).unwrap();
+        assert_eq!(multi.items, 2 * seq.items, "{name}");
+        assert_eq!(multi.metric("scaling_instances"), Some(2.0), "{name}");
+        let fairness = multi.metric("scaling_fairness").unwrap();
+        assert!((0.0..=1.0).contains(&fairness), "{name}: fairness {fairness}");
+        assert!(multi.metric("scaling_throughput").unwrap() > 0.0, "{name}");
+        let p50 = multi.metric("scaling_latency_p50_ms").unwrap();
+        let p95 = multi.metric("scaling_latency_p95_ms").unwrap();
+        assert!(p95 >= p50, "{name}: p95 {p95} < p50 {p50}");
+        // Single-instance runs must NOT carry scaling metrics (so n=1 is
+        // bit-identical to sequential).
+        assert!(seq.metric("scaling_instances").is_none(), "{name}");
+    }
+}
+
+#[test]
+fn multi_instance_replicas_get_distinct_seeds() {
+    // Instance i runs seed+i: census R² is seed-dependent noise-wise but
+    // metrics come from instance 0, which must match the sequential run
+    // at the same seed.
+    let mut cfg = base_cfg();
+    cfg.exec = ExecMode::Sequential;
+    let seq = run_by_name("census", &cfg).unwrap();
+    cfg.exec = ExecMode::MultiInstance(3);
+    let multi = run_by_name("census", &cfg).unwrap();
+    assert!(
+        (seq.metric("r2").unwrap() - multi.metric("r2").unwrap()).abs() < 1e-12,
+        "instance 0 must use the base seed"
+    );
+}
+
+#[test]
+fn streaming_is_deterministic_across_repeats() {
+    for name in ["census", "iiot"] {
+        let mut cfg = base_cfg();
+        cfg.exec = ExecMode::Streaming;
+        let a = run_by_name(name, &cfg).unwrap();
+        let b = run_by_name(name, &cfg).unwrap();
+        for (k, v) in &a.metrics {
+            if TIMING_METRICS.contains(&k.as_str()) {
+                continue;
+            }
+            let w = b.metric(k).unwrap();
+            assert!((v - w).abs() < 1e-12, "{name}.{k}: {v} vs {w}");
+        }
+    }
+}
