@@ -6,11 +6,16 @@
 //! paper's (different substrate, single core — see DESIGN.md §2); the
 //! *shape* to hold is which cells are large vs small.
 //!
+//! Each (pipeline, toggles) cell opens one warm `Session` and executes
+//! its pre-generated payload per iteration, so the medians measure the
+//! pipeline, not repeated data generation or model compiles.
+//!
 //! ```sh
 //! cargo bench --bench table2_optimizations
 //! ```
 
-use repro::pipelines::{run_by_name, RunConfig, Toggles};
+use repro::pipelines::{RunConfig, Toggles};
+use repro::service::Session;
 use repro::util::fmt::{self, Table};
 use repro::OptLevel;
 
@@ -67,14 +72,19 @@ fn cells() -> Vec<(&'static str, Axis, &'static str)> {
 }
 
 fn median_total(name: &str, cfg: &RunConfig, iters: usize) -> f64 {
-    let mut samples: Vec<f64> = (0..iters)
+    let Ok(session) = Session::open(name, *cfg) else {
+        return f64::NAN;
+    };
+    let payload = session.payload();
+    let mut samples: Vec<f64> = (0..iters.max(1))
         .map(|_| {
-            run_by_name(name, cfg)
-                .map(|r| r.report.total().as_secs_f64())
+            session
+                .execute(payload.clone())
+                .map(|(res, _)| res.report.total().as_secs_f64())
                 .unwrap_or(f64::NAN)
         })
         .collect();
-    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    samples.sort_by(|a, b| a.total_cmp(b));
     samples[samples.len() / 2]
 }
 

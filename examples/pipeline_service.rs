@@ -1,0 +1,66 @@
+//! PipelineService quickstart: open warm sessions for three pipelines,
+//! push a mixed-priority burst through a small admission queue, and read
+//! back typed responses plus the service's latency percentiles.
+//!
+//! ```sh
+//! cargo run --example pipeline_service
+//! ```
+
+use repro::pipelines::{RunConfig, Toggles};
+use repro::service::{PipelineService, Priority, Request, Response, ServiceConfig};
+
+fn main() -> anyhow::Result<()> {
+    let defaults = RunConfig {
+        toggles: Toggles::optimized(),
+        scale: 0.1,
+        seed: 0x5EED,
+        ..Default::default()
+    };
+    // A deliberately tight queue so the burst below exercises shedding.
+    let svc = PipelineService::open(
+        &["census", "plasticc", "iiot"],
+        ServiceConfig { defaults, queue_depth: 4, workers: 2, ..Default::default() },
+    )?;
+
+    let names = ["census", "plasticc", "iiot"];
+    let priorities = [Priority::Normal, Priority::High, Priority::Low];
+    let tickets: Vec<_> = (0..9)
+        .map(|i| {
+            svc.submit(
+                Request::synthetic(names[i % names.len()])
+                    .with_priority(priorities[i % priorities.len()]),
+            )
+        })
+        .collect::<anyhow::Result<_>>()?;
+
+    for ticket in tickets {
+        match ticket.wait() {
+            Response::Completed(c) => println!(
+                "{:<9} {:<6} {}  (queued {:?}, ran {:?})",
+                c.pipeline,
+                c.priority.label(),
+                c.output.summary(),
+                c.queue_wait,
+                c.service_time
+            ),
+            Response::Shed { pipeline, priority, reason, .. } => {
+                println!("{pipeline:<9} {priority:<6} shed ({})", reason.label())
+            }
+            Response::Failed { pipeline, error } => {
+                println!("{pipeline:<9} FAILED: {error}")
+            }
+        }
+    }
+
+    let stats = svc.stats();
+    let report = svc.scaling_report();
+    println!(
+        "\ncompleted {} shed {} failed {};  request latency p50 {:?} p95 {:?}",
+        stats.completed,
+        stats.shed,
+        stats.failed,
+        report.latency_p50(),
+        report.latency_p95()
+    );
+    Ok(())
+}

@@ -13,6 +13,15 @@
 //! yields the Figure 1 breakdown, and all three produce identical
 //! deterministic metrics for a fixed seed — the executor-equivalence
 //! suite (`rust/tests/executor_equivalence.rs`) asserts exactly that.
+//!
+//! Every item is stamped at source emission and its end-to-end latency
+//! recorded when it completes the sink, so [`Report::latencies`] carries
+//! measured per-item samples under every executor and the scaling
+//! percentiles no longer fall back to instance wall time. Under the
+//! streaming executor these are true in-flight latencies; under the
+//! stage-at-a-time sequential executor an item's sink completion
+//! necessarily trails the whole upstream pass, so its samples skew
+//! toward the run duration (an honest property of that execution shape).
 
 use super::batcher::DynamicBatcher;
 use super::plan::{DynItem, NodeKind, Plan, PlanOutput};
@@ -70,6 +79,15 @@ impl std::fmt::Display for ExecMode {
 /// Bound on every inter-stage queue in streaming mode.
 pub const DEFAULT_QUEUE_CAP: usize = 8;
 
+/// An in-flight item plus its source-emission instant; the stamp rides
+/// along so the sink can record a true per-item end-to-end latency.
+/// Batch nodes keep the earliest stamp of their members (a batch is as
+/// old as its oldest item).
+struct Stamped {
+    born: Instant,
+    item: DynItem,
+}
+
 /// What an executor returns: telemetry, the plan's output, and (for
 /// multi-instance) the scaling aggregate.
 pub struct ExecOutcome {
@@ -106,12 +124,12 @@ pub fn run_sequential(plan: Plan) -> anyhow::Result<ExecOutcome> {
     let (sink_name, sink_cat, mut sink_fn) = sink;
 
     let handle = telemetry.stage(&src_name, src_cat);
-    let mut items: Vec<DynItem> = Vec::new();
+    let mut items: Vec<Stamped> = Vec::new();
     let t0 = Instant::now();
     let mut produced = 0usize;
     produce(&mut |item| {
         produced += 1;
-        items.push(item);
+        items.push(Stamped { born: Instant::now(), item });
     });
     handle.record(t0.elapsed(), produced);
 
@@ -120,11 +138,11 @@ pub fn run_sequential(plan: Plan) -> anyhow::Result<ExecOutcome> {
         match node.kind {
             NodeKind::FlatMap(mut f) => {
                 let mut next = Vec::with_capacity(items.len());
-                for item in items {
+                for Stamped { born, item } in items {
                     let t0 = Instant::now();
                     let outs = f(item)?;
                     handle.record(t0.elapsed(), 1);
-                    next.extend(outs);
+                    next.extend(outs.into_iter().map(|item| Stamped { born, item }));
                 }
                 items = next;
             }
@@ -133,9 +151,11 @@ pub fn run_sequential(plan: Plan) -> anyhow::Result<ExecOutcome> {
                 let mut next = Vec::new();
                 let mut iter = items.into_iter().peekable();
                 while iter.peek().is_some() {
-                    let batch: Vec<DynItem> = iter.by_ref().take(max).collect();
+                    let batch: Vec<Stamped> = iter.by_ref().take(max).collect();
+                    let born = batch.iter().map(|s| s.born).min().expect("non-empty batch");
+                    let members: Vec<DynItem> = batch.into_iter().map(|s| s.item).collect();
                     let t0 = Instant::now();
-                    next.push(group(batch)?);
+                    next.push(Stamped { born, item: group(members)? });
                     handle.record(t0.elapsed(), 1);
                 }
                 items = next;
@@ -144,10 +164,11 @@ pub fn run_sequential(plan: Plan) -> anyhow::Result<ExecOutcome> {
     }
 
     let handle = telemetry.stage(&sink_name, sink_cat);
-    for item in items {
+    for Stamped { born, item } in items {
         let t0 = Instant::now();
         sink_fn(item)?;
         handle.record(t0.elapsed(), 1);
+        telemetry.record_latency(born.elapsed());
     }
     let output = finish()?;
     Ok(ExecOutcome { report: telemetry.report(), output, scaling: None })
@@ -167,7 +188,7 @@ pub fn run_streaming(plan: Plan, queue_cap: usize) -> anyhow::Result<ExecOutcome
     let mut workers = Vec::with_capacity(nodes.len() + 1);
 
     let handle = telemetry.stage(&src_name, src_cat);
-    let (tx, mut tail) = bounded::<DynItem>(cap);
+    let (tx, mut tail) = bounded::<Stamped>(cap);
     workers.push(
         std::thread::Builder::new()
             .name(format!("plan-src-{src_name}"))
@@ -177,8 +198,9 @@ pub fn run_streaming(plan: Plan, queue_cap: usize) -> anyhow::Result<ExecOutcome
                 let mut count = 0usize;
                 produce(&mut |item| {
                     count += 1;
+                    let stamped = Stamped { born: Instant::now(), item };
                     let s0 = Instant::now();
-                    let _ = tx.send(item);
+                    let _ = tx.send(stamped);
                     blocked += s0.elapsed();
                 });
                 handle.record(t0.elapsed().saturating_sub(blocked), count);
@@ -188,7 +210,7 @@ pub fn run_streaming(plan: Plan, queue_cap: usize) -> anyhow::Result<ExecOutcome
 
     for node in nodes {
         let handle = telemetry.stage(&node.name, node.category);
-        let (tx, rx) = bounded::<DynItem>(cap);
+        let (tx, rx) = bounded::<Stamped>(cap);
         let upstream = tail;
         tail = rx;
         let errs = Arc::clone(&first_err);
@@ -196,13 +218,13 @@ pub fn run_streaming(plan: Plan, queue_cap: usize) -> anyhow::Result<ExecOutcome
             NodeKind::FlatMap(mut f) => std::thread::Builder::new()
                 .name(format!("plan-stage-{}", node.name))
                 .spawn(move || {
-                    while let Ok(item) = upstream.recv() {
+                    while let Ok(Stamped { born, item }) = upstream.recv() {
                         let t0 = Instant::now();
                         match f(item) {
                             Ok(outs) => {
                                 handle.record(t0.elapsed(), 1);
                                 for out in outs {
-                                    if tx.send(out).is_err() {
+                                    if tx.send(Stamped { born, item: out }).is_err() {
                                         return; // downstream gone
                                     }
                                 }
@@ -220,11 +242,15 @@ pub fn run_streaming(plan: Plan, queue_cap: usize) -> anyhow::Result<ExecOutcome
                 .spawn(move || {
                     let mut batcher = DynamicBatcher::new(upstream, cfg);
                     while let Some(batch) = batcher.next_batch() {
+                        let born =
+                            batch.iter().map(|s| s.born).min().expect("non-empty batch");
+                        let members: Vec<DynItem> =
+                            batch.into_iter().map(|s| s.item).collect();
                         let t0 = Instant::now();
-                        match group(batch) {
+                        match group(members) {
                             Ok(item) => {
                                 handle.record(t0.elapsed(), 1);
-                                if tx.send(item).is_err() {
+                                if tx.send(Stamped { born, item }).is_err() {
                                     return;
                                 }
                             }
@@ -241,13 +267,14 @@ pub fn run_streaming(plan: Plan, queue_cap: usize) -> anyhow::Result<ExecOutcome
     }
 
     let handle = telemetry.stage(&sink_name, sink_cat);
-    while let Ok(item) = tail.recv() {
+    while let Ok(Stamped { born, item }) = tail.recv() {
         let t0 = Instant::now();
         if let Err(e) = sink_fn(item) {
             first_err.lock().unwrap().get_or_insert(e);
             break;
         }
         handle.record(t0.elapsed(), 1);
+        telemetry.record_latency(born.elapsed());
     }
     // Dropping the tail receiver makes upstream sends fail fast if we
     // broke out early; workers then unwind without deadlocking.
@@ -319,7 +346,11 @@ pub fn run_multi_instance(
             instance: i,
             items: outcome.output.items,
             elapsed,
-            latencies: Vec::new(),
+            // Per-item samples recorded by the instance's sink. Each
+            // replica runs sequentially (stage-at-a-time), so samples
+            // approximate the instance pass for multi-item plans — still
+            // measured per item, no longer the wall-time fallback.
+            latencies: outcome.report.latencies.clone(),
         });
         reports.push(outcome.report);
         if first_output.is_none() {
@@ -340,6 +371,7 @@ fn merge_reports(reports: &[Report]) -> Report {
             m.busy += s.busy;
             m.items += s.items;
         }
+        merged.latencies.extend_from_slice(&r.latencies);
     }
     merged
 }
@@ -517,12 +549,68 @@ mod tests {
     #[test]
     fn exec_mode_parses() {
         assert_eq!(ExecMode::parse("sequential"), Some(ExecMode::Sequential));
+        assert_eq!(ExecMode::parse("seq"), Some(ExecMode::Sequential));
         assert_eq!(ExecMode::parse("streaming"), Some(ExecMode::Streaming));
+        assert_eq!(ExecMode::parse("stream"), Some(ExecMode::Streaming));
         assert_eq!(ExecMode::parse("multi"), Some(ExecMode::MultiInstance(2)));
         assert_eq!(ExecMode::parse("multi:6"), Some(ExecMode::MultiInstance(6)));
-        assert_eq!(ExecMode::parse("multi:0"), None);
         assert_eq!(ExecMode::parse("warp"), None);
         assert_eq!(ExecMode::MultiInstance(4).to_string(), "multi:4");
+    }
+
+    #[test]
+    fn exec_mode_display_parse_round_trips() {
+        let modes = [
+            ExecMode::Sequential,
+            ExecMode::Streaming,
+            ExecMode::MultiInstance(1),
+            ExecMode::MultiInstance(2),
+            ExecMode::MultiInstance(17),
+        ];
+        for mode in modes {
+            assert_eq!(ExecMode::parse(&mode.to_string()), Some(mode), "{mode}");
+        }
+    }
+
+    #[test]
+    fn exec_mode_rejects_malformed_multi_specs() {
+        // Zero instances is meaningless, a trailing colon has no count,
+        // and garbage suffixes must not parse as a count.
+        let bad_specs = [
+            "multi:0", "multi:", "multi:x", "multi:3x", "multi:-1", "multi: 2", "multi:2.5",
+            "", "sequentially",
+        ];
+        for bad in bad_specs {
+            assert_eq!(ExecMode::parse(bad), None, "{bad:?} must not parse");
+        }
+    }
+
+    #[test]
+    fn executors_record_per_item_latency_samples() {
+        // One sample per item that completes the sink, under both
+        // single-instance executors.
+        let seq = run_sequential(arithmetic_plan(100)).unwrap();
+        assert_eq!(seq.report.latencies.len(), seq.output.items);
+        let stream = run_streaming(arithmetic_plan(100), 4).unwrap();
+        assert_eq!(stream.report.latencies.len(), stream.output.items);
+        let p50 = stream.report.latency_percentile(0.5).unwrap();
+        let p95 = stream.report.latency_percentile(0.95).unwrap();
+        assert!(p95 >= p50);
+        // Batch plans record one sample per sink arrival (a batch).
+        let batched = run_sequential(batch_len_plan(20, 8, 1, 0)).unwrap();
+        assert_eq!(batched.report.latencies.len(), 3);
+    }
+
+    #[test]
+    fn multi_instance_pools_per_item_latencies() {
+        let multi = run_multi_instance(3, |_| Ok(arithmetic_plan(40))).unwrap();
+        let scaling = multi.scaling.as_ref().unwrap();
+        let per_instance = run_sequential(arithmetic_plan(40)).unwrap().output.items;
+        for inst in &scaling.instances {
+            assert_eq!(inst.latencies.len(), per_instance, "instance {}", inst.instance);
+        }
+        // Merged report pools every instance's samples.
+        assert_eq!(multi.report.latencies.len(), 3 * per_instance);
     }
 
     #[test]

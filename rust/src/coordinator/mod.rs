@@ -2,7 +2,7 @@
 //!
 //! The paper's eight workloads decompose into stages (decode → preprocess
 //! → inference → postprocess → upload). Since the plan/executor split,
-//! the layer has two halves:
+//! the layer has three halves:
 //!
 //! **What to run** — [`plan`]: a pipeline is declared once as a typed
 //! graph of named, [`Category`]-tagged stage nodes (source / map /
@@ -18,24 +18,33 @@
 //! * `MultiInstance(n)` — n replicated plan instances aggregated by the
 //!   scaler (§3.4 workload scaling).
 //!
+//! **Who gets to run** — [`router`]: the serving-side admission layer.
+//! An [`AdmissionQueue`] is a bounded priority queue with load shedding
+//! (displaced and rejected requests are first-class shed outcomes, not
+//! errors); [`crate::service::PipelineService`] routes typed requests
+//! through it onto warm per-pipeline sessions.
+//!
 //! Any pipeline runs under any executor (`repro run <p> --exec …`), and
 //! cross-cutting optimizations — dynamic batching ([`batcher`], a plan
 //! node), telemetry ([`telemetry`], recorded identically by every
-//! executor, the data behind Figure 1), instance scaling ([`scaler`]) —
-//! are implemented once against the IR instead of per workload. Future
-//! scaling work (async executor, sharded plans, request routing) plugs in
-//! as additional executors over the same plans.
+//! executor, the data behind Figure 1, now including per-item end-to-end
+//! latency samples), instance scaling ([`scaler`]), admission control
+//! ([`router`]) — are implemented once against the IR instead of per
+//! workload. Future scaling work (async executor, sharded plans) plugs
+//! in as additional executors over the same plans.
 
 pub mod telemetry;
 pub mod plan;
 pub mod exec;
 pub mod batcher;
+pub mod router;
 pub mod scaler;
 
 pub use batcher::{BatcherConfig, DynamicBatcher};
 pub use exec::{execute, run_multi_instance, run_sequential, run_streaming};
 pub use exec::{ExecMode, ExecOutcome};
 pub use plan::{Plan, PlanBuilder, PlanOutput};
+pub use router::{AdmissionQueue, AdmitOutcome, Priority, QueueStats};
 pub use scaler::{run_instances, run_instances_timed, LatencyRecorder};
 pub use scaler::{InstanceReport, ScalingReport};
 pub use telemetry::{Category, Report, StageReport, Telemetry};

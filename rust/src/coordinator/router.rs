@@ -1,0 +1,331 @@
+//! Request routing and admission control — the serving-side queue that
+//! sits between a [`crate::service::PipelineService`] session and the
+//! plan executors.
+//!
+//! ROADMAP named the batcher node as the natural seam for priority
+//! queues and load shedding; this module is that seam made explicit. An
+//! [`AdmissionQueue`] is a bounded, priority-laned MPMC queue:
+//!
+//! * **Admission** is synchronous and never blocks: a request either
+//!   enters a lane, displaces a strictly-lower-priority entry (the
+//!   displaced entry is *shed*, not dropped silently), or is itself shed
+//!   when nothing below its priority is queued. Shedding is a first-class
+//!   outcome ([`AdmitOutcome`]) so callers can resolve shed requests as
+//!   typed responses instead of errors.
+//! * **Dispatch** ([`AdmissionQueue::pop`]) serves the highest non-empty
+//!   priority lane, FIFO within a lane, blocking until work arrives or
+//!   the queue is closed and drained.
+//!
+//! The queue is workload-agnostic (`T` is whatever the caller enqueues);
+//! [`QueueStats`] counts admissions, sheds, dispatches, and peak depth
+//! for the soak reports.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+
+/// Request priority; admission prefers higher levels and sheds lower
+/// ones first. `Ord`: `Low < Normal < High`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub enum Priority {
+    /// Best-effort: first to be shed under load.
+    Low,
+    /// The default serving level.
+    #[default]
+    Normal,
+    /// Latency-sensitive: displaces queued lower-priority work when the
+    /// queue is full.
+    High,
+}
+
+impl Priority {
+    /// All levels, lowest first (lane order).
+    pub const ALL: [Priority; 3] = [Priority::Low, Priority::Normal, Priority::High];
+
+    /// Label used in reports and the CLI.
+    pub fn label(self) -> &'static str {
+        match self {
+            Priority::Low => "low",
+            Priority::Normal => "normal",
+            Priority::High => "high",
+        }
+    }
+
+    /// Parse a CLI spelling.
+    pub fn parse(s: &str) -> Option<Priority> {
+        match s {
+            "low" => Some(Priority::Low),
+            "normal" => Some(Priority::Normal),
+            "high" => Some(Priority::High),
+            _ => None,
+        }
+    }
+
+    fn lane(self) -> usize {
+        self as usize
+    }
+}
+
+impl std::fmt::Display for Priority {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.label())
+    }
+}
+
+/// What [`AdmissionQueue::admit`] decided.
+pub struct AdmitOutcome<T> {
+    /// Whether the incoming item entered the queue.
+    pub admitted: bool,
+    /// Entries shed to reach that decision: the incoming item itself when
+    /// it was rejected, or displaced lower-priority entries when the
+    /// incoming item was admitted into a full queue.
+    pub shed: Vec<(Priority, T)>,
+}
+
+/// Counters over an [`AdmissionQueue`]'s lifetime.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct QueueStats {
+    /// Requests that entered a lane.
+    pub admitted: u64,
+    /// Requests shed at admission (rejected or displaced).
+    pub shed: u64,
+    /// Requests handed to a worker by [`AdmissionQueue::pop`].
+    pub dispatched: u64,
+    /// Highest simultaneous queue depth observed.
+    pub peak_depth: usize,
+}
+
+struct State<T> {
+    /// One FIFO lane per [`Priority`], indexed by `Priority::lane()`.
+    lanes: [VecDeque<T>; 3],
+    len: usize,
+    closed: bool,
+    stats: QueueStats,
+}
+
+/// Bounded priority admission queue with load shedding (see module docs).
+pub struct AdmissionQueue<T> {
+    state: Mutex<State<T>>,
+    ready: Condvar,
+    depth: usize,
+}
+
+impl<T> AdmissionQueue<T> {
+    /// A queue admitting at most `depth` (>= 1) simultaneous entries.
+    pub fn new(depth: usize) -> AdmissionQueue<T> {
+        AdmissionQueue {
+            state: Mutex::new(State {
+                lanes: [VecDeque::new(), VecDeque::new(), VecDeque::new()],
+                len: 0,
+                closed: false,
+                stats: QueueStats::default(),
+            }),
+            ready: Condvar::new(),
+            depth: depth.max(1),
+        }
+    }
+
+    /// Admission bound.
+    pub fn depth(&self) -> usize {
+        self.depth
+    }
+
+    /// Try to enqueue `item` at `priority`. Never blocks; see
+    /// [`AdmitOutcome`] for the shedding contract. Items offered after
+    /// [`Self::close`] are shed.
+    pub fn admit(&self, priority: Priority, item: T) -> AdmitOutcome<T> {
+        let mut s = self.state.lock().unwrap();
+        if s.closed {
+            s.stats.shed += 1;
+            return AdmitOutcome { admitted: false, shed: vec![(priority, item)] };
+        }
+        let mut shed = Vec::new();
+        if s.len >= self.depth {
+            // Displace from the lowest non-empty lane strictly below the
+            // incoming priority; shed the incoming item when there is none.
+            let mut displaced = None;
+            for lane in 0..priority.lane() {
+                if let Some(victim) = s.lanes[lane].pop_back() {
+                    displaced = Some((Priority::ALL[lane], victim));
+                    break;
+                }
+            }
+            match displaced {
+                Some(victim) => {
+                    s.len -= 1;
+                    shed.push(victim);
+                }
+                None => {
+                    s.stats.shed += 1;
+                    return AdmitOutcome { admitted: false, shed: vec![(priority, item)] };
+                }
+            }
+        }
+        s.lanes[priority.lane()].push_back(item);
+        s.len += 1;
+        s.stats.admitted += 1;
+        s.stats.shed += shed.len() as u64;
+        s.stats.peak_depth = s.stats.peak_depth.max(s.len);
+        drop(s);
+        self.ready.notify_one();
+        AdmitOutcome { admitted: true, shed }
+    }
+
+    /// Dequeue the highest-priority entry (FIFO within a lane), blocking
+    /// until one arrives. `None` once the queue is closed and drained.
+    pub fn pop(&self) -> Option<(Priority, T)> {
+        let mut s = self.state.lock().unwrap();
+        loop {
+            for lane in (0..3).rev() {
+                if let Some(item) = s.lanes[lane].pop_front() {
+                    s.len -= 1;
+                    s.stats.dispatched += 1;
+                    return Some((Priority::ALL[lane], item));
+                }
+            }
+            if s.closed {
+                return None;
+            }
+            s = self.ready.wait(s).unwrap();
+        }
+    }
+
+    /// Close the queue: later admissions are shed, poppers drain what is
+    /// queued and then observe `None`.
+    pub fn close(&self) {
+        self.state.lock().unwrap().closed = true;
+        self.ready.notify_all();
+    }
+
+    /// Entries currently queued.
+    pub fn len(&self) -> usize {
+        self.state.lock().unwrap().len
+    }
+
+    /// True when nothing is queued.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Lifetime counters.
+    pub fn stats(&self) -> QueueStats {
+        self.state.lock().unwrap().stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn priority_order_and_lane_fifo() {
+        let q = AdmissionQueue::new(8);
+        assert!(q.admit(Priority::Low, 1).admitted);
+        assert!(q.admit(Priority::Normal, 2).admitted);
+        assert!(q.admit(Priority::High, 3).admitted);
+        assert!(q.admit(Priority::Normal, 4).admitted);
+        q.close();
+        let drained: Vec<(Priority, i32)> = std::iter::from_fn(|| q.pop()).collect();
+        assert_eq!(
+            drained,
+            vec![
+                (Priority::High, 3),
+                (Priority::Normal, 2),
+                (Priority::Normal, 4),
+                (Priority::Low, 1)
+            ]
+        );
+    }
+
+    #[test]
+    fn full_queue_sheds_low_incoming() {
+        let q = AdmissionQueue::new(2);
+        assert!(q.admit(Priority::Normal, 1).admitted);
+        assert!(q.admit(Priority::Normal, 2).admitted);
+        let out = q.admit(Priority::Low, 3);
+        assert!(!out.admitted);
+        assert_eq!(out.shed, vec![(Priority::Low, 3)]);
+        // Equal priority does not displace either.
+        let out = q.admit(Priority::Normal, 4);
+        assert!(!out.admitted);
+        assert_eq!(out.shed, vec![(Priority::Normal, 4)]);
+    }
+
+    #[test]
+    fn full_queue_displaces_lower_priority_for_high() {
+        let q = AdmissionQueue::new(2);
+        assert!(q.admit(Priority::Low, 1).admitted);
+        assert!(q.admit(Priority::Normal, 2).admitted);
+        let out = q.admit(Priority::High, 3);
+        assert!(out.admitted);
+        assert_eq!(out.shed, vec![(Priority::Low, 1)]);
+        q.close();
+        let drained: Vec<i32> = std::iter::from_fn(|| q.pop()).map(|(_, v)| v).collect();
+        assert_eq!(drained, vec![3, 2]);
+    }
+
+    #[test]
+    fn displacement_takes_newest_of_the_lowest_lane() {
+        let q = AdmissionQueue::new(3);
+        for v in [1, 2, 3] {
+            assert!(q.admit(Priority::Low, v).admitted);
+        }
+        let out = q.admit(Priority::Normal, 4);
+        assert!(out.admitted);
+        // The most recently queued low entry is shed, preserving FIFO for
+        // the survivors.
+        assert_eq!(out.shed, vec![(Priority::Low, 3)]);
+        q.close();
+        let drained: Vec<i32> = std::iter::from_fn(|| q.pop()).map(|(_, v)| v).collect();
+        assert_eq!(drained, vec![4, 1, 2]);
+    }
+
+    #[test]
+    fn stats_count_admissions_sheds_dispatches() {
+        let q = AdmissionQueue::new(1);
+        assert!(q.admit(Priority::Normal, 1).admitted);
+        assert!(!q.admit(Priority::Low, 2).admitted);
+        assert!(q.admit(Priority::High, 3).admitted); // displaces 1
+        q.close();
+        while q.pop().is_some() {}
+        let stats = q.stats();
+        assert_eq!(stats.admitted, 2);
+        assert_eq!(stats.shed, 2);
+        assert_eq!(stats.dispatched, 1);
+        assert_eq!(stats.peak_depth, 1);
+    }
+
+    #[test]
+    fn close_sheds_later_admissions() {
+        let q = AdmissionQueue::new(4);
+        assert!(q.admit(Priority::Normal, 1).admitted);
+        q.close();
+        let out = q.admit(Priority::High, 2);
+        assert!(!out.admitted);
+        assert_eq!(q.pop(), Some((Priority::Normal, 1)));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn pop_blocks_until_admission() {
+        use std::sync::Arc;
+        let q = Arc::new(AdmissionQueue::new(2));
+        let popper = {
+            let q = Arc::clone(&q);
+            std::thread::spawn(move || q.pop())
+        };
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        assert!(q.admit(Priority::Normal, 7).admitted);
+        assert_eq!(popper.join().unwrap(), Some((Priority::Normal, 7)));
+    }
+
+    #[test]
+    fn priority_parse_display_round_trip() {
+        for p in Priority::ALL {
+            assert_eq!(Priority::parse(&p.to_string()), Some(p));
+        }
+        assert_eq!(Priority::parse("urgent"), None);
+        assert!(Priority::Low < Priority::Normal);
+        assert!(Priority::Normal < Priority::High);
+        assert_eq!(Priority::default(), Priority::Normal);
+    }
+}

@@ -81,8 +81,11 @@ impl ScalingReport {
         }
     }
 
-    /// All instances' latency samples pooled and sorted; falls back to
-    /// the per-instance wall times when no samples were recorded
+    /// All instances' latency samples pooled and sorted. The plan
+    /// executors now stamp every item at source emission and record its
+    /// sink-completion latency, so plan-driven reports always carry real
+    /// per-item samples; the per-instance wall-time fallback remains for
+    /// hand-rolled [`run_instances`] workloads that record nothing
     /// (coarse, but monotone with instance skew).
     fn pooled_sorted(&self) -> Vec<Duration> {
         let mut pooled: Vec<Duration> =

@@ -34,10 +34,13 @@ pub struct StageReport {
     pub busy: Duration,
 }
 
-/// Shared telemetry collector: stages register once and record laps.
+/// Shared telemetry collector: stages register once and record laps;
+/// executors additionally record one end-to-end latency sample per item
+/// that completes the sink stage.
 #[derive(Debug, Clone, Default)]
 pub struct Telemetry {
     stages: Arc<Mutex<Vec<StageReport>>>,
+    latencies: Arc<Mutex<Vec<Duration>>>,
 }
 
 /// Handle for recording one stage's time.
@@ -65,9 +68,19 @@ impl Telemetry {
         StageHandle { stages: Arc::clone(&self.stages), index: stages.len() - 1 }
     }
 
-    /// Snapshot of all stages.
+    /// Record one per-item end-to-end latency sample (source emission →
+    /// sink completion). Executors call this from the sink stage so the
+    /// scaling percentiles reflect item latency, not instance wall time.
+    pub fn record_latency(&self, d: Duration) {
+        self.latencies.lock().unwrap().push(d);
+    }
+
+    /// Snapshot of all stages and latency samples.
     pub fn report(&self) -> Report {
-        Report { stages: self.stages.lock().unwrap().clone() }
+        Report {
+            stages: self.stages.lock().unwrap().clone(),
+            latencies: self.latencies.lock().unwrap().clone(),
+        }
     }
 }
 
@@ -93,9 +106,25 @@ impl StageHandle {
 #[derive(Debug, Clone)]
 pub struct Report {
     pub stages: Vec<StageReport>,
+    /// Per-item end-to-end latency samples (source emission → sink
+    /// completion), in sink-arrival order. Empty when nothing reached the
+    /// sink. Multi-instance execution pools samples across instances.
+    pub latencies: Vec<Duration>,
 }
 
 impl Report {
+    /// Latency percentile (`q` in 0..=1) over the per-item samples;
+    /// `None` when no samples were recorded.
+    pub fn latency_percentile(&self, q: f64) -> Option<Duration> {
+        if self.latencies.is_empty() {
+            return None;
+        }
+        let mut sorted = self.latencies.clone();
+        sorted.sort_unstable();
+        let idx = ((sorted.len() - 1) as f64 * q.clamp(0.0, 1.0)).round() as usize;
+        Some(sorted[idx])
+    }
+
     /// Total busy time across stages.
     pub fn total(&self) -> Duration {
         self.stages.iter().map(|s| s.busy).sum()
@@ -177,6 +206,21 @@ mod tests {
         let r = Telemetry::new().report();
         assert_eq!(r.total(), Duration::ZERO);
         assert_eq!(r.fig1_split(), (0.0, 0.0));
+        assert!(r.latencies.is_empty());
+        assert!(r.latency_percentile(0.5).is_none());
+    }
+
+    #[test]
+    fn latency_samples_drive_percentiles() {
+        let tel = Telemetry::new();
+        for ms in [5u64, 1, 9, 3, 7] {
+            tel.record_latency(Duration::from_millis(ms));
+        }
+        let r = tel.report();
+        assert_eq!(r.latencies.len(), 5);
+        assert_eq!(r.latency_percentile(0.5), Some(Duration::from_millis(5)));
+        assert_eq!(r.latency_percentile(1.0), Some(Duration::from_millis(9)));
+        assert!(r.latency_percentile(0.95) >= r.latency_percentile(0.5));
     }
 
     #[test]

@@ -8,12 +8,17 @@
 //!   ([`coordinator`]): every workload is declared once as a **plan** (a
 //!   typed graph of categorized stage nodes) and executed by pluggable
 //!   **executors** — sequential, thread-per-stage streaming with
-//!   backpressure, or multi-instance replication (§3.4) — plus every
-//!   substrate the paper's eight pipelines depend on: a columnar
-//!   dataframe engine ([`dataframe`]), classical ML ([`ml`]),
-//!   media/vision/text processing ([`media`], [`vision`], [`text`]),
-//!   recommendation preprocessing ([`recsys`]), INT8 quantization
-//!   ([`quant`]) and hyperparameter tuning ([`tune`]).
+//!   backpressure, or multi-instance replication (§3.4). On top sits the
+//!   serving layer ([`service`]): a [`service::PipelineService`] opens
+//!   warm per-pipeline [`service::Session`]s once and answers typed
+//!   `Request { pipeline, payload, priority, deadline }` values through
+//!   a bounded priority [`coordinator::AdmissionQueue`] with load
+//!   shedding — the §3.4 many-streams deployment as an API instead of a
+//!   bench loop. Below both sits every substrate the paper's eight
+//!   pipelines depend on: a columnar dataframe engine ([`dataframe`]),
+//!   classical ML ([`ml`]), media/vision/text processing ([`media`],
+//!   [`vision`], [`text`]), recommendation preprocessing ([`recsys`]),
+//!   INT8 quantization ([`quant`]) and hyperparameter tuning ([`tune`]).
 //! * **Layer 2** — JAX models (`python/compile/model.py`) AOT-lowered to
 //!   HLO text artifacts.
 //! * **Layer 1** — Pallas kernels (`python/compile/kernels/`) called by the
@@ -44,6 +49,7 @@ pub mod tune;
 pub mod runtime;
 pub mod coordinator;
 pub mod pipelines;
+pub mod service;
 
 /// Which implementation variant of a pipeline stage to use.
 ///

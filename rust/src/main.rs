@@ -4,6 +4,8 @@
 //! repro list                       # Table 1: the eight pipelines
 //! repro run <pipeline> [--opt baseline|optimized] [--exec sequential|streaming|multi[:N]]
 //!                      [--scale F] [--seed N]
+//! repro serve [--requests N] [--mix census:4,dlsa:1] [--depth D] [--workers W]
+//!                                  # soak a PipelineService with a mixed-priority request mix
 //! repro fig1 [--scale F]           # Figure 1 stage breakdown, all pipelines
 //! repro config                     # Table 3 analogue: software config
 //! repro models                     # AOT artifacts available to the runtime
@@ -11,15 +13,18 @@
 
 use repro::coordinator::ExecMode;
 use repro::pipelines::{registry, run_by_name, RunConfig, Toggles};
+use repro::service::{PipelineService, Priority, Request, Response, ServiceConfig};
 use repro::util::cli::Args;
 use repro::util::fmt::{self, Table};
 use repro::OptLevel;
+use std::collections::BTreeMap;
 
 fn main() {
     let args = Args::from_env();
     let code = match args.command.as_str() {
         "list" => cmd_list(),
         "run" => cmd_run(&args),
+        "serve" => cmd_serve(&args),
         "fig1" => cmd_fig1(&args),
         "config" => cmd_config(),
         "models" => cmd_models(),
@@ -45,17 +50,25 @@ fn print_help() {
          COMMANDS:\n\
          \x20 list                 list the eight pipelines (Table 1)\n\
          \x20 run <pipeline>       run one pipeline and print its report\n\
+         \x20 serve                soak a PipelineService with a mixed-priority request mix\n\
          \x20 fig1                 stage-time breakdown for every pipeline (Figure 1)\n\
          \x20 config               print the software configuration (Table 3)\n\
          \x20 models               list AOT model artifacts\n\
          \n\
-         OPTIONS (run/fig1):\n\
+         OPTIONS (run/serve/fig1):\n\
          \x20 --opt baseline|optimized          optimization level (default optimized)\n\
          \x20 --exec sequential|streaming|multi[:N]\n\
          \x20                                   executor for the pipeline plan\n\
          \x20                                   (default sequential; multi defaults to 2 instances)\n\
          \x20 --scale F                         dataset scale multiplier (default 1.0)\n\
-         \x20 --seed N                          RNG seed (default 0xE2E)\n"
+         \x20 --seed N                          RNG seed (default 0xE2E)\n\
+         \n\
+         OPTIONS (serve):\n\
+         \x20 --requests N                      requests to submit (default 12)\n\
+         \x20 --mix name[:W],name[:W],…         weighted pipeline mix\n\
+         \x20                                   (default census:2,plasticc:1,iiot:1)\n\
+         \x20 --depth D                         admission-queue bound (default 8)\n\
+         \x20 --workers W                       dispatcher threads (default 2)\n"
     );
 }
 
@@ -119,6 +132,154 @@ fn cmd_run(args: &Args) -> i32 {
             1
         }
     }
+}
+
+/// Parse a weighted pipeline mix: `census:4,dlsa:1` (weight defaults
+/// to 1 when omitted).
+fn parse_mix(spec: &str) -> Result<Vec<(String, usize)>, String> {
+    let mut mix: Vec<(String, usize)> = Vec::new();
+    for part in spec.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        let (name, weight) = match part.split_once(':') {
+            Some((name, w)) => {
+                let weight: usize =
+                    w.parse().map_err(|_| format!("bad weight in {part:?}"))?;
+                if weight == 0 {
+                    return Err(format!("zero weight in {part:?}"));
+                }
+                (name, weight)
+            }
+            None => (part, 1),
+        };
+        mix.push((name.to_string(), weight));
+    }
+    if mix.is_empty() {
+        return Err("empty mix".to_string());
+    }
+    Ok(mix)
+}
+
+fn cmd_serve(args: &Args) -> i32 {
+    let cfg = parse_cfg(args);
+    let requests: usize = args.get_parse("requests", 12usize);
+    let depth: usize = args.get_parse("depth", 8usize);
+    let workers: usize = args.get_parse("workers", 2usize);
+    let mix_spec = args.get_or("mix", "census:2,plasticc:1,iiot:1");
+    let mix = match parse_mix(mix_spec) {
+        Ok(mix) => mix,
+        Err(e) => {
+            eprintln!("invalid --mix {mix_spec:?}: {e}");
+            return 2;
+        }
+    };
+
+    let names: Vec<&str> = mix.iter().map(|(n, _)| n.as_str()).collect();
+    let svc = match PipelineService::open(
+        &names,
+        ServiceConfig {
+            defaults: cfg,
+            queue_depth: depth,
+            workers,
+            start_paused: false,
+            skip_unavailable: true,
+        },
+    ) {
+        Ok(svc) => svc,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            return 1;
+        }
+    };
+    for (name, why) in svc.skipped() {
+        eprintln!("note: skipping {name} (no artifacts): {why}");
+    }
+
+    // Deterministic weighted round-robin over the opened sessions, with
+    // priorities cycling normal → high → low.
+    let schedule: Vec<&str> = mix
+        .iter()
+        .filter(|(name, _)| svc.session(name).is_some())
+        .flat_map(|(name, weight)| std::iter::repeat(name.as_str()).take(*weight))
+        .collect();
+    if schedule.is_empty() {
+        eprintln!("error: no pipeline in the mix could be opened");
+        return 1;
+    }
+    const PRIORITIES: [Priority; 3] = [Priority::Normal, Priority::High, Priority::Low];
+    let mut tickets = Vec::with_capacity(requests);
+    for i in 0..requests {
+        let req = Request::synthetic(schedule[i % schedule.len()])
+            .with_priority(PRIORITIES[i % PRIORITIES.len()]);
+        match svc.submit(req) {
+            Ok(ticket) => tickets.push(ticket),
+            Err(e) => {
+                eprintln!("error: {e:#}");
+                return 1;
+            }
+        }
+    }
+
+    let mut completed: BTreeMap<String, usize> = BTreeMap::new();
+    let mut shed: BTreeMap<String, usize> = BTreeMap::new();
+    let mut last_output: BTreeMap<String, String> = BTreeMap::new();
+    let mut failed = 0usize;
+    for ticket in tickets {
+        match ticket.wait() {
+            Response::Completed(c) => {
+                *completed.entry(c.pipeline.clone()).or_default() += 1;
+                last_output.insert(c.pipeline, c.output.summary());
+            }
+            Response::Shed { pipeline, priority, reason, .. } => {
+                eprintln!("shed: {pipeline} ({priority}, {})", reason.label());
+                *shed.entry(pipeline).or_default() += 1;
+            }
+            Response::Failed { pipeline, error } => {
+                eprintln!("request failed ({pipeline}): {error}");
+                failed += 1;
+            }
+        }
+    }
+
+    println!(
+        "serve soak: {requests} requests over {} (depth {depth}, {workers} workers, {}):",
+        svc.session_names().join(", "),
+        cfg.exec,
+    );
+    let mut t = Table::new(&["pipeline", "completed", "shed", "last output"]);
+    for name in svc.session_names() {
+        t.row(&[
+            name.to_string(),
+            completed.get(name).copied().unwrap_or(0).to_string(),
+            shed.get(name).copied().unwrap_or(0).to_string(),
+            last_output.get(name).cloned().unwrap_or_default(),
+        ]);
+    }
+    t.print();
+
+    let qs = svc.queue_stats();
+    println!(
+        "queue: admitted {} shed {} dispatched {} peak depth {}",
+        qs.admitted, qs.shed, qs.dispatched, qs.peak_depth
+    );
+    let report = svc.scaling_report();
+    let pct = |p: Option<std::time::Duration>| match p {
+        Some(d) => fmt::dur(d),
+        None => "-".to_string(),
+    };
+    let mut pcts = report.latency_percentiles(&[0.50, 0.95]).into_iter();
+    println!(
+        "request latency: p50 {} p95 {}",
+        pct(pcts.next().flatten()),
+        pct(pcts.next().flatten())
+    );
+    if failed > 0 {
+        eprintln!("{failed} request(s) failed");
+        return 1;
+    }
+    0
 }
 
 fn cmd_fig1(args: &Args) -> i32 {

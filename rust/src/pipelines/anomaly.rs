@@ -13,7 +13,7 @@
 //! separate these (brightness/edge energy shifts the feature vector), so
 //! the reported AUC is a real quality metric.
 
-use super::{PipelineResult, RunConfig};
+use super::{Output, PipelineResult, RunConfig, Workload};
 use crate::coordinator::telemetry::Category;
 use crate::coordinator::{Plan, PlanOutput};
 use crate::linalg::Matrix;
@@ -31,6 +31,7 @@ const FEAT: usize = 64;
 const PCA_K: usize = 12;
 
 /// One labeled part image.
+#[derive(Debug, Clone)]
 pub struct Part {
     pub img: Image,
     pub defective: bool,
@@ -123,25 +124,55 @@ fn extract_features(
     Ok(feats)
 }
 
-/// Build the anomaly-detection plan.
-pub fn plan(cfg: &RunConfig) -> anyhow::Result<Plan> {
+/// Synthesize the default anomaly payload for `cfg`: defect-free
+/// training parts plus a labeled test set.
+pub fn payload(cfg: &RunConfig) -> Workload {
     let n_train = cfg.scaled(48, 12);
     let n_test = cfg.scaled(32, 8);
+    let mut rng = Rng::new(cfg.seed);
+    let train: Vec<Part> = (0..n_train).map(|_| generate_part(&mut rng, false)).collect();
+    let test: Vec<Part> = (0..n_test).map(|i| generate_part(&mut rng, i % 3 == 0)).collect();
+    Workload::Parts { train, test }
+}
+
+/// Pre-compile the feature-extractor artifact the dl toggle selects;
+/// returns the warm client a serving session holds.
+pub fn warm(cfg: &RunConfig) -> anyhow::Result<Option<ModelClient>> {
+    warm_client(cfg).map(Some)
+}
+
+fn warm_client(cfg: &RunConfig) -> anyhow::Result<ModelClient> {
+    let client = ModelServer::shared()?;
+    match cfg.toggles.dl {
+        OptLevel::Optimized => client.warm_session(&["resnet_features_fused_b4"], &[])?,
+        OptLevel::Baseline => client.warm_session(&[], &["resnet_features_unfused_b4"])?,
+    }
+    Ok(client)
+}
+
+/// Build the anomaly-detection plan over a synthetic payload.
+pub fn plan(cfg: &RunConfig) -> anyhow::Result<Plan> {
+    plan_with(cfg, Workload::Synthetic)
+}
+
+/// Build the anomaly-detection plan over a supplied payload.
+pub fn plan_with(cfg: &RunConfig, workload: Workload) -> anyhow::Result<Plan> {
+    let (train_parts, test_parts) = match workload {
+        Workload::Synthetic => match payload(cfg) {
+            Workload::Parts { train, test } => (train, test),
+            _ => unreachable!("anomaly synthesizes a parts payload"),
+        },
+        Workload::Parts { train, test } => (train, test),
+        other => return Err(super::workload_mismatch("anomaly", "parts", &other)),
+    };
+    anyhow::ensure!(!train_parts.is_empty(), "anomaly needs at least one training part");
     let dl = cfg.toggles.dl;
     let ml = cfg.toggles.ml;
-    let mut rng = Rng::new(cfg.seed);
-    let train_parts: Vec<Part> = (0..n_train).map(|_| generate_part(&mut rng, false)).collect();
-    let test_parts: Vec<Part> =
-        (0..n_test).map(|i| generate_part(&mut rng, i % 3 == 0)).collect();
-    let items = n_train + n_test;
+    let items = train_parts.len() + test_parts.len();
 
     // Steady-state: compile on the shared server outside the timed plan
-    // (see dlsa.rs).
-    let client = ModelServer::shared()?;
-    match dl {
-        OptLevel::Optimized => client.warmup(&["resnet_features_fused_b4"])?,
-        OptLevel::Baseline => client.warmup_chain("resnet_features_unfused_b4")?,
-    }
+    // (see dlsa.rs); a serving session hits the warm compile cache.
+    let client = warm_client(cfg)?;
 
     let mut initial = Some(State {
         train_parts,
@@ -215,6 +246,14 @@ pub fn plan(cfg: &RunConfig) -> anyhow::Result<Plan> {
 /// Run the anomaly-detection pipeline under `cfg.exec`.
 pub fn run(cfg: &RunConfig) -> anyhow::Result<PipelineResult> {
     super::run_plan(plan, cfg)
+}
+
+/// Typed projection of an anomaly run's metrics.
+pub fn output(res: &PipelineResult) -> Output {
+    Output::AnomalyScore {
+        auc: res.metric_or_nan("auc"),
+        defect_rate: res.metric_or_nan("defect_rate"),
+    }
 }
 
 #[cfg(test)]

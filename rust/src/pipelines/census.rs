@@ -14,7 +14,7 @@
 //! R² is a real quality metric with a known-good value (≈ the planted
 //! signal-to-noise).
 
-use super::{PipelineResult, RunConfig};
+use super::{Output, PipelineResult, RunConfig, Workload};
 use crate::coordinator::telemetry::Category;
 use crate::coordinator::{Plan, PlanOutput};
 use crate::dataframe::{self as df, DType, DataFrame, Engine, Expr};
@@ -80,12 +80,29 @@ struct State {
     seed: u64,
 }
 
-/// Build the census plan.
+/// Synthesize the default census payload for `cfg`.
+pub fn payload(cfg: &RunConfig) -> Workload {
+    Workload::Table { csv: generate_csv(cfg.scaled(12_000, 200), cfg.seed) }
+}
+
+/// Build the census plan over a synthetic payload.
 pub fn plan(cfg: &RunConfig) -> anyhow::Result<Plan> {
-    let rows = cfg.scaled(12_000, 200);
+    plan_with(cfg, Workload::Synthetic)
+}
+
+/// Build the census plan over a supplied payload.
+pub fn plan_with(cfg: &RunConfig, workload: Workload) -> anyhow::Result<Plan> {
+    let csv = match workload {
+        Workload::Synthetic => generate_csv(cfg.scaled(12_000, 200), cfg.seed),
+        Workload::Table { csv } => csv,
+        other => return Err(super::workload_mismatch("census", "table", &other)),
+    };
+    // One line per record after the header, so external payloads report
+    // the same item count the synthetic generator would.
+    let rows = csv.lines().count().saturating_sub(1);
     let engine: Engine = cfg.toggles.dataframe.into();
     let mut initial = Some(State {
-        csv: generate_csv(rows, cfg.seed),
+        csv,
         frame: DataFrame::new(),
         train: DataFrame::new(),
         test: DataFrame::new(),
@@ -180,6 +197,11 @@ pub fn plan(cfg: &RunConfig) -> anyhow::Result<Plan> {
 /// Run the census pipeline under `cfg.exec`.
 pub fn run(cfg: &RunConfig) -> anyhow::Result<PipelineResult> {
     super::run_plan(plan, cfg)
+}
+
+/// Typed projection of a census run's metrics.
+pub fn output(res: &PipelineResult) -> Output {
+    Output::Regression { r2: res.metric_or_nan("r2"), mse: res.metric_or_nan("mse") }
 }
 
 fn to_matrix(

@@ -15,14 +15,14 @@
 //! deliverables are the preprocessing speedup and inference throughput,
 //! matching how the paper reports DIEN.
 
-use super::{PipelineResult, RunConfig};
+use super::{Output, PipelineResult, RunConfig, Workload};
 use crate::coordinator::telemetry::Category;
 use crate::coordinator::{Plan, PlanOutput};
 use crate::ml::metrics;
 use crate::recsys::{
     build_examples, generate_log, parse_log, parse_log_via_dataframe, DienExample, ReviewEvent,
 };
-use crate::runtime::{ModelServer, Tensor};
+use crate::runtime::{ModelClient, ModelServer, Tensor};
 use crate::OptLevel;
 use std::collections::BTreeMap;
 
@@ -44,25 +44,57 @@ fn model_name(dl: OptLevel) -> &'static str {
     }
 }
 
-/// Build the DIEN plan.
-pub fn plan(cfg: &RunConfig) -> anyhow::Result<Plan> {
+/// Synthesize the default DIEN payload for `cfg`: a JSON review log.
+pub fn payload(cfg: &RunConfig) -> Workload {
     let n_events = cfg.scaled(4_000, 300);
     let n_users = (n_events / 12).max(8);
+    Workload::ReviewLog { json: generate_log(n_events, n_users, 400, cfg.seed) }
+}
+
+/// Pre-compile the DIEN artifact the dl toggle selects; returns the warm
+/// client a serving session holds.
+pub fn warm(cfg: &RunConfig) -> anyhow::Result<Option<ModelClient>> {
+    warm_client(cfg).map(Some)
+}
+
+fn warm_client(cfg: &RunConfig) -> anyhow::Result<ModelClient> {
+    let model = model_name(cfg.toggles.dl);
+    let client = ModelServer::shared()?;
+    match cfg.toggles.dl {
+        OptLevel::Optimized => client.warm_session(&[model], &[])?,
+        OptLevel::Baseline => client.warm_session(&[], &[model])?,
+    }
+    Ok(client)
+}
+
+/// Build the DIEN plan over a synthetic payload.
+pub fn plan(cfg: &RunConfig) -> anyhow::Result<Plan> {
+    plan_with(cfg, Workload::Synthetic)
+}
+
+/// Build the DIEN plan over a supplied payload.
+pub fn plan_with(cfg: &RunConfig, workload: Workload) -> anyhow::Result<Plan> {
+    let json = match workload {
+        Workload::Synthetic => match payload(cfg) {
+            Workload::ReviewLog { json } => json,
+            _ => unreachable!("dien synthesizes a review_log payload"),
+        },
+        Workload::ReviewLog { json } => json,
+        other => return Err(super::workload_mismatch("dien", "review_log", &other)),
+    };
+    // One JSON event object per non-empty line.
+    let n_events = json.lines().filter(|l| !l.trim().is_empty()).count();
     let opt_df = cfg.toggles.dataframe;
     let dl = cfg.toggles.dl;
     let seed = cfg.seed;
     let model = model_name(dl);
 
     // Steady-state: compile on the shared server outside the timed plan
-    // (see dlsa.rs).
-    let client = ModelServer::shared()?;
-    match dl {
-        OptLevel::Optimized => client.warmup(&[model])?,
-        OptLevel::Baseline => client.warmup_chain(model)?,
-    }
+    // (see dlsa.rs); a serving session hits the warm compile cache.
+    let client = warm_client(cfg)?;
 
     let mut initial = Some(State {
-        raw: generate_log(n_events, n_users, 400, cfg.seed),
+        raw: json,
         events: vec![],
         examples: vec![],
         scores: vec![],
@@ -81,7 +113,7 @@ pub fn plan(cfg: &RunConfig) -> anyhow::Result<Plan> {
             OptLevel::Baseline => parse_log_via_dataframe(&s.raw),
             OptLevel::Optimized => parse_log(&s.raw),
         };
-        anyhow::ensure!(skipped == 0, "synthetic log must parse cleanly");
+        anyhow::ensure!(skipped == 0, "review log has {skipped} malformed events");
         s.events = events;
         s.raw.clear();
         Ok(s)
@@ -154,6 +186,14 @@ pub fn plan(cfg: &RunConfig) -> anyhow::Result<Plan> {
 /// Run the DIEN pipeline under `cfg.exec`.
 pub fn run(cfg: &RunConfig) -> anyhow::Result<PipelineResult> {
     super::run_plan(plan, cfg)
+}
+
+/// Typed projection of a DIEN run's metrics.
+pub fn output(res: &PipelineResult) -> Output {
+    Output::Ranking {
+        auc: res.metric_or_nan("auc"),
+        examples: res.metric("examples").unwrap_or(0.0) as usize,
+    }
 }
 
 #[cfg(test)]

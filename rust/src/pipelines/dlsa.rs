@@ -17,7 +17,7 @@
 //! reported quality metrics are (a) FP32↔INT8 prediction agreement (the
 //! paper's "little to no accuracy loss" claim) and (b) throughput.
 
-use super::{PipelineResult, RunConfig};
+use super::{Output, PipelineResult, RunConfig, Workload};
 use crate::coordinator::telemetry::Category;
 use crate::coordinator::{BatcherConfig, Plan, PlanOutput};
 use crate::runtime::{ModelClient, ModelServer, Tensor};
@@ -75,13 +75,58 @@ fn argmax2(l: &[f32; 2]) -> usize {
     (l[1] > l[0]) as usize
 }
 
-/// Build the DLSA serving plan.
-pub fn plan(cfg: &RunConfig) -> anyhow::Result<Plan> {
+/// Synthesize the default DLSA payload for `cfg`: labeled reviews.
+pub fn payload(cfg: &RunConfig) -> Workload {
     let n_docs = cfg.scaled(96, 16);
     let mut gen = ReviewGenerator::new(cfg.seed, 30);
     let reviews = gen.batch(n_docs);
     let labels: Vec<i64> = reviews.iter().map(|r| r.label).collect();
     let docs: Vec<String> = reviews.into_iter().map(|r| r.text).collect();
+    Workload::Documents { docs, labels }
+}
+
+/// Pre-compile the artifacts the (dl, quant) toggles select plus the
+/// FP32 fused reference the agreement audit scores against; returns the
+/// warm client a serving session holds.
+pub fn warm(cfg: &RunConfig) -> anyhow::Result<Option<ModelClient>> {
+    warm_client(cfg).map(Some)
+}
+
+fn warm_client(cfg: &RunConfig) -> anyhow::Result<ModelClient> {
+    let (model, is_chain) = model_choice(cfg.toggles.dl, cfg.toggles.quant);
+    let client = ModelServer::shared()?;
+    if is_chain {
+        client.warm_session(&["bert_fused_b8"], &[model])?;
+    } else {
+        client.warm_session(&[model, "bert_fused_b8"], &[])?;
+    }
+    Ok(client)
+}
+
+/// Build the DLSA serving plan over a synthetic payload.
+pub fn plan(cfg: &RunConfig) -> anyhow::Result<Plan> {
+    plan_with(cfg, Workload::Synthetic)
+}
+
+/// Build the DLSA serving plan over a supplied payload.
+pub fn plan_with(cfg: &RunConfig, workload: Workload) -> anyhow::Result<Plan> {
+    let (docs, labels) = match workload {
+        Workload::Synthetic => match payload(cfg) {
+            Workload::Documents { docs, labels } => (docs, labels),
+            _ => unreachable!("dlsa synthesizes a documents payload"),
+        },
+        Workload::Documents { docs, labels } => {
+            anyhow::ensure!(
+                labels.is_empty() || labels.len() == docs.len(),
+                "dlsa: {} labels for {} documents",
+                labels.len(),
+                docs.len()
+            );
+            (docs, labels)
+        }
+        other => return Err(super::workload_mismatch("dlsa", "documents", &other)),
+    };
+    let n_docs = docs.len();
     let tok_kind = match cfg.toggles.tokenizer {
         OptLevel::Baseline => TokenizerKind::Baseline,
         OptLevel::Optimized => TokenizerKind::Optimized,
@@ -90,14 +135,9 @@ pub fn plan(cfg: &RunConfig) -> anyhow::Result<Plan> {
 
     // Steady-state measurement: the shared model server compiles outside
     // the timed plan (the paper's Fig 1 measures serving, with model
-    // compilation amortized).
-    let client = ModelServer::shared()?;
-    if is_chain {
-        client.warmup_chain(model)?;
-    } else {
-        client.warmup(&[model])?;
-    }
-    client.warmup(&["bert_fused_b8"])?; // agreement audit reference
+    // compilation amortized). Under a serving session this hits the
+    // engine's compile cache warmed at session open.
+    let client = warm_client(cfg)?;
 
     let mut feed = Some(docs);
     let infer_client = client.clone();
@@ -158,13 +198,18 @@ pub fn plan(cfg: &RunConfig) -> anyhow::Result<Plan> {
                 .zip(&reference)
                 .filter(|((_, _, ours), fp32)| argmax2(ours) == argmax2(fp32))
                 .count();
-            let label_match = acc
-                .iter()
-                .filter(|(i, _, logits)| argmax2(logits) as i64 == labels[*i])
-                .count();
             let mut m = BTreeMap::new();
             m.insert("agreement_vs_fp32".to_string(), agree as f64 / n.max(1) as f64);
-            m.insert("label_match".to_string(), label_match as f64 / n.max(1) as f64);
+            // Unlabeled external payloads skip the label audit.
+            if !labels.is_empty() {
+                let label_match = acc
+                    .iter()
+                    .filter(|(i, _, logits)| {
+                        labels.get(*i).is_some_and(|&l| argmax2(logits) as i64 == l)
+                    })
+                    .count();
+                m.insert("label_match".to_string(), label_match as f64 / n.max(1) as f64);
+            }
             Ok(PlanOutput { metrics: m, items: n_docs })
         },
     ))
@@ -173,6 +218,15 @@ pub fn plan(cfg: &RunConfig) -> anyhow::Result<Plan> {
 /// Run the DLSA pipeline under `cfg.exec`.
 pub fn run(cfg: &RunConfig) -> anyhow::Result<PipelineResult> {
     super::run_plan(plan, cfg)
+}
+
+/// Typed projection of a DLSA run's metrics (`label_match` is `NaN` for
+/// unlabeled payloads).
+pub fn output(res: &PipelineResult) -> Output {
+    Output::Sentiment {
+        agreement_vs_fp32: res.metric_or_nan("agreement_vs_fp32"),
+        label_match: res.metric_or_nan("label_match"),
+    }
 }
 
 #[cfg(test)]

@@ -15,7 +15,7 @@
 //! a real quality metric: random-weight conv embeddings of differently
 //! colored crops are consistently separable.
 
-use super::{PipelineResult, RunConfig};
+use super::{Output, PipelineResult, RunConfig, Workload};
 use crate::coordinator::telemetry::Category;
 use crate::coordinator::{Plan, PlanOutput};
 use crate::media::codec::decode;
@@ -99,39 +99,69 @@ fn crop_and_prep(img: &Image, b: &[f32; 4]) -> Image {
     small
 }
 
-/// Build the face-recognition plan.
-pub fn plan(cfg: &RunConfig) -> anyhow::Result<Plan> {
+/// Synthesize the default face payload for `cfg`: an encoded clip whose
+/// planted truth boxes carry identity indices.
+pub fn payload(cfg: &RunConfig) -> Workload {
     let n_frames = cfg.scaled(24, 6);
-    let dl = cfg.toggles.dl;
-    let seed = cfg.seed;
+    let mut src = VideoSource::new(SRC_H, SRC_W, 2, cfg.seed);
+    Workload::Video { frames: (0..n_frames).map(|_| src.next_frame()).collect() }
+}
 
-    // Steady-state: compile both cascade models on the shared server
-    // outside the timed plan (see dlsa.rs).
+/// Pre-compile both cascade models (detector + embedder); returns the
+/// warm client a serving session holds.
+pub fn warm(cfg: &RunConfig) -> anyhow::Result<Option<ModelClient>> {
+    warm_client(cfg).map(Some)
+}
+
+fn warm_client(cfg: &RunConfig) -> anyhow::Result<ModelClient> {
+    let dl = cfg.toggles.dl;
     let client = ModelServer::shared()?;
     match dl {
-        OptLevel::Optimized => client.warmup(&[detector(dl), embed_model(dl)])?,
+        OptLevel::Optimized => {
+            client.warm_session(&[detector(dl), embed_model(dl)], &[])?
+        }
         OptLevel::Baseline => {
-            client.warmup_chain("ssd_unfused_b1")?;
-            client.warmup_chain("resnet_embed_unfused_b4")?;
+            client.warm_session(&[], &["ssd_unfused_b1", "resnet_embed_unfused_b4"])?
         }
     }
+    Ok(client)
+}
+
+/// Build the face-recognition plan over a synthetic payload.
+pub fn plan(cfg: &RunConfig) -> anyhow::Result<Plan> {
+    plan_with(cfg, Workload::Synthetic)
+}
+
+/// Build the face-recognition plan over a supplied payload.
+pub fn plan_with(cfg: &RunConfig, workload: Workload) -> anyhow::Result<Plan> {
+    let clip = match workload {
+        Workload::Synthetic => match payload(cfg) {
+            Workload::Video { frames } => frames,
+            _ => unreachable!("face synthesizes a video payload"),
+        },
+        Workload::Video { frames } => frames,
+        other => return Err(super::workload_mismatch("face", "video", &other)),
+    };
+    anyhow::ensure!(!clip.is_empty(), "face needs at least one frame to enroll a gallery");
+    let n_frames = clip.len();
+    let dl = cfg.toggles.dl;
+
+    // Steady-state: compile both cascade models on the shared server
+    // outside the timed plan (see dlsa.rs); a serving session hits the
+    // warm compile cache.
+    let client = warm_client(cfg)?;
 
     let enroll_client = client.clone();
     let detect_client = client.clone();
     let recog_client = client;
-    let mut emitted = false;
+    let mut feed = Some(clip);
 
     Ok(Plan::source("face", "load_video", Category::Pre, move |emit| {
-        // Decode the whole synthetic clip — the load stage's real work,
-        // so it is timed as source busy time.
-        if emitted {
-            return;
-        }
-        emitted = true;
-        let mut src = VideoSource::new(SRC_H, SRC_W, 2, seed);
-        let mut frames = Vec::with_capacity(n_frames);
-        for _ in 0..n_frames {
-            let (enc, truth) = src.next_frame();
+        // Decode the whole clip — the load stage's real work, so it is
+        // timed as source busy time.
+        let Some(encoded) = feed.take() else { return };
+        let mut frames = Vec::with_capacity(encoded.len());
+        for (enc, truth) in encoded {
             let ids: Vec<usize> = (0..truth.boxes.len()).collect();
             frames.push((decode(&enc), truth.boxes, ids));
         }
@@ -224,6 +254,14 @@ pub fn plan(cfg: &RunConfig) -> anyhow::Result<Plan> {
 /// Run the face-recognition pipeline under `cfg.exec`.
 pub fn run(cfg: &RunConfig) -> anyhow::Result<PipelineResult> {
     super::run_plan(plan, cfg)
+}
+
+/// Typed projection of a face run's metrics.
+pub fn output(res: &PipelineResult) -> Output {
+    Output::FaceRecognition {
+        match_rate: res.metric_or_nan("match_rate"),
+        detections: res.metric("detections").unwrap_or(0.0) as usize,
+    }
 }
 
 #[cfg(test)]

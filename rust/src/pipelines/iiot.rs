@@ -9,7 +9,7 @@
 //! Dataset: a wide, sparse sensor table (Bosch-like): many columns, high
 //! null fraction, a planted failure rule over a few "essential" sensors.
 
-use super::{PipelineResult, RunConfig};
+use super::{Output, PipelineResult, RunConfig, Workload};
 use crate::coordinator::telemetry::Category;
 use crate::coordinator::{Plan, PlanOutput};
 use crate::dataframe::{self as df, DataFrame, Engine};
@@ -67,12 +67,28 @@ struct State {
     kept_cols: usize,
 }
 
-/// Build the IIoT plan.
+/// Synthesize the default IIoT payload for `cfg`.
+pub fn payload(cfg: &RunConfig) -> Workload {
+    Workload::Table { csv: generate_csv(cfg.scaled(3_000, 150), cfg.seed) }
+}
+
+/// Build the IIoT plan over a synthetic payload.
 pub fn plan(cfg: &RunConfig) -> anyhow::Result<Plan> {
-    let rows = cfg.scaled(3_000, 150);
+    plan_with(cfg, Workload::Synthetic)
+}
+
+/// Build the IIoT plan over a supplied payload.
+pub fn plan_with(cfg: &RunConfig, workload: Workload) -> anyhow::Result<Plan> {
+    let csv = match workload {
+        Workload::Synthetic => generate_csv(cfg.scaled(3_000, 150), cfg.seed),
+        Workload::Table { csv } => csv,
+        other => return Err(super::workload_mismatch("iiot", "table", &other)),
+    };
+    // One measurement row per line after the header.
+    let rows = csv.lines().count().saturating_sub(1);
     let engine: Engine = cfg.toggles.dataframe.into();
     let mut initial = Some(State {
-        csv: generate_csv(rows, cfg.seed),
+        csv,
         frame: DataFrame::new(),
         engine,
         ml: cfg.toggles.ml,
@@ -184,6 +200,15 @@ pub fn plan(cfg: &RunConfig) -> anyhow::Result<Plan> {
 /// Run the IIoT pipeline under `cfg.exec`.
 pub fn run(cfg: &RunConfig) -> anyhow::Result<PipelineResult> {
     super::run_plan(plan, cfg)
+}
+
+/// Typed projection of an IIoT run's metrics.
+pub fn output(res: &PipelineResult) -> Output {
+    Output::Classification {
+        accuracy: res.metric_or_nan("accuracy"),
+        auc: res.metric_or_nan("auc"),
+        f1: res.metric_or_nan("f1"),
+    }
 }
 
 #[cfg(test)]

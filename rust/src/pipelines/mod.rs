@@ -12,12 +12,25 @@
 //! | [`anomaly`] | Anomaly detection | `resnet_tiny` + PCA/Gaussian | Modin, sklearnex, IPEX |
 //! | [`face`] | Face recognition | `ssd_tiny` + `resnet_embed` | Intel-TF (fused) |
 //!
-//! Every pipeline is declared once as a [`Plan`] (`plan(&RunConfig)`) and
-//! executed by whichever executor [`RunConfig::exec`] selects — see
-//! [`crate::coordinator`]. `run(&RunConfig)` is the convenience wrapper
-//! the benches and CLI use; its telemetry report carries the Figure 1
-//! stage breakdown, and the benches toggle [`Toggles`] axes to regenerate
-//! Table 2 and Figure 11.
+//! Every pipeline is declared once as a [`Plan`] and executed by
+//! whichever executor [`RunConfig::exec`] selects — see
+//! [`crate::coordinator`]. Each pipeline's API splits payload generation
+//! from plan construction:
+//!
+//! * `payload(&RunConfig)` synthesizes the pipeline's deterministic
+//!   dataset as a typed [`Workload`];
+//! * `plan_with(&RunConfig, Workload)` builds the plan over a supplied
+//!   payload (external data or a pre-generated synthetic one);
+//! * `plan(&RunConfig)` is the one-shot composition of the two;
+//! * `output(&PipelineResult)` projects the metric map into the typed
+//!   [`Output`] for that pipeline's category;
+//! * `warm(&RunConfig)` pre-compiles the pipeline's model artifacts and
+//!   returns the warm [`ModelClient`] a serving session holds.
+//!
+//! The [`registry`] is a static table of these typed handles; the
+//! long-lived serving facade over it lives in [`crate::service`].
+//! `run`/`run_by_name` remain as one-shot conveniences for the benches
+//! and CLI; their telemetry report carries the Figure 1 stage breakdown.
 
 pub mod census;
 pub mod plasticc;
@@ -27,9 +40,14 @@ pub mod dien;
 pub mod video_streamer;
 pub mod anomaly;
 pub mod face;
+pub mod workload;
+
+pub use workload::{Output, Workload};
+pub(crate) use workload::workload_mismatch;
 
 use crate::coordinator::telemetry::Report;
-use crate::coordinator::{exec, ExecMode, Plan};
+use crate::coordinator::{exec, ExecMode, ExecOutcome, Plan};
+use crate::runtime::ModelClient;
 use crate::OptLevel;
 use std::collections::BTreeMap;
 
@@ -114,7 +132,8 @@ impl RunConfig {
 /// Result of one E2E run.
 #[derive(Debug, Clone)]
 pub struct PipelineResult {
-    /// Per-stage telemetry (Figure 1 source).
+    /// Per-stage telemetry (Figure 1 source), including per-item
+    /// end-to-end latency samples.
     pub report: Report,
     /// Named quality/throughput metrics (auc, r2, fps, agreement, …).
     pub metrics: BTreeMap<String, f64>,
@@ -128,14 +147,29 @@ impl PipelineResult {
         self.metrics.get(name).copied()
     }
 
+    /// Like [`Self::metric`] but `NaN` when absent — for the typed
+    /// [`Output`] projections, which never drop fields silently.
+    pub fn metric_or_nan(&self, name: &str) -> f64 {
+        self.metric(name).unwrap_or(f64::NAN)
+    }
+
     /// End-to-end throughput (items per second of total busy time).
     pub fn throughput(&self) -> f64 {
         self.items as f64 / self.report.total().as_secs_f64().max(1e-12)
     }
 }
 
-/// A pipeline's plan-builder entry point.
+/// A pipeline's one-shot plan-builder entry point (synthetic payload).
 pub type PlanFn = fn(&RunConfig) -> anyhow::Result<Plan>;
+/// A pipeline's payload-accepting plan builder.
+pub type PayloadPlanFn = fn(&RunConfig, Workload) -> anyhow::Result<Plan>;
+/// A pipeline's synthetic payload generator.
+pub type PayloadFn = fn(&RunConfig) -> Workload;
+/// A pipeline's typed-output projection.
+pub type OutputFn = fn(&PipelineResult) -> Output;
+/// A pipeline's model pre-compilation hook; `None` for pipelines without
+/// model artifacts (the tabular three).
+pub type WarmFn = fn(&RunConfig) -> anyhow::Result<Option<ModelClient>>;
 
 /// Execute a plan-builder under the executor `cfg.exec` selects. Each
 /// multi-instance replica gets a distinct stream (`seed + instance`), so
@@ -149,6 +183,37 @@ pub fn run_plan(plan_fn: PlanFn, cfg: &RunConfig) -> anyhow::Result<PipelineResu
         instance_cfg.seed = base.seed.wrapping_add(instance as u64);
         plan_fn(&instance_cfg)
     })?;
+    Ok(finish_outcome(outcome))
+}
+
+/// Like [`run_plan`], but over a supplied [`Workload`] — the serving
+/// path: a session generates (or receives) the payload once and executes
+/// it without re-deriving data from the config. Single-instance modes
+/// move the payload into the one plan they build (no copy on the serving
+/// hot path); multi-instance replicas each process a clone of it.
+pub fn run_plan_with(
+    plan_fn: PayloadPlanFn,
+    payload: Workload,
+    cfg: &RunConfig,
+) -> anyhow::Result<PipelineResult> {
+    let base = *cfg;
+    let outcome = match cfg.exec {
+        ExecMode::Sequential => exec::run_sequential(plan_fn(cfg, payload)?)?,
+        ExecMode::Streaming => {
+            exec::run_streaming(plan_fn(cfg, payload)?, exec::DEFAULT_QUEUE_CAP)?
+        }
+        ExecMode::MultiInstance(_) => exec::execute(cfg.exec, move |instance| {
+            let mut instance_cfg = base;
+            instance_cfg.seed = base.seed.wrapping_add(instance as u64);
+            plan_fn(&instance_cfg, payload.clone())
+        })?,
+    };
+    Ok(finish_outcome(outcome))
+}
+
+/// Fold an executor outcome into a [`PipelineResult`], appending the
+/// `scaling_*` metrics for multi-instance runs.
+fn finish_outcome(outcome: ExecOutcome) -> PipelineResult {
     let mut metrics = outcome.output.metrics;
     if let Some(scaling) = &outcome.scaling {
         if scaling.instances.len() > 1 {
@@ -165,79 +230,141 @@ pub fn run_plan(plan_fn: PlanFn, cfg: &RunConfig) -> anyhow::Result<PipelineResu
             }
         }
     }
-    Ok(PipelineResult { report: outcome.report, metrics, items: outcome.output.items })
+    PipelineResult { report: outcome.report, metrics, items: outcome.output.items }
 }
 
-/// A registered pipeline.
+/// A registered pipeline: the typed handles a serving session needs.
 pub struct PipelineEntry {
     pub name: &'static str,
     pub description: &'static str,
-    /// The declarative plan — the single definition of the pipeline.
+    /// One-shot plan over the synthetic payload — the single definition
+    /// of the pipeline.
     pub plan: PlanFn,
+    /// Plan over a supplied payload (the serving path).
+    pub plan_with: PayloadPlanFn,
+    /// Synthetic payload generator (what `plan` feeds `plan_with`).
+    pub payload: PayloadFn,
+    /// Typed projection of a finished run's metrics.
+    pub output: OutputFn,
+    /// Pre-compile model artifacts; the session-held warm client.
+    pub warm: WarmFn,
     /// Convenience runner: executes the plan under `cfg.exec`.
     pub run: fn(&RunConfig) -> anyhow::Result<PipelineResult>,
 }
 
+/// Warm hook for pipelines without model artifacts.
+fn warm_none(_cfg: &RunConfig) -> anyhow::Result<Option<ModelClient>> {
+    Ok(None)
+}
+
 /// All eight pipelines, in the paper's Table 1 order.
-pub fn registry() -> Vec<PipelineEntry> {
-    vec![
-        PipelineEntry {
-            name: "census",
-            description: "Ridge regression over synthetic IPUMS-like census data",
-            plan: census::plan,
-            run: census::run,
-        },
-        PipelineEntry {
-            name: "plasticc",
-            description: "GBT classification of synthetic LSST light curves",
-            plan: plasticc::plan,
-            run: plasticc::run,
-        },
-        PipelineEntry {
-            name: "iiot",
-            description: "Random-forest failure prediction on a wide sensor table",
-            plan: iiot::plan,
-            run: iiot::run,
-        },
-        PipelineEntry {
-            name: "dlsa",
-            description: "BERT-tiny document sentiment over synthetic reviews",
-            plan: dlsa::plan,
-            run: dlsa::run,
-        },
-        PipelineEntry {
-            name: "dien",
-            description: "DIEN CTR inference over a synthetic JSON review log",
-            plan: dien::plan,
-            run: dien::run,
-        },
-        PipelineEntry {
-            name: "video_streamer",
-            description: "Decode → SSD detection → NMS → metadata upload",
-            plan: video_streamer::plan,
-            run: video_streamer::run,
-        },
-        PipelineEntry {
-            name: "anomaly",
-            description: "ResNet features + PCA + Gaussian anomaly scoring",
-            plan: anomaly::plan,
-            run: anomaly::run,
-        },
-        PipelineEntry {
-            name: "face",
-            description: "SSD face detect → ResNet embed → gallery match",
-            plan: face::plan,
-            run: face::run,
-        },
-    ]
+static REGISTRY: [PipelineEntry; 8] = [
+    PipelineEntry {
+        name: "census",
+        description: "Ridge regression over synthetic IPUMS-like census data",
+        plan: census::plan,
+        plan_with: census::plan_with,
+        payload: census::payload,
+        output: census::output,
+        warm: warm_none,
+        run: census::run,
+    },
+    PipelineEntry {
+        name: "plasticc",
+        description: "GBT classification of synthetic LSST light curves",
+        plan: plasticc::plan,
+        plan_with: plasticc::plan_with,
+        payload: plasticc::payload,
+        output: plasticc::output,
+        warm: warm_none,
+        run: plasticc::run,
+    },
+    PipelineEntry {
+        name: "iiot",
+        description: "Random-forest failure prediction on a wide sensor table",
+        plan: iiot::plan,
+        plan_with: iiot::plan_with,
+        payload: iiot::payload,
+        output: iiot::output,
+        warm: warm_none,
+        run: iiot::run,
+    },
+    PipelineEntry {
+        name: "dlsa",
+        description: "BERT-tiny document sentiment over synthetic reviews",
+        plan: dlsa::plan,
+        plan_with: dlsa::plan_with,
+        payload: dlsa::payload,
+        output: dlsa::output,
+        warm: dlsa::warm,
+        run: dlsa::run,
+    },
+    PipelineEntry {
+        name: "dien",
+        description: "DIEN CTR inference over a synthetic JSON review log",
+        plan: dien::plan,
+        plan_with: dien::plan_with,
+        payload: dien::payload,
+        output: dien::output,
+        warm: dien::warm,
+        run: dien::run,
+    },
+    PipelineEntry {
+        name: "video_streamer",
+        description: "Decode → SSD detection → NMS → metadata upload",
+        plan: video_streamer::plan,
+        plan_with: video_streamer::plan_with,
+        payload: video_streamer::payload,
+        output: video_streamer::output,
+        warm: video_streamer::warm,
+        run: video_streamer::run,
+    },
+    PipelineEntry {
+        name: "anomaly",
+        description: "ResNet features + PCA + Gaussian anomaly scoring",
+        plan: anomaly::plan,
+        plan_with: anomaly::plan_with,
+        payload: anomaly::payload,
+        output: anomaly::output,
+        warm: anomaly::warm,
+        run: anomaly::run,
+    },
+    PipelineEntry {
+        name: "face",
+        description: "SSD face detect → ResNet embed → gallery match",
+        plan: face::plan,
+        plan_with: face::plan_with,
+        payload: face::payload,
+        output: face::output,
+        warm: face::warm,
+        run: face::run,
+    },
+];
+
+/// The static pipeline table, in the paper's Table 1 order.
+pub fn registry() -> &'static [PipelineEntry] {
+    &REGISTRY
+}
+
+/// Look up one pipeline by name without walking callers through the full
+/// table.
+pub fn find(name: &str) -> Option<&'static PipelineEntry> {
+    REGISTRY.iter().find(|e| e.name == name)
+}
+
+/// Every registered pipeline name, in table order.
+pub fn names() -> Vec<&'static str> {
+    REGISTRY.iter().map(|e| e.name).collect()
+}
+
+/// Error for an unregistered pipeline name; lists the valid names.
+pub(crate) fn unknown_pipeline(name: &str) -> anyhow::Error {
+    anyhow::anyhow!("unknown pipeline: {name} (known: {})", names().join(", "))
 }
 
 /// Run a pipeline by name under `cfg.exec`.
 pub fn run_by_name(name: &str, cfg: &RunConfig) -> anyhow::Result<PipelineResult> {
-    let entry = registry()
-        .into_iter()
-        .find(|e| e.name == name)
-        .ok_or_else(|| anyhow::anyhow!("unknown pipeline: {name}"))?;
+    let entry = find(name).ok_or_else(|| unknown_pipeline(name))?;
     run_plan(entry.plan, cfg)
 }
 
@@ -256,8 +383,20 @@ mod tests {
     }
 
     #[test]
-    fn unknown_pipeline_errors() {
-        assert!(run_by_name("nope", &RunConfig::default()).is_err());
+    fn find_locates_every_entry() {
+        for e in registry() {
+            assert_eq!(find(e.name).map(|f| f.name), Some(e.name));
+        }
+        assert!(find("nope").is_none());
+    }
+
+    #[test]
+    fn unknown_pipeline_error_lists_known_names() {
+        let err = run_by_name("nope", &RunConfig::default()).unwrap_err().to_string();
+        assert!(err.contains("nope"), "{err}");
+        for name in names() {
+            assert!(err.contains(name), "{err} missing {name}");
+        }
     }
 
     #[test]
@@ -304,6 +443,35 @@ mod tests {
                     );
                 }
             }
+        }
+    }
+
+    #[test]
+    fn plan_with_rejects_mismatched_workloads() {
+        // A payload of the wrong category is a descriptive error naming
+        // the pipeline, not a panic or a type-mismatch deep in a stage.
+        let cfg = RunConfig { scale: 0.05, ..Default::default() };
+        let err = (find("census").unwrap().plan_with)(
+            &cfg,
+            Workload::ReviewLog { json: String::new() },
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("census"), "{err}");
+        assert!(err.contains("review_log"), "{err}");
+    }
+
+    #[test]
+    fn tabular_payloads_round_trip_through_plan_with() {
+        // plan(cfg) and plan_with(cfg, payload(cfg)) are the same
+        // pipeline: identical metrics for the tabular three.
+        let cfg = RunConfig { scale: 0.05, seed: 31, ..Default::default() };
+        for name in ["census", "plasticc", "iiot"] {
+            let e = find(name).unwrap();
+            let direct = run_plan(e.plan, &cfg).unwrap();
+            let served = run_plan_with(e.plan_with, (e.payload)(&cfg), &cfg).unwrap();
+            assert_eq!(direct.metrics, served.metrics, "{name}");
+            assert_eq!(direct.items, served.items, "{name}");
         }
     }
 }

@@ -11,7 +11,7 @@
 //! variability (transients vs periodic), so per-object flux statistics
 //! are genuinely discriminative and the GBT accuracy is a real metric.
 
-use super::{PipelineResult, RunConfig};
+use super::{Output, PipelineResult, RunConfig, Workload};
 use crate::coordinator::telemetry::Category;
 use crate::coordinator::{Plan, PlanOutput};
 use crate::dataframe::{self as df, groupby::Agg, DType, DataFrame, Engine, Expr};
@@ -68,12 +68,30 @@ struct State {
     proba: Vec<f64>,
 }
 
-/// Build the PLAsTiCC plan.
+/// Epochs per object in the synthetic light curves.
+const EPOCHS: usize = 40;
+
+/// Synthesize the default PLAsTiCC payload for `cfg`.
+pub fn payload(cfg: &RunConfig) -> Workload {
+    let (csv, targets) = generate_csv(cfg.scaled(300, 24), EPOCHS, cfg.seed);
+    Workload::LightCurves { csv, targets }
+}
+
+/// Build the PLAsTiCC plan over a synthetic payload.
 pub fn plan(cfg: &RunConfig) -> anyhow::Result<Plan> {
-    let objects = cfg.scaled(300, 24);
-    let epochs = 40;
+    plan_with(cfg, Workload::Synthetic)
+}
+
+/// Build the PLAsTiCC plan over a supplied payload.
+pub fn plan_with(cfg: &RunConfig, workload: Workload) -> anyhow::Result<Plan> {
+    let (csv, labels) = match workload {
+        Workload::Synthetic => generate_csv(cfg.scaled(300, 24), EPOCHS, cfg.seed),
+        Workload::LightCurves { csv, targets } => (csv, targets),
+        other => return Err(super::workload_mismatch("plasticc", "light_curves", &other)),
+    };
+    // One observation row per line after the header.
+    let observations = csv.lines().count().saturating_sub(1);
     let engine: Engine = cfg.toggles.dataframe.into();
-    let (csv, labels) = generate_csv(objects, epochs, cfg.seed);
     let mut initial = Some(State {
         csv,
         labels,
@@ -137,7 +155,15 @@ pub fn plan(cfg: &RunConfig) -> anyhow::Result<Plan> {
         // labels then split.
         let n = s.features.nrows();
         let ids = s.features.i64s("object_id")?.to_vec();
-        let labels: Vec<f64> = ids.iter().map(|&i| s.labels[i as usize]).collect();
+        let labels: Vec<f64> = ids
+            .iter()
+            .map(|&i| {
+                s.labels.get(i as usize).copied().ok_or_else(|| {
+                    anyhow::anyhow!("plasticc: no target for object_id {i} (payload has {})",
+                        s.labels.len())
+                })
+            })
+            .collect::<anyhow::Result<_>>()?;
         let cols = [
             "flux_mean", "flux_std", "flux_min", "flux_max", "snr_mean", "snr_std",
             "flux_err_mean",
@@ -202,7 +228,7 @@ pub fn plan(cfg: &RunConfig) -> anyhow::Result<Plan> {
             let mut m = BTreeMap::new();
             m.insert("accuracy".to_string(), metrics::accuracy(&state.y_test, &state.pred));
             m.insert("auc".to_string(), metrics::auc(&state.y_test, &state.proba));
-            Ok(PlanOutput { metrics: m, items: objects * epochs })
+            Ok(PlanOutput { metrics: m, items: observations })
         },
     ))
 }
@@ -210,6 +236,16 @@ pub fn plan(cfg: &RunConfig) -> anyhow::Result<Plan> {
 /// Run the PLAsTiCC pipeline under `cfg.exec`.
 pub fn run(cfg: &RunConfig) -> anyhow::Result<PipelineResult> {
     super::run_plan(plan, cfg)
+}
+
+/// Typed projection of a PLAsTiCC run's metrics (no F1 is computed for
+/// this workload, so it reports `NaN`).
+pub fn output(res: &PipelineResult) -> Output {
+    Output::Classification {
+        accuracy: res.metric_or_nan("accuracy"),
+        auc: res.metric_or_nan("auc"),
+        f1: res.metric_or_nan("f1"),
+    }
 }
 
 #[cfg(test)]

@@ -12,13 +12,13 @@
 //! same plan also runs sequentially or as N replicated camera streams
 //! (`--exec multi:N`, the paper's §3.4 anomaly/camera scaling shape).
 
-use super::{PipelineResult, RunConfig};
+use super::{Output, PipelineResult, RunConfig, Workload};
 use crate::coordinator::telemetry::Category;
 use crate::coordinator::{Plan, PlanOutput};
 use crate::media::codec::{decode, EncodedFrame};
 use crate::media::synth::{FrameTruth, VideoSource};
 use crate::media::{normalize, resize, Image, ResizeFilter};
-use crate::runtime::{ModelServer, Tensor};
+use crate::runtime::{ModelClient, ModelServer, Tensor};
 use crate::vision::{decode_detections, iou, nms, Detection, MetadataSink, NmsKind};
 use crate::OptLevel;
 use std::collections::BTreeMap;
@@ -36,9 +36,47 @@ fn model_name(dl: OptLevel, quant: bool) -> &'static str {
     }
 }
 
-/// Build the video-streamer plan.
-pub fn plan(cfg: &RunConfig) -> anyhow::Result<Plan> {
+/// Synthesize the default video payload for `cfg`: an encoded clip with
+/// planted detection truth.
+pub fn payload(cfg: &RunConfig) -> Workload {
     let frames = cfg.scaled(48, 8);
+    let mut source = VideoSource::new(SRC_H, SRC_W, 3, cfg.seed);
+    Workload::Video { frames: (0..frames).map(|_| source.next_frame()).collect() }
+}
+
+/// Pre-compile the SSD artifact the (dl, quant) toggles select; returns
+/// the warm client a serving session holds.
+pub fn warm(cfg: &RunConfig) -> anyhow::Result<Option<ModelClient>> {
+    warm_client(cfg).map(Some)
+}
+
+fn warm_client(cfg: &RunConfig) -> anyhow::Result<ModelClient> {
+    let model = model_name(cfg.toggles.dl, cfg.toggles.quant);
+    let client = ModelServer::shared()?;
+    if cfg.toggles.dl == OptLevel::Baseline {
+        client.warm_session(&[], &[model])?;
+    } else {
+        client.warm_session(&[model], &[])?;
+    }
+    Ok(client)
+}
+
+/// Build the video-streamer plan over a synthetic payload.
+pub fn plan(cfg: &RunConfig) -> anyhow::Result<Plan> {
+    plan_with(cfg, Workload::Synthetic)
+}
+
+/// Build the video-streamer plan over a supplied payload.
+pub fn plan_with(cfg: &RunConfig, workload: Workload) -> anyhow::Result<Plan> {
+    let clip = match workload {
+        Workload::Synthetic => match payload(cfg) {
+            Workload::Video { frames } => frames,
+            _ => unreachable!("video_streamer synthesizes a video payload"),
+        },
+        Workload::Video { frames } => frames,
+        other => return Err(super::workload_mismatch("video_streamer", "video", &other)),
+    };
+    let frames = clip.len();
     let model = model_name(cfg.toggles.dl, cfg.toggles.quant);
     let nms_kind = match cfg.toggles.nms {
         OptLevel::Baseline => NmsKind::Naive,
@@ -47,21 +85,11 @@ pub fn plan(cfg: &RunConfig) -> anyhow::Result<Plan> {
     let is_chain = cfg.toggles.dl == OptLevel::Baseline;
 
     // Steady-state: warm the artifacts on the shared server outside the
-    // timed plan.
-    let client = ModelServer::shared()?;
-    if is_chain {
-        client.warmup_chain(model)?;
-    } else {
-        client.warmup(&[model])?;
-    }
+    // timed plan; a serving session hits the warm compile cache.
+    let client = warm_client(cfg)?;
 
-    let mut source = VideoSource::new(SRC_H, SRC_W, 3, cfg.seed);
-    let encoded: Vec<(usize, EncodedFrame, FrameTruth)> = (0..frames)
-        .map(|i| {
-            let (f, t) = source.next_frame();
-            (i, f, t)
-        })
-        .collect();
+    let encoded: Vec<(usize, EncodedFrame, FrameTruth)> =
+        clip.into_iter().enumerate().map(|(i, (f, t))| (i, f, t)).collect();
     let mut encoded = Some(encoded);
     let t0 = Instant::now();
 
@@ -160,6 +188,15 @@ pub fn plan(cfg: &RunConfig) -> anyhow::Result<Plan> {
 /// Run the video-streamer pipeline under `cfg.exec`.
 pub fn run(cfg: &RunConfig) -> anyhow::Result<PipelineResult> {
     super::run_plan(plan, cfg)
+}
+
+/// Typed projection of a video-streamer run's metrics.
+pub fn output(res: &PipelineResult) -> Output {
+    Output::VideoAnalytics {
+        fps: res.metric_or_nan("fps"),
+        uploaded_frames: res.metric("uploaded_frames").unwrap_or(0.0) as usize,
+        truth_recall: res.metric_or_nan("truth_recall"),
+    }
 }
 
 #[cfg(test)]

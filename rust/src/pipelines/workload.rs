@@ -1,0 +1,165 @@
+//! Typed request payloads and results — the service-facing half of the
+//! pipeline API.
+//!
+//! A [`Workload`] is what a caller hands a pipeline to process: one
+//! variant per pipeline input category, plus [`Workload::Synthetic`] for
+//! "use the pipeline's own deterministic generator at the session's
+//! scale/seed". Every plan builder accepts a workload
+//! (`plan_with(&RunConfig, Workload)`), so a long-lived session can serve
+//! externally supplied payloads instead of regenerating data per run; a
+//! mismatched variant is a descriptive error, never a panic.
+//!
+//! An [`Output`] is the typed projection of a finished run's quality
+//! metrics — the replacement for digging through the free-floating
+//! `BTreeMap<String, f64>` when the caller knows which pipeline it asked
+//! for. The raw metric map stays available on
+//! [`super::PipelineResult`] for benches and ablations.
+
+use super::anomaly::Part;
+use crate::media::codec::EncodedFrame;
+use crate::media::synth::FrameTruth;
+
+/// A typed pipeline payload, one variant per input category.
+#[derive(Debug, Clone)]
+pub enum Workload {
+    /// Re-synthesize the pipeline's own deterministic dataset from the
+    /// session's `RunConfig` (scale + seed). Accepted by every pipeline.
+    Synthetic,
+    /// Tabular rows as CSV text with the target column included
+    /// (census, iiot).
+    Table {
+        /// Header + one row per line, as the pipeline's ingest stage
+        /// expects to parse it.
+        csv: String,
+    },
+    /// Light-curve observations plus per-object targets (plasticc).
+    LightCurves {
+        /// Observation rows (`object_id,mjd,passband,flux,flux_err,…`).
+        csv: String,
+        /// Class target per `object_id` (indexed by id).
+        targets: Vec<f64>,
+    },
+    /// Documents for sentiment serving (dlsa).
+    Documents {
+        /// One review/document per entry.
+        docs: Vec<String>,
+        /// Optional sentiment labels (one per doc). Empty = unlabeled:
+        /// the `label_match` audit metric is skipped.
+        labels: Vec<i64>,
+    },
+    /// A raw JSON review log, one event object per line (dien).
+    ReviewLog { json: String },
+    /// Encoded video frames with planted ground truth
+    /// (video_streamer, face).
+    Video { frames: Vec<(EncodedFrame, FrameTruth)> },
+    /// Part images for anomaly detection: defect-free training parts and
+    /// labeled test parts (anomaly).
+    Parts { train: Vec<Part>, test: Vec<Part> },
+}
+
+impl Workload {
+    /// Short label for the variant, used in mismatch errors and reports.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Workload::Synthetic => "synthetic",
+            Workload::Table { .. } => "table",
+            Workload::LightCurves { .. } => "light_curves",
+            Workload::Documents { .. } => "documents",
+            Workload::ReviewLog { .. } => "review_log",
+            Workload::Video { .. } => "video",
+            Workload::Parts { .. } => "parts",
+        }
+    }
+}
+
+/// Error for a payload handed to a pipeline of the wrong category.
+pub(crate) fn workload_mismatch(pipeline: &str, expected: &str, got: &Workload) -> anyhow::Error {
+    anyhow::anyhow!(
+        "pipeline `{pipeline}` expects a `{expected}` (or `synthetic`) workload, got `{}`",
+        got.kind()
+    )
+}
+
+/// Typed quality result, one variant per pipeline output category.
+/// Metrics that a run could not compute (e.g. `label_match` on unlabeled
+/// documents) surface as `NaN` rather than being silently dropped.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Output {
+    /// census: ridge-regression quality.
+    Regression { r2: f64, mse: f64 },
+    /// plasticc / iiot: classifier quality (`f1` only where computed).
+    Classification { accuracy: f64, auc: f64, f1: f64 },
+    /// dlsa: sentiment serving audits.
+    Sentiment { agreement_vs_fp32: f64, label_match: f64 },
+    /// dien: CTR ranking.
+    Ranking { auc: f64, examples: usize },
+    /// video_streamer: real-time analytics throughput + recall.
+    VideoAnalytics { fps: f64, uploaded_frames: usize, truth_recall: f64 },
+    /// anomaly: defect separation.
+    AnomalyScore { auc: f64, defect_rate: f64 },
+    /// face: identity matching.
+    FaceRecognition { match_rate: f64, detections: usize },
+}
+
+impl Output {
+    /// One-line human-readable rendering for reports and the CLI.
+    pub fn summary(&self) -> String {
+        match self {
+            Output::Regression { r2, mse } => format!("r2={r2:.4} mse={mse:.1}"),
+            Output::Classification { accuracy, auc, f1 } => {
+                format!("acc={accuracy:.4} auc={auc:.4} f1={f1:.4}")
+            }
+            Output::Sentiment { agreement_vs_fp32, label_match } => {
+                format!("agreement={agreement_vs_fp32:.4} label_match={label_match:.4}")
+            }
+            Output::Ranking { auc, examples } => format!("auc={auc:.4} examples={examples}"),
+            Output::VideoAnalytics { fps, uploaded_frames, truth_recall } => {
+                format!("fps={fps:.1} uploaded={uploaded_frames} recall={truth_recall:.4}")
+            }
+            Output::AnomalyScore { auc, defect_rate } => {
+                format!("auc={auc:.4} defect_rate={defect_rate:.4}")
+            }
+            Output::FaceRecognition { match_rate, detections } => {
+                format!("match_rate={match_rate:.4} detections={detections}")
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_labels_are_distinct() {
+        let kinds = [
+            Workload::Synthetic.kind(),
+            Workload::Table { csv: String::new() }.kind(),
+            Workload::LightCurves { csv: String::new(), targets: vec![] }.kind(),
+            Workload::Documents { docs: vec![], labels: vec![] }.kind(),
+            Workload::ReviewLog { json: String::new() }.kind(),
+            Workload::Video { frames: vec![] }.kind(),
+            Workload::Parts { train: vec![], test: vec![] }.kind(),
+        ];
+        let mut dedup = kinds.to_vec();
+        dedup.sort_unstable();
+        dedup.dedup();
+        assert_eq!(dedup.len(), kinds.len());
+    }
+
+    #[test]
+    fn mismatch_error_names_everything() {
+        let err = workload_mismatch("census", "table", &Workload::Synthetic);
+        let msg = err.to_string();
+        assert!(msg.contains("census"), "{msg}");
+        assert!(msg.contains("table"), "{msg}");
+        assert!(msg.contains("synthetic"), "{msg}");
+    }
+
+    #[test]
+    fn output_summary_is_compact() {
+        let s = Output::Regression { r2: 0.93, mse: 100.0 }.summary();
+        assert!(s.contains("r2=0.93"), "{s}");
+        assert!(!s.contains('\n'));
+    }
+}

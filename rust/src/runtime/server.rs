@@ -4,7 +4,10 @@
 //! from a bounded queue; any number of pipeline threads hold cloneable
 //! [`ModelClient`] handles. This is the inference-endpoint shape of the
 //! paper's serving pipelines (DLSA "inference instances", anomaly camera
-//! streams) and the unit the multi-instance scaler replicates.
+//! streams) and the unit the multi-instance scaler replicates. A
+//! [`crate::service::Session`] holds one warm client for its pipeline's
+//! model set ([`ModelClient::warm_session`]), so repeated requests never
+//! pay compile cost.
 
 use super::engine::{Engine, EngineError};
 use super::tensor::Tensor;
@@ -173,6 +176,20 @@ impl ModelClient {
             .map_err(EngineError::Xla)
     }
 
+    /// Warm a serving session's full model set in one call: fused
+    /// artifacts and unfused stage chains. Sessions run this at open so
+    /// every request they serve hits a hot compile cache; re-warming an
+    /// already-compiled model is a cache hit on the server thread.
+    pub fn warm_session(&self, models: &[&str], chains: &[&str]) -> Result<(), EngineError> {
+        if !models.is_empty() {
+            self.warmup(models)?;
+        }
+        for chain in chains {
+            self.warmup_chain(chain)?;
+        }
+        Ok(())
+    }
+
     /// Pre-compile models before serving.
     pub fn warmup(&self, models: &[&str]) -> Result<(), EngineError> {
         let (reply, rx) = mpsc::sync_channel(1);
@@ -232,5 +249,15 @@ mod tests {
     fn bad_artifacts_dir_fails_spawn() {
         let r = ModelServer::spawn(PathBuf::from("/nonexistent/dir"), 2);
         assert!(r.is_err());
+    }
+
+    #[test]
+    fn warm_session_compiles_models_and_chains() {
+        let Some(srv) = server() else { return };
+        let client = srv.client();
+        client.warm_session(&["ssd_fused_b1"], &["ssd_unfused_b1"]).unwrap();
+        // Re-warming is a cache hit, not an error.
+        client.warm_session(&["ssd_fused_b1"], &[]).unwrap();
+        assert!(client.warm_session(&["missing_model"], &[]).is_err());
     }
 }
