@@ -18,6 +18,7 @@
 //! REPRO_BENCH_SCALE=2 REPRO_BENCH_ITERS=5 cargo bench --bench fig11_e2e
 //! ```
 
+use repro::coordinator::ExecMode;
 use repro::pipelines::{registry, RunConfig, Toggles};
 use repro::service::Session;
 use repro::util::fmt::{self, Table};
@@ -89,4 +90,39 @@ fn main() {
         fmt::speedup(min),
         fmt::speedup(max)
     );
+
+    // Executor footnote: the optimized census payload executed data-
+    // parallel (shard:4, one dataset partitioned) vs replicated
+    // (multi:4, four copies) — the wall-clock difference between
+    // "finish the dataset faster" and "run more copies". Census is the
+    // degenerate single-state shape (shard 0 does the whole pass), so
+    // this footnote measures only replication avoidance; the scaling
+    // bench adds the per-item pipelines where shards split real work.
+    let mut t = Table::new(&["executor", "wall", "dataset items/s"]);
+    for exec in [ExecMode::Sharded(4), ExecMode::MultiInstance(4)] {
+        let cfg = RunConfig { toggles: Toggles::optimized(), scale, seed: 0xF11, exec };
+        let Ok(session) = Session::open("census", cfg) else {
+            continue;
+        };
+        let payload = session.payload();
+        let t0 = std::time::Instant::now();
+        let Ok((res, _)) = session.execute(payload) else {
+            continue;
+        };
+        let wall = t0.elapsed();
+        // A sharded run's items are the one dataset; multi:N's are N
+        // copies of it, which the dataset view divides back out.
+        let copies = match exec {
+            ExecMode::MultiInstance(n) => n.max(1),
+            _ => 1,
+        };
+        let dataset_items = res.items / copies;
+        t.row(&[
+            exec.to_string(),
+            fmt::dur(wall),
+            format!("{:.1}", dataset_items as f64 / wall.as_secs_f64().max(1e-12)),
+        ]);
+    }
+    println!("\nsharded vs multi on one census dataset (scale {scale}):");
+    t.print();
 }

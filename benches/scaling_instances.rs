@@ -1,6 +1,11 @@
 //! §3.4 workload scaling — multi-instance sweep for the two workloads the
 //! paper scales: anomaly-detection camera streams and DLSA inference
-//! streams.
+//! streams — plus the data-parallel comparison: `shard:N` (one dataset
+//! partitioned across N workers, merge-aware sink) vs `multi:N`
+//! (N replicated streams) on the same census payload. Multi-instance
+//! scales *compute*; sharding is what makes a *fixed dataset* finish
+//! faster, so the two are printed side by side as dataset throughput
+//! (payload items per second of wall time until the dataset is done).
 //!
 //! Single-core sandbox: the deliverables are (a) aggregate throughput
 //! stays flat as instances time-slice (no coordination collapse),
@@ -8,18 +13,105 @@
 //! fairness by item count can hide one instance's requests all landing in
 //! the tail, so the percentiles make the §3.4 fairness claim measurable.
 //! On a many-core Xeon the same harness shows the paper's linear scaling
-//! (DESIGN.md §2).
+//! (DESIGN.md §2). For the sharded comparison even one core shows the
+//! gap: multi:N redoes the dataset N times, sharding does it once.
 //!
 //! ```sh
 //! cargo bench --bench scaling_instances
 //! ```
 
-use repro::coordinator::{run_instances_timed, LatencyRecorder};
+use repro::coordinator::{run_instances_timed, ExecMode, LatencyRecorder};
 use repro::media::{normalize, resize, ResizeFilter};
+use repro::pipelines::{self, run_plan_with, RunConfig, Toggles};
 use repro::runtime::{ModelServer, Tensor};
 use repro::text::{ReviewGenerator, TokenizerKind, Vocab, WordPiece};
 use repro::util::fmt::{dur, Table};
 use repro::util::Rng;
+use std::time::Instant;
+
+/// Sharded vs multi-instance on one pre-generated payload: dataset
+/// throughput (payload items / wall until that dataset is fully
+/// processed). Census (tabular, single-state plan — the degenerate
+/// sharding shape where shard 0 does all the work and the comparison
+/// measures only that sharding avoids multi's n× replication) runs on
+/// any checkout; the per-item pipelines (dlsa documents,
+/// video_streamer frames — where shards genuinely split the transform
+/// work) join when model artifacts are present and skip with a note
+/// otherwise.
+fn sharded_vs_multi(scale: f64) {
+    println!("\n=== sharded (one dataset, partitioned) vs multi (n replicated streams) ===");
+    let mut census_check: Option<(f64, f64)> = None;
+    for name in ["census", "dlsa", "video_streamer"] {
+        let entry = pipelines::find(name).expect("registry names");
+        let cfg =
+            RunConfig { toggles: Toggles::optimized(), scale, seed: 0x5CA1E, ..Default::default() };
+        let payload = (entry.payload)(&cfg);
+        println!("\n{name}:");
+        let mut t = Table::new(&[
+            "n",
+            "shard:N wall",
+            "shard:N items/s",
+            "multi:N wall",
+            "multi:N items/s",
+            "shard/multi",
+        ]);
+        let mut last: Option<(f64, f64)> = None;
+        let mut unavailable = false;
+        for n in [1usize, 2, 4] {
+            let shard_cfg = RunConfig { exec: ExecMode::Sharded(n), ..cfg };
+            let t0 = Instant::now();
+            let sharded = match run_plan_with(entry.plan_with, payload.clone(), &shard_cfg) {
+                Ok(res) => res,
+                Err(e) => {
+                    println!("  skipped (no artifacts): {e:#}");
+                    unavailable = true;
+                    break;
+                }
+            };
+            let shard_wall = t0.elapsed();
+            // Sharded runs process the payload once: items == payload size.
+            let shard_tput = sharded.items as f64 / shard_wall.as_secs_f64().max(1e-12);
+
+            let multi_cfg = RunConfig { exec: ExecMode::MultiInstance(n), ..cfg };
+            let t0 = Instant::now();
+            let multi = match run_plan_with(entry.plan_with, payload.clone(), &multi_cfg) {
+                Ok(res) => res,
+                Err(e) => {
+                    println!("  skipped (no artifacts): {e:#}");
+                    unavailable = true;
+                    break;
+                }
+            };
+            let multi_wall = t0.elapsed();
+            // Multi-instance processes n copies; the one dataset is done
+            // when the run is, so dataset throughput divides items by n.
+            let dataset_items = multi.items / n.max(1);
+            let multi_tput = dataset_items as f64 / multi_wall.as_secs_f64().max(1e-12);
+
+            t.row(&[
+                n.to_string(),
+                dur(shard_wall),
+                format!("{shard_tput:.1}"),
+                dur(multi_wall),
+                format!("{multi_tput:.1}"),
+                format!("{:.2}x", shard_tput / multi_tput.max(1e-12)),
+            ]);
+            last = Some((shard_tput, multi_tput));
+        }
+        if !unavailable {
+            t.print();
+        }
+        if name == "census" {
+            census_check = last;
+        }
+    }
+    if let Some((shard_tput, multi_tput)) = census_check {
+        println!(
+            "\ncheck: census shard:4 dataset throughput {} multi:4 ({shard_tput:.1} vs {multi_tput:.1} items/s)",
+            if shard_tput >= multi_tput { "≥" } else { "< (UNEXPECTED)" },
+        );
+    }
+}
 
 const IMG: usize = 32;
 
@@ -87,6 +179,12 @@ fn main() {
         .ok()
         .and_then(|s| s.parse().ok())
         .unwrap_or(24);
+    let scale: f64 = std::env::var("REPRO_BENCH_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1.0);
+    // Tabular: runs on any checkout, before the artifact-gated streams.
+    sharded_vs_multi(scale);
     let server =
         ModelServer::spawn(repro::runtime::default_artifacts_dir(), 64).expect("server");
     server

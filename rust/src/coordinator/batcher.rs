@@ -146,4 +146,70 @@ mod tests {
         assert_eq!(b.next_batch().unwrap(), vec![9]);
         assert_eq!(b.size_flushes, 1);
     }
+
+    /// Drain a batcher over `items` and return the flattened stream.
+    fn drain_flat(items: &[u32], cfg: BatcherConfig) -> (Vec<u32>, usize) {
+        let (tx, rx) = bounded(items.len().max(1));
+        for &i in items {
+            tx.send(i).unwrap();
+        }
+        drop(tx);
+        let mut b = DynamicBatcher::new(rx, cfg);
+        let batches = b.drain();
+        let n = batches.len();
+        (batches.into_iter().flatten().collect(), n)
+    }
+
+    #[test]
+    fn empty_source_drains_to_no_batches() {
+        // Edge case: an empty source produces zero batches — never a
+        // phantom empty batch that a downstream group stage would choke
+        // on.
+        let (flat, n) = drain_flat(&[], BatcherConfig::default());
+        assert!(flat.is_empty());
+        assert_eq!(n, 0);
+    }
+
+    #[test]
+    fn batch_size_one_preserves_the_item_stream_exactly() {
+        // max_batch 1 degenerates to unbatched execution: one singleton
+        // batch per item, in arrival order.
+        let items: Vec<u32> = (0..17).collect();
+        let (flat, n) = drain_flat(
+            &items,
+            BatcherConfig { max_batch: 1, max_wait: Duration::from_millis(5) },
+        );
+        assert_eq!(flat, items);
+        assert_eq!(n, items.len());
+    }
+
+    #[test]
+    fn remainder_flush_preserves_the_item_multiset() {
+        // 23 items under max_batch 5: four full batches + a remainder of
+        // 3. Batching must repartition, never drop or duplicate —
+        // flattening the batches reproduces the unbatched stream exactly
+        // (order preserved, so multiset equality follows).
+        let items: Vec<u32> = (0..23).map(|i| i * 7 % 23).collect();
+        let (flat, n) = drain_flat(
+            &items,
+            BatcherConfig { max_batch: 5, max_wait: Duration::from_millis(50) },
+        );
+        assert_eq!(flat, items);
+        assert_eq!(n, 5);
+    }
+
+    #[test]
+    fn degenerate_max_batch_zero_behaves_like_batch_size_one() {
+        // A zero max_batch cannot make progress any other way; the
+        // batcher treats it as "flush after the first item" rather than
+        // looping forever or panicking (the sequential executor's batch
+        // node clamps the same way).
+        let items: Vec<u32> = (0..6).collect();
+        let (flat, n) = drain_flat(
+            &items,
+            BatcherConfig { max_batch: 0, max_wait: Duration::from_millis(5) },
+        );
+        assert_eq!(flat, items);
+        assert_eq!(n, items.len());
+    }
 }

@@ -8,11 +8,29 @@
 //! * [`run_multi_instance`] — N replicated plan instances on worker
 //!   threads (§3.4 workload scaling), aggregated by the scaler with
 //!   fairness and latency percentiles.
+//! * [`run_sharded`] — N data-parallel workers over ONE dataset: each
+//!   worker runs the same stage graph with its source restricted to a
+//!   round-robin partition ([`Sharder`]), and the sink state is merged
+//!   in shard order on the coordinating thread. Where multi-instance
+//!   scales compute by replicating the stream n times, sharding makes a
+//!   fixed dataset finish faster (the tf.data / BigDL source-partition
+//!   shape).
 //!
-//! All three record the same per-stage [`Telemetry`], so every mode
-//! yields the Figure 1 breakdown, and all three produce identical
-//! deterministic metrics for a fixed seed — the executor-equivalence
+//! All four record the same per-stage [`Telemetry`], so every mode
+//! yields the Figure 1 breakdown, and all four produce identical
+//! deterministic metrics for a fixed seed — the executor-conformance
 //! suite (`rust/tests/executor_equivalence.rs`) asserts exactly that.
+//!
+//! **Merge-aware sink contract (sharded mode).** Shard workers run
+//! source → transforms only; no shard touches the sink. The coordinating
+//! thread then folds every shard's output into the single sink state in
+//! ascending shard order (all of shard 0's items, then shard 1's, …) and
+//! runs `finish` once. The fold order is therefore deterministic — a
+//! permutation of the sequential order that depends only on the partition
+//! arithmetic, never on thread timing. A plan is shardable when its sink
+//! fold is insensitive to that permutation (single-state sinks, counter
+//! sinks, and index-sorting accumulators all qualify — every registry
+//! pipeline does; the conformance matrix pins it).
 //!
 //! Every item is stamped at source emission and its end-to-end latency
 //! recorded when it completes the sink, so [`Report::latencies`] carries
@@ -24,12 +42,12 @@
 //! toward the run duration (an honest property of that execution shape).
 
 use super::batcher::DynamicBatcher;
-use super::plan::{DynItem, NodeKind, Plan, PlanOutput};
+use super::plan::{DynItem, Node, NodeKind, Plan, PlanOutput, Sharder};
 use super::scaler::{InstanceReport, ScalingReport};
-use super::telemetry::{Report, Telemetry};
+use super::telemetry::{Category, Report, ShardReport, ShardedReport, StageReport, Telemetry};
 use crate::parallel::channel::bounded;
 use std::sync::{Arc, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Which executor runs a plan; selected via `RunConfig::exec` or `--exec`.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -40,26 +58,46 @@ pub enum ExecMode {
     /// Thread-per-stage over bounded channels with backpressure.
     Streaming,
     /// N replicated plan instances (each sequential), scaler-aggregated.
+    /// Each instance processes its own stream: n× the data, n× the work.
     MultiInstance(usize),
+    /// N data-parallel shards over one dataset: the source is partitioned
+    /// round-robin across n workers sharing the stage graph, and sink
+    /// state is merged in shard order (see the module docs for the
+    /// merge-aware sink contract). Each worker runs 1/n of the transform
+    /// and sink work; every worker still produces (or clones) the full
+    /// source stream and drops the emissions it does not own, so the
+    /// speedup ceiling is set by how transform-heavy the plan is relative
+    /// to its source.
+    Sharded(usize),
+}
+
+/// Strict instance/shard count: ASCII digits only (no sign, no
+/// whitespace, no garbage suffix), at least 1.
+fn parse_count(s: &str) -> Option<usize> {
+    if s.is_empty() || !s.bytes().all(|b| b.is_ascii_digit()) {
+        return None;
+    }
+    s.parse().ok().filter(|&n| n >= 1)
 }
 
 impl ExecMode {
-    /// Parse a CLI spelling: `sequential`, `streaming`, `multi`,
-    /// `multi:<n>`.
+    /// Parse a CLI spelling: `sequential`, `streaming`, `multi[:<n>]`,
+    /// `shard[:<n>]` (bare `multi` / `shard` default to 2). Counts must
+    /// be plain positive integers — `multi:0`, `shard:0`, signs,
+    /// whitespace, and trailing garbage are all rejected.
     pub fn parse(s: &str) -> Option<ExecMode> {
         match s {
             "sequential" | "seq" => Some(ExecMode::Sequential),
             "streaming" | "stream" => Some(ExecMode::Streaming),
+            "multi" => Some(ExecMode::MultiInstance(2)),
+            "shard" | "sharded" => Some(ExecMode::Sharded(2)),
             _ => {
-                let rest = s.strip_prefix("multi")?;
-                if rest.is_empty() {
-                    Some(ExecMode::MultiInstance(2))
+                if let Some(rest) = s.strip_prefix("multi:") {
+                    parse_count(rest).map(ExecMode::MultiInstance)
+                } else if let Some(rest) = s.strip_prefix("shard:") {
+                    parse_count(rest).map(ExecMode::Sharded)
                 } else {
-                    rest.strip_prefix(':')?
-                        .parse()
-                        .ok()
-                        .filter(|&n| n >= 1)
-                        .map(ExecMode::MultiInstance)
+                    None
                 }
             }
         }
@@ -72,6 +110,7 @@ impl std::fmt::Display for ExecMode {
             ExecMode::Sequential => f.write_str("sequential"),
             ExecMode::Streaming => f.write_str("streaming"),
             ExecMode::MultiInstance(n) => write!(f, "multi:{n}"),
+            ExecMode::Sharded(n) => write!(f, "shard:{n}"),
         }
     }
 }
@@ -89,21 +128,28 @@ struct Stamped {
 }
 
 /// What an executor returns: telemetry, the plan's output, and (for
-/// multi-instance) the scaling aggregate.
+/// multi-instance / sharded) the scaling or sharding aggregate.
 pub struct ExecOutcome {
-    /// Per-stage timing (Figure 1 source). Multi-instance merges stage
-    /// busy time and item counts across instances.
+    /// Per-stage timing (Figure 1 source). Multi-instance and sharded
+    /// execution merge stage busy time and item counts across workers.
     pub report: Report,
     /// The plan's deterministic metrics and item count. Multi-instance
-    /// reports instance 0's metrics with `items` summed over instances.
+    /// reports instance 0's metrics with `items` summed over instances;
+    /// sharded reports the merged sink's metrics over the one dataset.
     pub output: PlanOutput,
     /// Present only for multi-instance execution.
     pub scaling: Option<ScalingReport>,
+    /// Present only for sharded execution: per-shard partition sizes and
+    /// pooled per-item latencies.
+    pub sharding: Option<ShardedReport>,
 }
 
 /// Dispatch a plan-builder through the executor selected by `mode`.
 /// `make_plan` is invoked once per instance (instance 0 for the
 /// single-instance modes) so every replica gets fresh stage closures.
+/// Sharded execution calls `make_plan(0)` once per shard — every shard
+/// must see the *same* stream (sharding partitions one dataset; it never
+/// gives workers distinct streams the way multi-instance does).
 pub fn execute(
     mode: ExecMode,
     make_plan: impl Fn(usize) -> anyhow::Result<Plan> + Sync,
@@ -112,17 +158,22 @@ pub fn execute(
         ExecMode::Sequential => run_sequential(make_plan(0)?),
         ExecMode::Streaming => run_streaming(make_plan(0)?, DEFAULT_QUEUE_CAP),
         ExecMode::MultiInstance(n) => run_multi_instance(n, make_plan),
+        ExecMode::Sharded(n) => run_sharded(n, || make_plan(0)),
     }
 }
 
-/// Run a plan in the calling thread, one stage at a time over the whole
-/// item stream. Batch nodes flush on size alone (every item is already
-/// available, so the max-wait timer is irrelevant by construction).
-pub fn run_sequential(plan: Plan) -> anyhow::Result<ExecOutcome> {
-    let telemetry = Telemetry::new();
-    let Plan { source: (src_name, src_cat, mut produce), nodes, sink, finish, .. } = plan;
-    let (sink_name, sink_cat, mut sink_fn) = sink;
-
+/// The stage-at-a-time source+transform pass shared by the sequential
+/// and sharded executors: run the source, then each transform node over
+/// the whole stream, recording per-stage telemetry. Returns the stamped
+/// pre-sink items. Batch nodes flush on size alone (every item is
+/// already available, so the max-wait timer is irrelevant by
+/// construction).
+fn run_stages(
+    telemetry: &Telemetry,
+    source: (String, Category, crate::coordinator::plan::SourceFn),
+    nodes: Vec<Node>,
+) -> anyhow::Result<Vec<Stamped>> {
+    let (src_name, src_cat, mut produce) = source;
     let handle = telemetry.stage(&src_name, src_cat);
     let mut items: Vec<Stamped> = Vec::new();
     let t0 = Instant::now();
@@ -162,7 +213,17 @@ pub fn run_sequential(plan: Plan) -> anyhow::Result<ExecOutcome> {
             }
         }
     }
+    Ok(items)
+}
 
+/// Run a plan in the calling thread, one stage at a time over the whole
+/// item stream.
+pub fn run_sequential(plan: Plan) -> anyhow::Result<ExecOutcome> {
+    let telemetry = Telemetry::new();
+    let Plan { source, nodes, sink, finish, .. } = plan;
+    let items = run_stages(&telemetry, source, nodes)?;
+
+    let (sink_name, sink_cat, mut sink_fn) = sink;
     let handle = telemetry.stage(&sink_name, sink_cat);
     for Stamped { born, item } in items {
         let t0 = Instant::now();
@@ -171,7 +232,7 @@ pub fn run_sequential(plan: Plan) -> anyhow::Result<ExecOutcome> {
         telemetry.record_latency(born.elapsed());
     }
     let output = finish()?;
-    Ok(ExecOutcome { report: telemetry.report(), output, scaling: None })
+    Ok(ExecOutcome { report: telemetry.report(), output, scaling: None, sharding: None })
 }
 
 /// Run a plan with one thread per stage connected by bounded channels, so
@@ -300,7 +361,7 @@ pub fn run_streaming(plan: Plan, queue_cap: usize) -> anyhow::Result<ExecOutcome
         return Err(anyhow::anyhow!("streaming stage failed: {msg}"));
     }
     let output = finish()?;
-    Ok(ExecOutcome { report: telemetry.report(), output, scaling: None })
+    Ok(ExecOutcome { report: telemetry.report(), output, scaling: None, sharding: None })
 }
 
 /// Run `n` replicated instances of the plan on worker threads (each
@@ -360,7 +421,129 @@ pub fn run_multi_instance(
     let scaling = ScalingReport { instances, wall };
     let mut output = first_output.expect("n >= 1 guarantees one outcome");
     output.items = scaling.total_items();
-    Ok(ExecOutcome { report: merge_reports(&reports), output, scaling: Some(scaling) })
+    Ok(ExecOutcome {
+        report: merge_reports(&reports),
+        output,
+        scaling: Some(scaling),
+        sharding: None,
+    })
+}
+
+/// One shard's source+transform pass: its pre-sink items, its stage
+/// telemetry (source + transforms, no sink), and — for shard 0 only —
+/// the donated sink the merge phase folds every shard's items into.
+struct ShardPass {
+    items: Vec<Stamped>,
+    report: Report,
+    elapsed: Duration,
+    sink: Option<ShardSink>,
+}
+
+type ShardSink = (
+    (String, Category, crate::coordinator::plan::SinkFn),
+    crate::coordinator::plan::FinishFn,
+);
+
+/// Run one dataset as `n` data-parallel shards (§3.4 turned from
+/// replication into partitioning): every shard builds the same plan —
+/// `make_plan` must be deterministic — restricted to its round-robin
+/// partition via [`Plan::shard`], and runs source → transforms on its
+/// own worker thread. No shard touches the sink; the coordinating
+/// thread then folds all pre-sink items into shard 0's sink **in shard
+/// order** and runs `finish` once (the merge-aware sink contract — see
+/// the module docs). Metrics are therefore deterministic and, for
+/// fold-order-insensitive sinks, identical to a sequential run of the
+/// same plan; `Sharded(1)` is always identical to `Sequential`.
+///
+/// Cost model: plan construction and the full source pass run once
+/// *per shard* (each worker drops the emissions it does not own — the
+/// plan-level filter keeps sharding pipeline-agnostic), while transform
+/// and sink work split 1/n. Sharding therefore pays off on
+/// transform-heavy plans (the per-item DL pipelines) and degenerates
+/// gracefully to sequential cost on source-heavy or single-item plans.
+/// Payload-aware source slicing (splitting an already-materialized
+/// `Workload` before plan build) is the follow-up that would drop the
+/// redundant source passes.
+pub fn run_sharded(
+    n: usize,
+    make_plan: impl Fn() -> anyhow::Result<Plan> + Sync,
+) -> anyhow::Result<ExecOutcome> {
+    anyhow::ensure!(n >= 1, "sharded execution needs at least one shard");
+    let t0 = Instant::now();
+    let mut passes: Vec<anyhow::Result<ShardPass>> = Vec::with_capacity(n);
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..n)
+            .map(|s| {
+                let make_plan = &make_plan;
+                scope.spawn(move || -> anyhow::Result<ShardPass> {
+                    // Plan construction (payload binding, model warmup)
+                    // stays outside the timed pass, like multi-instance.
+                    // DL plans share the one ModelServer across shards.
+                    let plan = make_plan()?.shard(Sharder::new(s, n));
+                    let it0 = Instant::now();
+                    let telemetry = Telemetry::new();
+                    let Plan { source, nodes, sink, finish, .. } = plan;
+                    let items = run_stages(&telemetry, source, nodes)?;
+                    Ok(ShardPass {
+                        items,
+                        report: telemetry.report(),
+                        elapsed: it0.elapsed(),
+                        sink: (s == 0).then_some((sink, finish)),
+                    })
+                })
+            })
+            .collect();
+        for h in handles {
+            passes.push(h.join().expect("shard worker panicked"));
+        }
+    });
+
+    let mut reports = Vec::with_capacity(n);
+    let mut shard_items = Vec::with_capacity(n);
+    let mut donated_sink = None;
+    for pass in passes {
+        let ShardPass { items, report, elapsed, sink } = pass?;
+        if let Some(sink) = sink {
+            donated_sink = Some(sink);
+        }
+        // Owned emissions = the shard's source stage count (the filtered
+        // source only forwards — and the executor only counts — items
+        // the shard's partition owns).
+        let owned = report.stages.first().map_or(0, |s| s.items);
+        shard_items.push((items, elapsed, owned));
+        reports.push(report);
+    }
+    let ((sink_name, sink_cat, mut sink_fn), finish) =
+        donated_sink.expect("shard 0 donates the merge sink");
+
+    // Merge phase: fold every shard's items into the single sink state
+    // in ascending shard order, timing the folds as the sink stage and
+    // recording each item's end-to-end latency against its shard.
+    let mut merged = merge_reports(&reports);
+    let mut shards = Vec::with_capacity(n);
+    let mut sink_busy = Duration::ZERO;
+    let mut sink_count = 0usize;
+    for (shard, (items, elapsed, owned)) in shard_items.into_iter().enumerate() {
+        let mut latencies = Vec::with_capacity(items.len());
+        for Stamped { born, item } in items {
+            let f0 = Instant::now();
+            sink_fn(item)?;
+            sink_busy += f0.elapsed();
+            sink_count += 1;
+            latencies.push(born.elapsed());
+        }
+        merged.latencies.extend_from_slice(&latencies);
+        shards.push(ShardReport { shard, owned, completed: latencies.len(), elapsed, latencies });
+    }
+    merged.stages.push(StageReport {
+        name: sink_name,
+        category: sink_cat,
+        items: sink_count,
+        busy: sink_busy,
+    });
+    let output = finish()?;
+    let sharding = ShardedReport { shards, wall: t0.elapsed() };
+    Ok(ExecOutcome { report: merged, output, scaling: None, sharding: Some(sharding) })
 }
 
 fn merge_reports(reports: &[Report]) -> Report {
@@ -524,6 +707,7 @@ mod tests {
         assert!(run_sequential(failing()).unwrap_err().to_string().contains("boom"));
         assert!(run_streaming(failing(), 2).unwrap_err().to_string().contains("boom"));
         assert!(run_multi_instance(2, |_| Ok(failing())).is_err());
+        assert!(run_sharded(2, || Ok(failing())).unwrap_err().to_string().contains("boom"));
     }
 
     #[test]
@@ -554,8 +738,12 @@ mod tests {
         assert_eq!(ExecMode::parse("stream"), Some(ExecMode::Streaming));
         assert_eq!(ExecMode::parse("multi"), Some(ExecMode::MultiInstance(2)));
         assert_eq!(ExecMode::parse("multi:6"), Some(ExecMode::MultiInstance(6)));
+        assert_eq!(ExecMode::parse("shard"), Some(ExecMode::Sharded(2)));
+        assert_eq!(ExecMode::parse("sharded"), Some(ExecMode::Sharded(2)));
+        assert_eq!(ExecMode::parse("shard:4"), Some(ExecMode::Sharded(4)));
         assert_eq!(ExecMode::parse("warp"), None);
         assert_eq!(ExecMode::MultiInstance(4).to_string(), "multi:4");
+        assert_eq!(ExecMode::Sharded(4).to_string(), "shard:4");
     }
 
     #[test]
@@ -566,6 +754,9 @@ mod tests {
             ExecMode::MultiInstance(1),
             ExecMode::MultiInstance(2),
             ExecMode::MultiInstance(17),
+            ExecMode::Sharded(1),
+            ExecMode::Sharded(2),
+            ExecMode::Sharded(17),
         ];
         for mode in modes {
             assert_eq!(ExecMode::parse(&mode.to_string()), Some(mode), "{mode}");
@@ -573,16 +764,168 @@ mod tests {
     }
 
     #[test]
-    fn exec_mode_rejects_malformed_multi_specs() {
-        // Zero instances is meaningless, a trailing colon has no count,
-        // and garbage suffixes must not parse as a count.
+    fn exec_mode_rejects_malformed_specs() {
+        // Zero workers is meaningless, a trailing colon has no count,
+        // signs/whitespace/garbage suffixes must not parse as a count
+        // (`"+2".parse::<usize>()` would accept the sign — the strict
+        // digit check exists to reject exactly that class).
         let bad_specs = [
-            "multi:0", "multi:", "multi:x", "multi:3x", "multi:-1", "multi: 2", "multi:2.5",
-            "", "sequentially",
+            "multi:0", "multi:", "multi:x", "multi:3x", "multi:-1", "multi:+2", "multi: 2",
+            "multi:2.5", "multi:2 ", "shard:0", "shard:", "shard:x", "shard:3x", "shard:-1",
+            "shard:+2", "shard: 2", "shard:2.5", " shard:2 ", "shard:2 ", " shard:2", "",
+            "sequentially", "shards",
         ];
         for bad in bad_specs {
             assert_eq!(ExecMode::parse(bad), None, "{bad:?} must not parse");
         }
+    }
+
+    #[test]
+    fn sharded_of_one_matches_sequential() {
+        let seq = run_sequential(arithmetic_plan(40)).unwrap();
+        let sharded = run_sharded(1, || Ok(arithmetic_plan(40))).unwrap();
+        assert_eq!(seq.output.items, sharded.output.items);
+        assert_eq!(seq.output.metrics, sharded.output.metrics);
+        let sharding = sharded.sharding.unwrap();
+        assert_eq!(sharding.shard_count(), 1);
+        assert_eq!(sharding.total_owned(), 40);
+        assert_eq!(sharding.total_completed(), seq.output.items);
+        assert!(sharded.scaling.is_none(), "sharded runs carry no scaling aggregate");
+    }
+
+    #[test]
+    fn sharded_partitions_one_dataset_and_merges_in_shard_order() {
+        let seq = run_sequential(arithmetic_plan(100)).unwrap();
+        for n in 2..=4usize {
+            let sharded = run_sharded(n, || Ok(arithmetic_plan(100))).unwrap();
+            // One dataset: items and metrics equal sequential (NOT n×,
+            // which is what multi-instance would report).
+            assert_eq!(sharded.output.items, seq.output.items, "n={n}");
+            assert_eq!(sharded.output.metrics, seq.output.metrics, "n={n}");
+            // Same stage structure as sequential, with per-stage item
+            // counts summing to the sequential counts across shards.
+            let names: Vec<&String> = sharded.report.stages.iter().map(|s| &s.name).collect();
+            let seq_names: Vec<&String> = seq.report.stages.iter().map(|s| &s.name).collect();
+            assert_eq!(names, seq_names, "n={n}");
+            for (a, b) in sharded.report.stages.iter().zip(&seq.report.stages) {
+                assert_eq!(a.items, b.items, "stage {} n={n}", a.name);
+            }
+            let sharding = sharded.sharding.unwrap();
+            assert_eq!(sharding.shard_count(), n);
+            // Round-robin partition: disjoint cover of the 100 emissions.
+            assert_eq!(sharding.total_owned(), 100, "n={n}");
+            for s in &sharding.shards {
+                assert_eq!(s.owned, 100 / n + usize::from(s.shard < 100 % n), "n={n}");
+                assert_eq!(s.latencies.len(), s.completed);
+            }
+            assert!(sharding.balance() > 0.7, "n={n}: {}", sharding.balance());
+            // Pooled latency samples: one per item completing the sink.
+            assert_eq!(sharding.pooled_latencies().len(), seq.output.items, "n={n}");
+            assert_eq!(sharded.report.latencies.len(), seq.output.items, "n={n}");
+            let p50 = sharding.latency_percentile(0.50).unwrap();
+            let p95 = sharding.latency_percentile(0.95).unwrap();
+            assert!(p95 >= p50, "n={n}");
+        }
+    }
+
+    #[test]
+    fn sharded_single_item_source_lands_on_shard_zero() {
+        // The tabular pipelines emit one state item; sharding must not
+        // lose it or fail the idle shards.
+        let one = |emit: &mut dyn FnMut(i32)| emit(7);
+        let make = move || {
+            Ok(Plan::source("one", "gen", Category::Pre, one)
+                .map("id", Category::Ai, |x: i32| Ok(x))
+                .sink(
+                    "out",
+                    Category::Post,
+                    0i64,
+                    |acc: &mut i64, x: i32| {
+                        *acc += x as i64;
+                        Ok(())
+                    },
+                    |acc| {
+                        let mut metrics = BTreeMap::new();
+                        metrics.insert("sum".to_string(), acc as f64);
+                        Ok(PlanOutput { metrics, items: 1 })
+                    },
+                ))
+        };
+        let out = run_sharded(4, make).unwrap();
+        assert_eq!(out.output.metrics["sum"], 7.0);
+        let sharding = out.sharding.unwrap();
+        assert_eq!(sharding.total_owned(), 1);
+        assert_eq!(sharding.shards[0].owned, 1);
+        for s in &sharding.shards[1..] {
+            assert_eq!(s.owned, 0, "shard {} must own nothing", s.shard);
+            assert_eq!(s.completed, 0);
+        }
+    }
+
+    #[test]
+    fn sharded_batch_plans_batch_within_each_partition() {
+        // 20 items, max_batch 8: sequential cuts 8/8/4 = 3 batches;
+        // two shards of 10 cut 8/2 each = 4 batches. Item counts are
+        // preserved; batch boundaries are an executor property (exactly
+        // like the streaming executor's timeout flushes).
+        let sharded = run_sharded(2, || Ok(batch_len_plan(20, 8, 1, 0))).unwrap();
+        assert_eq!(sharded.output.items, 20);
+        assert_eq!(sharded.output.metrics["batches"], 4.0);
+        let sharding = sharded.sharding.unwrap();
+        assert_eq!(sharding.total_owned(), 20);
+        // One latency sample per sink arrival (a batch).
+        assert_eq!(sharding.pooled_latencies().len(), 4);
+    }
+
+    #[test]
+    fn sharded_empty_source_still_finishes() {
+        let make = || {
+            Ok(Plan::source("e", "none", Category::Pre, |_emit: &mut dyn FnMut(i32)| {}).sink(
+                "out",
+                Category::Post,
+                0usize,
+                |n: &mut usize, _x: i32| {
+                    *n += 1;
+                    Ok(())
+                },
+                |n| Ok(PlanOutput { metrics: BTreeMap::new(), items: n }),
+            ))
+        };
+        let out = run_sharded(3, make).unwrap();
+        assert_eq!(out.output.items, 0);
+        let sharding = out.sharding.unwrap();
+        assert_eq!(sharding.total_owned(), 0);
+        assert!(sharding.latency_percentile(0.5).is_none());
+    }
+
+    #[test]
+    fn sharded_sink_errors_propagate_from_the_merge_fold() {
+        // Transforms succeed on every shard; the sink rejects one item.
+        let make = || {
+            Ok(Plan::source("s", "gen", Category::Pre, |emit: &mut dyn FnMut(i32)| {
+                for i in 0..10 {
+                    emit(i);
+                }
+            })
+            .sink(
+                "picky",
+                Category::Post,
+                (),
+                |_s: &mut (), x: i32| {
+                    anyhow::ensure!(x != 7, "sink rejects item 7");
+                    Ok(())
+                },
+                |_| Ok(PlanOutput { metrics: BTreeMap::new(), items: 0 }),
+            ))
+        };
+        let err = run_sharded(3, make).unwrap_err().to_string();
+        assert!(err.contains("rejects item 7"), "{err}");
+    }
+
+    #[test]
+    fn sharded_rejects_zero_shards() {
+        let err = run_sharded(0, || Ok(arithmetic_plan(4))).unwrap_err().to_string();
+        assert!(err.contains("at least one shard"), "{err}");
     }
 
     #[test]

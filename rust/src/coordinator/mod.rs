@@ -16,7 +16,11 @@
 //! * `Streaming` — one thread per stage over bounded channels with
 //!   backpressure (the video/serving shape);
 //! * `MultiInstance(n)` — n replicated plan instances aggregated by the
-//!   scaler (§3.4 workload scaling).
+//!   scaler (§3.4 workload scaling: n copies of the stream);
+//! * `Sharded(n)` — n data-parallel workers over ONE dataset: the
+//!   source is partitioned round-robin by emission index ([`Sharder`])
+//!   and sink state is merged in shard order, so a fixed dataset
+//!   finishes faster instead of running more copies.
 //!
 //! **Who gets to run** — [`router`]: the serving-side admission layer.
 //! An [`AdmissionQueue`] is a bounded priority queue with load shedding
@@ -28,10 +32,11 @@
 //! cross-cutting optimizations — dynamic batching ([`batcher`], a plan
 //! node), telemetry ([`telemetry`], recorded identically by every
 //! executor, the data behind Figure 1, now including per-item end-to-end
-//! latency samples), instance scaling ([`scaler`]), admission control
-//! ([`router`]) — are implemented once against the IR instead of per
-//! workload. Future scaling work (async executor, sharded plans) plugs
-//! in as additional executors over the same plans.
+//! latency samples), instance scaling ([`scaler`]), data-parallel
+//! sharding ([`plan::Sharder`] + the merge-aware sink in [`exec`]),
+//! admission control ([`router`]) — are implemented once against the IR
+//! instead of per workload. Future scaling work (async executor) plugs
+//! in as an additional executor over the same plans.
 
 pub mod telemetry;
 pub mod plan;
@@ -41,10 +46,10 @@ pub mod router;
 pub mod scaler;
 
 pub use batcher::{BatcherConfig, DynamicBatcher};
-pub use exec::{execute, run_multi_instance, run_sequential, run_streaming};
+pub use exec::{execute, run_multi_instance, run_sequential, run_sharded, run_streaming};
 pub use exec::{ExecMode, ExecOutcome};
-pub use plan::{Plan, PlanBuilder, PlanOutput};
+pub use plan::{Plan, PlanBuilder, PlanOutput, Sharder};
 pub use router::{AdmissionQueue, AdmitOutcome, Priority, QueueStats};
 pub use scaler::{run_instances, run_instances_timed, LatencyRecorder};
 pub use scaler::{InstanceReport, ScalingReport};
-pub use telemetry::{Category, Report, StageReport, Telemetry};
+pub use telemetry::{Category, Report, ShardReport, ShardedReport, StageReport, Telemetry};

@@ -10,11 +10,13 @@
 //!
 //! Plans say *what* the pipeline computes; the interchangeable executors
 //! in [`super::exec`] decide *how*: in-thread sequential, thread-per-stage
-//! streaming over bounded channels, or N replicated instances (§3.4).
-//! Because the plan is data, cross-cutting optimizations (batching,
-//! scaling, telemetry, future sharding/async) are implemented once in an
-//! executor instead of being re-wired into every workload — the tf.data /
-//! BigDL split between pipeline definition and execution strategy.
+//! streaming over bounded channels, N replicated instances (§3.4), or N
+//! data-parallel shards over one dataset ([`Sharder`] /
+//! `ExecMode::Sharded`). Because the plan is data, cross-cutting
+//! optimizations (batching, scaling, sharding, telemetry) are implemented
+//! once in an executor instead of being re-wired into every workload —
+//! the tf.data / BigDL split between pipeline definition and execution
+//! strategy.
 //!
 //! Typing: the builder ([`PlanBuilder`]) is statically typed stage to
 //! stage; items are type-erased to `Box<dyn Any + Send>` internally so
@@ -115,6 +117,70 @@ impl Plan {
     /// Number of stages including source and sink.
     pub fn stage_count(&self) -> usize {
         self.nodes.len() + 2
+    }
+}
+
+/// Deterministic round-robin partitioner over a plan source's emission
+/// stream: emission `i` belongs to shard `i % of`. Partitions are
+/// disjoint and cover the stream, and ownership depends only on the
+/// emission index — never on thread timing — so a sharded run processes
+/// exactly the dataset a sequential run would, split `of` ways.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Sharder {
+    shard: usize,
+    of: usize,
+}
+
+impl Sharder {
+    /// Partition `shard` of `of` (0-based; `shard < of`, `of >= 1`).
+    pub fn new(shard: usize, of: usize) -> Sharder {
+        assert!(of >= 1, "sharding needs at least one shard");
+        assert!(shard < of, "shard index {shard} out of range for {of} shards");
+        Sharder { shard, of }
+    }
+
+    /// This partition's 0-based index.
+    pub fn shard(&self) -> usize {
+        self.shard
+    }
+
+    /// Total number of partitions.
+    pub fn of(&self) -> usize {
+        self.of
+    }
+
+    /// Whether source emission `index` belongs to this partition.
+    pub fn owns(&self, index: usize) -> bool {
+        index % self.of == self.shard
+    }
+}
+
+impl std::fmt::Display for Sharder {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}/{}", self.shard, self.of)
+    }
+}
+
+impl Plan {
+    /// Restrict this plan's source to the emissions `sharder` owns: the
+    /// wrapped source produces the full stream, but only every
+    /// `of`-th item (offset by the shard index) is forwarded downstream.
+    /// Transform and sink stages are untouched — the sharded executor
+    /// runs one such restricted plan per shard over the same stage graph
+    /// and merges sink state in shard order.
+    pub fn shard(mut self, sharder: Sharder) -> Plan {
+        let (name, category, mut produce) = self.source;
+        let filtered: SourceFn = Box::new(move |emit: &mut dyn FnMut(DynItem)| {
+            let mut index = 0usize;
+            produce(&mut |item| {
+                if sharder.owns(index) {
+                    emit(item);
+                }
+                index += 1;
+            });
+        });
+        self.source = (name, category, filtered);
+        self
     }
 }
 
@@ -314,5 +380,53 @@ mod tests {
         let msg = err.to_string();
         assert!(msg.contains("stagex"), "{msg}");
         assert!(msg.contains("String"), "{msg}");
+    }
+
+    #[test]
+    fn sharder_partitions_are_disjoint_and_cover() {
+        // Every emission index belongs to exactly one of the n shards.
+        for of in 1..=5usize {
+            for index in 0..40usize {
+                let owners: Vec<usize> =
+                    (0..of).filter(|&s| Sharder::new(s, of).owns(index)).collect();
+                assert_eq!(owners, vec![index % of], "index {index} of {of}");
+            }
+        }
+        assert_eq!(Sharder::new(1, 4).to_string(), "1/4");
+        assert_eq!(Sharder::new(2, 3).shard(), 2);
+        assert_eq!(Sharder::new(2, 3).of(), 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn sharder_rejects_out_of_range_index() {
+        let _ = Sharder::new(3, 3);
+    }
+
+    #[test]
+    fn plan_shard_filters_the_source_round_robin() {
+        // 0..10 doubled → evens kept; shard 1 of 2 owns odd emission
+        // indices 1,3,5,7,9 → doubled 2,6,10,14,18 → quarters filter
+        // keeps those divisible by 4.
+        let sharded = count_plan().shard(Sharder::new(1, 2));
+        let out = crate::coordinator::exec::run_sequential(sharded).unwrap();
+        // Owned emissions: 1,3,5,7,9 → doubled 2,6,10,14,18 → none % 4 == 0
+        // except... 2,6,10,14,18 are ≡ 2 (mod 4), so the filter drops all.
+        assert_eq!(out.output.items, 0);
+        let shard0 = count_plan().shard(Sharder::new(0, 2));
+        let out0 = crate::coordinator::exec::run_sequential(shard0).unwrap();
+        // Owned emissions 0,2,4,6,8 → doubled 0,4,8,12,16 all kept.
+        assert_eq!(out0.output.items, 5);
+        assert_eq!(out0.output.metrics["sum"], 40.0);
+    }
+
+    #[test]
+    fn shard_of_one_is_the_identity_partition() {
+        let whole = crate::coordinator::exec::run_sequential(count_plan()).unwrap();
+        let sharded =
+            crate::coordinator::exec::run_sequential(count_plan().shard(Sharder::new(0, 1)))
+                .unwrap();
+        assert_eq!(whole.output.items, sharded.output.items);
+        assert_eq!(whole.output.metrics, sharded.output.metrics);
     }
 }

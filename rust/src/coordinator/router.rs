@@ -328,4 +328,165 @@ mod tests {
         assert!(Priority::Normal < Priority::High);
         assert_eq!(Priority::default(), Priority::Normal);
     }
+
+    /// A queued test request: id + the deadline it was submitted with
+    /// (deadlines are dispatch-side metadata; the queue must carry them
+    /// through untouched).
+    type Req = (u64, Option<u64>);
+
+    /// Reference model of the admission contract: three FIFO lanes, a
+    /// hard depth bound, displacement from the newest entry of the
+    /// lowest non-empty strictly-lower lane.
+    struct ModelQueue {
+        lanes: [VecDeque<(Priority, Req)>; 3],
+        depth: usize,
+    }
+
+    impl ModelQueue {
+        fn new(depth: usize) -> ModelQueue {
+            ModelQueue { lanes: [VecDeque::new(), VecDeque::new(), VecDeque::new()], depth }
+        }
+
+        fn len(&self) -> usize {
+            self.lanes.iter().map(|l| l.len()).sum()
+        }
+
+        /// Mirrors `AdmissionQueue::admit`: returns (admitted, shed).
+        fn admit(&mut self, p: Priority, req: Req) -> (bool, Vec<(Priority, Req)>) {
+            if self.len() >= self.depth {
+                let victim = (0..p as usize)
+                    .find_map(|lane| self.lanes[lane].pop_back());
+                match victim {
+                    Some(v) => {
+                        self.lanes[p as usize].push_back((p, req));
+                        (true, vec![v])
+                    }
+                    None => (false, vec![(p, req)]),
+                }
+            } else {
+                self.lanes[p as usize].push_back((p, req));
+                (true, vec![])
+            }
+        }
+
+        /// Mirrors `AdmissionQueue::pop` drain order: highest lane first,
+        /// FIFO within a lane.
+        fn drain(mut self) -> Vec<(Priority, Req)> {
+            let mut out = Vec::new();
+            loop {
+                let Some(next) = (0..3).rev().find_map(|lane| self.lanes[lane].pop_front())
+                else {
+                    break;
+                };
+                out.push(next);
+            }
+            out
+        }
+    }
+
+    #[test]
+    fn randomized_admissions_match_the_reference_model() {
+        // Seeded property test: for random priority/deadline sequences
+        // into bounded queues, the AdmissionQueue must (a) never exceed
+        // its depth, (b) shed exactly the requests the displacement rule
+        // says it sheds — no more, no fewer, the same ids — and
+        // (c) drain FIFO-within-priority, highest priority first.
+        for seed in 0..12u64 {
+            let mut rng = crate::util::Rng::new(0x40D3 + seed);
+            let depth = 1 + rng.below(6);
+            let q = AdmissionQueue::new(depth);
+            let mut model = ModelQueue::new(depth);
+            let n_requests = 40 + rng.below(160);
+            for id in 0..n_requests as u64 {
+                let p = *rng.choice(&Priority::ALL);
+                let deadline = rng.chance(0.3).then(|| rng.below(50) as u64);
+                let req: Req = (id, deadline);
+                let out = q.admit(p, req);
+                let (model_admitted, model_shed) = model.admit(p, req);
+                assert_eq!(
+                    out.admitted, model_admitted,
+                    "seed {seed} id {id}: admit decision diverged"
+                );
+                assert_eq!(
+                    out.shed, model_shed,
+                    "seed {seed} id {id}: shed set diverged"
+                );
+                // Invariant: the bound holds after every admission.
+                assert!(
+                    q.len() <= depth,
+                    "seed {seed} id {id}: depth {} exceeded bound {depth}",
+                    q.len()
+                );
+                assert_eq!(q.len(), model.len(), "seed {seed} id {id}");
+            }
+            // Conservation: admitted == drained + nothing lost.
+            let stats = q.stats();
+            assert_eq!(
+                stats.admitted + stats.shed - model_displaced_count(&stats, &q),
+                n_requests as u64,
+                "seed {seed}: every request was admitted or shed exactly once"
+            );
+            q.close();
+            let drained: Vec<(Priority, Req)> = std::iter::from_fn(|| q.pop()).collect();
+            let expected = model.drain();
+            assert_eq!(drained, expected, "seed {seed}: drain order diverged");
+            // FIFO within each priority: ids strictly increase lane-wise.
+            for p in Priority::ALL {
+                let ids: Vec<u64> = drained
+                    .iter()
+                    .filter(|(dp, _)| *dp == p)
+                    .map(|(_, (id, _))| *id)
+                    .collect();
+                assert!(
+                    ids.windows(2).all(|w| w[0] < w[1]),
+                    "seed {seed}: {p} lane not FIFO: {ids:?}"
+                );
+            }
+            // Priorities are non-increasing across the drain.
+            assert!(
+                drained.windows(2).all(|w| w[0].0 >= w[1].0),
+                "seed {seed}: drain not priority-ordered"
+            );
+        }
+    }
+
+    /// Every request is counted exactly once across admitted/shed, except
+    /// that a displaced request is counted in BOTH (admitted at entry,
+    /// shed on displacement). The displaced count is admitted - queued -
+    /// dispatched; with nothing dispatched yet, admitted - len.
+    fn model_displaced_count(stats: &QueueStats, q: &AdmissionQueue<Req>) -> u64 {
+        stats.admitted - q.len() as u64 - stats.dispatched
+    }
+
+    #[test]
+    fn randomized_displacement_sheds_only_strictly_lower_priorities() {
+        // Sharper shedding property: whenever an admission displaces, the
+        // victim's priority is strictly below the incoming one, and the
+        // incoming request itself is only shed when nothing below it is
+        // queued.
+        let mut rng = crate::util::Rng::new(0xD15B);
+        for _ in 0..4 {
+            let depth = 1 + rng.below(4);
+            let q: AdmissionQueue<u64> = AdmissionQueue::new(depth);
+            for id in 0..120u64 {
+                let p = *rng.choice(&Priority::ALL);
+                let was_full = q.len() >= depth;
+                let out = q.admit(p, id);
+                if out.admitted {
+                    for (victim_p, _) in &out.shed {
+                        assert!(
+                            *victim_p < p,
+                            "displaced {victim_p} not strictly below incoming {p}"
+                        );
+                        assert!(was_full, "displacement only happens when full");
+                    }
+                } else {
+                    assert!(was_full, "rejections only happen when full");
+                    assert_eq!(out.shed.len(), 1, "a rejection sheds exactly the incoming");
+                    assert_eq!(out.shed[0].0, p);
+                    assert_eq!(out.shed[0].1, id);
+                }
+            }
+        }
+    }
 }

@@ -112,17 +112,24 @@ pub struct Report {
     pub latencies: Vec<Duration>,
 }
 
+/// Nearest-rank percentile (`q` in 0..=1) over an already-sorted slice;
+/// `None` when empty. The one definition behind [`Report`] and
+/// [`ShardedReport`] percentiles.
+fn percentile_of_sorted(sorted: &[Duration], q: f64) -> Option<Duration> {
+    if sorted.is_empty() {
+        return None;
+    }
+    let idx = ((sorted.len() - 1) as f64 * q.clamp(0.0, 1.0)).round() as usize;
+    Some(sorted[idx])
+}
+
 impl Report {
     /// Latency percentile (`q` in 0..=1) over the per-item samples;
     /// `None` when no samples were recorded.
     pub fn latency_percentile(&self, q: f64) -> Option<Duration> {
-        if self.latencies.is_empty() {
-            return None;
-        }
         let mut sorted = self.latencies.clone();
         sorted.sort_unstable();
-        let idx = ((sorted.len() - 1) as f64 * q.clamp(0.0, 1.0)).round() as usize;
-        Some(sorted[idx])
+        percentile_of_sorted(&sorted, q)
     }
 
     /// Total busy time across stages.
@@ -165,6 +172,116 @@ impl Report {
                 s.items.to_string(),
                 crate::util::fmt::dur(s.busy),
                 format!("{:.1}%", 100.0 * s.busy.as_secs_f64() / total),
+            ]);
+        }
+        t
+    }
+}
+
+/// One shard's slice of a data-parallel ([`ExecMode::Sharded`]) run.
+///
+/// [`ExecMode::Sharded`]: super::exec::ExecMode
+#[derive(Debug, Clone)]
+pub struct ShardReport {
+    /// 0-based shard index (also the merge order of its sink state).
+    pub shard: usize,
+    /// Source emissions this shard owned under the round-robin partition.
+    pub owned: usize,
+    /// Items from this shard that completed the merge sink.
+    pub completed: usize,
+    /// Wall time of the shard's source+transform pass (excludes the
+    /// merge fold, which runs once on the merging thread).
+    pub elapsed: Duration,
+    /// Per-item end-to-end latency samples for this shard's items
+    /// (source emission → merge-sink completion).
+    pub latencies: Vec<Duration>,
+}
+
+impl ShardReport {
+    /// Owned source emissions per second of shard pass time.
+    pub fn throughput(&self) -> f64 {
+        self.owned as f64 / self.elapsed.as_secs_f64().max(1e-12)
+    }
+}
+
+/// Aggregate view of a sharded run: one [`ShardReport`] per shard plus
+/// the run's wall time. Per-item latencies are pooled across shards, so
+/// the percentiles describe the whole dataset, not one partition — the
+/// sharded analogue of [`super::scaler::ScalingReport`], keyed by data
+/// partition instead of replicated instance.
+#[derive(Debug, Clone)]
+pub struct ShardedReport {
+    /// Per-shard slices, indexed by shard (merge order).
+    pub shards: Vec<ShardReport>,
+    /// Wall time of the whole sharded run (passes + merge fold).
+    pub wall: Duration,
+}
+
+impl ShardedReport {
+    /// Number of shards.
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Source emissions across all shards (= the dataset size).
+    pub fn total_owned(&self) -> usize {
+        self.shards.iter().map(|s| s.owned).sum()
+    }
+
+    /// Items completing the merge sink across all shards.
+    pub fn total_completed(&self) -> usize {
+        self.shards.iter().map(|s| s.completed).sum()
+    }
+
+    /// Dataset throughput: sink completions per second of wall time.
+    /// Unlike multi-instance aggregate throughput this measures ONE
+    /// dataset finishing faster, not n copies finishing together.
+    pub fn dataset_throughput(&self) -> f64 {
+        self.total_completed() as f64 / self.wall.as_secs_f64().max(1e-12)
+    }
+
+    /// Partition balance: min/max owned emissions across shards
+    /// (1.0 = perfectly balanced; round-robin keeps it ≥ k/(k+1) for
+    /// any dataset of k·n + r items).
+    pub fn balance(&self) -> f64 {
+        let min = self.shards.iter().map(|s| s.owned).min().unwrap_or(0);
+        let max = self.shards.iter().map(|s| s.owned).max().unwrap_or(0);
+        if max == 0 {
+            1.0
+        } else {
+            min as f64 / max as f64
+        }
+    }
+
+    /// Every shard's latency samples pooled and sorted.
+    pub fn pooled_latencies(&self) -> Vec<Duration> {
+        let mut pooled: Vec<Duration> =
+            self.shards.iter().flat_map(|s| s.latencies.iter().copied()).collect();
+        pooled.sort_unstable();
+        pooled
+    }
+
+    /// Latency percentile (`q` in 0..=1) over the pooled per-item
+    /// samples; `None` when nothing completed.
+    pub fn latency_percentile(&self, q: f64) -> Option<Duration> {
+        percentile_of_sorted(&self.pooled_latencies(), q)
+    }
+
+    /// Several pooled percentiles from a single pool+sort.
+    pub fn latency_percentiles(&self, qs: &[f64]) -> Vec<Option<Duration>> {
+        let pooled = self.pooled_latencies();
+        qs.iter().map(|&q| percentile_of_sorted(&pooled, q)).collect()
+    }
+
+    /// Render a per-shard table (owned / completed / pass time).
+    pub fn table(&self) -> crate::util::fmt::Table {
+        let mut t = crate::util::fmt::Table::new(&["shard", "owned", "completed", "pass time"]);
+        for s in &self.shards {
+            t.row(&[
+                s.shard.to_string(),
+                s.owned.to_string(),
+                s.completed.to_string(),
+                crate::util::fmt::dur(s.elapsed),
             ]);
         }
         t
@@ -230,5 +347,57 @@ mod tests {
         let s = tel.report().table().render();
         assert!(s.contains("a"), "{s}");
         assert!(s.contains("pre"));
+    }
+
+    fn shard(i: usize, owned: usize, lat_ms: &[u64]) -> ShardReport {
+        ShardReport {
+            shard: i,
+            owned,
+            completed: lat_ms.len(),
+            elapsed: Duration::from_millis(10),
+            latencies: lat_ms.iter().map(|&ms| Duration::from_millis(ms)).collect(),
+        }
+    }
+
+    #[test]
+    fn sharded_report_pools_latencies_across_shards() {
+        let r = ShardedReport {
+            shards: vec![shard(0, 3, &[5, 1, 9]), shard(1, 2, &[3, 7])],
+            wall: Duration::from_millis(20),
+        };
+        assert_eq!(r.shard_count(), 2);
+        assert_eq!(r.total_owned(), 5);
+        assert_eq!(r.total_completed(), 5);
+        let pooled = r.pooled_latencies();
+        assert_eq!(pooled.len(), 5);
+        assert!(pooled.windows(2).all(|w| w[0] <= w[1]), "pooled must be sorted");
+        assert_eq!(r.latency_percentile(0.5), Some(Duration::from_millis(5)));
+        assert_eq!(r.latency_percentile(1.0), Some(Duration::from_millis(9)));
+        assert!(r.latency_percentile(0.95) >= r.latency_percentile(0.5));
+        let pcts = r.latency_percentiles(&[0.5, 0.95]);
+        assert_eq!(pcts[0], r.latency_percentile(0.5));
+        assert_eq!(pcts[1], r.latency_percentile(0.95));
+        assert!(r.dataset_throughput() > 0.0);
+    }
+
+    #[test]
+    fn sharded_report_balance_and_empty_cases() {
+        let even = ShardedReport {
+            shards: vec![shard(0, 4, &[1]), shard(1, 4, &[2])],
+            wall: Duration::from_millis(1),
+        };
+        assert!((even.balance() - 1.0).abs() < 1e-12);
+        let skewed = ShardedReport {
+            shards: vec![shard(0, 1, &[]), shard(1, 4, &[])],
+            wall: Duration::from_millis(1),
+        };
+        assert!((skewed.balance() - 0.25).abs() < 1e-12);
+        assert!(skewed.latency_percentile(0.5).is_none());
+        assert_eq!(skewed.latency_percentiles(&[0.5, 0.95]), vec![None, None]);
+        let empty = ShardedReport { shards: vec![], wall: Duration::ZERO };
+        assert_eq!(empty.balance(), 1.0);
+        assert_eq!(empty.total_owned(), 0);
+        let s = even.table().render();
+        assert!(s.contains("shard"), "{s}");
     }
 }

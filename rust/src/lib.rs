@@ -8,7 +8,9 @@
 //!   ([`coordinator`]): every workload is declared once as a **plan** (a
 //!   typed graph of categorized stage nodes) and executed by pluggable
 //!   **executors** — sequential, thread-per-stage streaming with
-//!   backpressure, or multi-instance replication (§3.4). On top sits the
+//!   backpressure, multi-instance replication (§3.4), or data-parallel
+//!   sharding (one dataset partitioned round-robin across workers with a
+//!   merge-aware sink). On top sits the
 //!   serving layer ([`service`]): a [`service::PipelineService`] opens
 //!   warm per-pipeline [`service::Session`]s once and answers typed
 //!   `Request { pipeline, payload, priority, deadline }` values through

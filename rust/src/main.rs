@@ -2,7 +2,8 @@
 //!
 //! ```text
 //! repro list                       # Table 1: the eight pipelines
-//! repro run <pipeline> [--opt baseline|optimized] [--exec sequential|streaming|multi[:N]]
+//! repro run <pipeline> [--opt baseline|optimized]
+//!                      [--exec sequential|streaming|multi[:N]|shard[:N]]
 //!                      [--scale F] [--seed N]
 //! repro serve [--requests N] [--mix census:4,dlsa:1] [--depth D] [--workers W]
 //!                                  # soak a PipelineService with a mixed-priority request mix
@@ -57,9 +58,13 @@ fn print_help() {
          \n\
          OPTIONS (run/serve/fig1):\n\
          \x20 --opt baseline|optimized          optimization level (default optimized)\n\
-         \x20 --exec sequential|streaming|multi[:N]\n\
+         \x20 --exec sequential|streaming|multi[:N]|shard[:N]\n\
          \x20                                   executor for the pipeline plan\n\
-         \x20                                   (default sequential; multi defaults to 2 instances)\n\
+         \x20                                   (default sequential; multi/shard default to 2)\n\
+         \x20                                   multi:N runs N copies of the stream (§3.4);\n\
+         \x20                                   shard:N splits ONE dataset round-robin across\n\
+         \x20                                   N workers and merges sink state in shard order,\n\
+         \x20                                   so metrics match the sequential run exactly\n\
          \x20 --scale F                         dataset scale multiplier (default 1.0)\n\
          \x20 --seed N                          RNG seed (default 0xE2E)\n\
          \n\
@@ -83,7 +88,7 @@ fn parse_cfg(args: &Args) -> RunConfig {
     };
     let exec_spec = args.get_or("exec", "sequential");
     let Some(exec) = ExecMode::parse(exec_spec) else {
-        eprintln!("invalid --exec {exec_spec:?}; use sequential|streaming|multi[:N]");
+        eprintln!("invalid --exec {exec_spec:?}; use sequential|streaming|multi[:N]|shard[:N]");
         std::process::exit(2);
     };
     RunConfig {
@@ -124,6 +129,25 @@ fn cmd_run(args: &Args) -> i32 {
             println!("throughput: {:.1} items/s", res.throughput());
             for (k, v) in &res.metrics {
                 println!("metric {k} = {v:.4}");
+            }
+            if let Some(sharding) = &res.sharding {
+                println!(
+                    "shards: {} over one dataset (balance {:.2}, {:.1} items/s of wall)",
+                    sharding.shard_count(),
+                    sharding.balance(),
+                    sharding.dataset_throughput()
+                );
+                sharding.table().print();
+                let mut pcts = sharding.latency_percentiles(&[0.50, 0.95]).into_iter();
+                let pct = |p: Option<std::time::Duration>| match p {
+                    Some(d) => fmt::dur(d),
+                    None => "-".to_string(),
+                };
+                println!(
+                    "pooled item latency: p50 {} p95 {}",
+                    pct(pcts.next().flatten()),
+                    pct(pcts.next().flatten())
+                );
             }
             0
         }

@@ -310,4 +310,20 @@ mod tests {
         assert_eq!(seq.metrics, stream.metrics);
         assert_eq!(seq.items, stream.items);
     }
+
+    #[test]
+    fn sharded_executor_matches_sequential() {
+        // Census emits one state item, so sharding degenerates to shard
+        // 0 doing the work — the merge-aware sink must still reproduce
+        // the sequential answer exactly, with idle shards contributing
+        // nothing.
+        let cfg = RunConfig { toggles: Toggles::optimized(), scale: 0.05, seed: 7, ..Default::default() };
+        let seq = run(&cfg).unwrap();
+        let sharded = run(&RunConfig { exec: ExecMode::Sharded(4), ..cfg }).unwrap();
+        assert_eq!(seq.metrics, sharded.metrics);
+        assert_eq!(seq.items, sharded.items);
+        let sharding = sharded.sharding.unwrap();
+        assert_eq!(sharding.total_owned(), 1);
+        assert_eq!(sharding.shards[0].owned, 1);
+    }
 }

@@ -316,4 +316,29 @@ mod tests {
         let stream = run(&RunConfig { exec: ExecMode::Streaming, ..cfg }).unwrap();
         assert_eq!(seq.metrics, stream.metrics);
     }
+
+    #[test]
+    fn sharded_batches_preserve_predictions() {
+        if !artifacts_ready() {
+            return;
+        }
+        // Sharding cuts the document stream round-robin, so each shard
+        // batches its own partition (different batch compositions than
+        // sequential) and the sink's index-sort makes the merge order
+        // irrelevant: per-document predictions — and therefore agreement
+        // and label_match — must be identical. The docs split across
+        // shards, pinning true data-parallel serving for the per-item
+        // pipeline shape.
+        let cfg = RunConfig { toggles: Toggles::optimized(), scale: 0.25, seed: 9, ..Default::default() };
+        let seq = run(&cfg).unwrap();
+        let sharded = run(&RunConfig { exec: ExecMode::Sharded(3), ..cfg }).unwrap();
+        assert_eq!(seq.metrics, sharded.metrics);
+        assert_eq!(seq.items, sharded.items);
+        let sharding = sharded.sharding.unwrap();
+        assert_eq!(sharding.total_owned(), seq.items, "every doc is owned by some shard");
+        assert!(
+            sharding.shards.iter().all(|s| s.owned > 0),
+            "24 docs over 3 shards leaves no shard idle"
+        );
+    }
 }

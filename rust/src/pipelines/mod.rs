@@ -45,7 +45,7 @@ pub mod workload;
 pub use workload::{Output, Workload};
 pub(crate) use workload::workload_mismatch;
 
-use crate::coordinator::telemetry::Report;
+use crate::coordinator::telemetry::{Report, ShardedReport};
 use crate::coordinator::{exec, ExecMode, ExecOutcome, Plan};
 use crate::runtime::ModelClient;
 use crate::OptLevel;
@@ -139,6 +139,11 @@ pub struct PipelineResult {
     pub metrics: BTreeMap<String, f64>,
     /// Items processed end-to-end (rows, docs, frames, …).
     pub items: usize,
+    /// Per-shard partition report for `ExecMode::Sharded` runs; `None`
+    /// under every other executor. Kept out of `metrics` so a sharded
+    /// run's metric map stays identical to the sequential run's (the
+    /// conformance contract).
+    pub sharding: Option<ShardedReport>,
 }
 
 impl PipelineResult {
@@ -176,6 +181,11 @@ pub type WarmFn = fn(&RunConfig) -> anyhow::Result<Option<ModelClient>>;
 /// instance i processes its own data like the paper's parallel streams;
 /// `MultiInstance(1)` is therefore bit-identical to `Sequential`. For
 /// n > 1 the scaling aggregate is appended as `scaling_*` metrics.
+/// Sharded execution instead partitions ONE stream: every shard builds
+/// the plan at the base seed (the executor pins instance 0), so
+/// `Sharded(n)` processes exactly the sequential dataset and reports the
+/// same metrics — the partition detail lands in
+/// [`PipelineResult::sharding`], never in the metric map.
 pub fn run_plan(plan_fn: PlanFn, cfg: &RunConfig) -> anyhow::Result<PipelineResult> {
     let base = *cfg;
     let outcome = exec::execute(cfg.exec, move |instance| {
@@ -190,7 +200,9 @@ pub fn run_plan(plan_fn: PlanFn, cfg: &RunConfig) -> anyhow::Result<PipelineResu
 /// path: a session generates (or receives) the payload once and executes
 /// it without re-deriving data from the config. Single-instance modes
 /// move the payload into the one plan they build (no copy on the serving
-/// hot path); multi-instance replicas each process a clone of it.
+/// hot path); multi-instance replicas each process a clone of it at a
+/// shifted seed (distinct streams), while sharded workers each process a
+/// clone of it at the base seed (one stream, partitioned).
 pub fn run_plan_with(
     plan_fn: PayloadPlanFn,
     payload: Workload,
@@ -207,6 +219,9 @@ pub fn run_plan_with(
             instance_cfg.seed = base.seed.wrapping_add(instance as u64);
             plan_fn(&instance_cfg, payload.clone())
         })?,
+        ExecMode::Sharded(n) => {
+            exec::run_sharded(n, move || plan_fn(&base, payload.clone()))?
+        }
     };
     Ok(finish_outcome(outcome))
 }
@@ -230,7 +245,12 @@ fn finish_outcome(outcome: ExecOutcome) -> PipelineResult {
             }
         }
     }
-    PipelineResult { report: outcome.report, metrics, items: outcome.output.items }
+    PipelineResult {
+        report: outcome.report,
+        metrics,
+        items: outcome.output.items,
+        sharding: outcome.sharding,
+    }
 }
 
 /// A registered pipeline: the typed handles a serving session needs.
@@ -472,6 +492,46 @@ mod tests {
             let served = run_plan_with(e.plan_with, (e.payload)(&cfg), &cfg).unwrap();
             assert_eq!(direct.metrics, served.metrics, "{name}");
             assert_eq!(direct.items, served.items, "{name}");
+        }
+    }
+
+    #[test]
+    fn sharded_runs_report_sequential_metrics_plus_a_sharding_report() {
+        // Sharding partitions the one dataset: metrics and items equal
+        // the sequential run (no scaling_* additions, no n× items), and
+        // the partition detail rides on PipelineResult::sharding.
+        let seq_cfg = RunConfig { scale: 0.05, seed: 31, ..Default::default() };
+        let seq = run_by_name("census", &seq_cfg).unwrap();
+        assert!(seq.sharding.is_none(), "sequential runs carry no sharding report");
+        let cfg = RunConfig { exec: ExecMode::Sharded(3), ..seq_cfg };
+        let sharded = run_by_name("census", &cfg).unwrap();
+        assert_eq!(sharded.metrics, seq.metrics);
+        assert_eq!(sharded.items, seq.items);
+        let sharding = sharded.sharding.expect("sharded run must report its partitions");
+        assert_eq!(sharding.shard_count(), 3);
+        // census emits one state item: shard 0 owns it, the others idle.
+        assert_eq!(sharding.total_owned(), 1);
+        assert_eq!(sharding.shards[0].owned, 1);
+    }
+
+    #[test]
+    fn sharded_plan_with_partitions_a_shared_payload() {
+        // The serving path: one payload, executed sharded — same
+        // answers as the sequential serving path over the same payload.
+        let cfg = RunConfig { scale: 0.05, seed: 31, ..Default::default() };
+        for name in ["census", "plasticc", "iiot"] {
+            let e = find(name).unwrap();
+            let payload = (e.payload)(&cfg);
+            let seq = run_plan_with(e.plan_with, payload.clone(), &cfg).unwrap();
+            let shard_cfg = RunConfig { exec: ExecMode::Sharded(4), ..cfg };
+            let sharded = run_plan_with(e.plan_with, payload, &shard_cfg).unwrap();
+            assert_eq!(sharded.metrics, seq.metrics, "{name}");
+            assert_eq!(sharded.items, seq.items, "{name}");
+            assert_eq!(
+                sharded.sharding.as_ref().map(|s| s.shard_count()),
+                Some(4),
+                "{name}"
+            );
         }
     }
 }

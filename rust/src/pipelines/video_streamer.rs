@@ -287,4 +287,30 @@ mod tests {
         assert_eq!(seq.metric("db_bytes"), stream.metric("db_bytes"));
         assert_eq!(seq.metric("truth_recall"), stream.metric("truth_recall"));
     }
+
+    #[test]
+    fn sharded_streams_split_frames_and_preserve_uploads() {
+        if !artifacts_ready() {
+            return;
+        }
+        // The per-frame shape sharding is built for: frames partition
+        // round-robin across shards (a camera feed fanned out to
+        // workers), and the merged sink reports the same uploads, bytes,
+        // and recall as one sequential pass. fps is wall-clock and
+        // excluded, like in the cross-executor suite.
+        let cfg = RunConfig {
+            toggles: Toggles::optimized(),
+            scale: 0.25,
+            seed: 12,
+            ..Default::default()
+        };
+        let seq = run(&cfg).unwrap();
+        let sharded = run(&RunConfig { exec: ExecMode::Sharded(4), ..cfg }).unwrap();
+        assert_eq!(seq.metric("uploaded_frames"), sharded.metric("uploaded_frames"));
+        assert_eq!(seq.metric("db_bytes"), sharded.metric("db_bytes"));
+        assert_eq!(seq.metric("truth_recall"), sharded.metric("truth_recall"));
+        let sharding = sharded.sharding.unwrap();
+        assert_eq!(sharding.total_owned(), seq.items, "every frame is owned by some shard");
+        assert!(sharding.balance() > 0.5, "round-robin keeps the frame split even");
+    }
 }

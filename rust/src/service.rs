@@ -26,6 +26,14 @@
 //! deterministic: an unshedded request over [`Workload::Synthetic`]
 //! produces metrics identical to a direct `run_plan` at the same seed.
 //!
+//! Executor choice is a session property (`RunConfig::exec`), so a
+//! session opened with `ExecMode::Sharded(n)` executes each request's
+//! payload data-parallel across n shard workers — a sharded request is
+//! still ONE `Request` and resolves to ONE `Response` with the same
+//! metrics a sequential session would report, just computed by
+//! partitioning the payload (DL sessions share the one `ModelServer`
+//! across shards via the warm client's compile cache).
+//!
 //! [`Report`]: crate::coordinator::Report
 //! [`RunConfig::exec`]: crate::pipelines::RunConfig
 
@@ -616,6 +624,28 @@ mod tests {
         let stats = svc.stats();
         assert_eq!(stats.completed, 1);
         assert_eq!(stats.shed, 1);
+    }
+
+    #[test]
+    fn sharded_session_serves_one_request_with_sequential_metrics() {
+        // A sharded session is still one Request → one Response; the
+        // response's metrics equal a sequential session's for the same
+        // seed, and the partition detail rides on the result.
+        use crate::coordinator::ExecMode;
+        let sharded_cfg = RunConfig { exec: ExecMode::Sharded(2), ..tiny() };
+        let seq = Session::open("census", tiny()).unwrap();
+        let (seq_result, _) = seq.execute(Workload::Synthetic).unwrap();
+        let svc = PipelineService::open(
+            &["census"],
+            ServiceConfig { defaults: sharded_cfg, ..Default::default() },
+        )
+        .unwrap();
+        let resp = svc.call(Request::synthetic("census")).unwrap();
+        let c = resp.completion().expect("sharded request must complete");
+        assert_eq!(c.result.metrics, seq_result.metrics);
+        assert_eq!(c.result.items, seq_result.items);
+        let sharding = c.result.sharding.as_ref().expect("sharded run reports partitions");
+        assert_eq!(sharding.shard_count(), 2);
     }
 
     #[test]

@@ -1,15 +1,19 @@
-//! Executor-equivalence suite: the plan layer's core guarantee is that a
+//! Executor-conformance suite: the plan layer's core guarantee is that a
 //! pipeline's *results* are a property of its plan, not of the executor
 //! that ran it. For a fixed seed, every registry pipeline must produce
-//! identical deterministic metrics under Sequential, Streaming, and
-//! MultiInstance(n=1) execution — batch boundaries, thread scheduling,
-//! and queue sizes may differ; answers may not.
+//! identical deterministic metrics under Sequential, Streaming,
+//! MultiInstance(n=1), and Sharded(1..=4) execution — batch boundaries,
+//! thread scheduling, queue sizes, and shard partitions may differ;
+//! answers may not. Sharded runs additionally pin the merge-aware sink
+//! contract: one latency sample per item completing the sink, pooled
+//! across shards, with p50 ≤ p95 and partitions that exactly cover the
+//! source stream.
 //!
 //! Pipelines that execute model artifacts are skipped when `make
 //! artifacts` has not produced a manifest (the tabular three always run).
 
 use repro::coordinator::ExecMode;
-use repro::pipelines::{registry, run_by_name, RunConfig, Toggles};
+use repro::pipelines::{registry, run_by_name, PipelineResult, RunConfig, Toggles};
 
 fn artifacts_ready() -> bool {
     repro::runtime::default_artifacts_dir().join("manifest.json").exists()
@@ -26,6 +30,28 @@ fn base_cfg() -> RunConfig {
     RunConfig { toggles: Toggles::optimized(), scale: 0.1, seed: 0xE9, ..Default::default() }
 }
 
+/// Every non-sequential mode whose answers must equal Sequential's:
+/// Streaming, MultiInstance(1), and the full Sharded(1..=4) ladder.
+fn conformance_modes() -> Vec<ExecMode> {
+    let mut modes = vec![ExecMode::Streaming, ExecMode::MultiInstance(1)];
+    modes.extend((1..=4).map(ExecMode::Sharded));
+    modes
+}
+
+fn assert_metrics_match(name: &str, mode: ExecMode, seq: &PipelineResult, other: &PipelineResult) {
+    assert_eq!(seq.items, other.items, "{name} items differ under {mode}");
+    let keys: Vec<&String> = seq.metrics.keys().collect();
+    let other_keys: Vec<&String> = other.metrics.keys().collect();
+    assert_eq!(keys, other_keys, "{name} metric keys differ under {mode}");
+    for (k, v) in &seq.metrics {
+        if TIMING_METRICS.contains(&k.as_str()) {
+            continue;
+        }
+        let w = other.metric(k).unwrap();
+        assert!((v - w).abs() < 1e-12, "{name}.{k} differs under {mode}: {v} vs {w}");
+    }
+}
+
 #[test]
 fn all_executors_produce_identical_metrics() {
     for e in registry() {
@@ -36,26 +62,58 @@ fn all_executors_produce_identical_metrics() {
         let mut cfg = base_cfg();
         cfg.exec = ExecMode::Sequential;
         let seq = (e.run)(&cfg).unwrap_or_else(|err| panic!("{} sequential: {err:#}", e.name));
-        cfg.exec = ExecMode::Streaming;
-        let stream = (e.run)(&cfg).unwrap_or_else(|err| panic!("{} streaming: {err:#}", e.name));
-        cfg.exec = ExecMode::MultiInstance(1);
-        let multi = (e.run)(&cfg).unwrap_or_else(|err| panic!("{} multi(1): {err:#}", e.name));
+        for mode in conformance_modes() {
+            cfg.exec = mode;
+            let other =
+                (e.run)(&cfg).unwrap_or_else(|err| panic!("{} {mode}: {err:#}", e.name));
+            assert_metrics_match(e.name, mode, &seq, &other);
+        }
+    }
+}
 
-        for (mode, other) in [("streaming", &stream), ("multi:1", &multi)] {
-            assert_eq!(seq.items, other.items, "{} items differ under {mode}", e.name);
-            let keys: Vec<&String> = seq.metrics.keys().collect();
-            let other_keys: Vec<&String> = other.metrics.keys().collect();
-            assert_eq!(keys, other_keys, "{} metric keys differ under {mode}", e.name);
-            for (k, v) in &seq.metrics {
-                if TIMING_METRICS.contains(&k.as_str()) {
-                    continue;
-                }
-                let w = other.metric(k).unwrap();
-                assert!(
-                    (v - w).abs() < 1e-12,
-                    "{}.{k} differs under {mode}: {v} vs {w}",
-                    e.name
-                );
+#[test]
+fn sharded_runs_pool_latencies_and_cover_the_source() {
+    // The merge-aware sink contract, for every runnable pipeline and
+    // every shard count: pooled latency samples == items completed at
+    // the sink, p50 ≤ p95, and the round-robin partition exactly covers
+    // the source stream (disjoint shards summing to the sequential
+    // source count).
+    for e in registry() {
+        if needs_artifacts(e.name) && !artifacts_ready() {
+            continue;
+        }
+        let mut cfg = base_cfg();
+        cfg.exec = ExecMode::Sequential;
+        let seq = (e.run)(&cfg).unwrap();
+        let source_items = seq.report.stages.first().map_or(0, |s| s.items);
+        for n in 1..=4usize {
+            cfg.exec = ExecMode::Sharded(n);
+            let res = (e.run)(&cfg).unwrap_or_else(|err| panic!("{} shard:{n}: {err:#}", e.name));
+            let sharding = res
+                .sharding
+                .as_ref()
+                .unwrap_or_else(|| panic!("{} shard:{n}: missing sharding report", e.name));
+            assert_eq!(sharding.shard_count(), n, "{}", e.name);
+            assert_eq!(sharding.total_owned(), source_items, "{} shard:{n}", e.name);
+            let completed_at_sink =
+                res.report.stages.last().map_or(0, |s| s.items);
+            assert_eq!(
+                sharding.pooled_latencies().len(),
+                completed_at_sink,
+                "{} shard:{n}: one pooled sample per sink completion",
+                e.name
+            );
+            assert_eq!(res.report.latencies.len(), completed_at_sink, "{} shard:{n}", e.name);
+            if completed_at_sink > 0 {
+                let p50 = sharding.latency_percentile(0.50).unwrap();
+                let p95 = sharding.latency_percentile(0.95).unwrap();
+                assert!(p95 >= p50, "{} shard:{n}: p95 {p95:?} < p50 {p50:?}", e.name);
+            }
+            // Shard reports are indexed by shard (merge order) and each
+            // carries its own samples.
+            for (i, s) in sharding.shards.iter().enumerate() {
+                assert_eq!(s.shard, i, "{}", e.name);
+                assert_eq!(s.latencies.len(), s.completed, "{}", e.name);
             }
         }
     }
@@ -78,8 +136,11 @@ fn all_executors_visit_the_same_stages() {
         let stream = stage_names(&stream_res);
         cfg.exec = ExecMode::MultiInstance(1);
         let multi = stage_names(&(e.run)(&cfg).unwrap());
+        cfg.exec = ExecMode::Sharded(2);
+        let sharded = stage_names(&(e.run)(&cfg).unwrap());
         assert_eq!(seq, stream, "{}", e.name);
         assert_eq!(seq, multi, "{}", e.name);
+        assert_eq!(seq, sharded, "{}", e.name);
         // Every stage was visited under the streaming executor too.
         for s in &stream_res.report.stages {
             assert!(s.items > 0, "{}: stage {} idle under streaming", e.name, s.name);

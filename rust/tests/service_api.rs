@@ -200,7 +200,7 @@ fn service_runs_under_every_executor() {
             .map(|(k, v)| (k.clone(), *v))
             .collect()
     };
-    for exec in [ExecMode::Streaming, ExecMode::MultiInstance(2)] {
+    for exec in [ExecMode::Streaming, ExecMode::MultiInstance(2), ExecMode::Sharded(3)] {
         let defaults = RunConfig { exec, ..cfg() };
         let svc = PipelineService::open(
             &["census"],
@@ -216,6 +216,35 @@ fn service_runs_under_every_executor() {
             "{exec}"
         );
         assert_eq!(c.result.items, direct.items, "{exec}");
+    }
+}
+
+#[test]
+fn sharded_session_answers_equal_sequential_session_answers() {
+    // One dataset, partitioned: a sharded session's Response carries the
+    // exact metric map a sequential session produces (no scaling_* or
+    // shard_* keys sneak in), and the partition report tags the result.
+    use repro::coordinator::ExecMode;
+    let seq_svc = service(4, 1, false);
+    for n in [1usize, 2, 4] {
+        let defaults = RunConfig { exec: ExecMode::Sharded(n), ..cfg() };
+        let svc = PipelineService::open(
+            &TABULAR,
+            ServiceConfig { defaults, queue_depth: 4, workers: 1, ..Default::default() },
+        )
+        .unwrap();
+        for name in TABULAR {
+            let sharded = svc.call(Request::synthetic(name)).unwrap();
+            let sequential = seq_svc.call(Request::synthetic(name)).unwrap();
+            let s = sharded.completion().unwrap_or_else(|| panic!("{name} shard:{n}"));
+            let q = sequential.completion().unwrap();
+            assert_eq!(s.result.metrics, q.result.metrics, "{name} shard:{n}");
+            assert_eq!(s.result.items, q.result.items, "{name} shard:{n}");
+            let sharding =
+                s.result.sharding.as_ref().unwrap_or_else(|| panic!("{name} shard:{n}"));
+            assert_eq!(sharding.shard_count(), n, "{name}");
+            assert!(q.result.sharding.is_none(), "{name}: sequential runs carry no shards");
+        }
     }
 }
 
