@@ -93,13 +93,20 @@ fn main() {
 
     // Executor footnote: the optimized census payload executed data-
     // parallel (shard:4, one dataset partitioned) vs replicated
-    // (multi:4, four copies) — the wall-clock difference between
-    // "finish the dataset faster" and "run more copies". Census is the
-    // degenerate single-state shape (shard 0 does the whole pass), so
-    // this footnote measures only replication avoidance; the scaling
-    // bench adds the per-item pipelines where shards split real work.
+    // (multi:4, four copies) vs thread-per-stage (streaming) vs
+    // cooperative tasks (async:2) — the wall-clock difference between
+    // "finish the dataset faster", "run more copies", and the two
+    // overlap shapes. Census is the degenerate single-state shape
+    // (shard 0 does the whole pass), so this footnote measures only
+    // replication avoidance; the scaling bench's executor ladder adds
+    // the per-item pipelines where shards and tasks split real work.
     let mut t = Table::new(&["executor", "wall", "dataset items/s"]);
-    for exec in [ExecMode::Sharded(4), ExecMode::MultiInstance(4)] {
+    for exec in [
+        ExecMode::Sharded(4),
+        ExecMode::MultiInstance(4),
+        ExecMode::Streaming,
+        ExecMode::Async(2),
+    ] {
         let cfg = RunConfig { toggles: Toggles::optimized(), scale, seed: 0xF11, exec };
         let Ok(session) = Session::open("census", cfg) else {
             continue;
@@ -123,6 +130,6 @@ fn main() {
             format!("{:.1}", dataset_items as f64 / wall.as_secs_f64().max(1e-12)),
         ]);
     }
-    println!("\nsharded vs multi on one census dataset (scale {scale}):");
+    println!("\nsharded vs multi vs streaming vs async on one census dataset (scale {scale}):");
     t.print();
 }

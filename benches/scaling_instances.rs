@@ -113,6 +113,66 @@ fn sharded_vs_multi(scale: f64) {
     }
 }
 
+/// One payload, every single-request executor side by side: sequential
+/// vs streaming vs async:T vs shard:N wall time over the same
+/// pre-generated dataset. Async rows print the pool's task counters and
+/// sharded rows the streamed-fold count, so the table shows not just
+/// "how fast" but "how it ran" (tasks multiplexed, folds overlapped).
+/// Census always runs; the per-item DL pipelines (dlsa documents,
+/// video_streamer frames) join when model artifacts are present.
+fn executor_ladder(scale: f64) {
+    println!("\n=== executor ladder: sequential vs streaming vs async:T vs shard:N (one payload) ===");
+    for name in ["census", "dlsa", "video_streamer"] {
+        let entry = pipelines::find(name).expect("registry names");
+        let cfg =
+            RunConfig { toggles: Toggles::optimized(), scale, seed: 0xA51C, ..Default::default() };
+        let payload = (entry.payload)(&cfg);
+        let mut t = Table::new(&["executor", "wall", "items/s", "notes"]);
+        let mut unavailable = false;
+        let modes = [
+            ExecMode::Sequential,
+            ExecMode::Streaming,
+            ExecMode::Async(2),
+            ExecMode::Async(4),
+            ExecMode::Sharded(2),
+            ExecMode::Sharded(4),
+        ];
+        for exec in modes {
+            let run_cfg = RunConfig { exec, ..cfg };
+            let t0 = Instant::now();
+            let res = match run_plan_with(entry.plan_with, payload.clone(), &run_cfg) {
+                Ok(res) => res,
+                Err(e) => {
+                    println!("  {name} skipped (no artifacts): {e:#}");
+                    unavailable = true;
+                    break;
+                }
+            };
+            let wall = t0.elapsed();
+            let notes = match (&res.sched, &res.sharding) {
+                (Some(s), Some(sh)) => {
+                    format!("{} tasks, {} folds streamed", s.tasks_run, sh.streamed_folds)
+                }
+                (Some(s), None) => {
+                    format!("{} tasks, max in-flight {}", s.tasks_run, s.max_in_flight)
+                }
+                (None, Some(sh)) => format!("balance {:.2}", sh.balance()),
+                (None, None) => String::new(),
+            };
+            t.row(&[
+                exec.to_string(),
+                dur(wall),
+                format!("{:.1}", res.items as f64 / wall.as_secs_f64().max(1e-12)),
+                notes,
+            ]);
+        }
+        if !unavailable {
+            println!("\n{name}:");
+            t.print();
+        }
+    }
+}
+
 const IMG: usize = 32;
 
 fn anomaly_stream(
@@ -185,6 +245,7 @@ fn main() {
         .unwrap_or(1.0);
     // Tabular: runs on any checkout, before the artifact-gated streams.
     sharded_vs_multi(scale);
+    executor_ladder(scale);
     let server =
         ModelServer::spawn(repro::runtime::default_artifacts_dir(), 64).expect("server");
     server

@@ -20,7 +20,13 @@
 //! * `Sharded(n)` — n data-parallel workers over ONE dataset: the
 //!   source is partitioned round-robin by emission index ([`Sharder`])
 //!   and sink state is merged in shard order, so a fixed dataset
-//!   finishes faster instead of running more copies.
+//!   finishes faster instead of running more copies;
+//! * `Async(t)` — cooperative task-based execution on a fixed pool of t
+//!   workers ([`sched`]): every stage is a resumable task, no stage
+//!   owns a thread, and one pool multiplexes many in-flight plans (the
+//!   serving shape). Sharded runs now execute on the same scheduler,
+//!   which lets the merge fold stream ahead of still-running shard
+//!   passes instead of waiting on a barrier.
 //!
 //! **Who gets to run** — [`router`]: the serving-side admission layer.
 //! An [`AdmissionQueue`] is a bounded priority queue with load shedding
@@ -32,24 +38,29 @@
 //! cross-cutting optimizations — dynamic batching ([`batcher`], a plan
 //! node), telemetry ([`telemetry`], recorded identically by every
 //! executor, the data behind Figure 1, now including per-item end-to-end
-//! latency samples), instance scaling ([`scaler`]), data-parallel
-//! sharding ([`plan::Sharder`] + the merge-aware sink in [`exec`]),
-//! admission control ([`router`]) — are implemented once against the IR
-//! instead of per workload. Future scaling work (async executor) plugs
-//! in as an additional executor over the same plans.
+//! latency samples and cooperative-scheduler counters), instance
+//! scaling ([`scaler`]), data-parallel sharding ([`plan::Sharder`] +
+//! the merge-aware streaming sink in [`exec`]), cooperative task
+//! scheduling ([`sched`]), admission control ([`router`]) — are
+//! implemented once against the IR instead of per workload.
 
 pub mod telemetry;
 pub mod plan;
 pub mod exec;
+pub mod sched;
 pub mod batcher;
 pub mod router;
 pub mod scaler;
 
 pub use batcher::{BatcherConfig, DynamicBatcher};
 pub use exec::{execute, run_multi_instance, run_sequential, run_sharded, run_streaming};
+pub use exec::{run_async, run_async_on, run_async_seeded, spawn_async_on};
+pub use exec::{run_sharded_async, run_sharded_seeded};
 pub use exec::{ExecMode, ExecOutcome};
 pub use plan::{Plan, PlanBuilder, PlanOutput, Sharder};
 pub use router::{AdmissionQueue, AdmitOutcome, Priority, QueueStats};
 pub use scaler::{run_instances, run_instances_timed, LatencyRecorder};
 pub use scaler::{InstanceReport, ScalingReport};
-pub use telemetry::{Category, Report, ShardReport, ShardedReport, StageReport, Telemetry};
+pub use sched::{Poll, Scheduler, Task, VirtualScheduler, WaitGroup};
+pub use telemetry::{Category, Report, SchedReport, ShardReport, ShardedReport, StageReport};
+pub use telemetry::Telemetry;

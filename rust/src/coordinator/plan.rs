@@ -31,6 +31,7 @@ use std::any::Any;
 use std::collections::BTreeMap;
 use std::marker::PhantomData;
 use std::sync::{Arc, Mutex};
+use std::time::Instant;
 
 /// A type-erased item flowing between stages.
 pub type DynItem = Box<dyn Any + Send>;
@@ -60,11 +61,108 @@ pub(crate) enum NodeKind {
     Batch(BatcherConfig, GroupFn),
 }
 
+/// An in-flight item plus its source-emission instant; the stamp rides
+/// along so the sink stage can record a true per-item end-to-end
+/// latency. Batch nodes keep the earliest stamp of their members (a
+/// batch is as old as its oldest item).
+pub(crate) struct Stamped {
+    pub(crate) born: Instant,
+    pub(crate) item: DynItem,
+}
+
+/// How a transform node consumes items when it runs as a resumable
+/// stage task (the async executor): flat-maps pass each item straight
+/// through their closure; batch nodes buffer until `max_batch` items
+/// and cut size-based batches. Every item of the one pass eventually
+/// arrives — exactly the sequential executor's situation — so async
+/// batch boundaries equal sequential ones, which is part of what keeps
+/// the executor-conformance matrix green.
+pub(crate) enum ResumableKind {
+    FlatMap(StageFn),
+    Batch { max_batch: usize, group: GroupFn, pending: Vec<Stamped> },
+}
+
+/// One transform node re-packaged as a resumable stage task: feed items
+/// with `push` as they arrive, then `flush` once upstream is exhausted.
+/// Both report how many work units (flat-map calls / batches cut) they
+/// performed, so the caller records stage telemetry with the same item
+/// counts as the sequential executor.
+pub(crate) struct ResumableNode {
+    pub(crate) name: String,
+    pub(crate) category: Category,
+    kind: ResumableKind,
+}
+
+impl ResumableNode {
+    /// Feed one item; returns the outputs ready now plus the work units
+    /// performed (0 when a batch node merely buffered).
+    pub(crate) fn push(&mut self, s: Stamped) -> anyhow::Result<(Vec<Stamped>, usize)> {
+        match &mut self.kind {
+            ResumableKind::FlatMap(f) => {
+                let Stamped { born, item } = s;
+                let outs = f(item)?;
+                Ok((outs.into_iter().map(|item| Stamped { born, item }).collect(), 1))
+            }
+            ResumableKind::Batch { max_batch, group, pending } => {
+                pending.push(s);
+                if pending.len() >= *max_batch {
+                    let batch: Vec<Stamped> = pending.drain(..).collect();
+                    Ok((vec![cut_batch(group, batch)?], 1))
+                } else {
+                    Ok((Vec::new(), 0))
+                }
+            }
+        }
+    }
+
+    /// Upstream is exhausted: emit whatever the node still buffers (the
+    /// final short batch). Flat-maps buffer nothing.
+    pub(crate) fn flush(&mut self) -> anyhow::Result<(Vec<Stamped>, usize)> {
+        match &mut self.kind {
+            ResumableKind::FlatMap(_) => Ok((Vec::new(), 0)),
+            ResumableKind::Batch { group, pending, .. } => {
+                if pending.is_empty() {
+                    return Ok((Vec::new(), 0));
+                }
+                let batch: Vec<Stamped> = pending.drain(..).collect();
+                Ok((vec![cut_batch(group, batch)?], 1))
+            }
+        }
+    }
+}
+
+/// Group a non-empty batch into one downstream item stamped with its
+/// oldest member's birth.
+fn cut_batch(group: &mut GroupFn, batch: Vec<Stamped>) -> anyhow::Result<Stamped> {
+    let born = batch.iter().map(|s| s.born).min().expect("non-empty batch");
+    let members: Vec<DynItem> = batch.into_iter().map(|s| s.item).collect();
+    Ok(Stamped { born, item: group(members)? })
+}
+
 /// One transform node of a plan.
 pub(crate) struct Node {
     pub(crate) name: String,
     pub(crate) category: Category,
     pub(crate) kind: NodeKind,
+}
+
+impl Node {
+    /// Re-package this node for resumable (task-at-a-time) execution.
+    /// `max_wait` is dropped for batch nodes: a resumable pass, like a
+    /// sequential one, eventually sees every item, so batches flush on
+    /// size (plus one final remainder flush) and the boundaries match
+    /// the sequential executor's exactly.
+    pub(crate) fn into_resumable(self) -> ResumableNode {
+        let kind = match self.kind {
+            NodeKind::FlatMap(f) => ResumableKind::FlatMap(f),
+            NodeKind::Batch(cfg, group) => ResumableKind::Batch {
+                max_batch: cfg.max_batch.max(1),
+                group,
+                pending: Vec::new(),
+            },
+        };
+        ResumableNode { name: self.name, category: self.category, kind }
+    }
 }
 
 /// A fully-built pipeline plan, ready for one execution.
@@ -418,6 +516,62 @@ mod tests {
         // Owned emissions 0,2,4,6,8 → doubled 0,4,8,12,16 all kept.
         assert_eq!(out0.output.items, 5);
         assert_eq!(out0.output.metrics["sum"], 40.0);
+    }
+
+    #[test]
+    fn resumable_batch_node_cuts_sequential_boundaries() {
+        let group: GroupFn = Box::new(|items: Vec<DynItem>| Ok(Box::new(items.len()) as DynItem));
+        let node = Node {
+            name: "batch".to_string(),
+            category: Category::Pre,
+            kind: NodeKind::Batch(
+                BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(1) },
+                group,
+            ),
+        };
+        let mut r = node.into_resumable();
+        assert_eq!(r.name, "batch");
+        assert_eq!(r.category, Category::Pre);
+        let mut cuts: Vec<usize> = Vec::new();
+        for i in 0..20u32 {
+            let (outs, units) = r
+                .push(Stamped { born: Instant::now(), item: Box::new(i) as DynItem })
+                .unwrap();
+            assert_eq!(outs.len(), units, "batch emits exactly its cut");
+            for s in outs {
+                cuts.push(*s.item.downcast::<usize>().unwrap());
+            }
+        }
+        let (outs, units) = r.flush().unwrap();
+        assert_eq!(units, 1, "remainder flushes as one short batch");
+        for s in outs {
+            cuts.push(*s.item.downcast::<usize>().unwrap());
+        }
+        // 20 items at max_batch 8 → 8/8/4: the sequential boundaries.
+        assert_eq!(cuts, vec![8, 8, 4]);
+        let (outs, units) = r.flush().unwrap();
+        assert!(outs.is_empty(), "second flush buffers nothing");
+        assert_eq!(units, 0);
+    }
+
+    #[test]
+    fn resumable_flat_map_counts_one_unit_per_item() {
+        let node = Node {
+            name: "double".to_string(),
+            category: Category::Ai,
+            kind: NodeKind::FlatMap(Box::new(|item: DynItem| {
+                let x = *item.downcast::<i32>().unwrap();
+                Ok(vec![Box::new(x * 2) as DynItem])
+            })),
+        };
+        let mut r = node.into_resumable();
+        let (outs, units) =
+            r.push(Stamped { born: Instant::now(), item: Box::new(21i32) as DynItem }).unwrap();
+        assert_eq!(units, 1);
+        assert_eq!(*outs.into_iter().next().unwrap().item.downcast::<i32>().unwrap(), 42);
+        let (outs, units) = r.flush().unwrap();
+        assert!(outs.is_empty());
+        assert_eq!(units, 0);
     }
 
     #[test]

@@ -19,6 +19,20 @@
 //! The queue is workload-agnostic (`T` is whatever the caller enqueues);
 //! [`QueueStats`] counts admissions, sheds, dispatches, and peak depth
 //! for the soak reports.
+//!
+//! **Executor interaction.** Admission semantics are identical for every
+//! session executor — same depth bound, same displacement rule, same
+//! first-class sheds (the service suites pin deterministic shedding at a
+//! fixed depth under async sessions too). What changes under an
+//! `ExecMode::Async` service is dispatch *pressure*: an async dispatcher
+//! spawns each popped request onto the shared task pool and immediately
+//! pops again, so the pop rate is bounded by plan *construction*, not
+//! plan *execution*. Queue depth then measures the spawn backlog while
+//! the pool's own ledger ([`SchedReport`]) measures execution backlog —
+//! shedding still engages whenever producers outrun admission, exactly
+//! as before.
+//!
+//! [`SchedReport`]: super::telemetry::SchedReport
 
 use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};
@@ -292,6 +306,22 @@ mod tests {
         assert_eq!(stats.shed, 2);
         assert_eq!(stats.dispatched, 1);
         assert_eq!(stats.peak_depth, 1);
+    }
+
+    #[test]
+    fn len_and_is_empty_track_queue_state() {
+        let q = AdmissionQueue::new(4);
+        assert!(q.is_empty());
+        assert_eq!(q.len(), 0);
+        assert_eq!(q.depth(), 4);
+        assert!(q.admit(Priority::Normal, 1).admitted);
+        assert!(q.admit(Priority::High, 2).admitted);
+        assert!(!q.is_empty());
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.pop(), Some((Priority::High, 2)));
+        assert_eq!(q.len(), 1);
+        assert_eq!(q.pop(), Some((Priority::Normal, 1)));
+        assert!(q.is_empty());
     }
 
     #[test]

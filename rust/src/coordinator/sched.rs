@@ -1,0 +1,545 @@
+//! Cooperative work-queue scheduler — the task substrate behind
+//! `ExecMode::Async` and the sharded streaming merge.
+//!
+//! The thread-based executors in [`super::exec`] spend a thread per
+//! stage (streaming) or per instance/shard (multi, sharded). This
+//! module provides the alternative the paper's §3.4 deployments and
+//! tf.data's cooperative runtime point at: a **fixed pool** of worker
+//! threads draining a shared queue of small resumable **tasks**. A task
+//! is polled repeatedly; each poll does a bounded chunk of work and
+//! reports [`Poll::Done`], [`Poll::Yield`] (progress made, requeue me)
+//! or [`Poll::Pending`] (blocked on another task's output, requeue me).
+//! Because no task owns a thread, one pool can hold arbitrarily many
+//! plans in flight at once — the serving shape where a single
+//! `PipelineService` worker multiplexes many requests.
+//!
+//! Two runners share the task contract:
+//!
+//! * [`Scheduler`] — the real thing: `workers` OS threads, FIFO queue,
+//!   blocking on a condvar when idle. Counters ([`SchedReport`]) track
+//!   spawns, completions, polls, requeues and peak in-flight tasks.
+//! * [`VirtualScheduler`] — a single-threaded, **seeded** runner that
+//!   picks the next ready task with a deterministic PRNG. No wall
+//!   clock, no threads: the property-test hook that lets the suites
+//!   assert metrics and fold order are invariant under randomized task
+//!   interleavings (InTune's "make scheduler behavior observable"
+//!   turned into a test fixture).
+//!
+//! [`SchedReport`]: super::telemetry::SchedReport
+
+use super::telemetry::SchedReport;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// What one poll of a task reports back to its runner.
+pub enum Poll {
+    /// Finished; the task must not be polled again.
+    Done,
+    /// Progress was made and more work remains; requeue.
+    Yield,
+    /// Blocked on another task's output; requeue (the runner yields the
+    /// OS thread so the producer can run).
+    Pending,
+}
+
+/// A resumable unit of work, polled until it reports [`Poll::Done`].
+/// Tasks are `FnMut`, not `Fn` — a task owns its state (stage closures,
+/// batch buffers, fold cursors) and only ever runs on one worker at a
+/// time, so no `Sync` is required of pipeline code.
+pub type Task = Box<dyn FnMut() -> Poll + Send>;
+
+/// Countdown latch for "this batch of tasks has drained": `add` before
+/// spawning, `done` when a task completes, `wait` to block until zero.
+#[derive(Clone, Default)]
+pub struct WaitGroup {
+    inner: Arc<(Mutex<usize>, Condvar)>,
+}
+
+impl WaitGroup {
+    /// An empty (already-drained) group.
+    pub fn new() -> WaitGroup {
+        WaitGroup::default()
+    }
+
+    /// Register `n` more outstanding completions.
+    pub fn add(&self, n: usize) {
+        *self.inner.0.lock().unwrap() += n;
+    }
+
+    /// Mark one completion. Every decrement notifies, because waiters
+    /// may be bounding the count ([`Self::wait_below`]), not just
+    /// waiting for zero.
+    pub fn done(&self) {
+        let mut count = self.inner.0.lock().unwrap();
+        *count = count.checked_sub(1).expect("WaitGroup::done without a matching add");
+        self.inner.1.notify_all();
+    }
+
+    /// Block until every registered completion has landed.
+    pub fn wait(&self) {
+        let mut count = self.inner.0.lock().unwrap();
+        while *count > 0 {
+            count = self.inner.1.wait(count).unwrap();
+        }
+    }
+
+    /// Block until fewer than `bound` completions are outstanding — the
+    /// backpressure primitive. Note the bound is advisory when several
+    /// producers race a separate `add` behind it; use
+    /// [`Self::acquire`] for an airtight bound.
+    pub fn wait_below(&self, bound: usize) {
+        let mut count = self.inner.0.lock().unwrap();
+        while *count >= bound.max(1) {
+            count = self.inner.1.wait(count).unwrap();
+        }
+    }
+
+    /// Atomically wait until fewer than `bound` completions are
+    /// outstanding AND register one more — the combined
+    /// wait-then-`add(1)` under a single lock acquisition, so the bound
+    /// holds exactly even with several producers sharing the group.
+    pub fn acquire(&self, bound: usize) {
+        let mut count = self.inner.0.lock().unwrap();
+        while *count >= bound.max(1) {
+            count = self.inner.1.wait(count).unwrap();
+        }
+        *count += 1;
+    }
+
+    /// True when nothing is outstanding.
+    pub fn is_idle(&self) -> bool {
+        *self.inner.0.lock().unwrap() == 0
+    }
+}
+
+#[derive(Default)]
+struct Counters {
+    spawned: AtomicUsize,
+    completed: AtomicUsize,
+    polls: AtomicUsize,
+    requeues: AtomicUsize,
+    in_flight: AtomicUsize,
+    max_in_flight: AtomicUsize,
+}
+
+impl Counters {
+    fn snapshot(&self, workers: usize) -> SchedReport {
+        SchedReport {
+            workers,
+            tasks_spawned: self.spawned.load(Ordering::SeqCst),
+            tasks_run: self.completed.load(Ordering::SeqCst),
+            polls: self.polls.load(Ordering::SeqCst),
+            requeues: self.requeues.load(Ordering::SeqCst),
+            max_in_flight: self.max_in_flight.load(Ordering::SeqCst),
+        }
+    }
+}
+
+struct State {
+    queue: VecDeque<Task>,
+    closed: bool,
+}
+
+struct Shared {
+    state: Mutex<State>,
+    ready: Condvar,
+    counters: Counters,
+}
+
+fn worker_loop(shared: &Shared) {
+    loop {
+        let mut task = {
+            let mut s = shared.state.lock().unwrap();
+            loop {
+                if let Some(t) = s.queue.pop_front() {
+                    break t;
+                }
+                if s.closed {
+                    return;
+                }
+                s = shared.ready.wait(s).unwrap();
+            }
+        };
+        let now = shared.counters.in_flight.fetch_add(1, Ordering::SeqCst) + 1;
+        shared.counters.max_in_flight.fetch_max(now, Ordering::SeqCst);
+        // Credit the poll — and optimistically the completion — BEFORE
+        // polling: a task's final poll may release a WaitGroup waiter
+        // from inside (completion hooks, plan wait), and the ledger
+        // must already balance when that waiter resumes and snapshots
+        // the counters. Non-final polls give the completion credit back
+        // below; mid-poll snapshots may transiently over-read tasks_run,
+        // which is why `balanced()` is only meaningful at quiescence.
+        shared.counters.polls.fetch_add(1, Ordering::SeqCst);
+        shared.counters.completed.fetch_add(1, Ordering::SeqCst);
+        let poll = task();
+        shared.counters.in_flight.fetch_sub(1, Ordering::SeqCst);
+        match poll {
+            Poll::Done => {}
+            Poll::Yield => {
+                shared.counters.completed.fetch_sub(1, Ordering::SeqCst);
+                shared.counters.requeues.fetch_add(1, Ordering::SeqCst);
+                shared.state.lock().unwrap().queue.push_back(task);
+                shared.ready.notify_one();
+            }
+            Poll::Pending => {
+                shared.counters.completed.fetch_sub(1, Ordering::SeqCst);
+                shared.counters.requeues.fetch_add(1, Ordering::SeqCst);
+                let mut s = shared.state.lock().unwrap();
+                // A blocked task on a closed (abandoning) scheduler can
+                // never unblock — its producer will not run again — so
+                // it is dropped instead of spinning the drain forever.
+                // Owners that care about completion wait on a WaitGroup
+                // before dropping the scheduler, and never hit this.
+                if !s.closed {
+                    s.queue.push_back(task);
+                    drop(s);
+                    shared.ready.notify_one();
+                    // Blocked on another task's output: give the
+                    // producer the core, and don't hot-spin the queue
+                    // while it runs (parking blocked tasks on a mailbox
+                    // wakeup is the finer-grained follow-up).
+                    std::thread::yield_now();
+                    std::thread::sleep(std::time::Duration::from_micros(20));
+                }
+            }
+        }
+    }
+}
+
+/// Fixed-size cooperative worker pool (see the module docs). Dropping
+/// the scheduler closes the queue, drains what can still progress, and
+/// joins the workers.
+pub struct Scheduler {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+    pool: usize,
+}
+
+impl Scheduler {
+    /// Start a pool of `workers` (at least 1) threads.
+    pub fn new(workers: usize) -> Scheduler {
+        let pool = workers.max(1);
+        let shared = Arc::new(Shared {
+            state: Mutex::new(State { queue: VecDeque::new(), closed: false }),
+            ready: Condvar::new(),
+            counters: Counters::default(),
+        });
+        let workers = (0..pool)
+            .map(|w| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("sched-worker-{w}"))
+                    .spawn(move || worker_loop(&shared))
+                    .expect("spawn scheduler worker")
+            })
+            .collect();
+        Scheduler { shared, workers, pool }
+    }
+
+    /// Worker threads in the pool.
+    pub fn workers(&self) -> usize {
+        self.pool
+    }
+
+    /// Enqueue a task. Panics if the scheduler is already closed (only
+    /// possible via a use-after-drop, which `&self` rules out).
+    pub fn spawn(&self, task: Task) {
+        self.shared.counters.spawned.fetch_add(1, Ordering::SeqCst);
+        let mut s = self.shared.state.lock().unwrap();
+        assert!(!s.closed, "spawn on a closed scheduler");
+        s.queue.push_back(task);
+        drop(s);
+        self.shared.ready.notify_one();
+    }
+
+    /// Snapshot of the pool's lifetime counters. On a long-lived shared
+    /// pool the snapshot is cumulative across every plan it has run; it
+    /// balances ([`SchedReport::balanced`]) whenever nothing is mid-poll.
+    ///
+    /// [`SchedReport::balanced`]: super::telemetry::SchedReport::balanced
+    pub fn counters(&self) -> SchedReport {
+        self.shared.counters.snapshot(self.pool)
+    }
+}
+
+impl Drop for Scheduler {
+    fn drop(&mut self) {
+        self.shared.state.lock().unwrap().closed = true;
+        self.ready_all();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Scheduler {
+    fn ready_all(&self) {
+        self.shared.ready.notify_all();
+    }
+}
+
+/// Single-threaded, seeded-interleaving task runner: each step polls a
+/// uniformly random ready task (deterministic per seed, no wall clock).
+/// See the module docs — this is the property-test fixture behind the
+/// "metrics are invariant under task interleaving" suites.
+pub struct VirtualScheduler {
+    ready: Vec<Task>,
+    rng: crate::util::Rng,
+    spawned: usize,
+    completed: usize,
+    polls: usize,
+    requeues: usize,
+}
+
+impl VirtualScheduler {
+    /// A runner whose interleaving is fully determined by `seed`.
+    pub fn new(seed: u64) -> VirtualScheduler {
+        VirtualScheduler {
+            ready: Vec::new(),
+            rng: crate::util::Rng::new(seed),
+            spawned: 0,
+            completed: 0,
+            polls: 0,
+            requeues: 0,
+        }
+    }
+
+    /// Enqueue a task.
+    pub fn spawn(&mut self, task: Task) {
+        self.spawned += 1;
+        self.ready.push(task);
+    }
+
+    /// Poll random ready tasks until every task reports done; returns
+    /// the run's counters (`workers` is 1, `max_in_flight` at most 1).
+    /// Panics loudly on livelock (every ready task blocked for a very
+    /// long stretch) rather than hanging a test.
+    pub fn run_to_idle(&mut self) -> SchedReport {
+        let mut starved = 0usize;
+        while !self.ready.is_empty() {
+            let i = self.rng.below(self.ready.len());
+            let mut task = self.ready.swap_remove(i);
+            self.polls += 1;
+            match task() {
+                Poll::Done => {
+                    self.completed += 1;
+                    starved = 0;
+                }
+                Poll::Yield => {
+                    self.requeues += 1;
+                    starved = 0;
+                    self.ready.push(task);
+                }
+                Poll::Pending => {
+                    self.requeues += 1;
+                    starved += 1;
+                    assert!(
+                        starved <= 10_000 * (self.ready.len() + 1),
+                        "virtual scheduler livelocked: every ready task is blocked"
+                    );
+                    self.ready.push(task);
+                }
+            }
+        }
+        SchedReport {
+            workers: 1,
+            tasks_spawned: self.spawned,
+            tasks_run: self.completed,
+            polls: self.polls,
+            requeues: self.requeues,
+            max_in_flight: usize::from(self.polls > 0),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    /// A task needing `polls` polls: yields `polls - 1` times, then
+    /// bumps the shared counter and finishes.
+    fn stepped(polls: usize, hits: &Arc<AtomicUsize>) -> Task {
+        let hits = Arc::clone(hits);
+        let mut left = polls;
+        Box::new(move || {
+            left -= 1;
+            if left == 0 {
+                hits.fetch_add(1, Ordering::SeqCst);
+                Poll::Done
+            } else {
+                Poll::Yield
+            }
+        })
+    }
+
+    #[test]
+    fn threaded_pool_runs_every_task_within_counter_bounds() {
+        let hits = Arc::new(AtomicUsize::new(0));
+        let wg = WaitGroup::new();
+        let sched = Scheduler::new(3);
+        assert_eq!(sched.workers(), 3);
+        for i in 0..10usize {
+            wg.add(1);
+            let wg = wg.clone();
+            let mut inner = stepped(1 + i % 4, &hits);
+            sched.spawn(Box::new(move || match inner() {
+                Poll::Done => {
+                    wg.done();
+                    Poll::Done
+                }
+                other => other,
+            }));
+        }
+        wg.wait();
+        assert!(wg.is_idle());
+        assert_eq!(hits.load(Ordering::SeqCst), 10);
+        let c = sched.counters();
+        assert_eq!(c.tasks_spawned, 10);
+        assert_eq!(c.tasks_run, 10);
+        assert_eq!(c.polls, c.tasks_run + c.requeues);
+        // Polls per task i: 1 + i % 4 → total 10 + (0+1+2+3)*2 + 0+1 = 23.
+        assert_eq!(c.polls, 23);
+        assert!(c.max_in_flight >= 1 && c.max_in_flight <= 3, "{c:?}");
+        assert!(c.balanced(), "{c:?}");
+    }
+
+    #[test]
+    fn zero_worker_pool_is_clamped_to_one() {
+        let sched = Scheduler::new(0);
+        assert_eq!(sched.workers(), 1);
+        let wg = WaitGroup::new();
+        wg.add(1);
+        let wg2 = wg.clone();
+        sched.spawn(Box::new(move || {
+            wg2.done();
+            Poll::Done
+        }));
+        wg.wait();
+        assert!(sched.counters().balanced());
+    }
+
+    /// Producer pushes 1..=N through a shared FIFO in chunks; consumer
+    /// drains it. Under every seeded interleaving the consumer observes
+    /// exactly 1..=N in order — the invariance the async executor's
+    /// metric determinism rests on.
+    #[test]
+    fn seeded_interleavings_preserve_fifo_handoff_order() {
+        const N: u64 = 100;
+        for seed in 0..24u64 {
+            let pipe: Arc<Mutex<VecDeque<u64>>> = Arc::new(Mutex::new(VecDeque::new()));
+            let produced_all = Arc::new(AtomicUsize::new(0));
+            let seen: Arc<Mutex<Vec<u64>>> = Arc::new(Mutex::new(Vec::new()));
+
+            let mut vs = VirtualScheduler::new(seed);
+            {
+                let pipe = Arc::clone(&pipe);
+                let produced_all = Arc::clone(&produced_all);
+                let mut next = 1u64;
+                vs.spawn(Box::new(move || {
+                    // Push up to 7 values per poll.
+                    let mut q = pipe.lock().unwrap();
+                    for _ in 0..7 {
+                        if next > N {
+                            break;
+                        }
+                        q.push_back(next);
+                        next += 1;
+                    }
+                    if next > N {
+                        produced_all.store(1, Ordering::SeqCst);
+                        Poll::Done
+                    } else {
+                        Poll::Yield
+                    }
+                }));
+            }
+            {
+                let pipe = Arc::clone(&pipe);
+                let produced_all = Arc::clone(&produced_all);
+                let seen = Arc::clone(&seen);
+                vs.spawn(Box::new(move || {
+                    let done = produced_all.load(Ordering::SeqCst) == 1;
+                    let drained: Vec<u64> = pipe.lock().unwrap().drain(..).collect();
+                    if drained.is_empty() {
+                        if done {
+                            return Poll::Done;
+                        }
+                        return Poll::Pending;
+                    }
+                    seen.lock().unwrap().extend(drained);
+                    Poll::Yield
+                }));
+            }
+            let c = vs.run_to_idle();
+            let seen = seen.lock().unwrap();
+            let expect: Vec<u64> = (1..=N).collect();
+            assert_eq!(*seen, expect, "seed {seed}: handoff reordered");
+            assert_eq!(c.tasks_run, c.tasks_spawned, "seed {seed}");
+            assert_eq!(c.polls, c.tasks_run + c.requeues, "seed {seed}");
+            assert!(c.balanced(), "seed {seed}: {c:?}");
+        }
+    }
+
+    #[test]
+    fn waitgroup_counts_down_across_threads() {
+        let wg = WaitGroup::new();
+        wg.add(4);
+        assert!(!wg.is_idle());
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let wg = wg.clone();
+                std::thread::spawn(move || wg.done())
+            })
+            .collect();
+        wg.wait();
+        assert!(wg.is_idle());
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn waitgroup_wait_below_bounds_outstanding_work() {
+        let wg = WaitGroup::new();
+        wg.wait_below(1); // idle: returns immediately
+        wg.add(3);
+        let releaser = {
+            let wg = wg.clone();
+            std::thread::spawn(move || {
+                std::thread::sleep(std::time::Duration::from_millis(10));
+                wg.done();
+                wg.done();
+            })
+        };
+        // Unblocks once outstanding drops under the bound (3 → 1 < 2).
+        wg.wait_below(2);
+        assert!(!wg.is_idle());
+        wg.done();
+        wg.wait();
+        releaser.join().unwrap();
+    }
+
+    #[test]
+    fn waitgroup_acquire_holds_the_bound_exactly() {
+        let wg = WaitGroup::new();
+        wg.acquire(2); // 0 → 1
+        wg.acquire(2); // 1 → 2: at the bound
+        assert!(!wg.is_idle());
+        let releaser = {
+            let wg = wg.clone();
+            std::thread::spawn(move || {
+                std::thread::sleep(std::time::Duration::from_millis(10));
+                wg.done();
+            })
+        };
+        // Blocks until 2 → 1, then takes the freed slot (1 → 2).
+        wg.acquire(2);
+        releaser.join().unwrap();
+        wg.done();
+        wg.done();
+        assert!(wg.is_idle());
+    }
+}

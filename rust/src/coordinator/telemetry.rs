@@ -178,6 +178,44 @@ impl Report {
     }
 }
 
+/// Counters from one cooperative-scheduler run ([`ExecMode::Async`],
+/// and sharded runs, whose merge fold now streams on the same
+/// scheduler): how many resumable tasks were spawned and completed, how
+/// many polls and requeues the run took, and the peak number of tasks
+/// being polled at once (bounded by the worker pool). Kept out of the
+/// metric map so async runs stay metric-identical to sequential runs —
+/// the executor-conformance contract.
+///
+/// [`ExecMode::Async`]: super::exec::ExecMode
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SchedReport {
+    /// Worker threads in the pool (1 for the seeded virtual scheduler).
+    pub workers: usize,
+    /// Tasks submitted to the scheduler.
+    pub tasks_spawned: usize,
+    /// Tasks that ran to completion.
+    pub tasks_run: usize,
+    /// Total task polls.
+    pub polls: usize,
+    /// Polls that returned without finishing and requeued their task.
+    pub requeues: usize,
+    /// Peak tasks being polled simultaneously.
+    pub max_in_flight: usize,
+}
+
+impl SchedReport {
+    /// The ledger every drained scheduler run satisfies: every spawned
+    /// task ran to completion, every poll either finished or requeued
+    /// its task, and in-flight tasks never exceeded the pool. (A
+    /// snapshot of a long-lived shared pool balances whenever no task is
+    /// mid-poll.)
+    pub fn balanced(&self) -> bool {
+        self.tasks_run == self.tasks_spawned
+            && self.polls == self.tasks_run + self.requeues
+            && self.max_in_flight <= self.workers
+    }
+}
+
 /// One shard's slice of a data-parallel ([`ExecMode::Sharded`]) run.
 ///
 /// [`ExecMode::Sharded`]: super::exec::ExecMode
@@ -215,12 +253,25 @@ pub struct ShardedReport {
     pub shards: Vec<ShardReport>,
     /// Wall time of the whole sharded run (passes + merge fold).
     pub wall: Duration,
+    /// Shard folds that began while at least one shard pass was still
+    /// running: > 0 means the merge streamed ahead of the full barrier
+    /// instead of waiting for every pass to join (the fold order is
+    /// still strict shard order, so metrics are unaffected). Always 0
+    /// for a single shard, whose fold can only start after its own —
+    /// the last — pass.
+    pub streamed_folds: usize,
 }
 
 impl ShardedReport {
     /// Number of shards.
     pub fn shard_count(&self) -> usize {
         self.shards.len()
+    }
+
+    /// True when at least one shard's fold overlapped a still-running
+    /// shard pass (see [`Self::streamed_folds`]).
+    pub fn merge_streamed(&self) -> bool {
+        self.streamed_folds > 0
     }
 
     /// Source emissions across all shards (= the dataset size).
@@ -364,6 +415,7 @@ mod tests {
         let r = ShardedReport {
             shards: vec![shard(0, 3, &[5, 1, 9]), shard(1, 2, &[3, 7])],
             wall: Duration::from_millis(20),
+            streamed_folds: 0,
         };
         assert_eq!(r.shard_count(), 2);
         assert_eq!(r.total_owned(), 5);
@@ -385,19 +437,42 @@ mod tests {
         let even = ShardedReport {
             shards: vec![shard(0, 4, &[1]), shard(1, 4, &[2])],
             wall: Duration::from_millis(1),
+            streamed_folds: 1,
         };
         assert!((even.balance() - 1.0).abs() < 1e-12);
+        assert!(even.merge_streamed());
         let skewed = ShardedReport {
             shards: vec![shard(0, 1, &[]), shard(1, 4, &[])],
             wall: Duration::from_millis(1),
+            streamed_folds: 0,
         };
+        assert!(!skewed.merge_streamed());
         assert!((skewed.balance() - 0.25).abs() < 1e-12);
         assert!(skewed.latency_percentile(0.5).is_none());
         assert_eq!(skewed.latency_percentiles(&[0.5, 0.95]), vec![None, None]);
-        let empty = ShardedReport { shards: vec![], wall: Duration::ZERO };
+        let empty = ShardedReport { shards: vec![], wall: Duration::ZERO, streamed_folds: 0 };
         assert_eq!(empty.balance(), 1.0);
         assert_eq!(empty.total_owned(), 0);
         let s = even.table().render();
         assert!(s.contains("shard"), "{s}");
+    }
+
+    #[test]
+    fn sched_report_ledger_balances() {
+        let ok = SchedReport {
+            workers: 2,
+            tasks_spawned: 5,
+            tasks_run: 5,
+            polls: 9,
+            requeues: 4,
+            max_in_flight: 2,
+        };
+        assert!(ok.balanced());
+        // A task that never completed, an unaccounted poll, or an
+        // in-flight excursion past the pool all break the ledger.
+        assert!(!SchedReport { tasks_run: 4, ..ok }.balanced());
+        assert!(!SchedReport { polls: 10, ..ok }.balanced());
+        assert!(!SchedReport { max_in_flight: 3, ..ok }.balanced());
+        assert!(SchedReport::default().balanced());
     }
 }

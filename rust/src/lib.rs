@@ -8,9 +8,12 @@
 //!   ([`coordinator`]): every workload is declared once as a **plan** (a
 //!   typed graph of categorized stage nodes) and executed by pluggable
 //!   **executors** — sequential, thread-per-stage streaming with
-//!   backpressure, multi-instance replication (§3.4), or data-parallel
+//!   backpressure, multi-instance replication (§3.4), data-parallel
 //!   sharding (one dataset partitioned round-robin across workers with a
-//!   merge-aware sink). On top sits the
+//!   merge-aware sink whose fold streams ahead of the last shard), or
+//!   cooperative task-based async execution (resumable stage tasks on a
+//!   fixed worker pool — one pool multiplexes many in-flight plans when
+//!   serving). On top sits the
 //!   serving layer ([`service`]): a [`service::PipelineService`] opens
 //!   warm per-pipeline [`service::Session`]s once and answers typed
 //!   `Request { pipeline, payload, priority, deadline }` values through

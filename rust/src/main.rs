@@ -3,7 +3,7 @@
 //! ```text
 //! repro list                       # Table 1: the eight pipelines
 //! repro run <pipeline> [--opt baseline|optimized]
-//!                      [--exec sequential|streaming|multi[:N]|shard[:N]]
+//!                      [--exec sequential|streaming|multi[:N]|shard[:N]|async[:T]]
 //!                      [--scale F] [--seed N]
 //! repro serve [--requests N] [--mix census:4,dlsa:1] [--depth D] [--workers W]
 //!                                  # soak a PipelineService with a mixed-priority request mix
@@ -58,13 +58,17 @@ fn print_help() {
          \n\
          OPTIONS (run/serve/fig1):\n\
          \x20 --opt baseline|optimized          optimization level (default optimized)\n\
-         \x20 --exec sequential|streaming|multi[:N]|shard[:N]\n\
+         \x20 --exec sequential|streaming|multi[:N]|shard[:N]|async[:T]\n\
          \x20                                   executor for the pipeline plan\n\
-         \x20                                   (default sequential; multi/shard default to 2)\n\
+         \x20                                   (default sequential; multi/shard/async default to 2)\n\
          \x20                                   multi:N runs N copies of the stream (§3.4);\n\
          \x20                                   shard:N splits ONE dataset round-robin across\n\
          \x20                                   N workers and merges sink state in shard order,\n\
-         \x20                                   so metrics match the sequential run exactly\n\
+         \x20                                   so metrics match the sequential run exactly;\n\
+         \x20                                   async:T runs the stages as cooperative tasks on\n\
+         \x20                                   T pooled workers (no thread per stage — one pool\n\
+         \x20                                   multiplexes many in-flight plans when serving),\n\
+         \x20                                   again with metrics identical to sequential\n\
          \x20 --scale F                         dataset scale multiplier (default 1.0)\n\
          \x20 --seed N                          RNG seed (default 0xE2E)\n\
          \n\
@@ -88,7 +92,9 @@ fn parse_cfg(args: &Args) -> RunConfig {
     };
     let exec_spec = args.get_or("exec", "sequential");
     let Some(exec) = ExecMode::parse(exec_spec) else {
-        eprintln!("invalid --exec {exec_spec:?}; use sequential|streaming|multi[:N]|shard[:N]");
+        eprintln!(
+            "invalid --exec {exec_spec:?}; use sequential|streaming|multi[:N]|shard[:N]|async[:T]"
+        );
         std::process::exit(2);
     };
     RunConfig {
@@ -130,12 +136,23 @@ fn cmd_run(args: &Args) -> i32 {
             for (k, v) in &res.metrics {
                 println!("metric {k} = {v:.4}");
             }
+            if let Some(sched) = &res.sched {
+                println!(
+                    "scheduler: {} workers, {} tasks ({} polls, {} requeues), max in-flight {}",
+                    sched.workers,
+                    sched.tasks_run,
+                    sched.polls,
+                    sched.requeues,
+                    sched.max_in_flight
+                );
+            }
             if let Some(sharding) = &res.sharding {
                 println!(
-                    "shards: {} over one dataset (balance {:.2}, {:.1} items/s of wall)",
+                    "shards: {} over one dataset (balance {:.2}, {:.1} items/s of wall, {} folds streamed ahead of the last pass)",
                     sharding.shard_count(),
                     sharding.balance(),
-                    sharding.dataset_throughput()
+                    sharding.dataset_throughput(),
+                    sharding.streamed_folds
                 );
                 sharding.table().print();
                 let mut pcts = sharding.latency_percentiles(&[0.50, 0.95]).into_iter();
@@ -288,6 +305,21 @@ fn cmd_serve(args: &Args) -> i32 {
         "queue: admitted {} shed {} dispatched {} peak depth {}",
         qs.admitted, qs.shed, qs.dispatched, qs.peak_depth
     );
+    let stats = svc.stats();
+    println!(
+        "outcomes: submitted {} = completed {} + shed {} + failed {} (balanced: {})",
+        stats.submitted,
+        stats.completed,
+        stats.shed,
+        stats.failed,
+        stats.balances()
+    );
+    if let Some(sc) = svc.scheduler_counters() {
+        println!(
+            "async pool: {} workers, {} tasks ({} polls, {} requeues), max in-flight {}",
+            sc.workers, sc.tasks_run, sc.polls, sc.requeues, sc.max_in_flight
+        );
+    }
     let report = svc.scaling_report();
     let pct = |p: Option<std::time::Duration>| match p {
         Some(d) => fmt::dur(d),

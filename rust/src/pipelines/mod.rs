@@ -45,7 +45,7 @@ pub mod workload;
 pub use workload::{Output, Workload};
 pub(crate) use workload::workload_mismatch;
 
-use crate::coordinator::telemetry::{Report, ShardedReport};
+use crate::coordinator::telemetry::{Report, SchedReport, ShardedReport};
 use crate::coordinator::{exec, ExecMode, ExecOutcome, Plan};
 use crate::runtime::ModelClient;
 use crate::OptLevel;
@@ -144,6 +144,11 @@ pub struct PipelineResult {
     /// run's metric map stays identical to the sequential run's (the
     /// conformance contract).
     pub sharding: Option<ShardedReport>,
+    /// Cooperative-scheduler counters for runs that executed on the
+    /// task scheduler (`ExecMode::Async`, and sharded runs, whose merge
+    /// streams on it); `None` under the thread-based executors. Kept
+    /// out of `metrics` for the same conformance reason as `sharding`.
+    pub sched: Option<SchedReport>,
 }
 
 impl PipelineResult {
@@ -222,13 +227,16 @@ pub fn run_plan_with(
         ExecMode::Sharded(n) => {
             exec::run_sharded(n, move || plan_fn(&base, payload.clone()))?
         }
+        ExecMode::Async(workers) => exec::run_async(plan_fn(cfg, payload)?, workers)?,
     };
     Ok(finish_outcome(outcome))
 }
 
 /// Fold an executor outcome into a [`PipelineResult`], appending the
-/// `scaling_*` metrics for multi-instance runs.
-fn finish_outcome(outcome: ExecOutcome) -> PipelineResult {
+/// `scaling_*` metrics for multi-instance runs. `pub(crate)` so the
+/// serving layer can project outcomes arriving via the async completion
+/// hook the same way.
+pub(crate) fn finish_outcome(outcome: ExecOutcome) -> PipelineResult {
     let mut metrics = outcome.output.metrics;
     if let Some(scaling) = &outcome.scaling {
         if scaling.instances.len() > 1 {
@@ -250,6 +258,7 @@ fn finish_outcome(outcome: ExecOutcome) -> PipelineResult {
         metrics,
         items: outcome.output.items,
         sharding: outcome.sharding,
+        sched: outcome.sched,
     }
 }
 
@@ -512,6 +521,29 @@ mod tests {
         // census emits one state item: shard 0 owns it, the others idle.
         assert_eq!(sharding.total_owned(), 1);
         assert_eq!(sharding.shards[0].owned, 1);
+    }
+
+    #[test]
+    fn async_runs_report_sequential_metrics_plus_scheduler_counters() {
+        // The async executor changes HOW a plan runs, never what it
+        // answers: metrics and items equal the sequential run, and the
+        // scheduler detail rides on PipelineResult::sched (never the
+        // metric map).
+        let seq_cfg = RunConfig { scale: 0.05, seed: 31, ..Default::default() };
+        let seq = run_by_name("census", &seq_cfg).unwrap();
+        assert!(seq.sched.is_none(), "sequential runs carry no scheduler counters");
+        let cfg = RunConfig { exec: ExecMode::Async(2), ..seq_cfg };
+        let a = run_by_name("census", &cfg).unwrap();
+        assert_eq!(a.metrics, seq.metrics);
+        assert_eq!(a.items, seq.items);
+        let sched = a.sched.expect("async run must report scheduler counters");
+        assert!(sched.balanced(), "{sched:?}");
+        assert_eq!(sched.workers, 2);
+        // The serving path over a pre-generated payload agrees too.
+        let e = find("census").unwrap();
+        let served = run_plan_with(e.plan_with, (e.payload)(&seq_cfg), &cfg).unwrap();
+        assert_eq!(served.metrics, seq.metrics);
+        assert_eq!(served.items, seq.items);
     }
 
     #[test]

@@ -34,12 +34,29 @@
 //! partitioning the payload (DL sessions share the one `ModelServer`
 //! across shards via the warm client's compile cache).
 //!
+//! **Async sessions multiplex.** A service opened with
+//! `ExecMode::Async(t)` holds ONE shared cooperative [`Scheduler`] pool
+//! of t workers. Dispatchers do not run async requests to completion:
+//! they spawn each request's plan as resumable tasks on the shared pool
+//! and immediately pop the next request — the ticket resolves from the
+//! plan's completion hook. One dispatcher therefore holds many requests
+//! in flight at once (the tf.data-style serving shape), the thread
+//! count stays fixed at t however deep the soak goes, and every
+//! response still carries metrics identical to a direct run at the same
+//! seed. [`PipelineService::scheduler_counters`] exposes the pool's
+//! cumulative [`SchedReport`] so soaks can assert pool behavior from
+//! counters instead of timing.
+//!
 //! [`Report`]: crate::coordinator::Report
 //! [`RunConfig::exec`]: crate::pipelines::RunConfig
 
+use crate::coordinator::exec;
 use crate::coordinator::router::AdmissionQueue;
 pub use crate::coordinator::router::{Priority, QueueStats};
 use crate::coordinator::scaler::{InstanceReport, ScalingReport};
+use crate::coordinator::sched::{Scheduler, WaitGroup};
+use crate::coordinator::telemetry::SchedReport;
+use crate::coordinator::ExecMode;
 use crate::pipelines::{self, Output, PipelineEntry, PipelineResult, RunConfig, Workload};
 use crate::runtime::ModelClient;
 use std::collections::BTreeMap;
@@ -280,6 +297,34 @@ impl Session {
         let output = (self.entry.output)(&result);
         Ok((result, output))
     }
+
+    /// Build this session's plan over `payload` and spawn it on a
+    /// shared cooperative scheduler pool WITHOUT blocking: `on_done`
+    /// fires exactly once — on normal completion, on the plan's first
+    /// error, on a contained stage panic, and also when the plan itself
+    /// cannot be built (bad payload, missing artifact) — with the typed
+    /// result. This is how an async service dispatcher multiplexes many
+    /// requests on one pool.
+    pub fn execute_async_on(
+        &self,
+        payload: Workload,
+        sched: &Scheduler,
+        on_done: impl FnOnce(anyhow::Result<(PipelineResult, Output)>) + Send + 'static,
+    ) {
+        match (self.entry.plan_with)(&self.cfg, payload) {
+            Ok(plan) => {
+                let project = self.entry.output;
+                exec::spawn_async_on(plan, sched, move |outcome| {
+                    on_done(outcome.map(|o| {
+                        let result = pipelines::finish_outcome(o);
+                        let output = project(&result);
+                        (result, output)
+                    }));
+                });
+            }
+            Err(e) => on_done(Err(e)),
+        }
+    }
 }
 
 /// One queued request: the session to run it on, the payload, and the
@@ -296,6 +341,14 @@ struct Job {
 /// over a sliding window of the most recent requests, so a long-lived
 /// service holds O(1) telemetry memory however many requests it serves.
 const LATENCY_SAMPLE_CAP: usize = 4096;
+
+/// Spawned-but-unresolved async plans allowed per pool worker before a
+/// dispatcher pauses popping. Each in-flight plan buffers its source
+/// output in stage mailboxes, so an uncapped dispatcher could outrun a
+/// slow pool without limit; bounding in-flight plans restores the
+/// backpressure that queue depth alone no longer provides once dispatch
+/// decouples from execution.
+const ASYNC_INFLIGHT_PER_WORKER: usize = 8;
 
 #[derive(Default, Clone)]
 struct WorkerSlot {
@@ -320,6 +373,7 @@ impl WorkerSlot {
 
 #[derive(Default)]
 struct ServiceTelemetry {
+    submitted: u64,
     completed: u64,
     failed: u64,
     shed: u64,
@@ -329,9 +383,22 @@ struct ServiceTelemetry {
 /// Aggregate outcome counters for a service's lifetime.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct ServiceStats {
+    /// Requests accepted by [`PipelineService::submit`] (tickets
+    /// issued); unknown-pipeline submissions error before counting.
+    pub submitted: u64,
     pub completed: u64,
     pub failed: u64,
     pub shed: u64,
+}
+
+impl ServiceStats {
+    /// Whether the outcome ledger balances: every submitted request
+    /// resolved exactly once as completed, shed, or failed. Holds
+    /// whenever no ticket is still in flight — the soak suites assert
+    /// it after draining.
+    pub fn balances(&self) -> bool {
+        self.submitted == self.completed + self.shed + self.failed
+    }
 }
 
 /// A long-lived, multi-pipeline serving facade (see module docs).
@@ -343,6 +410,12 @@ pub struct PipelineService {
     telem: Arc<Mutex<ServiceTelemetry>>,
     worker_count: usize,
     opened: Instant,
+    /// Shared cooperative pool for `ExecMode::Async` sessions; `None`
+    /// under every other executor.
+    sched: Option<Arc<Scheduler>>,
+    /// Async requests spawned but not yet resolved; dispatchers wait on
+    /// this before exiting so teardown never abandons a plan mid-pool.
+    inflight: WaitGroup,
 }
 
 impl PipelineService {
@@ -384,6 +457,12 @@ impl PipelineService {
             workers: vec![WorkerSlot::default(); worker_count],
             ..Default::default()
         };
+        // Async sessions share ONE cooperative pool sized by the
+        // executor spec; other executors run requests on the dispatcher.
+        let sched = match cfg.defaults.exec {
+            ExecMode::Async(workers) => Some(Arc::new(Scheduler::new(workers))),
+            _ => None,
+        };
         let svc = PipelineService {
             sessions,
             skipped,
@@ -392,6 +471,8 @@ impl PipelineService {
             telem: Arc::new(Mutex::new(telem)),
             worker_count,
             opened: Instant::now(),
+            sched,
+            inflight: WaitGroup::new(),
         };
         if !cfg.start_paused {
             svc.resume();
@@ -409,9 +490,11 @@ impl PipelineService {
         for w in 0..self.worker_count {
             let queue = Arc::clone(&self.queue);
             let telem = Arc::clone(&self.telem);
+            let sched = self.sched.clone();
+            let inflight = self.inflight.clone();
             let handle = std::thread::Builder::new()
                 .name(format!("pipeline-service-{w}"))
-                .spawn(move || worker_loop(w, &queue, &telem))
+                .spawn(move || worker_loop(w, &queue, &telem, sched.as_deref(), &inflight))
                 .expect("spawn service worker");
             workers.push(handle);
         }
@@ -431,6 +514,7 @@ impl PipelineService {
         })?;
         let (reply, rx) = mpsc::channel();
         let job = Job { session, payload, deadline, enqueued: Instant::now(), reply };
+        self.telem.lock().unwrap().submitted += 1;
         let outcome = self.queue.admit(priority, job);
         if !outcome.shed.is_empty() {
             self.telem.lock().unwrap().shed += outcome.shed.len() as u64;
@@ -480,7 +564,21 @@ impl PipelineService {
     /// Outcome counters.
     pub fn stats(&self) -> ServiceStats {
         let t = self.telem.lock().unwrap();
-        ServiceStats { completed: t.completed, failed: t.failed, shed: t.shed }
+        ServiceStats {
+            submitted: t.submitted,
+            completed: t.completed,
+            failed: t.failed,
+            shed: t.shed,
+        }
+    }
+
+    /// Counters of the shared async pool; `None` unless the service was
+    /// opened with an `ExecMode::Async` executor. Cumulative across
+    /// requests — the snapshot balances ([`SchedReport::balanced`])
+    /// whenever no request is in flight, which is how the soak tests
+    /// assert pool behavior without timing.
+    pub fn scheduler_counters(&self) -> Option<SchedReport> {
+        self.sched.as_ref().map(|s| s.counters())
     }
 
     /// Per-request latency percentiles through the existing scaling
@@ -521,7 +619,9 @@ impl Drop for PipelineService {
 fn worker_loop(
     slot: usize,
     queue: &AdmissionQueue<Job>,
-    telem: &Mutex<ServiceTelemetry>,
+    telem: &Arc<Mutex<ServiceTelemetry>>,
+    sched: Option<&Scheduler>,
+    inflight: &WaitGroup,
 ) {
     while let Some((priority, job)) = queue.pop() {
         let Job { session, payload, deadline, enqueued, reply } = job;
@@ -539,6 +639,63 @@ fn worker_loop(
             }
         }
         let t0 = Instant::now();
+        if let Some(sched) = sched {
+            // Async session: spawn the plan on the shared pool and keep
+            // dispatching — the ticket resolves from the completion
+            // hook, so this one dispatcher holds many requests in
+            // flight at once, bounded (atomically, however many
+            // dispatchers share the group) so dispatch cannot outrun
+            // the pool without limit.
+            inflight.acquire(ASYNC_INFLIGHT_PER_WORKER * sched.workers());
+            // The backpressure stall above is queue-side waiting too:
+            // re-check the deadline so an expired request sheds instead
+            // of running late, and restart the service-time clock so
+            // p50/p95 measure execution, not admission pressure.
+            let queue_wait = enqueued.elapsed();
+            if let Some(d) = deadline {
+                if queue_wait > d {
+                    inflight.done();
+                    telem.lock().unwrap().shed += 1;
+                    let _ = reply.send(Response::Shed {
+                        pipeline: session.name().to_string(),
+                        priority,
+                        reason: ShedReason::DeadlineExpired,
+                        waited: queue_wait,
+                    });
+                    continue;
+                }
+            }
+            let t0 = Instant::now();
+            let telem = Arc::clone(telem);
+            let inflight_done = inflight.clone();
+            let name = session.name().to_string();
+            session.execute_async_on(payload, sched, move |res| {
+                let resp = match res {
+                    Ok((result, output)) => {
+                        let service_time = t0.elapsed();
+                        let mut t = telem.lock().unwrap();
+                        t.completed += 1;
+                        t.workers[slot].record(queue_wait + service_time);
+                        drop(t);
+                        Response::Completed(Completion {
+                            pipeline: name,
+                            priority,
+                            output,
+                            result,
+                            queue_wait,
+                            service_time,
+                        })
+                    }
+                    Err(e) => {
+                        telem.lock().unwrap().failed += 1;
+                        Response::Failed { pipeline: name, error: format!("{e:#}") }
+                    }
+                };
+                let _ = reply.send(resp);
+                inflight_done.done();
+            });
+            continue;
+        }
         let resp = match session.execute(payload) {
             Ok((result, output)) => {
                 let service_time = t0.elapsed();
@@ -565,6 +722,10 @@ fn worker_loop(
         };
         let _ = reply.send(resp);
     }
+    // Queue closed and drained: wait for every spawned async plan to
+    // resolve its ticket before exiting, so the service's Drop can
+    // safely tear the shared pool down afterwards.
+    inflight.wait();
 }
 
 #[cfg(test)]
@@ -622,8 +783,78 @@ mod tests {
         svc.resume();
         assert!(first.wait().completion().is_some());
         let stats = svc.stats();
+        assert_eq!(stats.submitted, 2);
         assert_eq!(stats.completed, 1);
         assert_eq!(stats.shed, 1);
+        assert!(stats.balances(), "{stats:?}");
+    }
+
+    #[test]
+    fn async_service_multiplexes_requests_on_one_dispatcher() {
+        // One dispatcher, a two-worker shared pool: every ticket
+        // completes with metrics identical to a direct run, the outcome
+        // ledger balances, and the pool's counters balance once nothing
+        // is in flight.
+        let defaults = RunConfig { exec: ExecMode::Async(2), ..tiny() };
+        let svc = PipelineService::open(
+            &["census"],
+            ServiceConfig { defaults, queue_depth: 16, workers: 1, ..Default::default() },
+        )
+        .unwrap();
+        let (direct, _) =
+            Session::open("census", tiny()).unwrap().execute(Workload::Synthetic).unwrap();
+        let tickets: Vec<_> =
+            (0..6).map(|_| svc.submit(Request::synthetic("census")).unwrap()).collect();
+        for t in tickets {
+            let resp = t.wait();
+            let c = resp.completion().expect("async request completes");
+            assert_eq!(c.result.metrics, direct.metrics);
+            assert_eq!(c.result.items, direct.items);
+        }
+        let stats = svc.stats();
+        assert_eq!(stats.submitted, 6);
+        assert_eq!(stats.completed, 6);
+        assert_eq!(stats.shed, 0);
+        assert_eq!(stats.failed, 0);
+        assert!(stats.balances(), "{stats:?}");
+        let sc = svc.scheduler_counters().expect("async service exposes pool counters");
+        assert!(sc.balanced(), "{sc:?}");
+        assert_eq!(sc.workers, 2);
+        // Non-async services expose no pool.
+        let plain = PipelineService::open(
+            &["census"],
+            ServiceConfig { defaults: tiny(), ..Default::default() },
+        )
+        .unwrap();
+        assert!(plain.scheduler_counters().is_none());
+    }
+
+    #[test]
+    fn async_service_resolves_bad_payloads_as_failed_responses() {
+        // Plan-build failures on the async path still resolve the
+        // ticket (via the completion hook), count as failed, and keep
+        // the ledger balanced.
+        let defaults = RunConfig { exec: ExecMode::Async(2), ..tiny() };
+        let svc = PipelineService::open(
+            &["census"],
+            ServiceConfig { defaults, queue_depth: 8, workers: 1, ..Default::default() },
+        )
+        .unwrap();
+        let resp = svc
+            .call(Request::synthetic("census").with_payload(Workload::ReviewLog {
+                json: String::new(),
+            }))
+            .unwrap();
+        match resp {
+            Response::Failed { pipeline, error } => {
+                assert_eq!(pipeline, "census");
+                assert!(error.contains("review_log"), "{error}");
+            }
+            other => panic!("expected Failed, got {other:?}"),
+        }
+        let stats = svc.stats();
+        assert_eq!(stats.failed, 1);
+        assert!(stats.balances(), "{stats:?}");
     }
 
     #[test]

@@ -2,17 +2,22 @@
 //! pipeline's *results* are a property of its plan, not of the executor
 //! that ran it. For a fixed seed, every registry pipeline must produce
 //! identical deterministic metrics under Sequential, Streaming,
-//! MultiInstance(n=1), and Sharded(1..=4) execution — batch boundaries,
-//! thread scheduling, queue sizes, and shard partitions may differ;
-//! answers may not. Sharded runs additionally pin the merge-aware sink
-//! contract: one latency sample per item completing the sink, pooled
-//! across shards, with p50 ≤ p95 and partitions that exactly cover the
-//! source stream.
+//! MultiInstance(n=1), Sharded(1..=4), and Async(1..=3) execution —
+//! batch boundaries, thread scheduling, queue sizes, task interleavings,
+//! and shard partitions may differ; answers may not. Sharded runs
+//! additionally pin the merge-aware sink contract: one latency sample
+//! per item completing the sink, pooled across shards, with p50 ≤ p95
+//! and partitions that exactly cover the source stream. The async ×
+//! sharded composition (shard passes + streaming merge as cooperative
+//! tasks) is pinned both threaded (`run_sharded_async`) and under
+//! seeded single-threaded interleavings (`run_sharded_seeded`), where
+//! the merge-streaming counter is asserted deterministically — via
+//! scheduler counters, never timing.
 //!
 //! Pipelines that execute model artifacts are skipped when `make
 //! artifacts` has not produced a manifest (the tabular three always run).
 
-use repro::coordinator::ExecMode;
+use repro::coordinator::{exec, ExecMode};
 use repro::pipelines::{registry, run_by_name, PipelineResult, RunConfig, Toggles};
 
 fn artifacts_ready() -> bool {
@@ -31,10 +36,12 @@ fn base_cfg() -> RunConfig {
 }
 
 /// Every non-sequential mode whose answers must equal Sequential's:
-/// Streaming, MultiInstance(1), and the full Sharded(1..=4) ladder.
+/// Streaming, MultiInstance(1), the full Sharded(1..=4) ladder, and the
+/// Async(1..=3) pool ladder.
 fn conformance_modes() -> Vec<ExecMode> {
     let mut modes = vec![ExecMode::Streaming, ExecMode::MultiInstance(1)];
     modes.extend((1..=4).map(ExecMode::Sharded));
+    modes.extend((1..=3).map(ExecMode::Async));
     modes
 }
 
@@ -138,9 +145,12 @@ fn all_executors_visit_the_same_stages() {
         let multi = stage_names(&(e.run)(&cfg).unwrap());
         cfg.exec = ExecMode::Sharded(2);
         let sharded = stage_names(&(e.run)(&cfg).unwrap());
+        cfg.exec = ExecMode::Async(2);
+        let async_names = stage_names(&(e.run)(&cfg).unwrap());
         assert_eq!(seq, stream, "{}", e.name);
         assert_eq!(seq, multi, "{}", e.name);
         assert_eq!(seq, sharded, "{}", e.name);
+        assert_eq!(seq, async_names, "{}", e.name);
         // Every stage was visited under the streaming executor too.
         for s in &stream_res.report.stages {
             assert!(s.items > 0, "{}: stage {} idle under streaming", e.name, s.name);
@@ -203,4 +213,106 @@ fn streaming_is_deterministic_across_repeats() {
             assert!((v - w).abs() < 1e-12, "{name}.{k}: {v} vs {w}");
         }
     }
+}
+
+#[test]
+fn async_is_deterministic_across_repeats() {
+    // Task interleaving varies run to run on a real pool; metrics may
+    // not. Repeats must agree bit-for-bit on every non-timing metric,
+    // and every repeat's scheduler ledger must balance.
+    for name in ["census", "iiot"] {
+        let mut cfg = base_cfg();
+        cfg.exec = ExecMode::Async(3);
+        let a = run_by_name(name, &cfg).unwrap();
+        let b = run_by_name(name, &cfg).unwrap();
+        for (k, v) in &a.metrics {
+            if TIMING_METRICS.contains(&k.as_str()) {
+                continue;
+            }
+            let w = b.metric(k).unwrap();
+            assert!((v - w).abs() < 1e-12, "{name}.{k}: {v} vs {w}");
+        }
+        for res in [&a, &b] {
+            let sched = res.sched.as_ref().expect("async runs carry scheduler counters");
+            assert!(sched.balanced(), "{name}: {sched:?}");
+            assert!(sched.max_in_flight <= 3, "{name}: {sched:?}");
+        }
+    }
+}
+
+#[test]
+fn async_composes_with_sharding_identically() {
+    // The composed executor — shard passes plus the streaming merge as
+    // cooperative tasks on a 2-worker pool — answers exactly like
+    // Sequential for every runnable pipeline and every shard count.
+    for e in registry() {
+        if needs_artifacts(e.name) && !artifacts_ready() {
+            continue;
+        }
+        let cfg = base_cfg();
+        let seq = (e.run)(&cfg).unwrap();
+        for n in 1..=4usize {
+            let res = exec::run_sharded_async(n, 2, || (e.plan)(&cfg))
+                .unwrap_or_else(|err| panic!("{} async+shard:{n}: {err:#}", e.name));
+            assert_eq!(res.output.items, seq.items, "{} async+shard:{n}", e.name);
+            let keys: Vec<&String> = seq.metrics.keys().collect();
+            let res_keys: Vec<&String> = res.output.metrics.keys().collect();
+            assert_eq!(keys, res_keys, "{} async+shard:{n}: metric keys differ", e.name);
+            for (k, v) in &seq.metrics {
+                if TIMING_METRICS.contains(&k.as_str()) {
+                    continue;
+                }
+                let w = res.output.metrics[k];
+                assert!(
+                    (v - w).abs() < 1e-12,
+                    "{}.{k} differs under async+shard:{n}: {v} vs {w}",
+                    e.name
+                );
+            }
+            let sharding = res.sharding.as_ref().expect("composed run reports partitions");
+            assert_eq!(sharding.shard_count(), n, "{}", e.name);
+            let sched = res.sched.as_ref().expect("composed run reports counters");
+            assert!(sched.balanced(), "{} async+shard:{n}: {sched:?}", e.name);
+            // n pass tasks + 1 merge task on the pool.
+            assert_eq!(sched.tasks_spawned, n + 1, "{} async+shard:{n}", e.name);
+        }
+    }
+}
+
+#[test]
+fn seeded_interleavings_stream_the_sharded_merge_for_registry_plans() {
+    // The acceptance pin for the streaming merge on a REAL pipeline,
+    // asserted via scheduler/shard counters under deterministic seeds —
+    // never timing: across 20 seeded interleavings of census's shard
+    // passes and merge task, metrics never move, and at least one
+    // interleaving begins folding before the last pass has run. (The
+    // exhaustive 32-seed version over a synthetic multi-item plan lives
+    // in the exec unit suite; this one pins the registry path.)
+    let e = repro::pipelines::find("census").expect("census is registered");
+    let cfg =
+        RunConfig { toggles: Toggles::optimized(), scale: 0.05, seed: 0xE9, ..Default::default() };
+    let mut seq_cfg = cfg;
+    seq_cfg.exec = ExecMode::Sequential;
+    let seq = (e.run)(&seq_cfg).unwrap();
+    let mut streamed_any = false;
+    for seed in 0..20u64 {
+        let res = exec::run_sharded_seeded(3, seed, || (e.plan)(&cfg))
+            .unwrap_or_else(|err| panic!("seed {seed}: {err:#}"));
+        assert_eq!(res.output.items, seq.items, "seed {seed}");
+        for (k, v) in &seq.metrics {
+            if TIMING_METRICS.contains(&k.as_str()) {
+                continue;
+            }
+            let w = res.output.metrics[k];
+            assert!((v - w).abs() < 1e-12, "seed {seed}: census.{k}: {v} vs {w}");
+        }
+        let sharding = res.sharding.expect("seeded sharded run reports partitions");
+        assert!(sharding.streamed_folds <= sharding.shard_count(), "seed {seed}");
+        streamed_any |= sharding.merge_streamed();
+        assert!(res.sched.expect("counters").balanced(), "seed {seed}");
+    }
+    assert!(
+        streamed_any,
+        "no seed in 0..20 overlapped a fold with a pending pass — the merge is not streaming"
+    );
 }

@@ -200,7 +200,12 @@ fn service_runs_under_every_executor() {
             .map(|(k, v)| (k.clone(), *v))
             .collect()
     };
-    for exec in [ExecMode::Streaming, ExecMode::MultiInstance(2), ExecMode::Sharded(3)] {
+    for exec in [
+        ExecMode::Streaming,
+        ExecMode::MultiInstance(2),
+        ExecMode::Sharded(3),
+        ExecMode::Async(2),
+    ] {
         let defaults = RunConfig { exec, ..cfg() };
         let svc = PipelineService::open(
             &["census"],
@@ -246,6 +251,129 @@ fn sharded_session_answers_equal_sequential_session_answers() {
             assert!(q.result.sharding.is_none(), "{name}: sequential runs carry no shards");
         }
     }
+}
+
+#[test]
+fn async_service_soak_completes_every_ticket_and_balances_stats() {
+    // The async-session soak: a census:4,dlsa:1-style weighted mix on
+    // ONE dispatcher over a two-worker shared pool (dlsa degrades to a
+    // skip on checkouts without artifacts). Every non-shed ticket
+    // completes with metrics identical to a direct async run at the
+    // same seed, the ServiceStats ledger balances exactly
+    // (submitted == completed + shed + failed), per-request p50 ≤ p95
+    // through the ScalingReport machinery, and the shared pool's
+    // scheduler counters balance once nothing is in flight.
+    use repro::coordinator::ExecMode;
+    use std::collections::BTreeMap;
+    let defaults = RunConfig { exec: ExecMode::Async(2), ..cfg() };
+    let svc = PipelineService::open(
+        &["census", "dlsa"],
+        ServiceConfig {
+            defaults,
+            queue_depth: 64,
+            workers: 1,
+            start_paused: false,
+            skip_unavailable: true,
+        },
+    )
+    .expect("census always opens; dlsa skips without artifacts");
+
+    let mut schedule: Vec<&str> = Vec::new();
+    for (name, weight) in [("census", 4usize), ("dlsa", 1)] {
+        if svc.session(name).is_some() {
+            schedule.extend(std::iter::repeat(name).take(weight));
+        }
+    }
+    assert!(!schedule.is_empty());
+
+    let requests = 15usize;
+    let tickets: Vec<_> = (0..requests)
+        .map(|i| svc.submit(Request::synthetic(schedule[i % schedule.len()])).unwrap())
+        .collect();
+
+    // Direct async-run reference per pipeline, computed once.
+    let mut direct: BTreeMap<&str, repro::pipelines::PipelineResult> = BTreeMap::new();
+    for &name in &schedule {
+        if !direct.contains_key(name) {
+            direct.insert(name, pipelines::run_by_name(name, &defaults).unwrap());
+        }
+    }
+
+    for (i, ticket) in tickets.into_iter().enumerate() {
+        let name = schedule[i % schedule.len()];
+        let resp = ticket.wait();
+        let c = resp.completion().unwrap_or_else(|| panic!("{name}: {resp:?}"));
+        assert_eq!(c.pipeline, name);
+        // Census metrics are fully deterministic; compare the whole map.
+        if name == "census" {
+            assert_eq!(c.result.metrics, direct[name].metrics, "{name} drifted under serving");
+        }
+        assert_eq!(c.result.items, direct[name].items, "{name}");
+    }
+
+    let stats = svc.stats();
+    assert_eq!(stats.submitted, requests as u64);
+    assert_eq!(stats.completed, requests as u64);
+    assert_eq!(stats.shed, 0);
+    assert_eq!(stats.failed, 0);
+    assert!(stats.balances(), "{stats:?}");
+
+    // Per-request latency flows into the scaling machinery: one sample
+    // per completion, p50 ≤ p95.
+    let report = svc.scaling_report();
+    let served: usize = report.instances.iter().map(|i| i.items).sum();
+    assert_eq!(served, requests);
+    let samples: usize = report.instances.iter().map(|i| i.latencies.len()).sum();
+    assert_eq!(samples, requests);
+    let p50 = report.latency_p50().expect("latency samples recorded");
+    let p95 = report.latency_p95().unwrap();
+    assert!(p95 >= p50);
+
+    // The shared pool's ledger balances with nothing in flight.
+    let sc = svc.scheduler_counters().expect("async service exposes pool counters");
+    assert!(sc.balanced(), "{sc:?}");
+    assert_eq!(sc.workers, 2);
+    assert!(sc.max_in_flight <= sc.workers, "{sc:?}");
+}
+
+#[test]
+fn async_service_sheds_deterministically_at_fixed_depth() {
+    // Admission is synchronous and executor-independent: a paused async
+    // service at depth 2 sheds the low-priority overflow immediately,
+    // completes everything else after resume, and the ledger balances.
+    use repro::coordinator::ExecMode;
+    let defaults = RunConfig { exec: ExecMode::Async(2), ..cfg() };
+    let svc = PipelineService::open(
+        &["census"],
+        ServiceConfig {
+            defaults,
+            queue_depth: 2,
+            workers: 1,
+            start_paused: true,
+            skip_unavailable: false,
+        },
+    )
+    .unwrap();
+    let fill: Vec<_> =
+        (0..2).map(|_| svc.submit(Request::synthetic("census")).unwrap()).collect();
+    let low = svc.submit(Request::synthetic("census").with_priority(Priority::Low)).unwrap();
+    match low.poll() {
+        Some(Response::Shed { priority, reason, .. }) => {
+            assert_eq!(priority, Priority::Low);
+            assert_eq!(reason, ShedReason::QueueFull);
+        }
+        other => panic!("low overflow must shed before resume, got {other:?}"),
+    }
+    svc.resume();
+    for t in fill {
+        assert!(t.wait().completion().is_some(), "queued async request must complete");
+    }
+    let stats = svc.stats();
+    assert_eq!(stats.submitted, 3);
+    assert_eq!(stats.completed, 2);
+    assert_eq!(stats.shed, 1);
+    assert_eq!(stats.failed, 0);
+    assert!(stats.balances(), "{stats:?}");
 }
 
 #[test]
