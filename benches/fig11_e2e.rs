@@ -132,4 +132,63 @@ fn main() {
     }
     println!("\nsharded vs multi vs streaming vs async on one census dataset (scale {scale}):");
     t.print();
+
+    // Build-once vs build-per-request ladder: the same census payload
+    // served N times through (a) a warm session binding its one
+    // compiled graph per request and (b) the one-shot path recompiling
+    // the graph every request. The amortization column comes from
+    // BindReport counters (binds per graph build, mean bind time, and
+    // the estimated setup time the reuse saved) — never wall clock
+    // alone.
+    let n_requests = 8usize;
+    let cfg = RunConfig {
+        toggles: Toggles::optimized(),
+        scale,
+        seed: 0xF11,
+        ..Default::default()
+    };
+    let mut t = Table::new(&["strategy", "wall", "graph builds", "binds", "mean bind"]);
+    if let Ok(session) = Session::open("census", cfg) {
+        let payload = session.payload();
+        let t0 = std::time::Instant::now();
+        for _ in 0..n_requests {
+            session.execute(payload.clone()).expect("census serves");
+        }
+        let reuse_wall = t0.elapsed();
+        let br = session.bind_report();
+        t.row(&[
+            "build-once (session)".to_string(),
+            fmt::dur(reuse_wall),
+            br.compiles.to_string(),
+            br.binds.to_string(),
+            fmt::dur(br.mean_bind_time()),
+        ]);
+
+        let t0 = std::time::Instant::now();
+        let mut rebuild_binds = 0usize;
+        for _ in 0..n_requests {
+            let compiled = repro::pipelines::compile_by_name("census", &cfg).expect("compiles");
+            let entry = repro::pipelines::find("census").unwrap();
+            repro::pipelines::run_compiled(entry, &compiled, payload.clone(), &cfg)
+                .expect("census runs");
+            rebuild_binds += compiled.bind_report().binds;
+        }
+        let rebuild_wall = t0.elapsed();
+        t.row(&[
+            "build-per-request".to_string(),
+            fmt::dur(rebuild_wall),
+            n_requests.to_string(),
+            rebuild_binds.to_string(),
+            "-".to_string(),
+        ]);
+        println!(
+            "\nbuild-once vs build-per-request, census × {n_requests} requests (scale {scale}):"
+        );
+        t.print();
+        println!(
+            "amortization: {:.1} requests served per graph build; ~{} setup time saved vs rebuilding",
+            br.binds_per_compile(),
+            fmt::dur(br.amortized_saving()),
+        );
+    }
 }

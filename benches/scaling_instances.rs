@@ -173,6 +173,56 @@ fn executor_ladder(scale: f64) {
     }
 }
 
+/// Compile-once amortization, from BindReport counters (never
+/// wall-clock-only): each pipeline opens ONE warm session (graph
+/// compiled + models warmed once) and serves N requests against it;
+/// the table reports the per-request bind time, requests served per
+/// graph build, and the estimated setup time the reuse saved vs a
+/// build-per-request loop. Census always runs; the DL pipelines join
+/// when artifacts are present.
+fn bind_amortization(scale: f64) {
+    use repro::service::Session;
+    println!("\n=== plan reuse: compile once, bind per request ===");
+    let requests = 12usize;
+    let mut t = Table::new(&[
+        "pipeline",
+        "graph builds",
+        "binds",
+        "mean bind",
+        "binds/build",
+        "est. setup saved",
+        "wall (N requests)",
+    ]);
+    for name in ["census", "dlsa", "video_streamer"] {
+        let cfg =
+            RunConfig { toggles: Toggles::optimized(), scale, seed: 0xB17D, ..Default::default() };
+        let session = match Session::open(name, cfg) {
+            Ok(s) => s,
+            Err(e) => {
+                println!("  {name} skipped (no artifacts): {e:#}");
+                continue;
+            }
+        };
+        let payload = session.payload();
+        let t0 = Instant::now();
+        for _ in 0..requests {
+            session.execute(payload.clone()).expect("warm session serves");
+        }
+        let wall = t0.elapsed();
+        let br = session.bind_report();
+        t.row(&[
+            name.to_string(),
+            br.compiles.to_string(),
+            br.binds.to_string(),
+            dur(br.mean_bind_time()),
+            format!("{:.1}", br.binds_per_compile()),
+            dur(br.amortized_saving()),
+            dur(wall),
+        ]);
+    }
+    t.print();
+}
+
 const IMG: usize = 32;
 
 fn anomaly_stream(
@@ -246,6 +296,7 @@ fn main() {
     // Tabular: runs on any checkout, before the artifact-gated streams.
     sharded_vs_multi(scale);
     executor_ladder(scale);
+    bind_amortization(scale);
     let server =
         ModelServer::spawn(repro::runtime::default_artifacts_dir(), 64).expect("server");
     server

@@ -60,7 +60,7 @@
 use super::batcher::DynamicBatcher;
 use super::plan::{DynItem, Node, NodeKind, Plan, PlanOutput, Sharder, Stamped};
 use super::scaler::{InstanceReport, ScalingReport};
-use super::sched::{Poll, Scheduler, Task, VirtualScheduler, WaitGroup};
+use super::sched::{Poll, Scheduler, Signal, Task, VirtualScheduler, WaitGroup};
 use super::telemetry::{
     Category, Report, SchedReport, ShardReport, ShardedReport, StageReport, Telemetry,
 };
@@ -85,10 +85,11 @@ pub enum ExecMode {
     /// round-robin across n workers sharing the stage graph, and sink
     /// state is merged in shard order (see the module docs for the
     /// merge-aware sink contract). Each worker runs 1/n of the transform
-    /// and sink work; every worker still produces (or clones) the full
-    /// source stream and drops the emissions it does not own, so the
-    /// speedup ceiling is set by how transform-heavy the plan is relative
-    /// to its source.
+    /// and sink work. Compiled-plan callers bind each worker to a
+    /// pre-sliced payload, so no worker materializes the stream it does
+    /// not own; the plan-closure path falls back to cloning the full
+    /// source per shard and filtering (pipeline-agnostic, but the
+    /// redundant source passes cap the speedup on source-heavy plans).
     Sharded(usize),
     /// Cooperative task-based execution on a fixed pool of T workers:
     /// every stage is a resumable task, no stage owns a thread, and one
@@ -180,9 +181,13 @@ pub struct ExecOutcome {
 /// Dispatch a plan-builder through the executor selected by `mode`.
 /// `make_plan` is invoked once per instance (instance 0 for the
 /// single-instance modes) so every replica gets fresh stage closures.
-/// Sharded execution calls `make_plan(0)` once per shard — every shard
-/// must see the *same* stream (sharding partitions one dataset; it never
-/// gives workers distinct streams the way multi-instance does).
+/// Sharded execution calls `make_plan(0)` once per shard and restricts
+/// each copy with [`Plan::shard`] — every shard must see the *same*
+/// stream (sharding partitions one dataset; it never gives workers
+/// distinct streams the way multi-instance does). This is the
+/// clone-based sharding path; callers holding a
+/// [`super::plan::CompiledPlan`] bind pre-sliced shard plans and call
+/// [`run_sharded`] directly instead.
 pub fn execute(
     mode: ExecMode,
     make_plan: impl Fn(usize) -> anyhow::Result<Plan> + Sync,
@@ -191,7 +196,9 @@ pub fn execute(
         ExecMode::Sequential => run_sequential(make_plan(0)?),
         ExecMode::Streaming => run_streaming(make_plan(0)?, DEFAULT_QUEUE_CAP),
         ExecMode::MultiInstance(n) => run_multi_instance(n, make_plan),
-        ExecMode::Sharded(n) => run_sharded(n, || make_plan(0)),
+        ExecMode::Sharded(n) => {
+            run_sharded(n, |s| make_plan(0).map(|p| p.shard(Sharder::new(s, n))))
+        }
         ExecMode::Async(workers) => run_async(make_plan(0)?, workers),
     }
 }
@@ -480,19 +487,28 @@ pub const ASYNC_TASK_CHUNK: usize = 32;
 /// Unbounded FIFO mailbox between two resumable stage tasks. `close`
 /// publishes "producer finished" *after* the final push, and readers
 /// check the flag *before* draining — so a reader that observes
-/// `closed` over an empty queue has seen every item.
+/// `closed` over an empty queue has seen every item. Every push and the
+/// close notify the mailbox's [`Signal`], so a consumer task blocked on
+/// an empty mailbox parks on the signal ([`Poll::Park`]) instead of
+/// spinning the scheduler's run queue.
 struct Mailbox {
     queue: Mutex<VecDeque<Stamped>>,
     done: AtomicBool,
+    signal: Signal,
 }
 
 impl Mailbox {
     fn new() -> Arc<Mailbox> {
-        Arc::new(Mailbox { queue: Mutex::new(VecDeque::new()), done: AtomicBool::new(false) })
+        Arc::new(Mailbox {
+            queue: Mutex::new(VecDeque::new()),
+            done: AtomicBool::new(false),
+            signal: Signal::new(),
+        })
     }
 
     fn push(&self, s: Stamped) {
         self.queue.lock().unwrap().push_back(s);
+        self.signal.notify();
     }
 
     fn drain(&self, max: usize) -> Vec<Stamped> {
@@ -503,21 +519,36 @@ impl Mailbox {
 
     fn close(&self) {
         self.done.store(true, Ordering::Release);
+        self.signal.notify();
     }
 
     fn is_closed(&self) -> bool {
         self.done.load(Ordering::Acquire)
+    }
+
+    /// Park point for this mailbox's consumer: snapshot BEFORE checking
+    /// `is_closed`/`drain`, park with the snapshot if both came up
+    /// empty.
+    fn signal(&self) -> &Signal {
+        &self.signal
     }
 }
 
 /// Shared failure state of one task-based run: the first error wins and
 /// flips the abort flag; every task checks the flag at poll start and
 /// unwinds cooperatively (closing its downstream mailbox) so the run
-/// drains instead of deadlocking.
+/// drains instead of deadlocking. `fail` also notifies every watched
+/// wakeup signal (the run's mailboxes, a sharded run's slot signal):
+/// a PANICKING task cannot run its own close/notify cleanup, so
+/// without the broadcast a consumer parked on the panicked stage's
+/// output would sleep forever instead of waking, observing the abort,
+/// and unwinding — the panic-containment guarantee the streaming
+/// executor gives would silently become a hang.
 #[derive(Clone)]
 struct AbortHandle {
     first_err: Arc<Mutex<Option<anyhow::Error>>>,
     aborted: Arc<AtomicBool>,
+    wakers: Arc<Mutex<Vec<Signal>>>,
 }
 
 impl AbortHandle {
@@ -525,12 +556,23 @@ impl AbortHandle {
         AbortHandle {
             first_err: Arc::new(Mutex::new(None)),
             aborted: Arc::new(AtomicBool::new(false)),
+            wakers: Arc::new(Mutex::new(Vec::new())),
         }
+    }
+
+    /// Register a signal to notify on abort, waking anything parked on
+    /// it. Signals bump a generation on notify, so a task that decides
+    /// to park AFTER the broadcast still requeues instead of sleeping.
+    fn watch(&self, signal: &Signal) {
+        self.wakers.lock().unwrap().push(signal.clone());
     }
 
     fn fail(&self, e: anyhow::Error) {
         self.first_err.lock().unwrap().get_or_insert(e);
         self.aborted.store(true, Ordering::Release);
+        for signal in self.wakers.lock().unwrap().iter() {
+            signal.notify();
+        }
     }
 
     fn is_aborted(&self) -> bool {
@@ -667,6 +709,11 @@ fn spawn_plan_tasks(
     for _ in &resumable {
         mailboxes.push(Mailbox::new());
     }
+    // An abort (error or contained panic) must wake every parked
+    // consumer: a panicked producer cannot close its own mailbox.
+    for mailbox in &mailboxes {
+        run.abort.watch(mailbox.signal());
+    }
 
     // Source task: the source closure cannot be suspended mid-stream,
     // so it runs in one poll — pushing each emission as it happens, so
@@ -692,7 +739,8 @@ fn spawn_plan_tasks(
     }
 
     // One resumable task per transform node: drain a chunk, process it,
-    // yield; flush and close downstream when upstream is exhausted.
+    // yield; flush and close downstream when upstream is exhausted;
+    // park on the input mailbox's signal when starved.
     for (i, (mut node, handle)) in resumable.into_iter().zip(node_handles).enumerate() {
         let input = Arc::clone(&mailboxes[i]);
         let output = Arc::clone(&mailboxes[i + 1]);
@@ -702,11 +750,16 @@ fn spawn_plan_tasks(
                 output.close();
                 return Poll::Done;
             }
+            // Snapshot the wakeup generation BEFORE the emptiness
+            // checks: a push/close that races them bumps the
+            // generation, so the park below requeues instead of
+            // missing the wakeup.
+            let seen = input.signal().generation();
             let upstream_done = input.is_closed();
             let items = input.drain(ASYNC_TASK_CHUNK);
             if items.is_empty() {
                 if !upstream_done {
-                    return Poll::Pending;
+                    return Poll::Park { signal: input.signal().clone(), seen };
                 }
                 let t0 = Instant::now();
                 match node.flush() {
@@ -762,11 +815,12 @@ fn spawn_plan_tasks(
             if abort.is_aborted() {
                 return Poll::Done;
             }
+            let seen = input.signal().generation();
             let upstream_done = input.is_closed();
             let items = input.drain(ASYNC_TASK_CHUNK);
             if items.is_empty() {
                 if !upstream_done {
-                    return Poll::Pending;
+                    return Poll::Park { signal: input.signal().clone(), seen };
                 }
                 let finish = finish.take().expect("async sink finished twice");
                 match finish() {
@@ -854,42 +908,57 @@ struct ShardPassDone {
 
 /// Shared state of one sharded run: per-shard pass results parked for
 /// the merge task, the count of passes still running (what makes
-/// "the merge streamed" observable without timing), and the merge
-/// task's assembled result.
+/// "the merge streamed" observable without timing), the signal the
+/// merge task parks on while the next shard's pass is outstanding, and
+/// the merge task's assembled result.
 struct ShardedState {
     slots: Vec<Mutex<Option<ShardPassDone>>>,
     passes_left: AtomicUsize,
+    /// Notified by every pass task on completion (success, error, or
+    /// abort), so a merge task parked on an empty next slot wakes.
+    signal: Signal,
     result: Mutex<Option<(Report, PlanOutput, ShardedReport)>>,
     started: Instant,
 }
 
 /// Spawn one sharded run's tasks — `n` pass tasks plus the streaming
-/// merge task — onto `spawn`. Plans are built up front, one builder
-/// thread per shard (construction — payload binding, model warmup —
-/// stays outside the timed pass and stays parallel, as before; DL plans
+/// merge task — onto `spawn`. `make_plan(s)` must return shard `s`'s
+/// ALREADY-partitioned plan: either a full plan restricted with
+/// [`Plan::shard`] (the clone-based path — pipeline-agnostic, pays the
+/// full source pass per shard) or a [`super::plan::CompiledPlan`]
+/// shard bind over a pre-sliced workload (the payload-aware path — no
+/// redundant source passes). Shard 0's sink is the merge sink, so it
+/// must account for the whole dataset. Plans are built up front, one
+/// builder thread per shard (construction — payload binding, model
+/// warmup — stays outside the timed pass and stays parallel; DL plans
 /// share the one ModelServer across shards), so a plan-build error
 /// surfaces here, before any task runs. Building eagerly is what lets
 /// the pass tasks be `'static` while `make_plan` stays borrowed.
 fn spawn_sharded_tasks(
     n: usize,
     spawn: &mut dyn FnMut(Task),
-    make_plan: impl Fn() -> anyhow::Result<Plan> + Sync,
+    make_plan: impl Fn(usize) -> anyhow::Result<Plan> + Sync,
 ) -> anyhow::Result<(AsyncRun, Arc<ShardedState>)> {
     anyhow::ensure!(n >= 1, "sharded execution needs at least one shard");
     let run = AsyncRun::new();
     let state = Arc::new(ShardedState {
         slots: (0..n).map(|_| Mutex::new(None)).collect(),
         passes_left: AtomicUsize::new(n),
+        signal: Signal::new(),
         result: Mutex::new(None),
         started: Instant::now(),
     });
+    // A pass task that PANICS cannot decrement `passes_left` or notify;
+    // the abort broadcast wakes a merge task parked on the slot signal
+    // so it observes the abort instead of sleeping forever.
+    run.abort.watch(&state.signal);
 
     let mut built: Vec<anyhow::Result<Plan>> = Vec::with_capacity(n);
     std::thread::scope(|scope| {
         let handles: Vec<_> = (0..n)
             .map(|s| {
                 let make_plan = &make_plan;
-                scope.spawn(move || make_plan().map(|p| p.shard(Sharder::new(s, n))))
+                scope.spawn(move || make_plan(s))
             })
             .collect();
         for h in handles {
@@ -917,6 +986,7 @@ fn spawn_sharded_tasks(
             let (source, nodes) = input.take().expect("shard pass polled twice");
             if abort.is_aborted() {
                 state_pass.passes_left.fetch_sub(1, Ordering::AcqRel);
+                state_pass.signal.notify();
                 return Poll::Done;
             }
             let it0 = Instant::now();
@@ -940,6 +1010,8 @@ fn spawn_sharded_tasks(
                     abort.fail(e);
                 }
             }
+            // Every exit wakes a merge task parked on the next slot.
+            state_pass.signal.notify();
             Poll::Done
         }));
     }
@@ -968,9 +1040,13 @@ fn spawn_sharded_tasks(
             return Poll::Done;
         }
         if next < n {
+            // Snapshot before checking the slot so a pass landing (and
+            // notifying) mid-check requeues the park instead of losing
+            // the wakeup.
+            let seen = state_merge.signal.generation();
             let parked = state_merge.slots[next].lock().unwrap().take();
             let Some(pass) = parked else {
-                return Poll::Pending;
+                return Poll::Park { signal: state_merge.signal.clone(), seen };
             };
             // This fold begins now; it streamed when at least one shard
             // pass task had not finished yet.
@@ -1059,9 +1135,9 @@ fn finish_sharded(
 }
 
 /// Run one dataset as `n` data-parallel shards (§3.4 turned from
-/// replication into partitioning): every shard builds the same plan —
-/// `make_plan` must be deterministic — restricted to its round-robin
-/// partition via [`Plan::shard`], and runs source → transforms as a
+/// replication into partitioning): `make_plan(s)` builds shard `s`'s
+/// already-partitioned plan — deterministically, all shards over the
+/// same one dataset — and each shard runs source → transforms as a
 /// task on a pool of `n` workers. No shard touches the sink; the merge
 /// task folds all pre-sink items into shard 0's sink **in shard order**
 /// and runs `finish` once (the merge-aware sink contract — see the
@@ -1070,18 +1146,20 @@ fn finish_sharded(
 /// sinks, identical to a sequential run of the same plan; `Sharded(1)`
 /// is always identical to `Sequential`.
 ///
-/// Cost model: plan construction and the full source pass run once
-/// *per shard* (each worker drops the emissions it does not own — the
-/// plan-level filter keeps sharding pipeline-agnostic), while transform
-/// and sink work split 1/n. Sharding therefore pays off on
-/// transform-heavy plans (the per-item DL pipelines) and degenerates
-/// gracefully to sequential cost on source-heavy or single-item plans.
-/// Payload-aware source slicing (splitting an already-materialized
-/// `Workload` before plan build) is the follow-up that would drop the
-/// redundant source passes.
+/// Cost model, by how `make_plan` partitions:
+/// * **Clone-based** ([`Plan::shard`] over a full plan, what
+///   [`execute`] does): the full source pass runs once *per shard*,
+///   each worker dropping the emissions it does not own — pipeline-
+///   agnostic, but the redundant source passes cap the speedup on
+///   source-heavy plans.
+/// * **Payload-aware** ([`super::plan::CompiledPlan::bind_shard`] over
+///   a pre-sliced workload, the serving path): each shard's source
+///   materializes only its own partition, so the n-times source pass
+///   disappears while the round-robin emission-index semantics — and
+///   therefore every metric — stay bit-identical.
 pub fn run_sharded(
     n: usize,
-    make_plan: impl Fn() -> anyhow::Result<Plan> + Sync,
+    make_plan: impl Fn(usize) -> anyhow::Result<Plan> + Sync,
 ) -> anyhow::Result<ExecOutcome> {
     run_sharded_async(n, n, make_plan)
 }
@@ -1095,7 +1173,7 @@ pub fn run_sharded(
 pub fn run_sharded_async(
     n: usize,
     workers: usize,
-    make_plan: impl Fn() -> anyhow::Result<Plan> + Sync,
+    make_plan: impl Fn(usize) -> anyhow::Result<Plan> + Sync,
 ) -> anyhow::Result<ExecOutcome> {
     anyhow::ensure!(n >= 1, "sharded execution needs at least one shard");
     let sched = Scheduler::new(workers);
@@ -1113,7 +1191,7 @@ pub fn run_sharded_async(
 pub fn run_sharded_seeded(
     n: usize,
     seed: u64,
-    make_plan: impl Fn() -> anyhow::Result<Plan> + Sync,
+    make_plan: impl Fn(usize) -> anyhow::Result<Plan> + Sync,
 ) -> anyhow::Result<ExecOutcome> {
     let mut vs = VirtualScheduler::new(seed);
     let (run, state) = spawn_sharded_tasks(n, &mut |t| vs.spawn(t), make_plan)?;
@@ -1141,6 +1219,15 @@ mod tests {
     use crate::coordinator::telemetry::Category;
     use std::collections::BTreeMap;
     use std::time::Duration;
+
+    /// Clone-based shard builder for tests: the full plan restricted to
+    /// shard `s` of `n` (what `execute` does for plan-closure callers).
+    fn cloned(
+        n: usize,
+        make: impl Fn() -> anyhow::Result<Plan> + Sync,
+    ) -> impl Fn(usize) -> anyhow::Result<Plan> + Sync {
+        move |s| make().map(|p| p.shard(Sharder::new(s, n)))
+    }
 
     /// source 0..n → double → drop odd halves → collect; returns sum.
     fn arithmetic_plan(n: i32) -> Plan {
@@ -1282,11 +1369,11 @@ mod tests {
         assert!(run_sequential(failing()).unwrap_err().to_string().contains("boom"));
         assert!(run_streaming(failing(), 2).unwrap_err().to_string().contains("boom"));
         assert!(run_multi_instance(2, |_| Ok(failing())).is_err());
-        assert!(run_sharded(2, || Ok(failing())).unwrap_err().to_string().contains("boom"));
+        assert!(run_sharded(2, cloned(2, || Ok(failing()))).unwrap_err().to_string().contains("boom"));
         assert!(run_async(failing(), 2).unwrap_err().to_string().contains("boom"));
         assert!(run_async_seeded(failing(), 7).unwrap_err().to_string().contains("boom"));
         assert!(
-            run_sharded_async(2, 2, || Ok(failing())).unwrap_err().to_string().contains("boom")
+            run_sharded_async(2, 2, cloned(2, || Ok(failing()))).unwrap_err().to_string().contains("boom")
         );
     }
 
@@ -1371,7 +1458,7 @@ mod tests {
     #[test]
     fn sharded_of_one_matches_sequential() {
         let seq = run_sequential(arithmetic_plan(40)).unwrap();
-        let sharded = run_sharded(1, || Ok(arithmetic_plan(40))).unwrap();
+        let sharded = run_sharded(1, cloned(1, || Ok(arithmetic_plan(40)))).unwrap();
         assert_eq!(seq.output.items, sharded.output.items);
         assert_eq!(seq.output.metrics, sharded.output.metrics);
         let sharding = sharded.sharding.unwrap();
@@ -1385,7 +1472,7 @@ mod tests {
     fn sharded_partitions_one_dataset_and_merges_in_shard_order() {
         let seq = run_sequential(arithmetic_plan(100)).unwrap();
         for n in 2..=4usize {
-            let sharded = run_sharded(n, || Ok(arithmetic_plan(100))).unwrap();
+            let sharded = run_sharded(n, cloned(n, || Ok(arithmetic_plan(100)))).unwrap();
             // One dataset: items and metrics equal sequential (NOT n×,
             // which is what multi-instance would report).
             assert_eq!(sharded.output.items, seq.output.items, "n={n}");
@@ -1439,7 +1526,7 @@ mod tests {
                     },
                 ))
         };
-        let out = run_sharded(4, make).unwrap();
+        let out = run_sharded(4, cloned(4, make)).unwrap();
         assert_eq!(out.output.metrics["sum"], 7.0);
         let sharding = out.sharding.unwrap();
         assert_eq!(sharding.total_owned(), 1);
@@ -1456,7 +1543,7 @@ mod tests {
         // two shards of 10 cut 8/2 each = 4 batches. Item counts are
         // preserved; batch boundaries are an executor property (exactly
         // like the streaming executor's timeout flushes).
-        let sharded = run_sharded(2, || Ok(batch_len_plan(20, 8, 1, 0))).unwrap();
+        let sharded = run_sharded(2, cloned(2, || Ok(batch_len_plan(20, 8, 1, 0)))).unwrap();
         assert_eq!(sharded.output.items, 20);
         assert_eq!(sharded.output.metrics["batches"], 4.0);
         let sharding = sharded.sharding.unwrap();
@@ -1479,7 +1566,7 @@ mod tests {
                 |n| Ok(PlanOutput { metrics: BTreeMap::new(), items: n }),
             ))
         };
-        let out = run_sharded(3, make).unwrap();
+        let out = run_sharded(3, cloned(3, make)).unwrap();
         assert_eq!(out.output.items, 0);
         let sharding = out.sharding.unwrap();
         assert_eq!(sharding.total_owned(), 0);
@@ -1506,13 +1593,38 @@ mod tests {
                 |_| Ok(PlanOutput { metrics: BTreeMap::new(), items: 0 }),
             ))
         };
-        let err = run_sharded(3, make).unwrap_err().to_string();
+        let err = run_sharded(3, cloned(3, make)).unwrap_err().to_string();
         assert!(err.contains("rejects item 7"), "{err}");
     }
 
     #[test]
+    fn sharded_pass_panics_fail_the_run_instead_of_hanging() {
+        // A panicking pass task cannot run its own slot/notify cleanup;
+        // the abort broadcast must wake the (parked) merge task so the
+        // run fails loudly — the thread-based executor's panic
+        // guarantee, preserved under cooperative parking.
+        let make = |s: usize| -> anyhow::Result<Plan> {
+            Ok(Plan::source("p", "gen", Category::Pre, |emit: &mut dyn FnMut(i32)| emit(1))
+                .map("kaboom", Category::Ai, |_x: i32| -> anyhow::Result<i32> {
+                    panic!("pass kaboom")
+                })
+                .sink(
+                    "out",
+                    Category::Post,
+                    (),
+                    |_s: &mut (), _x: i32| Ok(()),
+                    |_| Ok(PlanOutput { metrics: BTreeMap::new(), items: 0 }),
+                )
+                .shard(Sharder::new(s, 2)))
+        };
+        let err = run_sharded(2, make).unwrap_err().to_string();
+        assert!(err.contains("panicked"), "{err}");
+        assert!(err.contains("pass kaboom"), "{err}");
+    }
+
+    #[test]
     fn sharded_rejects_zero_shards() {
-        let err = run_sharded(0, || Ok(arithmetic_plan(4))).unwrap_err().to_string();
+        let err = run_sharded(0, cloned(1, || Ok(arithmetic_plan(4)))).unwrap_err().to_string();
         assert!(err.contains("at least one shard"), "{err}");
     }
 
@@ -1699,7 +1811,7 @@ mod tests {
         let seq = run_sequential(arithmetic_plan(100)).unwrap();
         for n in 1..=4usize {
             for workers in [1usize, 2, 4] {
-                let res = run_sharded_async(n, workers, || Ok(arithmetic_plan(100))).unwrap();
+                let res = run_sharded_async(n, workers, cloned(n, || Ok(arithmetic_plan(100)))).unwrap();
                 assert_eq!(res.output.items, seq.output.items, "n={n} w={workers}");
                 assert_eq!(res.output.metrics, seq.output.metrics, "n={n} w={workers}");
                 let sharding = res.sharding.as_ref().expect("sharded run reports partitions");
@@ -1713,6 +1825,110 @@ mod tests {
         }
     }
 
+    /// Compiled per-item plan over `Vec<i32>` with an order-sensitive
+    /// sink hash — the exec-level fixture for payload-aware slicing.
+    fn compiled_vec_plan() -> crate::coordinator::plan::CompiledPlan<Vec<i32>> {
+        use crate::coordinator::plan::{CompiledPlan, Slicing, WorkloadSlice};
+        CompiledPlan::source(
+            "cvec",
+            "gen",
+            Category::Pre,
+            Slicing::PerItem,
+            |slice: WorkloadSlice<Vec<i32>>| {
+                let items: Vec<(usize, i32)> = slice
+                    .payload
+                    .iter()
+                    .enumerate()
+                    .map(|(j, &v)| (slice.global_index(j), v))
+                    .collect();
+                let mut feed = Some(items);
+                Ok(move |emit: &mut dyn FnMut((usize, i32))| {
+                    for item in feed.take().into_iter().flatten() {
+                        emit(item);
+                    }
+                })
+            },
+        )
+        .map("double", Category::Ai, |_seed| |(i, v): (usize, i32)| Ok((i, v * 2)))
+        .sink(
+            "hash",
+            Category::Post,
+            |payload: &Vec<i32>, _seed| {
+                let total = payload.len();
+                Ok((
+                    (0i64, 0i64),
+                    |(sum, hash): &mut (i64, i64), (i, v): (usize, i32)| {
+                        *sum += v as i64;
+                        *hash = hash.wrapping_mul(31).wrapping_add(i as i64);
+                        Ok(())
+                    },
+                    move |(sum, hash)| {
+                        let mut metrics = BTreeMap::new();
+                        metrics.insert("sum".to_string(), sum as f64);
+                        metrics.insert("hash".to_string(), hash as f64);
+                        Ok(PlanOutput { metrics, items: total })
+                    },
+                ))
+            },
+        )
+    }
+
+    #[test]
+    fn sharded_executor_runs_pre_sliced_compiled_binds() {
+        // The payload-aware slicing path end to end: each shard binds a
+        // round-robin slice of ONE payload, the merge folds in shard
+        // order, and every metric — including the order-sensitive index
+        // hash for n = 1 — matches a sequential bind of the full
+        // payload. Owned counts come from actual slice sizes, so the
+        // redundant full-source pass is provably gone: a shard's source
+        // stage only ever sees its own items.
+        let compiled = compiled_vec_plan();
+        let payload: Vec<i32> = (0..50).map(|v| v * 7 % 23).collect();
+        let seq = run_sequential(compiled.bind(payload.clone(), 3).unwrap()).unwrap();
+        for n in 1..=4usize {
+            let res = run_sharded(n, |s| {
+                let sharder = Sharder::new(s, n);
+                let slice: Vec<i32> = payload
+                    .iter()
+                    .enumerate()
+                    .filter(|(i, _)| sharder.owns(*i))
+                    .map(|(_, &v)| v)
+                    .collect();
+                compiled.bind_shard(slice, sharder, &payload, 3)
+            })
+            .unwrap();
+            assert_eq!(res.output.items, seq.output.items, "n={n}");
+            assert_eq!(res.output.metrics["sum"], seq.output.metrics["sum"], "n={n}");
+            if n == 1 {
+                assert_eq!(res.output.metrics["hash"], seq.output.metrics["hash"]);
+            }
+            // Bit-identical to clone-based sharding, order-sensitive
+            // hash included: slicing changes WHERE the partition
+            // happens (payload vs emission filter), never the streams.
+            let cloned_res = run_sharded(n, |s| {
+                compiled.bind(payload.clone(), 3).map(|p| p.shard(Sharder::new(s, n)))
+            })
+            .unwrap();
+            assert_eq!(res.output.metrics, cloned_res.output.metrics, "n={n}");
+            assert_eq!(res.output.items, cloned_res.output.items, "n={n}");
+            let sharding = res.sharding.expect("sharded run reports partitions");
+            assert_eq!(sharding.total_owned(), payload.len(), "n={n}");
+            for sh in &sharding.shards {
+                assert_eq!(
+                    sh.owned,
+                    Sharder::new(sh.shard, n).owned_count(payload.len()),
+                    "n={n} shard {}",
+                    sh.shard
+                );
+            }
+            assert!(res.sched.expect("counters").balanced(), "n={n}");
+        }
+        // 1 sequential bind + sliced and clone-based shard binds above.
+        let br = compiled.bind_report();
+        assert_eq!(br.compiles, 1);
+        assert_eq!(br.binds, 1 + 2 * (1 + 2 + 3 + 4));
+    }
+
     #[test]
     fn sharded_seeded_interleavings_stream_the_merge_without_changing_metrics() {
         // The acceptance assertion for the streaming merge, via
@@ -1723,7 +1939,7 @@ mod tests {
         let seq = run_sequential(arithmetic_plan(100)).unwrap();
         let mut streamed_any = false;
         for seed in 0..32u64 {
-            let res = run_sharded_seeded(4, seed, || Ok(arithmetic_plan(100))).unwrap();
+            let res = run_sharded_seeded(4, seed, cloned(4, || Ok(arithmetic_plan(100)))).unwrap();
             assert_eq!(res.output.metrics, seq.output.metrics, "seed {seed}");
             assert_eq!(res.output.items, seq.output.items, "seed {seed}");
             let sharding = res.sharding.expect("seeded sharded run reports partitions");
@@ -1737,7 +1953,7 @@ mod tests {
         );
         // A single shard can never stream: its fold starts only after
         // its own — the last — pass.
-        let one = run_sharded_seeded(1, 9, || Ok(arithmetic_plan(40))).unwrap();
+        let one = run_sharded_seeded(1, 9, cloned(1, || Ok(arithmetic_plan(40)))).unwrap();
         assert_eq!(one.sharding.unwrap().streamed_folds, 0);
     }
 }

@@ -7,7 +7,12 @@
 //! **What to run** — [`plan`]: a pipeline is declared once as a typed
 //! graph of named, [`Category`]-tagged stage nodes (source / map /
 //! flat-map / batch / sink). The plan is data; it encodes no execution
-//! strategy.
+//! strategy. Serving callers compile the graph once into a
+//! [`CompiledPlan`] of payload-free stage templates and bind a payload
+//! per run/request ([`CompiledPlan::bind`] → [`BoundPlan`]); sharded
+//! binds take pre-sliced payloads ([`CompiledPlan::bind_shard`]) so no
+//! worker materializes the stream it does not own. Bind-vs-compile
+//! cost is accounted in [`BindReport`].
 //!
 //! **How to run it** — [`exec`]: interchangeable executors selected by
 //! [`ExecMode`]:
@@ -57,10 +62,11 @@ pub use exec::{execute, run_multi_instance, run_sequential, run_sharded, run_str
 pub use exec::{run_async, run_async_on, run_async_seeded, spawn_async_on};
 pub use exec::{run_sharded_async, run_sharded_seeded};
 pub use exec::{ExecMode, ExecOutcome};
+pub use plan::{BoundPlan, CompiledPlan, CompiledPlanBuilder, Slicing, WorkloadSlice};
 pub use plan::{Plan, PlanBuilder, PlanOutput, Sharder};
 pub use router::{AdmissionQueue, AdmitOutcome, Priority, QueueStats};
 pub use scaler::{run_instances, run_instances_timed, LatencyRecorder};
 pub use scaler::{InstanceReport, ScalingReport};
-pub use sched::{Poll, Scheduler, Task, VirtualScheduler, WaitGroup};
-pub use telemetry::{Category, Report, SchedReport, ShardReport, ShardedReport, StageReport};
+pub use sched::{Poll, Scheduler, Signal, Task, VirtualScheduler, WaitGroup};
+pub use telemetry::{BindReport, Category, Report, SchedReport, ShardReport, ShardedReport, StageReport};
 pub use telemetry::Telemetry;

@@ -24,14 +24,31 @@
 //! (impossible via the typed builder) surfaces as a descriptive error,
 //! not UB. A plan's closures are single-use: executors consume the plan,
 //! and replication (multi-instance) re-invokes the plan-builder function.
+//!
+//! **Compile once, bind many** ([`CompiledPlan`]): a [`Plan`] is a
+//! *bound* artifact — payload baked into its source closure, one
+//! execution, gone. For serving, where one pipeline answers many
+//! requests, the graph is instead compiled ONCE into a [`CompiledPlan`]
+//! — a payload-free template set (source template, node templates with
+//! batch policies and category tags, sink template, warm model-set
+//! declaration) — and each request performs a cheap
+//! [`CompiledPlan::bind`] to get the [`BoundPlan`] the executors run.
+//! Sharded execution binds each shard to a pre-sliced payload
+//! ([`CompiledPlan::bind_shard`] over a [`WorkloadSlice`]) so workers
+//! stop materializing the full source stream just to drop the emissions
+//! they do not own. Bind-vs-compile cost is tracked on the compiled
+//! plan ([`CompiledPlan::bind_report`]) so the amortization is
+//! observable from counters — the tf.data build-once/re-bind property
+//! and BigDL's build-once/run-everywhere plan, in one type.
 
 use super::batcher::BatcherConfig;
-use super::telemetry::Category;
+use super::telemetry::{BindReport, Category};
 use std::any::Any;
 use std::collections::BTreeMap;
 use std::marker::PhantomData;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// A type-erased item flowing between stages.
 pub type DynItem = Box<dyn Any + Send>;
@@ -165,7 +182,9 @@ impl Node {
     }
 }
 
-/// A fully-built pipeline plan, ready for one execution.
+/// A fully-built pipeline plan, ready for one execution. Every executor
+/// runs these; [`CompiledPlan::bind`] is the cheap way to mint one per
+/// request from a graph compiled once.
 pub struct Plan {
     pub(crate) name: String,
     pub(crate) source: (String, Category, SourceFn),
@@ -251,6 +270,26 @@ impl Sharder {
     pub fn owns(&self, index: usize) -> bool {
         index % self.of == self.shard
     }
+
+    /// How many of `total` emissions this partition owns — explicit
+    /// zeros included, so shard counts larger than the dataset still
+    /// yield one (empty) partition per shard and the cover/balance
+    /// invariants stay checkable.
+    pub fn owned_count(&self, total: usize) -> usize {
+        total / self.of + usize::from(self.shard < total % self.of)
+    }
+
+    /// The global emission index of this partition's `local`-th owned
+    /// item (`shard + local·of`) — how a pre-sliced source reconstructs
+    /// the indices a filtered full stream would have carried.
+    pub fn global_index(&self, local: usize) -> usize {
+        self.shard + local * self.of
+    }
+
+    /// The trivial whole-stream partition (shard 0 of 1).
+    pub fn whole() -> Sharder {
+        Sharder { shard: 0, of: 1 }
+    }
 }
 
 impl std::fmt::Display for Sharder {
@@ -279,6 +318,420 @@ impl Plan {
         });
         self.source = (name, category, filtered);
         self
+    }
+}
+
+/// A plan ready to execute — the artifact [`CompiledPlan::bind`] mints
+/// per request. Alias of [`Plan`]: binding is what turns the reusable
+/// compiled graph into the single-use closures the executors consume.
+pub type BoundPlan = Plan;
+
+/// What a bind hands a source template: the payload (pre-sliced for
+/// per-item plans under sharded execution, whole otherwise), the
+/// partition it represents, and the per-bind seed. Sliced sources
+/// reconstruct global emission indices via
+/// [`WorkloadSlice::global_index`], so downstream stages see exactly
+/// the indices a filtered full stream would have carried.
+pub struct WorkloadSlice<P> {
+    /// The (possibly pre-sliced) payload.
+    pub payload: P,
+    /// Which round-robin partition this slice is (`0/1` for a whole
+    /// run).
+    pub sharder: Sharder,
+    /// Seed for this bind (multi-instance replicas bind at shifted
+    /// seeds).
+    pub seed: u64,
+}
+
+impl<P> WorkloadSlice<P> {
+    /// Global emission index of the slice's `local`-th item.
+    pub fn global_index(&self, local: usize) -> usize {
+        self.sharder.global_index(local)
+    }
+}
+
+/// How a compiled plan's source partitions under sharded execution.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Slicing {
+    /// The source emits one state item (the tabular shape): only the
+    /// shard owning emission 0 runs the source at all; every other
+    /// shard gets an empty source without its template being invoked.
+    SingleState,
+    /// The source emits one item per payload element: each shard binds
+    /// a round-robin [`WorkloadSlice`] of the payload and emits only
+    /// its own items, with global indices reconstructed from the
+    /// sharder — no shard materializes the stream it does not own.
+    PerItem,
+}
+
+pub(crate) type SourceTemplateFn<P> =
+    Box<dyn Fn(WorkloadSlice<P>) -> anyhow::Result<SourceFn> + Send + Sync>;
+pub(crate) type StageTemplateFn = Box<dyn Fn(u64) -> StageFn + Send + Sync>;
+pub(crate) type GroupTemplateFn = Box<dyn Fn(u64) -> GroupFn + Send + Sync>;
+pub(crate) type SinkTemplateFn<P> =
+    Box<dyn Fn(&P, u64) -> anyhow::Result<(SinkFn, FinishFn)> + Send + Sync>;
+
+/// One transform node of a compiled plan: everything a [`Node`] carries
+/// except the single-use closure, which a factory re-mints per bind.
+pub(crate) struct NodeTemplate {
+    name: String,
+    category: Category,
+    kind: NodeTemplateKind,
+}
+
+pub(crate) enum NodeTemplateKind {
+    FlatMap(StageTemplateFn),
+    Batch(BatcherConfig, GroupTemplateFn),
+}
+
+impl NodeTemplate {
+    fn instantiate(&self, seed: u64) -> Node {
+        let kind = match &self.kind {
+            NodeTemplateKind::FlatMap(make) => NodeKind::FlatMap(make(seed)),
+            NodeTemplateKind::Batch(cfg, make) => NodeKind::Batch(*cfg, make(seed)),
+        };
+        Node { name: self.name.clone(), category: self.category, kind }
+    }
+}
+
+/// A pipeline's stage graph, compiled once and bound to payloads many
+/// times (see the module docs). `P` is the payload type a bind accepts
+/// — the registry pipelines use their typed `Workload`. The compiled
+/// plan is `Send + Sync`, so one instance serves concurrent binds from
+/// a session shared across worker threads.
+pub struct CompiledPlan<P: 'static> {
+    name: String,
+    slicing: Slicing,
+    source: (String, Category, SourceTemplateFn<P>),
+    nodes: Vec<NodeTemplate>,
+    sink: (String, Category, SinkTemplateFn<P>),
+    warm_models: Vec<String>,
+    compile_nanos: AtomicU64,
+    binds: AtomicUsize,
+    bind_nanos: AtomicU64,
+}
+
+impl<P: 'static> CompiledPlan<P> {
+    /// Start a compiled plan from a source template: `make` is invoked
+    /// once per bind with that bind's [`WorkloadSlice`] and returns the
+    /// run's source closure (or a descriptive payload-mismatch error).
+    pub fn source<T, MK, SRC>(
+        pipeline: &str,
+        stage: &str,
+        category: Category,
+        slicing: Slicing,
+        make: MK,
+    ) -> CompiledPlanBuilder<P, T>
+    where
+        T: Send + 'static,
+        MK: Fn(WorkloadSlice<P>) -> anyhow::Result<SRC> + Send + Sync + 'static,
+        SRC: FnMut(&mut dyn FnMut(T)) + Send + 'static,
+    {
+        let erased: SourceTemplateFn<P> = Box::new(move |slice| {
+            let mut produce = make(slice)?;
+            let src: SourceFn = Box::new(move |emit: &mut dyn FnMut(DynItem)| {
+                let mut typed = |t: T| emit(Box::new(t) as DynItem);
+                produce(&mut typed);
+            });
+            Ok(src)
+        });
+        CompiledPlanBuilder {
+            name: pipeline.to_string(),
+            slicing,
+            source: (stage.to_string(), category, erased),
+            nodes: Vec::new(),
+            started: Instant::now(),
+            _marker: PhantomData,
+        }
+    }
+
+    /// Pipeline name.
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// How this plan's source partitions under sharded execution.
+    pub fn slicing(&self) -> Slicing {
+        self.slicing
+    }
+
+    /// Stage names in execution order (source, transforms, sink).
+    pub fn stage_names(&self) -> Vec<String> {
+        let mut names = vec![self.source.0.clone()];
+        names.extend(self.nodes.iter().map(|n| n.name.clone()));
+        names.push(self.sink.0.clone());
+        names
+    }
+
+    /// Number of stages including source and sink.
+    pub fn stage_count(&self) -> usize {
+        self.nodes.len() + 2
+    }
+
+    /// Declare the model artifacts this plan's stages execute — the set
+    /// a serving session warms once at open so binds never re-issue
+    /// warm round-trips.
+    pub fn declare_warm(mut self, models: &[&str]) -> Self {
+        self.warm_models = models.iter().map(|m| m.to_string()).collect();
+        self
+    }
+
+    /// The declared warm model set (empty for model-free pipelines).
+    pub fn warm_models(&self) -> &[String] {
+        &self.warm_models
+    }
+
+    /// Fold front-loaded work (model warmup, payload-independent config
+    /// derivation) into the recorded compile time; callers that time
+    /// the whole `compile(cfg)` call overwrite the builder's own stamp
+    /// with the full duration.
+    pub fn set_compile_time(&self, d: Duration) {
+        self.compile_nanos.store(d.as_nanos() as u64, Ordering::Relaxed);
+    }
+
+    /// Build-vs-bind accounting for this graph (compiles is always 1;
+    /// aggregate across plans with [`BindReport::merge`]).
+    pub fn bind_report(&self) -> BindReport {
+        BindReport {
+            compiles: 1,
+            compile_time: Duration::from_nanos(self.compile_nanos.load(Ordering::Relaxed)),
+            binds: self.binds.load(Ordering::Relaxed),
+            bind_time: Duration::from_nanos(self.bind_nanos.load(Ordering::Relaxed)),
+        }
+    }
+
+    fn record_bind(&self, d: Duration) {
+        self.binds.fetch_add(1, Ordering::Relaxed);
+        self.bind_nanos.fetch_add(d.as_nanos() as u64, Ordering::Relaxed);
+    }
+
+    fn assemble(
+        &self,
+        source: SourceFn,
+        sink_fn: SinkFn,
+        finish: FinishFn,
+        seed: u64,
+    ) -> BoundPlan {
+        Plan {
+            name: self.name.clone(),
+            source: (self.source.0.clone(), self.source.1, source),
+            nodes: self.nodes.iter().map(|n| n.instantiate(seed)).collect(),
+            sink: (self.sink.0.clone(), self.sink.1, sink_fn),
+            finish,
+        }
+    }
+
+    /// Bind one payload for a whole (unsharded) run: instantiate fresh
+    /// stage closures around it. No graph re-walk, no model warmup —
+    /// the cost is counted into [`Self::bind_report`].
+    pub fn bind(&self, payload: P, seed: u64) -> anyhow::Result<BoundPlan> {
+        let t0 = Instant::now();
+        let (sink_fn, finish) = (self.sink.2)(&payload, seed)?;
+        let source =
+            (self.source.2)(WorkloadSlice { payload, sharder: Sharder::whole(), seed })?;
+        let plan = self.assemble(source, sink_fn, finish, seed);
+        self.record_bind(t0.elapsed());
+        Ok(plan)
+    }
+
+    /// Bind one shard's pass plan for data-parallel execution. `slice`
+    /// is the shard's pre-sliced payload (the whole payload for
+    /// [`Slicing::SingleState`] shard 0); `sink_payload` is the FULL
+    /// payload, which binds shard 0's sink — the sharded executor folds
+    /// every shard's output into shard 0's sink, and that sink must
+    /// account for the whole dataset (item totals, per-index label
+    /// tables), not one partition. The executor discards every other
+    /// shard's sink unused, so shards > 0 carry an inert stub instead
+    /// of paying the sink template (payload scans, label clones) n-1
+    /// times per run; the stub errors loudly if a caller runs such a
+    /// pass plan standalone. Non-owning shards of a single-state plan
+    /// likewise get an empty source without their template being
+    /// invoked, so "emit the state" templates never need their own
+    /// ownership check.
+    pub fn bind_shard(
+        &self,
+        slice: P,
+        sharder: Sharder,
+        sink_payload: &P,
+        seed: u64,
+    ) -> anyhow::Result<BoundPlan> {
+        let t0 = Instant::now();
+        let (sink_fn, finish) = if sharder.shard() == 0 {
+            (self.sink.2)(sink_payload, seed)?
+        } else {
+            let name = self.name.clone();
+            let sink: SinkFn = Box::new(move |_item| {
+                Err(anyhow::anyhow!(
+                    "plan `{name}`: a non-merge shard's sink must never fold \
+                     (only shard 0's sink merges; run pass plans through the sharded executor)"
+                ))
+            });
+            let name = self.name.clone();
+            let finish_fn: FinishFn = Box::new(move || {
+                Err(anyhow::anyhow!(
+                    "plan `{name}`: a non-merge shard's sink must never finish \
+                     (only shard 0's sink merges; run pass plans through the sharded executor)"
+                ))
+            });
+            (sink, finish_fn)
+        };
+        let source: SourceFn =
+            if matches!(self.slicing, Slicing::SingleState) && !sharder.owns(0) {
+                Box::new(|_emit: &mut dyn FnMut(DynItem)| {})
+            } else {
+                (self.source.2)(WorkloadSlice { payload: slice, sharder, seed })?
+            };
+        let plan = self.assemble(source, sink_fn, finish, seed);
+        self.record_bind(t0.elapsed());
+        Ok(plan)
+    }
+}
+
+/// Typed builder for a [`CompiledPlan`]; mirrors [`PlanBuilder`] with
+/// per-stage factories in place of single-use closures. `T` is the item
+/// type flowing out of the last appended stage.
+pub struct CompiledPlanBuilder<P: 'static, T> {
+    name: String,
+    slicing: Slicing,
+    source: (String, Category, SourceTemplateFn<P>),
+    nodes: Vec<NodeTemplate>,
+    started: Instant,
+    _marker: PhantomData<fn(P) -> T>,
+}
+
+impl<P: 'static, T: Send + 'static> CompiledPlanBuilder<P, T> {
+    fn push_node<O: Send + 'static>(mut self, node: NodeTemplate) -> CompiledPlanBuilder<P, O> {
+        self.nodes.push(node);
+        CompiledPlanBuilder {
+            name: self.name,
+            slicing: self.slicing,
+            source: self.source,
+            nodes: self.nodes,
+            started: self.started,
+            _marker: PhantomData,
+        }
+    }
+
+    /// Append a 1→1 transform: `make(seed)` mints the stage closure per
+    /// bind (per-bind state like lazy tokenizers lives in the closure).
+    pub fn map<O, MK, F>(self, name: &str, category: Category, make: MK) -> CompiledPlanBuilder<P, O>
+    where
+        O: Send + 'static,
+        MK: Fn(u64) -> F + Send + Sync + 'static,
+        F: FnMut(T) -> anyhow::Result<O> + Send + 'static,
+    {
+        let stage = name.to_string();
+        let tpl: StageTemplateFn = Box::new(move |seed| {
+            let mut f = make(seed);
+            let stage = stage.clone();
+            Box::new(move |item: DynItem| {
+                let t = downcast::<T>(item, &stage)?;
+                Ok(vec![Box::new(f(t)?) as DynItem])
+            })
+        });
+        self.push_node(NodeTemplate {
+            name: name.to_string(),
+            category,
+            kind: NodeTemplateKind::FlatMap(tpl),
+        })
+    }
+
+    /// Append a 1→0..n transform.
+    pub fn flat_map<O, MK, F>(
+        self,
+        name: &str,
+        category: Category,
+        make: MK,
+    ) -> CompiledPlanBuilder<P, O>
+    where
+        O: Send + 'static,
+        MK: Fn(u64) -> F + Send + Sync + 'static,
+        F: FnMut(T) -> anyhow::Result<Vec<O>> + Send + 'static,
+    {
+        let stage = name.to_string();
+        let tpl: StageTemplateFn = Box::new(move |seed| {
+            let mut f = make(seed);
+            let stage = stage.clone();
+            Box::new(move |item: DynItem| {
+                let t = downcast::<T>(item, &stage)?;
+                Ok(f(t)?.into_iter().map(|o| Box::new(o) as DynItem).collect())
+            })
+        });
+        self.push_node(NodeTemplate {
+            name: name.to_string(),
+            category,
+            kind: NodeTemplateKind::FlatMap(tpl),
+        })
+    }
+
+    /// Append a dynamic-batching node under `cfg` (the policy is part of
+    /// the compiled graph; the grouping closure is re-minted per bind).
+    pub fn batch(
+        self,
+        name: &str,
+        category: Category,
+        cfg: BatcherConfig,
+    ) -> CompiledPlanBuilder<P, Vec<T>> {
+        let stage = name.to_string();
+        let tpl: GroupTemplateFn = Box::new(move |_seed| {
+            let stage = stage.clone();
+            Box::new(move |items: Vec<DynItem>| {
+                let mut out: Vec<T> = Vec::with_capacity(items.len());
+                for item in items {
+                    out.push(downcast::<T>(item, &stage)?);
+                }
+                Ok(Box::new(out) as DynItem)
+            })
+        });
+        self.push_node(NodeTemplate {
+            name: name.to_string(),
+            category,
+            kind: NodeTemplateKind::Batch(cfg, tpl),
+        })
+    }
+
+    /// Terminate with a sink template: `make(payload, seed)` returns
+    /// the per-bind (state, fold, finish) triple. The payload reference
+    /// is the bind's FULL payload even for shard binds, so finish steps
+    /// that report dataset totals or index into per-item tables stay
+    /// correct under the merge-aware sink contract.
+    pub fn sink<S, F, G, MK>(self, name: &str, category: Category, make: MK) -> CompiledPlan<P>
+    where
+        S: Send + 'static,
+        F: FnMut(&mut S, T) -> anyhow::Result<()> + Send + 'static,
+        G: FnOnce(S) -> anyhow::Result<PlanOutput> + Send + 'static,
+        MK: Fn(&P, u64) -> anyhow::Result<(S, F, G)> + Send + Sync + 'static,
+    {
+        let stage = name.to_string();
+        let tpl: SinkTemplateFn<P> = Box::new(move |payload, seed| {
+            let (state, mut fold, finish) = make(payload, seed)?;
+            let stage = stage.clone();
+            let cell = Arc::new(Mutex::new(Some(state)));
+            let fold_cell = Arc::clone(&cell);
+            let sink_fn: SinkFn = Box::new(move |item| {
+                let t = downcast::<T>(item, &stage)?;
+                let mut guard = fold_cell.lock().unwrap();
+                let s = guard.as_mut().expect("sink state taken before the run finished");
+                fold(s, t)
+            });
+            let finish_fn: FinishFn = Box::new(move || {
+                let s = cell.lock().unwrap().take().expect("plan finish ran twice");
+                finish(s)
+            });
+            Ok((sink_fn, finish_fn))
+        });
+        let compile_nanos = self.started.elapsed().as_nanos() as u64;
+        CompiledPlan {
+            name: self.name,
+            slicing: self.slicing,
+            source: self.source,
+            nodes: self.nodes,
+            sink: (name.to_string(), category, tpl),
+            warm_models: Vec::new(),
+            compile_nanos: AtomicU64::new(compile_nanos),
+            binds: AtomicUsize::new(0),
+            bind_nanos: AtomicU64::new(0),
+        }
     }
 }
 
@@ -572,6 +1025,270 @@ mod tests {
         let (outs, units) = r.flush().unwrap();
         assert!(outs.is_empty());
         assert_eq!(units, 0);
+    }
+
+    /// A compiled per-item plan over `Vec<i32>`: sums the payload after
+    /// doubling, with emission indices threaded so the fold order is
+    /// observable. The generic-payload analogue of the registry's
+    /// per-item pipelines.
+    fn compiled_sum_plan() -> CompiledPlan<Vec<i32>> {
+        CompiledPlan::source(
+            "csum",
+            "gen",
+            Category::Pre,
+            Slicing::PerItem,
+            |slice: WorkloadSlice<Vec<i32>>| {
+                let items: Vec<(usize, i32)> = slice
+                    .payload
+                    .iter()
+                    .enumerate()
+                    .map(|(j, &v)| (slice.global_index(j), v))
+                    .collect();
+                let mut feed = Some(items);
+                Ok(move |emit: &mut dyn FnMut((usize, i32))| {
+                    for item in feed.take().into_iter().flatten() {
+                        emit(item);
+                    }
+                })
+            },
+        )
+        .map("double", Category::Ai, |_seed| |(i, v): (usize, i32)| Ok((i, v * 2)))
+        .sink(
+            "sum",
+            Category::Post,
+            |payload: &Vec<i32>, _seed| {
+                let total_items = payload.len();
+                Ok((
+                    (0i64, 0i64),
+                    |(sum, hash): &mut (i64, i64), (i, v): (usize, i32)| {
+                        *sum += v as i64;
+                        // Order-sensitive fold so sharded merge order is
+                        // pinned by the metric, not just the sum.
+                        *hash = hash.wrapping_mul(31).wrapping_add(i as i64);
+                        Ok(())
+                    },
+                    move |(sum, hash)| {
+                        let mut metrics = BTreeMap::new();
+                        metrics.insert("sum".to_string(), sum as f64);
+                        metrics.insert("hash".to_string(), hash as f64);
+                        Ok(PlanOutput { metrics, items: total_items })
+                    },
+                ))
+            },
+        )
+    }
+
+    /// Round-robin slice of a `Vec<i32>` payload (test analogue of
+    /// `Workload::slice`).
+    fn slice_vec(payload: &[i32], shard: usize, of: usize) -> Vec<i32> {
+        payload
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| Sharder::new(shard, of).owns(*i))
+            .map(|(_, &v)| v)
+            .collect()
+    }
+
+    #[test]
+    fn compiled_plan_binds_and_reuses_deterministically() {
+        let compiled = compiled_sum_plan();
+        assert_eq!(compiled.name(), "csum");
+        assert_eq!(compiled.stage_count(), 3);
+        assert_eq!(compiled.stage_names(), vec!["gen", "double", "sum"]);
+        assert_eq!(compiled.slicing(), Slicing::PerItem);
+        let payload: Vec<i32> = (0..20).collect();
+        // One compile, three binds: identical metrics every time, and
+        // the bind report counts exactly what happened.
+        let mut outputs = Vec::new();
+        for _ in 0..3 {
+            let out = crate::coordinator::exec::run_sequential(
+                compiled.bind(payload.clone(), 7).unwrap(),
+            )
+            .unwrap();
+            outputs.push((out.output.metrics, out.output.items));
+        }
+        assert_eq!(outputs[0], outputs[1]);
+        assert_eq!(outputs[1], outputs[2]);
+        assert_eq!(outputs[0].1, 20);
+        let br = compiled.bind_report();
+        assert_eq!(br.compiles, 1);
+        assert_eq!(br.binds, 3);
+        assert_eq!(br.rebuilds_avoided(), 2);
+    }
+
+    #[test]
+    fn compiled_bind_shard_slices_match_clone_based_filtering() {
+        // The tentpole equivalence at the plan layer: a full sharded
+        // run over pre-sliced binds produces exactly the metrics —
+        // index-hash included, so the per-shard streams and the merge
+        // order are pinned, not just the totals — that cloning the
+        // full payload and filtering by emission index does.
+        let compiled = compiled_sum_plan();
+        let payload: Vec<i32> = (0..23).map(|v| v * 3 + 1).collect();
+        // Shard 0 carries the real (merge) sink, so its pass plan also
+        // runs standalone and must equal a whole-payload bind filtered
+        // to partition 0.
+        let sliced0 = compiled
+            .bind_shard(slice_vec(&payload, 0, 2), Sharder::new(0, 2), &payload, 7)
+            .unwrap();
+        let cloned0 = compiled.bind(payload.clone(), 7).unwrap().shard(Sharder::new(0, 2));
+        let a = crate::coordinator::exec::run_sequential(sliced0).unwrap();
+        let b = crate::coordinator::exec::run_sequential(cloned0).unwrap();
+        assert_eq!(a.report.stages[0].items, Sharder::new(0, 2).owned_count(payload.len()));
+        assert_eq!(a.output.metrics, b.output.metrics);
+        for of in 1..=4usize {
+            let sliced = crate::coordinator::exec::run_sharded(of, |s| {
+                compiled.bind_shard(
+                    slice_vec(&payload, s, of),
+                    Sharder::new(s, of),
+                    &payload,
+                    7,
+                )
+            })
+            .unwrap();
+            let cloned = crate::coordinator::exec::run_sharded(of, |s| {
+                compiled.bind(payload.clone(), 7).map(|p| p.shard(Sharder::new(s, of)))
+            })
+            .unwrap();
+            assert_eq!(sliced.output.metrics, cloned.output.metrics, "of={of}");
+            assert_eq!(sliced.output.items, cloned.output.items, "of={of}");
+            let sharding = sliced.sharding.expect("sharded run reports partitions");
+            for sh in &sharding.shards {
+                assert_eq!(
+                    sh.owned,
+                    Sharder::new(sh.shard, of).owned_count(payload.len()),
+                    "of={of} shard {}",
+                    sh.shard
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn compiled_bind_shard_yields_explicit_empty_shards() {
+        // More shards than items: the tail shards own nothing but still
+        // bind, run, and report zero — never silently skipped.
+        let compiled = compiled_sum_plan();
+        let payload: Vec<i32> = vec![5, 9];
+        let out = crate::coordinator::exec::run_sharded(4, |s| {
+            compiled.bind_shard(slice_vec(&payload, s, 4), Sharder::new(s, 4), &payload, 7)
+        })
+        .unwrap();
+        assert_eq!(out.output.items, 2);
+        let sharding = out.sharding.expect("sharded run reports partitions");
+        assert_eq!(sharding.shard_count(), 4, "empty shards stay explicit");
+        assert_eq!(sharding.total_owned(), 2);
+        for sh in &sharding.shards {
+            assert_eq!(sh.owned, Sharder::new(sh.shard, 4).owned_count(2), "{}", sh.shard);
+            if sh.shard >= 2 {
+                assert_eq!(sh.owned, 0, "{}", sh.shard);
+            }
+        }
+    }
+
+    #[test]
+    fn non_merge_shard_sinks_error_loudly_when_misused() {
+        // Shards > 0 get an inert sink (the sharded executor discards
+        // it): running such a pass plan standalone must fail with a
+        // descriptive error, never fold into a half-bound sink.
+        let compiled = compiled_sum_plan();
+        let payload: Vec<i32> = (0..8).collect();
+        let plan = compiled
+            .bind_shard(slice_vec(&payload, 1, 2), Sharder::new(1, 2), &payload, 7)
+            .unwrap();
+        let err = crate::coordinator::exec::run_sequential(plan).unwrap_err().to_string();
+        assert!(err.contains("non-merge shard"), "{err}");
+        assert!(err.contains("csum"), "{err}");
+    }
+
+    #[test]
+    fn single_state_bind_shard_skips_non_owning_sources() {
+        // A SingleState compiled plan whose source template would panic
+        // if invoked for a non-owning shard: bind_shard must install an
+        // empty source instead of calling it.
+        let compiled = CompiledPlan::source(
+            "one",
+            "gen",
+            Category::Pre,
+            Slicing::SingleState,
+            |slice: WorkloadSlice<i64>| {
+                assert!(
+                    slice.sharder.owns(0),
+                    "source template invoked for a non-owning shard"
+                );
+                let mut state = Some(slice.payload);
+                Ok(move |emit: &mut dyn FnMut(i64)| {
+                    if let Some(v) = state.take() {
+                        emit(v);
+                    }
+                })
+            },
+        )
+        .sink(
+            "out",
+            Category::Post,
+            |_payload: &i64, _seed| {
+                Ok((
+                    0i64,
+                    |acc: &mut i64, v: i64| {
+                        *acc += v;
+                        Ok(())
+                    },
+                    |acc| {
+                        let mut metrics = BTreeMap::new();
+                        metrics.insert("sum".to_string(), acc as f64);
+                        Ok(PlanOutput { metrics, items: 1 })
+                    },
+                ))
+            },
+        );
+        assert_eq!(compiled.slicing(), Slicing::SingleState);
+        // Shards 1..3: binding succeeds WITHOUT invoking the source
+        // template (the assert inside it would fire here otherwise).
+        for shard in 1..3usize {
+            let plan = compiled.bind_shard(42, Sharder::new(shard, 3), &42, 0).unwrap();
+            assert_eq!(plan.stage_names(), vec!["gen", "out"], "{shard}");
+        }
+        // Shard 0 owns the state and carries the real sink.
+        let plan = compiled.bind_shard(42, Sharder::new(0, 3), &42, 0).unwrap();
+        let out = crate::coordinator::exec::run_sequential(plan).unwrap();
+        assert_eq!(out.report.stages[0].items, 1);
+        assert_eq!(out.output.metrics["sum"], 42.0);
+        // The full sharded run reproduces the whole answer.
+        let sharded = crate::coordinator::exec::run_sharded(3, |s| {
+            compiled.bind_shard(42, Sharder::new(s, 3), &42, 0)
+        })
+        .unwrap();
+        assert_eq!(sharded.output.metrics["sum"], 42.0);
+    }
+
+    #[test]
+    fn compiled_plan_declares_its_warm_models() {
+        let compiled = compiled_sum_plan().declare_warm(&["model_a", "model_b"]);
+        assert_eq!(compiled.warm_models(), ["model_a", "model_b"]);
+        assert!(compiled_sum_plan().warm_models().is_empty());
+    }
+
+    #[test]
+    fn sharder_owned_count_and_global_index_agree_with_owns() {
+        for of in 1..=5usize {
+            for total in 0..13usize {
+                let mut covered = 0usize;
+                for shard in 0..of {
+                    let s = Sharder::new(shard, of);
+                    let owned = s.owned_count(total);
+                    covered += owned;
+                    // global_index enumerates exactly the owned indices.
+                    for local in 0..owned {
+                        let g = s.global_index(local);
+                        assert!(g < total, "{shard}/{of} local {local}");
+                        assert!(s.owns(g), "{shard}/{of} local {local}");
+                    }
+                }
+                assert_eq!(covered, total, "partition must cover 0..{total} of {of}");
+            }
+        }
+        assert_eq!(Sharder::whole(), Sharder::new(0, 1));
     }
 
     #[test]

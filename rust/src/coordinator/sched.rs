@@ -7,11 +7,15 @@
 //! tf.data's cooperative runtime point at: a **fixed pool** of worker
 //! threads draining a shared queue of small resumable **tasks**. A task
 //! is polled repeatedly; each poll does a bounded chunk of work and
-//! reports [`Poll::Done`], [`Poll::Yield`] (progress made, requeue me)
-//! or [`Poll::Pending`] (blocked on another task's output, requeue me).
-//! Because no task owns a thread, one pool can hold arbitrarily many
-//! plans in flight at once — the serving shape where a single
-//! `PipelineService` worker multiplexes many requests.
+//! reports [`Poll::Done`], [`Poll::Yield`] (progress made, requeue me),
+//! [`Poll::Park`] (blocked on a producer that will [`Signal::notify`] —
+//! park me until then, costing zero polls while I wait) or
+//! [`Poll::Pending`] (blocked with no signal to park on; requeue me
+//! behind a micro-sleep). Because no task owns a thread, one pool can
+//! hold arbitrarily many plans in flight at once — the serving shape
+//! where a single `PipelineService` worker multiplexes many requests.
+//! The stage mailboxes in [`super::exec`] all carry a [`Signal`], so at
+//! high fan-out blocked stages park instead of spinning the run queue.
 //!
 //! Two runners share the task contract:
 //!
@@ -40,8 +44,106 @@ pub enum Poll {
     /// Progress was made and more work remains; requeue.
     Yield,
     /// Blocked on another task's output; requeue (the runner yields the
-    /// OS thread so the producer can run).
+    /// OS thread so the producer can run). Prefer [`Poll::Park`] when
+    /// the producer exposes a [`Signal`] — a pending task spins the run
+    /// queue (bounded by a micro-sleep), a parked one costs nothing
+    /// until its wakeup.
     Pending,
+    /// Blocked on another task's output that will announce itself
+    /// through `signal`: park this task until the signal's notify
+    /// generation moves past `seen`. `seen` must have been read
+    /// ([`Signal::generation`]) BEFORE the task checked the condition
+    /// it is blocking on — the runner re-checks the generation under
+    /// the signal's lock and requeues instead of parking if a notify
+    /// already landed, so a wakeup can never be lost.
+    Park {
+        /// The producer-side wakeup latch.
+        signal: Signal,
+        /// Generation observed before the blocking check.
+        seen: usize,
+    },
+}
+
+/// Wakeup latch connecting a blocked consumer task to its producer: the
+/// consumer snapshots [`Signal::generation`], checks its condition, and
+/// parks via [`Poll::Park`] when blocked; the producer calls
+/// [`Signal::notify`] after every push/close. Parked tasks cost no
+/// polls and no sleeps until woken — the replacement for the scheduler's
+/// requeue-with-micro-sleep treatment of [`Poll::Pending`], which
+/// churned the run queue at high fan-out.
+#[derive(Clone, Default)]
+pub struct Signal {
+    core: Arc<SignalCore>,
+}
+
+#[derive(Default)]
+struct SignalCore {
+    /// Bumped on every notify. Readers snapshot it before checking the
+    /// condition they might block on, so a notify that races the
+    /// decision to park is detected at park time.
+    generation: AtomicUsize,
+    /// Tasks parked until the next notify, each with the pool that must
+    /// re-enqueue it.
+    parked: Mutex<Vec<(Arc<Shared>, Task)>>,
+}
+
+impl Signal {
+    /// A fresh latch.
+    pub fn new() -> Signal {
+        Signal::default()
+    }
+
+    /// Snapshot the notify generation. Call BEFORE checking the guarded
+    /// condition and pass the value back via [`Poll::Park`].
+    pub fn generation(&self) -> usize {
+        self.core.generation.load(Ordering::Acquire)
+    }
+
+    /// Announce progress (an item pushed, a stream closed): bump the
+    /// generation and re-enqueue every parked task onto its pool.
+    pub fn notify(&self) {
+        self.core.generation.fetch_add(1, Ordering::AcqRel);
+        let drained: Vec<(Arc<Shared>, Task)> = {
+            let mut parked = self.core.parked.lock().unwrap();
+            if parked.is_empty() {
+                return;
+            }
+            parked.drain(..).collect()
+        };
+        for (shared, task) in drained {
+            shared.counters.woken.fetch_add(1, Ordering::SeqCst);
+            enqueue_woken(&shared, task);
+        }
+    }
+
+    /// Park `task` on this signal unless the generation moved past
+    /// `seen` (a notify raced the decision to block); hands the task
+    /// back when it must be requeued instead. Internal to the
+    /// scheduler's `Park` handling. The `parked` counter bumps under
+    /// the same lock that publishes the task to `notify`, so a wake can
+    /// never be counted before its park.
+    fn park(&self, seen: usize, shared: &Arc<Shared>, task: Task) -> Option<Task> {
+        let mut parked = self.core.parked.lock().unwrap();
+        if self.core.generation.load(Ordering::Acquire) != seen {
+            return Some(task);
+        }
+        shared.counters.parked.fetch_add(1, Ordering::SeqCst);
+        parked.push((Arc::clone(shared), task));
+        None
+    }
+}
+
+/// Re-enqueue a woken task; on a closing pool the task is dropped (its
+/// run has been abandoned — the same contract as a blocked pending task
+/// on a closing pool).
+fn enqueue_woken(shared: &Arc<Shared>, task: Task) {
+    let mut s = shared.state.lock().unwrap();
+    if s.closed {
+        return;
+    }
+    s.queue.push_back(task);
+    drop(s);
+    shared.ready.notify_one();
 }
 
 /// A resumable unit of work, polled until it reports [`Poll::Done`].
@@ -120,6 +222,8 @@ struct Counters {
     completed: AtomicUsize,
     polls: AtomicUsize,
     requeues: AtomicUsize,
+    parked: AtomicUsize,
+    woken: AtomicUsize,
     in_flight: AtomicUsize,
     max_in_flight: AtomicUsize,
 }
@@ -132,6 +236,8 @@ impl Counters {
             tasks_run: self.completed.load(Ordering::SeqCst),
             polls: self.polls.load(Ordering::SeqCst),
             requeues: self.requeues.load(Ordering::SeqCst),
+            parked: self.parked.load(Ordering::SeqCst),
+            woken: self.woken.load(Ordering::SeqCst),
             max_in_flight: self.max_in_flight.load(Ordering::SeqCst),
         }
     }
@@ -148,7 +254,7 @@ struct Shared {
     counters: Counters,
 }
 
-fn worker_loop(shared: &Shared) {
+fn worker_loop(shared: &Arc<Shared>) {
     loop {
         let mut task = {
             let mut s = shared.state.lock().unwrap();
@@ -196,12 +302,26 @@ fn worker_loop(shared: &Shared) {
                     s.queue.push_back(task);
                     drop(s);
                     shared.ready.notify_one();
-                    // Blocked on another task's output: give the
-                    // producer the core, and don't hot-spin the queue
-                    // while it runs (parking blocked tasks on a mailbox
-                    // wakeup is the finer-grained follow-up).
+                    // No signal to park on: give the producer the core
+                    // and don't hot-spin the queue while it runs.
                     std::thread::yield_now();
                     std::thread::sleep(std::time::Duration::from_micros(20));
+                }
+            }
+            Poll::Park { signal, seen } => {
+                shared.counters.completed.fetch_sub(1, Ordering::SeqCst);
+                shared.counters.requeues.fetch_add(1, Ordering::SeqCst);
+                if let Some(task) = signal.park(seen, shared, task) {
+                    // A notify landed between the task's blocking check
+                    // and here: the producer made progress, so requeue
+                    // hot instead of risking a missed wakeup. (Dropped
+                    // on a closing pool, like a blocked pending task.)
+                    let mut s = shared.state.lock().unwrap();
+                    if !s.closed {
+                        s.queue.push_back(task);
+                        drop(s);
+                        shared.ready.notify_one();
+                    }
                 }
             }
         }
@@ -332,7 +452,11 @@ impl VirtualScheduler {
                     starved = 0;
                     self.ready.push(task);
                 }
-                Poll::Pending => {
+                // The virtual scheduler is single-threaded and never
+                // sleeps, so parking degenerates to a plain requeue:
+                // the producer the task waits on is itself a ready
+                // task that a later step will pick.
+                Poll::Pending | Poll::Park { .. } => {
                     self.requeues += 1;
                     starved += 1;
                     assert!(
@@ -349,6 +473,8 @@ impl VirtualScheduler {
             tasks_run: self.completed,
             polls: self.polls,
             requeues: self.requeues,
+            parked: 0,
+            woken: 0,
             max_in_flight: usize::from(self.polls > 0),
         }
     }
@@ -481,6 +607,117 @@ mod tests {
             assert_eq!(c.polls, c.tasks_run + c.requeues, "seed {seed}");
             assert!(c.balanced(), "seed {seed}: {c:?}");
         }
+    }
+
+    #[test]
+    fn parked_task_wakes_on_notify() {
+        // A consumer parks on a signal; the producer notifies later.
+        // The consumer must complete, with the park and the wake both
+        // on the ledger (and the ledger balanced).
+        let signal = Signal::new();
+        let sched = Scheduler::new(2);
+        let wg = WaitGroup::new();
+        wg.add(1);
+        let fired = Arc::new(AtomicUsize::new(0));
+        {
+            let signal = signal.clone();
+            let wg = wg.clone();
+            let fired = Arc::clone(&fired);
+            let mut waited = false;
+            sched.spawn(Box::new(move || {
+                let seen = signal.generation();
+                if fired.load(Ordering::SeqCst) == 0 {
+                    waited = true;
+                    return Poll::Park { signal: signal.clone(), seen };
+                }
+                assert!(waited, "consumer must have parked at least once");
+                wg.done();
+                Poll::Done
+            }));
+        }
+        // Wait until the consumer is actually parked (no notify has
+        // happened yet, so its park cannot lose the generation race),
+        // then let the producer fire.
+        let t0 = std::time::Instant::now();
+        while sched.counters().parked == 0 {
+            assert!(
+                t0.elapsed() < std::time::Duration::from_secs(5),
+                "consumer never parked: {:?}",
+                sched.counters()
+            );
+            std::thread::yield_now();
+        }
+        fired.store(1, Ordering::SeqCst);
+        signal.notify();
+        wg.wait();
+        let c = sched.counters();
+        assert!(c.parked >= 1, "{c:?}");
+        assert_eq!(c.parked, c.woken, "{c:?}");
+        assert!(c.balanced(), "{c:?}");
+    }
+
+    #[test]
+    fn notify_racing_the_park_decision_requeues_instead_of_parking() {
+        // The task snapshots generation 0, but a notify lands before
+        // the scheduler parks it: the stale `seen` must force a hot
+        // requeue (never a lost wakeup), and nothing counts as parked.
+        let signal = Signal::new();
+        let stale = signal.generation();
+        signal.notify(); // generation moves past `stale` up front
+        let sched = Scheduler::new(1);
+        let wg = WaitGroup::new();
+        wg.add(1);
+        {
+            let signal = signal.clone();
+            let wg = wg.clone();
+            let mut first = true;
+            sched.spawn(Box::new(move || {
+                if first {
+                    first = false;
+                    return Poll::Park { signal: signal.clone(), seen: stale };
+                }
+                wg.done();
+                Poll::Done
+            }));
+        }
+        wg.wait();
+        let c = sched.counters();
+        assert_eq!(c.parked, 0, "{c:?}");
+        assert_eq!(c.woken, 0, "{c:?}");
+        assert!(c.requeues >= 1, "{c:?}");
+        assert!(c.balanced(), "{c:?}");
+    }
+
+    #[test]
+    fn virtual_scheduler_treats_park_as_requeue() {
+        // Single-threaded seeded runs never sleep, so Park degenerates
+        // to a requeue and the parked/woken counters stay zero.
+        let signal = Signal::new();
+        let mut vs = VirtualScheduler::new(11);
+        let produced = Arc::new(AtomicUsize::new(0));
+        {
+            let produced = Arc::clone(&produced);
+            vs.spawn(Box::new(move || {
+                produced.store(1, Ordering::SeqCst);
+                Poll::Done
+            }));
+        }
+        {
+            let signal = signal.clone();
+            let produced = Arc::clone(&produced);
+            vs.spawn(Box::new(move || {
+                let seen = signal.generation();
+                if produced.load(Ordering::SeqCst) == 0 {
+                    return Poll::Park { signal: signal.clone(), seen };
+                }
+                Poll::Done
+            }));
+        }
+        let c = vs.run_to_idle();
+        assert_eq!(c.parked, 0);
+        assert_eq!(c.woken, 0);
+        assert_eq!(c.tasks_run, 2);
+        assert!(c.balanced(), "{c:?}");
     }
 
     #[test]

@@ -181,12 +181,14 @@ impl Report {
 /// Counters from one cooperative-scheduler run ([`ExecMode::Async`],
 /// and sharded runs, whose merge fold now streams on the same
 /// scheduler): how many resumable tasks were spawned and completed, how
-/// many polls and requeues the run took, and the peak number of tasks
-/// being polled at once (bounded by the worker pool). Kept out of the
-/// metric map so async runs stay metric-identical to sequential runs —
-/// the executor-conformance contract.
+/// many polls and requeues the run took, how many blocked tasks parked
+/// on a wakeup [`Signal`] (and were woken), and the peak number of
+/// tasks being polled at once (bounded by the worker pool). Kept out of
+/// the metric map so async runs stay metric-identical to sequential
+/// runs — the executor-conformance contract.
 ///
 /// [`ExecMode::Async`]: super::exec::ExecMode
+/// [`Signal`]: super::sched::Signal
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct SchedReport {
     /// Worker threads in the pool (1 for the seeded virtual scheduler).
@@ -197,8 +199,15 @@ pub struct SchedReport {
     pub tasks_run: usize,
     /// Total task polls.
     pub polls: usize,
-    /// Polls that returned without finishing and requeued their task.
+    /// Polls that returned without finishing and requeued their task
+    /// (parking polls included — a park is a requeue that waits for a
+    /// wakeup instead of spinning the run queue).
     pub requeues: usize,
+    /// Blocked tasks parked on a wakeup signal instead of requeued hot
+    /// (0 under the seeded virtual scheduler, which never sleeps).
+    pub parked: usize,
+    /// Parked tasks re-enqueued by a signal notification.
+    pub woken: usize,
     /// Peak tasks being polled simultaneously.
     pub max_in_flight: usize,
 }
@@ -206,13 +215,78 @@ pub struct SchedReport {
 impl SchedReport {
     /// The ledger every drained scheduler run satisfies: every spawned
     /// task ran to completion, every poll either finished or requeued
-    /// its task, and in-flight tasks never exceeded the pool. (A
-    /// snapshot of a long-lived shared pool balances whenever no task is
-    /// mid-poll.)
+    /// its task, every parked task was woken, and in-flight tasks never
+    /// exceeded the pool. (A snapshot of a long-lived shared pool
+    /// balances whenever no task is mid-poll or parked.)
     pub fn balanced(&self) -> bool {
         self.tasks_run == self.tasks_spawned
             && self.polls == self.tasks_run + self.requeues
+            && self.parked == self.woken
             && self.max_in_flight <= self.workers
+    }
+}
+
+/// Build-vs-bind accounting for a reusable compiled plan: how many
+/// times the stage graph was compiled (once per
+/// [`CompiledPlan`]), how many payloads were bound to it, and the time
+/// each side cost. A serving session holds ONE compiled graph and binds
+/// every request to it, so steady state shows `compiles` frozen while
+/// `binds` grows — the amortization the paper's setup-once serving
+/// deployments (§3.1, §3.4) rely on, observable from counters instead
+/// of wall-clock guesswork.
+///
+/// [`CompiledPlan`]: super::plan::CompiledPlan
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct BindReport {
+    /// Stage-graph compilations this report covers (1 per compiled
+    /// plan; aggregated reports sum them).
+    pub compiles: usize,
+    /// Time spent compiling: template construction plus whatever the
+    /// pipeline front-loads (model warmup, config derivation).
+    pub compile_time: Duration,
+    /// Payload bindings instantiated from the compiled graph(s).
+    pub binds: usize,
+    /// Cumulative time spent binding payloads.
+    pub bind_time: Duration,
+}
+
+impl BindReport {
+    /// Requests served per graph build — the amortization factor.
+    pub fn binds_per_compile(&self) -> f64 {
+        self.binds as f64 / self.compiles.max(1) as f64
+    }
+
+    /// Mean time to bind one payload (zero when nothing bound).
+    pub fn mean_bind_time(&self) -> Duration {
+        if self.binds == 0 {
+            Duration::ZERO
+        } else {
+            self.bind_time / self.binds as u32
+        }
+    }
+
+    /// Graph rebuilds a build-per-request loop would have performed
+    /// that the compile-once path skipped.
+    pub fn rebuilds_avoided(&self) -> usize {
+        self.binds.saturating_sub(self.compiles)
+    }
+
+    /// Estimated setup time saved vs rebuilding the graph per bind:
+    /// rebuilds avoided × mean compile cost.
+    pub fn amortized_saving(&self) -> Duration {
+        if self.compiles == 0 {
+            return Duration::ZERO;
+        }
+        self.compile_time / self.compiles as u32 * self.rebuilds_avoided() as u32
+    }
+
+    /// Merge another report into this one (service-level aggregation
+    /// across sessions).
+    pub fn merge(&mut self, other: &BindReport) {
+        self.compiles += other.compiles;
+        self.compile_time += other.compile_time;
+        self.binds += other.binds;
+        self.bind_time += other.bind_time;
     }
 }
 
@@ -465,14 +539,51 @@ mod tests {
             tasks_run: 5,
             polls: 9,
             requeues: 4,
+            parked: 2,
+            woken: 2,
             max_in_flight: 2,
         };
         assert!(ok.balanced());
-        // A task that never completed, an unaccounted poll, or an
-        // in-flight excursion past the pool all break the ledger.
+        // A task that never completed, an unaccounted poll, a parked
+        // task never woken, or an in-flight excursion past the pool all
+        // break the ledger.
         assert!(!SchedReport { tasks_run: 4, ..ok }.balanced());
         assert!(!SchedReport { polls: 10, ..ok }.balanced());
+        assert!(!SchedReport { parked: 3, ..ok }.balanced());
         assert!(!SchedReport { max_in_flight: 3, ..ok }.balanced());
         assert!(SchedReport::default().balanced());
+    }
+
+    #[test]
+    fn bind_report_amortization_math() {
+        let br = BindReport {
+            compiles: 1,
+            compile_time: Duration::from_millis(100),
+            binds: 5,
+            bind_time: Duration::from_millis(10),
+        };
+        assert!((br.binds_per_compile() - 5.0).abs() < 1e-12);
+        assert_eq!(br.mean_bind_time(), Duration::from_millis(2));
+        assert_eq!(br.rebuilds_avoided(), 4);
+        assert_eq!(br.amortized_saving(), Duration::from_millis(400));
+        // Nothing bound yet: no division blowups, zero savings.
+        let empty = BindReport { compiles: 1, ..Default::default() };
+        assert_eq!(empty.mean_bind_time(), Duration::ZERO);
+        assert_eq!(empty.rebuilds_avoided(), 0);
+        assert_eq!(empty.amortized_saving(), Duration::ZERO);
+        assert_eq!(BindReport::default().amortized_saving(), Duration::ZERO);
+        // Aggregation sums both sides.
+        let mut total = br;
+        total.merge(&BindReport {
+            compiles: 1,
+            compile_time: Duration::from_millis(50),
+            binds: 3,
+            bind_time: Duration::from_millis(6),
+        });
+        assert_eq!(total.compiles, 2);
+        assert_eq!(total.binds, 8);
+        assert_eq!(total.compile_time, Duration::from_millis(150));
+        assert_eq!(total.bind_time, Duration::from_millis(16));
+        assert!((total.binds_per_compile() - 4.0).abs() < 1e-12);
     }
 }

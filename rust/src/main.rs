@@ -138,11 +138,13 @@ fn cmd_run(args: &Args) -> i32 {
             }
             if let Some(sched) = &res.sched {
                 println!(
-                    "scheduler: {} workers, {} tasks ({} polls, {} requeues), max in-flight {}",
+                    "scheduler: {} workers, {} tasks ({} polls, {} requeues, {} parked/{} woken), max in-flight {}",
                     sched.workers,
                     sched.tasks_run,
                     sched.polls,
                     sched.requeues,
+                    sched.parked,
+                    sched.woken,
                     sched.max_in_flight
                 );
             }
@@ -237,6 +239,10 @@ fn cmd_serve(args: &Args) -> i32 {
     for (name, why) in svc.skipped() {
         eprintln!("note: skipping {name} (no artifacts): {why}");
     }
+    // Steady state begins here: sessions have compiled their graphs and
+    // warmed their model sets at open. Any warm round-trip past this
+    // point would be a per-request regression.
+    let warm_at_open = repro::runtime::warm_rpc_count();
 
     // Deterministic weighted round-robin over the opened sessions, with
     // priorities cycling normal → high → low.
@@ -316,10 +322,49 @@ fn cmd_serve(args: &Args) -> i32 {
     );
     if let Some(sc) = svc.scheduler_counters() {
         println!(
-            "async pool: {} workers, {} tasks ({} polls, {} requeues), max in-flight {}",
-            sc.workers, sc.tasks_run, sc.polls, sc.requeues, sc.max_in_flight
+            "async pool: {} workers, {} tasks ({} polls, {} requeues, {} parked/{} woken), max in-flight {}",
+            sc.workers,
+            sc.tasks_run,
+            sc.polls,
+            sc.requeues,
+            sc.parked,
+            sc.woken,
+            sc.max_in_flight
         );
     }
+    // Compile-once accounting, from counters (never wall-clock-only):
+    // per-session binds + bind time, plus the amortization factor.
+    let mut t = Table::new(&[
+        "pipeline",
+        "graph builds",
+        "binds",
+        "mean bind",
+        "binds/build",
+        "est. saved",
+    ]);
+    for (name, br) in svc.bind_reports() {
+        t.row(&[
+            name.to_string(),
+            br.compiles.to_string(),
+            br.binds.to_string(),
+            fmt::dur(br.mean_bind_time()),
+            format!("{:.1}", br.binds_per_compile()),
+            fmt::dur(br.amortized_saving()),
+        ]);
+    }
+    println!("plan reuse (compile once, bind per request):");
+    t.print();
+    let total = svc.bind_report_total();
+    let warm_delta = repro::runtime::warm_rpc_count() - warm_at_open;
+    println!(
+        "steady state: {} graph builds served {} binds ({} rebuilds avoided, ~{} setup saved); {} warm rpcs after open{}",
+        total.compiles,
+        total.binds,
+        total.rebuilds_avoided(),
+        fmt::dur(total.amortized_saving()),
+        warm_delta,
+        if warm_delta == 0 { " (compile-once holds)" } else { " (UNEXPECTED)" },
+    );
     let report = svc.scaling_report();
     let pct = |p: Option<std::time::Duration>| match p {
         Some(d) => fmt::dur(d),

@@ -13,7 +13,8 @@
 //! separate these (brightness/edge energy shifts the feature vector), so
 //! the reported AUC is a real quality metric.
 
-use super::{Output, PipelineResult, RunConfig, Workload};
+use super::{CompiledPipeline, Output, PipelineResult, RunConfig, Workload};
+use crate::coordinator::plan::{CompiledPlan, Slicing, WorkloadSlice};
 use crate::coordinator::telemetry::Category;
 use crate::coordinator::{Plan, PlanOutput};
 use crate::linalg::Matrix;
@@ -155,52 +156,71 @@ pub fn plan(cfg: &RunConfig) -> anyhow::Result<Plan> {
     plan_with(cfg, Workload::Synthetic)
 }
 
-/// Build the anomaly-detection plan over a supplied payload.
+/// Build the anomaly-detection plan over a supplied payload (one-shot
+/// shim over [`compile`] + bind).
 pub fn plan_with(cfg: &RunConfig, workload: Workload) -> anyhow::Result<Plan> {
-    let (train_parts, test_parts) = match workload {
-        Workload::Synthetic => match payload(cfg) {
-            Workload::Parts { train, test } => (train, test),
-            _ => unreachable!("anomaly synthesizes a parts payload"),
-        },
-        Workload::Parts { train, test } => (train, test),
-        other => return Err(super::workload_mismatch("anomaly", "parts", &other)),
+    let payload = match workload {
+        Workload::Synthetic => payload(cfg),
+        w => w,
     };
-    anyhow::ensure!(!train_parts.is_empty(), "anomaly needs at least one training part");
+    compile(cfg)?.bind(payload, cfg.seed)
+}
+
+/// Compile the anomaly-detection graph once; binds accept a
+/// [`Workload::Parts`] payload (single-state shape: the whole part set
+/// is one threaded state, so sharded binds degenerate to shard 0).
+pub fn compile(cfg: &RunConfig) -> anyhow::Result<CompiledPipeline> {
     let dl = cfg.toggles.dl;
     let ml = cfg.toggles.ml;
-    let items = train_parts.len() + test_parts.len();
 
-    // Steady-state: compile on the shared server outside the timed plan
-    // (see dlsa.rs); a serving session hits the warm compile cache.
+    // Steady-state: the shared server compiles at graph-compile time
+    // (see dlsa.rs); binds never re-issue the warm round-trips.
     let client = warm_client(cfg)?;
+    let feat_client = client;
 
-    let mut initial = Some(State {
-        train_parts,
-        test_parts,
-        train_batches: vec![],
-        test_batches: vec![],
-        train_feats: Matrix::zeros(0, 0),
-        test_feats: Matrix::zeros(0, 0),
-        scores: vec![],
-    });
-
-    Ok(Plan::source("anomaly", "source", Category::Pre, move |emit| {
-        if let Some(state) = initial.take() {
-            emit(state);
-        }
-    })
-    .map("resize_transform", Category::Pre, |mut s: State| {
+    Ok(CompiledPlan::source(
+        "anomaly",
+        "source",
+        Category::Pre,
+        Slicing::SingleState,
+        |slice: WorkloadSlice<Workload>| {
+            let (train_parts, test_parts) = match slice.payload {
+                Workload::Parts { train, test } => (train, test),
+                other => return Err(super::workload_mismatch("anomaly", "parts", &other)),
+            };
+            anyhow::ensure!(!train_parts.is_empty(), "anomaly needs at least one training part");
+            let mut initial = Some(State {
+                train_parts,
+                test_parts,
+                train_batches: vec![],
+                test_batches: vec![],
+                train_feats: Matrix::zeros(0, 0),
+                test_feats: Matrix::zeros(0, 0),
+                scores: vec![],
+            });
+            Ok(move |emit: &mut dyn FnMut(State)| {
+                if let Some(state) = initial.take() {
+                    emit(state);
+                }
+            })
+        },
+    )
+    .map("resize_transform", Category::Pre, |_seed| |mut s: State| {
         // Table 1's "image resizing, image transformations" stage.
         s.train_batches = prepare_batches(&s.train_parts);
         s.test_batches = prepare_batches(&s.test_parts);
         Ok(s)
     })
-    .map("feature_extraction", Category::Ai, move |mut s| {
-        s.train_feats = extract_features(&client, dl, &s.train_batches, s.train_parts.len())?;
-        s.test_feats = extract_features(&client, dl, &s.test_batches, s.test_parts.len())?;
-        Ok(s)
+    .map("feature_extraction", Category::Ai, move |_seed| {
+        let client = feat_client.clone();
+        move |mut s: State| {
+            s.train_feats =
+                extract_features(&client, dl, &s.train_batches, s.train_parts.len())?;
+            s.test_feats = extract_features(&client, dl, &s.test_batches, s.test_parts.len())?;
+            Ok(s)
+        }
     })
-    .map("pca_reduction", Category::Ai, move |mut s| {
+    .map("pca_reduction", Category::Ai, move |_seed| move |mut s: State| {
         let pca = Pca::fit(&s.train_feats, PCA_K);
         s.train_feats = pca.transform(&s.train_feats);
         s.test_feats = pca.transform(&s.test_feats);
@@ -213,39 +233,47 @@ pub fn plan_with(cfg: &RunConfig, workload: Workload) -> anyhow::Result<Plan> {
         }
         Ok(s)
     })
-    .map("gaussian_scoring", Category::Post, |mut s| {
+    .map("gaussian_scoring", Category::Post, |_seed| |mut s: State| {
         let model = GaussianModel::fit(&s.train_feats, 1e-6)
             .ok_or_else(|| anyhow::anyhow!("gaussian fit failed"))?;
         s.scores = model.score(&s.test_feats);
         Ok(s)
     })
-    .sink(
-        "finalize",
-        Category::Post,
-        None,
-        |slot: &mut Option<State>, s: State| {
-            *slot = Some(s);
-            Ok(())
-        },
-        move |slot| {
-            let state =
-                slot.ok_or_else(|| anyhow::anyhow!("anomaly pipeline produced no result"))?;
-            let labels: Vec<f64> =
-                state.test_parts.iter().map(|p| p.defective as i64 as f64).collect();
-            let mut m = BTreeMap::new();
-            m.insert("auc".to_string(), metrics::auc(&labels, &state.scores));
-            m.insert(
-                "defect_rate".to_string(),
-                labels.iter().sum::<f64>() / labels.len().max(1) as f64,
-            );
-            Ok(PlanOutput { metrics: m, items })
-        },
-    ))
+    .sink("finalize", Category::Post, |payload: &Workload, _seed| {
+        let items = match payload {
+            Workload::Parts { train, test } => train.len() + test.len(),
+            other => return Err(super::workload_mismatch("anomaly", "parts", other)),
+        };
+        Ok((
+            None,
+            |slot: &mut Option<State>, s: State| {
+                *slot = Some(s);
+                Ok(())
+            },
+            move |slot: Option<State>| {
+                let state = slot
+                    .ok_or_else(|| anyhow::anyhow!("anomaly pipeline produced no result"))?;
+                let labels: Vec<f64> =
+                    state.test_parts.iter().map(|p| p.defective as i64 as f64).collect();
+                let mut m = BTreeMap::new();
+                m.insert("auc".to_string(), metrics::auc(&labels, &state.scores));
+                m.insert(
+                    "defect_rate".to_string(),
+                    labels.iter().sum::<f64>() / labels.len().max(1) as f64,
+                );
+                Ok(PlanOutput { metrics: m, items })
+            },
+        ))
+    })
+    .declare_warm(&[match cfg.toggles.dl {
+        OptLevel::Optimized => "resnet_features_fused_b4",
+        OptLevel::Baseline => "resnet_features_unfused_b4",
+    }]))
 }
 
 /// Run the anomaly-detection pipeline under `cfg.exec`.
 pub fn run(cfg: &RunConfig) -> anyhow::Result<PipelineResult> {
-    super::run_plan(plan, cfg)
+    super::run_entry(super::find("anomaly").expect("anomaly is registered"), cfg)
 }
 
 /// Typed projection of an anomaly run's metrics.

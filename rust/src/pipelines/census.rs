@@ -14,7 +14,8 @@
 //! R² is a real quality metric with a known-good value (≈ the planted
 //! signal-to-noise).
 
-use super::{Output, PipelineResult, RunConfig, Workload};
+use super::{CompiledPipeline, Output, PipelineResult, RunConfig, Workload};
+use crate::coordinator::plan::{CompiledPlan, Slicing, WorkloadSlice};
 use crate::coordinator::telemetry::Category;
 use crate::coordinator::{Plan, PlanOutput};
 use crate::dataframe::{self as df, DType, DataFrame, Engine, Expr};
@@ -85,118 +86,157 @@ pub fn payload(cfg: &RunConfig) -> Workload {
     Workload::Table { csv: generate_csv(cfg.scaled(12_000, 200), cfg.seed) }
 }
 
-/// Build the census plan over a synthetic payload.
+/// Build the census plan over a synthetic payload (one-shot: compiles
+/// and binds in one call; serving paths compile once via [`compile`]).
 pub fn plan(cfg: &RunConfig) -> anyhow::Result<Plan> {
     plan_with(cfg, Workload::Synthetic)
 }
 
-/// Build the census plan over a supplied payload.
+/// Build the census plan over a supplied payload (one-shot shim over
+/// [`compile`] + bind).
 pub fn plan_with(cfg: &RunConfig, workload: Workload) -> anyhow::Result<Plan> {
-    let csv = match workload {
-        Workload::Synthetic => generate_csv(cfg.scaled(12_000, 200), cfg.seed),
-        Workload::Table { csv } => csv,
-        other => return Err(super::workload_mismatch("census", "table", &other)),
+    let payload = match workload {
+        Workload::Synthetic => payload(cfg),
+        w => w,
     };
-    // One line per record after the header, so external payloads report
-    // the same item count the synthetic generator would.
-    let rows = csv.lines().count().saturating_sub(1);
-    let engine: Engine = cfg.toggles.dataframe.into();
-    let mut initial = Some(State {
-        csv,
-        frame: DataFrame::new(),
-        train: DataFrame::new(),
-        test: DataFrame::new(),
-        pred: Vec::new(),
-        truth: Vec::new(),
-        engine,
-        ml: cfg.toggles.ml,
-        seed: cfg.seed,
-    });
+    compile(cfg)?.bind(payload, cfg.seed)
+}
 
-    Ok(Plan::source("census", "source", Category::Pre, move |emit| {
-        // The source only hands over the pre-generated dataset; parsing
-        // cost is measured by the read_csv stage like the paper's load.
-        if let Some(state) = initial.take() {
-            emit(state);
+/// Compile the census stage graph once; binds accept a
+/// [`Workload::Table`] payload. The single-state tabular shape: the
+/// source emits one state item, so sharded binds run the whole pass on
+/// the shard owning emission 0.
+pub fn compile(cfg: &RunConfig) -> anyhow::Result<CompiledPipeline> {
+    let engine: Engine = cfg.toggles.dataframe.into();
+    let ml = cfg.toggles.ml;
+    Ok(CompiledPlan::source(
+        "census",
+        "source",
+        Category::Pre,
+        Slicing::SingleState,
+        move |slice: WorkloadSlice<Workload>| {
+            let csv = match slice.payload {
+                Workload::Table { csv } => csv,
+                other => return Err(super::workload_mismatch("census", "table", &other)),
+            };
+            let mut initial = Some(State {
+                csv,
+                frame: DataFrame::new(),
+                train: DataFrame::new(),
+                test: DataFrame::new(),
+                pred: Vec::new(),
+                truth: Vec::new(),
+                engine,
+                ml,
+                seed: slice.seed,
+            });
+            // The source only hands over the pre-generated dataset;
+            // parsing cost is measured by the read_csv stage like the
+            // paper's load.
+            Ok(move |emit: &mut dyn FnMut(State)| {
+                if let Some(state) = initial.take() {
+                    emit(state);
+                }
+            })
+        },
+    )
+    .map("read_csv", Category::Pre, |_seed| {
+        |mut s: State| {
+            s.frame = df::csv::read_str(&s.csv, s.engine)?;
+            s.csv.clear();
+            Ok(s)
         }
     })
-    .map("read_csv", Category::Pre, |mut s: State| {
-        s.frame = df::csv::read_str(&s.csv, s.engine)?;
-        s.csv.clear();
-        Ok(s)
-    })
-    .map("drop_columns", Category::Pre, |mut s| {
-        // IPUMS ships ids/serials the analysis drops.
-        s.frame = s.frame.drop_cols(&["serial", "year"]);
-        Ok(s)
-    })
-    .map("remove_rows", Category::Pre, |mut s| {
-        // Working-age adults with observed income.
-        let keep = Expr::col("age")
-            .ge(Expr::lit_i64(18))
-            .and(Expr::col("income").is_null().not());
-        s.frame = df::ops::filter(&s.frame, &keep, s.engine)?;
-        Ok(s)
-    })
-    .map("arithmetic_ops", Category::Pre, |mut s| {
-        // Feature engineering: hours² interaction and age decade.
-        let hours_sq = Expr::col("hours").mul(Expr::col("hours"));
-        s.frame = df::ops::with_column(&s.frame, "hours_sq", &hours_sq, s.engine)?;
-        let decade = Expr::col("age").div(Expr::lit(10.0));
-        s.frame = df::ops::with_column(&s.frame, "age_decade", &decade, s.engine)?;
-        Ok(s)
-    })
-    .map("type_conversion", Category::Pre, |mut s| {
-        for c in ["age", "education", "hours", "sex", "hours_sq"] {
-            s.frame = df::ops::astype(&s.frame, c, DType::F64, s.engine)?;
+    .map("drop_columns", Category::Pre, |_seed| {
+        |mut s: State| {
+            // IPUMS ships ids/serials the analysis drops.
+            s.frame = s.frame.drop_cols(&["serial", "year"]);
+            Ok(s)
         }
-        Ok(s)
     })
-    .map("train_test_split", Category::Pre, |mut s| {
-        let (train, test) = df::ops::train_test_split(&s.frame, 0.25, s.seed);
-        s.train = train;
-        s.test = test;
-        s.frame = DataFrame::new();
-        Ok(s)
+    .map("remove_rows", Category::Pre, |_seed| {
+        |mut s: State| {
+            // Working-age adults with observed income.
+            let keep = Expr::col("age")
+                .ge(Expr::lit_i64(18))
+                .and(Expr::col("income").is_null().not());
+            s.frame = df::ops::filter(&s.frame, &keep, s.engine)?;
+            Ok(s)
+        }
     })
-    .map("ridge_train_infer", Category::Ai, |mut s| {
-        let mut features: Vec<String> =
-            ["age", "education", "hours", "sex", "hours_sq", "age_decade"]
-                .iter()
-                .map(|s| s.to_string())
-                .collect();
-        features.extend((0..EXTRA_COLS).map(|k| format!("v{k}")));
-        let features: Vec<&str> = features.iter().map(|s| s.as_str()).collect();
-        let (x_train, y_train) = to_matrix(&s.train, &features, "income")?;
-        let (x_test, y_test) = to_matrix(&s.test, &features, "income")?;
-        let model = Ridge::fit(&x_train, &y_train, 1.0, s.ml)
-            .ok_or_else(|| anyhow::anyhow!("ridge fit failed"))?;
-        s.pred = model.predict(&x_test);
-        s.truth = y_test;
-        Ok(s)
+    .map("arithmetic_ops", Category::Pre, |_seed| {
+        |mut s: State| {
+            // Feature engineering: hours² interaction and age decade.
+            let hours_sq = Expr::col("hours").mul(Expr::col("hours"));
+            s.frame = df::ops::with_column(&s.frame, "hours_sq", &hours_sq, s.engine)?;
+            let decade = Expr::col("age").div(Expr::lit(10.0));
+            s.frame = df::ops::with_column(&s.frame, "age_decade", &decade, s.engine)?;
+            Ok(s)
+        }
     })
-    .sink(
-        "finalize",
-        Category::Post,
-        None,
-        |slot: &mut Option<State>, s: State| {
-            *slot = Some(s);
-            Ok(())
-        },
-        move |slot| {
-            let state =
-                slot.ok_or_else(|| anyhow::anyhow!("census pipeline produced no result"))?;
-            let mut m = BTreeMap::new();
-            m.insert("r2".to_string(), metrics::r2_score(&state.truth, &state.pred));
-            m.insert("mse".to_string(), metrics::mse(&state.truth, &state.pred));
-            Ok(PlanOutput { metrics: m, items: rows })
-        },
-    ))
+    .map("type_conversion", Category::Pre, |_seed| {
+        |mut s: State| {
+            for c in ["age", "education", "hours", "sex", "hours_sq"] {
+                s.frame = df::ops::astype(&s.frame, c, DType::F64, s.engine)?;
+            }
+            Ok(s)
+        }
+    })
+    .map("train_test_split", Category::Pre, |_seed| {
+        |mut s: State| {
+            let (train, test) = df::ops::train_test_split(&s.frame, 0.25, s.seed);
+            s.train = train;
+            s.test = test;
+            s.frame = DataFrame::new();
+            Ok(s)
+        }
+    })
+    .map("ridge_train_infer", Category::Ai, |_seed| {
+        |mut s: State| {
+            let mut features: Vec<String> =
+                ["age", "education", "hours", "sex", "hours_sq", "age_decade"]
+                    .iter()
+                    .map(|s| s.to_string())
+                    .collect();
+            features.extend((0..EXTRA_COLS).map(|k| format!("v{k}")));
+            let features: Vec<&str> = features.iter().map(|s| s.as_str()).collect();
+            let (x_train, y_train) = to_matrix(&s.train, &features, "income")?;
+            let (x_test, y_test) = to_matrix(&s.test, &features, "income")?;
+            let model = Ridge::fit(&x_train, &y_train, 1.0, s.ml)
+                .ok_or_else(|| anyhow::anyhow!("ridge fit failed"))?;
+            s.pred = model.predict(&x_test);
+            s.truth = y_test;
+            Ok(s)
+        }
+    })
+    .sink("finalize", Category::Post, move |payload: &Workload, _seed| {
+        // One line per record after the header, so external payloads
+        // report the same item count the synthetic generator would.
+        let rows = match payload {
+            Workload::Table { csv } => csv.lines().count().saturating_sub(1),
+            other => return Err(super::workload_mismatch("census", "table", other)),
+        };
+        Ok((
+            None,
+            |slot: &mut Option<State>, s: State| {
+                *slot = Some(s);
+                Ok(())
+            },
+            move |slot: Option<State>| {
+                let state = slot
+                    .ok_or_else(|| anyhow::anyhow!("census pipeline produced no result"))?;
+                let mut m = BTreeMap::new();
+                m.insert("r2".to_string(), metrics::r2_score(&state.truth, &state.pred));
+                m.insert("mse".to_string(), metrics::mse(&state.truth, &state.pred));
+                Ok(PlanOutput { metrics: m, items: rows })
+            },
+        ))
+    }))
 }
 
 /// Run the census pipeline under `cfg.exec`.
 pub fn run(cfg: &RunConfig) -> anyhow::Result<PipelineResult> {
-    super::run_plan(plan, cfg)
+    super::run_entry(super::find("census").expect("census is registered"), cfg)
 }
 
 /// Typed projection of a census run's metrics.

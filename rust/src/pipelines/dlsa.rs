@@ -17,7 +17,8 @@
 //! reported quality metrics are (a) FP32↔INT8 prediction agreement (the
 //! paper's "little to no accuracy loss" claim) and (b) throughput.
 
-use super::{Output, PipelineResult, RunConfig, Workload};
+use super::{CompiledPipeline, Output, PipelineResult, RunConfig, Workload};
+use crate::coordinator::plan::{CompiledPlan, Slicing, WorkloadSlice};
 use crate::coordinator::telemetry::Category;
 use crate::coordinator::{BatcherConfig, Plan, PlanOutput};
 use crate::runtime::{ModelClient, ModelServer, Tensor};
@@ -108,50 +109,66 @@ pub fn plan(cfg: &RunConfig) -> anyhow::Result<Plan> {
     plan_with(cfg, Workload::Synthetic)
 }
 
-/// Build the DLSA serving plan over a supplied payload.
+/// Build the DLSA serving plan over a supplied payload (one-shot shim
+/// over [`compile`] + bind).
 pub fn plan_with(cfg: &RunConfig, workload: Workload) -> anyhow::Result<Plan> {
-    let (docs, labels) = match workload {
-        Workload::Synthetic => match payload(cfg) {
-            Workload::Documents { docs, labels } => (docs, labels),
-            _ => unreachable!("dlsa synthesizes a documents payload"),
-        },
-        Workload::Documents { docs, labels } => {
-            anyhow::ensure!(
-                labels.is_empty() || labels.len() == docs.len(),
-                "dlsa: {} labels for {} documents",
-                labels.len(),
-                docs.len()
-            );
-            (docs, labels)
-        }
-        other => return Err(super::workload_mismatch("dlsa", "documents", &other)),
+    let payload = match workload {
+        Workload::Synthetic => payload(cfg),
+        w => w,
     };
-    let n_docs = docs.len();
+    compile(cfg)?.bind(payload, cfg.seed)
+}
+
+/// Compile the DLSA serving graph once: model artifacts are warmed here
+/// (the compile-time cost a session pays at open), and every bind after
+/// that instantiates stage closures around a [`Workload::Documents`]
+/// payload with zero warm round-trips. Per-item shape: sharded binds
+/// slice the document stream, each shard batching its own partition.
+pub fn compile(cfg: &RunConfig) -> anyhow::Result<CompiledPipeline> {
     let tok_kind = match cfg.toggles.tokenizer {
         OptLevel::Baseline => TokenizerKind::Baseline,
         OptLevel::Optimized => TokenizerKind::Optimized,
     };
     let (model, is_chain) = model_choice(cfg.toggles.dl, cfg.toggles.quant);
 
-    // Steady-state measurement: the shared model server compiles outside
-    // the timed plan (the paper's Fig 1 measures serving, with model
-    // compilation amortized). Under a serving session this hits the
-    // engine's compile cache warmed at session open.
+    // Steady-state measurement: the shared model server compiles at
+    // graph-compile time, outside every timed bind (the paper's Fig 1
+    // measures serving, with model compilation amortized). Requests
+    // bound to this graph never re-issue the warm round-trips.
     let client = warm_client(cfg)?;
-
-    let mut feed = Some(docs);
     let infer_client = client.clone();
     let audit_client = client;
 
-    Ok(Plan::source("dlsa", "load_data", Category::Pre, move |emit| {
-        for (i, text) in feed.take().into_iter().flatten().enumerate() {
-            emit((i, text));
-        }
-    })
-    .map("tokenize", Category::Pre, {
-        // Tokenizer init happens lazily on the first document, so its
-        // cost lands in this Pre stage like Table 1's "initialize
-        // tokenizer".
+    Ok(CompiledPlan::source(
+        "dlsa",
+        "load_data",
+        Category::Pre,
+        Slicing::PerItem,
+        |slice: WorkloadSlice<Workload>| {
+            let docs = match slice.payload {
+                Workload::Documents { docs, .. } => docs,
+                other => return Err(super::workload_mismatch("dlsa", "documents", &other)),
+            };
+            // Emit global document indices (`shard + j·of`), so sliced
+            // binds produce exactly the streams a filtered full payload
+            // would — the sink's index sort and label audit depend on it.
+            let items: Vec<(usize, String)> = docs
+                .into_iter()
+                .enumerate()
+                .map(|(j, text)| (slice.global_index(j), text))
+                .collect();
+            let mut feed = Some(items);
+            Ok(move |emit: &mut dyn FnMut((usize, String))| {
+                for item in feed.take().into_iter().flatten() {
+                    emit(item);
+                }
+            })
+        },
+    )
+    .map("tokenize", Category::Pre, move |_seed| {
+        // Tokenizer init happens lazily on the first document of each
+        // bound run, so its cost lands in this Pre stage like Table 1's
+        // "initialize tokenizer".
         let mut tok: Option<WordPiece> = None;
         move |(i, text): (usize, String)| {
             let tok = tok.get_or_insert_with(|| {
@@ -165,59 +182,77 @@ pub fn plan_with(cfg: &RunConfig, workload: Workload) -> anyhow::Result<Plan> {
         Category::Pre,
         BatcherConfig { max_batch: BATCH, max_wait: Duration::from_millis(5) },
     )
-    .flat_map("inference", Category::Ai, move |batch: Vec<(usize, Vec<i64>)>| {
-        let logits = infer_batch(&infer_client, model, is_chain, &batch)?;
-        Ok(batch
-            .into_iter()
-            .zip(logits)
-            .map(|((i, enc), l)| (i, enc, l))
-            .collect())
+    .flat_map("inference", Category::Ai, move |_seed| {
+        let client = infer_client.clone();
+        move |batch: Vec<(usize, Vec<i64>)>| {
+            let logits = infer_batch(&client, model, is_chain, &batch)?;
+            Ok(batch
+                .into_iter()
+                .zip(logits)
+                .map(|((i, enc), l)| (i, enc, l))
+                .collect())
+        }
     })
-    .sink(
-        "postprocess",
-        Category::Post,
-        Vec::new(),
-        |acc: &mut Vec<(usize, Vec<i64>, [f32; 2])>, item: (usize, Vec<i64>, [f32; 2])| {
-            acc.push(item);
-            Ok(())
-        },
-        move |mut acc| {
-            acc.sort_by_key(|(i, _, _)| *i);
-            // Offline quality audit (untimed, like the original post-run
-            // audit): score the same encodings with the FP32 fused
-            // reference and measure prediction agreement.
-            let mut reference: Vec<[f32; 2]> = Vec::with_capacity(acc.len());
-            let encs: Vec<(usize, Vec<i64>)> =
-                acc.iter().map(|(i, enc, _)| (*i, enc.clone())).collect();
-            for chunk in encs.chunks(BATCH) {
-                reference.extend(infer_batch(&audit_client, "bert_fused_b8", false, chunk)?);
+    .sink("postprocess", Category::Post, move |payload: &Workload, _seed| {
+        let (n_docs, labels) = match payload {
+            Workload::Documents { docs, labels } => {
+                anyhow::ensure!(
+                    labels.is_empty() || labels.len() == docs.len(),
+                    "dlsa: {} labels for {} documents",
+                    labels.len(),
+                    docs.len()
+                );
+                (docs.len(), labels.clone())
             }
-            let n = acc.len();
-            let agree = acc
-                .iter()
-                .zip(&reference)
-                .filter(|((_, _, ours), fp32)| argmax2(ours) == argmax2(fp32))
-                .count();
-            let mut m = BTreeMap::new();
-            m.insert("agreement_vs_fp32".to_string(), agree as f64 / n.max(1) as f64);
-            // Unlabeled external payloads skip the label audit.
-            if !labels.is_empty() {
-                let label_match = acc
+            other => return Err(super::workload_mismatch("dlsa", "documents", other)),
+        };
+        let audit_client = audit_client.clone();
+        Ok((
+            Vec::new(),
+            |acc: &mut Vec<(usize, Vec<i64>, [f32; 2])>, item: (usize, Vec<i64>, [f32; 2])| {
+                acc.push(item);
+                Ok(())
+            },
+            move |mut acc: Vec<(usize, Vec<i64>, [f32; 2])>| {
+                acc.sort_by_key(|(i, _, _)| *i);
+                // Offline quality audit (untimed, like the original
+                // post-run audit): score the same encodings with the
+                // FP32 fused reference and measure prediction agreement.
+                let mut reference: Vec<[f32; 2]> = Vec::with_capacity(acc.len());
+                let encs: Vec<(usize, Vec<i64>)> =
+                    acc.iter().map(|(i, enc, _)| (*i, enc.clone())).collect();
+                for chunk in encs.chunks(BATCH) {
+                    reference
+                        .extend(infer_batch(&audit_client, "bert_fused_b8", false, chunk)?);
+                }
+                let n = acc.len();
+                let agree = acc
                     .iter()
-                    .filter(|(i, _, logits)| {
-                        labels.get(*i).is_some_and(|&l| argmax2(logits) as i64 == l)
-                    })
+                    .zip(&reference)
+                    .filter(|((_, _, ours), fp32)| argmax2(ours) == argmax2(fp32))
                     .count();
-                m.insert("label_match".to_string(), label_match as f64 / n.max(1) as f64);
-            }
-            Ok(PlanOutput { metrics: m, items: n_docs })
-        },
-    ))
+                let mut m = BTreeMap::new();
+                m.insert("agreement_vs_fp32".to_string(), agree as f64 / n.max(1) as f64);
+                // Unlabeled external payloads skip the label audit.
+                if !labels.is_empty() {
+                    let label_match = acc
+                        .iter()
+                        .filter(|(i, _, logits)| {
+                            labels.get(*i).is_some_and(|&l| argmax2(logits) as i64 == l)
+                        })
+                        .count();
+                    m.insert("label_match".to_string(), label_match as f64 / n.max(1) as f64);
+                }
+                Ok(PlanOutput { metrics: m, items: n_docs })
+            },
+        ))
+    })
+    .declare_warm(&[model, "bert_fused_b8"]))
 }
 
 /// Run the DLSA pipeline under `cfg.exec`.
 pub fn run(cfg: &RunConfig) -> anyhow::Result<PipelineResult> {
-    super::run_plan(plan, cfg)
+    super::run_entry(super::find("dlsa").expect("dlsa is registered"), cfg)
 }
 
 /// Typed projection of a DLSA run's metrics (`label_match` is `NaN` for

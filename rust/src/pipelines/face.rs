@@ -15,7 +15,8 @@
 //! a real quality metric: random-weight conv embeddings of differently
 //! colored crops are consistently separable.
 
-use super::{Output, PipelineResult, RunConfig, Workload};
+use super::{CompiledPipeline, Output, PipelineResult, RunConfig, Workload};
+use crate::coordinator::plan::{CompiledPlan, Slicing, WorkloadSlice};
 use crate::coordinator::telemetry::Category;
 use crate::coordinator::{Plan, PlanOutput};
 use crate::media::codec::decode;
@@ -132,96 +133,122 @@ pub fn plan(cfg: &RunConfig) -> anyhow::Result<Plan> {
     plan_with(cfg, Workload::Synthetic)
 }
 
-/// Build the face-recognition plan over a supplied payload.
+/// Build the face-recognition plan over a supplied payload (one-shot
+/// shim over [`compile`] + bind).
 pub fn plan_with(cfg: &RunConfig, workload: Workload) -> anyhow::Result<Plan> {
-    let clip = match workload {
-        Workload::Synthetic => match payload(cfg) {
-            Workload::Video { frames } => frames,
-            _ => unreachable!("face synthesizes a video payload"),
-        },
-        Workload::Video { frames } => frames,
-        other => return Err(super::workload_mismatch("face", "video", &other)),
+    let payload = match workload {
+        Workload::Synthetic => payload(cfg),
+        w => w,
     };
-    anyhow::ensure!(!clip.is_empty(), "face needs at least one frame to enroll a gallery");
-    let n_frames = clip.len();
+    compile(cfg)?.bind(payload, cfg.seed)
+}
+
+/// Compile the face-recognition graph once; binds accept a
+/// [`Workload::Video`] payload. Single-state shape despite the video
+/// payload: the gallery enrolls from frame 0 and every later frame
+/// matches against it, so the clip is one threaded state and sharded
+/// binds keep it whole on shard 0 (slicing frames would change which
+/// identities enroll).
+pub fn compile(cfg: &RunConfig) -> anyhow::Result<CompiledPipeline> {
     let dl = cfg.toggles.dl;
 
-    // Steady-state: compile both cascade models on the shared server
-    // outside the timed plan (see dlsa.rs); a serving session hits the
-    // warm compile cache.
+    // Steady-state: both cascade models compile at graph-compile time
+    // (see dlsa.rs); binds never re-issue the warm round-trips.
     let client = warm_client(cfg)?;
 
     let enroll_client = client.clone();
     let detect_client = client.clone();
     let recog_client = client;
-    let mut feed = Some(clip);
 
-    Ok(Plan::source("face", "load_video", Category::Pre, move |emit| {
-        // Decode the whole clip — the load stage's real work, so it is
-        // timed as source busy time.
-        let Some(encoded) = feed.take() else { return };
-        let mut frames = Vec::with_capacity(encoded.len());
-        for (enc, truth) in encoded {
-            let ids: Vec<usize> = (0..truth.boxes.len()).collect();
-            frames.push((decode(&enc), truth.boxes, ids));
-        }
-        emit(State {
-            frames,
-            gallery: vec![],
-            matches: 0,
-            attempts: 0,
-            detections_run: 0,
-        });
-    })
-    .map("enroll_gallery", Category::Pre, move |mut s: State| {
-        let (img, boxes, _) = &s.frames[0];
-        let crops: Vec<Image> = boxes.iter().map(|b| crop_and_prep(img, b)).collect();
-        s.gallery = embed(&enroll_client, dl, &crops)?;
-        Ok(s)
-    })
-    .map("detection", Category::Ai, move |mut s| {
-        // Run the detector on every frame (the cascade's first model).
-        let det = detector(dl);
-        for (img, _, _) in &s.frames {
-            let mut small = resize(img, IMG, IMG, ResizeFilter::Bilinear);
-            normalize(&mut small, [0.45; 3], [0.25; 3]);
-            let input = Tensor::f32(&[1, IMG, IMG, 3], small.data.clone());
-            match dl {
-                OptLevel::Optimized => detect_client.run(det, vec![input])?,
-                OptLevel::Baseline => detect_client.run_chain(det, vec![input])?,
+    Ok(CompiledPlan::source(
+        "face",
+        "load_video",
+        Category::Pre,
+        Slicing::SingleState,
+        |slice: WorkloadSlice<Workload>| {
+            let clip = match slice.payload {
+                Workload::Video { frames } => frames,
+                other => return Err(super::workload_mismatch("face", "video", &other)),
             };
-            s.detections_run += 1;
+            anyhow::ensure!(!clip.is_empty(), "face needs at least one frame to enroll a gallery");
+            let mut feed = Some(clip);
+            // Decode the whole clip — the load stage's real work, so it
+            // is timed as source busy time.
+            Ok(move |emit: &mut dyn FnMut(State)| {
+                let Some(encoded) = feed.take() else { return };
+                let mut frames = Vec::with_capacity(encoded.len());
+                for (enc, truth) in encoded {
+                    let ids: Vec<usize> = (0..truth.boxes.len()).collect();
+                    frames.push((decode(&enc), truth.boxes, ids));
+                }
+                emit(State {
+                    frames,
+                    gallery: vec![],
+                    matches: 0,
+                    attempts: 0,
+                    detections_run: 0,
+                });
+            })
+        },
+    )
+    .map("enroll_gallery", Category::Pre, move |_seed| {
+        let client = enroll_client.clone();
+        move |mut s: State| {
+            let (img, boxes, _) = &s.frames[0];
+            let crops: Vec<Image> = boxes.iter().map(|b| crop_and_prep(img, b)).collect();
+            s.gallery = embed(&client, dl, &crops)?;
+            Ok(s)
         }
-        Ok(s)
     })
-    .map("recognition", Category::Ai, move |mut s| {
-        // Embed ground-truth crops (identity-labeled) for all frames
-        // past the enrollment frame and match against the gallery.
-        let mut crops = Vec::new();
-        let mut want_ids = Vec::new();
-        for (img, boxes, ids) in s.frames.iter().skip(1) {
-            for (b, &id) in boxes.iter().zip(ids) {
-                crops.push(crop_and_prep(img, b));
-                want_ids.push(id);
+    .map("detection", Category::Ai, move |_seed| {
+        let client = detect_client.clone();
+        move |mut s: State| {
+            // Run the detector on every frame (the cascade's first model).
+            let det = detector(dl);
+            for (img, _, _) in &s.frames {
+                let mut small = resize(img, IMG, IMG, ResizeFilter::Bilinear);
+                normalize(&mut small, [0.45; 3], [0.25; 3]);
+                let input = Tensor::f32(&[1, IMG, IMG, 3], small.data.clone());
+                match dl {
+                    OptLevel::Optimized => client.run(det, vec![input])?,
+                    OptLevel::Baseline => client.run_chain(det, vec![input])?,
+                };
+                s.detections_run += 1;
             }
+            Ok(s)
         }
-        let embs = embed(&recog_client, dl, &crops)?;
-        for (e, want) in embs.iter().zip(&want_ids) {
-            let best = s
-                .gallery
-                .iter()
-                .enumerate()
-                .max_by(|a, b| cosine(e, a.1).partial_cmp(&cosine(e, b.1)).unwrap())
-                .map(|(i, _)| i)
-                .unwrap_or(usize::MAX);
-            s.attempts += 1;
-            if best == *want {
-                s.matches += 1;
-            }
-        }
-        Ok(s)
     })
-    .map("output_generation", Category::Post, |s: State| {
+    .map("recognition", Category::Ai, move |_seed| {
+        let client = recog_client.clone();
+        move |mut s: State| {
+            // Embed ground-truth crops (identity-labeled) for all frames
+            // past the enrollment frame and match against the gallery.
+            let mut crops = Vec::new();
+            let mut want_ids = Vec::new();
+            for (img, boxes, ids) in s.frames.iter().skip(1) {
+                for (b, &id) in boxes.iter().zip(ids) {
+                    crops.push(crop_and_prep(img, b));
+                    want_ids.push(id);
+                }
+            }
+            let embs = embed(&client, dl, &crops)?;
+            for (e, want) in embs.iter().zip(&want_ids) {
+                let best = s
+                    .gallery
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| cosine(e, a.1).partial_cmp(&cosine(e, b.1)).unwrap())
+                    .map(|(i, _)| i)
+                    .unwrap_or(usize::MAX);
+                s.attempts += 1;
+                if best == *want {
+                    s.matches += 1;
+                }
+            }
+            Ok(s)
+        }
+    })
+    .map("output_generation", Category::Post, |_seed| |s: State| {
         // Annotated-output stand-in: format one line per match attempt.
         let mut buf = String::new();
         for i in 0..s.attempts {
@@ -229,31 +256,36 @@ pub fn plan_with(cfg: &RunConfig, workload: Workload) -> anyhow::Result<Plan> {
         }
         Ok(s)
     })
-    .sink(
-        "finalize",
-        Category::Post,
-        None,
-        |slot: &mut Option<State>, s: State| {
-            *slot = Some(s);
-            Ok(())
-        },
-        move |slot| {
-            let state =
-                slot.ok_or_else(|| anyhow::anyhow!("face pipeline produced no result"))?;
-            let mut m = BTreeMap::new();
-            m.insert(
-                "match_rate".to_string(),
-                state.matches as f64 / state.attempts.max(1) as f64,
-            );
-            m.insert("detections".to_string(), state.detections_run as f64);
-            Ok(PlanOutput { metrics: m, items: n_frames })
-        },
-    ))
+    .sink("finalize", Category::Post, |payload: &Workload, _seed| {
+        let n_frames = match payload {
+            Workload::Video { frames } => frames.len(),
+            other => return Err(super::workload_mismatch("face", "video", other)),
+        };
+        Ok((
+            None,
+            |slot: &mut Option<State>, s: State| {
+                *slot = Some(s);
+                Ok(())
+            },
+            move |slot: Option<State>| {
+                let state = slot
+                    .ok_or_else(|| anyhow::anyhow!("face pipeline produced no result"))?;
+                let mut m = BTreeMap::new();
+                m.insert(
+                    "match_rate".to_string(),
+                    state.matches as f64 / state.attempts.max(1) as f64,
+                );
+                m.insert("detections".to_string(), state.detections_run as f64);
+                Ok(PlanOutput { metrics: m, items: n_frames })
+            },
+        ))
+    })
+    .declare_warm(&[detector(cfg.toggles.dl), embed_model(cfg.toggles.dl)]))
 }
 
 /// Run the face-recognition pipeline under `cfg.exec`.
 pub fn run(cfg: &RunConfig) -> anyhow::Result<PipelineResult> {
-    super::run_plan(plan, cfg)
+    super::run_entry(super::find("face").expect("face is registered"), cfg)
 }
 
 /// Typed projection of a face run's metrics.

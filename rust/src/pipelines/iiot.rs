@@ -9,7 +9,8 @@
 //! Dataset: a wide, sparse sensor table (Bosch-like): many columns, high
 //! null fraction, a planted failure rule over a few "essential" sensors.
 
-use super::{Output, PipelineResult, RunConfig, Workload};
+use super::{CompiledPipeline, Output, PipelineResult, RunConfig, Workload};
+use crate::coordinator::plan::{CompiledPlan, Slicing, WorkloadSlice};
 use crate::coordinator::telemetry::Category;
 use crate::coordinator::{Plan, PlanOutput};
 use crate::dataframe::{self as df, DataFrame, Engine};
@@ -77,39 +78,55 @@ pub fn plan(cfg: &RunConfig) -> anyhow::Result<Plan> {
     plan_with(cfg, Workload::Synthetic)
 }
 
-/// Build the IIoT plan over a supplied payload.
+/// Build the IIoT plan over a supplied payload (one-shot shim over
+/// [`compile`] + bind).
 pub fn plan_with(cfg: &RunConfig, workload: Workload) -> anyhow::Result<Plan> {
-    let csv = match workload {
-        Workload::Synthetic => generate_csv(cfg.scaled(3_000, 150), cfg.seed),
-        Workload::Table { csv } => csv,
-        other => return Err(super::workload_mismatch("iiot", "table", &other)),
+    let payload = match workload {
+        Workload::Synthetic => payload(cfg),
+        w => w,
     };
-    // One measurement row per line after the header.
-    let rows = csv.lines().count().saturating_sub(1);
-    let engine: Engine = cfg.toggles.dataframe.into();
-    let mut initial = Some(State {
-        csv,
-        frame: DataFrame::new(),
-        engine,
-        ml: cfg.toggles.ml,
-        seed: cfg.seed,
-        pred: vec![],
-        proba: vec![],
-        truth: vec![],
-        kept_cols: 0,
-    });
+    compile(cfg)?.bind(payload, cfg.seed)
+}
 
-    Ok(Plan::source("iiot", "source", Category::Pre, move |emit| {
-        if let Some(state) = initial.take() {
-            emit(state);
-        }
-    })
-    .map("read_measurements", Category::Pre, |mut s: State| {
+/// Compile the IIoT stage graph once; binds accept a
+/// [`Workload::Table`] payload (single-state tabular shape).
+pub fn compile(cfg: &RunConfig) -> anyhow::Result<CompiledPipeline> {
+    let engine: Engine = cfg.toggles.dataframe.into();
+    let ml = cfg.toggles.ml;
+    Ok(CompiledPlan::source(
+        "iiot",
+        "source",
+        Category::Pre,
+        Slicing::SingleState,
+        move |slice: WorkloadSlice<Workload>| {
+            let csv = match slice.payload {
+                Workload::Table { csv } => csv,
+                other => return Err(super::workload_mismatch("iiot", "table", &other)),
+            };
+            let mut initial = Some(State {
+                csv,
+                frame: DataFrame::new(),
+                engine,
+                ml,
+                seed: slice.seed,
+                pred: vec![],
+                proba: vec![],
+                truth: vec![],
+                kept_cols: 0,
+            });
+            Ok(move |emit: &mut dyn FnMut(State)| {
+                if let Some(state) = initial.take() {
+                    emit(state);
+                }
+            })
+        },
+    )
+    .map("read_measurements", Category::Pre, |_seed| |mut s: State| {
         s.frame = df::csv::read_str(&s.csv, s.engine)?;
         s.csv.clear();
         Ok(s)
     })
-    .map("drop_inessential_columns", Category::Pre, |mut s| {
+    .map("drop_inessential_columns", Category::Pre, |_seed| |mut s: State| {
         // Keep columns with < 50% nulls (the "only necessary features"
         // cleaning step of the paper).
         let n = s.frame.nrows().max(1);
@@ -129,7 +146,7 @@ pub fn plan_with(cfg: &RunConfig, workload: Workload) -> anyhow::Result<Plan> {
         s.kept_cols = s.frame.ncols() - 1;
         Ok(s)
     })
-    .map("fill_missing", Category::Pre, |mut s| {
+    .map("fill_missing", Category::Pre, |_seed| |mut s: State| {
         let names: Vec<String> = s.frame.schema().into_iter().map(|(n, _)| n).collect();
         for name in names {
             if name != "failure" {
@@ -138,8 +155,8 @@ pub fn plan_with(cfg: &RunConfig, workload: Workload) -> anyhow::Result<Plan> {
         }
         Ok(s)
     })
-    .map("train_test_split", Category::Pre, |s: State| Ok(s))
-    .map("random_forest", Category::Ai, |mut s| {
+    .map("train_test_split", Category::Pre, |_seed| |s: State| Ok(s))
+    .map("random_forest", Category::Ai, |_seed| |mut s: State| {
         let (train, test) = df::ops::train_test_split(&s.frame, 0.3, s.seed);
         let to_xy = |frame: &DataFrame| -> anyhow::Result<(Matrix, Vec<usize>)> {
             let feats: Vec<String> = frame
@@ -176,30 +193,35 @@ pub fn plan_with(cfg: &RunConfig, workload: Workload) -> anyhow::Result<Plan> {
         s.truth = ys.iter().map(|&c| c as f64).collect();
         Ok(s)
     })
-    .sink(
-        "finalize",
-        Category::Post,
-        None,
-        |slot: &mut Option<State>, s: State| {
-            *slot = Some(s);
-            Ok(())
-        },
-        move |slot| {
-            let state =
-                slot.ok_or_else(|| anyhow::anyhow!("iiot pipeline produced no result"))?;
-            let mut m = BTreeMap::new();
-            m.insert("f1".to_string(), metrics::f1(&state.truth, &state.pred));
-            m.insert("accuracy".to_string(), metrics::accuracy(&state.truth, &state.pred));
-            m.insert("auc".to_string(), metrics::auc(&state.truth, &state.proba));
-            m.insert("kept_columns".to_string(), state.kept_cols as f64);
-            Ok(PlanOutput { metrics: m, items: rows })
-        },
-    ))
+    .sink("finalize", Category::Post, move |payload: &Workload, _seed| {
+        // One measurement row per line after the header.
+        let rows = match payload {
+            Workload::Table { csv } => csv.lines().count().saturating_sub(1),
+            other => return Err(super::workload_mismatch("iiot", "table", other)),
+        };
+        Ok((
+            None,
+            |slot: &mut Option<State>, s: State| {
+                *slot = Some(s);
+                Ok(())
+            },
+            move |slot: Option<State>| {
+                let state = slot
+                    .ok_or_else(|| anyhow::anyhow!("iiot pipeline produced no result"))?;
+                let mut m = BTreeMap::new();
+                m.insert("f1".to_string(), metrics::f1(&state.truth, &state.pred));
+                m.insert("accuracy".to_string(), metrics::accuracy(&state.truth, &state.pred));
+                m.insert("auc".to_string(), metrics::auc(&state.truth, &state.proba));
+                m.insert("kept_columns".to_string(), state.kept_cols as f64);
+                Ok(PlanOutput { metrics: m, items: rows })
+            },
+        ))
+    }))
 }
 
 /// Run the IIoT pipeline under `cfg.exec`.
 pub fn run(cfg: &RunConfig) -> anyhow::Result<PipelineResult> {
-    super::run_plan(plan, cfg)
+    super::run_entry(super::find("iiot").expect("iiot is registered"), cfg)
 }
 
 /// Typed projection of an IIoT run's metrics.

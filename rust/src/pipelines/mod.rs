@@ -12,16 +12,21 @@
 //! | [`anomaly`] | Anomaly detection | `resnet_tiny` + PCA/Gaussian | Modin, sklearnex, IPEX |
 //! | [`face`] | Face recognition | `ssd_tiny` + `resnet_embed` | Intel-TF (fused) |
 //!
-//! Every pipeline is declared once as a [`Plan`] and executed by
-//! whichever executor [`RunConfig::exec`] selects — see
-//! [`crate::coordinator`]. Each pipeline's API splits payload generation
-//! from plan construction:
+//! Every pipeline is declared once as a compiled stage graph and
+//! executed by whichever executor [`RunConfig::exec`] selects — see
+//! [`crate::coordinator`]. Each pipeline's API splits the lifecycle
+//! into **compile → bind → execute**:
 //!
 //! * `payload(&RunConfig)` synthesizes the pipeline's deterministic
 //!   dataset as a typed [`Workload`];
-//! * `plan_with(&RunConfig, Workload)` builds the plan over a supplied
-//!   payload (external data or a pre-generated synthetic one);
-//! * `plan(&RunConfig)` is the one-shot composition of the two;
+//! * `compile(&RunConfig)` builds the reusable [`CompiledPipeline`]
+//!   (payload-free templates + warm model-set declaration; model
+//!   artifacts warm here, once) — the single definition of the graph;
+//! * `CompiledPipeline::bind(payload, seed)` instantiates a run's
+//!   single-use plan in microseconds — a serving session compiles once
+//!   and binds per request ([`crate::service::Session`]);
+//! * `plan(&RunConfig)` / `plan_with(&RunConfig, Workload)` are the
+//!   one-shot compile+bind compositions for benches and tests;
 //! * `output(&PipelineResult)` projects the metric map into the typed
 //!   [`Output`] for that pipeline's category;
 //! * `warm(&RunConfig)` pre-compiles the pipeline's model artifacts and
@@ -31,6 +36,9 @@
 //! long-lived serving facade over it lives in [`crate::service`].
 //! `run`/`run_by_name` remain as one-shot conveniences for the benches
 //! and CLI; their telemetry report carries the Figure 1 stage breakdown.
+//! Sharded execution through [`run_compiled`] binds each shard to a
+//! pre-sliced [`Workload`] ([`Workload::slice`]), closing the
+//! redundant-source-pass seam the clone-based path pays.
 
 pub mod census;
 pub mod plasticc;
@@ -45,11 +53,13 @@ pub mod workload;
 pub use workload::{Output, Workload};
 pub(crate) use workload::workload_mismatch;
 
+use crate::coordinator::plan::{CompiledPlan, Sharder, Slicing};
 use crate::coordinator::telemetry::{Report, SchedReport, ShardedReport};
 use crate::coordinator::{exec, ExecMode, ExecOutcome, Plan};
 use crate::runtime::ModelClient;
 use crate::OptLevel;
 use std::collections::BTreeMap;
+use std::time::Instant;
 
 /// Per-axis optimization toggles — the columns of Table 2.
 #[derive(Debug, Clone, Copy)]
@@ -169,10 +179,17 @@ impl PipelineResult {
     }
 }
 
+/// A pipeline's reusable compiled stage graph: templates over a typed
+/// [`Workload`] payload, bound per run/request.
+pub type CompiledPipeline = CompiledPlan<Workload>;
+
 /// A pipeline's one-shot plan-builder entry point (synthetic payload).
 pub type PlanFn = fn(&RunConfig) -> anyhow::Result<Plan>;
 /// A pipeline's payload-accepting plan builder.
 pub type PayloadPlanFn = fn(&RunConfig, Workload) -> anyhow::Result<Plan>;
+/// A pipeline's graph compiler: the compile-once half of the
+/// compile/bind split (see [`CompiledPipeline`]).
+pub type CompileFn = fn(&RunConfig) -> anyhow::Result<CompiledPipeline>;
 /// A pipeline's synthetic payload generator.
 pub type PayloadFn = fn(&RunConfig) -> Workload;
 /// A pipeline's typed-output projection.
@@ -201,13 +218,14 @@ pub fn run_plan(plan_fn: PlanFn, cfg: &RunConfig) -> anyhow::Result<PipelineResu
     Ok(finish_outcome(outcome))
 }
 
-/// Like [`run_plan`], but over a supplied [`Workload`] — the serving
-/// path: a session generates (or receives) the payload once and executes
-/// it without re-deriving data from the config. Single-instance modes
-/// move the payload into the one plan they build (no copy on the serving
-/// hot path); multi-instance replicas each process a clone of it at a
-/// shifted seed (distinct streams), while sharded workers each process a
-/// clone of it at the base seed (one stream, partitioned).
+/// Like [`run_plan`], but over a supplied [`Workload`] through the
+/// one-shot plan builders (each call rebuilds the stage graph; each
+/// shard clones the full payload and filters by emission index). Kept
+/// as the uncompiled reference path — the conformance suite pins it
+/// metric-identical to [`run_compiled`], which serving uses instead.
+/// Multi-instance replicas each process a clone of the payload at a
+/// shifted seed (distinct streams); sharded workers each process a
+/// clone at the base seed (one stream, partitioned).
 pub fn run_plan_with(
     plan_fn: PayloadPlanFn,
     payload: Workload,
@@ -224,12 +242,116 @@ pub fn run_plan_with(
             instance_cfg.seed = base.seed.wrapping_add(instance as u64);
             plan_fn(&instance_cfg, payload.clone())
         })?,
-        ExecMode::Sharded(n) => {
-            exec::run_sharded(n, move || plan_fn(&base, payload.clone()))?
-        }
+        ExecMode::Sharded(n) => exec::run_sharded(n, move |s| {
+            plan_fn(&base, payload.clone()).map(|p| p.shard(Sharder::new(s, n)))
+        })?,
         ExecMode::Async(workers) => exec::run_async(plan_fn(cfg, payload)?, workers)?,
     };
     Ok(finish_outcome(outcome))
+}
+
+/// Compile one pipeline's stage graph, timing the whole compilation —
+/// warmup included — into the graph's [`BindReport`]. The serving
+/// session's open-time half of the compile/bind split.
+///
+/// [`BindReport`]: crate::coordinator::telemetry::BindReport
+pub fn compile_entry(
+    entry: &PipelineEntry,
+    cfg: &RunConfig,
+) -> anyhow::Result<CompiledPipeline> {
+    let t0 = Instant::now();
+    let compiled = (entry.compile)(cfg)?;
+    compiled.set_compile_time(t0.elapsed());
+    Ok(compiled)
+}
+
+/// [`compile_entry`] by registry name.
+pub fn compile_by_name(name: &str, cfg: &RunConfig) -> anyhow::Result<CompiledPipeline> {
+    let entry = find(name).ok_or_else(|| unknown_pipeline(name))?;
+    compile_entry(entry, cfg)
+}
+
+/// Materialize a payload: synthetic workloads re-derive the pipeline's
+/// deterministic dataset from `cfg`; anything else passes through.
+fn materialize(entry: &PipelineEntry, cfg: &RunConfig, payload: Workload) -> Workload {
+    match payload {
+        Workload::Synthetic => (entry.payload)(cfg),
+        w => w,
+    }
+}
+
+/// Execute a payload against an already-compiled graph under `cfg.exec`
+/// — the steady-state serving path: no graph rebuild, no warm
+/// round-trips, just a bind per plan instance. Mode semantics match
+/// [`run_plan`] / [`run_plan_with`] exactly:
+///
+/// * single-instance modes bind once (synthetic payloads materialize at
+///   the base seed);
+/// * `MultiInstance(n)` binds replica `i` at seed + i, with synthetic
+///   payloads re-derived per instance (distinct streams) and explicit
+///   payloads cloned;
+/// * `Sharded(n)` binds each shard to a **pre-sliced** payload
+///   ([`Workload::slice`] for per-item graphs; whole-to-shard-0 for
+///   single-state ones), so the redundant per-shard full source pass of
+///   the clone-based path disappears while the round-robin
+///   emission-index semantics — and therefore every metric — stay
+///   identical. The merge sink always binds against the full payload.
+pub fn run_compiled(
+    entry: &PipelineEntry,
+    compiled: &CompiledPipeline,
+    payload: Workload,
+    cfg: &RunConfig,
+) -> anyhow::Result<PipelineResult> {
+    let base = *cfg;
+    let outcome = match cfg.exec {
+        ExecMode::Sequential => {
+            exec::run_sequential(compiled.bind(materialize(entry, cfg, payload), cfg.seed)?)?
+        }
+        ExecMode::Streaming => exec::run_streaming(
+            compiled.bind(materialize(entry, cfg, payload), cfg.seed)?,
+            exec::DEFAULT_QUEUE_CAP,
+        )?,
+        ExecMode::Async(workers) => exec::run_async(
+            compiled.bind(materialize(entry, cfg, payload), cfg.seed)?,
+            workers,
+        )?,
+        ExecMode::MultiInstance(n) => exec::run_multi_instance(n, |instance| {
+            let mut instance_cfg = base;
+            instance_cfg.seed = base.seed.wrapping_add(instance as u64);
+            let instance_payload = match &payload {
+                Workload::Synthetic => (entry.payload)(&instance_cfg),
+                w => w.clone(),
+            };
+            compiled.bind(instance_payload, instance_cfg.seed)
+        })?,
+        ExecMode::Sharded(n) => {
+            let full = materialize(entry, cfg, payload);
+            exec::run_sharded(n, |s| {
+                let sharder = Sharder::new(s, n);
+                let slice = match compiled.slicing() {
+                    Slicing::PerItem => full.slice(s, n),
+                    Slicing::SingleState => {
+                        if s == 0 {
+                            full.clone()
+                        } else {
+                            full.empty_like()
+                        }
+                    }
+                };
+                compiled.bind_shard(slice, sharder, &full, cfg.seed)
+            })?
+        }
+    };
+    Ok(finish_outcome(outcome))
+}
+
+/// Compile + execute one registry entry over its synthetic payload —
+/// what `run_by_name` and each pipeline's `run` convenience call. One
+/// compile per call (the one-shot cost profile); long-lived callers
+/// hold a `Session` and reuse its compiled graph instead.
+pub fn run_entry(entry: &PipelineEntry, cfg: &RunConfig) -> anyhow::Result<PipelineResult> {
+    let compiled = compile_entry(entry, cfg)?;
+    run_compiled(entry, &compiled, Workload::Synthetic, cfg)
 }
 
 /// Fold an executor outcome into a [`PipelineResult`], appending the
@@ -266,11 +388,14 @@ pub(crate) fn finish_outcome(outcome: ExecOutcome) -> PipelineResult {
 pub struct PipelineEntry {
     pub name: &'static str,
     pub description: &'static str,
-    /// One-shot plan over the synthetic payload — the single definition
-    /// of the pipeline.
+    /// One-shot plan over the synthetic payload (compile + bind fused;
+    /// the graph definition itself lives in `compile`).
     pub plan: PlanFn,
-    /// Plan over a supplied payload (the serving path).
+    /// One-shot plan over a supplied payload (compile + bind fused).
     pub plan_with: PayloadPlanFn,
+    /// Compile the reusable stage graph — the serving path: sessions
+    /// compile once at open and bind every request to it.
+    pub compile: CompileFn,
     /// Synthetic payload generator (what `plan` feeds `plan_with`).
     pub payload: PayloadFn,
     /// Typed projection of a finished run's metrics.
@@ -293,6 +418,7 @@ static REGISTRY: [PipelineEntry; 8] = [
         description: "Ridge regression over synthetic IPUMS-like census data",
         plan: census::plan,
         plan_with: census::plan_with,
+        compile: census::compile,
         payload: census::payload,
         output: census::output,
         warm: warm_none,
@@ -303,6 +429,7 @@ static REGISTRY: [PipelineEntry; 8] = [
         description: "GBT classification of synthetic LSST light curves",
         plan: plasticc::plan,
         plan_with: plasticc::plan_with,
+        compile: plasticc::compile,
         payload: plasticc::payload,
         output: plasticc::output,
         warm: warm_none,
@@ -313,6 +440,7 @@ static REGISTRY: [PipelineEntry; 8] = [
         description: "Random-forest failure prediction on a wide sensor table",
         plan: iiot::plan,
         plan_with: iiot::plan_with,
+        compile: iiot::compile,
         payload: iiot::payload,
         output: iiot::output,
         warm: warm_none,
@@ -323,6 +451,7 @@ static REGISTRY: [PipelineEntry; 8] = [
         description: "BERT-tiny document sentiment over synthetic reviews",
         plan: dlsa::plan,
         plan_with: dlsa::plan_with,
+        compile: dlsa::compile,
         payload: dlsa::payload,
         output: dlsa::output,
         warm: dlsa::warm,
@@ -333,6 +462,7 @@ static REGISTRY: [PipelineEntry; 8] = [
         description: "DIEN CTR inference over a synthetic JSON review log",
         plan: dien::plan,
         plan_with: dien::plan_with,
+        compile: dien::compile,
         payload: dien::payload,
         output: dien::output,
         warm: dien::warm,
@@ -343,6 +473,7 @@ static REGISTRY: [PipelineEntry; 8] = [
         description: "Decode → SSD detection → NMS → metadata upload",
         plan: video_streamer::plan,
         plan_with: video_streamer::plan_with,
+        compile: video_streamer::compile,
         payload: video_streamer::payload,
         output: video_streamer::output,
         warm: video_streamer::warm,
@@ -353,6 +484,7 @@ static REGISTRY: [PipelineEntry; 8] = [
         description: "ResNet features + PCA + Gaussian anomaly scoring",
         plan: anomaly::plan,
         plan_with: anomaly::plan_with,
+        compile: anomaly::compile,
         payload: anomaly::payload,
         output: anomaly::output,
         warm: anomaly::warm,
@@ -363,6 +495,7 @@ static REGISTRY: [PipelineEntry; 8] = [
         description: "SSD face detect → ResNet embed → gallery match",
         plan: face::plan,
         plan_with: face::plan_with,
+        compile: face::compile,
         payload: face::payload,
         output: face::output,
         warm: face::warm,
@@ -391,10 +524,11 @@ pub(crate) fn unknown_pipeline(name: &str) -> anyhow::Error {
     anyhow::anyhow!("unknown pipeline: {name} (known: {})", names().join(", "))
 }
 
-/// Run a pipeline by name under `cfg.exec`.
+/// Run a pipeline by name under `cfg.exec` (compile + bind + execute;
+/// sharded runs use payload-aware slicing via [`run_compiled`]).
 pub fn run_by_name(name: &str, cfg: &RunConfig) -> anyhow::Result<PipelineResult> {
     let entry = find(name).ok_or_else(|| unknown_pipeline(name))?;
-    run_plan(entry.plan, cfg)
+    run_entry(entry, cfg)
 }
 
 #[cfg(test)]
@@ -544,6 +678,57 @@ mod tests {
         let served = run_plan_with(e.plan_with, (e.payload)(&seq_cfg), &cfg).unwrap();
         assert_eq!(served.metrics, seq.metrics);
         assert_eq!(served.items, seq.items);
+    }
+
+    #[test]
+    fn compiled_graphs_bind_repeatedly_with_identical_metrics() {
+        // One compile, three binds: metrics never move, the bind
+        // report counts exactly what happened, and the compiled path
+        // answers like the one-shot plan_with path.
+        let cfg = RunConfig { scale: 0.05, seed: 31, ..Default::default() };
+        for name in ["census", "plasticc", "iiot"] {
+            let e = find(name).unwrap();
+            let compiled = compile_entry(e, &cfg).unwrap();
+            let payload = (e.payload)(&cfg);
+            let a = run_compiled(e, &compiled, payload.clone(), &cfg).unwrap();
+            let b = run_compiled(e, &compiled, payload.clone(), &cfg).unwrap();
+            let c = run_compiled(e, &compiled, payload, &cfg).unwrap();
+            assert_eq!(a.metrics, b.metrics, "{name}");
+            assert_eq!(b.metrics, c.metrics, "{name}");
+            let br = compiled.bind_report();
+            assert_eq!(br.compiles, 1, "{name}");
+            assert_eq!(br.binds, 3, "{name}");
+            assert_eq!(br.rebuilds_avoided(), 2, "{name}");
+            let direct = run_plan_with(e.plan_with, (e.payload)(&cfg), &cfg).unwrap();
+            assert_eq!(a.metrics, direct.metrics, "{name}");
+            assert_eq!(a.items, direct.items, "{name}");
+        }
+    }
+
+    #[test]
+    fn sliced_sharded_compiled_runs_match_clone_based_sharding() {
+        // The artifact-free slice == clone pin (the full eight-pipeline
+        // matrix lives in the executor-equivalence suite): payload-aware
+        // slicing must reproduce clone-based sharding's metrics, items,
+        // and per-shard ownership exactly.
+        let cfg = RunConfig { scale: 0.05, seed: 31, ..Default::default() };
+        let shard_cfg = RunConfig { exec: ExecMode::Sharded(3), ..cfg };
+        for name in ["census", "plasticc", "iiot"] {
+            let e = find(name).unwrap();
+            let payload = (e.payload)(&cfg);
+            let cloned = run_plan_with(e.plan_with, payload.clone(), &shard_cfg).unwrap();
+            let compiled = compile_entry(e, &cfg).unwrap();
+            let sliced = run_compiled(e, &compiled, payload, &shard_cfg).unwrap();
+            assert_eq!(sliced.metrics, cloned.metrics, "{name}");
+            assert_eq!(sliced.items, cloned.items, "{name}");
+            let a = sliced.sharding.expect("sliced run reports partitions");
+            let b = cloned.sharding.expect("cloned run reports partitions");
+            assert_eq!(a.shard_count(), b.shard_count(), "{name}");
+            for (x, y) in a.shards.iter().zip(&b.shards) {
+                assert_eq!(x.owned, y.owned, "{name} shard {}", x.shard);
+                assert_eq!(x.completed, y.completed, "{name} shard {}", x.shard);
+            }
+        }
     }
 
     #[test]

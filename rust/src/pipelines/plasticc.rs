@@ -11,7 +11,8 @@
 //! variability (transients vs periodic), so per-object flux statistics
 //! are genuinely discriminative and the GBT accuracy is a real metric.
 
-use super::{Output, PipelineResult, RunConfig, Workload};
+use super::{CompiledPipeline, Output, PipelineResult, RunConfig, Workload};
+use crate::coordinator::plan::{CompiledPlan, Slicing, WorkloadSlice};
 use crate::coordinator::telemetry::Category;
 use crate::coordinator::{Plan, PlanOutput};
 use crate::dataframe::{self as df, groupby::Agg, DType, DataFrame, Engine, Expr};
@@ -82,53 +83,71 @@ pub fn plan(cfg: &RunConfig) -> anyhow::Result<Plan> {
     plan_with(cfg, Workload::Synthetic)
 }
 
-/// Build the PLAsTiCC plan over a supplied payload.
+/// Build the PLAsTiCC plan over a supplied payload (one-shot shim over
+/// [`compile`] + bind).
 pub fn plan_with(cfg: &RunConfig, workload: Workload) -> anyhow::Result<Plan> {
-    let (csv, labels) = match workload {
-        Workload::Synthetic => generate_csv(cfg.scaled(300, 24), EPOCHS, cfg.seed),
-        Workload::LightCurves { csv, targets } => (csv, targets),
-        other => return Err(super::workload_mismatch("plasticc", "light_curves", &other)),
+    let payload = match workload {
+        Workload::Synthetic => payload(cfg),
+        w => w,
     };
-    // One observation row per line after the header.
-    let observations = csv.lines().count().saturating_sub(1);
-    let engine: Engine = cfg.toggles.dataframe.into();
-    let mut initial = Some(State {
-        csv,
-        labels,
-        frame: DataFrame::new(),
-        features: DataFrame::new(),
-        engine,
-        ml: cfg.toggles.ml,
-        seed: cfg.seed,
-        x_train: Matrix::zeros(0, 0),
-        y_train: vec![],
-        x_test: Matrix::zeros(0, 0),
-        y_test: vec![],
-        pred: vec![],
-        proba: vec![],
-    });
+    compile(cfg)?.bind(payload, cfg.seed)
+}
 
-    Ok(Plan::source("plasticc", "source", Category::Pre, move |emit| {
-        if let Some(state) = initial.take() {
-            emit(state);
-        }
-    })
-    .map("load_data", Category::Pre, |mut s: State| {
+/// Compile the PLAsTiCC stage graph once; binds accept a
+/// [`Workload::LightCurves`] payload (single-state tabular shape).
+pub fn compile(cfg: &RunConfig) -> anyhow::Result<CompiledPipeline> {
+    let engine: Engine = cfg.toggles.dataframe.into();
+    let ml = cfg.toggles.ml;
+    Ok(CompiledPlan::source(
+        "plasticc",
+        "source",
+        Category::Pre,
+        Slicing::SingleState,
+        move |slice: WorkloadSlice<Workload>| {
+            let (csv, labels) = match slice.payload {
+                Workload::LightCurves { csv, targets } => (csv, targets),
+                other => {
+                    return Err(super::workload_mismatch("plasticc", "light_curves", &other))
+                }
+            };
+            let mut initial = Some(State {
+                csv,
+                labels,
+                frame: DataFrame::new(),
+                features: DataFrame::new(),
+                engine,
+                ml,
+                seed: slice.seed,
+                x_train: Matrix::zeros(0, 0),
+                y_train: vec![],
+                x_test: Matrix::zeros(0, 0),
+                y_test: vec![],
+                pred: vec![],
+                proba: vec![],
+            });
+            Ok(move |emit: &mut dyn FnMut(State)| {
+                if let Some(state) = initial.take() {
+                    emit(state);
+                }
+            })
+        },
+    )
+    .map("load_data", Category::Pre, |_seed| |mut s: State| {
         s.frame = df::csv::read_str(&s.csv, s.engine)?;
         s.csv.clear();
         Ok(s)
     })
-    .map("drop_columns", Category::Pre, |mut s| {
+    .map("drop_columns", Category::Pre, |_seed| |mut s: State| {
         s.frame = s.frame.drop_cols(&["mjd", "detected"]);
         Ok(s)
     })
-    .map("arithmetic_ops", Category::Pre, |mut s| {
+    .map("arithmetic_ops", Category::Pre, |_seed| |mut s: State| {
         // SNR column feeds the aggregations.
         let snr = Expr::col("flux").div(Expr::col("flux_err"));
         s.frame = df::ops::with_column(&s.frame, "snr", &snr, s.engine)?;
         Ok(s)
     })
-    .map("groupby_aggregation", Category::Pre, |mut s| {
+    .map("groupby_aggregation", Category::Pre, |_seed| |mut s: State| {
         s.features = df::groupby::groupby_agg(
             &s.frame,
             &["object_id"],
@@ -146,11 +165,11 @@ pub fn plan_with(cfg: &RunConfig, workload: Workload) -> anyhow::Result<Plan> {
         s.frame = DataFrame::new();
         Ok(s)
     })
-    .map("type_conversion", Category::Pre, |mut s| {
+    .map("type_conversion", Category::Pre, |_seed| |mut s: State| {
         s.features = df::ops::astype(&s.features, "object_id", DType::I64, s.engine)?;
         Ok(s)
     })
-    .map("train_test_split", Category::Pre, |mut s| {
+    .map("train_test_split", Category::Pre, |_seed| |mut s: State| {
         // Features come out grouped by object id (0..objects); attach
         // labels then split.
         let n = s.features.nrows();
@@ -200,7 +219,7 @@ pub fn plan_with(cfg: &RunConfig, workload: Workload) -> anyhow::Result<Plan> {
         s.y_test = ys;
         Ok(s)
     })
-    .map("gbt_train_infer", Category::Ai, |mut s| {
+    .map("gbt_train_infer", Category::Ai, |_seed| |mut s: State| {
         let method = match s.ml {
             OptLevel::Baseline => TreeMethod::Exact,
             OptLevel::Optimized => TreeMethod::Hist,
@@ -214,28 +233,33 @@ pub fn plan_with(cfg: &RunConfig, workload: Workload) -> anyhow::Result<Plan> {
         s.proba = gbt.predict_proba(&s.x_test);
         Ok(s)
     })
-    .sink(
-        "finalize",
-        Category::Post,
-        None,
-        |slot: &mut Option<State>, s: State| {
-            *slot = Some(s);
-            Ok(())
-        },
-        move |slot| {
-            let state =
-                slot.ok_or_else(|| anyhow::anyhow!("plasticc pipeline produced no result"))?;
-            let mut m = BTreeMap::new();
-            m.insert("accuracy".to_string(), metrics::accuracy(&state.y_test, &state.pred));
-            m.insert("auc".to_string(), metrics::auc(&state.y_test, &state.proba));
-            Ok(PlanOutput { metrics: m, items: observations })
-        },
-    ))
+    .sink("finalize", Category::Post, move |payload: &Workload, _seed| {
+        // One observation row per line after the header.
+        let observations = match payload {
+            Workload::LightCurves { csv, .. } => csv.lines().count().saturating_sub(1),
+            other => return Err(super::workload_mismatch("plasticc", "light_curves", other)),
+        };
+        Ok((
+            None,
+            |slot: &mut Option<State>, s: State| {
+                *slot = Some(s);
+                Ok(())
+            },
+            move |slot: Option<State>| {
+                let state = slot
+                    .ok_or_else(|| anyhow::anyhow!("plasticc pipeline produced no result"))?;
+                let mut m = BTreeMap::new();
+                m.insert("accuracy".to_string(), metrics::accuracy(&state.y_test, &state.pred));
+                m.insert("auc".to_string(), metrics::auc(&state.y_test, &state.proba));
+                Ok(PlanOutput { metrics: m, items: observations })
+            },
+        ))
+    }))
 }
 
 /// Run the PLAsTiCC pipeline under `cfg.exec`.
 pub fn run(cfg: &RunConfig) -> anyhow::Result<PipelineResult> {
-    super::run_plan(plan, cfg)
+    super::run_entry(super::find("plasticc").expect("plasticc is registered"), cfg)
 }
 
 /// Typed projection of a PLAsTiCC run's metrics (no F1 is computed for

@@ -57,6 +57,17 @@ pub enum Workload {
     Parts { train: Vec<Part>, test: Vec<Part> },
 }
 
+/// Round-robin sub-selection of a vector: the items whose index the
+/// `shard/of` partition owns, in index order.
+fn round_robin<T: Clone>(items: &[T], shard: usize, of: usize) -> Vec<T> {
+    items
+        .iter()
+        .enumerate()
+        .filter(|(i, _)| i % of == shard)
+        .map(|(_, t)| t.clone())
+        .collect()
+}
+
 impl Workload {
     /// Short label for the variant, used in mismatch errors and reports.
     pub fn kind(&self) -> &'static str {
@@ -68,6 +79,68 @@ impl Workload {
             Workload::ReviewLog { .. } => "review_log",
             Workload::Video { .. } => "video",
             Workload::Parts { .. } => "parts",
+        }
+    }
+
+    /// The payload-empty twin of this variant: what a non-owning shard
+    /// of a single-state pipeline binds its (discarded) sink against.
+    pub fn empty_like(&self) -> Workload {
+        match self {
+            Workload::Synthetic => Workload::Synthetic,
+            Workload::Table { .. } => Workload::Table { csv: String::new() },
+            Workload::LightCurves { .. } => {
+                Workload::LightCurves { csv: String::new(), targets: Vec::new() }
+            }
+            Workload::Documents { .. } => {
+                Workload::Documents { docs: Vec::new(), labels: Vec::new() }
+            }
+            Workload::ReviewLog { .. } => Workload::ReviewLog { json: String::new() },
+            Workload::Video { .. } => Workload::Video { frames: Vec::new() },
+            Workload::Parts { .. } => Workload::Parts { train: Vec::new(), test: Vec::new() },
+        }
+    }
+
+    /// Shard `shard` of `of`'s slice of this payload, for the per-item
+    /// pipelines (`Documents`, `Video`): the round-robin subset of the
+    /// payload's items, by emission index — the bit-identical payload
+    /// analogue of filtering the full stream with a
+    /// [`Sharder`](crate::coordinator::Sharder). More shards than items
+    /// yields explicit EMPTY slices (never fewer shards), so the
+    /// partition always covers the payload and per-shard reports stay
+    /// index-complete. Labels slice in lockstep with their items;
+    /// single-payload variants (tables, logs, light curves, part sets —
+    /// whose plans emit one state item that round-robin assigns to
+    /// shard 0) slice to the whole payload on shard 0 and to
+    /// [`Self::empty_like`] elsewhere.
+    pub fn slice(&self, shard: usize, of: usize) -> Workload {
+        assert!(of >= 1, "slicing needs at least one shard");
+        assert!(shard < of, "shard index {shard} out of range for {of} shards");
+        match self {
+            Workload::Documents { docs, labels } => Workload::Documents {
+                docs: round_robin(docs, shard, of),
+                labels: round_robin(labels, shard, of),
+            },
+            Workload::Video { frames } => {
+                Workload::Video { frames: round_robin(frames, shard, of) }
+            }
+            single_state => {
+                if shard == 0 {
+                    single_state.clone()
+                } else {
+                    single_state.empty_like()
+                }
+            }
+        }
+    }
+
+    /// How many source items this payload carries for the per-item
+    /// pipelines (`None` for the single-payload variants, whose item
+    /// counts are pipeline-defined).
+    pub fn item_count(&self) -> Option<usize> {
+        match self {
+            Workload::Documents { docs, .. } => Some(docs.len()),
+            Workload::Video { frames } => Some(frames.len()),
+            _ => None,
         }
     }
 }
@@ -154,6 +227,93 @@ mod tests {
         assert!(msg.contains("census"), "{msg}");
         assert!(msg.contains("table"), "{msg}");
         assert!(msg.contains("synthetic"), "{msg}");
+    }
+
+    #[test]
+    fn documents_slice_round_robin_with_labels_in_lockstep() {
+        let docs: Vec<String> = (0..7).map(|i| format!("doc{i}")).collect();
+        let labels: Vec<i64> = (0..7).collect();
+        let payload = Workload::Documents { docs, labels };
+        let mut seen = Vec::new();
+        for shard in 0..3usize {
+            match payload.slice(shard, 3) {
+                Workload::Documents { docs, labels } => {
+                    assert_eq!(docs.len(), labels.len(), "shard {shard}");
+                    for (d, &l) in docs.iter().zip(&labels) {
+                        // Pairing survives slicing: doc{i} keeps label i,
+                        // and i belongs to this shard's partition.
+                        assert_eq!(d, &format!("doc{l}"), "shard {shard}");
+                        assert_eq!(l as usize % 3, shard, "shard {shard}");
+                        seen.push(l);
+                    }
+                }
+                other => panic!("slice changed variant: {}", other.kind()),
+            }
+        }
+        seen.sort_unstable();
+        assert_eq!(seen, (0..7).collect::<Vec<i64>>(), "slices must cover the payload");
+    }
+
+    #[test]
+    fn slice_with_more_shards_than_items_yields_explicit_empty_shards() {
+        // The empty-shard edge: 2 docs over 4 shards still produces 4
+        // slices — shards 2 and 3 explicitly own nothing, so sharded
+        // reports keep one entry per shard and partition-cover holds.
+        let payload = Workload::Documents {
+            docs: vec!["a".into(), "b".into()],
+            labels: vec![1, 0],
+        };
+        let mut total = 0usize;
+        for shard in 0..4usize {
+            let slice = payload.slice(shard, 4);
+            let n = slice.item_count().expect("documents are per-item");
+            if shard >= 2 {
+                assert_eq!(n, 0, "shard {shard} must be explicitly empty");
+            } else {
+                assert_eq!(n, 1, "shard {shard}");
+            }
+            total += n;
+        }
+        assert_eq!(total, 2, "empty shards included, the slices cover the payload");
+        // Same edge for video frames.
+        let video = Workload::Video { frames: Vec::new() };
+        for shard in 0..3usize {
+            assert_eq!(video.slice(shard, 3).item_count(), Some(0));
+        }
+    }
+
+    #[test]
+    fn single_payload_variants_slice_whole_to_shard_zero() {
+        let table = Workload::Table { csv: "h\n1\n".into() };
+        match table.slice(0, 3) {
+            Workload::Table { csv } => assert_eq!(csv, "h\n1\n"),
+            other => panic!("slice changed variant: {}", other.kind()),
+        }
+        for shard in 1..3usize {
+            match table.slice(shard, 3) {
+                Workload::Table { csv } => assert!(csv.is_empty(), "shard {shard}"),
+                other => panic!("slice changed variant: {}", other.kind()),
+            }
+        }
+        // empty_like preserves the variant for every kind.
+        let kinds = [
+            Workload::Synthetic,
+            Workload::Table { csv: "x".into() },
+            Workload::LightCurves { csv: "x".into(), targets: vec![1.0] },
+            Workload::Documents { docs: vec!["d".into()], labels: vec![] },
+            Workload::ReviewLog { json: "{}".into() },
+            Workload::Video { frames: vec![] },
+            Workload::Parts { train: vec![], test: vec![] },
+        ];
+        for w in &kinds {
+            assert_eq!(w.empty_like().kind(), w.kind());
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn slice_rejects_out_of_range_shard() {
+        let _ = Workload::Synthetic.slice(2, 2);
     }
 
     #[test]

@@ -13,7 +13,7 @@ pub mod server;
 
 pub use engine::{Engine, EngineError};
 pub use manifest::{Manifest, ModelSpec, TensorSpec};
-pub use server::{ModelClient, ModelServer};
+pub use server::{warm_rpc_count, ModelClient, ModelServer};
 pub use tensor::Tensor;
 
 /// Default artifacts directory: `$REPRO_ARTIFACTS` or `./artifacts`.

@@ -13,8 +13,21 @@ use super::engine::{Engine, EngineError};
 use super::tensor::Tensor;
 use crate::parallel::channel::{bounded, Sender};
 use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
 use std::thread::JoinHandle;
+
+/// Process-wide count of warm round-trips through any [`ModelClient`]
+/// (`warmup` / `warmup_chain` calls — each is one blocking trip through
+/// a server queue). The compile-once serving contract is "warm at
+/// session open, never per request": soaks snapshot this counter around
+/// their steady-state window and assert the delta is zero.
+static WARM_RPCS: AtomicU64 = AtomicU64::new(0);
+
+/// Current value of the process-wide warm round-trip counter.
+pub fn warm_rpc_count() -> u64 {
+    WARM_RPCS.load(Ordering::Relaxed)
+}
 
 enum Request {
     Run {
@@ -167,6 +180,7 @@ impl ModelClient {
     /// Pre-compile every stage of an unfused chain before serving; the
     /// chain is resolved against the manifest on the server thread.
     pub fn warmup_chain(&self, chain: &str) -> Result<(), EngineError> {
+        WARM_RPCS.fetch_add(1, Ordering::Relaxed);
         let (reply, rx) = mpsc::sync_channel(1);
         self.tx
             .send(Request::WarmupChain { chain: chain.to_string(), reply })
@@ -192,6 +206,7 @@ impl ModelClient {
 
     /// Pre-compile models before serving.
     pub fn warmup(&self, models: &[&str]) -> Result<(), EngineError> {
+        WARM_RPCS.fetch_add(1, Ordering::Relaxed);
         let (reply, rx) = mpsc::sync_channel(1);
         self.tx
             .send(Request::Warmup {

@@ -8,8 +8,12 @@
 //! the way tf.data and BigDL do:
 //!
 //! * a [`Session`] is one pipeline **opened once**: its typed handles
-//!   from the registry, its `RunConfig`, and its warm [`ModelClient`]
-//!   (models pre-compiled at open, so requests never pay compile cost);
+//!   from the registry, its `RunConfig`, its warm [`ModelClient`]
+//!   (models pre-compiled at open, so requests never pay compile cost),
+//!   and its [`CompiledPipeline`] stage graph (compiled at open, so
+//!   steady-state requests perform ZERO plan-graph rebuilds and ZERO
+//!   warm round-trips — each request is a cheap bind, accounted in
+//!   [`Session::bind_report`]);
 //! * a [`PipelineService`] is a set of sessions behind a shared
 //!   [`AdmissionQueue`]: callers [`submit`](PipelineService::submit)
 //!   typed [`Request`]s ({pipeline, payload, priority, deadline}) and
@@ -55,9 +59,11 @@ use crate::coordinator::router::AdmissionQueue;
 pub use crate::coordinator::router::{Priority, QueueStats};
 use crate::coordinator::scaler::{InstanceReport, ScalingReport};
 use crate::coordinator::sched::{Scheduler, WaitGroup};
-use crate::coordinator::telemetry::SchedReport;
+use crate::coordinator::telemetry::{BindReport, SchedReport};
 use crate::coordinator::ExecMode;
-use crate::pipelines::{self, Output, PipelineEntry, PipelineResult, RunConfig, Workload};
+use crate::pipelines::{
+    self, CompiledPipeline, Output, PipelineEntry, PipelineResult, RunConfig, Workload,
+};
 use crate::runtime::ModelClient;
 use std::collections::BTreeMap;
 use std::sync::{mpsc, Arc, Mutex};
@@ -250,22 +256,28 @@ impl Ticket {
 }
 
 /// One pipeline opened for serving: typed registry handles + config +
-/// warm model client. Opening a session pre-compiles the pipeline's
-/// model set; executing it builds a plan over the supplied payload only.
+/// warm model client + the pipeline's [`CompiledPipeline`], compiled
+/// ONCE at open. Executing a request binds its payload to the cached
+/// graph — steady state performs zero graph rebuilds and zero warm
+/// round-trips, which [`Session::bind_report`] makes observable from
+/// counters.
 pub struct Session {
     entry: &'static PipelineEntry,
     cfg: RunConfig,
     client: Option<ModelClient>,
+    compiled: CompiledPipeline,
 }
 
 impl Session {
-    /// Open (and warm) one pipeline. Unknown names error with the list
-    /// of registered pipelines; missing artifacts error like the plan
+    /// Open (and warm) one pipeline: model set warms and the stage
+    /// graph compiles here, once. Unknown names error with the list of
+    /// registered pipelines; missing artifacts error like the plan
     /// builders do.
     pub fn open(name: &str, cfg: RunConfig) -> anyhow::Result<Session> {
         let entry = pipelines::find(name).ok_or_else(|| pipelines::unknown_pipeline(name))?;
         let client = (entry.warm)(&cfg)?;
-        Ok(Session { entry, cfg, client })
+        let compiled = pipelines::compile_entry(entry, &cfg)?;
+        Ok(Session { entry, cfg, client, compiled })
     }
 
     /// The pipeline's registry name.
@@ -283,6 +295,18 @@ impl Session {
         self.client.as_ref()
     }
 
+    /// The session's compiled stage graph.
+    pub fn compiled(&self) -> &CompiledPipeline {
+        &self.compiled
+    }
+
+    /// Build-vs-bind accounting for this session: `compiles` stays 1
+    /// for the session's lifetime while `binds` grows with requests —
+    /// the zero-rebuild steady-state assertion, from counters.
+    pub fn bind_report(&self) -> BindReport {
+        self.compiled.bind_report()
+    }
+
     /// Synthesize this pipeline's deterministic payload once; callers
     /// can then execute it repeatedly without paying generation cost.
     pub fn payload(&self) -> Workload {
@@ -290,19 +314,21 @@ impl Session {
     }
 
     /// Execute one payload on the calling thread (bypassing any queue)
-    /// under the session's executor; returns the full result and its
-    /// typed output projection.
+    /// under the session's executor: bind to the session's compiled
+    /// graph + run. No graph rebuild, no warm round-trips; sharded
+    /// sessions bind each shard to a pre-sliced payload. Returns the
+    /// full result and its typed output projection.
     pub fn execute(&self, payload: Workload) -> anyhow::Result<(PipelineResult, Output)> {
-        let result = pipelines::run_plan_with(self.entry.plan_with, payload, &self.cfg)?;
+        let result = pipelines::run_compiled(self.entry, &self.compiled, payload, &self.cfg)?;
         let output = (self.entry.output)(&result);
         Ok((result, output))
     }
 
-    /// Build this session's plan over `payload` and spawn it on a
-    /// shared cooperative scheduler pool WITHOUT blocking: `on_done`
-    /// fires exactly once — on normal completion, on the plan's first
-    /// error, on a contained stage panic, and also when the plan itself
-    /// cannot be built (bad payload, missing artifact) — with the typed
+    /// Bind `payload` to this session's compiled graph and spawn the
+    /// plan on a shared cooperative scheduler pool WITHOUT blocking:
+    /// `on_done` fires exactly once — on normal completion, on the
+    /// plan's first error, on a contained stage panic, and also when
+    /// the payload cannot be bound (wrong variant) — with the typed
     /// result. This is how an async service dispatcher multiplexes many
     /// requests on one pool.
     pub fn execute_async_on(
@@ -311,7 +337,11 @@ impl Session {
         sched: &Scheduler,
         on_done: impl FnOnce(anyhow::Result<(PipelineResult, Output)>) + Send + 'static,
     ) {
-        match (self.entry.plan_with)(&self.cfg, payload) {
+        let payload = match payload {
+            Workload::Synthetic => (self.entry.payload)(&self.cfg),
+            w => w,
+        };
+        match self.compiled.bind(payload, self.cfg.seed) {
             Ok(plan) => {
                 let project = self.entry.output;
                 exec::spawn_async_on(plan, sched, move |outcome| {
@@ -579,6 +609,24 @@ impl PipelineService {
     /// assert pool behavior without timing.
     pub fn scheduler_counters(&self) -> Option<SchedReport> {
         self.sched.as_ref().map(|s| s.counters())
+    }
+
+    /// Per-session build-vs-bind accounting, sorted by pipeline name:
+    /// `compiles` stays at one per session however many requests the
+    /// soak pushes, and `binds` counts the payload bindings — the
+    /// zero-per-request-rebuild claim as counters, never timing.
+    pub fn bind_reports(&self) -> Vec<(&str, BindReport)> {
+        self.sessions.iter().map(|(n, s)| (n.as_str(), s.bind_report())).collect()
+    }
+
+    /// Every session's [`BindReport`] merged — the service-wide
+    /// amortization factor (requests served per graph build).
+    pub fn bind_report_total(&self) -> BindReport {
+        let mut total = BindReport::default();
+        for s in self.sessions.values() {
+            total.merge(&s.bind_report());
+        }
+        total
     }
 
     /// Per-request latency percentiles through the existing scaling
@@ -877,6 +925,57 @@ mod tests {
         assert_eq!(c.result.items, seq_result.items);
         let sharding = c.result.sharding.as_ref().expect("sharded run reports partitions");
         assert_eq!(sharding.shard_count(), 2);
+    }
+
+    #[test]
+    fn sessions_compile_once_and_bind_per_request() {
+        // The cross-request plan-reuse seam, closed: a session compiles
+        // its stage graph at open, and every request after that is a
+        // bind — `compiles` frozen at 1, `binds` == served requests.
+        let svc = PipelineService::open(
+            &["census"],
+            ServiceConfig { defaults: tiny(), ..Default::default() },
+        )
+        .unwrap();
+        let before = svc.bind_reports();
+        assert_eq!(before.len(), 1);
+        assert_eq!(before[0].0, "census");
+        assert_eq!(before[0].1.compiles, 1);
+        assert_eq!(before[0].1.binds, 0, "open alone binds nothing");
+        for _ in 0..5 {
+            let resp = svc.call(Request::synthetic("census")).unwrap();
+            assert!(resp.completion().is_some());
+        }
+        let after = svc.bind_report_total();
+        assert_eq!(after.compiles, 1, "steady state never recompiles");
+        assert_eq!(after.binds, 5, "one bind per served request");
+        assert_eq!(after.rebuilds_avoided(), 4);
+        assert!((after.binds_per_compile() - 5.0).abs() < 1e-12);
+        // Direct session execution binds the same cached graph.
+        let session = Session::open("census", tiny()).unwrap();
+        assert_eq!(session.bind_report().binds, 0);
+        let payload = session.payload();
+        session.execute(payload.clone()).unwrap();
+        session.execute(payload).unwrap();
+        let br = session.bind_report();
+        assert_eq!(br.compiles, 1);
+        assert_eq!(br.binds, 2);
+        assert!(session.compiled().warm_models().is_empty(), "census declares no models");
+    }
+
+    #[test]
+    fn sharded_sessions_bind_per_shard_with_sliced_payloads() {
+        // A sharded request binds one pass plan per shard (plus the
+        // merge sink's shard-0 bind carries the full payload), all from
+        // the one compiled graph — still zero recompiles.
+        use crate::coordinator::ExecMode;
+        let sharded_cfg = RunConfig { exec: ExecMode::Sharded(3), ..tiny() };
+        let session = Session::open("census", sharded_cfg).unwrap();
+        let (result, _) = session.execute(Workload::Synthetic).unwrap();
+        assert_eq!(result.sharding.as_ref().map(|s| s.shard_count()), Some(3));
+        let br = session.bind_report();
+        assert_eq!(br.compiles, 1);
+        assert_eq!(br.binds, 3, "one shard bind per shard");
     }
 
     #[test]

@@ -14,11 +14,24 @@
 //! the merge-streaming counter is asserted deterministically — via
 //! scheduler counters, never timing.
 //!
+//! Since the compile/bind split, the matrix runs twice: once through
+//! the one-shot plan builders (every pipeline's `e.run` now compiles +
+//! binds per call, with sharded runs binding pre-sliced payloads) and
+//! once through an explicitly REUSED `CompiledPlan` — one graph build
+//! serving the whole executor ladder plus repeat binds, pinned
+//! metric-identical to the seed Sequential run with `BindReport`
+//! counting exactly one compile. Payload-aware sliced sharding is
+//! additionally pinned bit-identical to the clone-based
+//! `Plan::shard` path for all eight pipelines.
+//!
 //! Pipelines that execute model artifacts are skipped when `make
 //! artifacts` has not produced a manifest (the tabular three always run).
 
-use repro::coordinator::{exec, ExecMode};
-use repro::pipelines::{registry, run_by_name, PipelineResult, RunConfig, Toggles};
+use repro::coordinator::{exec, ExecMode, Sharder};
+use repro::pipelines::{
+    compile_entry, registry, run_by_name, run_compiled, run_plan_with, PipelineResult,
+    RunConfig, Toggles,
+};
 
 fn artifacts_ready() -> bool {
     repro::runtime::default_artifacts_dir().join("manifest.json").exists()
@@ -74,6 +87,156 @@ fn all_executors_produce_identical_metrics() {
             let other =
                 (e.run)(&cfg).unwrap_or_else(|err| panic!("{} {mode}: {err:#}", e.name));
             assert_metrics_match(e.name, mode, &seq, &other);
+        }
+    }
+}
+
+#[test]
+fn compiled_plan_conformance_matrix_and_reuse() {
+    // The tentpole acceptance matrix: for every runnable pipeline, ONE
+    // CompiledPlan serves the full conformance ladder — Sequential /
+    // Streaming / MultiInstance(1) / Sharded(1..=4, payload-aware
+    // slicing) / Async(1..=3) — all through CompiledPlan::bind, with
+    // metrics identical to the seed Sequential run; and binding the
+    // same graph repeatedly (3× sequential) never moves a metric while
+    // the BindReport counts exactly one compile.
+    for e in registry() {
+        if needs_artifacts(e.name) && !artifacts_ready() {
+            eprintln!("skipping {} (no artifacts)", e.name);
+            continue;
+        }
+        let mut cfg = base_cfg();
+        cfg.exec = ExecMode::Sequential;
+        let compiled = compile_entry(e, &cfg).unwrap();
+        let seq = run_compiled(e, &compiled, repro::pipelines::Workload::Synthetic, &cfg)
+            .unwrap_or_else(|err| panic!("{} compiled sequential: {err:#}", e.name));
+        // Reuse pin: the same compiled graph bound and executed twice
+        // more answers identically.
+        for round in 0..2 {
+            let again =
+                run_compiled(e, &compiled, repro::pipelines::Workload::Synthetic, &cfg)
+                    .unwrap();
+            assert_eq!(again.items, seq.items, "{} reuse round {round}", e.name);
+            for (k, v) in &seq.metrics {
+                if TIMING_METRICS.contains(&k.as_str()) {
+                    continue;
+                }
+                let w = again.metric(k).unwrap();
+                assert!(
+                    (v - w).abs() < 1e-12,
+                    "{}.{k} drifted on reuse round {round}: {v} vs {w}",
+                    e.name
+                );
+            }
+        }
+        for mode in conformance_modes() {
+            cfg.exec = mode;
+            let other =
+                run_compiled(e, &compiled, repro::pipelines::Workload::Synthetic, &cfg)
+                    .unwrap_or_else(|err| panic!("{} compiled {mode}: {err:#}", e.name));
+            assert_metrics_match(e.name, mode, &seq, &other);
+        }
+        let br = compiled.bind_report();
+        assert_eq!(br.compiles, 1, "{}: one graph build for the whole matrix", e.name);
+        assert!(br.binds >= 3 + conformance_modes().len(), "{}: {br:?}", e.name);
+    }
+}
+
+#[test]
+fn sliced_sharding_matches_clone_based_sharding_for_every_pipeline() {
+    // Payload-aware slicing (CompiledPlan::bind_shard over
+    // Workload::slice) must reproduce the clone-based path
+    // (plan_with + Plan::shard) exactly: metrics, items, and per-shard
+    // ownership, for all eight pipelines and shard counts 1..=4.
+    for e in registry() {
+        if needs_artifacts(e.name) && !artifacts_ready() {
+            continue;
+        }
+        let cfg = base_cfg();
+        let payload = (e.payload)(&cfg);
+        let compiled = compile_entry(e, &cfg).unwrap();
+        for n in 1..=4usize {
+            let mut shard_cfg = cfg;
+            shard_cfg.exec = ExecMode::Sharded(n);
+            let cloned = run_plan_with(e.plan_with, payload.clone(), &shard_cfg)
+                .unwrap_or_else(|err| panic!("{} cloned shard:{n}: {err:#}", e.name));
+            let sliced = run_compiled(e, &compiled, payload.clone(), &shard_cfg)
+                .unwrap_or_else(|err| panic!("{} sliced shard:{n}: {err:#}", e.name));
+            assert_eq!(sliced.items, cloned.items, "{} shard:{n}", e.name);
+            let keys: Vec<&String> = cloned.metrics.keys().collect();
+            let sliced_keys: Vec<&String> = sliced.metrics.keys().collect();
+            assert_eq!(keys, sliced_keys, "{} shard:{n}", e.name);
+            for (k, v) in &cloned.metrics {
+                if TIMING_METRICS.contains(&k.as_str()) {
+                    continue;
+                }
+                let w = sliced.metric(k).unwrap();
+                assert!(
+                    (v - w).abs() < 1e-12,
+                    "{}.{k} differs sliced vs cloned at shard:{n}: {v} vs {w}",
+                    e.name
+                );
+            }
+            let a = sliced.sharding.as_ref().expect("sliced run reports partitions");
+            let b = cloned.sharding.as_ref().expect("cloned run reports partitions");
+            assert_eq!(a.shard_count(), n, "{}", e.name);
+            assert_eq!(a.total_owned(), b.total_owned(), "{} shard:{n}", e.name);
+            for (x, y) in a.shards.iter().zip(&b.shards) {
+                assert_eq!(x.shard, y.shard, "{}", e.name);
+                assert_eq!(x.owned, y.owned, "{} shard:{n} shard {}", e.name, x.shard);
+                assert_eq!(
+                    x.completed, y.completed,
+                    "{} shard:{n} shard {}",
+                    e.name, x.shard
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn compiled_async_sharded_composition_binds_pre_sliced_shards() {
+    // The async × sharded composition through CompiledPlan::bind_shard:
+    // shard passes over pre-sliced payloads plus the streaming merge on
+    // a 2-worker pool, answering exactly like the seed Sequential run.
+    use repro::coordinator::Slicing;
+    for e in registry() {
+        if needs_artifacts(e.name) && !artifacts_ready() {
+            continue;
+        }
+        let cfg = base_cfg();
+        let seq = (e.run)(&cfg).unwrap();
+        let compiled = compile_entry(e, &cfg).unwrap();
+        let payload = (e.payload)(&cfg);
+        for n in [2usize, 3] {
+            let res = exec::run_sharded_async(n, 2, |s| {
+                let sharder = Sharder::new(s, n);
+                let slice = match compiled.slicing() {
+                    Slicing::PerItem => payload.slice(s, n),
+                    Slicing::SingleState => {
+                        if s == 0 {
+                            payload.clone()
+                        } else {
+                            payload.empty_like()
+                        }
+                    }
+                };
+                compiled.bind_shard(slice, sharder, &payload, cfg.seed)
+            })
+            .unwrap_or_else(|err| panic!("{} compiled async+shard:{n}: {err:#}", e.name));
+            assert_eq!(res.output.items, seq.items, "{} async+shard:{n}", e.name);
+            for (k, v) in &seq.metrics {
+                if TIMING_METRICS.contains(&k.as_str()) {
+                    continue;
+                }
+                let w = res.output.metrics[k];
+                assert!(
+                    (v - w).abs() < 1e-12,
+                    "{}.{k} differs under compiled async+shard:{n}: {v} vs {w}",
+                    e.name
+                );
+            }
+            assert!(res.sched.expect("counters").balanced(), "{} shard:{n}", e.name);
         }
     }
 }
@@ -252,8 +415,10 @@ fn async_composes_with_sharding_identically() {
         let cfg = base_cfg();
         let seq = (e.run)(&cfg).unwrap();
         for n in 1..=4usize {
-            let res = exec::run_sharded_async(n, 2, || (e.plan)(&cfg))
-                .unwrap_or_else(|err| panic!("{} async+shard:{n}: {err:#}", e.name));
+            let res = exec::run_sharded_async(n, 2, |s| {
+                (e.plan)(&cfg).map(|p| p.shard(Sharder::new(s, n)))
+            })
+            .unwrap_or_else(|err| panic!("{} async+shard:{n}: {err:#}", e.name));
             assert_eq!(res.output.items, seq.items, "{} async+shard:{n}", e.name);
             let keys: Vec<&String> = seq.metrics.keys().collect();
             let res_keys: Vec<&String> = res.output.metrics.keys().collect();
@@ -296,8 +461,10 @@ fn seeded_interleavings_stream_the_sharded_merge_for_registry_plans() {
     let seq = (e.run)(&seq_cfg).unwrap();
     let mut streamed_any = false;
     for seed in 0..20u64 {
-        let res = exec::run_sharded_seeded(3, seed, || (e.plan)(&cfg))
-            .unwrap_or_else(|err| panic!("seed {seed}: {err:#}"));
+        let res = exec::run_sharded_seeded(3, seed, |s| {
+            (e.plan)(&cfg).map(|p| p.shard(Sharder::new(s, 3)))
+        })
+        .unwrap_or_else(|err| panic!("seed {seed}: {err:#}"));
         assert_eq!(res.output.items, seq.items, "seed {seed}");
         for (k, v) in &seq.metrics {
             if TIMING_METRICS.contains(&k.as_str()) {

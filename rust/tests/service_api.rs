@@ -9,7 +9,11 @@
 //!   partial metrics — and high-priority requests displace queued
 //!   low-priority ones;
 //! * per-request latency lands in the `ScalingReport` machinery so the
-//!   soak reports the same p50/p95 quantities as the §3.4 bench.
+//!   soak reports the same p50/p95 quantities as the §3.4 bench;
+//! * steady state is compile-once: after a session opens, requests bind
+//!   the cached `CompiledPipeline` — zero plan-graph rebuilds and zero
+//!   warm round-trips, asserted from `BindReport` and the warm-RPC
+//!   counter (never timing).
 //!
 //! The tabular three need no artifacts, so the soak always runs; the
 //! DL session test degrades to a skip without `make artifacts`.
@@ -18,9 +22,20 @@ use repro::pipelines::{self, RunConfig, Toggles, Workload};
 use repro::service::{
     PipelineService, Priority, Request, Response, ServiceConfig, Session, ShedReason,
 };
+use std::sync::Mutex;
 use std::time::Duration;
 
 const TABULAR: [&str; 3] = ["census", "plasticc", "iiot"];
+
+/// Serializes the tests that either assert on the process-wide warm-RPC
+/// counter or issue warm round-trips (opening DL sessions), so the
+/// zero-warm steady-state window is never polluted by a concurrent
+/// session open in this binary.
+static WARM_WINDOW: Mutex<()> = Mutex::new(());
+
+fn warm_window_guard() -> std::sync::MutexGuard<'static, ()> {
+    WARM_WINDOW.lock().unwrap_or_else(|e| e.into_inner())
+}
 
 fn cfg() -> RunConfig {
     RunConfig { toggles: Toggles::optimized(), scale: 0.1, seed: 0xE9, ..Default::default() }
@@ -265,6 +280,7 @@ fn async_service_soak_completes_every_ticket_and_balances_stats() {
     // scheduler counters balance once nothing is in flight.
     use repro::coordinator::ExecMode;
     use std::collections::BTreeMap;
+    let _guard = warm_window_guard();
     let defaults = RunConfig { exec: ExecMode::Async(2), ..cfg() };
     let svc = PipelineService::open(
         &["census", "dlsa"],
@@ -377,10 +393,76 @@ fn async_service_sheds_deterministically_at_fixed_depth() {
 }
 
 #[test]
+fn steady_state_requests_never_rebuild_graphs_or_rewarm_models() {
+    // The acceptance pin for compile-once serving, from counters and
+    // never timing: after open, N requests (sequential AND sharded
+    // sessions, DL included when artifacts exist) perform ZERO plan
+    // graph rebuilds (BindReport.compiles frozen at one per session,
+    // binds growing with requests) and ZERO warm round-trips (the
+    // process-wide warm-RPC counter does not move across the window).
+    use repro::coordinator::ExecMode;
+    let _guard = warm_window_guard();
+    let names: Vec<&str> = if Session::open("dlsa", cfg()).is_ok() {
+        vec!["census", "dlsa"]
+    } else {
+        vec!["census", "plasticc"]
+    };
+    let svc = PipelineService::open(
+        &names,
+        ServiceConfig { defaults: cfg(), queue_depth: 32, workers: 2, ..Default::default() },
+    )
+    .unwrap();
+    // Steady-state window starts AFTER open (open is allowed to warm).
+    let warm_before = repro::runtime::warm_rpc_count();
+    let requests = 8usize;
+    let tickets: Vec<_> = (0..requests)
+        .map(|i| svc.submit(Request::synthetic(names[i % names.len()])).unwrap())
+        .collect();
+    for t in tickets {
+        assert!(t.wait().completion().is_some(), "steady-state request must complete");
+    }
+    assert_eq!(
+        repro::runtime::warm_rpc_count(),
+        warm_before,
+        "steady-state requests must not issue warm round-trips"
+    );
+    let total = svc.bind_report_total();
+    assert_eq!(total.compiles, names.len(), "one graph build per session, ever");
+    assert_eq!(total.binds as usize, requests, "one bind per served request");
+    for (name, br) in svc.bind_reports() {
+        assert_eq!(br.compiles, 1, "{name}");
+    }
+
+    // Sharded sessions bind pre-sliced shard plans from the same cached
+    // graph — several binds per request, still zero rebuilds and zero
+    // warm round-trips.
+    let shards = 3usize;
+    let sharded_cfg = RunConfig { exec: ExecMode::Sharded(shards), ..cfg() };
+    let sharded = PipelineService::open(
+        &["census"],
+        ServiceConfig { defaults: sharded_cfg, queue_depth: 8, workers: 1, ..Default::default() },
+    )
+    .unwrap();
+    let warm_before = repro::runtime::warm_rpc_count();
+    for _ in 0..3 {
+        assert!(sharded
+            .call(Request::synthetic("census"))
+            .unwrap()
+            .completion()
+            .is_some());
+    }
+    assert_eq!(repro::runtime::warm_rpc_count(), warm_before);
+    let br = sharded.bind_report_total();
+    assert_eq!(br.compiles, 1);
+    assert_eq!(br.binds, 3 * shards, "one shard bind per shard per request");
+}
+
+#[test]
 fn dl_session_opens_warm_or_skips_cleanly() {
     // With artifacts, a DLSA session opens warm (holding a model client)
     // and serves documents; without them it fails with the artifact error
     // the tests key on.
+    let _guard = warm_window_guard();
     match Session::open("dlsa", cfg()) {
         Ok(session) => {
             assert!(session.client().is_some(), "dlsa session must hold a warm client");
