@@ -13,15 +13,26 @@
 //! generation or model-compile cost (the paper's Fig 11 measures the
 //! pipelines, not their setup).
 //!
+//! Besides the printed tables, the run persists its trajectory to
+//! `BENCH_fig11.json` (see `util::bench` for the schema): per-pipeline
+//! baseline/optimized medians and speedup, a per-exec-mode throughput +
+//! p50/p95 ladder for the always-runnable tabular pipelines, and the
+//! per-item vs columnar-batched comparison at `batch_rows = 256` —
+//! so later changes diff measured numbers instead of re-asserting them.
+//!
 //! ```sh
 //! cargo bench --bench fig11_e2e
 //! REPRO_BENCH_SCALE=2 REPRO_BENCH_ITERS=5 cargo bench --bench fig11_e2e
 //! ```
 
 use repro::coordinator::ExecMode;
-use repro::pipelines::{registry, RunConfig, Toggles};
+use repro::pipelines::{registry, run_by_name, RunConfig, Toggles};
 use repro::service::Session;
+use repro::util::bench::{mode_entry, write_trajectory};
 use repro::util::fmt::{self, Table};
+use repro::util::json::Json;
+use std::collections::BTreeMap;
+use std::time::Instant;
 
 /// Median plan-execution time over `iters` runs of one warm session
 /// serving a pre-generated payload; NaN when the pipeline cannot run
@@ -55,6 +66,8 @@ fn main() {
     println!("\n=== Figure 11: E2E speedup, baseline vs optimized (scale {scale}, median of {iters}) ===");
     let mut t = Table::new(&["pipeline", "baseline", "optimized", "speedup"]);
     let mut speedups: Vec<(String, f64)> = Vec::new();
+    // Per-pipeline JSON fragments for the persisted trajectory.
+    let mut trajectory: BTreeMap<String, BTreeMap<String, Json>> = BTreeMap::new();
     for e in registry() {
         let base_cfg =
             RunConfig { toggles: Toggles::baseline(), scale, seed: 0xF11, ..Default::default() };
@@ -64,6 +77,11 @@ fn main() {
         let opt = median_total(e.name, &opt_cfg, iters);
         let s = base / opt;
         speedups.push((e.name.to_string(), s));
+        let maybe = |v: f64| if v.is_finite() { Json::Num(v) } else { Json::Null };
+        let frag = trajectory.entry(e.name.to_string()).or_default();
+        frag.insert("baseline_s".to_string(), maybe(base));
+        frag.insert("optimized_s".to_string(), maybe(opt));
+        frag.insert("speedup".to_string(), maybe(s));
         // Pipelines that cannot open (no artifacts) show as unavailable,
         // not as an impossibly fast 0ns measurement.
         let cell = |secs: f64| {
@@ -107,7 +125,8 @@ fn main() {
         ExecMode::Streaming,
         ExecMode::Async(2),
     ] {
-        let cfg = RunConfig { toggles: Toggles::optimized(), scale, seed: 0xF11, exec };
+        let cfg =
+            RunConfig { toggles: Toggles::optimized(), scale, seed: 0xF11, exec, ..Default::default() };
         let Ok(session) = Session::open("census", cfg) else {
             continue;
         };
@@ -190,5 +209,85 @@ fn main() {
             br.binds_per_compile(),
             fmt::dur(br.amortized_saving()),
         );
+    }
+
+    // Per-exec-mode trajectory for the always-runnable tabular
+    // pipelines: one run per mode, recorded as dataset throughput +
+    // latency percentiles so the next change can diff the ladder.
+    let ladder = [
+        ExecMode::Sequential,
+        ExecMode::Streaming,
+        ExecMode::MultiInstance(2),
+        ExecMode::Sharded(2),
+        ExecMode::Async(2),
+    ];
+    for name in ["census", "plasticc", "iiot"] {
+        let mut modes: BTreeMap<String, Json> = BTreeMap::new();
+        for exec in ladder {
+            let cfg = RunConfig {
+                toggles: Toggles::optimized(),
+                scale,
+                seed: 0xF11,
+                exec,
+                ..Default::default()
+            };
+            let t0 = Instant::now();
+            let Ok(res) = run_by_name(name, &cfg) else { continue };
+            modes.insert(exec.to_string(), mode_entry(&res, t0.elapsed()));
+        }
+        trajectory.entry(name.to_string()).or_default().insert(
+            "exec_modes".to_string(),
+            Json::Obj(modes),
+        );
+    }
+
+    // Columnar data plane: per-item vs batched (batch_rows = 256) on
+    // the same payload, sequential executor. Throughput from wall
+    // time; the amortization evidence (rows, clone-avoided bytes)
+    // from the run's BatchReport counters.
+    println!("\n=== columnar batch plane: per-item vs batch_rows=256 (sequential) ===");
+    let mut t = Table::new(&["pipeline", "per-item items/s", "batched items/s", "ratio", "zero-copy"]);
+    for name in ["census", "plasticc", "iiot"] {
+        let cfg = RunConfig {
+            toggles: Toggles::optimized(),
+            scale,
+            seed: 0xF11,
+            ..Default::default()
+        };
+        let t0 = Instant::now();
+        let Ok(per_item) = run_by_name(name, &cfg) else { continue };
+        let per_item_wall = t0.elapsed();
+        let batched_cfg = RunConfig { batch_rows: 256, ..cfg };
+        let t0 = Instant::now();
+        let Ok(batched) = run_by_name(name, &batched_cfg) else { continue };
+        let batched_wall = t0.elapsed();
+        let per_tput = per_item.items as f64 / per_item_wall.as_secs_f64().max(1e-12);
+        let bat_tput = batched.items as f64 / batched_wall.as_secs_f64().max(1e-12);
+        let zero_copy = batched
+            .batching
+            .map_or(0.0, |b| b.zero_copy_fraction() * 100.0);
+        t.row(&[
+            name.to_string(),
+            format!("{per_tput:.1}"),
+            format!("{bat_tput:.1}"),
+            format!("{:.2}x", bat_tput / per_tput.max(1e-12)),
+            format!("{zero_copy:.1}%"),
+        ]);
+        let mut b = BTreeMap::new();
+        b.insert("batch_rows".to_string(), Json::Num(256.0));
+        b.insert("per_item".to_string(), mode_entry(&per_item, per_item_wall));
+        b.insert("batched".to_string(), mode_entry(&batched, batched_wall));
+        trajectory
+            .entry(name.to_string())
+            .or_default()
+            .insert("batched_vs_per_item".to_string(), Json::Obj(b));
+    }
+    t.print();
+
+    let pipelines: BTreeMap<String, Json> =
+        trajectory.into_iter().map(|(k, v)| (k, Json::Obj(v))).collect();
+    match write_trajectory("BENCH_fig11.json", "fig11_e2e", scale, pipelines) {
+        Ok(_) => println!("\ntrajectory written to BENCH_fig11.json"),
+        Err(e) => eprintln!("could not write BENCH_fig11.json: {e}"),
     }
 }

@@ -16,6 +16,15 @@
 //! (DESIGN.md §2). For the sharded comparison even one core shows the
 //! gap: multi:N redoes the dataset N times, sharding does it once.
 //!
+//! Besides the printed tables, the run persists its trajectory to
+//! `BENCH_scaling.json` (see `util::bench` for the schema): for each
+//! measured pipeline, every exec mode's dataset throughput and
+//! p50/p95 latency, merged across the sharded-vs-multi sweep and the
+//! executor ladder. The §3.4 stream sweep and the DL pipelines join
+//! when model artifacts are present; without them the bench still
+//! completes (and still writes census's trajectory) instead of
+//! panicking.
+//!
 //! ```sh
 //! cargo bench --bench scaling_instances
 //! ```
@@ -25,9 +34,16 @@ use repro::media::{normalize, resize, ResizeFilter};
 use repro::pipelines::{self, run_plan_with, RunConfig, Toggles};
 use repro::runtime::{ModelServer, Tensor};
 use repro::text::{ReviewGenerator, TokenizerKind, Vocab, WordPiece};
+use repro::util::bench::{mode_entry, write_trajectory};
 use repro::util::fmt::{dur, Table};
+use repro::util::json::Json;
 use repro::util::Rng;
+use std::collections::BTreeMap;
 use std::time::Instant;
+
+/// Pipeline name → exec-mode display string → measurement, merged
+/// across the bench's sections and persisted at exit.
+type Trajectory = BTreeMap<String, BTreeMap<String, Json>>;
 
 /// Sharded vs multi-instance on one pre-generated payload: dataset
 /// throughput (payload items / wall until that dataset is fully
@@ -38,7 +54,7 @@ use std::time::Instant;
 /// video_streamer frames — where shards genuinely split the transform
 /// work) join when model artifacts are present and skip with a note
 /// otherwise.
-fn sharded_vs_multi(scale: f64) {
+fn sharded_vs_multi(scale: f64, traj: &mut Trajectory) {
     println!("\n=== sharded (one dataset, partitioned) vs multi (n replicated streams) ===");
     let mut census_check: Option<(f64, f64)> = None;
     for name in ["census", "dlsa", "video_streamer"] {
@@ -71,6 +87,9 @@ fn sharded_vs_multi(scale: f64) {
             let shard_wall = t0.elapsed();
             // Sharded runs process the payload once: items == payload size.
             let shard_tput = sharded.items as f64 / shard_wall.as_secs_f64().max(1e-12);
+            traj.entry(name.to_string())
+                .or_default()
+                .insert(ExecMode::Sharded(n).to_string(), mode_entry(&sharded, shard_wall));
 
             let multi_cfg = RunConfig { exec: ExecMode::MultiInstance(n), ..cfg };
             let t0 = Instant::now();
@@ -87,6 +106,9 @@ fn sharded_vs_multi(scale: f64) {
             // when the run is, so dataset throughput divides items by n.
             let dataset_items = multi.items / n.max(1);
             let multi_tput = dataset_items as f64 / multi_wall.as_secs_f64().max(1e-12);
+            traj.entry(name.to_string())
+                .or_default()
+                .insert(ExecMode::MultiInstance(n).to_string(), mode_entry(&multi, multi_wall));
 
             t.row(&[
                 n.to_string(),
@@ -120,7 +142,7 @@ fn sharded_vs_multi(scale: f64) {
 /// "how fast" but "how it ran" (tasks multiplexed, folds overlapped).
 /// Census always runs; the per-item DL pipelines (dlsa documents,
 /// video_streamer frames) join when model artifacts are present.
-fn executor_ladder(scale: f64) {
+fn executor_ladder(scale: f64, traj: &mut Trajectory) {
     println!("\n=== executor ladder: sequential vs streaming vs async:T vs shard:N (one payload) ===");
     for name in ["census", "dlsa", "video_streamer"] {
         let entry = pipelines::find(name).expect("registry names");
@@ -149,6 +171,7 @@ fn executor_ladder(scale: f64) {
                 }
             };
             let wall = t0.elapsed();
+            traj.entry(name.to_string()).or_default().insert(exec.to_string(), mode_entry(&res, wall));
             let notes = match (&res.sched, &res.sharding) {
                 (Some(s), Some(sh)) => {
                     format!("{} tasks, {} folds streamed", s.tasks_run, sh.streamed_folds)
@@ -294,9 +317,31 @@ fn main() {
         .and_then(|s| s.parse().ok())
         .unwrap_or(1.0);
     // Tabular: runs on any checkout, before the artifact-gated streams.
-    sharded_vs_multi(scale);
-    executor_ladder(scale);
+    let mut traj = Trajectory::new();
+    sharded_vs_multi(scale, &mut traj);
+    executor_ladder(scale, &mut traj);
     bind_amortization(scale);
+
+    let pipelines: BTreeMap<String, Json> = traj
+        .into_iter()
+        .map(|(name, modes)| {
+            let mut p = BTreeMap::new();
+            p.insert("exec_modes".to_string(), Json::Obj(modes));
+            (name, Json::Obj(p))
+        })
+        .collect();
+    match write_trajectory("BENCH_scaling.json", "scaling_instances", scale, pipelines) {
+        Ok(_) => println!("\ntrajectory written to BENCH_scaling.json"),
+        Err(e) => eprintln!("could not write BENCH_scaling.json: {e}"),
+    }
+
+    // The §3.4 stream sweep executes model artifacts; skip gracefully
+    // (the trajectory above is already on disk) when `make artifacts`
+    // has not run.
+    if !repro::runtime::default_artifacts_dir().join("manifest.json").exists() {
+        println!("\n=== §3.4 multi-instance scaling: skipped (no model artifacts) ===");
+        return;
+    }
     let server =
         ModelServer::spawn(repro::runtime::default_artifacts_dir(), 64).expect("server");
     server

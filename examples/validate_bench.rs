@@ -1,0 +1,109 @@
+//! Validate persisted benchmark trajectories — the CI smoke gate for
+//! `BENCH_fig11.json` / `BENCH_scaling.json`.
+//!
+//! For each file passed on the command line (both files by default),
+//! checks that it parses, that the document header is well-formed
+//! (`bench`, `schema_version`, `scale`, `pipelines`), that the
+//! always-runnable `census` pipeline is present with an `exec_modes`
+//! map containing every mode its bench measures, and that every
+//! recorded mode entry carries finite `wall_s` / `items_per_s`
+//! numbers. Exits non-zero with a message naming the first violation.
+//!
+//! ```sh
+//! cargo run --release --example validate_bench
+//! cargo run --release --example validate_bench -- BENCH_fig11.json
+//! ```
+
+use repro::util::json::Json;
+use std::process::ExitCode;
+
+/// Exec modes each bench must record for census (always runnable, no
+/// artifacts needed). Mode keys are `ExecMode` display strings.
+fn required_modes(bench: &str) -> &'static [&'static str] {
+    match bench {
+        "fig11_e2e" => &["sequential", "streaming", "multi:2", "shard:2", "async:2"],
+        "scaling_instances" => &[
+            "sequential",
+            "streaming",
+            "async:2",
+            "async:4",
+            "shard:1",
+            "shard:2",
+            "shard:4",
+            "multi:1",
+            "multi:2",
+            "multi:4",
+        ],
+        other => panic!("unknown bench name in trajectory: {other}"),
+    }
+}
+
+fn check(path: &str) -> Result<(), String> {
+    let text =
+        std::fs::read_to_string(path).map_err(|e| format!("{path}: cannot read: {e}"))?;
+    let doc = Json::parse(&text).map_err(|e| format!("{path}: {e}"))?;
+    let bench = doc
+        .get("bench")
+        .and_then(Json::as_str)
+        .ok_or_else(|| format!("{path}: missing `bench` name"))?;
+    let version = doc
+        .get("schema_version")
+        .and_then(Json::as_f64)
+        .ok_or_else(|| format!("{path}: missing `schema_version`"))?;
+    if version != repro::util::bench::SCHEMA_VERSION {
+        return Err(format!(
+            "{path}: schema_version {version} != expected {}",
+            repro::util::bench::SCHEMA_VERSION
+        ));
+    }
+    doc.get("scale")
+        .and_then(Json::as_f64)
+        .ok_or_else(|| format!("{path}: missing `scale`"))?;
+    let pipelines =
+        doc.get("pipelines").ok_or_else(|| format!("{path}: missing `pipelines`"))?;
+    let census = pipelines
+        .get("census")
+        .ok_or_else(|| format!("{path}: census trajectory missing"))?;
+    let modes = census
+        .get("exec_modes")
+        .ok_or_else(|| format!("{path}: census has no `exec_modes`"))?;
+    for required in required_modes(bench) {
+        let entry = modes
+            .get(required)
+            .ok_or_else(|| format!("{path}: census missing exec mode `{required}`"))?;
+        for field in ["wall_s", "items_per_s"] {
+            let v = entry.get(field).and_then(Json::as_f64).ok_or_else(|| {
+                format!("{path}: census {required}: missing `{field}`")
+            })?;
+            if !v.is_finite() || v < 0.0 {
+                return Err(format!("{path}: census {required}: bad {field} = {v}"));
+            }
+        }
+    }
+    println!(
+        "{path}: ok ({bench}, {} exec modes recorded for census)",
+        required_modes(bench).len()
+    );
+    Ok(())
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let paths: Vec<String> = if args.is_empty() {
+        vec!["BENCH_fig11.json".to_string(), "BENCH_scaling.json".to_string()]
+    } else {
+        args
+    };
+    let mut failed = false;
+    for path in &paths {
+        if let Err(msg) = check(path) {
+            eprintln!("FAIL {msg}");
+            failed = true;
+        }
+    }
+    if failed {
+        ExitCode::FAILURE
+    } else {
+        ExitCode::SUCCESS
+    }
+}

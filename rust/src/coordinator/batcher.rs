@@ -199,6 +199,80 @@ mod tests {
     }
 
     #[test]
+    fn column_batches_ride_the_batcher_without_copying() {
+        use crate::dataframe::batch::ColumnBatch;
+        use crate::dataframe::{Column, DataFrame};
+
+        // 23 rows split into max-5-row chunks: four full + one
+        // remainder chunk of 3. Transporting the chunks through a
+        // channel and the dynamic batcher must preserve pointer
+        // identity with the parent allocation — views move, row data
+        // never copies.
+        let df = DataFrame::from_cols(vec![
+            ("x", Column::f64((0..23).map(f64::from).collect())),
+            ("y", Column::i64((0..23i64).collect())),
+        ]);
+        let parent = ColumnBatch::from_frame(df);
+        let chunks = parent.split(5);
+        assert_eq!(chunks.len(), 5);
+        assert_eq!(chunks.last().unwrap().nrows(), 3, "remainder chunk");
+
+        let (tx, rx) = bounded(8);
+        for c in &chunks {
+            tx.send(c.clone()).unwrap();
+        }
+        drop(tx);
+        let mut b = DynamicBatcher::new(
+            rx,
+            BatcherConfig { max_batch: 2, max_wait: Duration::from_millis(50) },
+        );
+        let batches = b.drain();
+        assert_eq!(batches.iter().map(Vec::len).sum::<usize>(), 5, "no chunk dropped");
+        let mut rows = 0usize;
+        for batch in &batches {
+            for chunk in batch {
+                rows += chunk.nrows();
+                // Arc pointer identity, not value equality: the
+                // batcher moved views, not data.
+                assert!(chunk.shares_allocation(&parent));
+                assert!(chunk.col("x").unwrap().shares_parent(parent.col("x").unwrap()));
+                assert!(chunk.col("y").unwrap().shares_parent(parent.col("y").unwrap()));
+            }
+        }
+        assert_eq!(rows, 23, "batching repartitions, never drops or duplicates rows");
+    }
+
+    #[test]
+    fn empty_column_batch_survives_the_batcher() {
+        use crate::dataframe::batch::ColumnBatch;
+        use crate::dataframe::{Column, DataFrame};
+
+        // A zero-row parent still splits into one (empty) chunk, and
+        // that chunk rides the batcher as a real item: downstream
+        // gather stages see it, count its zero rows, and stay balanced.
+        let parent = ColumnBatch::from_frame(DataFrame::from_cols(vec![(
+            "x",
+            Column::f64(vec![]),
+        )]));
+        let chunks = parent.split(64);
+        assert_eq!(chunks.len(), 1);
+        assert_eq!(chunks[0].nrows(), 0);
+
+        let (tx, rx) = bounded(2);
+        tx.send(chunks[0].clone()).unwrap();
+        drop(tx);
+        let mut b = DynamicBatcher::new(
+            rx,
+            BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(5) },
+        );
+        let batches = b.drain();
+        assert_eq!(batches.len(), 1);
+        assert_eq!(batches[0].len(), 1);
+        assert_eq!(batches[0][0].nrows(), 0);
+        assert!(batches[0][0].shares_allocation(&parent), "empty views still alias the parent");
+    }
+
+    #[test]
     fn degenerate_max_batch_zero_behaves_like_batch_size_one() {
         // A zero max_batch cannot make progress any other way; the
         // batcher treats it as "flush after the first item" rather than

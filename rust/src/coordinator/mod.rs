@@ -68,5 +68,6 @@ pub use router::{AdmissionQueue, AdmitOutcome, Priority, QueueStats};
 pub use scaler::{run_instances, run_instances_timed, LatencyRecorder};
 pub use scaler::{InstanceReport, ScalingReport};
 pub use sched::{Poll, Scheduler, Signal, Task, VirtualScheduler, WaitGroup};
+pub use telemetry::{BatchLedger, BatchReport};
 pub use telemetry::{BindReport, Category, Report, SchedReport, ShardReport, ShardedReport, StageReport};
 pub use telemetry::Telemetry;

@@ -40,9 +40,21 @@
 //! plan ([`CompiledPlan::bind_report`]) so the amortization is
 //! observable from counters — the tf.data build-once/re-bind property
 //! and BigDL's build-once/run-everywhere plan, in one type.
+//!
+//! **Columnar batch items**: items are opaque to the IR, so a batched
+//! tabular pipeline moves whole [`ColumnBatch`] chunks (Arc-backed
+//! zero-copy column views) through the same map/flat-map nodes instead
+//! of one row-state per hop; a [`CompiledPlanBuilder::gather`] node
+//! deterministically reassembles the chunk stream before the model
+//! stages, and the plan's attached [`BatchLedger`]
+//! ([`CompiledPlan::with_batch_ledger`]) counts batches, rows, and
+//! clone-avoided bytes so amortization is asserted from ledgers, never
+//! wall-clock.
+//!
+//! [`ColumnBatch`]: crate::dataframe::ColumnBatch
 
 use super::batcher::BatcherConfig;
-use super::telemetry::{BindReport, Category};
+use super::telemetry::{BatchLedger, BatchReport, BindReport, Category};
 use std::any::Any;
 use std::collections::BTreeMap;
 use std::marker::PhantomData;
@@ -406,6 +418,7 @@ pub struct CompiledPlan<P: 'static> {
     nodes: Vec<NodeTemplate>,
     sink: (String, Category, SinkTemplateFn<P>),
     warm_models: Vec<String>,
+    batch_ledger: Option<Arc<BatchLedger>>,
     compile_nanos: AtomicU64,
     binds: AtomicUsize,
     bind_nanos: AtomicU64,
@@ -479,6 +492,24 @@ impl<P: 'static> CompiledPlan<P> {
     /// The declared warm model set (empty for model-free pipelines).
     pub fn warm_models(&self) -> &[String] {
         &self.warm_models
+    }
+
+    /// Attach the [`BatchLedger`] this plan's batched stages record
+    /// into. The compile step mints one ledger, clones the `Arc` into
+    /// the stage templates that split/transform/gather column batches,
+    /// and hangs the original here so executors can snapshot
+    /// per-run deltas ([`Self::batch_report`]) without threading the
+    /// ledger through every call site.
+    pub fn with_batch_ledger(mut self, ledger: Arc<BatchLedger>) -> Self {
+        self.batch_ledger = Some(ledger);
+        self
+    }
+
+    /// Cumulative batch-plane counters for this plan (zeros when no
+    /// ledger is attached, i.e. the plan runs per-item). Runs snapshot
+    /// before and after, then diff with [`BatchReport::since`].
+    pub fn batch_report(&self) -> BatchReport {
+        self.batch_ledger.as_ref().map(|l| l.snapshot()).unwrap_or_default()
     }
 
     /// Fold front-loaded work (model warmup, payload-independent config
@@ -664,6 +695,44 @@ impl<P: 'static, T: Send + 'static> CompiledPlanBuilder<P, T> {
         })
     }
 
+    /// Append a 1→0..1 transform — the reassembly point of the batch
+    /// data plane. A gather stage buffers indexed chunks and emits one
+    /// combined item once every chunk of a group has arrived, as a pure
+    /// function of the items themselves (each chunk carries its
+    /// `index`/`total`). That determinism is the reason dataset
+    /// reassembly is a gather map and **not** a [`Self::batch`] node:
+    /// a dynamic batcher's cut points depend on arrival timing
+    /// (`max_wait` flushes), so its groups differ across executors,
+    /// while a gather stage regroups identically everywhere — which is
+    /// what keeps batched metrics bit-identical across the executor
+    /// ladder.
+    pub fn gather<O, MK, F>(
+        self,
+        name: &str,
+        category: Category,
+        make: MK,
+    ) -> CompiledPlanBuilder<P, O>
+    where
+        O: Send + 'static,
+        MK: Fn(u64) -> F + Send + Sync + 'static,
+        F: FnMut(T) -> anyhow::Result<Option<O>> + Send + 'static,
+    {
+        let stage = name.to_string();
+        let tpl: StageTemplateFn = Box::new(move |seed| {
+            let mut f = make(seed);
+            let stage = stage.clone();
+            Box::new(move |item: DynItem| {
+                let t = downcast::<T>(item, &stage)?;
+                Ok(f(t)?.into_iter().map(|o| Box::new(o) as DynItem).collect())
+            })
+        });
+        self.push_node(NodeTemplate {
+            name: name.to_string(),
+            category,
+            kind: NodeTemplateKind::FlatMap(tpl),
+        })
+    }
+
     /// Append a dynamic-batching node under `cfg` (the policy is part of
     /// the compiled graph; the grouping closure is re-minted per bind).
     pub fn batch(
@@ -728,6 +797,7 @@ impl<P: 'static, T: Send + 'static> CompiledPlanBuilder<P, T> {
             nodes: self.nodes,
             sink: (name.to_string(), category, tpl),
             warm_models: Vec::new(),
+            batch_ledger: None,
             compile_nanos: AtomicU64::new(compile_nanos),
             binds: AtomicUsize::new(0),
             bind_nanos: AtomicU64::new(0),

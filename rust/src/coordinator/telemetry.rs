@@ -1,5 +1,6 @@
 //! Per-stage timing telemetry — the measurement behind Figure 1.
 
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
@@ -290,6 +291,151 @@ impl BindReport {
     }
 }
 
+/// Shared atomic counters behind the columnar batch data plane: the
+/// batched stages of a compiled tabular pipeline record how many
+/// [`ColumnBatch`] items they split, transformed, and gathered, and how
+/// many bytes stayed shared (`Arc` views) versus copied out. Stages
+/// across all executors write the same `Arc<BatchLedger>`, so one
+/// snapshot delta covers Sequential, Streaming, MultiInstance, Sharded,
+/// and Async runs alike. Like [`SchedReport`], the numbers ride on the
+/// result struct — never the metric map — so batched runs stay
+/// metric-identical to per-item runs (the conformance contract), and
+/// tests assert amortization from these ledgers instead of wall-clock.
+///
+/// [`ColumnBatch`]: crate::dataframe::ColumnBatch
+#[derive(Debug, Default)]
+pub struct BatchLedger {
+    batches: AtomicUsize,
+    rows_in: AtomicUsize,
+    rows_out: AtomicUsize,
+    rows_filtered: AtomicUsize,
+    clone_avoided_bytes: AtomicUsize,
+    copied_bytes: AtomicUsize,
+}
+
+impl BatchLedger {
+    /// A dataset of `rows` rows entered the batch plane as `batches`
+    /// zero-copy views sharing `shared_bytes` of parent allocation.
+    pub fn record_split(&self, batches: usize, rows: usize, shared_bytes: usize) {
+        self.batches.fetch_add(batches, Ordering::Relaxed);
+        self.rows_in.fetch_add(rows, Ordering::Relaxed);
+        self.clone_avoided_bytes.fetch_add(shared_bytes, Ordering::Relaxed);
+    }
+
+    /// A transform passed `shared_bytes` through as views without
+    /// copying (metadata-only column drop, no-op fill).
+    pub fn record_view(&self, shared_bytes: usize) {
+        self.clone_avoided_bytes.fetch_add(shared_bytes, Ordering::Relaxed);
+    }
+
+    /// A batched filter dropped `rows` rows from the plane.
+    pub fn record_filter(&self, rows: usize) {
+        self.rows_filtered.fetch_add(rows, Ordering::Relaxed);
+    }
+
+    /// A transform materialized `bytes` of fresh allocation (filter
+    /// output, cast, computed column) — the honest counterweight to
+    /// [`Self::record_view`].
+    pub fn record_copy(&self, bytes: usize) {
+        self.copied_bytes.fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    /// `rows` rows left the plane through a gather stage (batch views
+    /// reassembled into one frame for the model stages).
+    pub fn record_gather(&self, rows: usize) {
+        self.rows_out.fetch_add(rows, Ordering::Relaxed);
+    }
+
+    /// Snapshot the counters.
+    pub fn snapshot(&self) -> BatchReport {
+        BatchReport {
+            batches: self.batches.load(Ordering::Relaxed),
+            rows_in: self.rows_in.load(Ordering::Relaxed),
+            rows_out: self.rows_out.load(Ordering::Relaxed),
+            rows_filtered: self.rows_filtered.load(Ordering::Relaxed),
+            clone_avoided_bytes: self.clone_avoided_bytes.load(Ordering::Relaxed),
+            copied_bytes: self.copied_bytes.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Snapshot of a [`BatchLedger`]: the batch data plane's row/byte
+/// accounting for one run (or, for a long-lived compiled plan, the
+/// delta between two snapshots).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct BatchReport {
+    /// Batch views created by splitting source datasets.
+    pub batches: usize,
+    /// Rows that entered the batch plane at split points.
+    pub rows_in: usize,
+    /// Rows that left the plane through gather stages.
+    pub rows_out: usize,
+    /// Rows dropped by batched filters between split and gather.
+    pub rows_filtered: usize,
+    /// Bytes that stayed shared behind `Arc` views instead of being
+    /// cloned per batch/shard.
+    pub clone_avoided_bytes: usize,
+    /// Bytes genuinely materialized by batched transforms.
+    pub copied_bytes: usize,
+}
+
+impl BatchReport {
+    /// Mean rows per batch; `batches × mean_rows == rows_in` by
+    /// construction (zero when no batches were split).
+    pub fn mean_rows(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.rows_in as f64 / self.batches as f64
+        }
+    }
+
+    /// The conservation law every batched run satisfies: rows in ==
+    /// rows out + rows filtered. An unbalanced ledger means a batch was
+    /// dropped or duplicated between split and gather.
+    pub fn balanced(&self) -> bool {
+        self.rows_in == self.rows_out + self.rows_filtered
+    }
+
+    /// Fraction of touched bytes that stayed zero-copy (1.0 = no
+    /// materialization at all; 0.0 when nothing was recorded).
+    pub fn zero_copy_fraction(&self) -> f64 {
+        let total = self.clone_avoided_bytes + self.copied_bytes;
+        if total == 0 {
+            0.0
+        } else {
+            self.clone_avoided_bytes as f64 / total as f64
+        }
+    }
+
+    /// Merge another report into this one (aggregation across sessions
+    /// or instances).
+    pub fn merge(&mut self, other: &BatchReport) {
+        self.batches += other.batches;
+        self.rows_in += other.rows_in;
+        self.rows_out += other.rows_out;
+        self.rows_filtered += other.rows_filtered;
+        self.clone_avoided_bytes += other.clone_avoided_bytes;
+        self.copied_bytes += other.copied_bytes;
+    }
+
+    /// Counter delta since `earlier` (both snapshots of one monotonic
+    /// ledger) — how a run isolates its own activity on a long-lived
+    /// compiled plan.
+    pub fn since(&self, earlier: &BatchReport) -> BatchReport {
+        BatchReport {
+            batches: self.batches.saturating_sub(earlier.batches),
+            rows_in: self.rows_in.saturating_sub(earlier.rows_in),
+            rows_out: self.rows_out.saturating_sub(earlier.rows_out),
+            rows_filtered: self.rows_filtered.saturating_sub(earlier.rows_filtered),
+            clone_avoided_bytes: self
+                .clone_avoided_bytes
+                .saturating_sub(earlier.clone_avoided_bytes),
+            copied_bytes: self.copied_bytes.saturating_sub(earlier.copied_bytes),
+        }
+    }
+}
+
 /// One shard's slice of a data-parallel ([`ExecMode::Sharded`]) run.
 ///
 /// [`ExecMode::Sharded`]: super::exec::ExecMode
@@ -552,6 +698,52 @@ mod tests {
         assert!(!SchedReport { parked: 3, ..ok }.balanced());
         assert!(!SchedReport { max_in_flight: 3, ..ok }.balanced());
         assert!(SchedReport::default().balanced());
+    }
+
+    #[test]
+    fn batch_ledger_balances_and_deltas() {
+        let ledger = BatchLedger::default();
+        let before = ledger.snapshot();
+        assert_eq!(before, BatchReport::default());
+        assert!(before.balanced());
+        assert_eq!(before.mean_rows(), 0.0);
+        assert_eq!(before.zero_copy_fraction(), 0.0);
+
+        // A run: 100 rows split into 3 views, 10 rows filtered, the
+        // survivors gathered back out.
+        ledger.record_split(3, 100, 8_000);
+        ledger.record_view(2_000);
+        ledger.record_filter(10);
+        ledger.record_copy(500);
+        ledger.record_gather(90);
+        let after = ledger.snapshot();
+        let run = after.since(&before);
+        assert!(run.balanced());
+        assert_eq!(run.batches, 3);
+        assert_eq!(run.rows_in, 100);
+        assert_eq!(run.rows_out, 90);
+        assert_eq!(run.rows_filtered, 10);
+        // batches × mean rows reproduces the total rows in.
+        assert!((run.mean_rows() * run.batches as f64 - run.rows_in as f64).abs() < 1e-9);
+        assert!((run.zero_copy_fraction() - 10_000.0 / 10_500.0).abs() < 1e-12);
+
+        // A dropped batch (gather never saw its rows) breaks the law.
+        assert!(!BatchReport { rows_out: 80, ..run }.balanced());
+
+        // Second run on the same ledger: the delta isolates it.
+        ledger.record_split(2, 40, 1_000);
+        ledger.record_gather(40);
+        let second = ledger.snapshot().since(&after);
+        assert_eq!(second.batches, 2);
+        assert_eq!(second.rows_in, 40);
+        assert!(second.balanced());
+
+        // Aggregation sums every counter.
+        let mut total = run;
+        total.merge(&second);
+        assert_eq!(total.batches, 5);
+        assert_eq!(total.rows_in, 140);
+        assert!(total.balanced());
     }
 
     #[test]

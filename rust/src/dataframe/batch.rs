@@ -1,0 +1,525 @@
+//! Columnar batch views: `Arc`-backed zero-copy slices of [`Column`]s.
+//!
+//! The paper's Table 1 verbs are columnar, but the Plan IR moves one
+//! boxed item per stage hop — so a tabular pipeline re-fragments its
+//! contiguous columns into per-row dispatch. A [`ColumnBatch`] is the
+//! batch-of-columns item that restores the columnar shape *inside* the
+//! IR: every column is a [`ColumnView`] (an `Arc<Column>` plus an
+//! `offset/len` window), so splitting a dataset into batches or shards
+//! shares the one parent allocation with zero copies, and the vectorized
+//! kernels in [`super::ops`] / [`super::column`] run directly on
+//! contiguous slices of it.
+//!
+//! Every transform here mirrors the `Engine::Optimized` verb it batches
+//! (same kernels via the `*_range` forms in [`Column`], same mask
+//! semantics), so concatenating transformed batches in index order
+//! reproduces the per-item whole-frame result bit for bit — that
+//! equivalence is what the executor-conformance suite pins.
+
+use super::column::{Column, DType};
+use super::expr::Expr;
+use super::frame::DataFrame;
+use super::FrameError;
+use std::sync::Arc;
+
+/// A zero-copy window into a shared column allocation.
+#[derive(Debug, Clone)]
+pub struct ColumnView {
+    parent: Arc<Column>,
+    offset: usize,
+    len: usize,
+}
+
+impl ColumnView {
+    /// View of an entire column.
+    pub fn new(parent: Arc<Column>) -> ColumnView {
+        let len = parent.len();
+        ColumnView { parent, offset: 0, len }
+    }
+
+    /// Sub-view (offset relative to this view). Shares the parent.
+    pub fn slice(&self, offset: usize, len: usize) -> ColumnView {
+        assert!(offset + len <= self.len, "view slice out of bounds");
+        ColumnView { parent: Arc::clone(&self.parent), offset: self.offset + offset, len }
+    }
+
+    /// Rows in the view.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True if the view covers zero rows.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Start of the window in the parent.
+    pub fn offset(&self) -> usize {
+        self.offset
+    }
+
+    /// Dtype of the underlying column.
+    pub fn dtype(&self) -> DType {
+        self.parent.dtype()
+    }
+
+    /// The shared parent allocation.
+    pub fn parent(&self) -> &Arc<Column> {
+        &self.parent
+    }
+
+    /// Pointer identity: do two views window the same allocation?
+    pub fn shares_parent(&self, other: &ColumnView) -> bool {
+        Arc::ptr_eq(&self.parent, &other.parent)
+    }
+
+    /// Nulls within the window only.
+    pub fn null_count(&self) -> usize {
+        self.parent.null_count_range(self.offset, self.len)
+    }
+
+    /// Copy the window out as an owned column.
+    pub fn materialize(&self) -> Column {
+        if self.offset == 0 && self.len == self.parent.len() {
+            (*self.parent).clone()
+        } else {
+            self.parent.slice_range(self.offset, self.len)
+        }
+    }
+
+    /// Estimated heap bytes the window would occupy if copied out — the
+    /// currency of the clone-avoided ledger.
+    pub fn heap_bytes(&self) -> usize {
+        let parent_len = self.parent.len();
+        if parent_len == 0 {
+            0
+        } else {
+            self.parent.heap_bytes() * self.len / parent_len
+        }
+    }
+}
+
+/// A batch of rows as named column views over shared allocations — the
+/// item type the batched tabular pipelines move through the Plan IR.
+#[derive(Debug, Clone)]
+pub struct ColumnBatch {
+    names: Arc<Vec<String>>,
+    cols: Vec<ColumnView>,
+    rows: usize,
+}
+
+impl ColumnBatch {
+    /// Take ownership of a frame's columns; each becomes a whole-column
+    /// view. No row data is copied.
+    pub fn from_frame(df: DataFrame) -> ColumnBatch {
+        let (names, cols) = df.into_parts();
+        let rows = cols.first().map(|c| c.len()).unwrap_or(0);
+        ColumnBatch {
+            names: Arc::new(names),
+            cols: cols.into_iter().map(|c| ColumnView::new(Arc::new(c))).collect(),
+            rows,
+        }
+    }
+
+    /// Rows covered.
+    pub fn nrows(&self) -> usize {
+        self.rows
+    }
+
+    /// Columns.
+    pub fn ncols(&self) -> usize {
+        self.cols.len()
+    }
+
+    /// Column names in order.
+    pub fn names(&self) -> &[String] {
+        &self.names
+    }
+
+    /// View of a named column.
+    pub fn col(&self, name: &str) -> Result<&ColumnView, FrameError> {
+        self.names
+            .iter()
+            .position(|n| n == name)
+            .map(|i| &self.cols[i])
+            .ok_or_else(|| FrameError::UnknownColumn(name.to_string()))
+    }
+
+    /// Materialized copy of a named column's window.
+    pub fn materialize_col(&self, name: &str) -> Result<Column, FrameError> {
+        Ok(self.col(name)?.materialize())
+    }
+
+    /// Split into contiguous batches of at most `batch_rows` rows. Always
+    /// returns at least one batch (a zero-row one for an empty parent),
+    /// so a downstream gather stage can count on `total >= 1`. All parts
+    /// share this batch's allocations.
+    pub fn split(&self, batch_rows: usize) -> Vec<ColumnBatch> {
+        let step = batch_rows.max(1);
+        if self.rows == 0 {
+            return vec![self.clone()];
+        }
+        let mut out = Vec::with_capacity(self.rows.div_ceil(step));
+        let mut start = 0;
+        while start < self.rows {
+            let len = step.min(self.rows - start);
+            out.push(self.slice_rows(start, len));
+            start += len;
+        }
+        out
+    }
+
+    /// Split into `n` contiguous near-even shards (the view-backed
+    /// sharding path: shard `i` of `n` gets `rows / n` rows plus one of
+    /// the first `rows % n` remainders). All shards share allocations.
+    pub fn split_shards(&self, n: usize) -> Vec<ColumnBatch> {
+        let n = n.max(1);
+        let base = self.rows / n;
+        let rem = self.rows % n;
+        let mut out = Vec::with_capacity(n);
+        let mut start = 0;
+        for i in 0..n {
+            let len = base + usize::from(i < rem);
+            out.push(self.slice_rows(start, len));
+            start += len;
+        }
+        out
+    }
+
+    /// Zero-copy window of `len` rows starting at `start`.
+    pub fn slice_rows(&self, start: usize, len: usize) -> ColumnBatch {
+        ColumnBatch {
+            names: Arc::clone(&self.names),
+            cols: self.cols.iter().map(|c| c.slice(start, len)).collect(),
+            rows: len,
+        }
+    }
+
+    /// Drop the named columns — metadata only, ignores unknown names
+    /// (mirrors [`DataFrame::drop_cols`]); surviving views keep sharing
+    /// their parents.
+    pub fn drop_cols(&self, drop: &[&str]) -> ColumnBatch {
+        let mut names = Vec::with_capacity(self.names.len());
+        let mut cols = Vec::with_capacity(self.cols.len());
+        for (name, col) in self.names.iter().zip(&self.cols) {
+            if !drop.contains(&name.as_str()) {
+                names.push(name.clone());
+                cols.push(col.clone());
+            }
+        }
+        ColumnBatch { names: Arc::new(names), cols, rows: self.rows }
+    }
+
+    /// Vectorized expression evaluation over this batch's rows. Runs the
+    /// same kernels as [`Expr::eval_column`], resolving column names to
+    /// materialized windows of the shared parents.
+    pub fn eval(&self, expr: &Expr) -> Result<Column, FrameError> {
+        expr.eval_with(self.rows, &mut |name| self.materialize_col(name))
+    }
+
+    /// Add (or replace, pandas-style) a column. The new column gets its
+    /// own allocation; untouched columns keep sharing their parents.
+    pub fn with_column(&self, name: &str, col: Column) -> Result<ColumnBatch, FrameError> {
+        if col.len() != self.rows {
+            return Err(FrameError::LengthMismatch {
+                col: name.to_string(),
+                got: col.len(),
+                want: self.rows,
+            });
+        }
+        let view = ColumnView::new(Arc::new(col));
+        let mut out = self.clone();
+        match self.names.iter().position(|n| n == name) {
+            Some(i) => out.cols[i] = view,
+            None => {
+                let mut names = (*self.names).clone();
+                names.push(name.to_string());
+                out.names = Arc::new(names);
+                out.cols.push(view);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Batched `Engine::Optimized` filter: evaluate `pred`, keep rows
+    /// where it is true-and-valid (exactly [`super::ops::filter`]'s
+    /// optimized keep-mask), running [`Column::filter_range`] straight on
+    /// the shared parents.
+    pub fn filter_expr(&self, pred: &Expr) -> Result<ColumnBatch, FrameError> {
+        let mask_col = self.eval(pred)?;
+        let keep: Vec<bool> = match &mask_col {
+            Column::Bool(v, None) => v.clone(),
+            Column::Bool(v, Some(m)) => v.iter().zip(m).map(|(b, valid)| *b && *valid).collect(),
+            other => {
+                return Err(FrameError::Other(format!(
+                    "filter predicate must be bool, got {}",
+                    other.dtype().name()
+                )))
+            }
+        };
+        let rows = keep.iter().filter(|k| **k).count();
+        let cols = self
+            .cols
+            .iter()
+            .map(|c| ColumnView::new(Arc::new(c.parent.filter_range(&keep, c.offset))))
+            .collect();
+        Ok(ColumnBatch { names: Arc::clone(&self.names), cols, rows })
+    }
+
+    /// Batched `Engine::Optimized` cast of one column (the
+    /// type-conversion verb), via [`Column::cast_range`] on the shared
+    /// parent.
+    pub fn astype(&self, name: &str, to: DType) -> Result<ColumnBatch, FrameError> {
+        let v = self.col(name)?;
+        let cast = v.parent.cast_range(to, v.offset, v.len);
+        self.with_column(name, cast)
+    }
+
+    /// Batched `Engine::Optimized` `fillna` on an f64 column. A column
+    /// with no null mask is returned untouched — the view keeps sharing
+    /// its parent (zero-copy no-op), exactly as the per-item kernel
+    /// clones the column unchanged.
+    pub fn fillna_f64(&self, name: &str, value: f64) -> Result<ColumnBatch, FrameError> {
+        let v = self.col(name)?;
+        match v.parent.as_ref() {
+            Column::F64(vals, Some(m)) => {
+                let range = v.offset..v.offset + v.len;
+                let out: Vec<f64> = vals[range.clone()]
+                    .iter()
+                    .zip(&m[range])
+                    .map(|(x, ok)| if *ok { *x } else { value })
+                    .collect();
+                self.with_column(name, Column::f64(out))
+            }
+            _ => Ok(self.clone()),
+        }
+    }
+
+    /// Materialize the batch as an owned frame.
+    pub fn to_frame(&self) -> DataFrame {
+        let mut out = DataFrame::new();
+        for (name, col) in self.names.iter().zip(&self.cols) {
+            out.push(name, col.materialize()).expect("batch columns share row count");
+        }
+        out
+    }
+
+    /// Concatenate batches (in the order given) into one owned frame —
+    /// the gather point where the batched data plane rejoins the
+    /// single-state stages. Mask semantics match [`DataFrame::concat`]:
+    /// all-`None` masks stay `None`, otherwise missing masks expand to
+    /// all-valid. Single linear pass per column.
+    pub fn concat(parts: &[ColumnBatch]) -> Result<DataFrame, FrameError> {
+        let first = match parts.first() {
+            Some(p) => p,
+            None => return Ok(DataFrame::new()),
+        };
+        if parts.iter().any(|p| *p.names != *first.names) {
+            return Err(FrameError::Other("concat: schema mismatch".into()));
+        }
+        let total: usize = parts.iter().map(|p| p.rows).sum();
+        let mut out = DataFrame::new();
+        for (j, name) in first.names.iter().enumerate() {
+            let views: Vec<&ColumnView> = parts.iter().map(|p| &p.cols[j]).collect();
+            out.push(name, concat_views(&views, total)?)?;
+        }
+        Ok(out)
+    }
+
+    /// Estimated heap bytes of all windows (what a full clone would
+    /// copy).
+    pub fn heap_bytes(&self) -> usize {
+        self.cols.iter().map(|c| c.heap_bytes()).sum()
+    }
+
+    /// True if every column of both batches windows the same parent
+    /// allocation — the zero-copy invariant tests assert over splits and
+    /// shards.
+    pub fn shares_allocation(&self, other: &ColumnBatch) -> bool {
+        self.cols.len() == other.cols.len()
+            && self.cols.iter().zip(&other.cols).all(|(a, b)| a.shares_parent(b))
+    }
+}
+
+/// Merge column windows end to end in one pass.
+fn concat_views(views: &[&ColumnView], total: usize) -> Result<Column, FrameError> {
+    let dtype = match views.first() {
+        Some(v) => v.dtype(),
+        None => return Err(FrameError::Other("concat: no columns".into())),
+    };
+    if views.iter().any(|v| v.dtype() != dtype) {
+        return Err(FrameError::Other("concat: dtype mismatch".into()));
+    }
+    let mask = if views.iter().any(|v| v.parent.mask().is_some()) {
+        let mut m = Vec::with_capacity(total);
+        for v in views {
+            match v.parent.mask() {
+                Some(pm) => m.extend_from_slice(&pm[v.offset..v.offset + v.len]),
+                None => m.extend(std::iter::repeat(true).take(v.len)),
+            }
+        }
+        Some(m)
+    } else {
+        None
+    };
+    macro_rules! merge {
+        ($variant:ident, $as:ident) => {{
+            let mut data = Vec::with_capacity(total);
+            for v in views {
+                let vals = v.parent.$as().expect("dtype checked above");
+                data.extend_from_slice(&vals[v.offset..v.offset + v.len]);
+            }
+            Column::$variant(data, mask)
+        }};
+    }
+    Ok(match dtype {
+        DType::F64 => merge!(F64, as_f64),
+        DType::I64 => merge!(I64, as_i64),
+        DType::Str => merge!(Str, as_str),
+        DType::Bool => merge!(Bool, as_bool),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataframe::{ops, Engine};
+
+    fn sample() -> DataFrame {
+        DataFrame::from_cols(vec![
+            ("age", Column::i64((0..10i64).map(|i| 15 + i * 3).collect())),
+            (
+                "income",
+                Column::F64(
+                    (0..10).map(|i: i32| 1000.0 * f64::from(i)).collect(),
+                    Some((0..10).map(|i| i % 4 != 0).collect()),
+                ),
+            ),
+            ("tag", Column::str((0..10).map(|i| format!("r{i}")).collect())),
+        ])
+    }
+
+    #[test]
+    fn split_shares_the_parent_allocation() {
+        let parent = ColumnBatch::from_frame(sample());
+        let parts = parent.split(4);
+        assert_eq!(parts.len(), 3);
+        assert_eq!(parts.iter().map(|p| p.nrows()).collect::<Vec<_>>(), vec![4, 4, 2]);
+        for p in &parts {
+            // Pointer identity, not value equality: zero copies happened.
+            assert!(p.shares_allocation(&parent));
+        }
+        // Shard views share too, and cover all rows near-evenly.
+        let shards = parent.split_shards(4);
+        assert_eq!(shards.iter().map(|s| s.nrows()).collect::<Vec<_>>(), vec![3, 3, 2, 2]);
+        for s in &shards {
+            assert!(s.shares_allocation(&parent));
+        }
+        // Batch and shard views of the same parent also alias each other.
+        assert!(parts[0].shares_allocation(&shards[3]));
+    }
+
+    #[test]
+    fn empty_parent_still_yields_one_batch() {
+        let parent = ColumnBatch::from_frame(DataFrame::from_cols(vec![(
+            "x",
+            Column::f64(vec![]),
+        )]));
+        let parts = parent.split(256);
+        assert_eq!(parts.len(), 1);
+        assert_eq!(parts[0].nrows(), 0);
+        assert!(parts[0].shares_allocation(&parent));
+    }
+
+    #[test]
+    fn concat_of_splits_round_trips() {
+        let df = sample();
+        let parts = ColumnBatch::from_frame(df.clone()).split(3);
+        let back = ColumnBatch::concat(&parts).unwrap();
+        assert_eq!(back, df);
+    }
+
+    #[test]
+    fn drop_cols_is_metadata_only() {
+        let parent = ColumnBatch::from_frame(sample());
+        let dropped = parent.split(5)[1].drop_cols(&["tag", "missing"]);
+        assert_eq!(dropped.names(), &["age".to_string(), "income".to_string()]);
+        assert!(dropped.col("age").unwrap().shares_parent(parent.col("age").unwrap()));
+    }
+
+    #[test]
+    fn batched_verbs_match_whole_frame_engine_optimized() {
+        // Run each Table 1 verb per batch, concat in order, and compare
+        // against the per-item whole-frame kernel — bit-identical.
+        let df = sample();
+        let pred = Expr::col("age")
+            .ge(Expr::lit_i64(18))
+            .and(Expr::col("income").is_null().not());
+        let sq = Expr::col("age").mul(Expr::col("age"));
+
+        let whole = {
+            let f = ops::filter(&df, &pred, Engine::Optimized).unwrap();
+            let f = ops::with_column(&f, "age_sq", &sq, Engine::Optimized).unwrap();
+            let f = ops::astype(&f, "age", DType::F64, Engine::Optimized).unwrap();
+            ops::fillna_f64(&f, "income", 0.0, Engine::Optimized).unwrap()
+        };
+
+        let batched: Vec<ColumnBatch> = ColumnBatch::from_frame(df)
+            .split(4)
+            .into_iter()
+            .map(|b| {
+                let b = b.filter_expr(&pred).unwrap();
+                let sq_col = b.eval(&sq).unwrap();
+                let b = b.with_column("age_sq", sq_col).unwrap();
+                let b = b.astype("age", DType::F64).unwrap();
+                b.fillna_f64("income", 0.0).unwrap()
+            })
+            .collect();
+        assert_eq!(ColumnBatch::concat(&batched).unwrap(), whole);
+    }
+
+    #[test]
+    fn fillna_without_mask_keeps_the_view() {
+        let parent = ColumnBatch::from_frame(DataFrame::from_cols(vec![(
+            "x",
+            Column::f64(vec![1.0, 2.0, 3.0]),
+        )]));
+        let filled = parent.fillna_f64("x", 9.0).unwrap();
+        assert!(filled.col("x").unwrap().shares_parent(parent.col("x").unwrap()));
+    }
+
+    #[test]
+    fn with_column_replaces_in_place_like_push() {
+        let parent = ColumnBatch::from_frame(sample());
+        let b = parent.with_column("age", Column::f64(vec![0.0; 10])).unwrap();
+        assert_eq!(b.ncols(), 3);
+        assert_eq!(b.names(), parent.names());
+        assert!(!b.col("age").unwrap().shares_parent(parent.col("age").unwrap()));
+        assert!(b.col("tag").unwrap().shares_parent(parent.col("tag").unwrap()));
+        assert!(matches!(
+            parent.with_column("bad", Column::f64(vec![1.0])),
+            Err(FrameError::LengthMismatch { .. })
+        ));
+    }
+
+    #[test]
+    fn view_null_counts_are_window_local() {
+        let parent = ColumnBatch::from_frame(sample());
+        // income mask invalidates rows 0, 4, 8.
+        assert_eq!(parent.col("income").unwrap().null_count(), 3);
+        let parts = parent.split(4);
+        let counts: Vec<usize> =
+            parts.iter().map(|p| p.col("income").unwrap().null_count()).collect();
+        assert_eq!(counts, vec![1, 1, 1]);
+    }
+
+    #[test]
+    fn heap_bytes_scale_with_view_length() {
+        let parent = ColumnBatch::from_frame(DataFrame::from_cols(vec![(
+            "x",
+            Column::f64(vec![0.0; 100]),
+        )]));
+        assert_eq!(parent.heap_bytes(), 800);
+        assert_eq!(parent.slice_rows(10, 50).heap_bytes(), 400);
+    }
+}

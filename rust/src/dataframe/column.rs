@@ -299,51 +299,113 @@ impl Column {
     /// Filter by a boolean keep-mask (vectorized path).
     pub fn filter(&self, keep: &[bool]) -> Column {
         debug_assert_eq!(keep.len(), self.len());
+        self.filter_range(keep, 0)
+    }
+
+    /// Filter rows `offset..offset + keep.len()` by a keep-mask. The
+    /// whole-column [`Column::filter`] is the `offset == 0` case; batch
+    /// views use non-zero offsets so a shared parent allocation is read
+    /// once, contiguously, with no per-row boxing.
+    pub fn filter_range(&self, keep: &[bool], offset: usize) -> Column {
+        debug_assert!(offset + keep.len() <= self.len());
+        let end = offset + keep.len();
         let fm = |m: &Option<Vec<bool>>| -> Option<Vec<bool>> {
             m.as_ref().map(|m| {
-                m.iter().zip(keep).filter(|(_, k)| **k).map(|(v, _)| *v).collect()
+                m[offset..end].iter().zip(keep).filter(|(_, k)| **k).map(|(v, _)| *v).collect()
             })
         };
         match self {
             Column::F64(v, m) => Column::F64(
-                v.iter().zip(keep).filter(|(_, k)| **k).map(|(x, _)| *x).collect(),
+                v[offset..end].iter().zip(keep).filter(|(_, k)| **k).map(|(x, _)| *x).collect(),
                 fm(m),
             ),
             Column::I64(v, m) => Column::I64(
-                v.iter().zip(keep).filter(|(_, k)| **k).map(|(x, _)| *x).collect(),
+                v[offset..end].iter().zip(keep).filter(|(_, k)| **k).map(|(x, _)| *x).collect(),
                 fm(m),
             ),
             Column::Str(v, m) => Column::Str(
-                v.iter().zip(keep).filter(|(_, k)| **k).map(|(x, _)| x.clone()).collect(),
+                v[offset..end]
+                    .iter()
+                    .zip(keep)
+                    .filter(|(_, k)| **k)
+                    .map(|(x, _)| x.clone())
+                    .collect(),
                 fm(m),
             ),
             Column::Bool(v, m) => Column::Bool(
-                v.iter().zip(keep).filter(|(_, k)| **k).map(|(x, _)| *x).collect(),
+                v[offset..end].iter().zip(keep).filter(|(_, k)| **k).map(|(x, _)| *x).collect(),
                 fm(m),
             ),
         }
     }
 
+    /// Copy out rows `offset..offset + len` as an owned column (the
+    /// materialization path for a batch view).
+    pub fn slice_range(&self, offset: usize, len: usize) -> Column {
+        debug_assert!(offset + len <= self.len());
+        let end = offset + len;
+        let sm = |m: &Option<Vec<bool>>| m.as_ref().map(|m| m[offset..end].to_vec());
+        match self {
+            Column::F64(v, m) => Column::F64(v[offset..end].to_vec(), sm(m)),
+            Column::I64(v, m) => Column::I64(v[offset..end].to_vec(), sm(m)),
+            Column::Str(v, m) => Column::Str(v[offset..end].to_vec(), sm(m)),
+            Column::Bool(v, m) => Column::Bool(v[offset..end].to_vec(), sm(m)),
+        }
+    }
+
+    /// Null count over rows `offset..offset + len` only.
+    pub fn null_count_range(&self, offset: usize, len: usize) -> usize {
+        match self.mask() {
+            Some(m) => m[offset..offset + len].iter().filter(|v| !**v).count(),
+            None => 0,
+        }
+    }
+
+    /// Approximate heap footprint in bytes — the currency of the
+    /// clone-avoided ledger (`BatchReport`). Strings count their byte
+    /// length plus the inline `String` header.
+    pub fn heap_bytes(&self) -> usize {
+        let mask_bytes = self.mask().map(|m| m.len()).unwrap_or(0);
+        let data_bytes = match self {
+            Column::F64(v, _) => v.len() * std::mem::size_of::<f64>(),
+            Column::I64(v, _) => v.len() * std::mem::size_of::<i64>(),
+            Column::Bool(v, _) => v.len(),
+            Column::Str(v, _) => {
+                v.iter().map(|s| s.len() + std::mem::size_of::<String>()).sum()
+            }
+        };
+        data_bytes + mask_bytes
+    }
+
     /// Cast to another dtype (vectorized). Strings parse numerically;
     /// failures become null.
     pub fn cast(&self, to: DType) -> Column {
-        let n = self.len();
+        self.cast_range(to, 0, self.len())
+    }
+
+    /// Cast rows `offset..offset + len` to another dtype. Whole-column
+    /// [`Column::cast`] delegates here, so batched and per-item execution
+    /// share one kernel and produce bit-identical values.
+    pub fn cast_range(&self, to: DType, offset: usize, len: usize) -> Column {
+        debug_assert!(offset + len <= self.len());
+        let n = len;
         match to {
             DType::F64 => {
                 let mut out = vec![0.0f64; n];
                 let mut mask = vec![true; n];
                 let mut any_null = false;
                 for i in 0..n {
-                    if !self.is_valid(i) {
+                    let src = offset + i;
+                    if !self.is_valid(src) {
                         mask[i] = false;
                         any_null = true;
                         continue;
                     }
                     let v = match self {
-                        Column::F64(v, _) => Some(v[i]),
-                        Column::I64(v, _) => Some(v[i] as f64),
-                        Column::Bool(v, _) => Some(v[i] as i64 as f64),
-                        Column::Str(v, _) => v[i].trim().parse::<f64>().ok(),
+                        Column::F64(v, _) => Some(v[src]),
+                        Column::I64(v, _) => Some(v[src] as f64),
+                        Column::Bool(v, _) => Some(v[src] as i64 as f64),
+                        Column::Str(v, _) => v[src].trim().parse::<f64>().ok(),
                     };
                     match v {
                         Some(x) => out[i] = x,
@@ -360,16 +422,17 @@ impl Column {
                 let mut mask = vec![true; n];
                 let mut any_null = false;
                 for i in 0..n {
-                    if !self.is_valid(i) {
+                    let src = offset + i;
+                    if !self.is_valid(src) {
                         mask[i] = false;
                         any_null = true;
                         continue;
                     }
                     let v = match self {
-                        Column::F64(v, _) => Some(v[i] as i64),
-                        Column::I64(v, _) => Some(v[i]),
-                        Column::Bool(v, _) => Some(v[i] as i64),
-                        Column::Str(v, _) => v[i].trim().parse::<i64>().ok(),
+                        Column::F64(v, _) => Some(v[src] as i64),
+                        Column::I64(v, _) => Some(v[src]),
+                        Column::Bool(v, _) => Some(v[src] as i64),
+                        Column::Str(v, _) => v[src].trim().parse::<i64>().ok(),
                     };
                     match v {
                         Some(x) => out[i] = x,
@@ -384,13 +447,13 @@ impl Column {
             DType::Str => {
                 let out: Vec<String> = (0..n)
                     .map(|i| match self {
-                        Column::F64(v, _) => v[i].to_string(),
-                        Column::I64(v, _) => v[i].to_string(),
-                        Column::Bool(v, _) => v[i].to_string(),
-                        Column::Str(v, _) => v[i].clone(),
+                        Column::F64(v, _) => v[offset + i].to_string(),
+                        Column::I64(v, _) => v[offset + i].to_string(),
+                        Column::Bool(v, _) => v[offset + i].to_string(),
+                        Column::Str(v, _) => v[offset + i].clone(),
                     })
                     .collect();
-                let mask = self.mask().map(|m| m.to_vec());
+                let mask = self.mask().map(|m| m[offset..offset + n].to_vec());
                 Column::Str(out, mask)
             }
             DType::Bool => {
@@ -398,16 +461,17 @@ impl Column {
                 let mut mask = vec![true; n];
                 let mut any_null = false;
                 for i in 0..n {
-                    if !self.is_valid(i) {
+                    let src = offset + i;
+                    if !self.is_valid(src) {
                         mask[i] = false;
                         any_null = true;
                         continue;
                     }
                     out[i] = match self {
-                        Column::F64(v, _) => v[i] != 0.0,
-                        Column::I64(v, _) => v[i] != 0,
-                        Column::Bool(v, _) => v[i],
-                        Column::Str(v, _) => v[i] == "true" || v[i] == "1",
+                        Column::F64(v, _) => v[src] != 0.0,
+                        Column::I64(v, _) => v[src] != 0,
+                        Column::Bool(v, _) => v[src],
+                        Column::Str(v, _) => v[src] == "true" || v[src] == "1",
                     };
                 }
                 Column::Bool(out, any_null.then_some(mask))
@@ -489,5 +553,36 @@ mod tests {
         let c = Column::i64(vec![0, 3]);
         assert_eq!(c.cast(DType::Bool).as_bool().unwrap(), &[false, true]);
         assert_eq!(c.cast(DType::Str).as_str().unwrap(), &["0".to_string(), "3".to_string()]);
+    }
+
+    #[test]
+    fn range_kernels_match_whole_column_ops() {
+        // The whole-column kernels are the offset-0 case of the range
+        // kernels; a mid-column range must equal slicing-then-op.
+        let c = Column::F64(
+            vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0],
+            Some(vec![true, false, true, true, false, true]),
+        );
+        let sliced = c.slice_range(1, 4);
+        assert_eq!(sliced.len(), 4);
+        assert_eq!(sliced.value(0), Value::Null);
+        assert_eq!(sliced.value(1), Value::F64(3.0));
+        assert_eq!(c.null_count_range(1, 4), 2);
+        assert_eq!(c.null_count_range(2, 2), 0);
+
+        let keep = [true, false, true, true];
+        assert_eq!(c.filter_range(&keep, 1), sliced.filter(&keep));
+        assert_eq!(c.cast_range(DType::I64, 1, 4), sliced.cast(DType::I64));
+        assert_eq!(c.cast_range(DType::Str, 1, 4), sliced.cast(DType::Str));
+    }
+
+    #[test]
+    fn heap_bytes_tracks_data_and_mask() {
+        let c = Column::f64(vec![0.0; 10]);
+        assert_eq!(c.heap_bytes(), 80);
+        let m = Column::F64(vec![0.0; 10], Some(vec![true; 10]));
+        assert_eq!(m.heap_bytes(), 90);
+        let s = Column::str(vec!["ab".into(), "cde".into()]);
+        assert_eq!(s.heap_bytes(), 5 + 2 * std::mem::size_of::<String>());
     }
 }

@@ -148,15 +148,28 @@ impl Expr {
 
     /// Optimized evaluator: whole-column vectorized execution.
     pub fn eval_column(&self, df: &DataFrame) -> Result<Column, FrameError> {
-        let n = df.nrows();
+        self.eval_with(df.nrows(), &mut |name| df.col(name).cloned())
+    }
+
+    /// Vectorized evaluation against an arbitrary column resolver.
+    ///
+    /// [`Expr::eval_column`] is the `DataFrame`-backed case; the columnar
+    /// batch data plane resolves names to materialized *views* of a shared
+    /// parent allocation instead, so one kernel serves both the per-item
+    /// and batched execution paths with bit-identical results.
+    pub(crate) fn eval_with(
+        &self,
+        n: usize,
+        resolve: &mut dyn FnMut(&str) -> Result<Column, FrameError>,
+    ) -> Result<Column, FrameError> {
         Ok(match self {
-            Expr::Col(name) => df.col(name)?.clone(),
+            Expr::Col(name) => resolve(name)?,
             Expr::LitF64(x) => Column::f64(vec![*x; n]),
             Expr::LitI64(x) => Column::i64(vec![*x; n]),
             Expr::LitStr(s) => Column::str(vec![s.clone(); n]),
             Expr::LitBool(b) => Column::bool(vec![*b; n]),
             Expr::Not(e) => {
-                let c = e.eval_column(df)?;
+                let c = e.eval_with(n, resolve)?;
                 match c {
                     Column::Bool(v, m) => Column::Bool(v.iter().map(|b| !b).collect(), m),
                     other => {
@@ -168,13 +181,13 @@ impl Expr {
                 }
             }
             Expr::IsNull(e) => {
-                let c = e.eval_column(df)?;
+                let c = e.eval_with(n, resolve)?;
                 let v: Vec<bool> = (0..c.len()).map(|i| !c.is_valid(i)).collect();
                 Column::bool(v)
             }
             Expr::Bin(op, a, b) => {
-                let ca = a.eval_column(df)?;
-                let cb = b.eval_column(df)?;
+                let ca = a.eval_with(n, resolve)?;
+                let cb = b.eval_with(n, resolve)?;
                 eval_vectorized(*op, &ca, &cb)?
             }
         })

@@ -179,6 +179,13 @@ impl DataFrame {
         Ok(out)
     }
 
+    /// Decompose into `(names, columns)` without copying — the handoff
+    /// that lets [`super::batch::ColumnBatch`] take ownership of the
+    /// column allocations and share them across batch views.
+    pub fn into_parts(self) -> (Vec<String>, Vec<Column>) {
+        (self.names, self.cols)
+    }
+
     /// Render the first rows as a small table (debugging aid).
     pub fn preview(&self, n: usize) -> String {
         let mut t = crate::util::fmt::Table::new(

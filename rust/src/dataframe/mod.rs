@@ -17,6 +17,7 @@
 //! `tests/dataframe_equivalence.rs`); only the execution strategy differs,
 //! which is exactly the paper's "change two lines, keep the API" story.
 
+pub mod batch;
 pub mod column;
 pub mod frame;
 pub mod expr;
@@ -24,6 +25,7 @@ pub mod ops;
 pub mod csv;
 pub mod groupby;
 
+pub use batch::{ColumnBatch, ColumnView};
 pub use column::{Column, DType, Value};
 pub use expr::Expr;
 pub use frame::DataFrame;

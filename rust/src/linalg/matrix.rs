@@ -39,6 +39,24 @@ impl Matrix {
         Matrix { rows, cols, data: (0..rows * cols).map(|_| rng.normal()).collect() }
     }
 
+    /// Assemble a feature matrix from column slices in one row-major
+    /// pass. The dataframe→matrix handoff is a hot loop in every tabular
+    /// pipeline; writing `data` sequentially (instead of `set(i, j, v)`
+    /// column by column, which strides by `cols` on every write) keeps
+    /// the stores contiguous. Panics if the slices differ in length.
+    pub fn from_columns(cols: &[&[f64]]) -> Self {
+        let ncols = cols.len();
+        let nrows = cols.first().map(|c| c.len()).unwrap_or(0);
+        assert!(cols.iter().all(|c| c.len() == nrows), "column length mismatch");
+        let mut data = Vec::with_capacity(nrows * ncols);
+        for i in 0..nrows {
+            for col in cols {
+                data.push(col[i]);
+            }
+        }
+        Matrix { rows: nrows, cols: ncols, data }
+    }
+
     /// Element access.
     #[inline(always)]
     pub fn get(&self, r: usize, c: usize) -> f64 {
@@ -156,6 +174,20 @@ mod tests {
     #[should_panic(expected = "shape mismatch")]
     fn from_vec_validates() {
         Matrix::from_vec(2, 2, vec![1.0]);
+    }
+
+    #[test]
+    fn from_columns_matches_per_element_fill() {
+        let a = [1.0, 2.0, 3.0];
+        let b = [4.0, 5.0, 6.0];
+        let m = Matrix::from_columns(&[&a, &b]);
+        let mut want = Matrix::zeros(3, 2);
+        for i in 0..3 {
+            want.set(i, 0, a[i]);
+            want.set(i, 1, b[i]);
+        }
+        assert_eq!(m, want);
+        assert_eq!(Matrix::from_columns(&[]).rows, 0);
     }
 
     #[test]

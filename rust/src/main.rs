@@ -71,6 +71,8 @@ fn print_help() {
          \x20                                   again with metrics identical to sequential\n\
          \x20 --scale F                         dataset scale multiplier (default 1.0)\n\
          \x20 --seed N                          RNG seed (default 0xE2E)\n\
+         \x20 --batch-rows N                    rows per columnar batch for the tabular\n\
+         \x20                                   pipelines (0 = per-item data plane; default 0)\n\
          \n\
          OPTIONS (serve):\n\
          \x20 --requests N                      requests to submit (default 12)\n\
@@ -102,6 +104,7 @@ fn parse_cfg(args: &Args) -> RunConfig {
         scale: args.get_parse("scale", 1.0f64),
         seed: args.get_parse("seed", 0xE2Eu64),
         exec,
+        batch_rows: args.get_parse("batch-rows", 0usize),
     }
 }
 
@@ -146,6 +149,17 @@ fn cmd_run(args: &Args) -> i32 {
                     sched.parked,
                     sched.woken,
                     sched.max_in_flight
+                );
+            }
+            if let Some(b) = &res.batching {
+                println!(
+                    "batches: {} ({:.1} rows/batch; {} rows in = {} out + {} filtered; {:.1}% of moved bytes zero-copy)",
+                    b.batches,
+                    b.mean_rows(),
+                    b.rows_in,
+                    b.rows_out,
+                    b.rows_filtered,
+                    b.zero_copy_fraction() * 100.0
                 );
             }
             if let Some(sharding) = &res.sharding {

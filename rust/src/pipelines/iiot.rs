@@ -11,14 +11,15 @@
 
 use super::{CompiledPipeline, Output, PipelineResult, RunConfig, Workload};
 use crate::coordinator::plan::{CompiledPlan, Slicing, WorkloadSlice};
-use crate::coordinator::telemetry::Category;
+use crate::coordinator::telemetry::{BatchLedger, Category};
 use crate::coordinator::{Plan, PlanOutput};
-use crate::dataframe::{self as df, DataFrame, Engine};
+use crate::dataframe::{self as df, ColumnBatch, DataFrame, Engine};
 use crate::linalg::Matrix;
 use crate::ml::{metrics, RandomForest, RandomForestParams};
 use crate::util::Rng;
 use crate::OptLevel;
 use std::collections::BTreeMap;
+use std::sync::Arc;
 
 const SENSORS: usize = 48;
 /// Sensors that actually carry the failure signal.
@@ -89,8 +90,12 @@ pub fn plan_with(cfg: &RunConfig, workload: Workload) -> anyhow::Result<Plan> {
 }
 
 /// Compile the IIoT stage graph once; binds accept a
-/// [`Workload::Table`] payload (single-state tabular shape).
+/// [`Workload::Table`] payload (single-state tabular shape). With
+/// `cfg.batch_rows > 0` the batched twin graph compiles instead.
 pub fn compile(cfg: &RunConfig) -> anyhow::Result<CompiledPipeline> {
+    if cfg.batch_rows > 0 {
+        return compile_batched(cfg);
+    }
     let engine: Engine = cfg.toggles.dataframe.into();
     let ml = cfg.toggles.ml;
     Ok(CompiledPlan::source(
@@ -157,40 +162,10 @@ pub fn compile(cfg: &RunConfig) -> anyhow::Result<CompiledPipeline> {
     })
     .map("train_test_split", Category::Pre, |_seed| |s: State| Ok(s))
     .map("random_forest", Category::Ai, |_seed| |mut s: State| {
-        let (train, test) = df::ops::train_test_split(&s.frame, 0.3, s.seed);
-        let to_xy = |frame: &DataFrame| -> anyhow::Result<(Matrix, Vec<usize>)> {
-            let feats: Vec<String> = frame
-                .schema()
-                .into_iter()
-                .map(|(n, _)| n)
-                .filter(|n| n != "failure")
-                .collect();
-            let n = frame.nrows();
-            let mut x = Matrix::zeros(n, feats.len());
-            for (j, f) in feats.iter().enumerate() {
-                let col = frame.f64s(f)?;
-                for i in 0..n {
-                    x.set(i, j, col[i]);
-                }
-            }
-            let y: Vec<usize> = frame.i64s("failure")?.iter().map(|&v| v as usize).collect();
-            Ok((x, y))
-        };
-        let (xt, yt) = to_xy(&train)?;
-        let (xs, ys) = to_xy(&test)?;
-        let rf = RandomForest::fit(
-            &xt,
-            &yt,
-            &RandomForestParams { n_trees: 20, max_depth: 8, ..Default::default() },
-            s.ml,
-        );
-        s.pred = rf.predict(&xs).iter().map(|&c| c as f64).collect();
-        s.proba = rf
-            .predict_proba(&xs)
-            .iter()
-            .map(|p| p.get(1).copied().unwrap_or(0.0))
-            .collect();
-        s.truth = ys.iter().map(|&c| c as f64).collect();
+        let (pred, proba, truth) = rf_scores(&s.frame, s.ml, s.seed)?;
+        s.pred = pred;
+        s.proba = proba;
+        s.truth = truth;
         Ok(s)
     })
     .sink("finalize", Category::Post, move |payload: &Workload, _seed| {
@@ -217,6 +192,209 @@ pub fn compile(cfg: &RunConfig) -> anyhow::Result<CompiledPipeline> {
             },
         ))
     }))
+}
+
+/// Shared model-stage body for both data planes: split 70/30, assemble
+/// X/y in one contiguous row-major pass ([`Matrix::from_columns`]), fit
+/// the forest, score the held-out split.
+fn rf_scores(
+    frame: &DataFrame,
+    ml: OptLevel,
+    seed: u64,
+) -> anyhow::Result<(Vec<f64>, Vec<f64>, Vec<f64>)> {
+    let (train, test) = df::ops::train_test_split(frame, 0.3, seed);
+    let to_xy = |frame: &DataFrame| -> anyhow::Result<(Matrix, Vec<usize>)> {
+        let feats: Vec<String> = frame
+            .schema()
+            .into_iter()
+            .map(|(n, _)| n)
+            .filter(|n| n != "failure")
+            .collect();
+        let mut cols: Vec<&[f64]> = Vec::with_capacity(feats.len());
+        for f in &feats {
+            cols.push(frame.f64s(f)?);
+        }
+        let x = Matrix::from_columns(&cols);
+        let y: Vec<usize> = frame.i64s("failure")?.iter().map(|&v| v as usize).collect();
+        Ok((x, y))
+    };
+    let (xt, yt) = to_xy(&train)?;
+    let (xs, ys) = to_xy(&test)?;
+    let rf = RandomForest::fit(
+        &xt,
+        &yt,
+        &RandomForestParams { n_trees: 20, max_depth: 8, ..Default::default() },
+        ml,
+    );
+    let pred: Vec<f64> = rf.predict(&xs).iter().map(|&c| c as f64).collect();
+    let proba: Vec<f64> = rf
+        .predict_proba(&xs)
+        .iter()
+        .map(|p| p.get(1).copied().unwrap_or(0.0))
+        .collect();
+    let truth: Vec<f64> = ys.iter().map(|&c| c as f64).collect();
+    Ok((pred, proba, truth))
+}
+
+/// One zero-copy slice of the parsed sensor table in the batched graph.
+struct Chunk {
+    index: usize,
+    total: usize,
+    batch: ColumnBatch,
+}
+
+/// The gathered, cleaned table (post-concat, pre-model).
+struct Gathered {
+    frame: DataFrame,
+    kept_cols: usize,
+}
+
+/// The model stage's output.
+struct Scores {
+    pred: Vec<f64>,
+    proba: Vec<f64>,
+    truth: Vec<f64>,
+    kept_cols: usize,
+}
+
+/// The batched twin of [`compile`]. The drop decision is global (a
+/// column is dropped when over half of ALL its rows are null), but
+/// every chunk's views share the same parent allocations — so the
+/// first chunk computes the drop list from the parents' whole-column
+/// null counts, the closure caches it, and every chunk applies the
+/// identical list regardless of arrival order.
+fn compile_batched(cfg: &RunConfig) -> anyhow::Result<CompiledPipeline> {
+    let engine: Engine = cfg.toggles.dataframe.into();
+    let ml = cfg.toggles.ml;
+    let batch_rows = cfg.batch_rows;
+    let ledger = Arc::new(BatchLedger::default());
+    let split_ledger = Arc::clone(&ledger);
+    let drop_ledger = Arc::clone(&ledger);
+    let fill_ledger = Arc::clone(&ledger);
+    let gather_ledger = Arc::clone(&ledger);
+    Ok(CompiledPlan::source(
+        "iiot",
+        "source",
+        Category::Pre,
+        Slicing::SingleState,
+        move |slice: WorkloadSlice<Workload>| {
+            let csv = match slice.payload {
+                Workload::Table { csv } => csv,
+                other => return Err(super::workload_mismatch("iiot", "table", &other)),
+            };
+            let mut initial = Some(csv);
+            Ok(move |emit: &mut dyn FnMut(String)| {
+                if let Some(csv) = initial.take() {
+                    emit(csv);
+                }
+            })
+        },
+    )
+    .flat_map("read_measurements", Category::Pre, move |_seed| {
+        let ledger = Arc::clone(&split_ledger);
+        move |csv: String| {
+            let whole = ColumnBatch::from_frame(df::csv::read_str(&csv, engine)?);
+            let parts = whole.split(batch_rows);
+            let shared: usize = parts.iter().map(ColumnBatch::heap_bytes).sum();
+            ledger.record_split(parts.len(), whole.nrows(), shared);
+            let total = parts.len();
+            Ok(parts
+                .into_iter()
+                .enumerate()
+                .map(|(index, batch)| Chunk { index, total, batch })
+                .collect())
+        }
+    })
+    .map("drop_inessential_columns", Category::Pre, move |_seed| {
+        let ledger = Arc::clone(&drop_ledger);
+        let mut cached_drop: Option<Vec<String>> = None;
+        move |mut c: Chunk| {
+            if cached_drop.is_none() {
+                // Whole-column null counts from the shared parents:
+                // identical from any chunk, computed once per bind.
+                let mut drop: Vec<String> = Vec::new();
+                for name in c.batch.names().to_vec() {
+                    if name == "failure" || name == "line_id" {
+                        continue;
+                    }
+                    let v = c.batch.col(&name)?;
+                    let n = v.parent().len().max(1);
+                    if v.parent().null_count() * 2 > n {
+                        drop.push(name);
+                    }
+                }
+                cached_drop = Some(drop);
+            }
+            let drop = cached_drop.as_ref().expect("drop list cached above");
+            let mut drop_refs: Vec<&str> = drop.iter().map(|s| s.as_str()).collect();
+            drop_refs.push("line_id");
+            c.batch = c.batch.drop_cols(&drop_refs);
+            ledger.record_view(c.batch.heap_bytes());
+            Ok(c)
+        }
+    })
+    .map("fill_missing", Category::Pre, move |_seed| {
+        let ledger = Arc::clone(&fill_ledger);
+        move |mut c: Chunk| {
+            for name in c.batch.names().to_vec() {
+                if name != "failure" {
+                    let had_mask = c.batch.col(&name)?.parent().mask().is_some();
+                    c.batch = c.batch.fillna_f64(&name, 0.0)?;
+                    if had_mask {
+                        ledger.record_copy(c.batch.col(&name)?.heap_bytes());
+                    }
+                }
+            }
+            Ok(c)
+        }
+    })
+    .gather("train_test_split", Category::Pre, move |_seed| {
+        let ledger = Arc::clone(&gather_ledger);
+        let mut pending: Vec<Chunk> = Vec::new();
+        move |c: Chunk| {
+            let total = c.total;
+            pending.push(c);
+            if pending.len() < total {
+                return Ok(None);
+            }
+            pending.sort_by_key(|c| c.index);
+            let parts: Vec<ColumnBatch> = pending.drain(..).map(|c| c.batch).collect();
+            let frame = ColumnBatch::concat(&parts)?;
+            ledger.record_gather(frame.nrows());
+            let kept_cols = frame.ncols() - 1;
+            Ok(Some(Gathered { frame, kept_cols }))
+        }
+    })
+    .map("random_forest", Category::Ai, move |seed| {
+        move |g: Gathered| {
+            let (pred, proba, truth) = rf_scores(&g.frame, ml, seed)?;
+            Ok(Scores { pred, proba, truth, kept_cols: g.kept_cols })
+        }
+    })
+    .sink("finalize", Category::Post, move |payload: &Workload, _seed| {
+        let rows = match payload {
+            Workload::Table { csv } => csv.lines().count().saturating_sub(1),
+            other => return Err(super::workload_mismatch("iiot", "table", other)),
+        };
+        Ok((
+            None,
+            |slot: &mut Option<Scores>, s: Scores| {
+                *slot = Some(s);
+                Ok(())
+            },
+            move |slot: Option<Scores>| {
+                let s = slot
+                    .ok_or_else(|| anyhow::anyhow!("iiot pipeline produced no result"))?;
+                let mut m = BTreeMap::new();
+                m.insert("f1".to_string(), metrics::f1(&s.truth, &s.pred));
+                m.insert("accuracy".to_string(), metrics::accuracy(&s.truth, &s.pred));
+                m.insert("auc".to_string(), metrics::auc(&s.truth, &s.proba));
+                m.insert("kept_columns".to_string(), s.kept_cols as f64);
+                Ok(PlanOutput { metrics: m, items: rows })
+            },
+        ))
+    })
+    .with_batch_ledger(ledger))
 }
 
 /// Run the IIoT pipeline under `cfg.exec`.
@@ -254,6 +432,22 @@ mod tests {
         let kept = res.metric("kept_columns").unwrap() as usize;
         // Essential sensors (6) survive; most sparse ones are dropped.
         assert!((ESSENTIAL..SENSORS / 2).contains(&kept), "kept={kept}");
+    }
+
+    #[test]
+    fn batched_data_plane_matches_per_item_metrics() {
+        // The drop decision is global; the batched graph must reproduce
+        // it (and every downstream metric, kept_columns included) from
+        // chunk-shared parent allocations.
+        let cfg = RunConfig { toggles: Toggles::optimized(), scale: 0.15, seed: 4, ..Default::default() };
+        let per_item = run(&cfg).unwrap();
+        let batched = run(&RunConfig { batch_rows: 128, ..cfg }).unwrap();
+        assert_eq!(per_item.metrics, batched.metrics);
+        assert_eq!(per_item.items, batched.items);
+        let b = batched.batching.expect("batched run reports batch counters");
+        assert!(b.batches > 1, "{b:?}");
+        assert!(b.balanced(), "rows in != rows out + filtered: {b:?}");
+        assert!(b.clone_avoided_bytes > 0, "{b:?}");
     }
 
     #[test]

@@ -54,7 +54,7 @@ pub use workload::{Output, Workload};
 pub(crate) use workload::workload_mismatch;
 
 use crate::coordinator::plan::{CompiledPlan, Sharder, Slicing};
-use crate::coordinator::telemetry::{Report, SchedReport, ShardedReport};
+use crate::coordinator::telemetry::{BatchReport, Report, SchedReport, ShardedReport};
 use crate::coordinator::{exec, ExecMode, ExecOutcome, Plan};
 use crate::runtime::ModelClient;
 use crate::OptLevel;
@@ -119,6 +119,15 @@ pub struct RunConfig {
     pub seed: u64,
     /// Which executor runs the plan (sequential / streaming / multi).
     pub exec: ExecMode,
+    /// Rows per [`ColumnBatch`] for the tabular pipelines' columnar
+    /// data plane. `0` (the default) keeps the per-item graph; any
+    /// positive value compiles the batched graph, whose stages move
+    /// Arc-backed zero-copy batch views instead of one whole-dataset
+    /// state item. Metrics are identical either way (pinned by the
+    /// conformance suite); only the data plane changes.
+    ///
+    /// [`ColumnBatch`]: crate::dataframe::ColumnBatch
+    pub batch_rows: usize,
 }
 
 impl Default for RunConfig {
@@ -128,6 +137,7 @@ impl Default for RunConfig {
             scale: 1.0,
             seed: 0xE2E,
             exec: ExecMode::Sequential,
+            batch_rows: 0,
         }
     }
 }
@@ -159,6 +169,14 @@ pub struct PipelineResult {
     /// streams on it); `None` under the thread-based executors. Kept
     /// out of `metrics` for the same conformance reason as `sharding`.
     pub sched: Option<SchedReport>,
+    /// Batch-plane counters for runs whose graph moved [`ColumnBatch`]
+    /// items (`RunConfig::batch_rows > 0` on a batched pipeline);
+    /// `None` for per-item runs. Kept out of `metrics` for the same
+    /// conformance reason as `sharding`: a batched run's metric map
+    /// must equal the per-item run's bit-for-bit.
+    ///
+    /// [`ColumnBatch`]: crate::dataframe::ColumnBatch
+    pub batching: Option<BatchReport>,
 }
 
 impl PipelineResult {
@@ -303,6 +321,7 @@ pub fn run_compiled(
     cfg: &RunConfig,
 ) -> anyhow::Result<PipelineResult> {
     let base = *cfg;
+    let batch_before = compiled.batch_report();
     let outcome = match cfg.exec {
         ExecMode::Sequential => {
             exec::run_sequential(compiled.bind(materialize(entry, cfg, payload), cfg.seed)?)?
@@ -342,7 +361,12 @@ pub fn run_compiled(
             })?
         }
     };
-    Ok(finish_outcome(outcome))
+    let mut result = finish_outcome(outcome);
+    let batch_delta = compiled.batch_report().since(&batch_before);
+    if batch_delta.batches > 0 {
+        result.batching = Some(batch_delta);
+    }
+    Ok(result)
 }
 
 /// Compile + execute one registry entry over its synthetic payload —
@@ -381,6 +405,7 @@ pub(crate) fn finish_outcome(outcome: ExecOutcome) -> PipelineResult {
         items: outcome.output.items,
         sharding: outcome.sharding,
         sched: outcome.sched,
+        batching: None,
     }
 }
 

@@ -13,14 +13,15 @@
 
 use super::{CompiledPipeline, Output, PipelineResult, RunConfig, Workload};
 use crate::coordinator::plan::{CompiledPlan, Slicing, WorkloadSlice};
-use crate::coordinator::telemetry::Category;
+use crate::coordinator::telemetry::{BatchLedger, Category};
 use crate::coordinator::{Plan, PlanOutput};
-use crate::dataframe::{self as df, groupby::Agg, DType, DataFrame, Engine, Expr};
+use crate::dataframe::{self as df, groupby::Agg, ColumnBatch, DType, DataFrame, Engine, Expr};
 use crate::linalg::Matrix;
 use crate::ml::{metrics, Gbt, GbtParams, TreeMethod};
 use crate::util::Rng;
 use crate::OptLevel;
 use std::collections::BTreeMap;
+use std::sync::Arc;
 
 /// Generate the light-curve observations CSV: one row per (object, epoch,
 /// passband) with flux/flux_err, plus a per-object hidden class.
@@ -95,7 +96,11 @@ pub fn plan_with(cfg: &RunConfig, workload: Workload) -> anyhow::Result<Plan> {
 
 /// Compile the PLAsTiCC stage graph once; binds accept a
 /// [`Workload::LightCurves`] payload (single-state tabular shape).
+/// With `cfg.batch_rows > 0` the batched twin graph compiles instead.
 pub fn compile(cfg: &RunConfig) -> anyhow::Result<CompiledPipeline> {
+    if cfg.batch_rows > 0 {
+        return compile_batched(cfg);
+    }
     let engine: Engine = cfg.toggles.dataframe.into();
     let ml = cfg.toggles.ml;
     Ok(CompiledPlan::source(
@@ -170,67 +175,17 @@ pub fn compile(cfg: &RunConfig) -> anyhow::Result<CompiledPipeline> {
         Ok(s)
     })
     .map("train_test_split", Category::Pre, |_seed| |mut s: State| {
-        // Features come out grouped by object id (0..objects); attach
-        // labels then split.
-        let n = s.features.nrows();
-        let ids = s.features.i64s("object_id")?.to_vec();
-        let labels: Vec<f64> = ids
-            .iter()
-            .map(|&i| {
-                s.labels.get(i as usize).copied().ok_or_else(|| {
-                    anyhow::anyhow!("plasticc: no target for object_id {i} (payload has {})",
-                        s.labels.len())
-                })
-            })
-            .collect::<anyhow::Result<_>>()?;
-        let cols = [
-            "flux_mean", "flux_std", "flux_min", "flux_max", "snr_mean", "snr_std",
-            "flux_err_mean",
-        ];
-        let mut x = Matrix::zeros(n, cols.len());
-        for (j, c) in cols.iter().enumerate() {
-            let v = s.features.f64s(c)?;
-            for i in 0..n {
-                x.set(i, j, v[i]);
-            }
-        }
-        // Deterministic shuffled split 75/25.
-        let mut idx: Vec<usize> = (0..n).collect();
-        let mut rng = Rng::new(s.seed ^ 0x51);
-        rng.shuffle(&mut idx);
-        let n_test = n / 4;
-        let (test_idx, train_idx) = idx.split_at(n_test);
-        let take = |rows: &[usize]| {
-            let mut xm = Matrix::zeros(rows.len(), cols.len());
-            let mut ym = Vec::with_capacity(rows.len());
-            for (r, &i) in rows.iter().enumerate() {
-                for j in 0..cols.len() {
-                    xm.set(r, j, x.get(i, j));
-                }
-                ym.push(labels[i]);
-            }
-            (xm, ym)
-        };
-        let (xt, yt) = take(train_idx);
+        let (xt, yt, xs, ys) = split_features(&s.features, &s.labels, s.seed)?;
         s.x_train = xt;
         s.y_train = yt;
-        let (xs, ys) = take(test_idx);
         s.x_test = xs;
         s.y_test = ys;
         Ok(s)
     })
     .map("gbt_train_infer", Category::Ai, |_seed| |mut s: State| {
-        let method = match s.ml {
-            OptLevel::Baseline => TreeMethod::Exact,
-            OptLevel::Optimized => TreeMethod::Hist,
-        };
-        let gbt = Gbt::fit(
-            &s.x_train,
-            &s.y_train,
-            GbtParams { method, n_trees: 25, max_depth: 4, ..Default::default() },
-        );
-        s.pred = gbt.predict(&s.x_test);
-        s.proba = gbt.predict_proba(&s.x_test);
+        let (pred, proba) = gbt_scores(&s.x_train, &s.y_train, &s.x_test, s.ml);
+        s.pred = pred;
+        s.proba = proba;
         Ok(s)
     })
     .sink("finalize", Category::Post, move |payload: &Workload, _seed| {
@@ -255,6 +210,266 @@ pub fn compile(cfg: &RunConfig) -> anyhow::Result<CompiledPipeline> {
             },
         ))
     }))
+}
+
+/// Shared split-stage body: attach labels by object id, assemble the
+/// feature matrix in one contiguous row-major pass
+/// ([`Matrix::from_columns`]), deterministic 75/25 shuffled split.
+fn split_features(
+    features: &DataFrame,
+    all_labels: &[f64],
+    seed: u64,
+) -> anyhow::Result<(Matrix, Vec<f64>, Matrix, Vec<f64>)> {
+    // Features come out grouped by object id (0..objects); attach
+    // labels then split.
+    let n = features.nrows();
+    let ids = features.i64s("object_id")?;
+    let labels: Vec<f64> = ids
+        .iter()
+        .map(|&i| {
+            all_labels.get(i as usize).copied().ok_or_else(|| {
+                anyhow::anyhow!(
+                    "plasticc: no target for object_id {i} (payload has {})",
+                    all_labels.len()
+                )
+            })
+        })
+        .collect::<anyhow::Result<_>>()?;
+    let cols = [
+        "flux_mean", "flux_std", "flux_min", "flux_max", "snr_mean", "snr_std",
+        "flux_err_mean",
+    ];
+    let mut feature_cols: Vec<&[f64]> = Vec::with_capacity(cols.len());
+    for c in cols {
+        feature_cols.push(features.f64s(c)?);
+    }
+    let x = Matrix::from_columns(&feature_cols);
+    // Deterministic shuffled split 75/25.
+    let mut idx: Vec<usize> = (0..n).collect();
+    let mut rng = Rng::new(seed ^ 0x51);
+    rng.shuffle(&mut idx);
+    let n_test = n / 4;
+    let (test_idx, train_idx) = idx.split_at(n_test);
+    let take = |rows: &[usize]| {
+        let mut xm = Matrix::zeros(rows.len(), cols.len());
+        let mut ym = Vec::with_capacity(rows.len());
+        for (r, &i) in rows.iter().enumerate() {
+            for j in 0..cols.len() {
+                xm.set(r, j, x.get(i, j));
+            }
+            ym.push(labels[i]);
+        }
+        (xm, ym)
+    };
+    let (x_train, y_train) = take(train_idx);
+    let (x_test, y_test) = take(test_idx);
+    Ok((x_train, y_train, x_test, y_test))
+}
+
+/// Shared model-stage body for both data planes.
+fn gbt_scores(
+    x_train: &Matrix,
+    y_train: &[f64],
+    x_test: &Matrix,
+    ml: OptLevel,
+) -> (Vec<f64>, Vec<f64>) {
+    let method = match ml {
+        OptLevel::Baseline => TreeMethod::Exact,
+        OptLevel::Optimized => TreeMethod::Hist,
+    };
+    let gbt = Gbt::fit(
+        x_train,
+        y_train,
+        GbtParams { method, n_trees: 25, max_depth: 4, ..Default::default() },
+    );
+    (gbt.predict(x_test), gbt.predict_proba(x_test))
+}
+
+/// Raw payload handoff in the batched graph: the observation CSV plus
+/// the per-object labels the post-gather stages need.
+struct Raw {
+    csv: String,
+    labels: Arc<Vec<f64>>,
+}
+
+/// One zero-copy slice of the parsed observation table. The labels ride
+/// along as a shared `Arc` so the gather stage can hand them to the
+/// split without a side channel.
+struct Chunk {
+    index: usize,
+    total: usize,
+    batch: ColumnBatch,
+    labels: Arc<Vec<f64>>,
+}
+
+/// Gathered per-object features (post-groupby) plus labels.
+struct Features {
+    frame: DataFrame,
+    labels: Arc<Vec<f64>>,
+}
+
+/// The four split matrices (post-split, pre-model).
+struct SplitMats {
+    x_train: Matrix,
+    y_train: Vec<f64>,
+    x_test: Matrix,
+    y_test: Vec<f64>,
+}
+
+/// The model stage's output.
+struct Scores {
+    pred: Vec<f64>,
+    proba: Vec<f64>,
+    y_test: Vec<f64>,
+}
+
+/// The batched twin of [`compile`]: chunked observation rows flow as
+/// [`ColumnBatch`] views through the row-local stages (drop, SNR);
+/// the gather at `groupby_aggregation` reassembles the full table —
+/// groupby needs every observation of an object — and everything
+/// downstream matches the per-item stages exactly.
+fn compile_batched(cfg: &RunConfig) -> anyhow::Result<CompiledPipeline> {
+    let engine: Engine = cfg.toggles.dataframe.into();
+    let ml = cfg.toggles.ml;
+    let batch_rows = cfg.batch_rows;
+    let ledger = Arc::new(BatchLedger::default());
+    let split_ledger = Arc::clone(&ledger);
+    let drop_ledger = Arc::clone(&ledger);
+    let arith_ledger = Arc::clone(&ledger);
+    let gather_ledger = Arc::clone(&ledger);
+    Ok(CompiledPlan::source(
+        "plasticc",
+        "source",
+        Category::Pre,
+        Slicing::SingleState,
+        move |slice: WorkloadSlice<Workload>| {
+            let (csv, labels) = match slice.payload {
+                Workload::LightCurves { csv, targets } => (csv, targets),
+                other => {
+                    return Err(super::workload_mismatch("plasticc", "light_curves", &other))
+                }
+            };
+            let mut initial = Some(Raw { csv, labels: Arc::new(labels) });
+            Ok(move |emit: &mut dyn FnMut(Raw)| {
+                if let Some(raw) = initial.take() {
+                    emit(raw);
+                }
+            })
+        },
+    )
+    .flat_map("load_data", Category::Pre, move |_seed| {
+        let ledger = Arc::clone(&split_ledger);
+        move |raw: Raw| {
+            let whole = ColumnBatch::from_frame(df::csv::read_str(&raw.csv, engine)?);
+            let parts = whole.split(batch_rows);
+            let shared: usize = parts.iter().map(ColumnBatch::heap_bytes).sum();
+            ledger.record_split(parts.len(), whole.nrows(), shared);
+            let total = parts.len();
+            let labels = raw.labels;
+            Ok(parts
+                .into_iter()
+                .enumerate()
+                .map(|(index, batch)| Chunk {
+                    index,
+                    total,
+                    batch,
+                    labels: Arc::clone(&labels),
+                })
+                .collect())
+        }
+    })
+    .map("drop_columns", Category::Pre, move |_seed| {
+        let ledger = Arc::clone(&drop_ledger);
+        move |mut c: Chunk| {
+            c.batch = c.batch.drop_cols(&["mjd", "detected"]);
+            // The kept views still share the parse allocation — bytes a
+            // per-item drop would have cloned.
+            ledger.record_view(c.batch.heap_bytes());
+            Ok(c)
+        }
+    })
+    .map("arithmetic_ops", Category::Pre, move |_seed| {
+        let ledger = Arc::clone(&arith_ledger);
+        let snr = Expr::col("flux").div(Expr::col("flux_err"));
+        move |mut c: Chunk| {
+            let col = c.batch.eval(&snr)?;
+            ledger.record_copy(col.heap_bytes());
+            c.batch = c.batch.with_column("snr", col)?;
+            Ok(c)
+        }
+    })
+    .gather("groupby_aggregation", Category::Pre, move |_seed| {
+        let ledger = Arc::clone(&gather_ledger);
+        let mut pending: Vec<Chunk> = Vec::new();
+        move |c: Chunk| {
+            let total = c.total;
+            pending.push(c);
+            if pending.len() < total {
+                return Ok(None);
+            }
+            pending.sort_by_key(|c| c.index);
+            let labels = Arc::clone(&pending[0].labels);
+            let parts: Vec<ColumnBatch> = pending.drain(..).map(|c| c.batch).collect();
+            let frame = ColumnBatch::concat(&parts)?;
+            ledger.record_gather(frame.nrows());
+            let features = df::groupby::groupby_agg(
+                &frame,
+                &["object_id"],
+                &[
+                    ("flux", Agg::Mean),
+                    ("flux", Agg::Std),
+                    ("flux", Agg::Min),
+                    ("flux", Agg::Max),
+                    ("snr", Agg::Mean),
+                    ("snr", Agg::Std),
+                    ("flux_err", Agg::Mean),
+                ],
+                engine,
+            )?;
+            Ok(Some(Features { frame: features, labels }))
+        }
+    })
+    .map("type_conversion", Category::Pre, move |_seed| {
+        move |mut f: Features| {
+            f.frame = df::ops::astype(&f.frame, "object_id", DType::I64, engine)?;
+            Ok(f)
+        }
+    })
+    .map("train_test_split", Category::Pre, |seed| {
+        move |f: Features| {
+            let (x_train, y_train, x_test, y_test) =
+                split_features(&f.frame, &f.labels, seed)?;
+            Ok(SplitMats { x_train, y_train, x_test, y_test })
+        }
+    })
+    .map("gbt_train_infer", Category::Ai, move |_seed| {
+        move |s: SplitMats| {
+            let (pred, proba) = gbt_scores(&s.x_train, &s.y_train, &s.x_test, ml);
+            Ok(Scores { pred, proba, y_test: s.y_test })
+        }
+    })
+    .sink("finalize", Category::Post, move |payload: &Workload, _seed| {
+        let observations = match payload {
+            Workload::LightCurves { csv, .. } => csv.lines().count().saturating_sub(1),
+            other => return Err(super::workload_mismatch("plasticc", "light_curves", other)),
+        };
+        Ok((
+            None,
+            |slot: &mut Option<Scores>, s: Scores| {
+                *slot = Some(s);
+                Ok(())
+            },
+            move |slot: Option<Scores>| {
+                let s = slot
+                    .ok_or_else(|| anyhow::anyhow!("plasticc pipeline produced no result"))?;
+                let mut m = BTreeMap::new();
+                m.insert("accuracy".to_string(), metrics::accuracy(&s.y_test, &s.pred));
+                m.insert("auc".to_string(), metrics::auc(&s.y_test, &s.proba));
+                Ok(PlanOutput { metrics: m, items: observations })
+            },
+        ))
+    })
+    .with_batch_ledger(ledger))
 }
 
 /// Run the PLAsTiCC pipeline under `cfg.exec`.
@@ -298,6 +513,20 @@ mod tests {
             a.metrics,
             b.metrics
         );
+    }
+
+    #[test]
+    fn batched_data_plane_matches_per_item_metrics() {
+        let cfg = RunConfig { toggles: Toggles::optimized(), scale: 0.3, seed: 11, ..Default::default() };
+        let per_item = run(&cfg).unwrap();
+        let batched = run(&RunConfig { batch_rows: 256, ..cfg }).unwrap();
+        assert_eq!(per_item.metrics, batched.metrics);
+        assert_eq!(per_item.items, batched.items);
+        let b = batched.batching.expect("batched run reports batch counters");
+        assert!(b.batches > 1, "{b:?}");
+        assert!(b.balanced(), "rows in != rows out + filtered: {b:?}");
+        assert_eq!(b.rows_filtered, 0, "plasticc drops no observation rows");
+        assert!(b.clone_avoided_bytes > 0, "{b:?}");
     }
 
     #[test]

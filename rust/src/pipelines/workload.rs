@@ -68,6 +68,37 @@ fn round_robin<T: Clone>(items: &[T], shard: usize, of: usize) -> Vec<T> {
         .collect()
 }
 
+/// The header line of a CSV payload with its trailing newline, or an
+/// empty string when the payload has no lines at all. Keeping the
+/// header on "empty" slices matters: a headered empty string parses as
+/// a zero-ROW frame with the right schema, whereas a truly empty
+/// string parses as a zero-COLUMN frame that downstream stages cannot
+/// type-check against.
+fn csv_header(csv: &str) -> String {
+    match csv.lines().next() {
+        Some(header) => format!("{header}\n"),
+        None => String::new(),
+    }
+}
+
+/// Round-robin over the DATA rows of a CSV payload (everything after
+/// the header line), keeping the header on every slice so each slice
+/// is itself a parseable payload of the same schema.
+fn csv_round_robin(csv: &str, shard: usize, of: usize) -> String {
+    let mut lines = csv.lines();
+    let mut out = match lines.next() {
+        Some(header) => format!("{header}\n"),
+        None => return String::new(),
+    };
+    for (i, row) in lines.enumerate() {
+        if i % of == shard {
+            out.push_str(row);
+            out.push('\n');
+        }
+    }
+    out
+}
+
 impl Workload {
     /// Short label for the variant, used in mismatch errors and reports.
     pub fn kind(&self) -> &'static str {
@@ -84,12 +115,18 @@ impl Workload {
 
     /// The payload-empty twin of this variant: what a non-owning shard
     /// of a single-state pipeline binds its (discarded) sink against.
+    ///
+    /// "Empty" means zero data items, not zero structure: the CSV
+    /// variants keep their header line (so the twin parses as a
+    /// zero-row frame of the same schema, never a zero-column frame)
+    /// and `LightCurves` keeps its target lookup table, which is
+    /// indexed by object id rather than row-aligned.
     pub fn empty_like(&self) -> Workload {
         match self {
             Workload::Synthetic => Workload::Synthetic,
-            Workload::Table { .. } => Workload::Table { csv: String::new() },
-            Workload::LightCurves { .. } => {
-                Workload::LightCurves { csv: String::new(), targets: Vec::new() }
+            Workload::Table { csv } => Workload::Table { csv: csv_header(csv) },
+            Workload::LightCurves { csv, targets } => {
+                Workload::LightCurves { csv: csv_header(csv), targets: targets.clone() }
             }
             Workload::Documents { .. } => {
                 Workload::Documents { docs: Vec::new(), labels: Vec::new() }
@@ -100,18 +137,27 @@ impl Workload {
         }
     }
 
-    /// Shard `shard` of `of`'s slice of this payload, for the per-item
-    /// pipelines (`Documents`, `Video`): the round-robin subset of the
-    /// payload's items, by emission index — the bit-identical payload
-    /// analogue of filtering the full stream with a
-    /// [`Sharder`](crate::coordinator::Sharder). More shards than items
-    /// yields explicit EMPTY slices (never fewer shards), so the
+    /// Shard `shard` of `of`'s slice of this payload: the round-robin
+    /// subset of the payload's items, by emission index — the
+    /// bit-identical payload analogue of filtering the full stream with
+    /// a [`Sharder`](crate::coordinator::Sharder). More shards than
+    /// items yields explicit EMPTY slices (never fewer shards), so the
     /// partition always covers the payload and per-shard reports stay
-    /// index-complete. Labels slice in lockstep with their items;
-    /// single-payload variants (tables, logs, light curves, part sets —
-    /// whose plans emit one state item that round-robin assigns to
-    /// shard 0) slice to the whole payload on shard 0 and to
-    /// [`Self::empty_like`] elsewhere.
+    /// index-complete.
+    ///
+    /// What counts as an item is per-variant: docs (`Documents`, labels
+    /// in lockstep), frames (`Video`), and CSV data ROWS for the
+    /// row-addressed payloads (`Table`, `LightCurves`) — the header
+    /// line rides on every slice so each slice parses with the full
+    /// schema, and light-curve targets are cloned whole because they
+    /// are a lookup table indexed by object id, not row-aligned data.
+    /// The remaining single-payload variants (logs, part sets — whose
+    /// plans emit one state item that round-robin assigns to shard 0)
+    /// slice to the whole payload on shard 0 and to
+    /// [`Self::empty_like`] elsewhere. Note the sharded executors only
+    /// call this for `Slicing::PerItem` plans; single-state plans
+    /// (including the tabular pipelines) bind the full payload on
+    /// shard 0 directly.
     pub fn slice(&self, shard: usize, of: usize) -> Workload {
         assert!(of >= 1, "slicing needs at least one shard");
         assert!(shard < of, "shard index {shard} out of range for {of} shards");
@@ -123,6 +169,13 @@ impl Workload {
             Workload::Video { frames } => {
                 Workload::Video { frames: round_robin(frames, shard, of) }
             }
+            Workload::Table { csv } => {
+                Workload::Table { csv: csv_round_robin(csv, shard, of) }
+            }
+            Workload::LightCurves { csv, targets } => Workload::LightCurves {
+                csv: csv_round_robin(csv, shard, of),
+                targets: targets.clone(),
+            },
             single_state => {
                 if shard == 0 {
                     single_state.clone()
@@ -283,15 +336,15 @@ mod tests {
     }
 
     #[test]
-    fn single_payload_variants_slice_whole_to_shard_zero() {
-        let table = Workload::Table { csv: "h\n1\n".into() };
-        match table.slice(0, 3) {
-            Workload::Table { csv } => assert_eq!(csv, "h\n1\n"),
+    fn log_and_parts_slice_whole_to_shard_zero() {
+        let log = Workload::ReviewLog { json: "{\"a\":1}\n".into() };
+        match log.slice(0, 3) {
+            Workload::ReviewLog { json } => assert_eq!(json, "{\"a\":1}\n"),
             other => panic!("slice changed variant: {}", other.kind()),
         }
         for shard in 1..3usize {
-            match table.slice(shard, 3) {
-                Workload::Table { csv } => assert!(csv.is_empty(), "shard {shard}"),
+            match log.slice(shard, 3) {
+                Workload::ReviewLog { json } => assert!(json.is_empty(), "shard {shard}"),
                 other => panic!("slice changed variant: {}", other.kind()),
             }
         }
@@ -307,6 +360,92 @@ mod tests {
         ];
         for w in &kinds {
             assert_eq!(w.empty_like().kind(), w.kind());
+        }
+    }
+
+    #[test]
+    fn empty_like_preserves_csv_header() {
+        // A headered empty payload parses as a zero-row frame of the
+        // right schema; a truly empty string would be zero-column.
+        match (Workload::Table { csv: "a,b\n1,2\n3,4\n".into() }).empty_like() {
+            Workload::Table { csv } => assert_eq!(csv, "a,b\n"),
+            other => panic!("variant changed: {}", other.kind()),
+        }
+        let curves = Workload::LightCurves {
+            csv: "object_id,flux\n0,1.5\n".into(),
+            targets: vec![2.0, 3.0],
+        };
+        match curves.empty_like() {
+            Workload::LightCurves { csv, targets } => {
+                assert_eq!(csv, "object_id,flux\n");
+                // Targets are an id-indexed lookup table, kept whole.
+                assert_eq!(targets, vec![2.0, 3.0]);
+            }
+            other => panic!("variant changed: {}", other.kind()),
+        }
+        // No header at all: nothing to preserve.
+        match (Workload::Table { csv: String::new() }).empty_like() {
+            Workload::Table { csv } => assert!(csv.is_empty()),
+            other => panic!("variant changed: {}", other.kind()),
+        }
+    }
+
+    #[test]
+    fn table_slice_round_trips_rows_with_header_on_every_slice() {
+        let rows: Vec<String> = (0..7).map(|i| format!("{i},{}", i * 10)).collect();
+        let csv = format!("a,b\n{}\n", rows.join("\n"));
+        let payload = Workload::Table { csv };
+        let mut recovered = Vec::new();
+        for shard in 0..3usize {
+            match payload.slice(shard, 3) {
+                Workload::Table { csv } => {
+                    let mut lines = csv.lines();
+                    assert_eq!(lines.next(), Some("a,b"), "header rides on shard {shard}");
+                    for (k, row) in lines.enumerate() {
+                        // Row i of the payload lands on shard i % 3, in order.
+                        let i: usize = row.split(',').next().unwrap().parse().unwrap();
+                        assert_eq!(i % 3, shard, "shard {shard}");
+                        assert_eq!(i / 3, k, "shard {shard} keeps payload order");
+                        recovered.push(row.to_string());
+                    }
+                }
+                other => panic!("slice changed variant: {}", other.kind()),
+            }
+        }
+        recovered.sort_by_key(|r| r.split(',').next().unwrap().parse::<usize>().unwrap());
+        assert_eq!(recovered, rows, "concatenated slices must cover every row exactly once");
+    }
+
+    #[test]
+    fn light_curves_slice_round_trips_rows_and_keeps_targets_whole() {
+        let rows: Vec<String> = (0..5).map(|i| format!("{},{i}.0", i % 2)).collect();
+        let csv = format!("object_id,flux\n{}\n", rows.join("\n"));
+        let targets = vec![0.0, 1.0];
+        let payload = Workload::LightCurves { csv, targets: targets.clone() };
+        let mut recovered = Vec::new();
+        for shard in 0..2usize {
+            match payload.slice(shard, 2) {
+                Workload::LightCurves { csv, targets: t } => {
+                    assert_eq!(t, targets, "targets ride whole on shard {shard}");
+                    let mut lines = csv.lines();
+                    assert_eq!(lines.next(), Some("object_id,flux"), "shard {shard}");
+                    recovered.extend(lines.map(str::to_string));
+                }
+                other => panic!("slice changed variant: {}", other.kind()),
+            }
+        }
+        // The flux field is "<row index>.0" — sort by it to recover
+        // payload order across the two slices.
+        recovered.sort_by_key(|r| {
+            r.split(',').nth(1).unwrap().split('.').next().unwrap().parse::<usize>().unwrap()
+        });
+        assert_eq!(recovered, rows, "concatenated slices must cover every observation");
+        // Empty-shard edge: more shards than rows still yields headered slices.
+        match payload.slice(5, 6) {
+            Workload::LightCurves { csv, .. } => {
+                assert_eq!(csv, "object_id,flux\n", "empty slice keeps the header")
+            }
+            other => panic!("slice changed variant: {}", other.kind()),
         }
     }
 

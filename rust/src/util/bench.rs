@@ -1,0 +1,160 @@
+//! Persisted benchmark trajectories — the `BENCH_*.json` files the
+//! bench binaries write next to their printed tables, so successive
+//! changes can prove speedups against a recorded baseline instead of
+//! asserting them from memory.
+//!
+//! # Schema (version 1)
+//!
+//! ```json
+//! {
+//!   "bench": "fig11_e2e",
+//!   "schema_version": 1,
+//!   "scale": 1.0,
+//!   "pipelines": {
+//!     "census": {
+//!       "exec_modes": {
+//!         "sequential": {
+//!           "wall_s": 0.42, "items": 1200.0, "items_per_s": 2857.1,
+//!           "p50_ms": 0.3, "p95_ms": 0.9,
+//!           "batch": { "batches": 19, "rows_in": 1200, ... }
+//!         },
+//!         "shard:2": { ... }, ...
+//!       },
+//!       ...bench-specific keys (speedups, batched comparisons)...
+//!     }
+//!   }
+//! }
+//! ```
+//!
+//! Every per-mode entry is produced by [`mode_entry`]: dataset
+//! throughput (`items_per_s` over wall time) plus the run's pooled
+//! per-item latency percentiles (`p50_ms`/`p95_ms`, `null` when the
+//! run recorded no samples). Batched runs additionally carry their
+//! [`BatchReport`](crate::coordinator::telemetry::BatchReport)
+//! counters under `"batch"`. Mode keys are
+//! [`ExecMode`](crate::coordinator::ExecMode) display strings
+//! (`sequential`, `streaming`, `multi:N`, `shard:N`, `async:N`).
+//! Object keys are ordered (`BTreeMap`), so diffs between trajectory
+//! files are stable.
+
+use crate::pipelines::PipelineResult;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+/// Trajectory schema version, bumped on breaking shape changes.
+pub const SCHEMA_VERSION: f64 = 1.0;
+
+fn num(v: f64) -> Json {
+    Json::Num(v)
+}
+
+/// One executor-mode measurement: wall time, dataset throughput, and
+/// latency percentiles for a finished run, plus batch-plane counters
+/// when the run executed the columnar data plane.
+pub fn mode_entry(res: &PipelineResult, wall: Duration) -> Json {
+    let mut o = BTreeMap::new();
+    let secs = wall.as_secs_f64();
+    o.insert("wall_s".to_string(), num(secs));
+    o.insert("items".to_string(), num(res.items as f64));
+    o.insert("items_per_s".to_string(), num(res.items as f64 / secs.max(1e-12)));
+    let pct = |q: f64| match res.report.latency_percentile(q) {
+        Some(d) => num(d.as_secs_f64() * 1e3),
+        None => Json::Null,
+    };
+    o.insert("p50_ms".to_string(), pct(0.50));
+    o.insert("p95_ms".to_string(), pct(0.95));
+    if let Some(b) = &res.batching {
+        let mut bo = BTreeMap::new();
+        bo.insert("batches".to_string(), num(b.batches as f64));
+        bo.insert("rows_in".to_string(), num(b.rows_in as f64));
+        bo.insert("rows_out".to_string(), num(b.rows_out as f64));
+        bo.insert("rows_filtered".to_string(), num(b.rows_filtered as f64));
+        bo.insert("mean_rows".to_string(), num(b.mean_rows()));
+        bo.insert("clone_avoided_bytes".to_string(), num(b.clone_avoided_bytes as f64));
+        bo.insert("copied_bytes".to_string(), num(b.copied_bytes as f64));
+        bo.insert("zero_copy_fraction".to_string(), num(b.zero_copy_fraction()));
+        o.insert("batch".to_string(), Json::Obj(bo));
+    }
+    Json::Obj(o)
+}
+
+/// Assemble the trajectory document and write it to `path`
+/// (conventionally `BENCH_<name>.json` in the repo root, where
+/// `cargo bench` runs). Returns the serialized text so callers can
+/// echo where/what they wrote.
+pub fn write_trajectory(
+    path: &str,
+    bench: &str,
+    scale: f64,
+    pipelines: BTreeMap<String, Json>,
+) -> std::io::Result<String> {
+    let mut doc = BTreeMap::new();
+    doc.insert("bench".to_string(), Json::Str(bench.to_string()));
+    doc.insert("schema_version".to_string(), num(SCHEMA_VERSION));
+    doc.insert("scale".to_string(), num(scale));
+    doc.insert("pipelines".to_string(), Json::Obj(pipelines));
+    let text = Json::Obj(doc).to_string_compact();
+    std::fs::write(path, &text)?;
+    Ok(text)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::telemetry::BatchReport;
+    use crate::pipelines::{run_by_name, RunConfig, Toggles};
+
+    #[test]
+    fn mode_entry_round_trips_through_the_parser() {
+        let cfg = RunConfig {
+            toggles: Toggles::optimized(),
+            scale: 0.05,
+            seed: 7,
+            batch_rows: 64,
+            ..Default::default()
+        };
+        let res = run_by_name("census", &cfg).unwrap();
+        assert!(res.batching.is_some(), "batched run carries counters");
+        let entry = mode_entry(&res, Duration::from_millis(12));
+        let parsed = Json::parse(&entry.to_string_compact()).unwrap();
+        assert!(parsed.get("items_per_s").and_then(Json::as_f64).unwrap() > 0.0);
+        let batch = parsed.get("batch").expect("batch counters serialized");
+        let b: BatchReport = res.batching.unwrap();
+        assert_eq!(
+            batch.get("rows_in").and_then(Json::as_f64),
+            Some(b.rows_in as f64)
+        );
+        assert_eq!(
+            batch.get("clone_avoided_bytes").and_then(Json::as_f64),
+            Some(b.clone_avoided_bytes as f64)
+        );
+    }
+
+    #[test]
+    fn trajectory_doc_is_stable_and_parseable() {
+        let mut pipelines = BTreeMap::new();
+        let mut modes = BTreeMap::new();
+        let mut entry = BTreeMap::new();
+        entry.insert("wall_s".to_string(), Json::Num(0.5));
+        modes.insert("sequential".to_string(), Json::Obj(entry));
+        let mut p = BTreeMap::new();
+        p.insert("exec_modes".to_string(), Json::Obj(modes));
+        pipelines.insert("census".to_string(), Json::Obj(p));
+
+        let path = std::env::temp_dir().join("repro_bench_trajectory_test.json");
+        let text =
+            write_trajectory(path.to_str().unwrap(), "fig11_e2e", 1.0, pipelines).unwrap();
+        let parsed = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(parsed.to_string_compact(), text);
+        assert_eq!(parsed.get("bench").and_then(Json::as_str), Some("fig11_e2e"));
+        assert_eq!(parsed.get("schema_version").and_then(Json::as_f64), Some(1.0));
+        assert!(parsed
+            .get("pipelines")
+            .and_then(|p| p.get("census"))
+            .and_then(|c| c.get("exec_modes"))
+            .and_then(|m| m.get("sequential"))
+            .is_some());
+        std::fs::remove_file(&path).ok();
+    }
+}

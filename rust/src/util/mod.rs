@@ -5,6 +5,7 @@
 //! `rand`, `serde_json`, `clap`, `env_logger` or `proptest` are implemented
 //! here from `std`. Each submodule is deliberately tiny and fully tested.
 
+pub mod bench;
 pub mod rng;
 pub mod timer;
 pub mod fmt;

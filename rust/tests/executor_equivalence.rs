@@ -24,6 +24,12 @@
 //! additionally pinned bit-identical to the clone-based
 //! `Plan::shard` path for all eight pipelines.
 //!
+//! The columnar batch data plane adds a third pass for the tabular
+//! three: every executor in the ladder re-runs with `batch_rows = 64`,
+//! pinned metric-identical to the per-item Sequential run with a
+//! balanced `BatchReport` ledger (amortization asserted from counters,
+//! never wall-clock).
+//!
 //! Pipelines that execute model artifacts are skipped when `make
 //! artifacts` has not produced a manifest (the tabular three always run).
 
@@ -87,6 +93,38 @@ fn all_executors_produce_identical_metrics() {
             let other =
                 (e.run)(&cfg).unwrap_or_else(|err| panic!("{} {mode}: {err:#}", e.name));
             assert_metrics_match(e.name, mode, &seq, &other);
+        }
+    }
+}
+
+#[test]
+fn batched_data_plane_is_executor_invariant_for_tabular_pipelines() {
+    // The columnar data plane's acceptance matrix: for the tabular
+    // three, a batched run (batch_rows = 64) answers exactly like the
+    // per-item Sequential run under EVERY executor in the conformance
+    // ladder, and each batched run's ledger balances (rows in == rows
+    // out + rows filtered) with at least one byte shared zero-copy —
+    // amortization asserted from counters, never wall-clock.
+    for name in ["census", "plasticc", "iiot"] {
+        let mut cfg = base_cfg();
+        cfg.exec = ExecMode::Sequential;
+        let per_item = run_by_name(name, &cfg).unwrap();
+        assert!(per_item.batching.is_none(), "{name}: per-item run must not report batches");
+        cfg.batch_rows = 64;
+        let mut modes = vec![ExecMode::Sequential];
+        modes.extend(conformance_modes());
+        for mode in modes {
+            cfg.exec = mode;
+            let batched = run_by_name(name, &cfg)
+                .unwrap_or_else(|err| panic!("{name} batched {mode}: {err:#}"));
+            assert_metrics_match(name, mode, &per_item, &batched);
+            let b = batched
+                .batching
+                .unwrap_or_else(|| panic!("{name} {mode}: batched run must report counters"));
+            assert!(b.batches > 1, "{name} {mode}: {b:?}");
+            assert!(b.balanced(), "{name} {mode}: rows unbalanced: {b:?}");
+            assert!(b.clone_avoided_bytes > 0, "{name} {mode}: {b:?}");
+            assert!(b.mean_rows() <= 64.0 + 1e-9, "{name} {mode}: {b:?}");
         }
     }
 }
