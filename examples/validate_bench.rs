@@ -1,5 +1,5 @@
 //! Validate persisted benchmark trajectories — the CI smoke gate for
-//! `BENCH_fig11.json` / `BENCH_scaling.json`.
+//! `BENCH_fig11.json` / `BENCH_scaling.json` / `BENCH_serve.json`.
 //!
 //! For each file passed on the command line (both files by default),
 //! checks that it parses, that the document header is well-formed
@@ -34,6 +34,9 @@ fn required_modes(bench: &str) -> &'static [&'static str] {
             "multi:2",
             "multi:4",
         ],
+        // `repro bench-serve` records one pseudo-mode per tenant: the
+        // closed-loop serving trajectory over the TCP edge.
+        "bench_serve" => &["serve"],
         other => panic!("unknown bench name in trajectory: {other}"),
     }
 }

@@ -95,6 +95,25 @@ pub struct AdmitOutcome<T> {
     pub shed: Vec<(Priority, T)>,
 }
 
+/// Per-priority-lane counters inside [`QueueStats`], so overload
+/// reports can show WHICH traffic class absorbed the shedding (the
+/// displacement rule concentrates sheds in the lowest lanes).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct LaneStats {
+    /// Entries queued in this lane right now (snapshot at
+    /// [`AdmissionQueue::stats`] time).
+    pub depth: usize,
+    /// Highest simultaneous depth this lane reached.
+    pub peak_depth: usize,
+    /// Requests that entered this lane.
+    pub admitted: u64,
+    /// Requests shed FROM this lane: rejected at this priority, or
+    /// displaced out of it by higher-priority admissions.
+    pub shed: u64,
+    /// Requests popped from this lane.
+    pub dispatched: u64,
+}
+
 /// Counters over an [`AdmissionQueue`]'s lifetime.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct QueueStats {
@@ -106,6 +125,16 @@ pub struct QueueStats {
     pub dispatched: u64,
     /// Highest simultaneous queue depth observed.
     pub peak_depth: usize,
+    /// The same ledger split per priority lane, indexed by
+    /// `Priority::lane()` (use [`QueueStats::lane`] for typed access).
+    pub lanes: [LaneStats; 3],
+}
+
+impl QueueStats {
+    /// The counters for one priority's lane.
+    pub fn lane(&self, p: Priority) -> LaneStats {
+        self.lanes[p.lane()]
+    }
 }
 
 struct State<T> {
@@ -150,6 +179,7 @@ impl<T> AdmissionQueue<T> {
         let mut s = self.state.lock().unwrap();
         if s.closed {
             s.stats.shed += 1;
+            s.stats.lanes[priority.lane()].shed += 1;
             return AdmitOutcome { admitted: false, shed: vec![(priority, item)] };
         }
         let mut shed = Vec::new();
@@ -166,10 +196,12 @@ impl<T> AdmissionQueue<T> {
             match displaced {
                 Some(victim) => {
                     s.len -= 1;
+                    s.stats.lanes[victim.0.lane()].shed += 1;
                     shed.push(victim);
                 }
                 None => {
                     s.stats.shed += 1;
+                    s.stats.lanes[priority.lane()].shed += 1;
                     return AdmitOutcome { admitted: false, shed: vec![(priority, item)] };
                 }
             }
@@ -179,6 +211,10 @@ impl<T> AdmissionQueue<T> {
         s.stats.admitted += 1;
         s.stats.shed += shed.len() as u64;
         s.stats.peak_depth = s.stats.peak_depth.max(s.len);
+        let lane_len = s.lanes[priority.lane()].len();
+        let lane_stats = &mut s.stats.lanes[priority.lane()];
+        lane_stats.admitted += 1;
+        lane_stats.peak_depth = lane_stats.peak_depth.max(lane_len);
         drop(s);
         self.ready.notify_one();
         AdmitOutcome { admitted: true, shed }
@@ -193,6 +229,7 @@ impl<T> AdmissionQueue<T> {
                 if let Some(item) = s.lanes[lane].pop_front() {
                     s.len -= 1;
                     s.stats.dispatched += 1;
+                    s.stats.lanes[lane].dispatched += 1;
                     return Some((Priority::ALL[lane], item));
                 }
             }
@@ -220,9 +257,14 @@ impl<T> AdmissionQueue<T> {
         self.len() == 0
     }
 
-    /// Lifetime counters.
+    /// Lifetime counters, with each lane's current depth snapshotted.
     pub fn stats(&self) -> QueueStats {
-        self.state.lock().unwrap().stats
+        let s = self.state.lock().unwrap();
+        let mut stats = s.stats;
+        for lane in 0..3 {
+            stats.lanes[lane].depth = s.lanes[lane].len();
+        }
+        stats
     }
 }
 
@@ -306,6 +348,44 @@ mod tests {
         assert_eq!(stats.shed, 2);
         assert_eq!(stats.dispatched, 1);
         assert_eq!(stats.peak_depth, 1);
+    }
+
+    #[test]
+    fn lane_stats_split_the_ledger_per_priority() {
+        let q = AdmissionQueue::new(2);
+        assert!(q.admit(Priority::Low, 1).admitted);
+        assert!(q.admit(Priority::Normal, 2).admitted);
+        // Full queue: high displaces the low entry; a second low is
+        // rejected outright.
+        assert!(q.admit(Priority::High, 3).admitted);
+        assert!(!q.admit(Priority::Low, 4).admitted);
+        let stats = q.stats();
+        assert_eq!(stats.lane(Priority::Low).admitted, 1);
+        assert_eq!(stats.lane(Priority::Low).shed, 2, "one displaced + one rejected");
+        assert_eq!(stats.lane(Priority::Low).depth, 0);
+        assert_eq!(stats.lane(Priority::Normal).admitted, 1);
+        assert_eq!(stats.lane(Priority::Normal).shed, 0);
+        assert_eq!(stats.lane(Priority::Normal).depth, 1);
+        assert_eq!(stats.lane(Priority::High).admitted, 1);
+        assert_eq!(stats.lane(Priority::High).peak_depth, 1);
+        // The per-lane split sums back to the aggregate counters.
+        let sum = |f: fn(&LaneStats) -> u64| stats.lanes.iter().map(f).sum::<u64>();
+        assert_eq!(sum(|l| l.admitted), stats.admitted);
+        assert_eq!(sum(|l| l.shed), stats.shed);
+        assert_eq!(q.pop(), Some((Priority::High, 3)));
+        assert_eq!(q.pop(), Some((Priority::Normal, 2)));
+        let stats = q.stats();
+        assert_eq!(stats.lane(Priority::High).dispatched, 1);
+        assert_eq!(stats.lane(Priority::Normal).dispatched, 1);
+        assert_eq!(stats.lane(Priority::Low).dispatched, 0);
+        assert_eq!(
+            stats.lanes.iter().map(|l| l.dispatched).sum::<u64>(),
+            stats.dispatched
+        );
+        // Closed-queue sheds land in the rejected priority's lane too.
+        q.close();
+        assert!(!q.admit(Priority::Normal, 9).admitted);
+        assert_eq!(q.stats().lane(Priority::Normal).shed, 1);
     }
 
     #[test]

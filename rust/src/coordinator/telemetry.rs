@@ -436,6 +436,168 @@ impl BatchReport {
     }
 }
 
+/// Per-tenant outcome counters on the serving edge: every `Request`
+/// frame a [`PipelineServer`] reads for a tenant is **admitted** into
+/// the ledger, and resolves exactly once as completed, shed (tenant
+/// lane full, queue full, deadline expired, or server draining), or
+/// failed. The balance invariant is what the loopback soak asserts
+/// instead of timing.
+///
+/// [`PipelineServer`]: crate::net::PipelineServer
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TenantLedger {
+    /// Request frames read off this tenant's connections.
+    pub admitted: u64,
+    /// Requests that executed and answered with a `Completed` frame.
+    pub completed: u64,
+    /// Requests answered with a `Shed` frame (lane, queue, deadline, or
+    /// drain shedding — all first-class, never dropped connections).
+    pub shed: u64,
+    /// Requests answered with a `Failed` frame.
+    pub failed: u64,
+}
+
+impl TenantLedger {
+    /// Every admitted request resolved exactly once.
+    pub fn balances(&self) -> bool {
+        self.admitted == self.completed + self.shed + self.failed
+    }
+
+    /// Fraction of admitted requests that were shed (0.0 when idle).
+    pub fn shed_fraction(&self) -> f64 {
+        if self.admitted == 0 {
+            0.0
+        } else {
+            self.shed as f64 / self.admitted as f64
+        }
+    }
+
+    /// Merge another tenant's (or connection's) counters into this one.
+    pub fn merge(&mut self, other: &TenantLedger) {
+        self.admitted += other.admitted;
+        self.completed += other.completed;
+        self.shed += other.shed;
+        self.failed += other.failed;
+    }
+}
+
+/// Shared atomic counters behind the TCP serving edge
+/// ([`crate::net::PipelineServer`]): connection lifecycle, frame
+/// traffic, and per-tenant request outcomes. Connection handlers write
+/// it from their own threads; [`Self::snapshot`] produces the
+/// [`NetReport`] the soak suites assert from — ledgers, never
+/// wall-clock.
+#[derive(Debug, Default)]
+pub struct NetLedger {
+    accepted: AtomicUsize,
+    drained: AtomicUsize,
+    frames_in: AtomicUsize,
+    frames_out: AtomicUsize,
+    tenants: Mutex<std::collections::BTreeMap<String, TenantLedger>>,
+}
+
+impl NetLedger {
+    /// A connection left the accept loop with a handler attached.
+    pub fn connection_accepted(&self) {
+        self.accepted.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A handler finished: in-flight tickets flushed, stream closed.
+    pub fn connection_drained(&self) {
+        self.drained.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One frame read off a connection.
+    pub fn frame_in(&self) {
+        self.frames_in.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One frame written to a connection.
+    pub fn frame_out(&self) {
+        self.frames_out.fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn tenant(&self, tenant: &str, f: impl FnOnce(&mut TenantLedger)) {
+        let mut tenants = self.tenants.lock().unwrap();
+        f(tenants.entry(tenant.to_string()).or_default());
+    }
+
+    /// A `Request` frame arrived for `tenant`.
+    pub fn tenant_admitted(&self, tenant: &str) {
+        self.tenant(tenant, |t| t.admitted += 1);
+    }
+
+    /// A request resolved with a `Completed` frame.
+    pub fn tenant_completed(&self, tenant: &str) {
+        self.tenant(tenant, |t| t.completed += 1);
+    }
+
+    /// A request resolved with a `Shed` frame.
+    pub fn tenant_shed(&self, tenant: &str) {
+        self.tenant(tenant, |t| t.shed += 1);
+    }
+
+    /// A request resolved with a `Failed` frame.
+    pub fn tenant_failed(&self, tenant: &str) {
+        self.tenant(tenant, |t| t.failed += 1);
+    }
+
+    /// Snapshot every counter.
+    pub fn snapshot(&self) -> NetReport {
+        NetReport {
+            accepted: self.accepted.load(Ordering::Relaxed),
+            drained: self.drained.load(Ordering::Relaxed),
+            frames_in: self.frames_in.load(Ordering::Relaxed),
+            frames_out: self.frames_out.load(Ordering::Relaxed),
+            tenants: self.tenants.lock().unwrap().clone(),
+        }
+    }
+}
+
+/// Snapshot of a [`NetLedger`]: the serving edge's connection, frame,
+/// and per-tenant request accounting. Like [`SchedReport`] and
+/// [`BatchReport`], this rides beside `ServiceStats` so network soak
+/// tests assert behavior from counters — `accepted == drained` after a
+/// drain, `admitted == completed + shed + failed` per tenant — never
+/// from timing.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct NetReport {
+    /// Connections handed to a handler by the accept loop.
+    pub accepted: usize,
+    /// Connections whose handler flushed its in-flight tickets and
+    /// closed (client disconnect, client `Drain`, or server drain).
+    pub drained: usize,
+    /// Frames read across all connections.
+    pub frames_in: usize,
+    /// Frames written across all connections.
+    pub frames_out: usize,
+    /// Per-tenant request outcomes, keyed by the tenant id each
+    /// connection declared in its `Hello` frame.
+    pub tenants: std::collections::BTreeMap<String, TenantLedger>,
+}
+
+impl NetReport {
+    /// Connections currently being served.
+    pub fn active(&self) -> usize {
+        self.accepted.saturating_sub(self.drained)
+    }
+
+    /// The drained-server ledger: every accepted connection drained and
+    /// every tenant's requests resolved exactly once.
+    pub fn balanced(&self) -> bool {
+        self.accepted == self.drained && self.tenants.values().all(TenantLedger::balances)
+    }
+
+    /// All tenants' counters merged.
+    pub fn total(&self) -> TenantLedger {
+        let mut total = TenantLedger::default();
+        for t in self.tenants.values() {
+            total.merge(t);
+        }
+        total
+    }
+}
+
 /// One shard's slice of a data-parallel ([`ExecMode::Sharded`]) run.
 ///
 /// [`ExecMode::Sharded`]: super::exec::ExecMode
@@ -744,6 +906,50 @@ mod tests {
         assert_eq!(total.batches, 5);
         assert_eq!(total.rows_in, 140);
         assert!(total.balanced());
+    }
+
+    #[test]
+    fn net_ledger_balances_per_tenant_and_per_connection() {
+        let ledger = NetLedger::default();
+        assert!(ledger.snapshot().balanced(), "empty ledger balances");
+        ledger.connection_accepted();
+        ledger.connection_accepted();
+        for _ in 0..5 {
+            ledger.frame_in();
+        }
+        ledger.frame_out();
+        // Tenant a: 3 admitted = 2 completed + 1 shed; tenant b: 1
+        // admitted, unresolved so far.
+        for _ in 0..3 {
+            ledger.tenant_admitted("a");
+        }
+        ledger.tenant_completed("a");
+        ledger.tenant_completed("a");
+        ledger.tenant_shed("a");
+        ledger.tenant_admitted("b");
+        let mid = ledger.snapshot();
+        assert_eq!(mid.accepted, 2);
+        assert_eq!(mid.drained, 0);
+        assert_eq!(mid.active(), 2);
+        assert_eq!(mid.frames_in, 5);
+        assert_eq!(mid.frames_out, 1);
+        assert!(mid.tenants["a"].balances());
+        assert!(!mid.tenants["b"].balances(), "b has an unresolved request");
+        assert!(!mid.balanced(), "active connections keep the report unbalanced");
+        // Resolve b and drain both connections: the ledger balances.
+        ledger.tenant_failed("b");
+        ledger.connection_drained();
+        ledger.connection_drained();
+        let done = ledger.snapshot();
+        assert_eq!(done.active(), 0);
+        assert!(done.balanced(), "{done:?}");
+        let total = done.total();
+        assert_eq!(total.admitted, 4);
+        assert_eq!(total.completed, 2);
+        assert_eq!(total.shed, 1);
+        assert_eq!(total.failed, 1);
+        assert!((done.tenants["a"].shed_fraction() - 1.0 / 3.0).abs() < 1e-12);
+        assert_eq!(TenantLedger::default().shed_fraction(), 0.0);
     }
 
     #[test]

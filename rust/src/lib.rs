@@ -19,7 +19,10 @@
 //!   `Request { pipeline, payload, priority, deadline }` values through
 //!   a bounded priority [`coordinator::AdmissionQueue`] with load
 //!   shedding — the §3.4 many-streams deployment as an API instead of a
-//!   bench loop. Below both sits every substrate the paper's eight
+//!   bench loop — and the network edge ([`net`]): a TCP front-end
+//!   speaking a length-prefixed wire protocol with per-tenant admission
+//!   lanes, write backpressure, and counter-pinned graceful drain.
+//!   Below both sits every substrate the paper's eight
 //!   pipelines depend on: a columnar dataframe engine ([`dataframe`]),
 //!   classical ML ([`ml`]), media/vision/text processing ([`media`],
 //!   [`vision`], [`text`]), recommendation preprocessing ([`recsys`]),
@@ -55,6 +58,7 @@ pub mod runtime;
 pub mod coordinator;
 pub mod pipelines;
 pub mod service;
+pub mod net;
 
 /// Which implementation variant of a pipeline stage to use.
 ///

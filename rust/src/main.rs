@@ -6,19 +6,26 @@
 //!                      [--exec sequential|streaming|multi[:N]|shard[:N]|async[:T]]
 //!                      [--scale F] [--seed N]
 //! repro serve [--requests N] [--mix census:4,dlsa:1] [--depth D] [--workers W]
-//!                                  # soak a PipelineService with a mixed-priority request mix
+//!             [--listen ADDR]      # soak a PipelineService with a mixed-priority request mix
+//!                                  # (--listen serves it over TCP instead of in-process)
+//! repro bench-serve [--clients C] [--requests N] [--mix census:4,iiot:1]
+//!                                  # closed-loop TCP load generator; writes BENCH_serve.json
 //! repro fig1 [--scale F]           # Figure 1 stage breakdown, all pipelines
 //! repro config                     # Table 3 analogue: software config
 //! repro models                     # AOT artifacts available to the runtime
 //! ```
 
 use repro::coordinator::ExecMode;
+use repro::net::{run_load, LoadSpec, PipelineServer, ServerConfig};
 use repro::pipelines::{registry, run_by_name, RunConfig, Toggles};
-use repro::service::{PipelineService, Priority, Request, Response, ServiceConfig};
+use repro::service::{
+    parse_mix, PipelineService, Priority, Request, Response, ServiceConfig,
+};
 use repro::util::cli::Args;
 use repro::util::fmt::{self, Table};
 use repro::OptLevel;
 use std::collections::BTreeMap;
+use std::sync::Arc;
 
 fn main() {
     let args = Args::from_env();
@@ -26,6 +33,7 @@ fn main() {
         "list" => cmd_list(),
         "run" => cmd_run(&args),
         "serve" => cmd_serve(&args),
+        "bench-serve" => cmd_bench_serve(&args),
         "fig1" => cmd_fig1(&args),
         "config" => cmd_config(),
         "models" => cmd_models(),
@@ -52,6 +60,8 @@ fn print_help() {
          \x20 list                 list the eight pipelines (Table 1)\n\
          \x20 run <pipeline>       run one pipeline and print its report\n\
          \x20 serve                soak a PipelineService with a mixed-priority request mix\n\
+         \x20 bench-serve          closed-loop TCP load generator over a loopback PipelineServer;\n\
+         \x20                      writes BENCH_serve.json (per-tenant throughput, p50/p95, sheds)\n\
          \x20 fig1                 stage-time breakdown for every pipeline (Figure 1)\n\
          \x20 config               print the software configuration (Table 3)\n\
          \x20 models               list AOT model artifacts\n\
@@ -79,7 +89,18 @@ fn print_help() {
          \x20 --mix name[:W],name[:W],…         weighted pipeline mix\n\
          \x20                                   (default census:2,plasticc:1,iiot:1)\n\
          \x20 --depth D                         admission-queue bound (default 8)\n\
-         \x20 --workers W                       dispatcher threads (default 2)\n"
+         \x20 --workers W                       dispatcher threads (default 2)\n\
+         \x20 --listen ADDR                     serve the soak over TCP at ADDR (the request\n\
+         \x20                                   mix arrives through a loopback wire client;\n\
+         \x20                                   --requests 0 keeps the server up until killed)\n\
+         \n\
+         OPTIONS (bench-serve):\n\
+         \x20 --clients C                       closed-loop generator threads (default 2)\n\
+         \x20 --requests N                      requests per client (default 12)\n\
+         \x20 --mix name[:W],name[:W],…         tenant/pipeline mix (default census:2,iiot:1)\n\
+         \x20 --depth D / --workers W           service provisioning (defaults 8 / 2)\n\
+         \x20 --per-tenant D                    per-tenant in-flight lane depth (default 8)\n\
+         \x20 --out PATH                        trajectory path (default BENCH_serve.json)\n"
     );
 }
 
@@ -191,34 +212,6 @@ fn cmd_run(args: &Args) -> i32 {
     }
 }
 
-/// Parse a weighted pipeline mix: `census:4,dlsa:1` (weight defaults
-/// to 1 when omitted).
-fn parse_mix(spec: &str) -> Result<Vec<(String, usize)>, String> {
-    let mut mix: Vec<(String, usize)> = Vec::new();
-    for part in spec.split(',') {
-        let part = part.trim();
-        if part.is_empty() {
-            continue;
-        }
-        let (name, weight) = match part.split_once(':') {
-            Some((name, w)) => {
-                let weight: usize =
-                    w.parse().map_err(|_| format!("bad weight in {part:?}"))?;
-                if weight == 0 {
-                    return Err(format!("zero weight in {part:?}"));
-                }
-                (name, weight)
-            }
-            None => (part, 1),
-        };
-        mix.push((name.to_string(), weight));
-    }
-    if mix.is_empty() {
-        return Err("empty mix".to_string());
-    }
-    Ok(mix)
-}
-
 fn cmd_serve(args: &Args) -> i32 {
     let cfg = parse_cfg(args);
     let requests: usize = args.get_parse("requests", 12usize);
@@ -228,7 +221,7 @@ fn cmd_serve(args: &Args) -> i32 {
     let mix = match parse_mix(mix_spec) {
         Ok(mix) => mix,
         Err(e) => {
-            eprintln!("invalid --mix {mix_spec:?}: {e}");
+            eprintln!("invalid --mix {mix_spec:?}: {e:#}");
             return 2;
         }
     };
@@ -252,6 +245,9 @@ fn cmd_serve(args: &Args) -> i32 {
     };
     for (name, why) in svc.skipped() {
         eprintln!("note: skipping {name} (no artifacts): {why}");
+    }
+    if let Some(listen) = args.get("listen") {
+        return cmd_serve_listen(Arc::new(svc), listen, &mix, requests);
     }
     // Steady state begins here: sessions have compiled their graphs and
     // warmed their model sets at open. Any warm round-trip past this
@@ -395,6 +391,210 @@ fn cmd_serve(args: &Args) -> i32 {
         return 1;
     }
     0
+}
+
+fn print_net_report(report: &repro::coordinator::telemetry::NetReport) {
+    println!(
+        "connections: accepted {} drained {} active {}; frames {} in / {} out",
+        report.accepted,
+        report.drained,
+        report.active(),
+        report.frames_in,
+        report.frames_out
+    );
+    let mut t = Table::new(&["tenant", "admitted", "completed", "shed", "failed", "balanced"]);
+    for (tenant, l) in &report.tenants {
+        t.row(&[
+            tenant.clone(),
+            l.admitted.to_string(),
+            l.completed.to_string(),
+            l.shed.to_string(),
+            l.failed.to_string(),
+            l.balances().to_string(),
+        ]);
+    }
+    t.print();
+    println!("net ledger balanced: {}", report.balanced());
+}
+
+/// `serve --listen ADDR`: put the opened service behind a
+/// `PipelineServer` and push the soak through a loopback wire client
+/// (or serve until killed with `--requests 0`).
+fn cmd_serve_listen(
+    svc: Arc<PipelineService>,
+    listen: &str,
+    mix: &[(String, usize)],
+    requests: usize,
+) -> i32 {
+    let server =
+        match PipelineServer::start(Arc::clone(&svc), listen, ServerConfig::default()) {
+            Ok(server) => server,
+            Err(e) => {
+                eprintln!("error: {e:#}");
+                return 1;
+            }
+        };
+    println!(
+        "serving {} at {} (wire protocol v{}; tenant = pipeline name)",
+        svc.session_names().join(", "),
+        server.local_addr(),
+        repro::net::wire::VERSION
+    );
+    if requests == 0 {
+        println!("--requests 0: serving until killed");
+        loop {
+            std::thread::sleep(std::time::Duration::from_secs(3600));
+        }
+    }
+    let mix: Vec<(String, usize)> =
+        mix.iter().filter(|(n, _)| svc.session(n).is_some()).cloned().collect();
+    if mix.is_empty() {
+        eprintln!("error: no pipeline in the mix could be opened");
+        return 1;
+    }
+    let report = match run_load(server.local_addr(), &LoadSpec { clients: 1, requests, mix }) {
+        Ok(report) => report,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            return 1;
+        }
+    };
+    let net = server.drain();
+    println!(
+        "loopback soak: {requests} closed-loop requests, {} completed in {:.2}s",
+        report.total_completed(),
+        report.wall.as_secs_f64()
+    );
+    print_net_report(&net);
+    if !net.balanced() || !report.balances() {
+        eprintln!("error: serving ledger did not balance");
+        return 1;
+    }
+    0
+}
+
+fn cmd_bench_serve(args: &Args) -> i32 {
+    let cfg = parse_cfg(args);
+    let clients: usize = args.get_parse("clients", 2usize);
+    let requests: usize = args.get_parse("requests", 12usize);
+    let depth: usize = args.get_parse("depth", 8usize);
+    let workers: usize = args.get_parse("workers", 2usize);
+    let per_tenant: usize = args.get_parse("per-tenant", 8usize);
+    let out = args.get_or("out", "BENCH_serve.json");
+    let mix_spec = args.get_or("mix", "census:2,iiot:1");
+    let mix = match parse_mix(mix_spec) {
+        Ok(mix) => mix,
+        Err(e) => {
+            eprintln!("invalid --mix {mix_spec:?}: {e:#}");
+            return 2;
+        }
+    };
+    let names: Vec<&str> = mix.iter().map(|(n, _)| n.as_str()).collect();
+    let svc = match PipelineService::open(
+        &names,
+        ServiceConfig {
+            defaults: cfg,
+            queue_depth: depth,
+            workers,
+            start_paused: false,
+            skip_unavailable: true,
+        },
+    ) {
+        Ok(svc) => Arc::new(svc),
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            return 1;
+        }
+    };
+    for (name, why) in svc.skipped() {
+        eprintln!("note: skipping {name} (no artifacts): {why}");
+    }
+    let mix: Vec<(String, usize)> =
+        mix.into_iter().filter(|(n, _)| svc.session(n).is_some()).collect();
+    if mix.is_empty() {
+        eprintln!("error: no pipeline in the mix could be opened");
+        return 1;
+    }
+    let server = match PipelineServer::start(
+        Arc::clone(&svc),
+        "127.0.0.1:0",
+        ServerConfig { per_tenant_depth: per_tenant, ..Default::default() },
+    ) {
+        Ok(server) => server,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            return 1;
+        }
+    };
+    println!(
+        "bench-serve: {clients} clients x {requests} closed-loop requests over {} at {}",
+        mix.iter().map(|(n, w)| format!("{n}:{w}")).collect::<Vec<_>>().join(","),
+        server.local_addr()
+    );
+    let report = match run_load(server.local_addr(), &LoadSpec { clients, requests, mix }) {
+        Ok(report) => report,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            return 1;
+        }
+    };
+    let net = server.drain();
+    let secs = report.wall.as_secs_f64();
+    let mut t = Table::new(&[
+        "tenant",
+        "requests",
+        "completed",
+        "req/s",
+        "p50 ms",
+        "p95 ms",
+        "shed",
+        "failed",
+    ]);
+    for (tenant, l) in &report.per_tenant {
+        let pct = |q: f64| match repro::net::client::percentile_ms(&l.latencies_ms, q) {
+            Some(ms) => format!("{ms:.2}"),
+            None => "-".to_string(),
+        };
+        t.row(&[
+            tenant.clone(),
+            l.requests.to_string(),
+            l.completed.to_string(),
+            format!("{:.1}", l.completed as f64 / secs.max(1e-12)),
+            pct(0.50),
+            pct(0.95),
+            format!("{} ({:.0}%)", l.shed, l.shed_fraction() * 100.0),
+            l.failed.to_string(),
+        ]);
+    }
+    t.print();
+    print_net_report(&net);
+    let qs = svc.queue_stats();
+    for p in Priority::ALL {
+        let lane = qs.lane(p);
+        println!(
+            "lane {p}: admitted {} shed {} dispatched {} peak depth {}",
+            lane.admitted, lane.shed, lane.dispatched, lane.peak_depth
+        );
+    }
+    if !net.balanced() || !report.balances() {
+        eprintln!("error: serving ledger did not balance");
+        return 1;
+    }
+    match repro::util::bench::write_trajectory(
+        out,
+        "bench_serve",
+        cfg.scale,
+        report.trajectory_pipelines(),
+    ) {
+        Ok(_) => {
+            println!("wrote {out}");
+            0
+        }
+        Err(e) => {
+            eprintln!("cannot write {out}: {e}");
+            1
+        }
+    }
 }
 
 fn cmd_fig1(args: &Args) -> i32 {

@@ -1,0 +1,409 @@
+//! `ServeClient` + the closed-loop load generator behind
+//! `repro bench-serve`.
+//!
+//! A [`ServeClient`] is one tenant's connection: handshake at connect,
+//! then typed frame traffic — the closed-loop [`ServeClient::call`]
+//! sends one request and blocks for *its* resolution, so a generator
+//! thread's offered load is gated by service latency (closed loop),
+//! exactly the arrival model the admission/backpressure machinery is
+//! designed against.
+//!
+//! [`run_load`] drives a whole fleet: `clients` generator threads, each
+//! opening ONE connection per mix entry (tenant = pipeline name, so the
+//! server's per-tenant ledger maps straight onto the bench's per-
+//! pipeline trajectory), issuing a deterministic weighted round-robin
+//! schedule with cycling priorities, then draining every connection —
+//! real connection churn, overload → first-class shed, and a
+//! per-tenant latency record. [`LoadReport::trajectory_pipelines`]
+//! renders the result in the `util/bench.rs` schema for
+//! `BENCH_serve.json`.
+
+use super::wire::{self, Frame, WireError, WirePayload, WireRequest};
+use crate::coordinator::telemetry::NetReport;
+use crate::service::Priority;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::net::{SocketAddr, TcpStream};
+use std::time::{Duration, Instant};
+
+/// One tenant's connection to a [`PipelineServer`].
+///
+/// [`PipelineServer`]: super::PipelineServer
+pub struct ServeClient {
+    stream: TcpStream,
+    tenant: String,
+    pipelines: Vec<String>,
+    next_id: u64,
+}
+
+impl ServeClient {
+    /// Connect and handshake: `Hello{tenant}` → `HelloAck`.
+    pub fn connect(addr: SocketAddr, tenant: &str) -> Result<ServeClient, WireError> {
+        let mut stream = TcpStream::connect(addr)?;
+        let _ = stream.set_nodelay(true);
+        wire::write_frame(&mut stream, &Frame::Hello { tenant: tenant.to_string() })?;
+        let pipelines = match wire::read_frame(&mut stream)? {
+            Some(Frame::HelloAck { pipelines }) => pipelines,
+            Some(other) => {
+                return Err(WireError::Malformed(format!(
+                    "expected hello_ack, got {}",
+                    other.kind()
+                )))
+            }
+            None => return Err(WireError::Truncated { context: "handshake" }),
+        };
+        Ok(ServeClient { stream, tenant: tenant.to_string(), pipelines, next_id: 0 })
+    }
+
+    /// The tenant this connection declared.
+    pub fn tenant(&self) -> &str {
+        &self.tenant
+    }
+
+    /// Pipelines the server reported open at handshake.
+    pub fn pipelines(&self) -> &[String] {
+        &self.pipelines
+    }
+
+    /// Fire one request without waiting; returns its correlation id.
+    pub fn send(
+        &mut self,
+        pipeline: &str,
+        priority: Priority,
+        deadline: Option<Duration>,
+        payload: WirePayload,
+    ) -> Result<u64, WireError> {
+        self.next_id += 1;
+        let id = self.next_id;
+        wire::write_frame(
+            &mut self.stream,
+            &Frame::Request(WireRequest {
+                id,
+                pipeline: pipeline.to_string(),
+                priority,
+                deadline_ms: deadline.map_or(0, |d| d.as_millis() as u64),
+                payload,
+            }),
+        )?;
+        Ok(id)
+    }
+
+    /// Read the next frame; a close mid-conversation is an error.
+    pub fn recv(&mut self) -> Result<Frame, WireError> {
+        match wire::read_frame(&mut self.stream)? {
+            Some(frame) => Ok(frame),
+            None => Err(WireError::Truncated { context: "connection closed mid-conversation" }),
+        }
+    }
+
+    /// Closed-loop call: send one request and block until ITS
+    /// resolution frame (`Completed`/`Shed`/`Failed`) arrives.
+    pub fn call(
+        &mut self,
+        pipeline: &str,
+        priority: Priority,
+        deadline: Option<Duration>,
+        payload: WirePayload,
+    ) -> Result<Frame, WireError> {
+        let id = self.send(pipeline, priority, deadline, payload)?;
+        loop {
+            let frame = self.recv()?;
+            match &frame {
+                Frame::Completed(c) if c.id == id => return Ok(frame),
+                Frame::Shed { id: rid, .. } | Frame::Failed { id: rid, .. } if *rid == id => {
+                    return Ok(frame)
+                }
+                // Stale frames from earlier fire-and-forget sends (or a
+                // stats reply) are skipped; anything else is protocol.
+                Frame::Completed(_) | Frame::Shed { .. } | Frame::Failed { .. }
+                | Frame::Stats(_) => continue,
+                other => {
+                    return Err(WireError::Malformed(format!(
+                        "unexpected {} while awaiting request {id}",
+                        other.kind()
+                    )))
+                }
+            }
+        }
+    }
+
+    /// Fetch the server's serving ledger.
+    pub fn stats(&mut self) -> Result<NetReport, WireError> {
+        wire::write_frame(&mut self.stream, &Frame::StatsReq)?;
+        loop {
+            match self.recv()? {
+                Frame::Stats(report) => return Ok(report),
+                // In-flight resolutions may interleave before the reply.
+                Frame::Completed(_) | Frame::Shed { .. } | Frame::Failed { .. } => continue,
+                other => {
+                    return Err(WireError::Malformed(format!(
+                        "unexpected {} while awaiting stats",
+                        other.kind()
+                    )))
+                }
+            }
+        }
+    }
+
+    /// Graceful close: send `Drain`, read out every remaining
+    /// resolution, and return the `Goodbye` counters
+    /// `(completed, shed, failed)`.
+    pub fn drain(mut self) -> Result<(u64, u64, u64), WireError> {
+        wire::write_frame(&mut self.stream, &Frame::Drain)?;
+        loop {
+            match self.recv()? {
+                Frame::Goodbye { completed, shed, failed } => {
+                    return Ok((completed, shed, failed))
+                }
+                Frame::Completed(_) | Frame::Shed { .. } | Frame::Failed { .. }
+                | Frame::Stats(_) => continue,
+                other => {
+                    return Err(WireError::Malformed(format!(
+                        "unexpected {} while draining",
+                        other.kind()
+                    )))
+                }
+            }
+        }
+    }
+}
+
+/// How [`run_load`] offers load.
+#[derive(Debug, Clone)]
+pub struct LoadSpec {
+    /// Generator threads; each opens one connection per mix entry.
+    pub clients: usize,
+    /// Closed-loop requests per client (spread over the mix by weight).
+    pub requests: usize,
+    /// Weighted pipeline mix; each entry is also its tenant id.
+    pub mix: Vec<(String, usize)>,
+}
+
+/// One tenant's client-side outcome record.
+#[derive(Debug, Clone, Default)]
+pub struct TenantLoad {
+    pub requests: u64,
+    pub completed: u64,
+    pub shed: u64,
+    pub failed: u64,
+    /// Client-observed latency of each COMPLETED request, milliseconds.
+    pub latencies_ms: Vec<f64>,
+}
+
+impl TenantLoad {
+    /// Every issued request resolved exactly once.
+    pub fn balances(&self) -> bool {
+        self.requests == self.completed + self.shed + self.failed
+    }
+
+    /// Fraction of issued requests the serving edge shed.
+    pub fn shed_fraction(&self) -> f64 {
+        if self.requests == 0 {
+            0.0
+        } else {
+            self.shed as f64 / self.requests as f64
+        }
+    }
+}
+
+/// The whole fleet's outcome, per tenant.
+#[derive(Debug, Clone, Default)]
+pub struct LoadReport {
+    pub per_tenant: BTreeMap<String, TenantLoad>,
+    pub wall: Duration,
+}
+
+/// Latency percentile over an unsorted sample set (same nearest-rank
+/// convention as the telemetry reports); `None` on no samples.
+pub fn percentile_ms(samples: &[f64], q: f64) -> Option<f64> {
+    if samples.is_empty() {
+        return None;
+    }
+    let mut sorted = samples.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).expect("finite latencies"));
+    let idx = ((sorted.len() - 1) as f64 * q).round() as usize;
+    Some(sorted[idx.min(sorted.len() - 1)])
+}
+
+impl LoadReport {
+    /// Sum of completed requests across tenants.
+    pub fn total_completed(&self) -> u64 {
+        self.per_tenant.values().map(|t| t.completed).sum()
+    }
+
+    /// Every tenant's ledger balances client-side.
+    pub fn balances(&self) -> bool {
+        self.per_tenant.values().all(TenantLoad::balances)
+    }
+
+    /// Render per-tenant trajectories in the `util/bench.rs` schema:
+    /// each tenant (== pipeline) gets an `exec_modes.serve` entry with
+    /// the standard `wall_s`/`items`/`items_per_s`/`p50_ms`/`p95_ms`
+    /// fields plus the serving-specific outcome counters.
+    pub fn trajectory_pipelines(&self) -> BTreeMap<String, Json> {
+        let secs = self.wall.as_secs_f64();
+        let mut pipelines = BTreeMap::new();
+        for (tenant, t) in &self.per_tenant {
+            let mut entry = BTreeMap::new();
+            entry.insert("wall_s".to_string(), Json::Num(secs));
+            entry.insert("items".to_string(), Json::Num(t.completed as f64));
+            entry.insert(
+                "items_per_s".to_string(),
+                Json::Num(t.completed as f64 / secs.max(1e-12)),
+            );
+            let pct = |q: f64| match percentile_ms(&t.latencies_ms, q) {
+                Some(ms) => Json::Num(ms),
+                None => Json::Null,
+            };
+            entry.insert("p50_ms".to_string(), pct(0.50));
+            entry.insert("p95_ms".to_string(), pct(0.95));
+            entry.insert("requests".to_string(), Json::Num(t.requests as f64));
+            entry.insert("shed".to_string(), Json::Num(t.shed as f64));
+            entry.insert("failed".to_string(), Json::Num(t.failed as f64));
+            entry.insert("shed_fraction".to_string(), Json::Num(t.shed_fraction()));
+            let mut modes = BTreeMap::new();
+            modes.insert("serve".to_string(), Json::Obj(entry));
+            let mut p = BTreeMap::new();
+            p.insert("exec_modes".to_string(), Json::Obj(modes));
+            pipelines.insert(tenant.clone(), Json::Obj(p));
+        }
+        pipelines
+    }
+}
+
+/// Drive a closed-loop fleet against a live server (see module docs).
+/// Deterministic schedule: client `c`'s `i`-th request goes to the
+/// weighted round-robin mix slot `(i)` with priority cycling
+/// normal → high → low, so two runs offer identical traffic.
+pub fn run_load(addr: SocketAddr, spec: &LoadSpec) -> anyhow::Result<LoadReport> {
+    anyhow::ensure!(spec.clients > 0, "bench-serve needs at least one client");
+    anyhow::ensure!(!spec.mix.is_empty(), "bench-serve needs a non-empty mix");
+    let schedule: Vec<String> = spec
+        .mix
+        .iter()
+        .flat_map(|(name, weight)| std::iter::repeat(name.clone()).take(*weight))
+        .collect();
+    const PRIORITIES: [Priority; 3] = [Priority::Normal, Priority::High, Priority::Low];
+    let started = Instant::now();
+    let mut workers = Vec::new();
+    for _ in 0..spec.clients {
+        let schedule = schedule.clone();
+        let mix: Vec<String> = spec.mix.iter().map(|(n, _)| n.clone()).collect();
+        let requests = spec.requests;
+        workers.push(std::thread::spawn(move || -> anyhow::Result<
+            BTreeMap<String, TenantLoad>,
+        > {
+            // One connection per mix entry; tenant id == pipeline name.
+            let mut conns: BTreeMap<String, ServeClient> = BTreeMap::new();
+            for tenant in &mix {
+                conns.insert(tenant.clone(), ServeClient::connect(addr, tenant)?);
+            }
+            let mut loads: BTreeMap<String, TenantLoad> = BTreeMap::new();
+            for i in 0..requests {
+                let pipeline = &schedule[i % schedule.len()];
+                let priority = PRIORITIES[i % PRIORITIES.len()];
+                let conn = conns.get_mut(pipeline).expect("mix connection open");
+                let load = loads.entry(pipeline.clone()).or_default();
+                load.requests += 1;
+                let t0 = Instant::now();
+                match conn.call(pipeline, priority, None, WirePayload::Synthetic)? {
+                    Frame::Completed(_) => {
+                        load.completed += 1;
+                        load.latencies_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+                    }
+                    Frame::Shed { .. } => load.shed += 1,
+                    Frame::Failed { .. } => load.failed += 1,
+                    other => anyhow::bail!("unexpected resolution frame {}", other.kind()),
+                }
+            }
+            // Churn: every connection drains gracefully. The Goodbye
+            // ledger must agree with what this thread observed.
+            for (tenant, conn) in conns {
+                let (completed, shed, failed) = conn.drain()?;
+                let load = loads.entry(tenant.clone()).or_default();
+                anyhow::ensure!(
+                    (completed, shed, failed)
+                        == (load.completed, load.shed, load.failed),
+                    "goodbye ledger for {tenant} diverged from client counts"
+                );
+            }
+            Ok(loads)
+        }));
+    }
+    let mut report = LoadReport::default();
+    let mut errors = Vec::new();
+    for worker in workers {
+        match worker.join().expect("load generator thread panicked") {
+            Ok(loads) => {
+                for (tenant, load) in loads {
+                    let t = report.per_tenant.entry(tenant).or_default();
+                    t.requests += load.requests;
+                    t.completed += load.completed;
+                    t.shed += load.shed;
+                    t.failed += load.failed;
+                    t.latencies_ms.extend(load.latencies_ms);
+                }
+            }
+            Err(e) => errors.push(format!("{e:#}")),
+        }
+    }
+    anyhow::ensure!(errors.is_empty(), "load generator failed: {}", errors.join("; "));
+    report.wall = started.elapsed();
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_follows_nearest_rank() {
+        assert_eq!(percentile_ms(&[], 0.5), None);
+        assert_eq!(percentile_ms(&[7.0], 0.95), Some(7.0));
+        let xs = [5.0, 1.0, 3.0, 2.0, 4.0];
+        assert_eq!(percentile_ms(&xs, 0.0), Some(1.0));
+        assert_eq!(percentile_ms(&xs, 0.5), Some(3.0));
+        assert_eq!(percentile_ms(&xs, 1.0), Some(5.0));
+    }
+
+    #[test]
+    fn trajectory_pipelines_follow_the_bench_schema() {
+        let mut report = LoadReport { wall: Duration::from_millis(500), ..Default::default() };
+        report.per_tenant.insert(
+            "census".to_string(),
+            TenantLoad {
+                requests: 10,
+                completed: 8,
+                shed: 2,
+                failed: 0,
+                latencies_ms: vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0],
+            },
+        );
+        assert!(report.balances());
+        let pipelines = report.trajectory_pipelines();
+        let doc = Json::Obj(pipelines);
+        let entry = doc
+            .get("census")
+            .and_then(|p| p.get("exec_modes"))
+            .and_then(|m| m.get("serve"))
+            .expect("serve mode entry");
+        assert_eq!(entry.get("wall_s").and_then(Json::as_f64), Some(0.5));
+        assert_eq!(entry.get("items").and_then(Json::as_f64), Some(8.0));
+        assert_eq!(entry.get("items_per_s").and_then(Json::as_f64), Some(16.0));
+        assert_eq!(entry.get("shed_fraction").and_then(Json::as_f64), Some(0.2));
+        assert!(entry.get("p50_ms").and_then(Json::as_f64).is_some());
+        // Round trip through the parser like validate_bench does.
+        let parsed = Json::parse(&doc.to_string_compact()).unwrap();
+        assert_eq!(parsed.to_string_compact(), doc.to_string_compact());
+    }
+
+    #[test]
+    fn tenant_load_ledger_math() {
+        let t = TenantLoad { requests: 4, completed: 2, shed: 1, failed: 1, ..Default::default() };
+        assert!(t.balances());
+        assert_eq!(t.shed_fraction(), 0.25);
+        let unresolved = TenantLoad { requests: 4, completed: 2, ..Default::default() };
+        assert!(!unresolved.balances());
+        assert_eq!(TenantLoad::default().shed_fraction(), 0.0);
+    }
+}

@@ -1,0 +1,21 @@
+//! The network serving edge: a TCP front-end over
+//! [`PipelineService`](crate::service::PipelineService).
+//!
+//! Three layers, each testable below the next:
+//!
+//! * [`wire`] — the versioned length-prefixed binary protocol. Pure
+//!   encode/decode over typed frames; no sockets required to test it.
+//! * [`server`] — [`PipelineServer`]: accept loop, per-connection
+//!   handler threads, per-tenant admission lanes, write backpressure,
+//!   graceful drain. Ledgered end to end in
+//!   [`NetReport`](crate::coordinator::telemetry::NetReport).
+//! * [`client`] — [`ServeClient`] and the closed-loop load generator
+//!   behind `repro bench-serve`.
+
+pub mod client;
+pub mod server;
+pub mod wire;
+
+pub use client::{run_load, LoadReport, LoadSpec, ServeClient, TenantLoad};
+pub use server::{PipelineServer, ServerConfig};
+pub use wire::{Frame, ShedCause, WireError, WirePayload, WireRequest};

@@ -1,0 +1,563 @@
+//! `PipelineServer` — the TCP serving edge over a
+//! [`PipelineService`].
+//!
+//! One accept loop, one handler thread per connection, all speaking the
+//! [`wire`](super::wire) protocol. The handler is a poll loop (short
+//! read timeouts, never busy): it multiplexes many in-flight
+//! [`Ticket`]s per connection via the non-consuming
+//! [`Ticket::is_done`], so a connection can hold a pipeline's worth of
+//! requests outstanding while responses stream back in completion
+//! order, correlated by request id.
+//!
+//! **Per-tenant lanes.** Every connection declares a tenant id in its
+//! `Hello`. The server holds one in-flight counter per tenant (shared
+//! across that tenant's connections): a tenant at its
+//! [`ServerConfig::per_tenant_depth`] gets an immediate first-class
+//! [`Frame::Shed`] (`TenantLaneFull`) for further requests — one
+//! noisy tenant saturates its own lane, not the shared admission
+//! queue, and never costs anyone a connection.
+//!
+//! **Backpressure.** A connection may hold at most
+//! [`ServerConfig::conn_inflight`] unresolved tickets. Past that, the
+//! handler parks on the OLDEST ticket and writes its response before
+//! reading another request — a slow reader stalls its own socket
+//! (bounded memory), it does not balloon the pending set.
+//!
+//! **Graceful drain.** [`PipelineServer::drain`] stops the accept
+//! loop, then every handler flushes its in-flight tickets, writes each
+//! response, and closes with a `Goodbye` carrying the connection's
+//! outcome counters — zero lost responses, which the soak tests pin
+//! from the [`NetReport`] ledger (`accepted == drained`, and per
+//! tenant `admitted == completed + shed + failed`), never wall-clock.
+
+use super::wire::{self, Frame, ShedCause, WireCompletion, WireError, WireRequest};
+use crate::coordinator::telemetry::{NetLedger, NetReport};
+use crate::service::{PipelineService, Request, Response, Ticket};
+use std::collections::{BTreeMap, VecDeque};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// How a [`PipelineServer`] is provisioned.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    /// Max in-flight (admitted, unresolved) requests per tenant across
+    /// all of that tenant's connections; further requests shed with
+    /// [`ShedCause::TenantLaneFull`].
+    pub per_tenant_depth: usize,
+    /// Max unresolved tickets per connection before the handler parks
+    /// on the oldest one (write backpressure for slow readers).
+    pub conn_inflight: usize,
+    /// Handler read timeout — the poll cadence at which handlers notice
+    /// resolved tickets and the drain flag. Liveness only: no
+    /// correctness property depends on this value.
+    pub poll_interval: Duration,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            per_tenant_depth: 8,
+            conn_inflight: 32,
+            poll_interval: Duration::from_millis(10),
+        }
+    }
+}
+
+struct Inner {
+    service: Arc<PipelineService>,
+    ledger: NetLedger,
+    /// In-flight admitted requests per tenant (the admission lanes).
+    lanes: Mutex<BTreeMap<String, usize>>,
+    draining: AtomicBool,
+    conns: Mutex<Vec<JoinHandle<()>>>,
+    cfg: ServerConfig,
+}
+
+/// The TCP serving front-end (see module docs).
+pub struct PipelineServer {
+    inner: Arc<Inner>,
+    addr: SocketAddr,
+    accept: Option<JoinHandle<()>>,
+}
+
+impl PipelineServer {
+    /// Bind `addr` (e.g. `127.0.0.1:0` for an ephemeral port) and start
+    /// accepting connections over `service`.
+    pub fn start(
+        service: Arc<PipelineService>,
+        addr: &str,
+        cfg: ServerConfig,
+    ) -> anyhow::Result<PipelineServer> {
+        let listener = TcpListener::bind(addr)
+            .map_err(|e| anyhow::anyhow!("cannot bind {addr}: {e}"))?;
+        let local = listener.local_addr()?;
+        let inner = Arc::new(Inner {
+            service,
+            ledger: NetLedger::default(),
+            lanes: Mutex::new(BTreeMap::new()),
+            draining: AtomicBool::new(false),
+            conns: Mutex::new(Vec::new()),
+            cfg,
+        });
+        let accept_inner = Arc::clone(&inner);
+        let accept = std::thread::Builder::new()
+            .name("pipeline-server-accept".to_string())
+            .spawn(move || accept_loop(&listener, &accept_inner))
+            .expect("spawn accept loop");
+        Ok(PipelineServer { inner, addr: local, accept: Some(accept) })
+    }
+
+    /// The bound address (with the real port when started on `:0`).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Live snapshot of the serving ledger.
+    pub fn report(&self) -> NetReport {
+        self.inner.ledger.snapshot()
+    }
+
+    /// Graceful drain: stop accepting, let every handler flush its
+    /// in-flight tickets and say `Goodbye`, then return the final
+    /// ledger. Requires the underlying service to be running (a paused
+    /// service never resolves the in-flight tickets being flushed).
+    pub fn drain(mut self) -> NetReport {
+        self.shutdown()
+    }
+
+    fn shutdown(&mut self) -> NetReport {
+        self.inner.draining.store(true, Ordering::SeqCst);
+        if let Some(accept) = self.accept.take() {
+            // A sentinel connection unblocks the accept() call so the
+            // loop observes the drain flag; it is dropped uncounted.
+            let _ = TcpStream::connect(self.addr);
+            let _ = accept.join();
+        }
+        let conns: Vec<JoinHandle<()>> =
+            std::mem::take(&mut *self.inner.conns.lock().unwrap());
+        for handle in conns {
+            let _ = handle.join();
+        }
+        self.inner.ledger.snapshot()
+    }
+}
+
+impl Drop for PipelineServer {
+    fn drop(&mut self) {
+        if self.accept.is_some() {
+            self.shutdown();
+        }
+    }
+}
+
+fn accept_loop(listener: &TcpListener, inner: &Arc<Inner>) {
+    for stream in listener.incoming() {
+        if inner.draining.load(Ordering::SeqCst) {
+            // The final (possibly sentinel) stream is dropped without
+            // counting: `accepted` only ever counts served connections.
+            break;
+        }
+        let Ok(stream) = stream else { continue };
+        inner.ledger.connection_accepted();
+        let conn_inner = Arc::clone(inner);
+        let handle = std::thread::Builder::new()
+            .name("pipeline-server-conn".to_string())
+            .spawn(move || {
+                handle_conn(stream, &conn_inner);
+                conn_inner.ledger.connection_drained();
+            })
+            .expect("spawn connection handler");
+        inner.conns.lock().unwrap().push(handle);
+    }
+}
+
+/// One unresolved request riding a connection.
+struct Pending {
+    id: u64,
+    tenant: String,
+    ticket: Ticket,
+}
+
+/// Per-connection handler state.
+struct Conn {
+    stream: TcpStream,
+    tenant: String,
+    pending: VecDeque<Pending>,
+    /// False once a write failed (peer gone): ledger resolution
+    /// continues, frames stop.
+    writable: bool,
+    completed: u64,
+    shed: u64,
+    failed: u64,
+}
+
+impl Conn {
+    /// Write one frame unless the peer is already gone. Write failures
+    /// flip `writable` instead of erroring: every pending ticket must
+    /// still resolve in the ledger whatever the socket does.
+    fn send(&mut self, inner: &Inner, frame: &Frame) {
+        if !self.writable {
+            return;
+        }
+        match wire::write_frame(&mut self.stream, frame) {
+            Ok(()) => inner.ledger.frame_out(),
+            Err(_) => self.writable = false,
+        }
+    }
+}
+
+fn handle_conn(stream: TcpStream, inner: &Arc<Inner>) {
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(inner.cfg.poll_interval));
+    // Handshake: the first frame must be Hello{tenant}.
+    let mut conn = Conn {
+        stream,
+        tenant: String::new(),
+        pending: VecDeque::new(),
+        writable: true,
+        completed: 0,
+        shed: 0,
+        failed: 0,
+    };
+    loop {
+        if inner.draining.load(Ordering::SeqCst) {
+            // Drained before the handshake finished: nothing in flight.
+            conn.send(inner, &Frame::Goodbye { completed: 0, shed: 0, failed: 0 });
+            return;
+        }
+        match wire::read_frame(&mut conn.stream) {
+            Ok(Some(Frame::Hello { tenant })) => {
+                inner.ledger.frame_in();
+                conn.tenant = tenant;
+                let pipelines =
+                    inner.service.session_names().iter().map(|s| s.to_string()).collect();
+                conn.send(inner, &Frame::HelloAck { pipelines });
+                break;
+            }
+            Ok(Some(_)) | Ok(None) => return, // protocol error / peer gone
+            Err(e) if e.is_timeout() => continue,
+            Err(_) => return,
+        }
+    }
+    serve(&mut conn, inner);
+}
+
+fn serve(conn: &mut Conn, inner: &Arc<Inner>) {
+    loop {
+        flush_ready(conn, inner);
+        if inner.draining.load(Ordering::SeqCst) {
+            finish(conn, inner);
+            return;
+        }
+        if conn.pending.len() >= inner.cfg.conn_inflight {
+            // Backpressure: park on the oldest ticket; its response is
+            // written (possibly blocking on a slow reader's socket)
+            // before another request frame is read.
+            let p = conn.pending.pop_front().expect("pending non-empty");
+            let resp = p.ticket.wait();
+            resolve(conn, inner, p.id, &p.tenant, resp);
+            continue;
+        }
+        match wire::read_frame(&mut conn.stream) {
+            Ok(Some(frame)) => {
+                inner.ledger.frame_in();
+                match frame {
+                    Frame::Request(req) => handle_request(conn, inner, req),
+                    Frame::Drain => {
+                        finish(conn, inner);
+                        return;
+                    }
+                    Frame::StatsReq => {
+                        let report = inner.ledger.snapshot();
+                        conn.send(inner, &Frame::Stats(report));
+                    }
+                    // Anything else is a protocol violation from this
+                    // side of the conversation; resolve and close.
+                    _ => {
+                        abandon(conn, inner);
+                        return;
+                    }
+                }
+            }
+            Ok(None) => {
+                // Peer closed without Drain: resolve what's in flight
+                // for the ledger, skip the writes.
+                abandon(conn, inner);
+                return;
+            }
+            Err(e) if e.is_timeout() => continue,
+            Err(_) => {
+                abandon(conn, inner);
+                return;
+            }
+        }
+    }
+}
+
+fn handle_request(conn: &mut Conn, inner: &Arc<Inner>, req: WireRequest) {
+    let WireRequest { id, pipeline, priority, deadline_ms, payload } = req;
+    let tenant = conn.tenant.clone();
+    inner.ledger.tenant_admitted(&tenant);
+    // Tenant lane gate: at depth, shed immediately — first-class frame,
+    // deterministic at a fixed depth, never a dropped connection.
+    let lane_open = {
+        let mut lanes = inner.lanes.lock().unwrap();
+        let in_flight = lanes.entry(tenant.clone()).or_default();
+        if *in_flight >= inner.cfg.per_tenant_depth {
+            false
+        } else {
+            *in_flight += 1;
+            true
+        }
+    };
+    if !lane_open {
+        inner.ledger.tenant_shed(&tenant);
+        conn.shed += 1;
+        conn.send(
+            inner,
+            &Frame::Shed { id, pipeline, priority, cause: ShedCause::TenantLaneFull, waited_us: 0 },
+        );
+        return;
+    }
+    let request = Request {
+        pipeline: pipeline.clone(),
+        payload: payload.into_workload(),
+        priority,
+        deadline: (deadline_ms > 0).then(|| Duration::from_millis(deadline_ms)),
+    };
+    match inner.service.submit(request) {
+        Ok(ticket) => conn.pending.push_back(Pending { id, tenant, ticket }),
+        Err(e) => {
+            lane_release(inner, &tenant);
+            inner.ledger.tenant_failed(&tenant);
+            conn.failed += 1;
+            conn.send(inner, &Frame::Failed { id, pipeline, error: format!("{e:#}") });
+        }
+    }
+}
+
+fn lane_release(inner: &Inner, tenant: &str) {
+    let mut lanes = inner.lanes.lock().unwrap();
+    if let Some(in_flight) = lanes.get_mut(tenant) {
+        *in_flight = in_flight.saturating_sub(1);
+    }
+}
+
+/// Write (and account) the response for one resolved ticket.
+fn resolve(conn: &mut Conn, inner: &Inner, id: u64, tenant: &str, resp: Response) {
+    lane_release(inner, tenant);
+    let frame = match resp {
+        Response::Completed(c) => {
+            inner.ledger.tenant_completed(tenant);
+            conn.completed += 1;
+            Frame::Completed(WireCompletion {
+                id,
+                pipeline: c.pipeline,
+                items: c.result.items as u64,
+                queue_wait_us: c.queue_wait.as_micros() as u64,
+                service_us: c.service_time.as_micros() as u64,
+                summary: c.output.summary(),
+                metrics: c.result.metrics.into_iter().collect(),
+            })
+        }
+        Response::Shed { pipeline, priority, reason, waited } => {
+            inner.ledger.tenant_shed(tenant);
+            conn.shed += 1;
+            Frame::Shed {
+                id,
+                pipeline,
+                priority,
+                cause: reason.into(),
+                waited_us: waited.as_micros() as u64,
+            }
+        }
+        Response::Failed { pipeline, error } => {
+            inner.ledger.tenant_failed(tenant);
+            conn.failed += 1;
+            Frame::Failed { id, pipeline, error }
+        }
+    };
+    conn.send(inner, &frame);
+}
+
+/// Resolve every ticket whose response is already available.
+fn flush_ready(conn: &mut Conn, inner: &Inner) {
+    // Completion order, not submission order: scan the whole pending
+    // set and resolve whatever is done (responses correlate by id).
+    let mut i = 0;
+    while i < conn.pending.len() {
+        if conn.pending[i].ticket.is_done() {
+            let p = conn.pending.remove(i).expect("index in bounds");
+            let resp = p.ticket.wait(); // buffered: returns immediately
+            resolve(conn, inner, p.id, &p.tenant, resp);
+        } else {
+            i += 1;
+        }
+    }
+}
+
+/// Drain this connection: flush every in-flight ticket (writing each
+/// response), then close with the outcome counters. Zero responses are
+/// lost — each pending ticket is waited to resolution.
+fn finish(conn: &mut Conn, inner: &Inner) {
+    while let Some(p) = conn.pending.pop_front() {
+        let resp = p.ticket.wait();
+        resolve(conn, inner, p.id, &p.tenant, resp);
+    }
+    let goodbye =
+        Frame::Goodbye { completed: conn.completed, shed: conn.shed, failed: conn.failed };
+    conn.send(inner, &goodbye);
+}
+
+/// The peer vanished (EOF or protocol garbage): resolve every pending
+/// ticket for the ledger — lanes release and tenant ledgers balance
+/// even when nobody is left to read the responses.
+fn abandon(conn: &mut Conn, inner: &Inner) {
+    conn.writable = false;
+    while let Some(p) = conn.pending.pop_front() {
+        let resp = p.ticket.wait();
+        resolve(conn, inner, p.id, &p.tenant, resp);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pipelines::{RunConfig, Toggles};
+    use crate::service::{Priority, ServiceConfig};
+
+    fn tiny() -> RunConfig {
+        RunConfig { toggles: Toggles::optimized(), scale: 0.05, seed: 5, ..Default::default() }
+    }
+
+    fn start_census(cfg: ServerConfig) -> (Arc<PipelineService>, PipelineServer) {
+        let svc = Arc::new(
+            PipelineService::open(
+                &["census"],
+                ServiceConfig { defaults: tiny(), queue_depth: 32, ..Default::default() },
+            )
+            .unwrap(),
+        );
+        let server =
+            PipelineServer::start(Arc::clone(&svc), "127.0.0.1:0", cfg).unwrap();
+        (svc, server)
+    }
+
+    fn hello(stream: &mut TcpStream, tenant: &str) -> Vec<String> {
+        wire::write_frame(stream, &Frame::Hello { tenant: to(tenant) }).unwrap();
+        match wire::read_frame(stream).unwrap().unwrap() {
+            Frame::HelloAck { pipelines } => pipelines,
+            other => panic!("expected HelloAck, got {}", other.kind()),
+        }
+    }
+
+    fn to(s: &str) -> String {
+        s.to_string()
+    }
+
+    #[test]
+    fn handshake_request_stats_drain_round_trip() {
+        let (_svc, server) = start_census(ServerConfig::default());
+        let mut c = TcpStream::connect(server.local_addr()).unwrap();
+        assert_eq!(hello(&mut c, "t-a"), vec!["census".to_string()]);
+        wire::write_frame(
+            &mut c,
+            &Frame::Request(WireRequest {
+                id: 42,
+                pipeline: to("census"),
+                priority: Priority::Normal,
+                deadline_ms: 0,
+                payload: wire::WirePayload::Synthetic,
+            }),
+        )
+        .unwrap();
+        match wire::read_frame(&mut c).unwrap().unwrap() {
+            Frame::Completed(done) => {
+                assert_eq!(done.id, 42);
+                assert_eq!(done.pipeline, "census");
+                assert!(done.items > 0);
+                assert!(done.metrics.iter().any(|(k, _)| k == "r2"));
+                assert!(!done.summary.is_empty());
+            }
+            other => panic!("expected Completed, got {}", other.kind()),
+        }
+        // StatsReq sees the tenant's ledger mid-connection.
+        wire::write_frame(&mut c, &Frame::StatsReq).unwrap();
+        match wire::read_frame(&mut c).unwrap().unwrap() {
+            Frame::Stats(report) => {
+                assert_eq!(report.accepted, 1);
+                assert_eq!(report.active(), 1, "this connection is still open");
+                let t = report.tenants.get("t-a").expect("tenant ledger exists");
+                assert_eq!(t.admitted, 1);
+                assert_eq!(t.completed, 1);
+                assert!(t.balances());
+            }
+            other => panic!("expected Stats, got {}", other.kind()),
+        }
+        // Client-initiated drain: Goodbye carries the outcome counters.
+        wire::write_frame(&mut c, &Frame::Drain).unwrap();
+        match wire::read_frame(&mut c).unwrap().unwrap() {
+            Frame::Goodbye { completed, shed, failed } => {
+                assert_eq!((completed, shed, failed), (1, 0, 0));
+            }
+            other => panic!("expected Goodbye, got {}", other.kind()),
+        }
+        assert!(wire::read_frame(&mut c).unwrap().is_none(), "server closed after Goodbye");
+        let report = server.drain();
+        assert_eq!(report.accepted, 1);
+        assert_eq!(report.drained, 1);
+        assert!(report.balanced(), "{report:?}");
+    }
+
+    #[test]
+    fn unknown_pipeline_resolves_as_failed_frame() {
+        let (_svc, server) = start_census(ServerConfig::default());
+        let mut c = TcpStream::connect(server.local_addr()).unwrap();
+        hello(&mut c, "t-bad");
+        wire::write_frame(
+            &mut c,
+            &Frame::Request(WireRequest {
+                id: 1,
+                pipeline: to("nope"),
+                priority: Priority::Normal,
+                deadline_ms: 0,
+                payload: wire::WirePayload::Synthetic,
+            }),
+        )
+        .unwrap();
+        match wire::read_frame(&mut c).unwrap().unwrap() {
+            Frame::Failed { id, pipeline, error } => {
+                assert_eq!(id, 1);
+                assert_eq!(pipeline, "nope");
+                assert!(error.contains("census"), "{error}");
+            }
+            other => panic!("expected Failed, got {}", other.kind()),
+        }
+        drop(c); // vanish without Drain: the ledger must still balance
+        let report = server.drain();
+        assert!(report.balanced(), "{report:?}");
+        let t = &report.tenants["t-bad"];
+        assert_eq!((t.admitted, t.failed), (1, 1));
+    }
+
+    #[test]
+    fn garbage_bytes_close_the_connection_without_panic() {
+        let (_svc, server) = start_census(ServerConfig::default());
+        let mut c = TcpStream::connect(server.local_addr()).unwrap();
+        use std::io::Write as _;
+        c.write_all(b"GET / HTTP/1.1\r\n\r\n").unwrap();
+        // The server closes on the protocol error; the connection still
+        // counts accepted → drained.
+        let mut buf = [0u8; 16];
+        use std::io::Read as _;
+        let _ = c.read(&mut buf);
+        drop(c);
+        let report = server.drain();
+        assert_eq!(report.accepted, 1);
+        assert_eq!(report.drained, 1);
+        assert!(report.balanced(), "{report:?}");
+    }
+}

@@ -1,0 +1,1105 @@
+//! The serving wire protocol — a versioned, length-prefixed binary
+//! framing over the existing typed request/response vocabulary.
+//!
+//! Every frame is an 11-byte header followed by a bounded payload:
+//!
+//! ```text
+//! +----------+----------+--------+--------------+------------------+
+//! | magic    | version  | type   | payload_len  | payload          |
+//! | 4B RPLN  | u16 BE   | u8     | u32 BE       | payload_len bytes|
+//! +----------+----------+--------+--------------+------------------+
+//! ```
+//!
+//! The body grammar is a handful of fixed-width integers (big-endian),
+//! IEEE-754 bit-pattern `f64`s, and length-prefixed UTF-8 strings — no
+//! self-describing format, so encode/decode are pure functions a unit
+//! test can exercise without a socket. Decoding NEVER panics: bad
+//! magic, unknown versions or frame types, truncated bodies, oversized
+//! length prefixes, and malformed UTF-8 all surface as typed
+//! [`WireError`]s so a server can answer garbage with a clean protocol
+//! error instead of dying.
+//!
+//! Frame vocabulary (the serving conversation):
+//!
+//! * [`Frame::Hello`] / [`Frame::HelloAck`] — the connection handshake.
+//!   `Hello` declares the connection's **tenant id** (the admission-lane
+//!   key); the ack lists the pipelines with open sessions.
+//! * [`Frame::Request`] / [`Frame::Completed`] / [`Frame::Shed`] /
+//!   [`Frame::Failed`] — one submitted request and its exactly-once
+//!   resolution, correlated by a caller-chosen `id` so responses may
+//!   arrive out of order while many tickets are in flight.
+//! * [`Frame::Drain`] / [`Frame::Goodbye`] — graceful teardown: the
+//!   sender of `Drain` promises no further requests; `Goodbye` carries
+//!   the connection's outcome counters after the flush.
+//! * [`Frame::StatsReq`] / [`Frame::Stats`] — the server's
+//!   [`NetReport`] ledger on demand, which is how clients synchronize
+//!   on counters instead of sleeping.
+
+use crate::coordinator::telemetry::{NetReport, TenantLedger};
+use crate::pipelines::Workload;
+use crate::service::{Priority, ShedReason};
+use std::io::{Read, Write};
+
+/// Frame magic: the four bytes every frame starts with.
+pub const MAGIC: [u8; 4] = *b"RPLN";
+
+/// Protocol version accepted by this build.
+pub const VERSION: u16 = 1;
+
+/// Fixed header length (magic + version + type + payload length).
+pub const HEADER_LEN: usize = 11;
+
+/// Hard cap on a frame's payload length: a length prefix past this is
+/// rejected *before* any allocation, so a hostile or corrupt peer
+/// cannot make the server balloon memory.
+pub const MAX_PAYLOAD: usize = 16 << 20;
+
+/// Why a frame could not be encoded, decoded, or read.
+#[derive(Debug)]
+pub enum WireError {
+    /// Underlying socket/stream error.
+    Io(std::io::Error),
+    /// The stream did not start with [`MAGIC`].
+    BadMagic([u8; 4]),
+    /// The peer speaks a protocol version this build does not.
+    BadVersion(u16),
+    /// Unknown frame-type byte.
+    UnknownFrame(u8),
+    /// The length prefix exceeds [`MAX_PAYLOAD`].
+    TooLarge { len: usize, max: usize },
+    /// The stream ended mid-header or mid-payload.
+    Truncated { context: &'static str },
+    /// The payload bytes do not parse as the frame type's body.
+    Malformed(String),
+    /// The value has no wire representation (e.g. a [`Workload::Video`]
+    /// payload, whose frames are process-local handles).
+    Unrepresentable(&'static str),
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::Io(e) => write!(f, "wire i/o error: {e}"),
+            WireError::BadMagic(m) => write!(f, "bad frame magic {m:02x?} (expected RPLN)"),
+            WireError::BadVersion(v) => {
+                write!(f, "unsupported protocol version {v} (this build speaks {VERSION})")
+            }
+            WireError::UnknownFrame(t) => write!(f, "unknown frame type 0x{t:02x}"),
+            WireError::TooLarge { len, max } => {
+                write!(f, "frame payload of {len} bytes exceeds the {max}-byte cap")
+            }
+            WireError::Truncated { context } => write!(f, "truncated frame: {context}"),
+            WireError::Malformed(msg) => write!(f, "malformed frame body: {msg}"),
+            WireError::Unrepresentable(what) => {
+                write!(f, "{what} has no wire representation")
+            }
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+impl From<std::io::Error> for WireError {
+    fn from(e: std::io::Error) -> WireError {
+        WireError::Io(e)
+    }
+}
+
+impl WireError {
+    /// True for transient socket conditions (read timeout) rather than
+    /// protocol violations — the server's poll loop retries these.
+    pub fn is_timeout(&self) -> bool {
+        matches!(
+            self,
+            WireError::Io(e) if matches!(
+                e.kind(),
+                std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+            )
+        )
+    }
+}
+
+/// Why the serving edge shed a request — the wire-level superset of the
+/// in-process [`ShedReason`], extended with the two causes only the
+/// network edge can produce.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShedCause {
+    /// The shared admission queue was full (or the request was
+    /// displaced by a higher priority).
+    QueueFull,
+    /// The request outwaited its deadline in the queue.
+    DeadlineExpired,
+    /// The connection's tenant already has its full lane depth of
+    /// requests in flight — one tenant cannot displace everyone.
+    TenantLaneFull,
+    /// The server is draining: in-flight work flushes, new work sheds.
+    Draining,
+}
+
+impl ShedCause {
+    /// All causes, in wire-tag order.
+    pub const ALL: [ShedCause; 4] = [
+        ShedCause::QueueFull,
+        ShedCause::DeadlineExpired,
+        ShedCause::TenantLaneFull,
+        ShedCause::Draining,
+    ];
+
+    /// Label used in reports and the CLI.
+    pub fn label(self) -> &'static str {
+        match self {
+            ShedCause::QueueFull => "queue_full",
+            ShedCause::DeadlineExpired => "deadline_expired",
+            ShedCause::TenantLaneFull => "tenant_lane_full",
+            ShedCause::Draining => "draining",
+        }
+    }
+
+    fn tag(self) -> u8 {
+        self as u8
+    }
+
+    fn from_tag(t: u8) -> Result<ShedCause, WireError> {
+        ShedCause::ALL
+            .get(t as usize)
+            .copied()
+            .ok_or_else(|| WireError::Malformed(format!("shed cause tag {t}")))
+    }
+}
+
+impl From<ShedReason> for ShedCause {
+    fn from(r: ShedReason) -> ShedCause {
+        match r {
+            ShedReason::QueueFull => ShedCause::QueueFull,
+            ShedReason::DeadlineExpired => ShedCause::DeadlineExpired,
+        }
+    }
+}
+
+impl std::fmt::Display for ShedCause {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.label())
+    }
+}
+
+/// The wire-encodable subset of [`Workload`]: everything whose data is
+/// plain text/number content. The media payloads (`Video`, `Parts`)
+/// hold process-local synthesized handles and are deliberately NOT
+/// representable — encoding one is a typed error, and remote callers
+/// use [`WirePayload::Synthetic`] to ask the session to synthesize its
+/// own deterministic media payload server-side.
+#[derive(Debug, Clone, PartialEq)]
+pub enum WirePayload {
+    /// Re-derive the session's deterministic dataset (any pipeline).
+    Synthetic,
+    /// Tabular CSV rows with the target column (census, iiot).
+    Table { csv: String },
+    /// Light-curve observations + per-object targets (plasticc).
+    LightCurves { csv: String, targets: Vec<f64> },
+    /// Documents (+ optional labels) for sentiment serving (dlsa).
+    Documents { docs: Vec<String>, labels: Vec<i64> },
+    /// Raw JSON review-log lines (dien).
+    ReviewLog { json: String },
+}
+
+impl WirePayload {
+    /// Encode a typed workload; media payloads are a typed error.
+    pub fn from_workload(w: &Workload) -> Result<WirePayload, WireError> {
+        match w {
+            Workload::Synthetic => Ok(WirePayload::Synthetic),
+            Workload::Table { csv } => Ok(WirePayload::Table { csv: csv.clone() }),
+            Workload::LightCurves { csv, targets } => Ok(WirePayload::LightCurves {
+                csv: csv.clone(),
+                targets: targets.clone(),
+            }),
+            Workload::Documents { docs, labels } => Ok(WirePayload::Documents {
+                docs: docs.clone(),
+                labels: labels.clone(),
+            }),
+            Workload::ReviewLog { json } => Ok(WirePayload::ReviewLog { json: json.clone() }),
+            Workload::Video { .. } => Err(WireError::Unrepresentable("a video payload")),
+            Workload::Parts { .. } => Err(WireError::Unrepresentable("a parts payload")),
+        }
+    }
+
+    /// The typed workload this payload decodes to.
+    pub fn into_workload(self) -> Workload {
+        match self {
+            WirePayload::Synthetic => Workload::Synthetic,
+            WirePayload::Table { csv } => Workload::Table { csv },
+            WirePayload::LightCurves { csv, targets } => {
+                Workload::LightCurves { csv, targets }
+            }
+            WirePayload::Documents { docs, labels } => Workload::Documents { docs, labels },
+            WirePayload::ReviewLog { json } => Workload::ReviewLog { json },
+        }
+    }
+}
+
+/// One submitted request as it crosses the wire. `id` is caller-chosen
+/// and echoed on the resolution frame, so a connection may hold many
+/// requests in flight and match responses out of order.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WireRequest {
+    pub id: u64,
+    pub pipeline: String,
+    pub priority: Priority,
+    /// Queue-wait deadline in milliseconds; 0 = none.
+    pub deadline_ms: u64,
+    pub payload: WirePayload,
+}
+
+/// A completed request's resolution: the typed output summary, the full
+/// metric map (identical to a direct in-process run at the same seed —
+/// the loopback conformance tests compare them), and the server-side
+/// timing split.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WireCompletion {
+    pub id: u64,
+    pub pipeline: String,
+    /// Items processed end-to-end.
+    pub items: u64,
+    /// Queue wait before a dispatcher picked the request up, in µs.
+    pub queue_wait_us: u64,
+    /// Plan execution time, in µs.
+    pub service_us: u64,
+    /// One-line typed-output rendering ([`crate::pipelines::Output`]).
+    pub summary: String,
+    /// The run's named metrics, in map order.
+    pub metrics: Vec<(String, f64)>,
+}
+
+/// Everything that crosses a serving connection (see module docs).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Frame {
+    /// Client → server: declare this connection's tenant id.
+    Hello { tenant: String },
+    /// Server → client: handshake accepted; these pipelines are open.
+    HelloAck { pipelines: Vec<String> },
+    /// Client → server: submit one request.
+    Request(WireRequest),
+    /// Server → client: the request executed.
+    Completed(WireCompletion),
+    /// Server → client: the request was shed (first-class, never a
+    /// dropped connection).
+    Shed { id: u64, pipeline: String, priority: Priority, cause: ShedCause, waited_us: u64 },
+    /// Server → client: the request errored.
+    Failed { id: u64, pipeline: String, error: String },
+    /// Either direction: the sender will produce no further requests;
+    /// flush in-flight work and say goodbye.
+    Drain,
+    /// Server → client: drain complete; the connection's resolution
+    /// counters, then the stream closes.
+    Goodbye { completed: u64, shed: u64, failed: u64 },
+    /// Client → server: ask for the serving ledger.
+    StatsReq,
+    /// Server → client: the ledger snapshot.
+    Stats(NetReport),
+}
+
+impl Frame {
+    fn tag(&self) -> u8 {
+        match self {
+            Frame::Hello { .. } => 0x01,
+            Frame::HelloAck { .. } => 0x02,
+            Frame::Request(_) => 0x03,
+            Frame::Completed(_) => 0x04,
+            Frame::Shed { .. } => 0x05,
+            Frame::Failed { .. } => 0x06,
+            Frame::Drain => 0x07,
+            Frame::Goodbye { .. } => 0x08,
+            Frame::StatsReq => 0x09,
+            Frame::Stats(_) => 0x0A,
+        }
+    }
+
+    /// Short label for logs and error messages.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Frame::Hello { .. } => "hello",
+            Frame::HelloAck { .. } => "hello_ack",
+            Frame::Request(_) => "request",
+            Frame::Completed(_) => "completed",
+            Frame::Shed { .. } => "shed",
+            Frame::Failed { .. } => "failed",
+            Frame::Drain => "drain",
+            Frame::Goodbye { .. } => "goodbye",
+            Frame::StatsReq => "stats_req",
+            Frame::Stats(_) => "stats",
+        }
+    }
+}
+
+// ---- body encoding ----------------------------------------------------
+
+fn put_u8(out: &mut Vec<u8>, v: u8) {
+    out.push(v);
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_be_bytes());
+}
+
+fn put_f64(out: &mut Vec<u8>, v: f64) {
+    out.extend_from_slice(&v.to_bits().to_be_bytes());
+}
+
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    out.extend_from_slice(&(s.len() as u32).to_be_bytes());
+    out.extend_from_slice(s.as_bytes());
+}
+
+fn put_count(out: &mut Vec<u8>, n: usize) {
+    out.extend_from_slice(&(n as u32).to_be_bytes());
+}
+
+fn priority_tag(p: Priority) -> u8 {
+    p as u8
+}
+
+fn priority_from_tag(t: u8) -> Result<Priority, WireError> {
+    Priority::ALL
+        .get(t as usize)
+        .copied()
+        .ok_or_else(|| WireError::Malformed(format!("priority tag {t}")))
+}
+
+fn encode_body(frame: &Frame) -> Vec<u8> {
+    let mut b = Vec::new();
+    match frame {
+        Frame::Hello { tenant } => put_str(&mut b, tenant),
+        Frame::HelloAck { pipelines } => {
+            put_count(&mut b, pipelines.len());
+            for p in pipelines {
+                put_str(&mut b, p);
+            }
+        }
+        Frame::Request(r) => {
+            put_u64(&mut b, r.id);
+            put_str(&mut b, &r.pipeline);
+            put_u8(&mut b, priority_tag(r.priority));
+            put_u64(&mut b, r.deadline_ms);
+            match &r.payload {
+                WirePayload::Synthetic => put_u8(&mut b, 0),
+                WirePayload::Table { csv } => {
+                    put_u8(&mut b, 1);
+                    put_str(&mut b, csv);
+                }
+                WirePayload::LightCurves { csv, targets } => {
+                    put_u8(&mut b, 2);
+                    put_str(&mut b, csv);
+                    put_count(&mut b, targets.len());
+                    for &t in targets {
+                        put_f64(&mut b, t);
+                    }
+                }
+                WirePayload::Documents { docs, labels } => {
+                    put_u8(&mut b, 3);
+                    put_count(&mut b, docs.len());
+                    for d in docs {
+                        put_str(&mut b, d);
+                    }
+                    put_count(&mut b, labels.len());
+                    for &l in labels {
+                        put_u64(&mut b, l as u64);
+                    }
+                }
+                WirePayload::ReviewLog { json } => {
+                    put_u8(&mut b, 4);
+                    put_str(&mut b, json);
+                }
+            }
+        }
+        Frame::Completed(c) => {
+            put_u64(&mut b, c.id);
+            put_str(&mut b, &c.pipeline);
+            put_u64(&mut b, c.items);
+            put_u64(&mut b, c.queue_wait_us);
+            put_u64(&mut b, c.service_us);
+            put_str(&mut b, &c.summary);
+            put_count(&mut b, c.metrics.len());
+            for (name, value) in &c.metrics {
+                put_str(&mut b, name);
+                put_f64(&mut b, *value);
+            }
+        }
+        Frame::Shed { id, pipeline, priority, cause, waited_us } => {
+            put_u64(&mut b, *id);
+            put_str(&mut b, pipeline);
+            put_u8(&mut b, priority_tag(*priority));
+            put_u8(&mut b, cause.tag());
+            put_u64(&mut b, *waited_us);
+        }
+        Frame::Failed { id, pipeline, error } => {
+            put_u64(&mut b, *id);
+            put_str(&mut b, pipeline);
+            put_str(&mut b, error);
+        }
+        Frame::Drain | Frame::StatsReq => {}
+        Frame::Goodbye { completed, shed, failed } => {
+            put_u64(&mut b, *completed);
+            put_u64(&mut b, *shed);
+            put_u64(&mut b, *failed);
+        }
+        Frame::Stats(report) => {
+            put_u64(&mut b, report.accepted as u64);
+            put_u64(&mut b, report.drained as u64);
+            put_u64(&mut b, report.frames_in as u64);
+            put_u64(&mut b, report.frames_out as u64);
+            put_count(&mut b, report.tenants.len());
+            for (tenant, t) in &report.tenants {
+                put_str(&mut b, tenant);
+                put_u64(&mut b, t.admitted);
+                put_u64(&mut b, t.completed);
+                put_u64(&mut b, t.shed);
+                put_u64(&mut b, t.failed);
+            }
+        }
+    }
+    b
+}
+
+// ---- body decoding ----------------------------------------------------
+
+/// Bounds-checked reader over a frame body. Every accessor returns a
+/// typed error on underrun — nothing here can panic on hostile input.
+struct Cursor<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize, what: &str) -> Result<&'a [u8], WireError> {
+        if self.b.len() - self.pos < n {
+            return Err(WireError::Malformed(format!(
+                "{what}: needed {n} bytes, had {}",
+                self.b.len() - self.pos
+            )));
+        }
+        let s = &self.b[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self, what: &str) -> Result<u8, WireError> {
+        Ok(self.take(1, what)?[0])
+    }
+
+    fn u64(&mut self, what: &str) -> Result<u64, WireError> {
+        let s = self.take(8, what)?;
+        Ok(u64::from_be_bytes(s.try_into().unwrap()))
+    }
+
+    fn f64(&mut self, what: &str) -> Result<f64, WireError> {
+        Ok(f64::from_bits(self.u64(what)?))
+    }
+
+    /// A u32 count/length prefix, bounded by the bytes actually left in
+    /// the body so a hostile count cannot drive a huge allocation.
+    fn count(&mut self, what: &str) -> Result<usize, WireError> {
+        let s = self.take(4, what)?;
+        let n = u32::from_be_bytes(s.try_into().unwrap()) as usize;
+        if n > self.b.len() - self.pos {
+            return Err(WireError::Malformed(format!(
+                "{what}: count {n} exceeds remaining {} bytes",
+                self.b.len() - self.pos
+            )));
+        }
+        Ok(n)
+    }
+
+    fn str(&mut self, what: &str) -> Result<String, WireError> {
+        let n = self.count(what)?;
+        let s = self.take(n, what)?;
+        String::from_utf8(s.to_vec())
+            .map_err(|_| WireError::Malformed(format!("{what}: invalid utf-8")))
+    }
+
+    fn finish(&self) -> Result<(), WireError> {
+        if self.pos != self.b.len() {
+            return Err(WireError::Malformed(format!(
+                "{} trailing bytes after frame body",
+                self.b.len() - self.pos
+            )));
+        }
+        Ok(())
+    }
+}
+
+fn decode_body(tag: u8, body: &[u8]) -> Result<Frame, WireError> {
+    let mut c = Cursor { b: body, pos: 0 };
+    let frame = match tag {
+        0x01 => Frame::Hello { tenant: c.str("hello tenant")? },
+        0x02 => {
+            let n = c.count("hello_ack pipeline count")?;
+            let mut pipelines = Vec::with_capacity(n);
+            for _ in 0..n {
+                pipelines.push(c.str("hello_ack pipeline")?);
+            }
+            Frame::HelloAck { pipelines }
+        }
+        0x03 => {
+            let id = c.u64("request id")?;
+            let pipeline = c.str("request pipeline")?;
+            let priority = priority_from_tag(c.u8("request priority")?)?;
+            let deadline_ms = c.u64("request deadline")?;
+            let payload = match c.u8("payload tag")? {
+                0 => WirePayload::Synthetic,
+                1 => WirePayload::Table { csv: c.str("table csv")? },
+                2 => {
+                    let csv = c.str("light-curve csv")?;
+                    let n = c.count("target count")?;
+                    let mut targets = Vec::with_capacity(n);
+                    for _ in 0..n {
+                        targets.push(c.f64("target")?);
+                    }
+                    WirePayload::LightCurves { csv, targets }
+                }
+                3 => {
+                    let n = c.count("doc count")?;
+                    let mut docs = Vec::with_capacity(n);
+                    for _ in 0..n {
+                        docs.push(c.str("doc")?);
+                    }
+                    let n = c.count("label count")?;
+                    let mut labels = Vec::with_capacity(n);
+                    for _ in 0..n {
+                        labels.push(c.u64("label")? as i64);
+                    }
+                    WirePayload::Documents { docs, labels }
+                }
+                4 => WirePayload::ReviewLog { json: c.str("review log")? },
+                t => return Err(WireError::Malformed(format!("payload tag {t}"))),
+            };
+            Frame::Request(WireRequest { id, pipeline, priority, deadline_ms, payload })
+        }
+        0x04 => {
+            let id = c.u64("completion id")?;
+            let pipeline = c.str("completion pipeline")?;
+            let items = c.u64("completion items")?;
+            let queue_wait_us = c.u64("queue wait")?;
+            let service_us = c.u64("service time")?;
+            let summary = c.str("summary")?;
+            let n = c.count("metric count")?;
+            let mut metrics = Vec::with_capacity(n);
+            for _ in 0..n {
+                let name = c.str("metric name")?;
+                let value = c.f64("metric value")?;
+                metrics.push((name, value));
+            }
+            Frame::Completed(WireCompletion {
+                id,
+                pipeline,
+                items,
+                queue_wait_us,
+                service_us,
+                summary,
+                metrics,
+            })
+        }
+        0x05 => Frame::Shed {
+            id: c.u64("shed id")?,
+            pipeline: c.str("shed pipeline")?,
+            priority: priority_from_tag(c.u8("shed priority")?)?,
+            cause: ShedCause::from_tag(c.u8("shed cause")?)?,
+            waited_us: c.u64("shed wait")?,
+        },
+        0x06 => Frame::Failed {
+            id: c.u64("failed id")?,
+            pipeline: c.str("failed pipeline")?,
+            error: c.str("failed error")?,
+        },
+        0x07 => Frame::Drain,
+        0x08 => Frame::Goodbye {
+            completed: c.u64("goodbye completed")?,
+            shed: c.u64("goodbye shed")?,
+            failed: c.u64("goodbye failed")?,
+        },
+        0x09 => Frame::StatsReq,
+        0x0A => {
+            let accepted = c.u64("stats accepted")? as usize;
+            let drained = c.u64("stats drained")? as usize;
+            let frames_in = c.u64("stats frames_in")? as usize;
+            let frames_out = c.u64("stats frames_out")? as usize;
+            let n = c.count("tenant count")?;
+            let mut tenants = std::collections::BTreeMap::new();
+            for _ in 0..n {
+                let tenant = c.str("tenant id")?;
+                let ledger = TenantLedger {
+                    admitted: c.u64("tenant admitted")?,
+                    completed: c.u64("tenant completed")?,
+                    shed: c.u64("tenant shed")?,
+                    failed: c.u64("tenant failed")?,
+                };
+                tenants.insert(tenant, ledger);
+            }
+            Frame::Stats(NetReport { accepted, drained, frames_in, frames_out, tenants })
+        }
+        t => return Err(WireError::UnknownFrame(t)),
+    };
+    c.finish()?;
+    Ok(frame)
+}
+
+// ---- framing ----------------------------------------------------------
+
+/// Encode one frame to its full wire bytes (header + body).
+pub fn encode(frame: &Frame) -> Vec<u8> {
+    let body = encode_body(frame);
+    let mut out = Vec::with_capacity(HEADER_LEN + body.len());
+    out.extend_from_slice(&MAGIC);
+    out.extend_from_slice(&VERSION.to_be_bytes());
+    out.push(frame.tag());
+    out.extend_from_slice(&(body.len() as u32).to_be_bytes());
+    out.extend_from_slice(&body);
+    out
+}
+
+/// Parse a frame header: `(frame_type, payload_len)`. Rejects bad
+/// magic, foreign versions, and oversized length prefixes — all before
+/// any payload allocation.
+pub fn decode_header(h: &[u8; HEADER_LEN]) -> Result<(u8, usize), WireError> {
+    let magic: [u8; 4] = h[0..4].try_into().unwrap();
+    if magic != MAGIC {
+        return Err(WireError::BadMagic(magic));
+    }
+    let version = u16::from_be_bytes(h[4..6].try_into().unwrap());
+    if version != VERSION {
+        return Err(WireError::BadVersion(version));
+    }
+    let tag = h[6];
+    let len = u32::from_be_bytes(h[7..11].try_into().unwrap()) as usize;
+    if len > MAX_PAYLOAD {
+        return Err(WireError::TooLarge { len, max: MAX_PAYLOAD });
+    }
+    Ok((tag, len))
+}
+
+/// Decode one frame from a buffer holding exactly one encoded frame.
+pub fn decode(buf: &[u8]) -> Result<Frame, WireError> {
+    if buf.len() < HEADER_LEN {
+        return Err(WireError::Truncated { context: "header" });
+    }
+    let header: [u8; HEADER_LEN] = buf[..HEADER_LEN].try_into().unwrap();
+    let (tag, len) = decode_header(&header)?;
+    let body = &buf[HEADER_LEN..];
+    if body.len() < len {
+        return Err(WireError::Truncated { context: "payload" });
+    }
+    if body.len() > len {
+        return Err(WireError::Malformed(format!(
+            "{} bytes past the declared payload length",
+            body.len() - len
+        )));
+    }
+    decode_body(tag, body)
+}
+
+/// Read one frame from a stream. `Ok(None)` on a clean EOF at a frame
+/// boundary (the peer closed between frames); EOF mid-frame is
+/// [`WireError::Truncated`].
+pub fn read_frame(r: &mut impl Read) -> Result<Option<Frame>, WireError> {
+    let mut header = [0u8; HEADER_LEN];
+    let mut got = 0;
+    while got < HEADER_LEN {
+        match r.read(&mut header[got..]) {
+            Ok(0) => {
+                if got == 0 {
+                    return Ok(None);
+                }
+                return Err(WireError::Truncated { context: "header" });
+            }
+            Ok(n) => got += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            // A read timeout with partial header bytes must keep
+            // polling, not drop them: resurface only clean timeouts.
+            Err(e)
+                if got > 0
+                    && matches!(
+                        e.kind(),
+                        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                    ) => {}
+            Err(e) => return Err(WireError::Io(e)),
+        }
+    }
+    let (tag, len) = decode_header(&header)?;
+    let mut body = vec![0u8; len];
+    let mut got = 0;
+    while got < len {
+        match r.read(&mut body[got..]) {
+            Ok(0) => return Err(WireError::Truncated { context: "payload" }),
+            Ok(n) => got += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) => {}
+            Err(e) => return Err(WireError::Io(e)),
+        }
+    }
+    decode_body(tag, &body)
+}
+
+/// Write one frame to a stream.
+pub fn write_frame(w: &mut impl Write, frame: &Frame) -> Result<(), WireError> {
+    w.write_all(&encode(frame))?;
+    w.flush()?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn sample_frames() -> Vec<Frame> {
+        vec![
+            Frame::Hello { tenant: "tenant-a".to_string() },
+            Frame::Hello { tenant: String::new() },
+            Frame::HelloAck { pipelines: vec!["census".into(), "dlsa".into()] },
+            Frame::HelloAck { pipelines: vec![] },
+            Frame::Request(WireRequest {
+                id: 7,
+                pipeline: "census".into(),
+                priority: Priority::High,
+                deadline_ms: 250,
+                payload: WirePayload::Synthetic,
+            }),
+            Frame::Request(WireRequest {
+                id: u64::MAX,
+                pipeline: "iiot".into(),
+                priority: Priority::Low,
+                deadline_ms: 0,
+                payload: WirePayload::Table { csv: "a,b\n1,2\n".into() },
+            }),
+            Frame::Request(WireRequest {
+                id: 3,
+                pipeline: "plasticc".into(),
+                priority: Priority::Normal,
+                deadline_ms: 9,
+                payload: WirePayload::LightCurves {
+                    csv: "object_id,mjd\n".into(),
+                    targets: vec![0.5, -1.25, f64::MAX],
+                },
+            }),
+            Frame::Request(WireRequest {
+                id: 4,
+                pipeline: "dlsa".into(),
+                priority: Priority::Normal,
+                deadline_ms: 0,
+                payload: WirePayload::Documents {
+                    docs: vec!["great movie".into(), "héllo→ utf8".into()],
+                    labels: vec![1, -1],
+                },
+            }),
+            Frame::Request(WireRequest {
+                id: 5,
+                pipeline: "dien".into(),
+                priority: Priority::Normal,
+                deadline_ms: 0,
+                payload: WirePayload::ReviewLog { json: "{\"u\":1}\n".into() },
+            }),
+            Frame::Completed(WireCompletion {
+                id: 11,
+                pipeline: "census".into(),
+                items: 1200,
+                queue_wait_us: 42,
+                service_us: 900,
+                summary: "r2=0.81".into(),
+                metrics: vec![("r2".into(), 0.81), ("mse".into(), 1234.5)],
+            }),
+            Frame::Shed {
+                id: 12,
+                pipeline: "census".into(),
+                priority: Priority::Low,
+                cause: ShedCause::TenantLaneFull,
+                waited_us: 17,
+            },
+            Frame::Failed { id: 13, pipeline: "nope".into(), error: "unknown pipeline".into() },
+            Frame::Drain,
+            Frame::Goodbye { completed: 9, shed: 2, failed: 0 },
+            Frame::StatsReq,
+            Frame::Stats(NetReport {
+                accepted: 3,
+                drained: 3,
+                frames_in: 40,
+                frames_out: 41,
+                tenants: [
+                    (
+                        "a".to_string(),
+                        TenantLedger { admitted: 5, completed: 4, shed: 1, failed: 0 },
+                    ),
+                    (
+                        "b".to_string(),
+                        TenantLedger { admitted: 2, completed: 2, shed: 0, failed: 0 },
+                    ),
+                ]
+                .into_iter()
+                .collect(),
+            }),
+        ]
+    }
+
+    #[test]
+    fn every_frame_type_round_trips() {
+        for frame in sample_frames() {
+            let bytes = encode(&frame);
+            assert_eq!(&bytes[0..4], &MAGIC, "{}", frame.kind());
+            let back = decode(&bytes).unwrap_or_else(|e| panic!("{}: {e}", frame.kind()));
+            assert_eq!(back, frame, "{} round trip", frame.kind());
+            // Streamed read sees the same frame.
+            let mut reader = &bytes[..];
+            let streamed = read_frame(&mut reader).unwrap().expect("one frame present");
+            assert_eq!(streamed, frame);
+            // And the stream is now at a clean EOF.
+            assert!(read_frame(&mut reader).unwrap().is_none());
+        }
+    }
+
+    #[test]
+    fn zero_length_payload_frames_are_exactly_a_header() {
+        for frame in [Frame::Drain, Frame::StatsReq] {
+            let bytes = encode(&frame);
+            assert_eq!(bytes.len(), HEADER_LEN);
+            assert_eq!(decode(&bytes).unwrap(), frame);
+        }
+    }
+
+    #[test]
+    fn truncated_reads_error_cleanly_at_every_cut_point() {
+        // Cutting an encoded frame at ANY byte boundary must produce a
+        // typed error — never a panic, never a bogus frame.
+        for frame in sample_frames() {
+            let bytes = encode(&frame);
+            for cut in 0..bytes.len() {
+                let err = decode(&bytes[..cut]);
+                assert!(err.is_err(), "{} cut at {cut} decoded", frame.kind());
+                if cut > 0 {
+                    let mut reader = &bytes[..cut];
+                    assert!(
+                        read_frame(&mut reader).is_err(),
+                        "{} streamed cut at {cut} read",
+                        frame.kind()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn bad_magic_and_version_are_protocol_errors() {
+        let mut bytes = encode(&Frame::Drain);
+        bytes[0] = b'X';
+        assert!(matches!(decode(&bytes), Err(WireError::BadMagic(_))));
+        let mut bytes = encode(&Frame::Drain);
+        bytes[4] = 0xFF;
+        assert!(matches!(decode(&bytes), Err(WireError::BadVersion(_))));
+        let mut bytes = encode(&Frame::Drain);
+        bytes[6] = 0x7F;
+        assert!(matches!(decode(&bytes), Err(WireError::UnknownFrame(0x7F))));
+    }
+
+    #[test]
+    fn oversized_length_prefix_is_rejected_before_allocation() {
+        let mut header = [0u8; HEADER_LEN];
+        header[0..4].copy_from_slice(&MAGIC);
+        header[4..6].copy_from_slice(&VERSION.to_be_bytes());
+        header[6] = 0x01;
+        header[7..11].copy_from_slice(&((MAX_PAYLOAD as u32) + 1).to_be_bytes());
+        match decode_header(&header) {
+            Err(WireError::TooLarge { len, max }) => {
+                assert_eq!(len, MAX_PAYLOAD + 1);
+                assert_eq!(max, MAX_PAYLOAD);
+            }
+            other => panic!("expected TooLarge, got {other:?}"),
+        }
+        // A frame-body count prefix past the remaining bytes is equally
+        // rejected (no allocation from a hostile count).
+        let mut bytes = encode(&Frame::HelloAck { pipelines: vec!["census".into()] });
+        let count_at = HEADER_LEN;
+        bytes[count_at..count_at + 4].copy_from_slice(&u32::MAX.to_be_bytes());
+        assert!(matches!(decode(&bytes), Err(WireError::Malformed(_))));
+    }
+
+    #[test]
+    fn malformed_bodies_error_not_panic() {
+        // Bad priority tag.
+        let mut bytes = encode(&Frame::Request(WireRequest {
+            id: 1,
+            pipeline: "p".into(),
+            priority: Priority::Low,
+            deadline_ms: 0,
+            payload: WirePayload::Synthetic,
+        }));
+        let prio_at = HEADER_LEN + 8 + 4 + 1; // id + strlen + "p"
+        bytes[prio_at] = 9;
+        assert!(matches!(decode(&bytes), Err(WireError::Malformed(_))));
+        // Bad shed-cause tag.
+        let mut bytes = encode(&Frame::Shed {
+            id: 1,
+            pipeline: "p".into(),
+            priority: Priority::Low,
+            cause: ShedCause::QueueFull,
+            waited_us: 0,
+        });
+        bytes[HEADER_LEN + 8 + 4 + 1 + 1] = 200;
+        assert!(matches!(decode(&bytes), Err(WireError::Malformed(_))));
+        // Invalid UTF-8 in a string field.
+        let mut bytes = encode(&Frame::Hello { tenant: "ab".into() });
+        bytes[HEADER_LEN + 4] = 0xFF;
+        bytes[HEADER_LEN + 5] = 0xFE;
+        assert!(matches!(decode(&bytes), Err(WireError::Malformed(_))));
+        // Trailing bytes past the body are rejected too.
+        let mut bytes = encode(&Frame::Drain);
+        bytes[7..11].copy_from_slice(&1u32.to_be_bytes());
+        bytes.push(0);
+        assert!(matches!(decode(&bytes), Err(WireError::Malformed(_))));
+    }
+
+    #[test]
+    fn wire_payload_round_trips_typed_workloads() {
+        let workloads = [
+            Workload::Synthetic,
+            Workload::Table { csv: "a,b\n1,2\n".into() },
+            Workload::LightCurves { csv: "h\n".into(), targets: vec![1.0, 2.0] },
+            Workload::Documents { docs: vec!["d".into()], labels: vec![0] },
+            Workload::ReviewLog { json: "{}".into() },
+        ];
+        for w in workloads {
+            let kind = w.kind();
+            let wire = WirePayload::from_workload(&w).unwrap();
+            assert_eq!(wire.into_workload().kind(), kind);
+        }
+        // Media payloads are typed errors, not panics.
+        let err = WirePayload::from_workload(&Workload::Video { frames: vec![] });
+        assert!(matches!(err, Err(WireError::Unrepresentable(_))));
+        let err =
+            WirePayload::from_workload(&Workload::Parts { train: vec![], test: vec![] });
+        assert!(matches!(err, Err(WireError::Unrepresentable(_))));
+    }
+
+    /// Seeded random frame generator for the property round trip.
+    fn random_frame(rng: &mut Rng) -> Frame {
+        let rand_str = |rng: &mut Rng| -> String {
+            let n = rng.below(12);
+            (0..n).map(|_| (b'a' + rng.below(26) as u8) as char).collect()
+        };
+        match rng.below(10) {
+            0 => Frame::Hello { tenant: rand_str(rng) },
+            1 => {
+                let n = rng.below(4);
+                Frame::HelloAck { pipelines: (0..n).map(|_| rand_str(rng)).collect() }
+            }
+            2 => {
+                let payload = match rng.below(5) {
+                    0 => WirePayload::Synthetic,
+                    1 => WirePayload::Table { csv: rand_str(rng) },
+                    2 => WirePayload::LightCurves {
+                        csv: rand_str(rng),
+                        targets: (0..rng.below(5)).map(|_| rng.f64() - 0.5).collect(),
+                    },
+                    3 => WirePayload::Documents {
+                        docs: (0..rng.below(4)).map(|_| rand_str(rng)).collect(),
+                        labels: (0..rng.below(4)).map(|_| rng.below(3) as i64 - 1).collect(),
+                    },
+                    _ => WirePayload::ReviewLog { json: rand_str(rng) },
+                };
+                Frame::Request(WireRequest {
+                    id: rng.below(1 << 30) as u64,
+                    pipeline: rand_str(rng),
+                    priority: *rng.choice(&Priority::ALL),
+                    deadline_ms: rng.below(1000) as u64,
+                    payload,
+                })
+            }
+            3 => Frame::Completed(WireCompletion {
+                id: rng.below(1 << 20) as u64,
+                pipeline: rand_str(rng),
+                items: rng.below(10_000) as u64,
+                queue_wait_us: rng.below(1 << 20) as u64,
+                service_us: rng.below(1 << 20) as u64,
+                summary: rand_str(rng),
+                metrics: (0..rng.below(5))
+                    .map(|_| (rand_str(rng), rng.f64() * 100.0))
+                    .collect(),
+            }),
+            4 => Frame::Shed {
+                id: rng.below(1 << 20) as u64,
+                pipeline: rand_str(rng),
+                priority: *rng.choice(&Priority::ALL),
+                cause: *rng.choice(&ShedCause::ALL),
+                waited_us: rng.below(1 << 16) as u64,
+            },
+            5 => Frame::Failed {
+                id: rng.below(1 << 20) as u64,
+                pipeline: rand_str(rng),
+                error: rand_str(rng),
+            },
+            6 => Frame::Drain,
+            7 => Frame::Goodbye {
+                completed: rng.below(100) as u64,
+                shed: rng.below(100) as u64,
+                failed: rng.below(100) as u64,
+            },
+            8 => Frame::StatsReq,
+            _ => Frame::Stats(NetReport {
+                accepted: rng.below(10),
+                drained: rng.below(10),
+                frames_in: rng.below(1000),
+                frames_out: rng.below(1000),
+                tenants: (0..rng.below(4))
+                    .map(|i| {
+                        (
+                            format!("t{i}"),
+                            TenantLedger {
+                                admitted: rng.below(100) as u64,
+                                completed: rng.below(100) as u64,
+                                shed: rng.below(100) as u64,
+                                failed: rng.below(100) as u64,
+                            },
+                        )
+                    })
+                    .collect(),
+            }),
+        }
+    }
+
+    #[test]
+    fn randomized_frames_round_trip_and_survive_concatenation() {
+        // Property: any frame the encoder can produce decodes back to
+        // itself, and a stream of concatenated frames reads back in
+        // order (the framing never loses sync).
+        for seed in 0..6u64 {
+            let mut rng = Rng::new(0x3E7 + seed);
+            let frames: Vec<Frame> = (0..40).map(|_| random_frame(&mut rng)).collect();
+            let mut stream = Vec::new();
+            for f in &frames {
+                assert_eq!(&decode(&encode(f)).unwrap(), f, "seed {seed}");
+                stream.extend_from_slice(&encode(f));
+            }
+            let mut reader = &stream[..];
+            for (i, f) in frames.iter().enumerate() {
+                let got = read_frame(&mut reader)
+                    .unwrap_or_else(|e| panic!("seed {seed} frame {i}: {e}"))
+                    .unwrap_or_else(|| panic!("seed {seed} frame {i}: early EOF"));
+                assert_eq!(&got, f, "seed {seed} frame {i}");
+            }
+            assert!(read_frame(&mut reader).unwrap().is_none(), "seed {seed}: clean EOF");
+        }
+    }
+
+    #[test]
+    fn shed_cause_covers_service_reasons_with_labels() {
+        assert_eq!(ShedCause::from(ShedReason::QueueFull), ShedCause::QueueFull);
+        assert_eq!(
+            ShedCause::from(ShedReason::DeadlineExpired),
+            ShedCause::DeadlineExpired
+        );
+        for c in ShedCause::ALL {
+            assert!(!c.label().is_empty());
+            assert_eq!(ShedCause::from_tag(c.tag()).unwrap(), c);
+        }
+        assert!(ShedCause::from_tag(99).is_err());
+    }
+}

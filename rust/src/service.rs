@@ -145,6 +145,41 @@ impl Request {
     }
 }
 
+/// Parse a weighted pipeline mix spec: `census:4,dlsa:1` (weight
+/// defaults to 1 when the `:W` suffix is omitted). Strict: malformed
+/// entries (`census:`, `:4`, zero/garbage weights), duplicate names,
+/// and names not in the pipeline registry are errors — never silently
+/// skipped — and unknown names error with the list of valid pipelines.
+pub fn parse_mix(spec: &str) -> anyhow::Result<Vec<(String, usize)>> {
+    let mut mix: Vec<(String, usize)> = Vec::new();
+    for part in spec.split(',') {
+        let part = part.trim();
+        anyhow::ensure!(!part.is_empty(), "empty mix entry in {spec:?}");
+        let (name, weight) = match part.split_once(':') {
+            Some((name, w)) => {
+                let weight: usize = w
+                    .trim()
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("bad weight {w:?} in mix entry {part:?}"))?;
+                anyhow::ensure!(weight > 0, "zero weight in mix entry {part:?}");
+                (name.trim(), weight)
+            }
+            None => (part, 1),
+        };
+        anyhow::ensure!(!name.is_empty(), "mix entry {part:?} names no pipeline");
+        if pipelines::find(name).is_none() {
+            return Err(pipelines::unknown_pipeline(name));
+        }
+        anyhow::ensure!(
+            mix.iter().all(|(n, _)| n != name),
+            "duplicate pipeline `{name}` in mix {spec:?}"
+        );
+        mix.push((name.to_string(), weight));
+    }
+    anyhow::ensure!(!mix.is_empty(), "empty mix");
+    Ok(mix)
+}
+
 /// Why a request was shed.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ShedReason {
@@ -228,12 +263,22 @@ impl Response {
 pub struct Ticket {
     pipeline: String,
     rx: mpsc::Receiver<Response>,
+    /// A response observed by [`Ticket::is_done`] but not yet taken by
+    /// `wait`/`poll` — readiness checks must not consume the response.
+    ready: std::cell::RefCell<Option<Response>>,
 }
 
 impl Ticket {
+    fn new(pipeline: String, rx: mpsc::Receiver<Response>) -> Ticket {
+        Ticket { pipeline, rx, ready: std::cell::RefCell::new(None) }
+    }
+
     /// Block until the request resolves. A service torn down with the
     /// request still queued resolves to [`Response::Failed`].
     pub fn wait(self) -> Response {
+        if let Some(resp) = self.ready.into_inner() {
+            return resp;
+        }
         self.rx.recv().unwrap_or_else(|_| Response::Failed {
             pipeline: self.pipeline,
             error: "service dropped the request".to_string(),
@@ -244,6 +289,9 @@ impl Ticket {
     /// A torn-down service (or a response already taken by an earlier
     /// poll) reports [`Response::Failed`] rather than in-flight forever.
     pub fn poll(&self) -> Option<Response> {
+        if let Some(resp) = self.ready.borrow_mut().take() {
+            return Some(resp);
+        }
         match self.rx.try_recv() {
             Ok(resp) => Some(resp),
             Err(mpsc::TryRecvError::Empty) => None,
@@ -251,6 +299,31 @@ impl Ticket {
                 pipeline: self.pipeline.clone(),
                 error: "service dropped the request".to_string(),
             }),
+        }
+    }
+
+    /// Non-consuming readiness check: true once the response is
+    /// available (buffered internally until `wait`/`poll` takes it).
+    /// This is how a connection handler multiplexes many in-flight
+    /// tickets without parking a thread in `wait()` per ticket.
+    pub fn is_done(&self) -> bool {
+        let mut ready = self.ready.borrow_mut();
+        if ready.is_some() {
+            return true;
+        }
+        match self.rx.try_recv() {
+            Ok(resp) => {
+                *ready = Some(resp);
+                true
+            }
+            Err(mpsc::TryRecvError::Empty) => false,
+            Err(mpsc::TryRecvError::Disconnected) => {
+                *ready = Some(Response::Failed {
+                    pipeline: self.pipeline.clone(),
+                    error: "service dropped the request".to_string(),
+                });
+                true
+            }
         }
     }
 }
@@ -543,6 +616,7 @@ impl PipelineService {
             )
         })?;
         let (reply, rx) = mpsc::channel();
+        let ticket = Ticket::new(pipeline, rx);
         let job = Job { session, payload, deadline, enqueued: Instant::now(), reply };
         self.telem.lock().unwrap().submitted += 1;
         let outcome = self.queue.admit(priority, job);
@@ -558,7 +632,7 @@ impl PipelineService {
             };
             let _ = shed.reply.send(resp);
         }
-        Ok(Ticket { pipeline, rx })
+        Ok(ticket)
     }
 
     /// Submit and block for the response.
@@ -976,6 +1050,69 @@ mod tests {
         let br = session.bind_report();
         assert_eq!(br.compiles, 1);
         assert_eq!(br.binds, 3, "one shard bind per shard");
+    }
+
+    #[test]
+    fn ticket_is_done_is_non_consuming() {
+        // A handler may poll readiness many times; the response must
+        // survive until wait()/poll() takes it — and resolve correctly
+        // whichever of the two the caller ends with.
+        let svc = PipelineService::open(
+            &["census"],
+            ServiceConfig { defaults: tiny(), ..Default::default() },
+        )
+        .unwrap();
+        let waited = svc.submit(Request::synthetic("census")).unwrap();
+        while !waited.is_done() {
+            std::thread::yield_now();
+        }
+        assert!(waited.is_done(), "readiness is stable across checks");
+        assert!(waited.is_done());
+        assert!(waited.wait().completion().is_some(), "wait() sees the buffered response");
+        let polled = svc.submit(Request::synthetic("census")).unwrap();
+        while !polled.is_done() {
+            std::thread::yield_now();
+        }
+        let resp = polled.poll().expect("poll() takes the buffered response");
+        assert!(resp.completion().is_some());
+        assert!(polled.is_done(), "after the take, the dropped sender reads as resolved");
+        // A paused service keeps tickets not-done without blocking.
+        let paused = PipelineService::open(
+            &["census"],
+            ServiceConfig { defaults: tiny(), start_paused: true, ..Default::default() },
+        )
+        .unwrap();
+        let pending = paused.submit(Request::synthetic("census")).unwrap();
+        assert!(!pending.is_done());
+        assert!(pending.poll().is_none());
+        paused.resume();
+        assert!(pending.wait().completion().is_some());
+    }
+
+    #[test]
+    fn parse_mix_accepts_weighted_specs_and_defaults() {
+        assert_eq!(
+            parse_mix("census:4,dlsa:1").unwrap(),
+            vec![("census".to_string(), 4), ("dlsa".to_string(), 1)]
+        );
+        assert_eq!(
+            parse_mix(" census , iiot:3 ").unwrap(),
+            vec![("census".to_string(), 1), ("iiot".to_string(), 3)]
+        );
+    }
+
+    #[test]
+    fn parse_mix_rejects_malformed_entries_with_the_valid_names() {
+        // Every malformed shape is an error, never a silent skip.
+        for bad in ["", "census:", ":4", "census:0", "census:x", ",census", "census,,iiot"] {
+            assert!(parse_mix(bad).is_err(), "{bad:?} must be rejected");
+        }
+        let err = parse_mix("census,census:2").unwrap_err().to_string();
+        assert!(err.contains("duplicate"), "{err}");
+        // Unknown names list the registry so the caller can self-serve.
+        let err = parse_mix("census,nope:2").unwrap_err().to_string();
+        assert!(err.contains("nope"), "{err}");
+        assert!(err.contains("census"), "{err}");
     }
 
     #[test]

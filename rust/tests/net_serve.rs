@@ -1,0 +1,209 @@
+//! Loopback soak suite for the TCP serving edge (`repro::net`): a real
+//! `PipelineServer` on an ephemeral port, driven over real sockets by
+//! wire clients. Every contract is pinned from **counters** — the
+//! `NetReport` ledger, `Goodbye` frames, and client-side tallies —
+//! never from wall-clock:
+//!
+//! * per-tenant admission lanes shed **deterministically** at a fixed
+//!   `per_tenant_depth`: a paused service makes admission synchronous,
+//!   so K requests against a depth-D lane yield exactly K−D first-class
+//!   `Shed(TenantLaneFull)` frames — per tenant, never per connection;
+//! * graceful drain loses **zero** responses: every in-flight ticket at
+//!   drain time resolves, is written, and lands in a `Goodbye` whose
+//!   counters agree with the client's own ledger;
+//! * the closed-loop load generator (`run_load`, the engine behind
+//!   `repro bench-serve`) balances end-to-end: the server's per-tenant
+//!   ledger equals the fleet's client-side outcome record exactly.
+
+use repro::net::wire::{self, Frame};
+use repro::net::{run_load, LoadSpec, PipelineServer, ServeClient, ServerConfig};
+use repro::pipelines::{RunConfig, Toggles};
+use repro::service::{PipelineService, Priority, ServiceConfig};
+use std::sync::Arc;
+
+fn tiny() -> RunConfig {
+    RunConfig { toggles: Toggles::optimized(), scale: 0.05, seed: 0x51, ..Default::default() }
+}
+
+fn open(names: &[&str], paused: bool) -> Arc<PipelineService> {
+    Arc::new(
+        PipelineService::open(
+            names,
+            ServiceConfig {
+                defaults: tiny(),
+                queue_depth: 32,
+                workers: 2,
+                start_paused: paused,
+                skip_unavailable: false,
+            },
+        )
+        .expect("tabular pipelines always open"),
+    )
+}
+
+#[test]
+fn tenant_lanes_shed_deterministically_at_fixed_depth() {
+    // Paused service: admitted requests pend (nothing resolves), so the
+    // lane occupancy is exact — tenant t's requests 1..=D occupy the
+    // lane and D+1..=K shed with TenantLaneFull, deterministically.
+    let depth = 3u64;
+    let per_tenant = 8u64;
+    let svc = open(&["census"], true);
+    let server = PipelineServer::start(
+        Arc::clone(&svc),
+        "127.0.0.1:0",
+        ServerConfig { per_tenant_depth: depth as usize, ..Default::default() },
+    )
+    .unwrap();
+
+    let mut clients: Vec<ServeClient> = ["alpha", "beta"]
+        .iter()
+        .map(|tenant| ServeClient::connect(server.local_addr(), tenant).unwrap())
+        .collect();
+    for client in &mut clients {
+        for _ in 0..per_tenant {
+            client
+                .send("census", Priority::Normal, None, wire::WirePayload::Synthetic)
+                .unwrap();
+        }
+        // With the service paused the ONLY response frames are the lane
+        // sheds — exactly K − D of them, ids D+1..=K, all TenantLaneFull.
+        for expect_id in (depth + 1)..=per_tenant {
+            match client.recv().unwrap() {
+                Frame::Shed { id, cause, waited_us, .. } => {
+                    assert_eq!(id, expect_id, "sheds arrive in request order");
+                    assert_eq!(cause, wire::ShedCause::TenantLaneFull);
+                    assert_eq!(waited_us, 0, "lane sheds never enter the queue");
+                }
+                other => panic!("expected Shed, got {}", other.kind()),
+            }
+        }
+    }
+
+    // The server-side ledger agrees per tenant BEFORE anything resolves:
+    // every request frame admitted, K − D shed, zero completed.
+    let report = clients[0].stats().unwrap();
+    for tenant in ["alpha", "beta"] {
+        let t = report.tenants.get(tenant).unwrap_or_else(|| panic!("{tenant} ledger"));
+        assert_eq!(t.admitted, per_tenant, "{tenant}");
+        assert_eq!(t.shed, per_tenant - depth, "{tenant}");
+        assert_eq!(t.completed, 0, "{tenant}: nothing resolves while paused");
+    }
+
+    // Resume and drain each connection: the Goodbye counters pin the
+    // outcome split (D completed, K − D shed) per tenant.
+    svc.resume();
+    for client in clients {
+        let (completed, shed, failed) = client.drain().unwrap();
+        assert_eq!((completed, shed, failed), (depth, per_tenant - depth, 0));
+    }
+    let report = server.drain();
+    assert!(report.balanced(), "{report:?}");
+    assert_eq!(report.accepted, 2);
+    assert_eq!(report.drained, 2);
+}
+
+#[test]
+fn server_drain_flushes_every_in_flight_response() {
+    // Requests are in flight (paused service) when the server starts
+    // draining: the handler must flush ALL of them — written to the
+    // socket, counted in Goodbye — and the final ledger must balance.
+    let svc = open(&["census"], true);
+    let server =
+        PipelineServer::start(Arc::clone(&svc), "127.0.0.1:0", ServerConfig::default())
+            .unwrap();
+    let mut client = ServeClient::connect(server.local_addr(), "t-drain").unwrap();
+    let in_flight = 3u64;
+    for _ in 0..in_flight {
+        client.send("census", Priority::Normal, None, wire::WirePayload::Synthetic).unwrap();
+    }
+    // Counter sync (no sleeps): the stats reply is written after every
+    // request frame before it was handled, so admitted == 3 here.
+    let report = client.stats().unwrap();
+    assert_eq!(report.tenants["t-drain"].admitted, in_flight);
+    assert_eq!(report.tenants["t-drain"].completed, 0);
+
+    // Server-initiated drain races nothing: the drain thread blocks
+    // until handlers flush, which requires the resumed service.
+    let drainer = std::thread::spawn(move || server.drain());
+    svc.resume();
+
+    // The client reads every in-flight response, then the Goodbye.
+    let mut completed = 0u64;
+    loop {
+        match client.recv().unwrap() {
+            Frame::Completed(c) => {
+                assert!(!c.summary.is_empty());
+                completed += 1;
+            }
+            Frame::Goodbye { completed: done, shed, failed } => {
+                assert_eq!((done, shed, failed), (in_flight, 0, 0));
+                break;
+            }
+            other => panic!("unexpected {} during drain", other.kind()),
+        }
+    }
+    assert_eq!(completed, in_flight, "zero responses lost to the drain");
+
+    let report = drainer.join().expect("drain thread");
+    assert!(report.balanced(), "{report:?}");
+    assert_eq!(report.accepted, report.drained);
+    let t = &report.tenants["t-drain"];
+    assert_eq!((t.admitted, t.completed, t.shed, t.failed), (in_flight, in_flight, 0, 0));
+}
+
+#[test]
+fn closed_loop_load_generator_balances_server_and_client_ledgers() {
+    // The bench-serve engine end-to-end: 2 generator threads, 2 tenants
+    // (tenant == pipeline), weighted census:2,plasticc:1 mix. Closed
+    // loop means at most `clients` requests in flight per tenant — well
+    // under the lane depth — so the outcome is fully deterministic:
+    // everything completes, and the server's per-tenant ledger equals
+    // the fleet's client-side record.
+    let svc = open(&["census", "plasticc"], false);
+    let server =
+        PipelineServer::start(Arc::clone(&svc), "127.0.0.1:0", ServerConfig::default())
+            .unwrap();
+    let spec = LoadSpec {
+        clients: 2,
+        requests: 6,
+        mix: vec![("census".to_string(), 2), ("plasticc".to_string(), 1)],
+    };
+    let load = run_load(server.local_addr(), &spec).unwrap();
+    let net = server.drain();
+
+    assert!(load.balances(), "{load:?}");
+    assert!(net.balanced(), "{net:?}");
+    // 2 clients x 2 mix entries = 4 connections, all drained.
+    assert_eq!(net.accepted, 4);
+    assert_eq!(net.drained, 4);
+    // Weighted round-robin over 6 requests: census gets slots {0,1,3,4},
+    // plasticc slots {2,5} — per client.
+    let total: u64 = load.per_tenant.values().map(|t| t.requests).sum();
+    assert_eq!(total, (spec.clients * spec.requests) as u64);
+    assert_eq!(load.per_tenant["census"].requests, 8);
+    assert_eq!(load.per_tenant["plasticc"].requests, 4);
+    for (tenant, client_side) in &load.per_tenant {
+        assert_eq!(client_side.completed, client_side.requests, "{tenant}: nothing sheds");
+        assert_eq!(client_side.failed, 0, "{tenant}");
+        let server_side = net.tenants.get(tenant).unwrap_or_else(|| panic!("{tenant}"));
+        assert_eq!(server_side.admitted, client_side.requests, "{tenant}");
+        assert_eq!(server_side.completed, client_side.completed, "{tenant}");
+        assert_eq!(server_side.shed, 0, "{tenant}");
+    }
+    // The trajectory rendering carries every tenant with latency samples.
+    let pipelines = load.trajectory_pipelines();
+    for tenant in ["census", "plasticc"] {
+        let entry = pipelines
+            .get(tenant)
+            .and_then(|p| p.get("exec_modes"))
+            .and_then(|m| m.get("serve"))
+            .unwrap_or_else(|| panic!("{tenant} serve entry"));
+        assert!(entry.get("p50_ms").is_some());
+        assert!(entry.get("items_per_s").is_some());
+    }
+    // The service underneath saw exactly the offered load.
+    let stats = svc.stats();
+    assert_eq!(stats.completed, total);
+    assert!(stats.balances(), "{stats:?}");
+}
