@@ -68,8 +68,13 @@ fn main() -> anyhow::Result<()> {
             other => anyhow::bail!("unexpected {}", other.kind()),
         }
     }
-    let (completed, shed, failed) = client.drain()?;
+    let (completed, shed, failed, by_cause) = client.drain()?;
     println!("goodbye ledger: completed {completed} shed {shed} failed {failed}");
+    for cause in ShedCause::ALL {
+        if by_cause[cause.index()] > 0 {
+            println!("  shed[{cause}] = {}", by_cause[cause.index()]);
+        }
+    }
 
     // --- A closed-loop fleet --------------------------------------------
     let spec = LoadSpec {

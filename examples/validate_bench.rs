@@ -7,7 +7,10 @@
 //! always-runnable `census` pipeline is present with an `exec_modes`
 //! map containing every mode its bench measures, and that every
 //! recorded mode entry carries finite `wall_s` / `items_per_s`
-//! numbers. Exits non-zero with a message naming the first violation.
+//! numbers. Serving trajectories (`bench_serve`) must additionally
+//! break sheds out per wire-level `ShedCause` (`shed_by_cause` with
+//! all four cause labels, summing to `shed`). Exits non-zero with a
+//! message naming the first violation.
 //!
 //! ```sh
 //! cargo run --release --example validate_bench
@@ -80,6 +83,35 @@ fn check(path: &str) -> Result<(), String> {
             })?;
             if !v.is_finite() || v < 0.0 {
                 return Err(format!("{path}: census {required}: bad {field} = {v}"));
+            }
+        }
+        // Serving trajectories must attribute every shed to a wire-level
+        // ShedCause: all four cause labels present, finite and
+        // non-negative, summing exactly to the `shed` total.
+        if bench == "bench_serve" {
+            let shed = entry.get("shed").and_then(Json::as_f64).ok_or_else(|| {
+                format!("{path}: census {required}: missing `shed`")
+            })?;
+            let by_cause = entry.get("shed_by_cause").ok_or_else(|| {
+                format!("{path}: census {required}: missing `shed_by_cause`")
+            })?;
+            let mut total = 0.0;
+            for cause in repro::net::ShedCause::ALL {
+                let label = cause.label();
+                let v = by_cause.get(label).and_then(Json::as_f64).ok_or_else(|| {
+                    format!("{path}: census {required}: shed_by_cause missing `{label}`")
+                })?;
+                if !v.is_finite() || v < 0.0 {
+                    return Err(format!(
+                        "{path}: census {required}: bad shed_by_cause.{label} = {v}"
+                    ));
+                }
+                total += v;
+            }
+            if total != shed {
+                return Err(format!(
+                    "{path}: census {required}: shed_by_cause sums to {total}, shed = {shed}"
+                ));
             }
         }
     }

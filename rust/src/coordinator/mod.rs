@@ -51,6 +51,7 @@
 
 pub mod telemetry;
 pub mod plan;
+pub mod optimizer;
 pub mod exec;
 pub mod sched;
 pub mod batcher;
@@ -62,6 +63,7 @@ pub use exec::{execute, run_multi_instance, run_sequential, run_sharded, run_str
 pub use exec::{run_async, run_async_on, run_async_seeded, spawn_async_on};
 pub use exec::{run_sharded_async, run_sharded_seeded};
 pub use exec::{ExecMode, ExecOutcome};
+pub use optimizer::{optimize, optimize_profiled, render_graph};
 pub use plan::{BoundPlan, CompiledPlan, CompiledPlanBuilder, Slicing, WorkloadSlice};
 pub use plan::{Plan, PlanBuilder, PlanOutput, Sharder};
 pub use router::{AdmissionQueue, AdmitOutcome, Priority, QueueStats};
@@ -69,5 +71,7 @@ pub use scaler::{run_instances, run_instances_timed, LatencyRecorder};
 pub use scaler::{InstanceReport, ScalingReport};
 pub use sched::{Poll, Scheduler, Signal, Task, VirtualScheduler, WaitGroup};
 pub use telemetry::{BatchLedger, BatchReport};
-pub use telemetry::{BindReport, Category, Report, SchedReport, ShardReport, ShardedReport, StageReport};
+pub use telemetry::{
+    BindReport, Category, OptReport, Report, SchedReport, ShardReport, ShardedReport, StageReport,
+};
 pub use telemetry::Telemetry;

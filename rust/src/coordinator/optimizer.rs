@@ -1,0 +1,626 @@
+//! Rule-based plan optimizer — the rewrite pass between `compile(cfg)`
+//! and `bind(payload, seed)`.
+//!
+//! The paper's end-to-end gains come from removing redundant work
+//! between pipeline stages (§3): fusing preprocessing steps so items
+//! stop paying a task hop per map, and picking batch sizes / executor
+//! shapes per pipeline instead of globally. The Plan IR executes graphs
+//! exactly as written, so this module rewrites [`CompiledPlan`]
+//! templates *before* any payload is bound:
+//!
+//! * **`fuse_adjacent_maps`** — two neighbouring flat-map nodes with the
+//!   same [`Category`] collapse into one node that runs both closures
+//!   per item (`a+b`). One task hop instead of two per item, with the
+//!   same emission order (the fused closure feeds each of `a`'s outputs
+//!   straight through `b`). Category equality is required so the
+//!   Figure 1 pre/ai attribution of the fused stage stays honest.
+//! * **`elide_identity`** — stages the builder declared as identities
+//!   ([`CompiledPlanBuilder::hint_identity`]) are removed outright.
+//! * **`hoist_across_batch`** — a pure per-element map over batches
+//!   ([`CompiledPlanBuilder::map_each`] records the equivalent per-item
+//!   template in its [`StageHints`]) moves in front of the batch node
+//!   it follows. Batch cuts group items without reordering them and an
+//!   elementwise map commutes with any grouping, so the sink sees
+//!   identical values in identical order — and the hoisted map can now
+//!   fuse with upstream per-item stages.
+//!
+//! A small deterministic **cost model** ([`optimize_profiled`]) reads
+//! per-stage item counters from an observed [`Report`] — never
+//! wall-clock — and records `batch_rows` / `ExecMode` suggestions in
+//! the [`OptReport`]. Suggestions are advisory only: applying them is
+//! the caller's choice, so an optimized graph always produces metrics
+//! bit-identical to the unoptimized one (pinned for every pipeline
+//! across the executor ladder in `rust/tests/executor_equivalence.rs`).
+//!
+//! `repro explain <pipeline>` prints the pre/post-optimization graph
+//! ([`render_graph`]) with per-stage profiles and the fired rules.
+
+use super::plan::{
+    CompiledPlan, NodeTemplate, NodeTemplateKind, Slicing, StageHints, StageTemplateFn,
+};
+use super::telemetry::{OptReport, Report};
+
+/// Rewrite `plan` in place with every rule, without a stage profile:
+/// `task_hops_saved` counts graph-level hops and the cost-model
+/// suggestions stay `None`. The report is also attached to the plan
+/// ([`CompiledPlan::opt_report`]).
+pub fn optimize<P: 'static>(plan: &mut CompiledPlan<P>) -> OptReport {
+    let (mut report, removed) = rewrite(plan);
+    report.task_hops_saved = removed.len();
+    plan.opt = Some(report.clone());
+    report
+}
+
+/// Rewrite `plan` in place and feed the deterministic cost model with
+/// the per-stage item counters of `profile` (an observed run of the
+/// *unoptimized* graph): `task_hops_saved` becomes the number of items
+/// that flowed through each removed hop, and the report carries
+/// `batch_rows` / exec-mode suggestions.
+pub fn optimize_profiled<P: 'static>(
+    plan: &mut CompiledPlan<P>,
+    profile: &Report,
+) -> OptReport {
+    let (mut report, removed) = rewrite(plan);
+    let items_of = |name: &str| {
+        profile.stages.iter().find(|s| s.name == name).map(|s| s.items).unwrap_or(0)
+    };
+    report.task_hops_saved = removed.iter().map(|n| items_of(n)).sum();
+    let (rows, exec) = suggest(plan, profile);
+    report.suggested_batch_rows = rows;
+    report.suggested_exec = exec;
+    plan.opt = Some(report.clone());
+    report
+}
+
+/// Render the plan's stage graph for EXPLAIN output: one line per stage
+/// (kind, name, category), annotated with observed per-stage item
+/// counts when a profile is supplied.
+pub fn render_graph<P: 'static>(plan: &CompiledPlan<P>, profile: Option<&Report>) -> String {
+    let mut out = String::new();
+    for (name, category, kind) in plan.stage_specs() {
+        let items = profile
+            .and_then(|r| r.stages.iter().find(|s| s.name == name))
+            .map(|s| format!("  {:>8} items", s.items))
+            .unwrap_or_default();
+        out.push_str(&format!(
+            "  {kind:>6}  {name:<44} [{:>4}]{items}\n",
+            category.label()
+        ));
+    }
+    out
+}
+
+/// Run all rewrite rules; returns the (suggestion-free) report plus the
+/// original stage names whose incoming hop was removed (elided nodes
+/// and the right-hand side of every fusion) for profiled hop
+/// accounting.
+fn rewrite<P: 'static>(plan: &mut CompiledPlan<P>) -> (OptReport, Vec<String>) {
+    let mut report = OptReport { stages_before: plan.nodes.len(), ..OptReport::default() };
+    let mut removed: Vec<String> = Vec::new();
+
+    // Rule 1: elide stages declared as identities.
+    let mut i = 0;
+    while i < plan.nodes.len() {
+        let elidable = plan.nodes[i].hints.identity
+            && matches!(plan.nodes[i].kind, NodeTemplateKind::FlatMap(_));
+        if elidable {
+            let node = plan.nodes.remove(i);
+            removed.push(node.name);
+            report.elided += 1;
+            *report.rules.entry("elide_identity".to_string()).or_default() += 1;
+        } else {
+            i += 1;
+        }
+    }
+
+    // Rule 2: hoist pure per-element maps in front of the batch node
+    // they follow (fixpoint: a hoisted map may sit behind another
+    // batch, and a batch may be followed by a chain of such maps).
+    let mut changed = true;
+    while changed {
+        changed = false;
+        let mut i = 0;
+        while i + 1 < plan.nodes.len() {
+            let hoistable = matches!(plan.nodes[i].kind, NodeTemplateKind::Batch(..))
+                && matches!(plan.nodes[i + 1].kind, NodeTemplateKind::FlatMap(_))
+                && plan.nodes[i + 1].hints.pure_elementwise
+                && plan.nodes[i + 1].hints.per_item.is_some();
+            if hoistable {
+                let node = plan.nodes.remove(i + 1);
+                let per_item = node.hints.per_item.expect("checked above");
+                plan.nodes.insert(
+                    i,
+                    NodeTemplate {
+                        name: node.name,
+                        category: node.category,
+                        kind: NodeTemplateKind::FlatMap(per_item),
+                        hints: StageHints {
+                            identity: node.hints.identity,
+                            pure_elementwise: true,
+                            per_item: None,
+                        },
+                    },
+                );
+                report.hoisted += 1;
+                *report.rules.entry("hoist_across_batch".to_string()).or_default() += 1;
+                changed = true;
+            }
+            i += 1;
+        }
+    }
+
+    // Rule 3: fuse adjacent same-category flat-map nodes. The fused
+    // node may fuse again with its new right neighbour, so the index
+    // only advances past non-fusable pairs — a chain of n maps
+    // collapses into one node with n-1 fusions.
+    let mut i = 0;
+    while i + 1 < plan.nodes.len() {
+        let fusable = matches!(plan.nodes[i].kind, NodeTemplateKind::FlatMap(_))
+            && matches!(plan.nodes[i + 1].kind, NodeTemplateKind::FlatMap(_))
+            && plan.nodes[i].category == plan.nodes[i + 1].category;
+        if !fusable {
+            i += 1;
+            continue;
+        }
+        let b = plan.nodes.remove(i + 1);
+        let a = plan.nodes.remove(i);
+        removed.push(b.name.clone());
+        let (NodeTemplateKind::FlatMap(fa), NodeTemplateKind::FlatMap(fb)) = (a.kind, b.kind)
+        else {
+            unreachable!("fusable pair checked above");
+        };
+        plan.nodes.insert(
+            i,
+            NodeTemplate {
+                name: format!("{}+{}", a.name, b.name),
+                category: a.category,
+                kind: NodeTemplateKind::FlatMap(compose(fa, fb)),
+                hints: StageHints {
+                    identity: a.hints.identity && b.hints.identity,
+                    pure_elementwise: a.hints.pure_elementwise && b.hints.pure_elementwise,
+                    per_item: match (a.hints.per_item, b.hints.per_item) {
+                        (Some(pa), Some(pb)) => Some(compose(pa, pb)),
+                        _ => None,
+                    },
+                },
+            },
+        );
+        report.fused += 1;
+        *report.rules.entry("fuse_adjacent_maps".to_string()).or_default() += 1;
+    }
+
+    report.stages_after = plan.nodes.len();
+    (report, removed)
+}
+
+/// Compose two stage templates into one: per bind, mint both closures
+/// and feed every output of the first through the second, preserving
+/// emission order.
+fn compose(fa: StageTemplateFn, fb: StageTemplateFn) -> StageTemplateFn {
+    Box::new(move |seed| {
+        let mut sa = fa(seed);
+        let mut sb = fb(seed);
+        Box::new(move |item| {
+            let mut out = Vec::new();
+            for mid in sa(item)? {
+                out.extend(sb(mid)?);
+            }
+            Ok(out)
+        })
+    })
+}
+
+/// The deterministic cost model: suggestions derived purely from the
+/// source item counter of an observed run and the rewritten graph
+/// shape, so the same profile always yields the same advice.
+///
+/// * `batch_rows` — per-item plans moving ≥ 64 items want a columnar
+///   batch plane; the suggested row count is the smallest power of two
+///   in `[16, 256]` that keeps the run under ~16 batches (amortization
+///   without starving downstream parallelism).
+/// * exec mode — datasets large enough to feed ≥ 2 shards of ≥ 256
+///   items suggest `shard:n` (n capped at 4); smaller runs with deep
+///   graphs (≥ 3 transform nodes after rewriting) suggest `streaming`.
+fn suggest<P: 'static>(
+    plan: &CompiledPlan<P>,
+    profile: &Report,
+) -> (Option<usize>, Option<String>) {
+    let source_items = profile.stages.first().map(|s| s.items).unwrap_or(0);
+    let rows = if plan.slicing() == Slicing::PerItem && source_items >= 64 {
+        let mut b = 16usize;
+        while b < 256 && b * 16 < source_items {
+            b *= 2;
+        }
+        Some(b)
+    } else {
+        None
+    };
+    let shards = (source_items / 256).clamp(1, 4);
+    let exec = if shards >= 2 {
+        Some(format!("shard:{shards}"))
+    } else if plan.nodes.len() >= 3 && source_items >= 2 {
+        Some("streaming".to_string())
+    } else {
+        None
+    };
+    (rows, exec)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::batcher::BatcherConfig;
+    use crate::coordinator::exec::{
+        run_async_seeded, run_sequential, run_streaming, DEFAULT_QUEUE_CAP,
+    };
+    use crate::coordinator::plan::{CompiledPlanBuilder, PlanOutput, WorkloadSlice};
+    use crate::coordinator::telemetry::Category;
+    use crate::util::rng::Rng;
+    use std::collections::BTreeMap;
+    use std::time::Duration;
+
+    type Builder = CompiledPlanBuilder<Vec<i64>, i64>;
+
+    /// Start a per-item compiled plan over a `Vec<i64>` payload.
+    fn source(name: &str) -> Builder {
+        CompiledPlan::source(
+            name,
+            "gen",
+            Category::Pre,
+            Slicing::PerItem,
+            |slice: WorkloadSlice<Vec<i64>>| {
+                let mut feed = Some(slice.payload);
+                Ok(move |emit: &mut dyn FnMut(i64)| {
+                    for v in feed.take().into_iter().flatten() {
+                        emit(v);
+                    }
+                })
+            },
+        )
+    }
+
+    /// Terminate with an order-sensitive fold: `hash` pins the exact
+    /// sink arrival sequence, not just the multiset of values.
+    fn fold_sink(b: Builder) -> CompiledPlan<Vec<i64>> {
+        b.sink("fold", Category::Post, |_payload: &Vec<i64>, _seed| {
+            Ok((
+                (0i64, 0i64, 0usize),
+                |(sum, hash, n): &mut (i64, i64, usize), v: i64| {
+                    *sum = sum.wrapping_add(v);
+                    *hash = hash.wrapping_mul(31).wrapping_add(v);
+                    *n += 1;
+                    Ok(())
+                },
+                |(sum, hash, n)| {
+                    let mut metrics = BTreeMap::new();
+                    metrics.insert("sum".to_string(), sum as f64);
+                    metrics.insert("hash".to_string(), hash as f64);
+                    Ok(PlanOutput { metrics, items: n })
+                },
+            ))
+        })
+    }
+
+    fn run_metrics(
+        plan: &CompiledPlan<Vec<i64>>,
+        payload: &[i64],
+    ) -> (BTreeMap<String, f64>, usize) {
+        let out = run_sequential(plan.bind(payload.to_vec(), 7).unwrap()).unwrap();
+        (out.output.metrics, out.output.items)
+    }
+
+    #[test]
+    fn adjacent_same_category_maps_fuse_into_one_node() {
+        let build = || {
+            fold_sink(
+                source("fuse")
+                    .map("a", Category::Pre, |_s| |v: i64| Ok(v.wrapping_mul(3)))
+                    .map("b", Category::Pre, |_s| |v: i64| Ok(v.wrapping_add(11)))
+                    .map("c", Category::Pre, |_s| |v: i64| Ok(v ^ 5))
+                    .map("model", Category::Ai, |_s| |v: i64| Ok(v.wrapping_mul(7))),
+            )
+        };
+        let baseline = build();
+        let mut optimized = build();
+        let report = optimize(&mut optimized);
+        // The three Pre maps collapse; the Ai map stays separate
+        // (category boundary).
+        assert_eq!(report.stages_before, 4);
+        assert_eq!(report.stages_after, 2);
+        assert_eq!(report.fused, 2);
+        assert_eq!(report.task_hops_saved, 2);
+        assert_eq!(report.rules["fuse_adjacent_maps"], 2);
+        assert_eq!(report.rules_fired(), 2);
+        assert_eq!(optimized.stage_names(), vec!["gen", "a+b+c", "model", "fold"]);
+        assert_eq!(optimized.opt_report(), Some(&report));
+        let payload: Vec<i64> = (0..37).collect();
+        assert_eq!(run_metrics(&baseline, &payload), run_metrics(&optimized, &payload));
+    }
+
+    #[test]
+    fn declared_identity_stages_are_elided() {
+        let build = || {
+            fold_sink(
+                source("elide")
+                    .map("scale", Category::Pre, |_s| |v: i64| Ok(v.wrapping_mul(2)))
+                    .map("noop", Category::Ai, |_s| |v: i64| Ok(v))
+                    .hint_identity()
+                    .map("shift", Category::Post, |_s| |v: i64| Ok(v + 1)),
+            )
+        };
+        let baseline = build();
+        let mut optimized = build();
+        let report = optimize(&mut optimized);
+        assert_eq!(report.elided, 1);
+        // With `noop` gone, `scale` and `shift` still differ in
+        // category, so nothing fuses.
+        assert_eq!(report.fused, 0);
+        assert_eq!(report.stages_removed(), 1);
+        assert_eq!(optimized.stage_names(), vec!["gen", "scale", "shift", "fold"]);
+        let payload: Vec<i64> = (0..23).map(|v| v * 5 - 11).collect();
+        assert_eq!(run_metrics(&baseline, &payload), run_metrics(&optimized, &payload));
+    }
+
+    /// Batch → per-element map → unbatch, with an upstream per-item
+    /// map: the hoist rule moves the elementwise work in front of the
+    /// batch node, where fusion then merges it with the upstream map.
+    fn hoist_plan() -> CompiledPlan<Vec<i64>> {
+        source("hoist")
+            .map("pre", Category::Pre, |_s| |v: i64| Ok(v.wrapping_add(100)))
+            .batch(
+                "pack",
+                Category::Pre,
+                BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(1) },
+            )
+            .map_each("scale_each", Category::Pre, |_s| |v: i64| Ok(v.wrapping_mul(3)))
+            .flat_map("unpack", Category::Pre, |_s| |vs: Vec<i64>| Ok(vs))
+            .sink("fold", Category::Post, |_payload: &Vec<i64>, _seed| {
+                Ok((
+                    (0i64, 0i64, 0usize),
+                    |(sum, hash, n): &mut (i64, i64, usize), v: i64| {
+                        *sum = sum.wrapping_add(v);
+                        *hash = hash.wrapping_mul(31).wrapping_add(v);
+                        *n += 1;
+                        Ok(())
+                    },
+                    |(sum, hash, n)| {
+                        let mut metrics = BTreeMap::new();
+                        metrics.insert("sum".to_string(), sum as f64);
+                        metrics.insert("hash".to_string(), hash as f64);
+                        Ok(PlanOutput { metrics, items: n })
+                    },
+                ))
+            })
+    }
+
+    #[test]
+    fn pure_elementwise_maps_hoist_across_the_batch_boundary_and_fuse() {
+        let baseline = hoist_plan();
+        let mut optimized = hoist_plan();
+        let report = optimize(&mut optimized);
+        assert_eq!(report.hoisted, 1);
+        assert_eq!(report.rules["hoist_across_batch"], 1);
+        // After the hoist: pre → scale_each → pack → unpack, and the
+        // two leading Pre maps fuse.
+        assert_eq!(report.fused, 1);
+        assert_eq!(
+            optimized.stage_names(),
+            vec!["gen", "pre+scale_each", "pack", "unpack", "fold"]
+        );
+        let payload: Vec<i64> = (0..19).map(|v| v * 7 - 3).collect();
+        assert_eq!(run_metrics(&baseline, &payload), run_metrics(&optimized, &payload));
+        // The streaming executor cuts batches on time as well as count;
+        // an elementwise map commutes with any grouping, so metrics
+        // still match.
+        let a = run_streaming(baseline.bind(payload.clone(), 7).unwrap(), DEFAULT_QUEUE_CAP)
+            .unwrap();
+        let b = run_streaming(optimized.bind(payload, 7).unwrap(), DEFAULT_QUEUE_CAP).unwrap();
+        assert_eq!(a.output.metrics, b.output.metrics);
+    }
+
+    #[test]
+    fn cost_model_suggestions_are_deterministic_from_counters() {
+        let build = || {
+            fold_sink(
+                source("cost")
+                    .map("a", Category::Pre, |_s| |v: i64| Ok(v + 1))
+                    .map("b", Category::Ai, |_s| |v: i64| Ok(v * 2)),
+            )
+        };
+        let payload: Vec<i64> = (0..600).collect();
+        let profile = run_sequential(build().bind(payload.clone(), 7).unwrap()).unwrap().report;
+        let mut first = build();
+        let r1 = optimize_profiled(&mut first, &profile);
+        let mut second = build();
+        let r2 = optimize_profiled(&mut second, &profile);
+        assert_eq!(r1, r2, "same profile, same advice");
+        // 600 items: 16·16 and 32·16 are under 600, 64·16 is not.
+        assert_eq!(r1.suggested_batch_rows, Some(64));
+        // 600 / 256 = 2 shards.
+        assert_eq!(r1.suggested_exec.as_deref(), Some("shard:2"));
+        // Profiled hop accounting: no rule fires here (category
+        // boundary), so no hops are saved.
+        assert_eq!(r1.task_hops_saved, 0);
+
+        // A small payload keeps everything sequential-shaped.
+        let tiny: Vec<i64> = (0..8).collect();
+        let profile = run_sequential(build().bind(tiny, 7).unwrap()).unwrap().report;
+        let mut third = build();
+        let r3 = optimize_profiled(&mut third, &profile);
+        assert_eq!(r3.suggested_batch_rows, None);
+        assert_eq!(r3.suggested_exec, None);
+    }
+
+    #[test]
+    fn profiled_hop_savings_count_items_not_nodes() {
+        let build = || {
+            fold_sink(
+                source("hops")
+                    .map("a", Category::Pre, |_s| |v: i64| Ok(v + 1))
+                    .map("b", Category::Pre, |_s| |v: i64| Ok(v * 2)),
+            )
+        };
+        let payload: Vec<i64> = (0..50).collect();
+        let profile = run_sequential(build().bind(payload, 7).unwrap()).unwrap().report;
+        let mut optimized = build();
+        let report = optimize_profiled(&mut optimized, &profile);
+        assert_eq!(report.fused, 1);
+        // 50 items each skipped the hop into `b`.
+        assert_eq!(report.task_hops_saved, 50);
+    }
+
+    #[test]
+    fn render_graph_lists_stages_with_profile_counts() {
+        let plan = fold_sink(
+            source("render").map("a", Category::Pre, |_s| |v: i64| Ok(v + 1)),
+        );
+        let payload: Vec<i64> = (0..5).collect();
+        let profile = run_sequential(plan.bind(payload, 7).unwrap()).unwrap().report;
+        let rendered = render_graph(&plan, Some(&profile));
+        assert!(rendered.contains("source"), "{rendered}");
+        assert!(rendered.contains("gen"), "{rendered}");
+        assert!(rendered.contains("a"), "{rendered}");
+        assert!(rendered.contains("5 items"), "{rendered}");
+        let bare = render_graph(&plan, None);
+        assert!(!bare.contains("items"), "{bare}");
+    }
+
+    #[test]
+    fn opt_reports_aggregate_by_merge() {
+        let mut total = OptReport::default();
+        let mut a = fold_sink(
+            source("ma")
+                .map("x", Category::Pre, |_s| |v: i64| Ok(v + 1))
+                .map("y", Category::Pre, |_s| |v: i64| Ok(v + 2)),
+        );
+        total.merge(&optimize(&mut a));
+        let mut b = fold_sink(
+            source("mb").map("z", Category::Ai, |_s| |v: i64| Ok(v)).hint_identity(),
+        );
+        total.merge(&optimize(&mut b));
+        assert_eq!(total.fused, 1);
+        assert_eq!(total.elided, 1);
+        assert_eq!(total.stages_before, 3);
+        assert_eq!(total.stages_after, 1);
+        assert_eq!(total.rules_fired(), 2);
+    }
+
+    // ---- Seeded property test: random plans, every rule, pinned ----
+    // ---- equality under sequential AND VirtualScheduler runs.    ----
+
+    /// One randomly chosen stage of a generated plan. `BatchBlock`
+    /// exercises the hoist rule: batch → per-element maps → unbatch.
+    #[derive(Clone, Debug)]
+    enum Op {
+        Affine(i64, i64),
+        Identity,
+        FilterMod(i64),
+        Expand(i64),
+        BatchBlock { max: usize, each: Vec<(i64, i64)> },
+    }
+
+    fn random_spec(rng: &mut Rng) -> Vec<(Op, Category)> {
+        let len = rng.below(7);
+        (0..len)
+            .map(|_| {
+                let op = match rng.below(5) {
+                    0 => Op::Affine(rng.range_i64(-5, 6), rng.range_i64(-20, 21)),
+                    1 => Op::Identity,
+                    2 => Op::FilterMod(rng.range_i64(2, 6)),
+                    3 => Op::Expand(rng.range_i64(1, 9)),
+                    _ => Op::BatchBlock {
+                        max: 2 + rng.below(6),
+                        each: (0..1 + rng.below(2))
+                            .map(|_| (rng.range_i64(-4, 5), rng.range_i64(-9, 10)))
+                            .collect(),
+                    },
+                };
+                let cat = *rng.choice(&[Category::Pre, Category::Ai, Category::Post]);
+                (op, cat)
+            })
+            .collect()
+    }
+
+    fn build_from_spec(spec: &[(Op, Category)]) -> CompiledPlan<Vec<i64>> {
+        let mut b = source("prop");
+        for (k, (op, cat)) in spec.iter().enumerate() {
+            let cat = *cat;
+            b = match op.clone() {
+                Op::Affine(m, c) => b.map(&format!("affine{k}"), cat, move |_s| {
+                    move |v: i64| Ok(v.wrapping_mul(m).wrapping_add(c))
+                }),
+                Op::Identity => b
+                    .map(&format!("id{k}"), cat, |_s| |v: i64| Ok(v))
+                    .hint_identity(),
+                Op::FilterMod(m) => b.flat_map(&format!("filter{k}"), cat, move |_s| {
+                    move |v: i64| Ok(if v.rem_euclid(m) == 0 { vec![] } else { vec![v] })
+                }),
+                Op::Expand(x) => b.flat_map(&format!("expand{k}"), cat, move |_s| {
+                    move |v: i64| Ok(vec![v, v ^ x])
+                }),
+                Op::BatchBlock { max, each } => {
+                    let mut vb = b.batch(
+                        &format!("pack{k}"),
+                        cat,
+                        BatcherConfig { max_batch: max, max_wait: Duration::from_millis(1) },
+                    );
+                    for (j, (m, c)) in each.into_iter().enumerate() {
+                        vb = vb.map_each(&format!("each{k}_{j}"), cat, move |_s| {
+                            move |v: i64| Ok(v.wrapping_mul(m).wrapping_add(c))
+                        });
+                    }
+                    vb.flat_map(&format!("unpack{k}"), cat, |_s| |vs: Vec<i64>| Ok(vs))
+                }
+            };
+        }
+        fold_sink(b)
+    }
+
+    #[test]
+    fn property_random_plans_optimize_metric_and_order_identically() {
+        for case in 0..24u64 {
+            let mut rng = Rng::new(0x0917 + case);
+            let spec = random_spec(&mut rng);
+            let payload: Vec<i64> =
+                (0..rng.below(40)).map(|_| rng.range_i64(-100, 101)).collect();
+            let baseline = build_from_spec(&spec);
+            let mut optimized = build_from_spec(&spec);
+            let report = optimize(&mut optimized);
+            assert!(
+                report.stages_after <= report.stages_before,
+                "case {case}: {report:?}"
+            );
+            assert_eq!(
+                report.stages_removed(),
+                report.fused + report.elided,
+                "case {case}: every removed node is a fusion or elision: {report:?}"
+            );
+            let seq_a = run_sequential(baseline.bind(payload.clone(), 7).unwrap()).unwrap();
+            let seq_b = run_sequential(optimized.bind(payload.clone(), 7).unwrap()).unwrap();
+            assert_eq!(
+                seq_a.output.metrics, seq_b.output.metrics,
+                "case {case} spec {spec:?}"
+            );
+            assert_eq!(seq_a.output.items, seq_b.output.items, "case {case}");
+            // The optimized plan's metrics — hash included, so the sink
+            // order is pinned — survive every seeded interleaving.
+            for vseed in [1u64, 7, 13] {
+                let va =
+                    run_async_seeded(baseline.bind(payload.clone(), 7).unwrap(), vseed)
+                        .unwrap();
+                let vb =
+                    run_async_seeded(optimized.bind(payload.clone(), 7).unwrap(), vseed)
+                        .unwrap();
+                assert_eq!(
+                    va.output.metrics, seq_a.output.metrics,
+                    "case {case} vseed {vseed}"
+                );
+                assert_eq!(
+                    vb.output.metrics, seq_a.output.metrics,
+                    "case {case} vseed {vseed}"
+                );
+                assert_eq!(vb.output.items, seq_a.output.items, "case {case}");
+            }
+        }
+    }
+}

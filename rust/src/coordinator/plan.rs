@@ -54,7 +54,7 @@
 //! [`ColumnBatch`]: crate::dataframe::ColumnBatch
 
 use super::batcher::BatcherConfig;
-use super::telemetry::{BatchLedger, BatchReport, BindReport, Category};
+use super::telemetry::{BatchLedger, BatchReport, BindReport, Category, OptReport};
 use std::any::Any;
 use std::collections::BTreeMap;
 use std::marker::PhantomData;
@@ -383,12 +383,29 @@ pub(crate) type GroupTemplateFn = Box<dyn Fn(u64) -> GroupFn + Send + Sync>;
 pub(crate) type SinkTemplateFn<P> =
     Box<dyn Fn(&P, u64) -> anyhow::Result<(SinkFn, FinishFn)> + Send + Sync>;
 
+/// Optimizer-facing annotations on a compiled node: semantic facts the
+/// builder can assert about a stage that its type-erased closure can no
+/// longer reveal. `identity` marks a stage that forwards every item
+/// unchanged (elidable); `pure_elementwise` marks a batch-level stage
+/// that applies a pure per-element function to every member of a
+/// `Vec<T>` batch; `per_item` carries the equivalent per-item template
+/// for such a stage — the handle that lets
+/// [`super::optimizer::optimize`] hoist the work across the upstream
+/// batch boundary without inspecting closures.
+#[derive(Default)]
+pub(crate) struct StageHints {
+    pub(crate) identity: bool,
+    pub(crate) pure_elementwise: bool,
+    pub(crate) per_item: Option<StageTemplateFn>,
+}
+
 /// One transform node of a compiled plan: everything a [`Node`] carries
 /// except the single-use closure, which a factory re-mints per bind.
 pub(crate) struct NodeTemplate {
-    name: String,
-    category: Category,
-    kind: NodeTemplateKind,
+    pub(crate) name: String,
+    pub(crate) category: Category,
+    pub(crate) kind: NodeTemplateKind,
+    pub(crate) hints: StageHints,
 }
 
 pub(crate) enum NodeTemplateKind {
@@ -415,13 +432,14 @@ pub struct CompiledPlan<P: 'static> {
     name: String,
     slicing: Slicing,
     source: (String, Category, SourceTemplateFn<P>),
-    nodes: Vec<NodeTemplate>,
+    pub(crate) nodes: Vec<NodeTemplate>,
     sink: (String, Category, SinkTemplateFn<P>),
     warm_models: Vec<String>,
     batch_ledger: Option<Arc<BatchLedger>>,
     compile_nanos: AtomicU64,
     binds: AtomicUsize,
     bind_nanos: AtomicU64,
+    pub(crate) opt: Option<OptReport>,
 }
 
 impl<P: 'static> CompiledPlan<P> {
@@ -479,6 +497,28 @@ impl<P: 'static> CompiledPlan<P> {
     /// Number of stages including source and sink.
     pub fn stage_count(&self) -> usize {
         self.nodes.len() + 2
+    }
+
+    /// `(stage name, category, node kind)` specs for source, transforms,
+    /// and sink in execution order — the EXPLAIN view of the graph.
+    pub fn stage_specs(&self) -> Vec<(String, Category, &'static str)> {
+        let mut specs = vec![(self.source.0.clone(), self.source.1, "source")];
+        for n in &self.nodes {
+            let kind = match n.kind {
+                NodeTemplateKind::FlatMap(_) => "map",
+                NodeTemplateKind::Batch(..) => "batch",
+            };
+            specs.push((n.name.clone(), n.category, kind));
+        }
+        specs.push((self.sink.0.clone(), self.sink.1, "sink"));
+        specs
+    }
+
+    /// The optimization report attached by
+    /// [`super::optimizer::optimize`]; `None` for a graph that still
+    /// executes exactly as written.
+    pub fn opt_report(&self) -> Option<&OptReport> {
+        self.opt.as_ref()
     }
 
     /// Declare the model artifacts this plan's stages execute — the set
@@ -664,7 +704,30 @@ impl<P: 'static, T: Send + 'static> CompiledPlanBuilder<P, T> {
             name: name.to_string(),
             category,
             kind: NodeTemplateKind::FlatMap(tpl),
+            hints: StageHints::default(),
         })
+    }
+
+    /// Mark the last appended stage as an identity transform (it
+    /// forwards every item unchanged); the optimizer may elide it.
+    /// The claim is the builder's to make — the erased closure cannot
+    /// be inspected — and the conformance matrix pins that eliding a
+    /// correctly-declared identity never changes metrics.
+    pub fn hint_identity(mut self) -> Self {
+        if let Some(node) = self.nodes.last_mut() {
+            node.hints.identity = true;
+        }
+        self
+    }
+
+    /// Mark the last appended stage as a pure function of its input
+    /// (no per-bind state, no side effects observable downstream).
+    /// Purity is a precondition for hoisting rules.
+    pub fn hint_pure(mut self) -> Self {
+        if let Some(node) = self.nodes.last_mut() {
+            node.hints.pure_elementwise = true;
+        }
+        self
     }
 
     /// Append a 1→0..n transform.
@@ -692,6 +755,7 @@ impl<P: 'static, T: Send + 'static> CompiledPlanBuilder<P, T> {
             name: name.to_string(),
             category,
             kind: NodeTemplateKind::FlatMap(tpl),
+            hints: StageHints::default(),
         })
     }
 
@@ -730,6 +794,7 @@ impl<P: 'static, T: Send + 'static> CompiledPlanBuilder<P, T> {
             name: name.to_string(),
             category,
             kind: NodeTemplateKind::FlatMap(tpl),
+            hints: StageHints::default(),
         })
     }
 
@@ -756,6 +821,7 @@ impl<P: 'static, T: Send + 'static> CompiledPlanBuilder<P, T> {
             name: name.to_string(),
             category,
             kind: NodeTemplateKind::Batch(cfg, tpl),
+            hints: StageHints::default(),
         })
     }
 
@@ -801,7 +867,65 @@ impl<P: 'static, T: Send + 'static> CompiledPlanBuilder<P, T> {
             compile_nanos: AtomicU64::new(compile_nanos),
             binds: AtomicUsize::new(0),
             bind_nanos: AtomicU64::new(0),
+            opt: None,
         }
+    }
+}
+
+impl<P: 'static, T: Send + 'static> CompiledPlanBuilder<P, Vec<T>> {
+    /// Append a pure per-element 1→1 transform over batched items:
+    /// `Vec<T>` → `Vec<T>`, applying `make(seed)` to every element in
+    /// order. Because the builder still knows the element type here, it
+    /// also records the equivalent per-item template in the node's
+    /// [`StageHints`] — which is what allows
+    /// [`super::optimizer::optimize`] to hoist the work in front of the
+    /// upstream batch node: batch cuts are count-based (`max_batch`
+    /// plus one remainder flush), so the sink sees identical values in
+    /// identical order whether elements are transformed before or after
+    /// grouping.
+    pub fn map_each<MK, F>(
+        self,
+        name: &str,
+        category: Category,
+        make: MK,
+    ) -> CompiledPlanBuilder<P, Vec<T>>
+    where
+        MK: Fn(u64) -> F + Send + Sync + Clone + 'static,
+        F: FnMut(T) -> anyhow::Result<T> + Send + 'static,
+    {
+        let stage = name.to_string();
+        let make_batch = make.clone();
+        let batch_tpl: StageTemplateFn = Box::new(move |seed| {
+            let mut f = make_batch(seed);
+            let stage = stage.clone();
+            Box::new(move |item: DynItem| {
+                let batch = downcast::<Vec<T>>(item, &stage)?;
+                let mut out: Vec<T> = Vec::with_capacity(batch.len());
+                for t in batch {
+                    out.push(f(t)?);
+                }
+                Ok(vec![Box::new(out) as DynItem])
+            })
+        });
+        let stage = name.to_string();
+        let item_tpl: StageTemplateFn = Box::new(move |seed| {
+            let mut f = make(seed);
+            let stage = stage.clone();
+            Box::new(move |item: DynItem| {
+                let t = downcast::<T>(item, &stage)?;
+                Ok(vec![Box::new(f(t)?) as DynItem])
+            })
+        });
+        self.push_node(NodeTemplate {
+            name: name.to_string(),
+            category,
+            kind: NodeTemplateKind::FlatMap(batch_tpl),
+            hints: StageHints {
+                identity: false,
+                pure_elementwise: true,
+                per_item: Some(item_tpl),
+            },
+        })
     }
 }
 

@@ -550,50 +550,63 @@ mod tests {
     /// Producer pushes 1..=N through a shared FIFO in chunks; consumer
     /// drains it. Under every seeded interleaving the consumer observes
     /// exactly 1..=N in order — the invariance the async executor's
-    /// metric determinism rests on.
+    /// metric determinism rests on. The producer exposes a [`Signal`]
+    /// and the blocked consumer parks on it (no remaining signal-less
+    /// `Poll::Pending` site): on the virtual scheduler parking
+    /// degenerates to a requeue, so parked/woken stay zero.
     #[test]
     fn seeded_interleavings_preserve_fifo_handoff_order() {
         const N: u64 = 100;
         for seed in 0..24u64 {
+            let signal = Signal::new();
             let pipe: Arc<Mutex<VecDeque<u64>>> = Arc::new(Mutex::new(VecDeque::new()));
             let produced_all = Arc::new(AtomicUsize::new(0));
             let seen: Arc<Mutex<Vec<u64>>> = Arc::new(Mutex::new(Vec::new()));
 
             let mut vs = VirtualScheduler::new(seed);
             {
+                let signal = signal.clone();
                 let pipe = Arc::clone(&pipe);
                 let produced_all = Arc::clone(&produced_all);
                 let mut next = 1u64;
                 vs.spawn(Box::new(move || {
                     // Push up to 7 values per poll.
-                    let mut q = pipe.lock().unwrap();
-                    for _ in 0..7 {
-                        if next > N {
-                            break;
+                    {
+                        let mut q = pipe.lock().unwrap();
+                        for _ in 0..7 {
+                            if next > N {
+                                break;
+                            }
+                            q.push_back(next);
+                            next += 1;
                         }
-                        q.push_back(next);
-                        next += 1;
                     }
                     if next > N {
                         produced_all.store(1, Ordering::SeqCst);
+                        signal.notify();
                         Poll::Done
                     } else {
+                        signal.notify();
                         Poll::Yield
                     }
                 }));
             }
             {
+                let signal = signal.clone();
                 let pipe = Arc::clone(&pipe);
                 let produced_all = Arc::clone(&produced_all);
                 let seen = Arc::clone(&seen);
                 vs.spawn(Box::new(move || {
+                    // Generation snapshot BEFORE the blocking check, so
+                    // a racing notify is caught at park time.
+                    let gen = signal.generation();
                     let done = produced_all.load(Ordering::SeqCst) == 1;
                     let drained: Vec<u64> = pipe.lock().unwrap().drain(..).collect();
                     if drained.is_empty() {
                         if done {
                             return Poll::Done;
                         }
-                        return Poll::Pending;
+                        return Poll::Park { signal: signal.clone(), seen: gen };
                     }
                     seen.lock().unwrap().extend(drained);
                     Poll::Yield
@@ -605,8 +618,98 @@ mod tests {
             assert_eq!(*seen, expect, "seed {seed}: handoff reordered");
             assert_eq!(c.tasks_run, c.tasks_spawned, "seed {seed}");
             assert_eq!(c.polls, c.tasks_run + c.requeues, "seed {seed}");
+            assert_eq!((c.parked, c.woken), (0, 0), "seed {seed}: VS never parks");
             assert!(c.balanced(), "seed {seed}: {c:?}");
         }
+    }
+
+    /// The deadline-spin fix pinned from counters, never timing: with
+    /// the producer's [`Signal`] in hand, a blocked FIFO consumer on
+    /// the REAL threaded pool parks instead of requeue-spinning behind
+    /// the `Poll::Pending` micro-sleep. Counter bounds:
+    ///
+    /// * producer: ceil(N/CHUNK) = 15 polls → 14 `Yield` requeues;
+    /// * consumer `Yield`s once per non-empty drain → at most 15;
+    /// * each blocked consumer poll either parks or hot-requeues behind
+    ///   a racing notify → at most `parked` + 16 (one race per notify).
+    ///
+    /// So `requeues ≤ 45 + parked`, where the old signal-less `Pending`
+    /// path admitted unboundedly many sleep-gated spins between pushes.
+    #[test]
+    fn blocked_fifo_consumer_parks_instead_of_spinning() {
+        const N: u64 = 100;
+        const CHUNK: u64 = 7;
+        let signal = Signal::new();
+        let pipe: Arc<Mutex<VecDeque<u64>>> = Arc::new(Mutex::new(VecDeque::new()));
+        let produced_all = Arc::new(AtomicUsize::new(0));
+        let seen_vals: Arc<Mutex<Vec<u64>>> = Arc::new(Mutex::new(Vec::new()));
+        let wg = WaitGroup::new();
+        // ONE worker and the consumer spawned first: its first poll runs
+        // before the producer can, so it MUST park at least once.
+        let sched = Scheduler::new(1);
+        wg.add(2);
+        {
+            let signal = signal.clone();
+            let pipe = Arc::clone(&pipe);
+            let produced_all = Arc::clone(&produced_all);
+            let seen_vals = Arc::clone(&seen_vals);
+            let wg = wg.clone();
+            sched.spawn(Box::new(move || {
+                let gen = signal.generation();
+                let done = produced_all.load(Ordering::SeqCst) == 1;
+                let drained: Vec<u64> = pipe.lock().unwrap().drain(..).collect();
+                if drained.is_empty() {
+                    if done {
+                        wg.done();
+                        return Poll::Done;
+                    }
+                    return Poll::Park { signal: signal.clone(), seen: gen };
+                }
+                seen_vals.lock().unwrap().extend(drained);
+                Poll::Yield
+            }));
+        }
+        {
+            let signal = signal.clone();
+            let pipe = Arc::clone(&pipe);
+            let produced_all = Arc::clone(&produced_all);
+            let wg = wg.clone();
+            let mut next = 1u64;
+            sched.spawn(Box::new(move || {
+                {
+                    let mut q = pipe.lock().unwrap();
+                    for _ in 0..CHUNK {
+                        if next > N {
+                            break;
+                        }
+                        q.push_back(next);
+                        next += 1;
+                    }
+                }
+                if next > N {
+                    produced_all.store(1, Ordering::SeqCst);
+                    signal.notify();
+                    wg.done();
+                    Poll::Done
+                } else {
+                    signal.notify();
+                    Poll::Yield
+                }
+            }));
+        }
+        wg.wait();
+        let seen = seen_vals.lock().unwrap();
+        let expect: Vec<u64> = (1..=N).collect();
+        assert_eq!(*seen, expect, "handoff reordered");
+        let c = sched.counters();
+        assert!(c.parked >= 1, "the consumer's first poll must park: {c:?}");
+        assert_eq!(c.parked, c.woken, "{c:?}");
+        let pushes = N.div_ceil(CHUNK) as usize;
+        assert!(
+            c.requeues <= (pushes - 1) + pushes + c.parked + (pushes + 1),
+            "blocked consumer spun the run queue: {c:?}"
+        );
+        assert!(c.balanced(), "{c:?}");
     }
 
     #[test]

@@ -291,6 +291,74 @@ impl BindReport {
     }
 }
 
+/// What the rule-based plan optimizer did to one compiled graph: which
+/// rewrite rules fired, how the stage count shrank, and what its
+/// deterministic cost model would suggest — all counters derived from
+/// graph structure and per-stage item tallies, never wall-clock, so the
+/// report is stable across machines and reruns. Rides on
+/// [`CompiledPlan`] beside [`BindReport`] and on pipeline results; it
+/// never enters the metric map (optimized metrics are pinned
+/// bit-identical to unoptimized ones).
+///
+/// [`CompiledPlan`]: super::plan::CompiledPlan
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct OptReport {
+    /// Transform-node count before optimization (source/sink excluded).
+    pub stages_before: usize,
+    /// Transform-node count after optimization.
+    pub stages_after: usize,
+    /// Adjacent map pairs fused into one node (a chain of `n` maps
+    /// collapsing into one counts `n - 1` fusions).
+    pub fused: usize,
+    /// Identity stages elided outright.
+    pub elided: usize,
+    /// Pure per-item maps hoisted across a batch boundary.
+    pub hoisted: usize,
+    /// Per-item task hops the rewrite removed. Unprofiled this is the
+    /// graph-level node reduction; with a stage profile it is the sum
+    /// of items that flowed through each removed hop.
+    pub task_hops_saved: usize,
+    /// Rule name → number of times it fired.
+    pub rules: std::collections::BTreeMap<String, usize>,
+    /// Cost-model suggestion: columnar batch rows for this graph
+    /// (`None` without a profile or for non-batchable shapes).
+    pub suggested_batch_rows: Option<usize>,
+    /// Cost-model suggestion: executor mode spec (e.g. `shard:4`).
+    pub suggested_exec: Option<String>,
+}
+
+impl OptReport {
+    /// Total rule applications across all rules.
+    pub fn rules_fired(&self) -> usize {
+        self.rules.values().sum()
+    }
+
+    /// Net transform nodes removed by the rewrite.
+    pub fn stages_removed(&self) -> usize {
+        self.stages_before.saturating_sub(self.stages_after)
+    }
+
+    /// Merge another report into this one (service-level aggregation
+    /// across sessions; suggestions keep the first non-`None` value).
+    pub fn merge(&mut self, other: &OptReport) {
+        self.stages_before += other.stages_before;
+        self.stages_after += other.stages_after;
+        self.fused += other.fused;
+        self.elided += other.elided;
+        self.hoisted += other.hoisted;
+        self.task_hops_saved += other.task_hops_saved;
+        for (rule, n) in &other.rules {
+            *self.rules.entry(rule.clone()).or_default() += n;
+        }
+        if self.suggested_batch_rows.is_none() {
+            self.suggested_batch_rows = other.suggested_batch_rows;
+        }
+        if self.suggested_exec.is_none() {
+            self.suggested_exec = other.suggested_exec.clone();
+        }
+    }
+}
+
 /// Shared atomic counters behind the columnar batch data plane: the
 /// batched stages of a compiled tabular pipeline record how many
 /// [`ColumnBatch`] items they split, transformed, and gathered, and how

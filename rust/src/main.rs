@@ -5,6 +5,8 @@
 //! repro run <pipeline> [--opt baseline|optimized]
 //!                      [--exec sequential|streaming|multi[:N]|shard[:N]|async[:T]]
 //!                      [--scale F] [--seed N]
+//! repro explain <pipeline>         # pre/post-optimization stage graph, fired rewrite
+//!                                  # rules, and cost-model suggestions
 //! repro serve [--requests N] [--mix census:4,dlsa:1] [--depth D] [--workers W]
 //!             [--listen ADDR]      # soak a PipelineService with a mixed-priority request mix
 //!                                  # (--listen serves it over TCP instead of in-process)
@@ -32,6 +34,7 @@ fn main() {
     let code = match args.command.as_str() {
         "list" => cmd_list(),
         "run" => cmd_run(&args),
+        "explain" => cmd_explain(&args),
         "serve" => cmd_serve(&args),
         "bench-serve" => cmd_bench_serve(&args),
         "fig1" => cmd_fig1(&args),
@@ -59,6 +62,9 @@ fn print_help() {
          COMMANDS:\n\
          \x20 list                 list the eight pipelines (Table 1)\n\
          \x20 run <pipeline>       run one pipeline and print its report\n\
+         \x20 explain <pipeline>   print the pre/post-optimization stage graph with\n\
+         \x20                      per-stage profiles, the rewrite rules that fired, and\n\
+         \x20                      the cost model's batch-rows / exec-mode suggestions\n\
          \x20 serve                soak a PipelineService with a mixed-priority request mix\n\
          \x20 bench-serve          closed-loop TCP load generator over a loopback PipelineServer;\n\
          \x20                      writes BENCH_serve.json (per-tenant throughput, p50/p95, sheds)\n\
@@ -66,7 +72,7 @@ fn print_help() {
          \x20 config               print the software configuration (Table 3)\n\
          \x20 models               list AOT model artifacts\n\
          \n\
-         OPTIONS (run/serve/fig1):\n\
+         OPTIONS (run/explain/serve/fig1):\n\
          \x20 --opt baseline|optimized          optimization level (default optimized)\n\
          \x20 --exec sequential|streaming|multi[:N]|shard[:N]|async[:T]\n\
          \x20                                   executor for the pipeline plan\n\
@@ -210,6 +216,113 @@ fn cmd_run(args: &Args) -> i32 {
             1
         }
     }
+}
+
+/// `repro explain <pipeline>`: compile the graph exactly as written,
+/// profile one sequential run for per-stage item counters, then run the
+/// plan optimizer fed by that profile and print both graphs, the fired
+/// rules, and the deterministic cost-model suggestions. Exits non-zero
+/// if the optimized graph's metrics diverge from the as-written run's
+/// (they are pinned identical by the conformance matrix).
+fn cmd_explain(args: &Args) -> i32 {
+    let Some(name) = args.positional.first() else {
+        eprintln!("usage: repro explain <pipeline> [--opt …] [--scale …] [--seed …]");
+        return 2;
+    };
+    let cfg = parse_cfg(args);
+    let Some(entry) = repro::pipelines::find(name) else {
+        eprintln!(
+            "unknown pipeline: {name} (known: {})",
+            repro::pipelines::names().join(", ")
+        );
+        return 2;
+    };
+    let mut compiled = match repro::pipelines::compile_entry(entry, &cfg) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            return 1;
+        }
+    };
+    let profile_cfg = RunConfig { exec: ExecMode::Sequential, ..cfg };
+    let baseline = match repro::pipelines::run_compiled(
+        entry,
+        &compiled,
+        repro::pipelines::Workload::Synthetic,
+        &profile_cfg,
+    ) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            return 1;
+        }
+    };
+    println!("pipeline: {name}   (scale {}, seed {:#x})", cfg.scale, cfg.seed);
+    println!(
+        "pre-optimization graph ({} stages, profiled over one sequential run of {} items):",
+        compiled.stage_count(),
+        baseline.items
+    );
+    print!("{}", repro::coordinator::render_graph(&compiled, Some(&baseline.report)));
+    let report = repro::coordinator::optimize_profiled(&mut compiled, &baseline.report);
+    println!("post-optimization graph ({} stages):", compiled.stage_count());
+    print!("{}", repro::coordinator::render_graph(&compiled, None));
+    if report.rules.is_empty() {
+        println!("rules fired: none (graph already minimal)");
+    } else {
+        println!("rules fired:");
+        for (rule, n) in &report.rules {
+            println!("  {rule} x{n}");
+        }
+    }
+    println!(
+        "stages: {} -> {} transform nodes ({} fused, {} elided, {} hoisted); per-item task hops saved: {}",
+        report.stages_before,
+        report.stages_after,
+        report.fused,
+        report.elided,
+        report.hoisted,
+        report.task_hops_saved
+    );
+    match (report.suggested_batch_rows, report.suggested_exec.as_deref()) {
+        (None, None) => println!("cost model: no suggestions at this scale"),
+        (rows, exec) => {
+            let rows = rows.map_or("-".to_string(), |r| r.to_string());
+            println!(
+                "cost model: suggested batch_rows {rows}, suggested exec {} \
+                 (advisory — apply via --batch-rows / --exec)",
+                exec.unwrap_or("-")
+            );
+        }
+    }
+    let check = match repro::pipelines::run_compiled(
+        entry,
+        &compiled,
+        repro::pipelines::Workload::Synthetic,
+        &profile_cfg,
+    ) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("error: optimized graph failed to run: {e:#}");
+            return 1;
+        }
+    };
+    // Wall-clock-valued metrics (fps) differ run to run by nature;
+    // every deterministic metric must match bit-for-bit.
+    let deterministic = |m: &std::collections::BTreeMap<String, f64>| {
+        m.iter()
+            .filter(|(k, _)| k.as_str() != "fps")
+            .map(|(k, v)| (k.clone(), v.to_bits()))
+            .collect::<Vec<_>>()
+    };
+    let identical = deterministic(&check.metrics) == deterministic(&baseline.metrics)
+        && check.items == baseline.items;
+    println!("conformance: optimized metrics identical to as-written run: {identical}");
+    if !identical {
+        eprintln!("error: optimization changed metrics");
+        return 1;
+    }
+    0
 }
 
 fn cmd_serve(args: &Args) -> i32 {
@@ -567,6 +680,19 @@ fn cmd_bench_serve(args: &Args) -> i32 {
         ]);
     }
     t.print();
+    // Per-cause shed attribution: every shed above is broken out by its
+    // wire-level ShedCause, cross-checked against the server's Goodbye.
+    for (tenant, l) in &report.per_tenant {
+        if l.shed == 0 {
+            continue;
+        }
+        let causes: Vec<String> = repro::net::ShedCause::ALL
+            .iter()
+            .filter(|c| l.shed_by_cause[c.index()] > 0)
+            .map(|c| format!("{c}: {}", l.shed_by_cause[c.index()]))
+            .collect();
+        println!("sheds for {tenant}: {}", causes.join(", "));
+    }
     print_net_report(&net);
     let qs = svc.queue_stats();
     for p in Priority::ALL {

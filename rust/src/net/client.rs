@@ -18,7 +18,7 @@
 //! renders the result in the `util/bench.rs` schema for
 //! `BENCH_serve.json`.
 
-use super::wire::{self, Frame, WireError, WirePayload, WireRequest};
+use super::wire::{self, Frame, ShedCause, WireError, WirePayload, WireRequest, SHED_CAUSE_COUNT};
 use crate::coordinator::telemetry::NetReport;
 use crate::service::Priority;
 use crate::util::json::Json;
@@ -81,7 +81,10 @@ impl ServeClient {
                 id,
                 pipeline: pipeline.to_string(),
                 priority,
-                deadline_ms: deadline.map_or(0, |d| d.as_millis() as u64),
+                // Shared codec helper: Some(Duration::ZERO) saturates
+                // to 1 ms instead of aliasing the "no deadline"
+                // sentinel (0).
+                deadline_ms: wire::encode_deadline_ms(deadline),
                 payload,
             }),
         )?;
@@ -147,13 +150,15 @@ impl ServeClient {
 
     /// Graceful close: send `Drain`, read out every remaining
     /// resolution, and return the `Goodbye` counters
-    /// `(completed, shed, failed)`.
-    pub fn drain(mut self) -> Result<(u64, u64, u64), WireError> {
+    /// `(completed, shed, failed, shed_by_cause)` — the last broken out
+    /// per [`ShedCause`] in `ShedCause::ALL` order.
+    #[allow(clippy::type_complexity)]
+    pub fn drain(mut self) -> Result<(u64, u64, u64, [u64; SHED_CAUSE_COUNT]), WireError> {
         wire::write_frame(&mut self.stream, &Frame::Drain)?;
         loop {
             match self.recv()? {
-                Frame::Goodbye { completed, shed, failed } => {
-                    return Ok((completed, shed, failed))
+                Frame::Goodbye { completed, shed, failed, shed_by_cause } => {
+                    return Ok((completed, shed, failed, shed_by_cause))
                 }
                 Frame::Completed(_) | Frame::Shed { .. } | Frame::Failed { .. }
                 | Frame::Stats(_) => continue,
@@ -185,15 +190,20 @@ pub struct TenantLoad {
     pub requests: u64,
     pub completed: u64,
     pub shed: u64,
+    /// Sheds broken out per [`ShedCause`] (in `ShedCause::ALL` order);
+    /// always sums to `shed`.
+    pub shed_by_cause: [u64; SHED_CAUSE_COUNT],
     pub failed: u64,
     /// Client-observed latency of each COMPLETED request, milliseconds.
     pub latencies_ms: Vec<f64>,
 }
 
 impl TenantLoad {
-    /// Every issued request resolved exactly once.
+    /// Every issued request resolved exactly once, and the per-cause
+    /// shed breakdown accounts for every shed.
     pub fn balances(&self) -> bool {
         self.requests == self.completed + self.shed + self.failed
+            && self.shed_by_cause.iter().sum::<u64>() == self.shed
     }
 
     /// Fraction of issued requests the serving edge shed.
@@ -261,6 +271,14 @@ impl LoadReport {
             entry.insert("shed".to_string(), Json::Num(t.shed as f64));
             entry.insert("failed".to_string(), Json::Num(t.failed as f64));
             entry.insert("shed_fraction".to_string(), Json::Num(t.shed_fraction()));
+            let mut by_cause = BTreeMap::new();
+            for cause in ShedCause::ALL {
+                by_cause.insert(
+                    cause.label().to_string(),
+                    Json::Num(t.shed_by_cause[cause.index()] as f64),
+                );
+            }
+            entry.insert("shed_by_cause".to_string(), Json::Obj(by_cause));
             let mut modes = BTreeMap::new();
             modes.insert("serve".to_string(), Json::Obj(entry));
             let mut p = BTreeMap::new();
@@ -311,7 +329,10 @@ pub fn run_load(addr: SocketAddr, spec: &LoadSpec) -> anyhow::Result<LoadReport>
                         load.completed += 1;
                         load.latencies_ms.push(t0.elapsed().as_secs_f64() * 1e3);
                     }
-                    Frame::Shed { .. } => load.shed += 1,
+                    Frame::Shed { cause, .. } => {
+                        load.shed += 1;
+                        load.shed_by_cause[cause.index()] += 1;
+                    }
                     Frame::Failed { .. } => load.failed += 1,
                     other => anyhow::bail!("unexpected resolution frame {}", other.kind()),
                 }
@@ -319,12 +340,18 @@ pub fn run_load(addr: SocketAddr, spec: &LoadSpec) -> anyhow::Result<LoadReport>
             // Churn: every connection drains gracefully. The Goodbye
             // ledger must agree with what this thread observed.
             for (tenant, conn) in conns {
-                let (completed, shed, failed) = conn.drain()?;
+                let (completed, shed, failed, by_cause) = conn.drain()?;
                 let load = loads.entry(tenant.clone()).or_default();
                 anyhow::ensure!(
                     (completed, shed, failed)
                         == (load.completed, load.shed, load.failed),
                     "goodbye ledger for {tenant} diverged from client counts"
+                );
+                anyhow::ensure!(
+                    by_cause == load.shed_by_cause,
+                    "goodbye per-cause sheds for {tenant} diverged: \
+                     server {by_cause:?} vs client {:?}",
+                    load.shed_by_cause
                 );
             }
             Ok(loads)
@@ -340,6 +367,9 @@ pub fn run_load(addr: SocketAddr, spec: &LoadSpec) -> anyhow::Result<LoadReport>
                     t.requests += load.requests;
                     t.completed += load.completed;
                     t.shed += load.shed;
+                    for (slot, n) in t.shed_by_cause.iter_mut().zip(load.shed_by_cause) {
+                        *slot += n;
+                    }
                     t.failed += load.failed;
                     t.latencies_ms.extend(load.latencies_ms);
                 }
@@ -375,6 +405,12 @@ mod tests {
                 requests: 10,
                 completed: 8,
                 shed: 2,
+                shed_by_cause: {
+                    let mut c = [0u64; SHED_CAUSE_COUNT];
+                    c[ShedCause::DeadlineExpired.index()] = 1;
+                    c[ShedCause::TenantLaneFull.index()] = 1;
+                    c
+                },
                 failed: 0,
                 latencies_ms: vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0],
             },
@@ -391,6 +427,15 @@ mod tests {
         assert_eq!(entry.get("items").and_then(Json::as_f64), Some(8.0));
         assert_eq!(entry.get("items_per_s").and_then(Json::as_f64), Some(16.0));
         assert_eq!(entry.get("shed_fraction").and_then(Json::as_f64), Some(0.2));
+        let by_cause = entry.get("shed_by_cause").expect("per-cause shed breakdown");
+        for cause in ShedCause::ALL {
+            assert!(
+                by_cause.get(cause.label()).and_then(Json::as_f64).is_some(),
+                "missing shed_by_cause.{cause}"
+            );
+        }
+        assert_eq!(by_cause.get("deadline_expired").and_then(Json::as_f64), Some(1.0));
+        assert_eq!(by_cause.get("queue_full").and_then(Json::as_f64), Some(0.0));
         assert!(entry.get("p50_ms").and_then(Json::as_f64).is_some());
         // Round trip through the parser like validate_bench does.
         let parsed = Json::parse(&doc.to_string_compact()).unwrap();
@@ -399,11 +444,22 @@ mod tests {
 
     #[test]
     fn tenant_load_ledger_math() {
-        let t = TenantLoad { requests: 4, completed: 2, shed: 1, failed: 1, ..Default::default() };
+        let t = TenantLoad {
+            requests: 4,
+            completed: 2,
+            shed: 1,
+            shed_by_cause: [1, 0, 0, 0],
+            failed: 1,
+            ..Default::default()
+        };
         assert!(t.balances());
         assert_eq!(t.shed_fraction(), 0.25);
         let unresolved = TenantLoad { requests: 4, completed: 2, ..Default::default() };
         assert!(!unresolved.balances());
+        // A shed without a cause attribution does not balance either.
+        let unattributed =
+            TenantLoad { requests: 1, shed: 1, ..Default::default() };
+        assert!(!unattributed.balances());
         assert_eq!(TenantLoad::default().shed_fraction(), 0.0);
     }
 }

@@ -30,7 +30,9 @@
 //! from the [`NetReport`] ledger (`accepted == drained`, and per
 //! tenant `admitted == completed + shed + failed`), never wall-clock.
 
-use super::wire::{self, Frame, ShedCause, WireCompletion, WireError, WireRequest};
+use super::wire::{
+    self, Frame, ShedCause, WireCompletion, WireError, WireRequest, SHED_CAUSE_COUNT,
+};
 use crate::coordinator::telemetry::{NetLedger, NetReport};
 use crate::service::{PipelineService, Request, Response, Ticket};
 use std::collections::{BTreeMap, VecDeque};
@@ -191,6 +193,10 @@ struct Conn {
     writable: bool,
     completed: u64,
     shed: u64,
+    /// Sheds broken out per [`ShedCause`] (in `ShedCause::ALL` order);
+    /// sums to `shed` and rides the `Goodbye` so clients can attribute
+    /// every shed without parsing individual frames.
+    shed_by_cause: [u64; SHED_CAUSE_COUNT],
     failed: u64,
 }
 
@@ -220,12 +226,21 @@ fn handle_conn(stream: TcpStream, inner: &Arc<Inner>) {
         writable: true,
         completed: 0,
         shed: 0,
+        shed_by_cause: [0; SHED_CAUSE_COUNT],
         failed: 0,
     };
     loop {
         if inner.draining.load(Ordering::SeqCst) {
             // Drained before the handshake finished: nothing in flight.
-            conn.send(inner, &Frame::Goodbye { completed: 0, shed: 0, failed: 0 });
+            conn.send(
+                inner,
+                &Frame::Goodbye {
+                    completed: 0,
+                    shed: 0,
+                    failed: 0,
+                    shed_by_cause: [0; SHED_CAUSE_COUNT],
+                },
+            );
             return;
         }
         match wire::read_frame(&mut conn.stream) {
@@ -316,6 +331,7 @@ fn handle_request(conn: &mut Conn, inner: &Arc<Inner>, req: WireRequest) {
     if !lane_open {
         inner.ledger.tenant_shed(&tenant);
         conn.shed += 1;
+        conn.shed_by_cause[ShedCause::TenantLaneFull.index()] += 1;
         conn.send(
             inner,
             &Frame::Shed { id, pipeline, priority, cause: ShedCause::TenantLaneFull, waited_us: 0 },
@@ -326,7 +342,7 @@ fn handle_request(conn: &mut Conn, inner: &Arc<Inner>, req: WireRequest) {
         pipeline: pipeline.clone(),
         payload: payload.into_workload(),
         priority,
-        deadline: (deadline_ms > 0).then(|| Duration::from_millis(deadline_ms)),
+        deadline: wire::decode_deadline_ms(deadline_ms),
     };
     match inner.service.submit(request) {
         Ok(ticket) => conn.pending.push_back(Pending { id, tenant, ticket }),
@@ -365,14 +381,10 @@ fn resolve(conn: &mut Conn, inner: &Inner, id: u64, tenant: &str, resp: Response
         }
         Response::Shed { pipeline, priority, reason, waited } => {
             inner.ledger.tenant_shed(tenant);
+            let cause: ShedCause = reason.into();
             conn.shed += 1;
-            Frame::Shed {
-                id,
-                pipeline,
-                priority,
-                cause: reason.into(),
-                waited_us: waited.as_micros() as u64,
-            }
+            conn.shed_by_cause[cause.index()] += 1;
+            Frame::Shed { id, pipeline, priority, cause, waited_us: waited.as_micros() as u64 }
         }
         Response::Failed { pipeline, error } => {
             inner.ledger.tenant_failed(tenant);
@@ -407,8 +419,12 @@ fn finish(conn: &mut Conn, inner: &Inner) {
         let resp = p.ticket.wait();
         resolve(conn, inner, p.id, &p.tenant, resp);
     }
-    let goodbye =
-        Frame::Goodbye { completed: conn.completed, shed: conn.shed, failed: conn.failed };
+    let goodbye = Frame::Goodbye {
+        completed: conn.completed,
+        shed: conn.shed,
+        failed: conn.failed,
+        shed_by_cause: conn.shed_by_cause,
+    };
     conn.send(inner, &goodbye);
 }
 
@@ -500,8 +516,9 @@ mod tests {
         // Client-initiated drain: Goodbye carries the outcome counters.
         wire::write_frame(&mut c, &Frame::Drain).unwrap();
         match wire::read_frame(&mut c).unwrap().unwrap() {
-            Frame::Goodbye { completed, shed, failed } => {
+            Frame::Goodbye { completed, shed, failed, shed_by_cause } => {
                 assert_eq!((completed, shed, failed), (1, 0, 0));
+                assert_eq!(shed_by_cause, [0; SHED_CAUSE_COUNT]);
             }
             other => panic!("expected Goodbye, got {}", other.kind()),
         }

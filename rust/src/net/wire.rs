@@ -136,14 +136,24 @@ pub enum ShedCause {
     Draining,
 }
 
+/// Number of distinct [`ShedCause`]s — the length of the per-cause
+/// count arrays carried on the wire, indexed in [`ShedCause::ALL`]
+/// (wire-tag) order.
+pub const SHED_CAUSE_COUNT: usize = 4;
+
 impl ShedCause {
     /// All causes, in wire-tag order.
-    pub const ALL: [ShedCause; 4] = [
+    pub const ALL: [ShedCause; SHED_CAUSE_COUNT] = [
         ShedCause::QueueFull,
         ShedCause::DeadlineExpired,
         ShedCause::TenantLaneFull,
         ShedCause::Draining,
     ];
+
+    /// Index into per-cause count arrays (same order as [`Self::ALL`]).
+    pub fn index(self) -> usize {
+        self as usize
+    }
 
     /// Label used in reports and the CLI.
     pub fn label(self) -> &'static str {
@@ -244,9 +254,30 @@ pub struct WireRequest {
     pub id: u64,
     pub pipeline: String,
     pub priority: Priority,
-    /// Queue-wait deadline in milliseconds; 0 = none.
+    /// Queue-wait deadline in milliseconds; 0 = none. Always produce
+    /// this field through [`encode_deadline_ms`] — a present-but-zero
+    /// deadline must never alias the "no deadline" sentinel.
     pub deadline_ms: u64,
     pub payload: WirePayload,
+}
+
+/// Encode an optional queue-wait deadline into the v1 `deadline_ms`
+/// field, where `0` is the "no deadline" sentinel. A present deadline
+/// saturates to at least 1 ms: `Some(Duration::ZERO)` (an
+/// already-expired deadline) must cross the wire as the tightest
+/// representable deadline, not silently become "wait forever".
+pub fn encode_deadline_ms(deadline: Option<std::time::Duration>) -> u64 {
+    match deadline {
+        None => 0,
+        Some(d) => (d.as_millis() as u64).max(1),
+    }
+}
+
+/// Decode the v1 `deadline_ms` field back into an optional deadline
+/// (`0` = none). Inverse of [`encode_deadline_ms`] up to its 1 ms
+/// saturation of sub-millisecond deadlines.
+pub fn decode_deadline_ms(deadline_ms: u64) -> Option<std::time::Duration> {
+    (deadline_ms > 0).then(|| std::time::Duration::from_millis(deadline_ms))
 }
 
 /// A completed request's resolution: the typed output summary, the full
@@ -289,8 +320,9 @@ pub enum Frame {
     /// flush in-flight work and say goodbye.
     Drain,
     /// Server → client: drain complete; the connection's resolution
-    /// counters, then the stream closes.
-    Goodbye { completed: u64, shed: u64, failed: u64 },
+    /// counters (with sheds broken out per [`ShedCause`], indexed in
+    /// [`ShedCause::ALL`] order), then the stream closes.
+    Goodbye { completed: u64, shed: u64, failed: u64, shed_by_cause: [u64; SHED_CAUSE_COUNT] },
     /// Client → server: ask for the serving ledger.
     StatsReq,
     /// Server → client: the ledger snapshot.
@@ -436,10 +468,13 @@ fn encode_body(frame: &Frame) -> Vec<u8> {
             put_str(&mut b, error);
         }
         Frame::Drain | Frame::StatsReq => {}
-        Frame::Goodbye { completed, shed, failed } => {
+        Frame::Goodbye { completed, shed, failed, shed_by_cause } => {
             put_u64(&mut b, *completed);
             put_u64(&mut b, *shed);
             put_u64(&mut b, *failed);
+            for &n in shed_by_cause {
+                put_u64(&mut b, n);
+            }
         }
         Frame::Stats(report) => {
             put_u64(&mut b, report.accepted as u64);
@@ -610,11 +645,16 @@ fn decode_body(tag: u8, body: &[u8]) -> Result<Frame, WireError> {
             error: c.str("failed error")?,
         },
         0x07 => Frame::Drain,
-        0x08 => Frame::Goodbye {
-            completed: c.u64("goodbye completed")?,
-            shed: c.u64("goodbye shed")?,
-            failed: c.u64("goodbye failed")?,
-        },
+        0x08 => {
+            let completed = c.u64("goodbye completed")?;
+            let shed = c.u64("goodbye shed")?;
+            let failed = c.u64("goodbye failed")?;
+            let mut shed_by_cause = [0u64; SHED_CAUSE_COUNT];
+            for slot in &mut shed_by_cause {
+                *slot = c.u64("goodbye shed cause count")?;
+            }
+            Frame::Goodbye { completed, shed, failed, shed_by_cause }
+        }
         0x09 => Frame::StatsReq,
         0x0A => {
             let accepted = c.u64("stats accepted")? as usize;
@@ -818,7 +858,7 @@ mod tests {
             },
             Frame::Failed { id: 13, pipeline: "nope".into(), error: "unknown pipeline".into() },
             Frame::Drain,
-            Frame::Goodbye { completed: 9, shed: 2, failed: 0 },
+            Frame::Goodbye { completed: 9, shed: 2, failed: 0, shed_by_cause: [1, 1, 0, 0] },
             Frame::StatsReq,
             Frame::Stats(NetReport {
                 accepted: 3,
@@ -1037,11 +1077,20 @@ mod tests {
                 error: rand_str(rng),
             },
             6 => Frame::Drain,
-            7 => Frame::Goodbye {
-                completed: rng.below(100) as u64,
-                shed: rng.below(100) as u64,
-                failed: rng.below(100) as u64,
-            },
+            7 => {
+                let shed_by_cause = [
+                    rng.below(25) as u64,
+                    rng.below(25) as u64,
+                    rng.below(25) as u64,
+                    rng.below(25) as u64,
+                ];
+                Frame::Goodbye {
+                    completed: rng.below(100) as u64,
+                    shed: shed_by_cause.iter().sum(),
+                    failed: rng.below(100) as u64,
+                    shed_by_cause,
+                }
+            }
             8 => Frame::StatsReq,
             _ => Frame::Stats(NetReport {
                 accepted: rng.below(10),
@@ -1086,6 +1135,60 @@ mod tests {
                 assert_eq!(&got, f, "seed {seed} frame {i}");
             }
             assert!(read_frame(&mut reader).unwrap().is_none(), "seed {seed}: clean EOF");
+        }
+    }
+
+    #[test]
+    fn zero_duration_deadline_never_aliases_the_none_sentinel() {
+        use std::time::Duration;
+        // The sentinel itself.
+        assert_eq!(encode_deadline_ms(None), 0);
+        assert_eq!(decode_deadline_ms(0), None);
+        // Some(Duration::ZERO) is an already-expired deadline, NOT "no
+        // deadline": it must saturate to the tightest encodable value.
+        let ms = encode_deadline_ms(Some(Duration::ZERO));
+        assert_eq!(ms, 1);
+        assert_eq!(decode_deadline_ms(ms), Some(Duration::from_millis(1)));
+        // Sub-millisecond deadlines saturate the same way.
+        assert_eq!(encode_deadline_ms(Some(Duration::from_micros(250))), 1);
+        // Millisecond-resolution deadlines round trip exactly.
+        for ms_in in [1u64, 9, 250, 10_000] {
+            let enc = encode_deadline_ms(Some(Duration::from_millis(ms_in)));
+            assert_eq!(enc, ms_in);
+            assert_eq!(decode_deadline_ms(enc), Some(Duration::from_millis(ms_in)));
+        }
+        // And end-to-end through a Request frame codec round trip.
+        let frame = Frame::Request(WireRequest {
+            id: 1,
+            pipeline: "census".into(),
+            priority: Priority::Normal,
+            deadline_ms: encode_deadline_ms(Some(Duration::ZERO)),
+            payload: WirePayload::Synthetic,
+        });
+        match decode(&encode(&frame)).unwrap() {
+            Frame::Request(r) => {
+                assert_eq!(decode_deadline_ms(r.deadline_ms), Some(Duration::from_millis(1)));
+            }
+            other => panic!("expected Request, got {}", other.kind()),
+        }
+    }
+
+    #[test]
+    fn goodbye_carries_per_cause_shed_counts() {
+        let frame = Frame::Goodbye {
+            completed: 7,
+            shed: 3,
+            failed: 1,
+            shed_by_cause: [0, 2, 1, 0],
+        };
+        match decode(&encode(&frame)).unwrap() {
+            Frame::Goodbye { completed, shed, failed, shed_by_cause } => {
+                assert_eq!((completed, shed, failed), (7, 3, 1));
+                assert_eq!(shed_by_cause[ShedCause::DeadlineExpired.index()], 2);
+                assert_eq!(shed_by_cause[ShedCause::TenantLaneFull.index()], 1);
+                assert_eq!(shed_by_cause.iter().sum::<u64>(), shed);
+            }
+            other => panic!("expected Goodbye, got {}", other.kind()),
         }
     }
 

@@ -54,7 +54,7 @@ pub use workload::{Output, Workload};
 pub(crate) use workload::workload_mismatch;
 
 use crate::coordinator::plan::{CompiledPlan, Sharder, Slicing};
-use crate::coordinator::telemetry::{BatchReport, Report, SchedReport, ShardedReport};
+use crate::coordinator::telemetry::{BatchReport, OptReport, Report, SchedReport, ShardedReport};
 use crate::coordinator::{exec, ExecMode, ExecOutcome, Plan};
 use crate::runtime::ModelClient;
 use crate::OptLevel;
@@ -177,6 +177,11 @@ pub struct PipelineResult {
     ///
     /// [`ColumnBatch`]: crate::dataframe::ColumnBatch
     pub batching: Option<BatchReport>,
+    /// What the plan optimizer did to the compiled graph this run
+    /// executed (`None` when the graph ran exactly as written). Kept
+    /// out of `metrics`: optimized and unoptimized runs must produce
+    /// bit-identical metric maps (the conformance contract).
+    pub opt: Option<OptReport>,
 }
 
 impl PipelineResult {
@@ -366,6 +371,7 @@ pub fn run_compiled(
     if batch_delta.batches > 0 {
         result.batching = Some(batch_delta);
     }
+    result.opt = compiled.opt_report().cloned();
     Ok(result)
 }
 
@@ -406,6 +412,7 @@ pub(crate) fn finish_outcome(outcome: ExecOutcome) -> PipelineResult {
         sharding: outcome.sharding,
         sched: outcome.sched,
         batching: None,
+        opt: None,
     }
 }
 

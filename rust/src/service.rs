@@ -342,14 +342,18 @@ pub struct Session {
 }
 
 impl Session {
-    /// Open (and warm) one pipeline: model set warms and the stage
-    /// graph compiles here, once. Unknown names error with the list of
-    /// registered pipelines; missing artifacts error like the plan
-    /// builders do.
+    /// Open (and warm) one pipeline: model set warms, the stage graph
+    /// compiles, and the plan optimizer rewrites it here, once — every
+    /// request the session serves binds against the optimized graph
+    /// (fused adjacent maps, elided identities), with metrics pinned
+    /// identical to the unoptimized plan by the conformance matrix.
+    /// Unknown names error with the list of registered pipelines;
+    /// missing artifacts error like the plan builders do.
     pub fn open(name: &str, cfg: RunConfig) -> anyhow::Result<Session> {
         let entry = pipelines::find(name).ok_or_else(|| pipelines::unknown_pipeline(name))?;
         let client = (entry.warm)(&cfg)?;
-        let compiled = pipelines::compile_entry(entry, &cfg)?;
+        let mut compiled = pipelines::compile_entry(entry, &cfg)?;
+        crate::coordinator::optimizer::optimize(&mut compiled);
         Ok(Session { entry, cfg, client, compiled })
     }
 
@@ -378,6 +382,13 @@ impl Session {
     /// the zero-rebuild steady-state assertion, from counters.
     pub fn bind_report(&self) -> BindReport {
         self.compiled.bind_report()
+    }
+
+    /// What the plan optimizer did to this session's graph at open
+    /// (rules fired, stages fused/elided) — `None` never happens for
+    /// sessions, but the accessor mirrors the compiled plan's.
+    pub fn opt_report(&self) -> Option<&crate::coordinator::telemetry::OptReport> {
+        self.compiled.opt_report()
     }
 
     /// Synthesize this pipeline's deterministic payload once; callers

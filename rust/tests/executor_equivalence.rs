@@ -180,6 +180,107 @@ fn compiled_plan_conformance_matrix_and_reuse() {
     }
 }
 
+/// Bit-identical equality for same-mode optimized-vs-unoptimized pairs:
+/// unlike the cross-executor tolerance above, rewritten plans replay the
+/// exact same arithmetic in the exact same order, so every non-timing
+/// metric must match to the last bit (`f64::to_bits`), not within 1e-12.
+fn assert_bit_identical(
+    name: &str,
+    mode: ExecMode,
+    batch_rows: usize,
+    base: &PipelineResult,
+    opt: &PipelineResult,
+) {
+    assert_eq!(
+        base.items, opt.items,
+        "{name} items differ optimized vs not under {mode} (batch_rows={batch_rows})"
+    );
+    let keys: Vec<&String> = base.metrics.keys().collect();
+    let opt_keys: Vec<&String> = opt.metrics.keys().collect();
+    assert_eq!(
+        keys, opt_keys,
+        "{name} metric keys differ optimized vs not under {mode} (batch_rows={batch_rows})"
+    );
+    for (k, v) in &base.metrics {
+        if TIMING_METRICS.contains(&k.as_str()) {
+            continue;
+        }
+        let w = opt.metric(k).unwrap();
+        assert_eq!(
+            v.to_bits(),
+            w.to_bits(),
+            "{name}.{k} not bit-identical under {mode} (batch_rows={batch_rows}): {v} vs {w}"
+        );
+    }
+}
+
+#[test]
+fn optimized_plans_are_bit_identical_to_unoptimized_across_the_ladder() {
+    // The optimizer's acceptance matrix: for every runnable pipeline,
+    // the rewritten CompiledPlan answers BIT-identically to the
+    // untouched one under the entire executor ladder — Sequential /
+    // Streaming / MultiInstance(1) / Sharded(1..=4) / Async(1..=3) —
+    // on the per-item plane, and additionally on the batched plane
+    // (batch_rows = 64) for the tabular three. The OptReport must
+    // account for every removed stage, ride the optimized results (and
+    // only those), and prove at least one fusion fired on at least
+    // three pipelines.
+    use repro::coordinator::optimize;
+    let mut fused: Vec<String> = Vec::new();
+    for e in registry() {
+        if needs_artifacts(e.name) && !artifacts_ready() {
+            eprintln!("skipping {} (no artifacts)", e.name);
+            continue;
+        }
+        let planes: &[usize] =
+            if matches!(e.name, "census" | "plasticc" | "iiot") { &[0, 64] } else { &[0] };
+        for &batch_rows in planes {
+            let mut cfg = base_cfg();
+            cfg.batch_rows = batch_rows;
+            let baseline = compile_entry(e, &cfg).unwrap();
+            let mut optimized = compile_entry(e, &cfg).unwrap();
+            let report = optimize(&mut optimized);
+            assert_eq!(
+                report.stages_before,
+                report.stages_after + report.stages_removed(),
+                "{}: OptReport must account for every removed stage",
+                e.name
+            );
+            assert_eq!(optimized.opt_report(), Some(&report), "{}", e.name);
+            if batch_rows == 0 && report.fused > 0 {
+                fused.push(e.name.to_string());
+            }
+            let mut modes = vec![ExecMode::Sequential];
+            modes.extend(conformance_modes());
+            for mode in modes {
+                cfg.exec = mode;
+                let base =
+                    run_compiled(e, &baseline, repro::pipelines::Workload::Synthetic, &cfg)
+                        .unwrap_or_else(|err| panic!("{} baseline {mode}: {err:#}", e.name));
+                let opt =
+                    run_compiled(e, &optimized, repro::pipelines::Workload::Synthetic, &cfg)
+                        .unwrap_or_else(|err| panic!("{} optimized {mode}: {err:#}", e.name));
+                assert!(
+                    base.opt.is_none(),
+                    "{} {mode}: unoptimized runs must not carry an OptReport",
+                    e.name
+                );
+                assert_eq!(
+                    opt.opt.as_ref(),
+                    Some(&report),
+                    "{} {mode}: optimized runs carry the plan's OptReport",
+                    e.name
+                );
+                assert_bit_identical(e.name, mode, batch_rows, &base, &opt);
+            }
+        }
+    }
+    assert!(
+        fused.len() >= 3,
+        "fusion must fire on at least three pipelines, got {fused:?}"
+    );
+}
+
 #[test]
 fn sliced_sharding_matches_clone_based_sharding_for_every_pipeline() {
     // Payload-aware slicing (CompiledPlan::bind_shard over
