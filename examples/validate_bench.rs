@@ -9,8 +9,10 @@
 //! recorded mode entry carries finite `wall_s` / `items_per_s`
 //! numbers. Serving trajectories (`bench_serve`) must additionally
 //! break sheds out per wire-level `ShedCause` (`shed_by_cause` with
-//! all four cause labels, summing to `shed`). Exits non-zero with a
-//! message naming the first violation.
+//! every cause label, summing to `shed`) and carry a top-level `net`
+//! connection ledger whose counters balance (`accepted == drained +
+//! reaped_idle + reaped_handshake` after the bench's drain). Exits
+//! non-zero with a message naming the first violation.
 //!
 //! ```sh
 //! cargo run --release --example validate_bench
@@ -113,6 +115,34 @@ fn check(path: &str) -> Result<(), String> {
                     "{path}: census {required}: shed_by_cause sums to {total}, shed = {shed}"
                 ));
             }
+        }
+    }
+    // Serving trajectories carry the server-side connection ledger at
+    // the document root; a drained server's counters must balance.
+    if bench == "bench_serve" {
+        let net = doc.get("net").ok_or_else(|| format!("{path}: missing `net` ledger"))?;
+        let counter = |field: &str| -> Result<f64, String> {
+            let v = net.get(field).and_then(Json::as_f64).ok_or_else(|| {
+                format!("{path}: net ledger missing `{field}`")
+            })?;
+            if !v.is_finite() || v < 0.0 {
+                return Err(format!("{path}: net ledger: bad {field} = {v}"));
+            }
+            Ok(v)
+        };
+        let accepted = counter("accepted")?;
+        let drained = counter("drained")?;
+        let reaped_idle = counter("reaped_idle")?;
+        let reaped_handshake = counter("reaped_handshake")?;
+        counter("rejected")?;
+        counter("frames_in")?;
+        counter("frames_out")?;
+        if accepted != drained + reaped_idle + reaped_handshake {
+            return Err(format!(
+                "{path}: net ledger does not balance: accepted {accepted} != \
+                 drained {drained} + reaped {}",
+                reaped_idle + reaped_handshake
+            ));
         }
     }
     println!(

@@ -18,6 +18,8 @@
 
 use std::time::{Duration, Instant};
 
+use crate::util::stats::percentile_sorted;
+
 /// Result of one instance run.
 #[derive(Debug, Clone)]
 pub struct InstanceReport {
@@ -42,14 +44,6 @@ impl InstanceReport {
         sorted.sort_unstable();
         percentile_sorted(&sorted, q)
     }
-}
-
-fn percentile_sorted(sorted: &[Duration], q: f64) -> Option<Duration> {
-    if sorted.is_empty() {
-        return None;
-    }
-    let idx = ((sorted.len() - 1) as f64 * q.clamp(0.0, 1.0)).round() as usize;
-    Some(sorted[idx])
 }
 
 /// Aggregate over all instances.

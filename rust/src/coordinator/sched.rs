@@ -16,6 +16,10 @@
 //! where a single `PipelineService` worker multiplexes many requests.
 //! The stage mailboxes in [`super::exec`] all carry a [`Signal`], so at
 //! high fan-out blocked stages park instead of spinning the run queue.
+//! The TCP serving edge rides the same substrate: each accepted socket
+//! becomes a resumable connection task
+//! ([`PipelineServer`](crate::net::PipelineServer)) parked on its own
+//! [`Signal`], sharing this pool with the plan stages it submits.
 //!
 //! Two runners share the task contract:
 //!

@@ -113,16 +113,7 @@ pub struct Report {
     pub latencies: Vec<Duration>,
 }
 
-/// Nearest-rank percentile (`q` in 0..=1) over an already-sorted slice;
-/// `None` when empty. The one definition behind [`Report`] and
-/// [`ShardedReport`] percentiles.
-fn percentile_of_sorted(sorted: &[Duration], q: f64) -> Option<Duration> {
-    if sorted.is_empty() {
-        return None;
-    }
-    let idx = ((sorted.len() - 1) as f64 * q.clamp(0.0, 1.0)).round() as usize;
-    Some(sorted[idx])
-}
+use crate::util::stats::percentile_sorted;
 
 impl Report {
     /// Latency percentile (`q` in 0..=1) over the per-item samples;
@@ -130,7 +121,7 @@ impl Report {
     pub fn latency_percentile(&self, q: f64) -> Option<Duration> {
         let mut sorted = self.latencies.clone();
         sorted.sort_unstable();
-        percentile_of_sorted(&sorted, q)
+        percentile_sorted(&sorted, q)
     }
 
     /// Total busy time across stages.
@@ -559,6 +550,9 @@ impl TenantLedger {
 pub struct NetLedger {
     accepted: AtomicUsize,
     drained: AtomicUsize,
+    rejected: AtomicUsize,
+    reaped_idle: AtomicUsize,
+    reaped_handshake: AtomicUsize,
     frames_in: AtomicUsize,
     frames_out: AtomicUsize,
     tenants: Mutex<std::collections::BTreeMap<String, TenantLedger>>,
@@ -573,6 +567,24 @@ impl NetLedger {
     /// A handler finished: in-flight tickets flushed, stream closed.
     pub fn connection_drained(&self) {
         self.drained.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// The accept loop refused a connection at the `max_conns` ceiling
+    /// (answered with a `Shed(ServerFull)` frame, never accepted —
+    /// rejected connections do NOT count toward `accepted`).
+    pub fn connection_rejected(&self) {
+        self.rejected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// The idle reaper closed an accepted connection: `handshake` is
+    /// true when the peer never completed its `Hello`, false when an
+    /// established connection went idle with nothing in flight.
+    pub fn connection_reaped(&self, handshake: bool) {
+        if handshake {
+            self.reaped_handshake.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.reaped_idle.fetch_add(1, Ordering::Relaxed);
+        }
     }
 
     /// One frame read off a connection.
@@ -615,6 +627,9 @@ impl NetLedger {
         NetReport {
             accepted: self.accepted.load(Ordering::Relaxed),
             drained: self.drained.load(Ordering::Relaxed),
+            rejected: self.rejected.load(Ordering::Relaxed),
+            reaped_idle: self.reaped_idle.load(Ordering::Relaxed),
+            reaped_handshake: self.reaped_handshake.load(Ordering::Relaxed),
             frames_in: self.frames_in.load(Ordering::Relaxed),
             frames_out: self.frames_out.load(Ordering::Relaxed),
             tenants: self.tenants.lock().unwrap().clone(),
@@ -625,16 +640,25 @@ impl NetLedger {
 /// Snapshot of a [`NetLedger`]: the serving edge's connection, frame,
 /// and per-tenant request accounting. Like [`SchedReport`] and
 /// [`BatchReport`], this rides beside `ServiceStats` so network soak
-/// tests assert behavior from counters — `accepted == drained` after a
-/// drain, `admitted == completed + shed + failed` per tenant — never
-/// from timing.
+/// tests assert behavior from counters — `accepted == drained +
+/// reaped` after a drain, `admitted == completed + shed + failed` per
+/// tenant — never from timing.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct NetReport {
-    /// Connections handed to a handler by the accept loop.
+    /// Connections handed to a connection task by the accept loop.
     pub accepted: usize,
-    /// Connections whose handler flushed its in-flight tickets and
-    /// closed (client disconnect, client `Drain`, or server drain).
+    /// Connections whose task flushed its in-flight tickets and closed
+    /// (client disconnect, client `Drain`, or server drain).
     pub drained: usize,
+    /// Connections the accept loop refused at the `max_conns` ceiling
+    /// with a `Shed(ServerFull)` frame. Never counted in `accepted`.
+    pub rejected: usize,
+    /// Established connections the idle reaper closed: no frame
+    /// activity and nothing in flight for `idle_after` ticks.
+    pub reaped_idle: usize,
+    /// Connections reaped while still waiting for their `Hello` — the
+    /// never-completed handshakes that used to spin forever.
+    pub reaped_handshake: usize,
     /// Frames read across all connections.
     pub frames_in: usize,
     /// Frames written across all connections.
@@ -645,15 +669,24 @@ pub struct NetReport {
 }
 
 impl NetReport {
-    /// Connections currently being served.
-    pub fn active(&self) -> usize {
-        self.accepted.saturating_sub(self.drained)
+    /// Connections closed by the idle reaper, either side of the
+    /// handshake.
+    pub fn reaped(&self) -> usize {
+        self.reaped_idle + self.reaped_handshake
     }
 
-    /// The drained-server ledger: every accepted connection drained and
-    /// every tenant's requests resolved exactly once.
+    /// Connections currently being served.
+    pub fn active(&self) -> usize {
+        self.accepted.saturating_sub(self.drained).saturating_sub(self.reaped())
+    }
+
+    /// The drained-server ledger: every accepted connection either
+    /// drained or was reaped, and every tenant's requests resolved
+    /// exactly once. (`rejected` connections never enter `accepted`,
+    /// so they do not appear here.)
     pub fn balanced(&self) -> bool {
-        self.accepted == self.drained && self.tenants.values().all(TenantLedger::balances)
+        self.accepted == self.drained + self.reaped()
+            && self.tenants.values().all(TenantLedger::balances)
     }
 
     /// All tenants' counters merged.
@@ -765,13 +798,13 @@ impl ShardedReport {
     /// Latency percentile (`q` in 0..=1) over the pooled per-item
     /// samples; `None` when nothing completed.
     pub fn latency_percentile(&self, q: f64) -> Option<Duration> {
-        percentile_of_sorted(&self.pooled_latencies(), q)
+        percentile_sorted(&self.pooled_latencies(), q)
     }
 
     /// Several pooled percentiles from a single pool+sort.
     pub fn latency_percentiles(&self, qs: &[f64]) -> Vec<Option<Duration>> {
         let pooled = self.pooled_latencies();
-        qs.iter().map(|&q| percentile_of_sorted(&pooled, q)).collect()
+        qs.iter().map(|&q| percentile_sorted(&pooled, q)).collect()
     }
 
     /// Render a per-shard table (owned / completed / pass time).
@@ -1018,6 +1051,39 @@ mod tests {
         assert_eq!(total.failed, 1);
         assert!((done.tenants["a"].shed_fraction() - 1.0 / 3.0).abs() < 1e-12);
         assert_eq!(TenantLedger::default().shed_fraction(), 0.0);
+    }
+
+    #[test]
+    fn net_ledger_reaps_and_rejections_extend_the_balance() {
+        let ledger = NetLedger::default();
+        // Three accepted: one drains cleanly, one is reaped idle, one
+        // is reaped mid-handshake. Two more are rejected at the
+        // admission gate and never enter `accepted` at all.
+        for _ in 0..3 {
+            ledger.connection_accepted();
+        }
+        ledger.connection_rejected();
+        ledger.connection_rejected();
+        let mid = ledger.snapshot();
+        assert_eq!(mid.rejected, 2);
+        assert_eq!(mid.active(), 3);
+        assert!(!mid.balanced(), "three connections still open");
+        ledger.connection_drained();
+        ledger.connection_reaped(false);
+        ledger.connection_reaped(true);
+        let done = ledger.snapshot();
+        assert_eq!(done.accepted, 3);
+        assert_eq!(done.drained, 1);
+        assert_eq!(done.reaped_idle, 1);
+        assert_eq!(done.reaped_handshake, 1);
+        assert_eq!(done.reaped(), 2);
+        assert_eq!(done.active(), 0);
+        assert_eq!(done.accepted, done.drained + done.reaped());
+        assert!(done.balanced(), "{done:?}");
+        // A reap can never double as a drain: over-resolving trips the
+        // balance instead of silently passing.
+        ledger.connection_drained();
+        assert!(!ledger.snapshot().balanced());
     }
 
     #[test]

@@ -99,6 +99,10 @@ fn print_help() {
          \x20 --listen ADDR                     serve the soak over TCP at ADDR (the request\n\
          \x20                                   mix arrives through a loopback wire client;\n\
          \x20                                   --requests 0 keeps the server up until killed)\n\
+         \x20 --max-conns N                     live-connection ceiling; over-limit connects\n\
+         \x20                                   get a Shed(server_full) frame (default 1024)\n\
+         \x20 --idle-after T                    reap connections idle for T timer ticks, incl.\n\
+         \x20                                   never-finished handshakes (default 0 = off)\n\
          \n\
          OPTIONS (bench-serve):\n\
          \x20 --clients C                       closed-loop generator threads (default 2)\n\
@@ -106,6 +110,7 @@ fn print_help() {
          \x20 --mix name[:W],name[:W],…         tenant/pipeline mix (default census:2,iiot:1)\n\
          \x20 --depth D / --workers W           service provisioning (defaults 8 / 2)\n\
          \x20 --per-tenant D                    per-tenant in-flight lane depth (default 8)\n\
+         \x20 --max-conns N / --idle-after T    serving-edge limits (as for serve --listen)\n\
          \x20 --out PATH                        trajectory path (default BENCH_serve.json)\n"
     );
 }
@@ -360,7 +365,12 @@ fn cmd_serve(args: &Args) -> i32 {
         eprintln!("note: skipping {name} (no artifacts): {why}");
     }
     if let Some(listen) = args.get("listen") {
-        return cmd_serve_listen(Arc::new(svc), listen, &mix, requests);
+        let server_cfg = ServerConfig {
+            max_conns: args.get_parse("max-conns", ServerConfig::default().max_conns),
+            idle_after: args.get_parse("idle-after", 0usize),
+            ..Default::default()
+        };
+        return cmd_serve_listen(Arc::new(svc), listen, &mix, requests, server_cfg);
     }
     // Steady state begins here: sessions have compiled their graphs and
     // warmed their model sets at open. Any warm round-trip past this
@@ -508,9 +518,14 @@ fn cmd_serve(args: &Args) -> i32 {
 
 fn print_net_report(report: &repro::coordinator::telemetry::NetReport) {
     println!(
-        "connections: accepted {} drained {} active {}; frames {} in / {} out",
+        "connections: accepted {} drained {} reaped {} ({} idle, {} handshake) \
+         rejected {} active {}; frames {} in / {} out",
         report.accepted,
         report.drained,
+        report.reaped(),
+        report.reaped_idle,
+        report.reaped_handshake,
+        report.rejected,
         report.active(),
         report.frames_in,
         report.frames_out
@@ -538,9 +553,10 @@ fn cmd_serve_listen(
     listen: &str,
     mix: &[(String, usize)],
     requests: usize,
+    server_cfg: ServerConfig,
 ) -> i32 {
     let server =
-        match PipelineServer::start(Arc::clone(&svc), listen, ServerConfig::default()) {
+        match PipelineServer::start(Arc::clone(&svc), listen, server_cfg) {
             Ok(server) => server,
             Err(e) => {
                 eprintln!("error: {e:#}");
@@ -631,7 +647,12 @@ fn cmd_bench_serve(args: &Args) -> i32 {
     let server = match PipelineServer::start(
         Arc::clone(&svc),
         "127.0.0.1:0",
-        ServerConfig { per_tenant_depth: per_tenant, ..Default::default() },
+        ServerConfig {
+            per_tenant_depth: per_tenant,
+            max_conns: args.get_parse("max-conns", ServerConfig::default().max_conns),
+            idle_after: args.get_parse("idle-after", 0usize),
+            ..Default::default()
+        },
     ) {
         Ok(server) => server,
         Err(e) => {
@@ -706,11 +727,33 @@ fn cmd_bench_serve(args: &Args) -> i32 {
         eprintln!("error: serving ledger did not balance");
         return 1;
     }
-    match repro::util::bench::write_trajectory(
+    // Top-level `net` section: the server's connection ledger rides
+    // beside the per-tenant trajectories so validate_bench can gate the
+    // serving-edge balance (`accepted == drained + reaped`) from the
+    // persisted artifact, not just this process's stdout.
+    let net_section = {
+        use repro::util::json::Json;
+        let mut o = std::collections::BTreeMap::new();
+        o.insert("accepted".to_string(), Json::Num(net.accepted as f64));
+        o.insert("drained".to_string(), Json::Num(net.drained as f64));
+        o.insert("rejected".to_string(), Json::Num(net.rejected as f64));
+        o.insert("reaped_idle".to_string(), Json::Num(net.reaped_idle as f64));
+        o.insert(
+            "reaped_handshake".to_string(),
+            Json::Num(net.reaped_handshake as f64),
+        );
+        o.insert("frames_in".to_string(), Json::Num(net.frames_in as f64));
+        o.insert("frames_out".to_string(), Json::Num(net.frames_out as f64));
+        let mut extra = std::collections::BTreeMap::new();
+        extra.insert("net".to_string(), Json::Obj(o));
+        extra
+    };
+    match repro::util::bench::write_trajectory_with(
         out,
         "bench_serve",
         cfg.scale,
         report.trajectory_pipelines(),
+        net_section,
     ) {
         Ok(_) => {
             println!("wrote {out}");

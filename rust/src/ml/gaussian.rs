@@ -58,10 +58,8 @@ impl GaussianModel {
     /// Threshold at the `q`-quantile of training scores: scores above are
     /// anomalies.
     pub fn threshold(&self, train: &Matrix, q: f64) -> f64 {
-        let mut s = self.score(train);
-        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let i = ((s.len() as f64 - 1.0) * q.clamp(0.0, 1.0)).round() as usize;
-        s[i]
+        crate::util::stats::percentile_f64(&self.score(train), q)
+            .expect("threshold requires a non-empty training set")
     }
 }
 

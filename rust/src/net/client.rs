@@ -19,7 +19,7 @@
 //! `BENCH_serve.json`.
 
 use super::wire::{self, Frame, ShedCause, WireError, WirePayload, WireRequest, SHED_CAUSE_COUNT};
-use crate::coordinator::telemetry::NetReport;
+use crate::coordinator::telemetry::{NetReport, TenantLedger};
 use crate::service::Priority;
 use crate::util::json::Json;
 use std::collections::BTreeMap;
@@ -44,6 +44,10 @@ impl ServeClient {
         wire::write_frame(&mut stream, &Frame::Hello { tenant: tenant.to_string() })?;
         let pipelines = match wire::read_frame(&mut stream)? {
             Some(Frame::HelloAck { pipelines }) => pipelines,
+            // The admission gate answers over-limit connections with a
+            // first-class Shed(ServerFull) instead of a silent close —
+            // surface it as a typed, retryable rejection.
+            Some(Frame::Shed { cause, .. }) => return Err(WireError::Rejected(cause)),
             Some(other) => {
                 return Err(WireError::Malformed(format!(
                     "expected hello_ack, got {}",
@@ -119,7 +123,7 @@ impl ServeClient {
                 // Stale frames from earlier fire-and-forget sends (or a
                 // stats reply) are skipped; anything else is protocol.
                 Frame::Completed(_) | Frame::Shed { .. } | Frame::Failed { .. }
-                | Frame::Stats(_) => continue,
+                | Frame::Stats(_) | Frame::TenantStats { .. } => continue,
                 other => {
                     return Err(WireError::Malformed(format!(
                         "unexpected {} while awaiting request {id}",
@@ -137,10 +141,40 @@ impl ServeClient {
             match self.recv()? {
                 Frame::Stats(report) => return Ok(report),
                 // In-flight resolutions may interleave before the reply.
-                Frame::Completed(_) | Frame::Shed { .. } | Frame::Failed { .. } => continue,
+                Frame::Completed(_) | Frame::Shed { .. } | Frame::Failed { .. }
+                | Frame::TenantStats { .. } => continue,
                 other => {
                     return Err(WireError::Malformed(format!(
                         "unexpected {} while awaiting stats",
+                        other.kind()
+                    )))
+                }
+            }
+        }
+    }
+
+    /// Fetch THIS tenant's server-side ledger — the scoped counterpart
+    /// of [`Self::stats`]: a tenant polls its own admission/outcome
+    /// counters without seeing the whole fleet's report.
+    pub fn tenant_stats(&mut self) -> Result<TenantLedger, WireError> {
+        wire::write_frame(&mut self.stream, &Frame::TenantStatsReq)?;
+        loop {
+            match self.recv()? {
+                Frame::TenantStats { tenant, ledger } => {
+                    if tenant != self.tenant {
+                        return Err(WireError::Malformed(format!(
+                            "tenant_stats for {tenant} on a {} connection",
+                            self.tenant
+                        )));
+                    }
+                    return Ok(ledger);
+                }
+                // In-flight resolutions may interleave before the reply.
+                Frame::Completed(_) | Frame::Shed { .. } | Frame::Failed { .. }
+                | Frame::Stats(_) => continue,
+                other => {
+                    return Err(WireError::Malformed(format!(
+                        "unexpected {} while awaiting tenant stats",
                         other.kind()
                     )))
                 }
@@ -161,7 +195,7 @@ impl ServeClient {
                     return Ok((completed, shed, failed, shed_by_cause))
                 }
                 Frame::Completed(_) | Frame::Shed { .. } | Frame::Failed { .. }
-                | Frame::Stats(_) => continue,
+                | Frame::Stats(_) | Frame::TenantStats { .. } => continue,
                 other => {
                     return Err(WireError::Malformed(format!(
                         "unexpected {} while draining",
@@ -224,15 +258,12 @@ pub struct LoadReport {
 }
 
 /// Latency percentile over an unsorted sample set (same nearest-rank
-/// convention as the telemetry reports); `None` on no samples.
+/// convention as the telemetry reports); `None` on no samples. Delegates
+/// to the crate-wide [`crate::util::stats`] helper, which orders with
+/// `f64::total_cmp` — a NaN latency sample degrades deterministically
+/// instead of panicking the load generator.
 pub fn percentile_ms(samples: &[f64], q: f64) -> Option<f64> {
-    if samples.is_empty() {
-        return None;
-    }
-    let mut sorted = samples.to_vec();
-    sorted.sort_by(|a, b| a.partial_cmp(b).expect("finite latencies"));
-    let idx = ((sorted.len() - 1) as f64 * q).round() as usize;
-    Some(sorted[idx.min(sorted.len() - 1)])
+    crate::util::stats::percentile_f64(samples, q)
 }
 
 impl LoadReport {
@@ -448,7 +479,7 @@ mod tests {
             requests: 4,
             completed: 2,
             shed: 1,
-            shed_by_cause: [1, 0, 0, 0],
+            shed_by_cause: [1, 0, 0, 0, 0],
             failed: 1,
             ..Default::default()
         };

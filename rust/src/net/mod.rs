@@ -5,10 +5,12 @@
 //!
 //! * [`wire`] — the versioned length-prefixed binary protocol. Pure
 //!   encode/decode over typed frames; no sockets required to test it.
-//! * [`server`] — [`PipelineServer`]: accept loop, per-connection
-//!   handler threads, per-tenant admission lanes, write backpressure,
-//!   graceful drain. Ledgered end to end in
-//!   [`NetReport`](crate::coordinator::telemetry::NetReport).
+//! * [`server`] — [`PipelineServer`]: accept loop, resumable
+//!   per-connection tasks multiplexed on a shared scheduler pool (no
+//!   thread per connection), connection limits with first-class
+//!   `Shed(ServerFull)` refusals, an idle-connection reaper, per-tenant
+//!   admission lanes, write backpressure, graceful drain. Ledgered end
+//!   to end in [`NetReport`](crate::coordinator::telemetry::NetReport).
 //! * [`client`] — [`ServeClient`] and the closed-loop load generator
 //!   behind `repro bench-serve`.
 

@@ -1,13 +1,31 @@
 //! `PipelineServer` — the TCP serving edge over a
 //! [`PipelineService`].
 //!
-//! One accept loop, one handler thread per connection, all speaking the
-//! [`wire`](super::wire) protocol. The handler is a poll loop (short
-//! read timeouts, never busy): it multiplexes many in-flight
-//! [`Ticket`]s per connection via the non-consuming
-//! [`Ticket::is_done`], so a connection can hold a pipeline's worth of
-//! requests outstanding while responses stream back in completion
-//! order, correlated by request id.
+//! One accept loop, one **resumable connection task per connection**,
+//! all speaking the [`wire`](super::wire) protocol. Connection tasks
+//! are multiplexed on a cooperative [`Scheduler`] pool — the service's
+//! own `ExecMode::Async` pool when it has one, so sockets and plan
+//! stages share one set of workers; otherwise a small pool owned by
+//! the server ([`ServerConfig::net_workers`]). A connection with
+//! nothing to do parks on its per-connection [`Signal`]
+//! ([`Poll::Park`]) instead of burning a thread in a read-timeout
+//! loop: ticket resolutions notify the signal directly
+//! ([`PipelineService::submit_with_notify`]), and one timer thread
+//! ticks every [`ServerConfig::poll_interval`] to wake parked tasks
+//! for socket reads, drain checks, and the idle reaper.
+//!
+//! **Admission gate.** At [`ServerConfig::max_conns`] live
+//! connections, further accepts are answered with a first-class
+//! `Shed(ServerFull)` frame and closed — never a silent RST — and
+//! counted in [`NetReport::rejected`] (never in `accepted`).
+//!
+//! **Idle reaper.** With [`ServerConfig::idle_after`] > 0, a
+//! connection with no frame activity and nothing in flight for that
+//! many timer ticks is closed with a `Goodbye` and counted in
+//! [`NetReport::reaped_idle`] — or [`NetReport::reaped_handshake`]
+//! when the peer never completed its `Hello` (those used to spin
+//! forever). The drained-server invariant becomes
+//! `accepted == drained + reaped`.
 //!
 //! **Per-tenant lanes.** Every connection declares a tenant id in its
 //! `Hello`. The server holds one in-flight counter per tenant (shared
@@ -15,29 +33,33 @@
 //! [`ServerConfig::per_tenant_depth`] gets an immediate first-class
 //! [`Frame::Shed`] (`TenantLaneFull`) for further requests — one
 //! noisy tenant saturates its own lane, not the shared admission
-//! queue, and never costs anyone a connection.
+//! queue, and never costs anyone a connection. A lane entry is
+//! removed the moment its in-flight count returns to zero, so a churn
+//! of one-shot tenants cannot grow the map forever.
 //!
 //! **Backpressure.** A connection may hold at most
 //! [`ServerConfig::conn_inflight`] unresolved tickets. Past that, the
-//! handler parks on the OLDEST ticket and writes its response before
-//! reading another request — a slow reader stalls its own socket
-//! (bounded memory), it does not balloon the pending set.
+//! task stops reading requests and parks until a ticket resolves — a
+//! slow pipeline stalls its own connection (bounded memory), it does
+//! not balloon the pending set. Writes are buffered per connection
+//! and flushed as the nonblocking socket accepts them, so a slow
+//! reader never wedges a pool worker.
 //!
 //! **Graceful drain.** [`PipelineServer::drain`] stops the accept
-//! loop, then every handler flushes its in-flight tickets, writes each
-//! response, and closes with a `Goodbye` carrying the connection's
-//! outcome counters — zero lost responses, which the soak tests pin
-//! from the [`NetReport`] ledger (`accepted == drained`, and per
-//! tenant `admitted == completed + shed + failed`), never wall-clock.
+//! loop, then every connection task flushes its in-flight tickets,
+//! writes each response, and closes with a `Goodbye` carrying the
+//! connection's outcome counters — zero lost responses, which the
+//! soak tests pin from the [`NetReport`] ledger (`accepted ==
+//! drained + reaped`, and per tenant `admitted == completed + shed +
+//! failed`), never wall-clock.
 
-use super::wire::{
-    self, Frame, ShedCause, WireCompletion, WireError, WireRequest, SHED_CAUSE_COUNT,
-};
-use crate::coordinator::telemetry::{NetLedger, NetReport};
-use crate::service::{PipelineService, Request, Response, Ticket};
+use super::wire::{self, Frame, ShedCause, WireCompletion, WireRequest, SHED_CAUSE_COUNT};
+use crate::coordinator::sched::{Poll, Scheduler, Signal, WaitGroup};
+use crate::coordinator::telemetry::{NetLedger, NetReport, SchedReport};
+use crate::service::{PipelineService, Priority, Request, Response, Ticket};
 use std::collections::{BTreeMap, VecDeque};
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Duration;
@@ -49,13 +71,25 @@ pub struct ServerConfig {
     /// all of that tenant's connections; further requests shed with
     /// [`ShedCause::TenantLaneFull`].
     pub per_tenant_depth: usize,
-    /// Max unresolved tickets per connection before the handler parks
-    /// on the oldest one (write backpressure for slow readers).
+    /// Max unresolved tickets per connection before the task stops
+    /// reading requests (backpressure for slow pipelines).
     pub conn_inflight: usize,
-    /// Handler read timeout — the poll cadence at which handlers notice
-    /// resolved tickets and the drain flag. Liveness only: no
-    /// correctness property depends on this value.
+    /// Timer-tick cadence: how often parked connection tasks are woken
+    /// to poll their sockets, notice the drain flag, and advance the
+    /// idle clock. Liveness only: no correctness property depends on
+    /// this value.
     pub poll_interval: Duration,
+    /// Ceiling on live connections. At the ceiling, an accepted socket
+    /// is answered with a `Shed(ServerFull)` frame and closed
+    /// (counted in [`NetReport::rejected`], never `accepted`).
+    pub max_conns: usize,
+    /// Idle reaper threshold, in timer ticks: a connection with no
+    /// frame activity and nothing in flight for this many ticks is
+    /// closed and counted as reaped. `0` disables the reaper.
+    pub idle_after: usize,
+    /// Size of the server-owned scheduler pool used when the service
+    /// has no shared `ExecMode::Async` pool to multiplex onto.
+    pub net_workers: usize,
 }
 
 impl Default for ServerConfig {
@@ -63,7 +97,10 @@ impl Default for ServerConfig {
         ServerConfig {
             per_tenant_depth: 8,
             conn_inflight: 32,
-            poll_interval: Duration::from_millis(10),
+            poll_interval: Duration::from_millis(1),
+            max_conns: 1024,
+            idle_after: 0,
+            net_workers: 2,
         }
     }
 }
@@ -72,10 +109,21 @@ struct Inner {
     service: Arc<PipelineService>,
     ledger: NetLedger,
     /// In-flight admitted requests per tenant (the admission lanes).
+    /// Entries are removed on release-to-zero so tenant churn cannot
+    /// grow the map without bound.
     lanes: Mutex<BTreeMap<String, usize>>,
     draining: AtomicBool,
-    conns: Mutex<Vec<JoinHandle<()>>>,
     cfg: ServerConfig,
+    /// Monotonic timer ticks — the reaper's (and only) clock.
+    ticks: AtomicUsize,
+    /// Every live connection's wakeup signal, notified on each tick.
+    signals: Mutex<BTreeMap<u64, Signal>>,
+    /// Live connections (accepted minus closed) — the `max_conns` gate.
+    active: AtomicUsize,
+    /// Outstanding connection tasks; drained by shutdown.
+    conn_wg: WaitGroup,
+    timer_stop: AtomicBool,
+    next_conn_id: AtomicU64,
 }
 
 /// The TCP serving front-end (see module docs).
@@ -83,6 +131,12 @@ pub struct PipelineServer {
     inner: Arc<Inner>,
     addr: SocketAddr,
     accept: Option<JoinHandle<()>>,
+    timer: Option<JoinHandle<()>>,
+    /// The pool connection tasks run on. Deliberately NOT stored in
+    /// [`Inner`]: tasks hold `Arc<Inner>`, and a task must never
+    /// (transitively) own its own scheduler or the pool could be
+    /// dropped — and join itself — from one of its own workers.
+    sched: Arc<Scheduler>,
 }
 
 impl PipelineServer {
@@ -96,20 +150,37 @@ impl PipelineServer {
         let listener = TcpListener::bind(addr)
             .map_err(|e| anyhow::anyhow!("cannot bind {addr}: {e}"))?;
         let local = listener.local_addr()?;
+        // Multiplex onto the service's shared async pool when it has
+        // one; otherwise the server owns a small pool of its own.
+        let sched = match service.scheduler() {
+            Some(shared) => shared,
+            None => Arc::new(Scheduler::new(cfg.net_workers.max(1))),
+        };
         let inner = Arc::new(Inner {
             service,
             ledger: NetLedger::default(),
             lanes: Mutex::new(BTreeMap::new()),
             draining: AtomicBool::new(false),
-            conns: Mutex::new(Vec::new()),
             cfg,
+            ticks: AtomicUsize::new(0),
+            signals: Mutex::new(BTreeMap::new()),
+            active: AtomicUsize::new(0),
+            conn_wg: WaitGroup::new(),
+            timer_stop: AtomicBool::new(false),
+            next_conn_id: AtomicU64::new(0),
         });
         let accept_inner = Arc::clone(&inner);
+        let accept_sched = Arc::clone(&sched);
         let accept = std::thread::Builder::new()
             .name("pipeline-server-accept".to_string())
-            .spawn(move || accept_loop(&listener, &accept_inner))
+            .spawn(move || accept_loop(&listener, &accept_inner, &accept_sched))
             .expect("spawn accept loop");
-        Ok(PipelineServer { inner, addr: local, accept: Some(accept) })
+        let timer_inner = Arc::clone(&inner);
+        let timer = std::thread::Builder::new()
+            .name("pipeline-server-timer".to_string())
+            .spawn(move || timer_loop(&timer_inner))
+            .expect("spawn server timer");
+        Ok(PipelineServer { inner, addr: local, accept: Some(accept), timer: Some(timer), sched })
     }
 
     /// The bound address (with the real port when started on `:0`).
@@ -122,8 +193,23 @@ impl PipelineServer {
         self.inner.ledger.snapshot()
     }
 
-    /// Graceful drain: stop accepting, let every handler flush its
-    /// in-flight tickets and say `Goodbye`, then return the final
+    /// Counters of the scheduler pool the connection tasks run on.
+    /// When the service runs `ExecMode::Async` this is the SHARED pool,
+    /// so the snapshot covers plan stages and socket tasks together.
+    pub fn sched_report(&self) -> SchedReport {
+        self.sched.counters()
+    }
+
+    /// Number of tenants currently holding a non-zero admission lane.
+    /// Returns to zero whenever nothing is in flight — lane entries are
+    /// removed on release-to-zero, which is what keeps a churn of
+    /// one-shot tenants from growing the map forever.
+    pub fn lane_count(&self) -> usize {
+        self.inner.lanes.lock().unwrap().len()
+    }
+
+    /// Graceful drain: stop accepting, let every connection task flush
+    /// its in-flight tickets and say `Goodbye`, then return the final
     /// ledger. Requires the underlying service to be running (a paused
     /// service never resolves the in-flight tickets being flushed).
     pub fn drain(mut self) -> NetReport {
@@ -138,10 +224,12 @@ impl PipelineServer {
             let _ = TcpStream::connect(self.addr);
             let _ = accept.join();
         }
-        let conns: Vec<JoinHandle<()>> =
-            std::mem::take(&mut *self.inner.conns.lock().unwrap());
-        for handle in conns {
-            let _ = handle.join();
+        // The timer keeps ticking while connection tasks drain — its
+        // wakeups are how parked tasks observe the drain flag.
+        self.inner.conn_wg.wait();
+        self.inner.timer_stop.store(true, Ordering::SeqCst);
+        if let Some(timer) = self.timer.take() {
+            let _ = timer.join();
         }
         self.inner.ledger.snapshot()
     }
@@ -155,24 +243,65 @@ impl Drop for PipelineServer {
     }
 }
 
-fn accept_loop(listener: &TcpListener, inner: &Arc<Inner>) {
+/// Wake every live connection task and advance the reaper clock, once
+/// per [`ServerConfig::poll_interval`], until told to stop.
+fn timer_loop(inner: &Arc<Inner>) {
+    while !inner.timer_stop.load(Ordering::SeqCst) {
+        std::thread::sleep(inner.cfg.poll_interval);
+        inner.ticks.fetch_add(1, Ordering::SeqCst);
+        let signals: Vec<Signal> = inner.signals.lock().unwrap().values().cloned().collect();
+        for signal in signals {
+            signal.notify();
+        }
+    }
+}
+
+fn accept_loop(listener: &TcpListener, inner: &Arc<Inner>, sched: &Arc<Scheduler>) {
     for stream in listener.incoming() {
         if inner.draining.load(Ordering::SeqCst) {
             // The final (possibly sentinel) stream is dropped without
             // counting: `accepted` only ever counts served connections.
             break;
         }
-        let Ok(stream) = stream else { continue };
+        let Ok(mut stream) = stream else { continue };
+        if inner.active.load(Ordering::SeqCst) >= inner.cfg.max_conns {
+            // Admission gate: answer with a first-class frame, never a
+            // silent RST. The write is best-effort and blocking — the
+            // socket never reaches a pool worker.
+            inner.ledger.connection_rejected();
+            let refusal = Frame::Shed {
+                id: 0,
+                pipeline: String::new(),
+                priority: Priority::Normal,
+                cause: ShedCause::ServerFull,
+                waited_us: 0,
+            };
+            if wire::write_frame(&mut stream, &refusal).is_ok() {
+                inner.ledger.frame_out();
+                // Consume whatever the peer already sent (typically its
+                // Hello) before dropping: closing with unread receive
+                // data resets the connection, which can destroy the
+                // refusal frame in flight. FIN first so the peer's read
+                // after the Shed sees a clean EOF; the drain is bounded
+                // by a short read timeout.
+                let _ = stream.shutdown(std::net::Shutdown::Write);
+                let _ = stream.set_read_timeout(Some(Duration::from_millis(50)));
+                let mut sink = [0u8; 256];
+                use std::io::Read as _;
+                while matches!(stream.read(&mut sink), Ok(n) if n > 0) {}
+            }
+            continue;
+        }
         inner.ledger.connection_accepted();
-        let conn_inner = Arc::clone(inner);
-        let handle = std::thread::Builder::new()
-            .name("pipeline-server-conn".to_string())
-            .spawn(move || {
-                handle_conn(stream, &conn_inner);
-                conn_inner.ledger.connection_drained();
-            })
-            .expect("spawn connection handler");
-        inner.conns.lock().unwrap().push(handle);
+        inner.active.fetch_add(1, Ordering::SeqCst);
+        let _ = stream.set_nodelay(true);
+        let _ = stream.set_nonblocking(true);
+        let id = inner.next_conn_id.fetch_add(1, Ordering::SeqCst);
+        let signal = Signal::new();
+        inner.signals.lock().unwrap().insert(id, signal.clone());
+        inner.conn_wg.add(1);
+        let mut task = ConnTask::new(Arc::clone(inner), id, signal, stream);
+        sched.spawn(Box::new(move || task.poll()));
     }
 }
 
@@ -183,14 +312,45 @@ struct Pending {
     ticket: Ticket,
 }
 
-/// Per-connection handler state.
-struct Conn {
+/// Where a connection task is in its life.
+enum ConnState {
+    /// Waiting for the peer's `Hello`.
+    Handshake,
+    /// Reading requests, resolving tickets.
+    Serving,
+    /// No further reads: resolve every pending ticket, then `Goodbye`.
+    Flush,
+    /// Goodbye queued: drain the write buffer, then close.
+    Closing,
+}
+
+/// How the connection ends — what the close is counted as.
+enum EndKind {
+    Drained,
+    ReapedIdle,
+    ReapedHandshake,
+}
+
+/// A resumable connection task, polled by the scheduler pool. Between
+/// wakeups it holds no thread: it parks on its [`Signal`], which is
+/// notified by ticket resolutions and by the server timer.
+struct ConnTask {
+    inner: Arc<Inner>,
+    id: u64,
+    signal: Signal,
     stream: TcpStream,
+    state: ConnState,
+    end: EndKind,
     tenant: String,
     pending: VecDeque<Pending>,
+    /// Outbound bytes not yet accepted by the nonblocking socket.
+    out: Vec<u8>,
     /// False once a write failed (peer gone): ledger resolution
     /// continues, frames stop.
     writable: bool,
+    /// Tick count at the last frame read or ticket resolution — the
+    /// idle reaper compares this against the timer's tick clock.
+    last_activity: usize,
     completed: u64,
     shed: u64,
     /// Sheds broken out per [`ShedCause`] (in `ShedCause::ALL` order);
@@ -200,242 +360,405 @@ struct Conn {
     failed: u64,
 }
 
-impl Conn {
-    /// Write one frame unless the peer is already gone. Write failures
-    /// flip `writable` instead of erroring: every pending ticket must
-    /// still resolve in the ledger whatever the socket does.
-    fn send(&mut self, inner: &Inner, frame: &Frame) {
+impl ConnTask {
+    fn new(inner: Arc<Inner>, id: u64, signal: Signal, stream: TcpStream) -> ConnTask {
+        let last_activity = inner.ticks.load(Ordering::SeqCst);
+        ConnTask {
+            inner,
+            id,
+            signal,
+            stream,
+            state: ConnState::Handshake,
+            end: EndKind::Drained,
+            tenant: String::new(),
+            pending: VecDeque::new(),
+            out: Vec::new(),
+            writable: true,
+            last_activity,
+            completed: 0,
+            shed: 0,
+            shed_by_cause: [0; SHED_CAUSE_COUNT],
+            failed: 0,
+        }
+    }
+
+    /// One cooperative poll. The signal generation is snapshotted
+    /// BEFORE any blocking condition is checked (the park protocol), so
+    /// a ticket resolution or timer tick racing the decision to park
+    /// re-enqueues the task instead of stranding it.
+    fn poll(&mut self) -> Poll {
+        let seen = self.signal.generation();
+        match self.state {
+            ConnState::Handshake => self.poll_handshake(seen),
+            ConnState::Serving => self.poll_serving(seen),
+            ConnState::Flush => self.poll_flush(seen),
+            ConnState::Closing => self.poll_closing(),
+        }
+    }
+
+    fn poll_handshake(&mut self, seen: usize) -> Poll {
+        if self.inner.draining.load(Ordering::SeqCst) {
+            // Drained before the handshake finished: nothing in flight.
+            self.queue_goodbye();
+            self.state = ConnState::Closing;
+            return Poll::Yield;
+        }
+        match wire::read_frame(&mut self.stream) {
+            Ok(Some(Frame::Hello { tenant })) => {
+                self.inner.ledger.frame_in();
+                self.touch();
+                self.tenant = tenant;
+                let pipelines =
+                    self.inner.service.session_names().iter().map(|s| s.to_string()).collect();
+                self.send(&Frame::HelloAck { pipelines });
+                self.state = ConnState::Serving;
+                Poll::Yield
+            }
+            Ok(Some(_)) => {
+                // A protocol-violating first frame is still a frame the
+                // server read and parsed: count it, then close with a
+                // zero-counter Goodbye so `frames_in` never disagrees
+                // with bytes consumed off the socket.
+                self.inner.ledger.frame_in();
+                self.queue_goodbye();
+                self.state = ConnState::Closing;
+                Poll::Yield
+            }
+            Ok(None) => {
+                // Peer closed before saying Hello.
+                self.writable = false;
+                self.state = ConnState::Closing;
+                Poll::Yield
+            }
+            Err(e) if e.is_timeout() => {
+                if self.reap_due() {
+                    // A handshake that never completes used to spin its
+                    // handler thread forever; now it is reaped.
+                    self.end = EndKind::ReapedHandshake;
+                    self.queue_goodbye();
+                    self.state = ConnState::Closing;
+                    return Poll::Yield;
+                }
+                Poll::Park { signal: self.signal.clone(), seen }
+            }
+            Err(_) => {
+                // Garbage where the Hello should be: close without
+                // trusting the stream with any further framing.
+                self.writable = false;
+                self.state = ConnState::Closing;
+                Poll::Yield
+            }
+        }
+    }
+
+    fn poll_serving(&mut self, seen: usize) -> Poll {
+        let mut progressed = self.flush_ready() > 0;
+        self.flush_out();
+        if self.inner.draining.load(Ordering::SeqCst) {
+            self.state = ConnState::Flush;
+            return Poll::Yield;
+        }
+        // Read until the in-flight cap: past it, the task parks until a
+        // ticket resolves (its resolution notifies our signal).
+        while self.pending.len() < self.inner.cfg.conn_inflight {
+            match wire::read_frame(&mut self.stream) {
+                Ok(Some(frame)) => {
+                    self.inner.ledger.frame_in();
+                    self.touch();
+                    progressed = true;
+                    match frame {
+                        Frame::Request(req) => self.handle_request(req),
+                        Frame::Drain => {
+                            self.state = ConnState::Flush;
+                            return Poll::Yield;
+                        }
+                        Frame::StatsReq => {
+                            let report = self.inner.ledger.snapshot();
+                            self.send(&Frame::Stats(report));
+                        }
+                        Frame::TenantStatsReq => {
+                            let ledger = self
+                                .inner
+                                .ledger
+                                .snapshot()
+                                .tenants
+                                .get(&self.tenant)
+                                .copied()
+                                .unwrap_or_default();
+                            self.send(&Frame::TenantStats {
+                                tenant: self.tenant.clone(),
+                                ledger,
+                            });
+                        }
+                        // Anything else is a protocol violation from
+                        // this side of the conversation; resolve what's
+                        // in flight (ledger!) and close without writes.
+                        _ => {
+                            self.writable = false;
+                            self.state = ConnState::Flush;
+                            return Poll::Yield;
+                        }
+                    }
+                }
+                Ok(None) => {
+                    // Peer closed without Drain: resolve what's in
+                    // flight for the ledger, skip the writes.
+                    self.writable = false;
+                    self.state = ConnState::Flush;
+                    return Poll::Yield;
+                }
+                Err(e) if e.is_timeout() => break,
+                Err(_) => {
+                    self.writable = false;
+                    self.state = ConnState::Flush;
+                    return Poll::Yield;
+                }
+            }
+        }
+        if progressed {
+            return Poll::Yield;
+        }
+        if self.pending.is_empty() && self.reap_due() {
+            // Idle: established, nothing in flight, no frame activity
+            // for `idle_after` ticks.
+            self.end = EndKind::ReapedIdle;
+            self.queue_goodbye();
+            self.state = ConnState::Closing;
+            return Poll::Yield;
+        }
+        Poll::Park { signal: self.signal.clone(), seen }
+    }
+
+    fn poll_flush(&mut self, seen: usize) -> Poll {
+        let progressed = self.flush_ready() > 0;
+        self.flush_out();
+        if !self.pending.is_empty() {
+            // Still waiting on tickets; their resolutions notify us.
+            return if progressed {
+                Poll::Yield
+            } else {
+                Poll::Park { signal: self.signal.clone(), seen }
+            };
+        }
+        self.queue_goodbye();
+        self.state = ConnState::Closing;
+        Poll::Yield
+    }
+
+    fn poll_closing(&mut self) -> Poll {
+        self.flush_out();
+        if !self.out.is_empty() && self.writable {
+            // The peer's socket is full; the next timer tick retries.
+            let seen = self.signal.generation();
+            return Poll::Park { signal: self.signal.clone(), seen };
+        }
+        self.close()
+    }
+
+    /// Final bookkeeping; the task must not be polled again.
+    fn close(&mut self) -> Poll {
+        self.inner.signals.lock().unwrap().remove(&self.id);
+        self.inner.active.fetch_sub(1, Ordering::SeqCst);
+        match self.end {
+            EndKind::Drained => self.inner.ledger.connection_drained(),
+            EndKind::ReapedIdle => self.inner.ledger.connection_reaped(false),
+            EndKind::ReapedHandshake => self.inner.ledger.connection_reaped(true),
+        }
+        self.inner.conn_wg.done();
+        Poll::Done
+    }
+
+    /// Record frame activity for the idle reaper.
+    fn touch(&mut self) {
+        self.last_activity = self.inner.ticks.load(Ordering::SeqCst);
+    }
+
+    /// Whether the idle reaper's threshold has elapsed since the last
+    /// activity. Always false when the reaper is disabled.
+    fn reap_due(&self) -> bool {
+        let after = self.inner.cfg.idle_after;
+        if after == 0 {
+            return false;
+        }
+        let now = self.inner.ticks.load(Ordering::SeqCst);
+        now.saturating_sub(self.last_activity) >= after
+    }
+
+    /// Queue one frame on the outbound buffer (unless the peer is
+    /// already gone) and push what the socket will take.
+    fn send(&mut self, frame: &Frame) {
         if !self.writable {
             return;
         }
-        match wire::write_frame(&mut self.stream, frame) {
-            Ok(()) => inner.ledger.frame_out(),
-            Err(_) => self.writable = false,
-        }
+        self.out.extend_from_slice(&wire::encode(frame));
+        self.inner.ledger.frame_out();
+        self.flush_out();
     }
-}
 
-fn handle_conn(stream: TcpStream, inner: &Arc<Inner>) {
-    let _ = stream.set_nodelay(true);
-    let _ = stream.set_read_timeout(Some(inner.cfg.poll_interval));
-    // Handshake: the first frame must be Hello{tenant}.
-    let mut conn = Conn {
-        stream,
-        tenant: String::new(),
-        pending: VecDeque::new(),
-        writable: true,
-        completed: 0,
-        shed: 0,
-        shed_by_cause: [0; SHED_CAUSE_COUNT],
-        failed: 0,
-    };
-    loop {
-        if inner.draining.load(Ordering::SeqCst) {
-            // Drained before the handshake finished: nothing in flight.
-            conn.send(
-                inner,
-                &Frame::Goodbye {
-                    completed: 0,
-                    shed: 0,
-                    failed: 0,
-                    shed_by_cause: [0; SHED_CAUSE_COUNT],
-                },
-            );
-            return;
-        }
-        match wire::read_frame(&mut conn.stream) {
-            Ok(Some(Frame::Hello { tenant })) => {
-                inner.ledger.frame_in();
-                conn.tenant = tenant;
-                let pipelines =
-                    inner.service.session_names().iter().map(|s| s.to_string()).collect();
-                conn.send(inner, &Frame::HelloAck { pipelines });
-                break;
+    /// Push buffered bytes into the nonblocking socket. `WouldBlock`
+    /// leaves the remainder for the next wakeup; any real write error
+    /// flips `writable` (ledger resolution continues, frames stop).
+    fn flush_out(&mut self) {
+        use std::io::Write as _;
+        while !self.out.is_empty() {
+            if !self.writable {
+                self.out.clear();
+                return;
             }
-            Ok(Some(_)) | Ok(None) => return, // protocol error / peer gone
-            Err(e) if e.is_timeout() => continue,
-            Err(_) => return,
-        }
-    }
-    serve(&mut conn, inner);
-}
-
-fn serve(conn: &mut Conn, inner: &Arc<Inner>) {
-    loop {
-        flush_ready(conn, inner);
-        if inner.draining.load(Ordering::SeqCst) {
-            finish(conn, inner);
-            return;
-        }
-        if conn.pending.len() >= inner.cfg.conn_inflight {
-            // Backpressure: park on the oldest ticket; its response is
-            // written (possibly blocking on a slow reader's socket)
-            // before another request frame is read.
-            let p = conn.pending.pop_front().expect("pending non-empty");
-            let resp = p.ticket.wait();
-            resolve(conn, inner, p.id, &p.tenant, resp);
-            continue;
-        }
-        match wire::read_frame(&mut conn.stream) {
-            Ok(Some(frame)) => {
-                inner.ledger.frame_in();
-                match frame {
-                    Frame::Request(req) => handle_request(conn, inner, req),
-                    Frame::Drain => {
-                        finish(conn, inner);
-                        return;
-                    }
-                    Frame::StatsReq => {
-                        let report = inner.ledger.snapshot();
-                        conn.send(inner, &Frame::Stats(report));
-                    }
-                    // Anything else is a protocol violation from this
-                    // side of the conversation; resolve and close.
-                    _ => {
-                        abandon(conn, inner);
-                        return;
-                    }
+            match self.stream.write(&self.out) {
+                Ok(0) => {
+                    self.writable = false;
+                    self.out.clear();
+                }
+                Ok(n) => {
+                    self.out.drain(..n);
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return,
+                Err(_) => {
+                    self.writable = false;
+                    self.out.clear();
                 }
             }
-            Ok(None) => {
-                // Peer closed without Drain: resolve what's in flight
-                // for the ledger, skip the writes.
-                abandon(conn, inner);
-                return;
+        }
+    }
+
+    fn queue_goodbye(&mut self) {
+        let goodbye = Frame::Goodbye {
+            completed: self.completed,
+            shed: self.shed,
+            failed: self.failed,
+            shed_by_cause: self.shed_by_cause,
+        };
+        self.send(&goodbye);
+    }
+
+    fn handle_request(&mut self, req: WireRequest) {
+        let WireRequest { id, pipeline, priority, deadline_ms, payload } = req;
+        let tenant = self.tenant.clone();
+        self.inner.ledger.tenant_admitted(&tenant);
+        // Tenant lane gate: at depth, shed immediately — first-class
+        // frame, deterministic at a fixed depth, never a dropped
+        // connection.
+        let lane_open = {
+            let mut lanes = self.inner.lanes.lock().unwrap();
+            let in_flight = lanes.entry(tenant.clone()).or_default();
+            if *in_flight >= self.inner.cfg.per_tenant_depth {
+                false
+            } else {
+                *in_flight += 1;
+                true
             }
-            Err(e) if e.is_timeout() => continue,
-            Err(_) => {
-                abandon(conn, inner);
-                return;
+        };
+        if !lane_open {
+            self.inner.ledger.tenant_shed(&tenant);
+            self.shed += 1;
+            self.shed_by_cause[ShedCause::TenantLaneFull.index()] += 1;
+            self.send(&Frame::Shed {
+                id,
+                pipeline,
+                priority,
+                cause: ShedCause::TenantLaneFull,
+                waited_us: 0,
+            });
+            return;
+        }
+        let request = Request {
+            pipeline: pipeline.clone(),
+            payload: payload.into_workload(),
+            priority,
+            deadline: wire::decode_deadline_ms(deadline_ms),
+        };
+        // The ticket's resolution notifies this connection's signal —
+        // that is what wakes a parked task; it never blocks in
+        // `Ticket::wait`.
+        match self.inner.service.submit_with_notify(request, self.signal.clone()) {
+            Ok(ticket) => self.pending.push_back(Pending { id, tenant, ticket }),
+            Err(e) => {
+                lane_release(&self.inner, &tenant);
+                self.inner.ledger.tenant_failed(&tenant);
+                self.failed += 1;
+                self.send(&Frame::Failed { id, pipeline, error: format!("{e:#}") });
             }
         }
+    }
+
+    /// Resolve every ticket whose response is already available;
+    /// returns how many resolved. Never blocks: `is_done` is the
+    /// non-consuming check, and `wait` on a done ticket returns its
+    /// buffered response immediately.
+    fn flush_ready(&mut self) -> usize {
+        // Completion order, not submission order: scan the whole
+        // pending set and resolve whatever is done (responses correlate
+        // by id).
+        let mut resolved = 0;
+        let mut i = 0;
+        while i < self.pending.len() {
+            if self.pending[i].ticket.is_done() {
+                let p = self.pending.remove(i).expect("index in bounds");
+                let resp = p.ticket.wait(); // buffered: returns immediately
+                self.resolve(p.id, &p.tenant, resp);
+                resolved += 1;
+            } else {
+                i += 1;
+            }
+        }
+        if resolved > 0 {
+            self.touch();
+        }
+        resolved
+    }
+
+    /// Write (and account) the response for one resolved ticket.
+    fn resolve(&mut self, id: u64, tenant: &str, resp: Response) {
+        lane_release(&self.inner, tenant);
+        let frame = match resp {
+            Response::Completed(c) => {
+                self.inner.ledger.tenant_completed(tenant);
+                self.completed += 1;
+                Frame::Completed(WireCompletion {
+                    id,
+                    pipeline: c.pipeline,
+                    items: c.result.items as u64,
+                    queue_wait_us: c.queue_wait.as_micros() as u64,
+                    service_us: c.service_time.as_micros() as u64,
+                    summary: c.output.summary(),
+                    metrics: c.result.metrics.into_iter().collect(),
+                })
+            }
+            Response::Shed { pipeline, priority, reason, waited } => {
+                self.inner.ledger.tenant_shed(tenant);
+                let cause: ShedCause = reason.into();
+                self.shed += 1;
+                self.shed_by_cause[cause.index()] += 1;
+                Frame::Shed {
+                    id,
+                    pipeline,
+                    priority,
+                    cause,
+                    waited_us: waited.as_micros() as u64,
+                }
+            }
+            Response::Failed { pipeline, error } => {
+                self.inner.ledger.tenant_failed(tenant);
+                self.failed += 1;
+                Frame::Failed { id, pipeline, error }
+            }
+        };
+        self.send(&frame);
     }
 }
 
-fn handle_request(conn: &mut Conn, inner: &Arc<Inner>, req: WireRequest) {
-    let WireRequest { id, pipeline, priority, deadline_ms, payload } = req;
-    let tenant = conn.tenant.clone();
-    inner.ledger.tenant_admitted(&tenant);
-    // Tenant lane gate: at depth, shed immediately — first-class frame,
-    // deterministic at a fixed depth, never a dropped connection.
-    let lane_open = {
-        let mut lanes = inner.lanes.lock().unwrap();
-        let in_flight = lanes.entry(tenant.clone()).or_default();
-        if *in_flight >= inner.cfg.per_tenant_depth {
-            false
-        } else {
-            *in_flight += 1;
-            true
-        }
-    };
-    if !lane_open {
-        inner.ledger.tenant_shed(&tenant);
-        conn.shed += 1;
-        conn.shed_by_cause[ShedCause::TenantLaneFull.index()] += 1;
-        conn.send(
-            inner,
-            &Frame::Shed { id, pipeline, priority, cause: ShedCause::TenantLaneFull, waited_us: 0 },
-        );
-        return;
-    }
-    let request = Request {
-        pipeline: pipeline.clone(),
-        payload: payload.into_workload(),
-        priority,
-        deadline: wire::decode_deadline_ms(deadline_ms),
-    };
-    match inner.service.submit(request) {
-        Ok(ticket) => conn.pending.push_back(Pending { id, tenant, ticket }),
-        Err(e) => {
-            lane_release(inner, &tenant);
-            inner.ledger.tenant_failed(&tenant);
-            conn.failed += 1;
-            conn.send(inner, &Frame::Failed { id, pipeline, error: format!("{e:#}") });
-        }
-    }
-}
-
+/// Release one in-flight slot on a tenant's lane, removing the entry
+/// entirely when the count returns to zero — the map tracks only
+/// tenants with work in flight, so one-shot tenant churn stays O(live).
 fn lane_release(inner: &Inner, tenant: &str) {
     let mut lanes = inner.lanes.lock().unwrap();
     if let Some(in_flight) = lanes.get_mut(tenant) {
         *in_flight = in_flight.saturating_sub(1);
-    }
-}
-
-/// Write (and account) the response for one resolved ticket.
-fn resolve(conn: &mut Conn, inner: &Inner, id: u64, tenant: &str, resp: Response) {
-    lane_release(inner, tenant);
-    let frame = match resp {
-        Response::Completed(c) => {
-            inner.ledger.tenant_completed(tenant);
-            conn.completed += 1;
-            Frame::Completed(WireCompletion {
-                id,
-                pipeline: c.pipeline,
-                items: c.result.items as u64,
-                queue_wait_us: c.queue_wait.as_micros() as u64,
-                service_us: c.service_time.as_micros() as u64,
-                summary: c.output.summary(),
-                metrics: c.result.metrics.into_iter().collect(),
-            })
+        if *in_flight == 0 {
+            lanes.remove(tenant);
         }
-        Response::Shed { pipeline, priority, reason, waited } => {
-            inner.ledger.tenant_shed(tenant);
-            let cause: ShedCause = reason.into();
-            conn.shed += 1;
-            conn.shed_by_cause[cause.index()] += 1;
-            Frame::Shed { id, pipeline, priority, cause, waited_us: waited.as_micros() as u64 }
-        }
-        Response::Failed { pipeline, error } => {
-            inner.ledger.tenant_failed(tenant);
-            conn.failed += 1;
-            Frame::Failed { id, pipeline, error }
-        }
-    };
-    conn.send(inner, &frame);
-}
-
-/// Resolve every ticket whose response is already available.
-fn flush_ready(conn: &mut Conn, inner: &Inner) {
-    // Completion order, not submission order: scan the whole pending
-    // set and resolve whatever is done (responses correlate by id).
-    let mut i = 0;
-    while i < conn.pending.len() {
-        if conn.pending[i].ticket.is_done() {
-            let p = conn.pending.remove(i).expect("index in bounds");
-            let resp = p.ticket.wait(); // buffered: returns immediately
-            resolve(conn, inner, p.id, &p.tenant, resp);
-        } else {
-            i += 1;
-        }
-    }
-}
-
-/// Drain this connection: flush every in-flight ticket (writing each
-/// response), then close with the outcome counters. Zero responses are
-/// lost — each pending ticket is waited to resolution.
-fn finish(conn: &mut Conn, inner: &Inner) {
-    while let Some(p) = conn.pending.pop_front() {
-        let resp = p.ticket.wait();
-        resolve(conn, inner, p.id, &p.tenant, resp);
-    }
-    let goodbye = Frame::Goodbye {
-        completed: conn.completed,
-        shed: conn.shed,
-        failed: conn.failed,
-        shed_by_cause: conn.shed_by_cause,
-    };
-    conn.send(inner, &goodbye);
-}
-
-/// The peer vanished (EOF or protocol garbage): resolve every pending
-/// ticket for the ledger — lanes release and tenant ledgers balance
-/// even when nobody is left to read the responses.
-fn abandon(conn: &mut Conn, inner: &Inner) {
-    conn.writable = false;
-    while let Some(p) = conn.pending.pop_front() {
-        let resp = p.ticket.wait();
-        resolve(conn, inner, p.id, &p.tenant, resp);
     }
 }
 
@@ -513,6 +836,16 @@ mod tests {
             }
             other => panic!("expected Stats, got {}", other.kind()),
         }
+        // TenantStatsReq answers with just this connection's tenant.
+        wire::write_frame(&mut c, &Frame::TenantStatsReq).unwrap();
+        match wire::read_frame(&mut c).unwrap().unwrap() {
+            Frame::TenantStats { tenant, ledger } => {
+                assert_eq!(tenant, "t-a");
+                assert_eq!(ledger.admitted, 1);
+                assert_eq!(ledger.completed, 1);
+            }
+            other => panic!("expected TenantStats, got {}", other.kind()),
+        }
         // Client-initiated drain: Goodbye carries the outcome counters.
         wire::write_frame(&mut c, &Frame::Drain).unwrap();
         match wire::read_frame(&mut c).unwrap().unwrap() {
@@ -575,6 +908,47 @@ mod tests {
         let report = server.drain();
         assert_eq!(report.accepted, 1);
         assert_eq!(report.drained, 1);
+        assert!(report.balanced(), "{report:?}");
+    }
+
+    #[test]
+    fn no_per_connection_threads_are_spawned() {
+        let (_svc, server) = start_census(ServerConfig::default());
+        let mut conns: Vec<TcpStream> = (0..4)
+            .map(|_| {
+                let mut c = TcpStream::connect(server.local_addr()).unwrap();
+                hello(&mut c, "t-threads");
+                c
+            })
+            .collect();
+        // With four live connections there is still no
+        // "pipeline-server-conn" thread anywhere in the process — the
+        // connections are tasks on the scheduler pool.
+        #[cfg(target_os = "linux")]
+        {
+            let mut names = Vec::new();
+            for entry in std::fs::read_dir("/proc/self/task").unwrap() {
+                let comm = entry.unwrap().path().join("comm");
+                if let Ok(name) = std::fs::read_to_string(comm) {
+                    names.push(name.trim().to_string());
+                }
+            }
+            assert!(
+                names.iter().all(|n| !n.starts_with("pipeline-server-conn")),
+                "per-connection handler threads found: {names:?}"
+            );
+        }
+        for c in &mut conns {
+            wire::write_frame(c, &Frame::Drain).unwrap();
+            match wire::read_frame(c).unwrap().unwrap() {
+                Frame::Goodbye { .. } => {}
+                other => panic!("expected Goodbye, got {}", other.kind()),
+            }
+        }
+        drop(conns);
+        let report = server.drain();
+        assert_eq!(report.accepted, 4);
+        assert_eq!(report.drained, 4);
         assert!(report.balanced(), "{report:?}");
     }
 }

@@ -34,6 +34,10 @@
 //! * [`Frame::StatsReq`] / [`Frame::Stats`] — the server's
 //!   [`NetReport`] ledger on demand, which is how clients synchronize
 //!   on counters instead of sleeping.
+//! * [`Frame::TenantStatsReq`] / [`Frame::TenantStats`] — the calling
+//!   connection's own [`TenantLedger`] on demand, so a tenant can poll
+//!   its admission/outcome counters without receiving (or being
+//!   trusted with) the whole-server snapshot.
 
 use crate::coordinator::telemetry::{NetReport, TenantLedger};
 use crate::pipelines::Workload;
@@ -74,6 +78,12 @@ pub enum WireError {
     /// The value has no wire representation (e.g. a [`Workload::Video`]
     /// payload, whose frames are process-local handles).
     Unrepresentable(&'static str),
+    /// The server refused the connection itself (before any handshake
+    /// completed) with a first-class `Shed` frame — e.g.
+    /// [`ShedCause::ServerFull`] when the admission gate is at
+    /// `max_conns`. Distinct from a protocol error: the peer spoke the
+    /// protocol correctly and said "not now".
+    Rejected(ShedCause),
 }
 
 impl std::fmt::Display for WireError {
@@ -92,6 +102,9 @@ impl std::fmt::Display for WireError {
             WireError::Malformed(msg) => write!(f, "malformed frame body: {msg}"),
             WireError::Unrepresentable(what) => {
                 write!(f, "{what} has no wire representation")
+            }
+            WireError::Rejected(cause) => {
+                write!(f, "connection rejected by the server: {cause}")
             }
         }
     }
@@ -134,12 +147,16 @@ pub enum ShedCause {
     TenantLaneFull,
     /// The server is draining: in-flight work flushes, new work sheds.
     Draining,
+    /// The server is at its `max_conns` connection ceiling: the
+    /// connection itself is refused with this cause (id 0, empty
+    /// pipeline) before any handshake — never a silent RST.
+    ServerFull,
 }
 
 /// Number of distinct [`ShedCause`]s — the length of the per-cause
 /// count arrays carried on the wire, indexed in [`ShedCause::ALL`]
 /// (wire-tag) order.
-pub const SHED_CAUSE_COUNT: usize = 4;
+pub const SHED_CAUSE_COUNT: usize = 5;
 
 impl ShedCause {
     /// All causes, in wire-tag order.
@@ -148,6 +165,7 @@ impl ShedCause {
         ShedCause::DeadlineExpired,
         ShedCause::TenantLaneFull,
         ShedCause::Draining,
+        ShedCause::ServerFull,
     ];
 
     /// Index into per-cause count arrays (same order as [`Self::ALL`]).
@@ -162,6 +180,7 @@ impl ShedCause {
             ShedCause::DeadlineExpired => "deadline_expired",
             ShedCause::TenantLaneFull => "tenant_lane_full",
             ShedCause::Draining => "draining",
+            ShedCause::ServerFull => "server_full",
         }
     }
 
@@ -327,6 +346,13 @@ pub enum Frame {
     StatsReq,
     /// Server → client: the ledger snapshot.
     Stats(NetReport),
+    /// Client → server: ask for the calling connection's own tenant
+    /// ledger (the tenant declared in `Hello` — there is no argument,
+    /// so one tenant cannot read another's counters).
+    TenantStatsReq,
+    /// Server → client: the requesting tenant's ledger snapshot. The
+    /// tenant id is echoed so the reply is self-describing in captures.
+    TenantStats { tenant: String, ledger: TenantLedger },
 }
 
 impl Frame {
@@ -342,6 +368,8 @@ impl Frame {
             Frame::Goodbye { .. } => 0x08,
             Frame::StatsReq => 0x09,
             Frame::Stats(_) => 0x0A,
+            Frame::TenantStatsReq => 0x0B,
+            Frame::TenantStats { .. } => 0x0C,
         }
     }
 
@@ -358,6 +386,8 @@ impl Frame {
             Frame::Goodbye { .. } => "goodbye",
             Frame::StatsReq => "stats_req",
             Frame::Stats(_) => "stats",
+            Frame::TenantStatsReq => "tenant_stats_req",
+            Frame::TenantStats { .. } => "tenant_stats",
         }
     }
 }
@@ -467,7 +497,7 @@ fn encode_body(frame: &Frame) -> Vec<u8> {
             put_str(&mut b, pipeline);
             put_str(&mut b, error);
         }
-        Frame::Drain | Frame::StatsReq => {}
+        Frame::Drain | Frame::StatsReq | Frame::TenantStatsReq => {}
         Frame::Goodbye { completed, shed, failed, shed_by_cause } => {
             put_u64(&mut b, *completed);
             put_u64(&mut b, *shed);
@@ -479,6 +509,9 @@ fn encode_body(frame: &Frame) -> Vec<u8> {
         Frame::Stats(report) => {
             put_u64(&mut b, report.accepted as u64);
             put_u64(&mut b, report.drained as u64);
+            put_u64(&mut b, report.rejected as u64);
+            put_u64(&mut b, report.reaped_idle as u64);
+            put_u64(&mut b, report.reaped_handshake as u64);
             put_u64(&mut b, report.frames_in as u64);
             put_u64(&mut b, report.frames_out as u64);
             put_count(&mut b, report.tenants.len());
@@ -489,6 +522,13 @@ fn encode_body(frame: &Frame) -> Vec<u8> {
                 put_u64(&mut b, t.shed);
                 put_u64(&mut b, t.failed);
             }
+        }
+        Frame::TenantStats { tenant, ledger } => {
+            put_str(&mut b, tenant);
+            put_u64(&mut b, ledger.admitted);
+            put_u64(&mut b, ledger.completed);
+            put_u64(&mut b, ledger.shed);
+            put_u64(&mut b, ledger.failed);
         }
     }
     b
@@ -659,6 +699,9 @@ fn decode_body(tag: u8, body: &[u8]) -> Result<Frame, WireError> {
         0x0A => {
             let accepted = c.u64("stats accepted")? as usize;
             let drained = c.u64("stats drained")? as usize;
+            let rejected = c.u64("stats rejected")? as usize;
+            let reaped_idle = c.u64("stats reaped_idle")? as usize;
+            let reaped_handshake = c.u64("stats reaped_handshake")? as usize;
             let frames_in = c.u64("stats frames_in")? as usize;
             let frames_out = c.u64("stats frames_out")? as usize;
             let n = c.count("tenant count")?;
@@ -673,8 +716,27 @@ fn decode_body(tag: u8, body: &[u8]) -> Result<Frame, WireError> {
                 };
                 tenants.insert(tenant, ledger);
             }
-            Frame::Stats(NetReport { accepted, drained, frames_in, frames_out, tenants })
+            Frame::Stats(NetReport {
+                accepted,
+                drained,
+                rejected,
+                reaped_idle,
+                reaped_handshake,
+                frames_in,
+                frames_out,
+                tenants,
+            })
         }
+        0x0B => Frame::TenantStatsReq,
+        0x0C => Frame::TenantStats {
+            tenant: c.str("tenant_stats tenant")?,
+            ledger: TenantLedger {
+                admitted: c.u64("tenant_stats admitted")?,
+                completed: c.u64("tenant_stats completed")?,
+                shed: c.u64("tenant_stats shed")?,
+                failed: c.u64("tenant_stats failed")?,
+            },
+        },
         t => return Err(WireError::UnknownFrame(t)),
     };
     c.finish()?;
@@ -858,11 +920,19 @@ mod tests {
             },
             Frame::Failed { id: 13, pipeline: "nope".into(), error: "unknown pipeline".into() },
             Frame::Drain,
-            Frame::Goodbye { completed: 9, shed: 2, failed: 0, shed_by_cause: [1, 1, 0, 0] },
+            Frame::Goodbye { completed: 9, shed: 2, failed: 0, shed_by_cause: [1, 1, 0, 0, 0] },
             Frame::StatsReq,
+            Frame::TenantStatsReq,
+            Frame::TenantStats {
+                tenant: "tenant-a".to_string(),
+                ledger: TenantLedger { admitted: 6, completed: 4, shed: 1, failed: 1 },
+            },
             Frame::Stats(NetReport {
                 accepted: 3,
                 drained: 3,
+                rejected: 2,
+                reaped_idle: 1,
+                reaped_handshake: 1,
                 frames_in: 40,
                 frames_out: 41,
                 tenants: [
@@ -899,7 +969,7 @@ mod tests {
 
     #[test]
     fn zero_length_payload_frames_are_exactly_a_header() {
-        for frame in [Frame::Drain, Frame::StatsReq] {
+        for frame in [Frame::Drain, Frame::StatsReq, Frame::TenantStatsReq] {
             let bytes = encode(&frame);
             assert_eq!(bytes.len(), HEADER_LEN);
             assert_eq!(decode(&bytes).unwrap(), frame);
@@ -1025,7 +1095,7 @@ mod tests {
             let n = rng.below(12);
             (0..n).map(|_| (b'a' + rng.below(26) as u8) as char).collect()
         };
-        match rng.below(10) {
+        match rng.below(12) {
             0 => Frame::Hello { tenant: rand_str(rng) },
             1 => {
                 let n = rng.below(4);
@@ -1078,12 +1148,10 @@ mod tests {
             },
             6 => Frame::Drain,
             7 => {
-                let shed_by_cause = [
-                    rng.below(25) as u64,
-                    rng.below(25) as u64,
-                    rng.below(25) as u64,
-                    rng.below(25) as u64,
-                ];
+                let mut shed_by_cause = [0u64; SHED_CAUSE_COUNT];
+                for slot in &mut shed_by_cause {
+                    *slot = rng.below(25) as u64;
+                }
                 Frame::Goodbye {
                     completed: rng.below(100) as u64,
                     shed: shed_by_cause.iter().sum(),
@@ -1092,9 +1160,22 @@ mod tests {
                 }
             }
             8 => Frame::StatsReq,
+            9 => Frame::TenantStatsReq,
+            10 => Frame::TenantStats {
+                tenant: rand_str(rng),
+                ledger: TenantLedger {
+                    admitted: rng.below(100) as u64,
+                    completed: rng.below(100) as u64,
+                    shed: rng.below(100) as u64,
+                    failed: rng.below(100) as u64,
+                },
+            },
             _ => Frame::Stats(NetReport {
                 accepted: rng.below(10),
                 drained: rng.below(10),
+                rejected: rng.below(10),
+                reaped_idle: rng.below(10),
+                reaped_handshake: rng.below(10),
                 frames_in: rng.below(1000),
                 frames_out: rng.below(1000),
                 tenants: (0..rng.below(4))
@@ -1179,7 +1260,7 @@ mod tests {
             completed: 7,
             shed: 3,
             failed: 1,
-            shed_by_cause: [0, 2, 1, 0],
+            shed_by_cause: [0, 2, 1, 0, 0],
         };
         match decode(&encode(&frame)).unwrap() {
             Frame::Goodbye { completed, shed, failed, shed_by_cause } => {

@@ -23,9 +23,10 @@ impl QuantParams {
             return QuantParams { scale: 1.0 / 127.0 };
         }
         let mut mags: Vec<f32> = samples.iter().map(|v| v.abs()).collect();
-        mags.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let idx = ((mags.len() - 1) as f32 * (percentile / 100.0).clamp(0.0, 1.0)) as usize;
-        let hi = mags[idx].max(1e-8);
+        mags.sort_by(f32::total_cmp);
+        let hi = crate::util::stats::percentile_sorted(&mags, (percentile / 100.0) as f64)
+            .expect("non-empty sample set")
+            .max(1e-8);
         QuantParams { scale: hi / 127.0 }
     }
 

@@ -58,7 +58,7 @@ use crate::coordinator::exec;
 use crate::coordinator::router::AdmissionQueue;
 pub use crate::coordinator::router::{Priority, QueueStats};
 use crate::coordinator::scaler::{InstanceReport, ScalingReport};
-use crate::coordinator::sched::{Scheduler, WaitGroup};
+use crate::coordinator::sched::{Scheduler, Signal, WaitGroup};
 use crate::coordinator::telemetry::{BindReport, SchedReport};
 use crate::coordinator::ExecMode;
 use crate::pipelines::{
@@ -449,6 +449,23 @@ struct Job {
     deadline: Option<Duration>,
     enqueued: Instant,
     reply: mpsc::Sender<Response>,
+    /// Optional wakeup rung alongside every `reply` send: a cooperative
+    /// task (e.g. a [`crate::net::PipelineServer`] connection task
+    /// parked on its per-connection [`Signal`]) cannot block in
+    /// [`Ticket::wait`], so the resolution itself must wake it.
+    notify: Option<Signal>,
+}
+
+impl Job {
+    /// Resolve the job's ticket and wake its parked waiter, if any.
+    /// Every reply path goes through here so no resolution can strand
+    /// a signal-parked submitter.
+    fn resolve(reply: &mpsc::Sender<Response>, notify: &Option<Signal>, resp: Response) {
+        let _ = reply.send(resp);
+        if let Some(signal) = notify {
+            signal.notify();
+        }
+    }
 }
 
 /// Cap on retained latency samples per worker: percentiles are computed
@@ -619,6 +636,19 @@ impl PipelineService {
     /// [`Response::Shed`] before this returns. Errors only on a pipeline
     /// with no open session.
     pub fn submit(&self, req: Request) -> anyhow::Result<Ticket> {
+        self.submit_inner(req, None)
+    }
+
+    /// [`Self::submit`], plus a [`Signal`] notified every time the
+    /// request's ticket resolves (admission shed, deadline shed,
+    /// completion, or failure). This is how a cooperative task — which
+    /// must never block in [`Ticket::wait`] — parks on its signal and
+    /// polls [`Ticket::is_done`] on wakeups instead.
+    pub fn submit_with_notify(&self, req: Request, signal: Signal) -> anyhow::Result<Ticket> {
+        self.submit_inner(req, Some(signal))
+    }
+
+    fn submit_inner(&self, req: Request, notify: Option<Signal>) -> anyhow::Result<Ticket> {
         let Request { pipeline, payload, priority, deadline } = req;
         let session = self.sessions.get(&pipeline).cloned().ok_or_else(|| {
             anyhow::anyhow!(
@@ -628,7 +658,7 @@ impl PipelineService {
         })?;
         let (reply, rx) = mpsc::channel();
         let ticket = Ticket::new(pipeline, rx);
-        let job = Job { session, payload, deadline, enqueued: Instant::now(), reply };
+        let job = Job { session, payload, deadline, enqueued: Instant::now(), reply, notify };
         self.telem.lock().unwrap().submitted += 1;
         let outcome = self.queue.admit(priority, job);
         if !outcome.shed.is_empty() {
@@ -641,7 +671,7 @@ impl PipelineService {
                 reason: ShedReason::QueueFull,
                 waited: shed.enqueued.elapsed(),
             };
-            let _ = shed.reply.send(resp);
+            Job::resolve(&shed.reply, &shed.notify, resp);
         }
         Ok(ticket)
     }
@@ -694,6 +724,14 @@ impl PipelineService {
     /// assert pool behavior without timing.
     pub fn scheduler_counters(&self) -> Option<SchedReport> {
         self.sched.as_ref().map(|s| s.counters())
+    }
+
+    /// The shared cooperative pool itself; `None` unless the service
+    /// was opened with an `ExecMode::Async` executor. The TCP serving
+    /// edge multiplexes its connection tasks onto this pool so sockets
+    /// and plan stages share one set of workers.
+    pub fn scheduler(&self) -> Option<Arc<Scheduler>> {
+        self.sched.clone()
     }
 
     /// Per-session build-vs-bind accounting, sorted by pipeline name:
@@ -757,17 +795,21 @@ fn worker_loop(
     inflight: &WaitGroup,
 ) {
     while let Some((priority, job)) = queue.pop() {
-        let Job { session, payload, deadline, enqueued, reply } = job;
+        let Job { session, payload, deadline, enqueued, reply, notify } = job;
         let queue_wait = enqueued.elapsed();
         if let Some(d) = deadline {
             if queue_wait > d {
                 telem.lock().unwrap().shed += 1;
-                let _ = reply.send(Response::Shed {
-                    pipeline: session.name().to_string(),
-                    priority,
-                    reason: ShedReason::DeadlineExpired,
-                    waited: queue_wait,
-                });
+                Job::resolve(
+                    &reply,
+                    &notify,
+                    Response::Shed {
+                        pipeline: session.name().to_string(),
+                        priority,
+                        reason: ShedReason::DeadlineExpired,
+                        waited: queue_wait,
+                    },
+                );
                 continue;
             }
         }
@@ -789,12 +831,16 @@ fn worker_loop(
                 if queue_wait > d {
                     inflight.done();
                     telem.lock().unwrap().shed += 1;
-                    let _ = reply.send(Response::Shed {
-                        pipeline: session.name().to_string(),
-                        priority,
-                        reason: ShedReason::DeadlineExpired,
-                        waited: queue_wait,
-                    });
+                    Job::resolve(
+                        &reply,
+                        &notify,
+                        Response::Shed {
+                            pipeline: session.name().to_string(),
+                            priority,
+                            reason: ShedReason::DeadlineExpired,
+                            waited: queue_wait,
+                        },
+                    );
                     continue;
                 }
             }
@@ -824,7 +870,7 @@ fn worker_loop(
                         Response::Failed { pipeline: name, error: format!("{e:#}") }
                     }
                 };
-                let _ = reply.send(resp);
+                Job::resolve(&reply, &notify, resp);
                 inflight_done.done();
             });
             continue;
@@ -853,7 +899,7 @@ fn worker_loop(
                 }
             }
         };
-        let _ = reply.send(resp);
+        Job::resolve(&reply, &notify, resp);
     }
     // Queue closed and drained: wait for every spawned async plan to
     // resolve its ticket before exiting, so the service's Drop can

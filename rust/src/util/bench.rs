@@ -89,7 +89,21 @@ pub fn write_trajectory(
     scale: f64,
     pipelines: BTreeMap<String, Json>,
 ) -> std::io::Result<String> {
-    let mut doc = BTreeMap::new();
+    write_trajectory_with(path, bench, scale, pipelines, BTreeMap::new())
+}
+
+/// [`write_trajectory`] plus bench-specific top-level sections (e.g.
+/// `bench-serve`'s `"net"` connection ledger). `extra` keys ride beside
+/// `pipelines` in the document root; the reserved keys (`bench`,
+/// `schema_version`, `scale`, `pipelines`) always win.
+pub fn write_trajectory_with(
+    path: &str,
+    bench: &str,
+    scale: f64,
+    pipelines: BTreeMap<String, Json>,
+    extra: BTreeMap<String, Json>,
+) -> std::io::Result<String> {
+    let mut doc = extra;
     doc.insert("bench".to_string(), Json::Str(bench.to_string()));
     doc.insert("schema_version".to_string(), num(SCHEMA_VERSION));
     doc.insert("scale".to_string(), num(scale));

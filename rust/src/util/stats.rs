@@ -1,0 +1,96 @@
+//! The crate's one nearest-rank percentile implementation.
+//!
+//! Four hand-rolled copies used to live in `coordinator/scaler.rs`,
+//! `coordinator/telemetry.rs`, `net/client.rs`, and `ml/gaussian.rs`;
+//! the `net/client.rs` copy panicked on NaN samples via
+//! `partial_cmp(..).expect("finite latencies")`, which turned one
+//! poisoned latency sample into a dead load generator. Every caller now
+//! routes through here: `f64` samples are ordered with
+//! [`f64::total_cmp`], so NaN sorts to the high end deterministically
+//! and a percentile query degrades to a value instead of a panic.
+//!
+//! Nearest-rank convention: for `n` sorted samples the `q`-quantile is
+//! the element at index `round((n - 1) * clamp(q, 0, 1))`. This matches
+//! what every previous copy computed, so latency tables, scaler
+//! decisions, and anomaly thresholds are bit-identical to before the
+//! deduplication.
+
+/// Nearest-rank percentile of an **already sorted** slice.
+///
+/// `q` is clamped to `[0, 1]`. Returns `None` only for an empty slice.
+/// Works for any `Copy` element (`Duration`, `f64`, `f32`, ...): the
+/// ordering responsibility lives with the caller's sort, which lets
+/// `Duration` callers keep their naturally `Ord` sort while float
+/// callers go through [`percentile_f64`].
+pub fn percentile_sorted<T: Copy>(sorted: &[T], q: f64) -> Option<T> {
+    if sorted.is_empty() {
+        return None;
+    }
+    let idx = ((sorted.len() - 1) as f64 * q.clamp(0.0, 1.0)).round() as usize;
+    Some(sorted[idx])
+}
+
+/// Nearest-rank percentile of unsorted `f64` samples.
+///
+/// Sorts a copy with [`f64::total_cmp`] — total order, so NaN cannot
+/// panic the sort; NaN samples sort above every finite value and only
+/// surface if `q` reaches into them. Returns `None` only when `samples`
+/// is empty.
+pub fn percentile_f64(samples: &[f64], q: f64) -> Option<f64> {
+    let mut sorted = samples.to_vec();
+    sorted.sort_by(f64::total_cmp);
+    percentile_sorted(&sorted, q)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn empty_is_none() {
+        assert_eq!(percentile_sorted::<f64>(&[], 0.5), None);
+        assert_eq!(percentile_f64(&[], 0.5), None);
+    }
+
+    #[test]
+    fn nearest_rank_on_sorted_durations() {
+        let sorted: Vec<Duration> = (1..=10).map(Duration::from_millis).collect();
+        // (10 - 1) * 0.5 = 4.5 → rounds to index 5 → 6 ms.
+        assert_eq!(percentile_sorted(&sorted, 0.5), Some(Duration::from_millis(6)));
+        assert_eq!(percentile_sorted(&sorted, 0.0), Some(Duration::from_millis(1)));
+        assert_eq!(percentile_sorted(&sorted, 1.0), Some(Duration::from_millis(10)));
+        // Out-of-range q clamps instead of indexing out of bounds.
+        assert_eq!(percentile_sorted(&sorted, 7.0), Some(Duration::from_millis(10)));
+        assert_eq!(percentile_sorted(&sorted, -1.0), Some(Duration::from_millis(1)));
+    }
+
+    #[test]
+    fn percentile_f64_sorts_unordered_input() {
+        let samples = [9.0, 1.0, 5.0, 3.0, 7.0];
+        assert_eq!(percentile_f64(&samples, 0.5), Some(5.0));
+        assert_eq!(percentile_f64(&samples, 0.0), Some(1.0));
+        assert_eq!(percentile_f64(&samples, 1.0), Some(9.0));
+    }
+
+    #[test]
+    fn nan_samples_do_not_panic() {
+        // The old net/client.rs copy died here with
+        // `partial_cmp(..).expect("finite latencies")`. total_cmp puts
+        // NaN above every finite sample, so mid percentiles still
+        // answer from the finite mass and only q=1.0 reads the NaN.
+        let samples = [3.0, f64::NAN, 1.0, 2.0];
+        let p50 = percentile_f64(&samples, 0.5).unwrap();
+        assert_eq!(p50, 2.0);
+        assert!(percentile_f64(&samples, 1.0).unwrap().is_nan());
+        let all_nan = [f64::NAN, f64::NAN];
+        assert!(percentile_f64(&all_nan, 0.5).unwrap().is_nan());
+    }
+
+    #[test]
+    fn single_sample_answers_every_quantile() {
+        for q in [0.0, 0.25, 0.5, 0.99, 1.0] {
+            assert_eq!(percentile_f64(&[42.0], q), Some(42.0));
+        }
+    }
+}

@@ -13,12 +13,25 @@
 //!   counters agree with the client's own ledger;
 //! * the closed-loop load generator (`run_load`, the engine behind
 //!   `repro bench-serve`) balances end-to-end: the server's per-tenant
-//!   ledger equals the fleet's client-side outcome record exactly.
+//!   ledger equals the fleet's client-side outcome record exactly;
+//! * the hardened edge holds its limits: connections past `max_conns`
+//!   get a first-class `Shed(ServerFull)` frame (counted `rejected`,
+//!   never `accepted`), the idle reaper retires idle and half-open
+//!   connections (`accepted == drained + reaped`, split by cause) while
+//!   sparing anything with work in flight, connection tasks multiplex
+//!   on the service's shared scheduler pool (no per-connection handler
+//!   threads; `SchedReport.parked == woken` at quiescence), tenant
+//!   admission lanes release to zero, and a protocol-violating first
+//!   frame is counted and answered, never silently dropped.
+//!
+//! Spins (`spin_until`) are liveness bounds only — every assertion
+//! reads a counter.
 
 use repro::net::wire::{self, Frame};
 use repro::net::{run_load, LoadSpec, PipelineServer, ServeClient, ServerConfig};
 use repro::pipelines::{RunConfig, Toggles};
 use repro::service::{PipelineService, Priority, ServiceConfig};
+use std::net::TcpStream;
 use std::sync::Arc;
 
 fn tiny() -> RunConfig {
@@ -39,6 +52,19 @@ fn open(names: &[&str], paused: bool) -> Arc<PipelineService> {
         )
         .expect("tabular pipelines always open"),
     )
+}
+
+/// Bounded liveness spin: wait for a counter condition, panic after a
+/// generous cap so a hang fails loudly instead of wedging the suite.
+/// Assertions always come from counters AFTER the condition holds.
+fn spin_until(what: &str, mut cond: impl FnMut() -> bool) {
+    for _ in 0..10_000 {
+        if cond() {
+            return;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(1));
+    }
+    panic!("timed out waiting for {what}");
 }
 
 #[test]
@@ -263,4 +289,372 @@ fn closed_loop_load_generator_balances_server_and_client_ledgers() {
     let stats = svc.stats();
     assert_eq!(stats.completed, total);
     assert!(stats.balances(), "{stats:?}");
+}
+
+#[test]
+fn connections_past_max_conns_get_a_first_class_server_full_shed() {
+    // Two live connections fill a max_conns=2 server. The third connect
+    // is answered with Shed(ServerFull) — a parseable frame, never a
+    // silent RST — and counted `rejected`, never `accepted`. Draining
+    // one connection frees the slot and the next connect is admitted.
+    let svc = open(&["census"], false);
+    let server = PipelineServer::start(
+        Arc::clone(&svc),
+        "127.0.0.1:0",
+        ServerConfig { max_conns: 2, ..Default::default() },
+    )
+    .unwrap();
+    let a = ServeClient::connect(server.local_addr(), "t-full-a").unwrap();
+    let mut b = ServeClient::connect(server.local_addr(), "t-full-b").unwrap();
+
+    // Raw socket, no Hello: the refusal frame arrives, then a clean EOF.
+    let mut raw = TcpStream::connect(server.local_addr()).unwrap();
+    match wire::read_frame(&mut raw).unwrap().unwrap() {
+        Frame::Shed { id, cause, waited_us, .. } => {
+            assert_eq!(id, 0, "a connection-level shed correlates to no request");
+            assert_eq!(cause, wire::ShedCause::ServerFull);
+            assert_eq!(waited_us, 0);
+        }
+        other => panic!("expected Shed(ServerFull), got {}", other.kind()),
+    }
+    assert!(wire::read_frame(&mut raw).unwrap().is_none(), "closed after the refusal");
+    drop(raw);
+
+    // The typed client surfaces the same refusal as a typed error.
+    match ServeClient::connect(server.local_addr(), "t-full-c") {
+        Ok(_) => panic!("connect past max_conns must be rejected"),
+        Err(wire::WireError::Rejected(cause)) => {
+            assert_eq!(cause, wire::ShedCause::ServerFull)
+        }
+        Err(other) => panic!("expected Rejected(ServerFull), got {other}"),
+    }
+
+    // Retiring a connection frees its slot.
+    let (done, shed, failed, _) = a.drain().unwrap();
+    assert_eq!((done, shed, failed), (0, 0, 0));
+    spin_until("drained connection frees its slot", || server.report().drained == 1);
+    let c = ServeClient::connect(server.local_addr(), "t-full-c")
+        .expect("slot freed by the drain");
+    let (done, _, _, _) = c.drain().unwrap();
+    assert_eq!(done, 0);
+    b.send("census", Priority::Normal, None, wire::WirePayload::Synthetic).unwrap();
+    match b.recv().unwrap() {
+        Frame::Completed(_) => {}
+        other => panic!("expected Completed, got {}", other.kind()),
+    }
+    b.drain().unwrap();
+
+    let net = server.drain();
+    assert_eq!(net.accepted, 3, "rejected connections never count as accepted");
+    assert_eq!(net.rejected, 2);
+    assert_eq!(net.drained, 3);
+    assert!(net.balanced(), "{net:?}");
+}
+
+#[test]
+fn idle_and_half_open_connections_are_reaped_but_busy_ones_survive() {
+    // idle_after=2 ticks. Three connections: one with a request pinned
+    // in flight by the paused service (must survive), one established
+    // but idle (reaped_idle), one that never says Hello — the
+    // half-open handshake that used to spin a thread forever
+    // (reaped_handshake). Every assertion is a ledger counter; the spin
+    // only bounds liveness.
+    let svc = open(&["census"], true);
+    let server = PipelineServer::start(
+        Arc::clone(&svc),
+        "127.0.0.1:0",
+        ServerConfig { idle_after: 2, ..Default::default() },
+    )
+    .unwrap();
+    let mut busy = ServeClient::connect(server.local_addr(), "t-busy").unwrap();
+    busy.send("census", Priority::Normal, None, wire::WirePayload::Synthetic).unwrap();
+    spin_until("busy request admitted", || {
+        server.report().tenants.get("t-busy").is_some_and(|t| t.admitted == 1)
+    });
+    let mut idle = ServeClient::connect(server.local_addr(), "t-idle").unwrap();
+    let half_open = TcpStream::connect(server.local_addr()).unwrap();
+    spin_until("reaper retires the idle and half-open connections", || {
+        let r = server.report();
+        r.reaped_idle == 1 && r.reaped_handshake == 1
+    });
+    let report = server.report();
+    assert_eq!(report.accepted, 3);
+    assert_eq!(report.drained, 0);
+    assert_eq!(report.active(), 1, "the connection with work in flight survives the reaper");
+    // The reaped established connection was closed with a Goodbye, not
+    // a silent disconnect.
+    match idle.recv().unwrap() {
+        Frame::Goodbye { completed, shed, failed, .. } => {
+            assert_eq!((completed, shed, failed), (0, 0, 0));
+        }
+        other => panic!("expected Goodbye from the reaper, got {}", other.kind()),
+    }
+    drop(idle);
+    drop(half_open);
+
+    // Drain the busy connection BEFORE resuming: the conn task enters
+    // its flush state (where the reaper never applies) while the ticket
+    // is still pending, so the post-completion outcome is deterministic.
+    // frames_in so far: busy Hello + Request, idle Hello = 3; the Drain
+    // frame makes 4.
+    let drainer = std::thread::spawn(move || busy.drain().unwrap());
+    spin_until("drain frame read", || server.report().frames_in == 4);
+    svc.resume();
+    let (done, shed, failed, _) = drainer.join().expect("drain thread");
+    assert_eq!((done, shed, failed), (1, 0, 0), "the pinned request resolved and flushed");
+
+    let net = server.drain();
+    assert_eq!(net.accepted, 3);
+    assert_eq!(net.drained, 1);
+    assert_eq!((net.reaped_idle, net.reaped_handshake), (1, 1));
+    assert_eq!(net.accepted, net.drained + net.reaped(), "reaps extend the drain balance");
+    assert!(net.balanced(), "{net:?}");
+    let t = &net.tenants["t-busy"];
+    assert_eq!((t.admitted, t.completed), (1, 1));
+}
+
+#[test]
+fn tenant_stats_returns_only_the_callers_ledger() {
+    // A tenant polls ITS OWN server-side ledger over its connection and
+    // gets exactly what the server's full report holds for it — scoped:
+    // the other tenant's counters never ride the reply.
+    let svc = open(&["census"], false);
+    let server =
+        PipelineServer::start(Arc::clone(&svc), "127.0.0.1:0", ServerConfig::default())
+            .unwrap();
+    let mut a = ServeClient::connect(server.local_addr(), "t-a").unwrap();
+    let mut b = ServeClient::connect(server.local_addr(), "t-b").unwrap();
+    for (client, calls) in [(&mut a, 1), (&mut b, 2)] {
+        for _ in 0..calls {
+            match client
+                .call("census", Priority::Normal, None, wire::WirePayload::Synthetic)
+                .unwrap()
+            {
+                Frame::Completed(_) => {}
+                other => panic!("expected Completed, got {}", other.kind()),
+            }
+        }
+    }
+    let la = a.tenant_stats().unwrap();
+    assert_eq!((la.admitted, la.completed, la.shed, la.failed), (1, 1, 0, 0));
+    let lb = b.tenant_stats().unwrap();
+    assert_eq!((lb.admitted, lb.completed, lb.shed, lb.failed), (2, 2, 0, 0));
+    // Scoped view == the server's own ledger for that tenant, exactly.
+    let report = server.report();
+    assert_eq!(la, report.tenants["t-a"]);
+    assert_eq!(lb, report.tenants["t-b"]);
+    a.drain().unwrap();
+    b.drain().unwrap();
+    let net = server.drain();
+    assert!(net.balanced(), "{net:?}");
+}
+
+#[test]
+fn connection_tasks_multiplex_on_the_services_shared_pool() {
+    // An ExecMode::Async service owns the shared cooperative pool;
+    // socket tasks ride the SAME pool as plan stages. Pinned from
+    // counters: the pool spawned at least one task per connection, every
+    // park was woken (sockets parked instead of spinning threads), and
+    // there is no per-connection handler thread anywhere in the process.
+    use repro::coordinator::ExecMode;
+    let svc = Arc::new(
+        PipelineService::open(
+            &["census", "plasticc"],
+            ServiceConfig {
+                defaults: RunConfig { exec: ExecMode::Async(2), ..tiny() },
+                queue_depth: 32,
+                workers: 2,
+                start_paused: false,
+                skip_unavailable: false,
+            },
+        )
+        .unwrap(),
+    );
+    assert!(svc.scheduler_counters().is_some(), "async service owns a shared pool");
+    let server =
+        PipelineServer::start(Arc::clone(&svc), "127.0.0.1:0", ServerConfig::default())
+            .unwrap();
+    let spec = LoadSpec {
+        clients: 3,
+        requests: 6,
+        mix: vec![("census".to_string(), 2), ("plasticc".to_string(), 1)],
+    };
+    let load = run_load(server.local_addr(), &spec).unwrap();
+    assert!(load.balances(), "{load:?}");
+
+    // With a live connection open, the process still has no
+    // per-connection handler thread — the connection is a pool task.
+    let live = ServeClient::connect(server.local_addr(), "t-live").unwrap();
+    #[cfg(target_os = "linux")]
+    {
+        let mut names = Vec::new();
+        for entry in std::fs::read_dir("/proc/self/task").unwrap() {
+            let comm = entry.unwrap().path().join("comm");
+            if let Ok(name) = std::fs::read_to_string(comm) {
+                names.push(name.trim().to_string());
+            }
+        }
+        assert!(
+            names.iter().all(|n| !n.starts_with("pipeline-server-conn")),
+            "per-connection handler threads found: {names:?}"
+        );
+    }
+    live.drain().unwrap();
+    assert_eq!(server.lane_count(), 0, "no lanes held once nothing is in flight");
+
+    let net = server.drain();
+    // 3 clients x 2 mix entries + the liveness probe = 7 connections.
+    assert_eq!(net.accepted, 7);
+    assert_eq!(net.drained, 7);
+    assert!(net.balanced(), "{net:?}");
+    let sr = svc.scheduler_counters().unwrap();
+    assert!(sr.tasks_spawned >= 7, "one pool task per connection (plus plan tasks): {sr:?}");
+    assert!(sr.parked > 0, "socket tasks parked on the shared pool: {sr:?}");
+    assert_eq!(sr.parked, sr.woken, "every park was woken: {sr:?}");
+    assert!(sr.balanced(), "{sr:?}");
+}
+
+#[test]
+fn one_shot_tenant_churn_leaves_no_lane_entries_behind() {
+    // Twelve tenants connect, run one request each, and leave. The lane
+    // map must return to EMPTY after every release-to-zero (the old map
+    // kept a dead entry per tenant forever); the ledger — whose job IS
+    // history — keeps all twelve.
+    let svc = open(&["census"], false);
+    let server =
+        PipelineServer::start(Arc::clone(&svc), "127.0.0.1:0", ServerConfig::default())
+            .unwrap();
+    for i in 0..12 {
+        let tenant = format!("t-churn-{i:02}");
+        let mut c = ServeClient::connect(server.local_addr(), &tenant).unwrap();
+        match c.call("census", Priority::Normal, None, wire::WirePayload::Synthetic).unwrap() {
+            Frame::Completed(_) => {}
+            other => panic!("expected Completed, got {}", other.kind()),
+        }
+        // The lane released BEFORE the response frame was written, so
+        // having read the response proves the entry is already gone.
+        assert_eq!(server.lane_count(), 0, "lane entry leaked after {tenant}");
+        let (done, shed, failed, _) = c.drain().unwrap();
+        assert_eq!((done, shed, failed), (1, 0, 0));
+    }
+    let net = server.drain();
+    assert_eq!(net.accepted, 12);
+    assert_eq!(net.drained, 12);
+    assert_eq!(net.tenants.len(), 12, "the ledger keeps per-tenant history");
+    assert!(net.tenants.values().all(|t| t.admitted == 1 && t.completed == 1), "{net:?}");
+    assert!(net.balanced(), "{net:?}");
+}
+
+#[test]
+fn protocol_violating_first_frame_is_counted_and_answered() {
+    // A valid frame that is not Hello arrives first. The server READ
+    // it, so the ledger must count it (the old path dropped it from
+    // frames_in), and the peer gets a zero-counter Goodbye, not a
+    // silent close.
+    let svc = open(&["census"], false);
+    let server =
+        PipelineServer::start(Arc::clone(&svc), "127.0.0.1:0", ServerConfig::default())
+            .unwrap();
+    let mut raw = TcpStream::connect(server.local_addr()).unwrap();
+    wire::write_frame(&mut raw, &Frame::Drain).unwrap();
+    match wire::read_frame(&mut raw).unwrap().unwrap() {
+        Frame::Goodbye { completed, shed, failed, shed_by_cause } => {
+            assert_eq!((completed, shed, failed), (0, 0, 0));
+            assert_eq!(shed_by_cause, [0; wire::SHED_CAUSE_COUNT]);
+        }
+        other => panic!("expected Goodbye, got {}", other.kind()),
+    }
+    assert!(wire::read_frame(&mut raw).unwrap().is_none(), "closed after the refusal");
+    drop(raw);
+    let net = server.drain();
+    assert_eq!(net.accepted, 1);
+    assert_eq!(net.drained, 1);
+    assert_eq!(net.frames_in, 1, "the violating frame IS counted");
+    assert_eq!(net.frames_out, 1, "exactly the Goodbye went out");
+    assert!(net.balanced(), "{net:?}");
+}
+
+#[test]
+fn server_drain_completes_while_connections_park_at_the_inflight_cap() {
+    // A connection parked AT conn_inflight (pending full, service
+    // paused, reading nothing) must still complete a server drain: the
+    // timer wakes the parked task, it observes the drain flag, flushes
+    // both tickets once the service resumes, and closes with an honest
+    // Goodbye — zero lost responses.
+    let cap = 2u64;
+    let svc = open(&["census"], true);
+    let server = PipelineServer::start(
+        Arc::clone(&svc),
+        "127.0.0.1:0",
+        ServerConfig { conn_inflight: cap as usize, ..Default::default() },
+    )
+    .unwrap();
+    let mut client = ServeClient::connect(server.local_addr(), "t-cap").unwrap();
+    for _ in 0..4 {
+        client.send("census", Priority::Normal, None, wire::WirePayload::Synthetic).unwrap();
+    }
+    // The task admits exactly `cap` requests then parks; with the
+    // service paused nothing can resolve, so admitted can never exceed
+    // the cap — the spin bounds liveness, the counter is the assertion.
+    spin_until("connection parked at its in-flight cap", || {
+        server.report().tenants.get("t-cap").is_some_and(|t| t.admitted == cap)
+    });
+    assert_eq!(server.report().tenants["t-cap"].admitted, cap);
+
+    let addr = server.local_addr();
+    let drainer = std::thread::spawn(move || server.drain());
+    // Order matters: the drain flag must be visibly set before the
+    // service resumes, or the waking task could admit the two unread
+    // requests. The accept loop retires (and new connects are refused)
+    // only AFTER the flag is stored, so this spin is the barrier.
+    spin_until("accept loop retired", || TcpStream::connect(addr).is_err());
+    svc.resume();
+    let mut completed = 0u64;
+    loop {
+        match client.recv().unwrap() {
+            Frame::Completed(_) => completed += 1,
+            Frame::Goodbye { completed: done, shed, failed, .. } => {
+                assert_eq!((done, shed, failed), (cap, 0, 0));
+                break;
+            }
+            other => panic!("unexpected {} during drain", other.kind()),
+        }
+    }
+    assert_eq!(completed, cap, "every parked ticket flushed, zero lost");
+    let net = drainer.join().expect("drain thread");
+    assert_eq!(net.accepted, 1);
+    assert_eq!(net.drained, 1);
+    assert!(net.balanced(), "{net:?}");
+    let t = &net.tenants["t-cap"];
+    assert_eq!((t.admitted, t.completed), (cap, cap), "unread requests were never admitted");
+}
+
+#[test]
+fn long_lived_server_drains_connections_as_it_runs() {
+    // Regression for the JoinHandle hoard: connection state is fully
+    // retired WHILE the server keeps running — the drained counter grows
+    // live and active() returns to zero after every departure, without
+    // a server shutdown to sweep up.
+    let svc = open(&["census"], false);
+    let server =
+        PipelineServer::start(Arc::clone(&svc), "127.0.0.1:0", ServerConfig::default())
+            .unwrap();
+    for i in 0..5u64 {
+        let mut c = ServeClient::connect(server.local_addr(), "t-seq").unwrap();
+        match c.call("census", Priority::Normal, None, wire::WirePayload::Synthetic).unwrap() {
+            Frame::Completed(_) => {}
+            other => panic!("expected Completed, got {}", other.kind()),
+        }
+        let (done, shed, failed, _) = c.drain().unwrap();
+        assert_eq!((done, shed, failed), (1, 0, 0));
+        spin_until("connection retired while the server runs", || {
+            server.report().drained as u64 == i + 1
+        });
+        assert_eq!(server.report().active(), 0, "no lingering per-connection state");
+    }
+    let net = server.drain();
+    assert_eq!(net.accepted, 5);
+    assert_eq!(net.drained, 5);
+    assert_eq!(net.tenants["t-seq"].completed, 5);
+    assert!(net.balanced(), "{net:?}");
 }
