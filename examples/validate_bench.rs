@@ -1,5 +1,6 @@
 //! Validate persisted benchmark trajectories — the CI smoke gate for
-//! `BENCH_fig11.json` / `BENCH_scaling.json` / `BENCH_serve.json`.
+//! `BENCH_fig11.json` / `BENCH_scaling.json` / `BENCH_serve.json` /
+//! `BENCH_kernels.json`.
 //!
 //! For each file passed on the command line (both files by default),
 //! checks that it parses, that the document header is well-formed
@@ -11,7 +12,10 @@
 //! break sheds out per wire-level `ShedCause` (`shed_by_cause` with
 //! every cause label, summing to `shed`) and carry a top-level `net`
 //! connection ledger whose counters balance (`accepted == drained +
-//! reaped_idle + reaped_handshake` after the bench's drain). Exits
+//! reaped_idle + reaped_handshake` after the bench's drain). Kernel
+//! trajectories (`bench_kernels`) must carry a top-level `kernels`
+//! per-verb section with finite throughput and a row ledger that
+//! balances (vector + scalar rows cover the rows processed). Exits
 //! non-zero with a message naming the first violation.
 //!
 //! ```sh
@@ -42,9 +46,16 @@ fn required_modes(bench: &str) -> &'static [&'static str] {
         // `repro bench-serve` records one pseudo-mode per tenant: the
         // closed-loop serving trajectory over the TCP edge.
         "bench_serve" => &["serve"],
+        // `repro bench-kernels` is a per-verb microbench; it still runs
+        // one tiny sequential census pass so every trajectory carries a
+        // comparable E2E anchor.
+        "bench_kernels" => &["sequential"],
         other => panic!("unknown bench name in trajectory: {other}"),
     }
 }
+
+/// Dataframe verbs the kernel microbench must record.
+const KERNEL_VERBS: &[&str] = &["filter", "with_column", "astype", "dropna", "fillna"];
 
 fn check(path: &str) -> Result<(), String> {
     let text =
@@ -143,6 +154,43 @@ fn check(path: &str) -> Result<(), String> {
                  drained {drained} + reaped {}",
                 reaped_idle + reaped_handshake
             ));
+        }
+    }
+    // Kernel-microbench trajectories carry a per-verb section at the
+    // document root: every verb present, finite throughput, and a
+    // counter ledger that balances (rows attributed to the vector and
+    // scalar paths sum to the rows the verb processed).
+    if bench == "bench_kernels" {
+        let kernels = doc
+            .get("kernels")
+            .ok_or_else(|| format!("{path}: missing `kernels` section"))?;
+        for verb in KERNEL_VERBS {
+            let entry = kernels
+                .get(verb)
+                .ok_or_else(|| format!("{path}: kernels missing verb `{verb}`"))?;
+            let field = |name: &str| -> Result<f64, String> {
+                let v = entry.get(name).and_then(Json::as_f64).ok_or_else(|| {
+                    format!("{path}: kernels.{verb}: missing `{name}`")
+                })?;
+                if !v.is_finite() || v < 0.0 {
+                    return Err(format!("{path}: kernels.{verb}: bad {name} = {v}"));
+                }
+                Ok(v)
+            };
+            let rows = field("rows")?;
+            field("rows_per_s")?;
+            let vector = field("vector_rows")?;
+            let scalar = field("scalar_rows")?;
+            let frac = field("vector_fraction")?;
+            if vector + scalar < rows {
+                return Err(format!(
+                    "{path}: kernels.{verb}: ledger undercounts: \
+                     vector {vector} + scalar {scalar} < rows {rows}"
+                ));
+            }
+            if frac > 1.0 {
+                return Err(format!("{path}: kernels.{verb}: vector_fraction {frac} > 1"));
+            }
         }
     }
     println!(

@@ -71,6 +71,7 @@ pub use scaler::{run_instances, run_instances_timed, LatencyRecorder};
 pub use scaler::{InstanceReport, ScalingReport};
 pub use sched::{Poll, Scheduler, Signal, Task, VirtualScheduler, WaitGroup};
 pub use telemetry::{BatchLedger, BatchReport};
+pub use telemetry::{KernelLedger, KernelReport};
 pub use telemetry::{
     BindReport, Category, OptReport, Report, SchedReport, ShardReport, ShardedReport, StageReport,
 };

@@ -495,6 +495,145 @@ impl BatchReport {
     }
 }
 
+/// Shared atomic counters behind the vectorized kernel layer
+/// (`dataframe/kernels.rs`): every columnar verb that runs a chunked,
+/// branch-free inner loop records the rows it carried on the **vector
+/// path**, and every row that fell back to per-element boxed execution
+/// (string columns, mixed dtypes the kernels don't cover) lands on the
+/// **scalar path**. Like [`BatchLedger`], the counters ride on
+/// [`PipelineResult`](crate::pipelines::PipelineResult) — never the
+/// metric map — so the kernel rewrite stays metric-invisible and tests
+/// assert coverage (vector fraction, mask density) from the ledger
+/// instead of timing.
+///
+/// Unlike `BatchLedger` (per-plan `Arc`), kernels are free functions
+/// deep in `column.rs`/`expr.rs` with no plan context, so the crate
+/// keeps one process-global ledger
+/// ([`kernels::ledger`](crate::dataframe::kernels::ledger), the
+/// [`warm_rpc_count`](crate::runtime::warm_rpc_count) precedent) and
+/// runs isolate their activity with [`KernelReport::since`] deltas.
+/// Total rows are **derived** as `vector_rows + scalar_rows`, so the
+/// balance invariant is structural — concurrent recorders can never
+/// make a snapshot unbalanced.
+#[derive(Debug, Default)]
+pub struct KernelLedger {
+    vector_rows: AtomicUsize,
+    scalar_rows: AtomicUsize,
+    chunks: AtomicUsize,
+    masked_rows: AtomicUsize,
+}
+
+impl KernelLedger {
+    /// A const constructor so the process-global ledger can live in a
+    /// `static` (statics cannot call `Default::default`).
+    pub const fn new() -> KernelLedger {
+        KernelLedger {
+            vector_rows: AtomicUsize::new(0),
+            scalar_rows: AtomicUsize::new(0),
+            chunks: AtomicUsize::new(0),
+            masked_rows: AtomicUsize::new(0),
+        }
+    }
+
+    /// A chunked kernel carried `rows` rows over `chunks` contiguous
+    /// windows, of which `masked` lanes were null (written back through
+    /// the select-via-mask pass rather than branched on).
+    pub fn record_vector(&self, rows: usize, chunks: usize, masked: usize) {
+        self.vector_rows.fetch_add(rows, Ordering::Relaxed);
+        self.chunks.fetch_add(chunks, Ordering::Relaxed);
+        self.masked_rows.fetch_add(masked, Ordering::Relaxed);
+    }
+
+    /// `rows` rows fell back to per-element boxed execution — the
+    /// honest counterweight to [`Self::record_vector`], and the number
+    /// the >90%-vector-coverage acceptance gate watches.
+    pub fn record_scalar(&self, rows: usize) {
+        self.scalar_rows.fetch_add(rows, Ordering::Relaxed);
+    }
+
+    /// Snapshot the counters.
+    pub fn snapshot(&self) -> KernelReport {
+        KernelReport {
+            vector_rows: self.vector_rows.load(Ordering::Relaxed),
+            scalar_rows: self.scalar_rows.load(Ordering::Relaxed),
+            chunks: self.chunks.load(Ordering::Relaxed),
+            masked_rows: self.masked_rows.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Snapshot of a [`KernelLedger`]: vector-vs-scalar row accounting for
+/// one run (or a `since` delta on the process-global ledger).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct KernelReport {
+    /// Rows carried by chunked branch-free kernels.
+    pub vector_rows: usize,
+    /// Rows that fell back to per-element boxed execution.
+    pub scalar_rows: usize,
+    /// Contiguous chunk windows the vector path iterated.
+    pub chunks: usize,
+    /// Null lanes encountered on the vector path (handled by the
+    /// select-via-mask writeback, never a per-element branch).
+    pub masked_rows: usize,
+}
+
+impl KernelReport {
+    /// Total rows through the kernel layer. Derived, not stored: the
+    /// `vector_rows + scalar_rows == rows` balance holds by
+    /// construction on every snapshot.
+    pub fn rows(&self) -> usize {
+        self.vector_rows + self.scalar_rows
+    }
+
+    /// Fraction of rows the vector path carried (0.0 when nothing was
+    /// recorded). The tabular pipelines' acceptance gate: > 0.9.
+    pub fn vector_fraction(&self) -> f64 {
+        let total = self.rows();
+        if total == 0 {
+            0.0
+        } else {
+            self.vector_rows as f64 / total as f64
+        }
+    }
+
+    /// Fraction of vector-path lanes that were null (0.0 when the
+    /// vector path saw no rows).
+    pub fn masked_fraction(&self) -> f64 {
+        if self.vector_rows == 0 {
+            0.0
+        } else {
+            self.masked_rows as f64 / self.vector_rows as f64
+        }
+    }
+
+    /// Internal consistency every snapshot and delta must satisfy:
+    /// masked lanes are a subset of vector lanes, and chunk windows
+    /// never outnumber the rows they covered.
+    pub fn balanced(&self) -> bool {
+        self.masked_rows <= self.vector_rows && self.chunks <= self.vector_rows
+    }
+
+    /// Merge another report into this one (aggregation across runs).
+    pub fn merge(&mut self, other: &KernelReport) {
+        self.vector_rows += other.vector_rows;
+        self.scalar_rows += other.scalar_rows;
+        self.chunks += other.chunks;
+        self.masked_rows += other.masked_rows;
+    }
+
+    /// Counter delta since `earlier` (both snapshots of the monotonic
+    /// process-global ledger) — how a run isolates its own kernel
+    /// activity.
+    pub fn since(&self, earlier: &KernelReport) -> KernelReport {
+        KernelReport {
+            vector_rows: self.vector_rows.saturating_sub(earlier.vector_rows),
+            scalar_rows: self.scalar_rows.saturating_sub(earlier.scalar_rows),
+            chunks: self.chunks.saturating_sub(earlier.chunks),
+            masked_rows: self.masked_rows.saturating_sub(earlier.masked_rows),
+        }
+    }
+}
+
 /// Per-tenant outcome counters on the serving edge: every `Request`
 /// frame a [`PipelineServer`] reads for a tenant is **admitted** into
 /// the ledger, and resolves exactly once as completed, shed (tenant

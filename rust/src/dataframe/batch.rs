@@ -19,7 +19,9 @@
 use super::column::{Column, DType};
 use super::expr::Expr;
 use super::frame::DataFrame;
+use super::kernels;
 use super::FrameError;
+use crate::util::simd;
 use std::sync::Arc;
 
 /// A zero-copy window into a shared column allocation.
@@ -249,7 +251,11 @@ impl ColumnBatch {
         let mask_col = self.eval(pred)?;
         let keep: Vec<bool> = match &mask_col {
             Column::Bool(v, None) => v.clone(),
-            Column::Bool(v, Some(m)) => v.iter().zip(m).map(|(b, valid)| *b && *valid).collect(),
+            Column::Bool(v, Some(m)) => {
+                let mut keep = v.clone();
+                simd::and_assign(&mut keep, m);
+                keep
+            }
             other => {
                 return Err(FrameError::Other(format!(
                     "filter predicate must be bool, got {}",
@@ -275,21 +281,43 @@ impl ColumnBatch {
         self.with_column(name, cast)
     }
 
-    /// Batched `Engine::Optimized` `fillna` on an f64 column. A column
-    /// with no null mask is returned untouched — the view keeps sharing
-    /// its parent (zero-copy no-op), exactly as the per-item kernel
-    /// clones the column unchanged.
+    /// Batched `Engine::Optimized` `fillna` on a numeric column,
+    /// mirroring [`super::ops::fillna_f64`]'s optimized arm: string and
+    /// bool columns are a type error, a masked f64 window fills and
+    /// drops its mask, and a masked i64 column widens to f64 exactly
+    /// when the per-item verb would. The widen decision reads the
+    /// *parent's* whole mask (not just this window's slice of it) so
+    /// every batch split from one parent picks the same output dtype and
+    /// their concat reproduces the whole-frame result bit for bit. A
+    /// column with no null mask is returned untouched — the view keeps
+    /// sharing its parent (zero-copy no-op), exactly as the per-item
+    /// kernel clones the column unchanged.
     pub fn fillna_f64(&self, name: &str, value: f64) -> Result<ColumnBatch, FrameError> {
         let v = self.col(name)?;
+        if matches!(v.dtype(), DType::Str | DType::Bool) {
+            return Err(FrameError::TypeMismatch {
+                col: name.to_string(),
+                expected: "f64 or i64",
+                got: v.dtype().name(),
+            });
+        }
+        if v.is_empty() {
+            return Ok(self.clone());
+        }
+        let range = v.offset..v.offset + v.len;
         match v.parent.as_ref() {
             Column::F64(vals, Some(m)) => {
-                let range = v.offset..v.offset + v.len;
-                let out: Vec<f64> = vals[range.clone()]
-                    .iter()
-                    .zip(&m[range])
-                    .map(|(x, ok)| if *ok { *x } else { value })
-                    .collect();
+                let out = kernels::fill_nulls(&vals[range.clone()], &m[range], value);
                 self.with_column(name, Column::f64(out))
+            }
+            Column::I64(vals, Some(m)) => {
+                if simd::count_invalid(m) > 0 {
+                    let out =
+                        kernels::fill_nulls_widen(&vals[range.clone()], &m[range], value);
+                    self.with_column(name, Column::f64(out))
+                } else {
+                    self.with_column(name, Column::i64(vals[range].to_vec()))
+                }
             }
             _ => Ok(self.clone()),
         }
@@ -476,6 +504,38 @@ mod tests {
             })
             .collect();
         assert_eq!(ColumnBatch::concat(&batched).unwrap(), whole);
+    }
+
+    #[test]
+    fn fillna_i64_widens_consistently_across_batches() {
+        // A partially-null i64 column split so one batch window has no
+        // nulls: the widen decision reads the parent's whole mask, so
+        // both batches still widen and the concat matches the per-item
+        // whole-frame verb bit for bit.
+        let df = DataFrame::from_cols(vec![(
+            "k",
+            Column::I64(
+                vec![1, 2, 3, 4, 5, 6],
+                Some(vec![true, true, true, false, true, false]),
+            ),
+        )]);
+        let whole = ops::fillna_f64(&df, "k", -1.5, Engine::Optimized).unwrap();
+        let parts: Vec<ColumnBatch> = ColumnBatch::from_frame(df)
+            .split(3)
+            .into_iter()
+            .map(|b| b.fillna_f64("k", -1.5).unwrap())
+            .collect();
+        assert_eq!(ColumnBatch::concat(&parts).unwrap(), whole);
+        assert_eq!(whole.col("k").unwrap().dtype(), DType::F64);
+    }
+
+    #[test]
+    fn fillna_rejects_non_numeric_like_the_per_item_verb() {
+        let batch = ColumnBatch::from_frame(sample());
+        assert!(matches!(
+            batch.fillna_f64("tag", 0.0),
+            Err(FrameError::TypeMismatch { .. })
+        ));
     }
 
     #[test]

@@ -1,5 +1,13 @@
 //! Typed columns with null masks, plus the boxed [`Value`] used by the
 //! baseline row-interpreter.
+//!
+//! The range kernels (`filter_range`, `cast_range`, `null_count_range`)
+//! run on the chunked branch-free layer in [`super::kernels`]: numeric
+//! and bool windows take the vector path (masks handled as separate
+//! bitmap passes), string windows keep the per-element clone/parse
+//! loops and are ledgered as scalar-fallback rows.
+
+use super::kernels;
 
 /// Column data type.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -309,33 +317,34 @@ impl Column {
     pub fn filter_range(&self, keep: &[bool], offset: usize) -> Column {
         debug_assert!(offset + keep.len() <= self.len());
         let end = offset + keep.len();
-        let fm = |m: &Option<Vec<bool>>| -> Option<Vec<bool>> {
-            m.as_ref().map(|m| {
-                m[offset..end].iter().zip(keep).filter(|(_, k)| **k).map(|(v, _)| *v).collect()
-            })
-        };
+        let mwin = |m: &Option<Vec<bool>>| m.as_ref().map(|m| &m[offset..end]);
         match self {
-            Column::F64(v, m) => Column::F64(
-                v[offset..end].iter().zip(keep).filter(|(_, k)| **k).map(|(x, _)| *x).collect(),
-                fm(m),
-            ),
-            Column::I64(v, m) => Column::I64(
-                v[offset..end].iter().zip(keep).filter(|(_, k)| **k).map(|(x, _)| *x).collect(),
-                fm(m),
-            ),
-            Column::Str(v, m) => Column::Str(
-                v[offset..end]
+            Column::F64(v, m) => {
+                let (vals, mask) = kernels::compact(&v[offset..end], mwin(m), keep);
+                Column::F64(vals, mask)
+            }
+            Column::I64(v, m) => {
+                let (vals, mask) = kernels::compact(&v[offset..end], mwin(m), keep);
+                Column::I64(vals, mask)
+            }
+            Column::Bool(v, m) => {
+                let (vals, mask) = kernels::compact(&v[offset..end], mwin(m), keep);
+                Column::Bool(vals, mask)
+            }
+            Column::Str(v, m) => {
+                // Strings clone per element — the scalar fallback path.
+                kernels::note_scalar(keep.len());
+                let vals = v[offset..end]
                     .iter()
                     .zip(keep)
                     .filter(|(_, k)| **k)
                     .map(|(x, _)| x.clone())
-                    .collect(),
-                fm(m),
-            ),
-            Column::Bool(v, m) => Column::Bool(
-                v[offset..end].iter().zip(keep).filter(|(_, k)| **k).map(|(x, _)| *x).collect(),
-                fm(m),
-            ),
+                    .collect();
+                let mask = mwin(m).map(|m| {
+                    m.iter().zip(keep).filter(|(_, k)| **k).map(|(v, _)| *v).collect()
+                });
+                Column::Str(vals, mask)
+            }
         }
     }
 
@@ -356,7 +365,7 @@ impl Column {
     /// Null count over rows `offset..offset + len` only.
     pub fn null_count_range(&self, offset: usize, len: usize) -> usize {
         match self.mask() {
-            Some(m) => m[offset..offset + len].iter().filter(|v| !**v).count(),
+            Some(m) => crate::util::simd::count_invalid(&m[offset..offset + len]),
             None => 0,
         }
     }
@@ -386,8 +395,70 @@ impl Column {
     /// Cast rows `offset..offset + len` to another dtype. Whole-column
     /// [`Column::cast`] delegates here, so batched and per-item execution
     /// share one kernel and produce bit-identical values.
+    ///
+    /// Numeric/bool source-target pairs run the chunked branch-free
+    /// kernel (compute every lane, blend the zero placeholder over null
+    /// lanes, normalized mask — exactly the per-element loop's output).
+    /// String sources parse fallibly and string targets format per
+    /// element, so both stay on the scalar path.
     pub fn cast_range(&self, to: DType, offset: usize, len: usize) -> Column {
         debug_assert!(offset + len <= self.len());
+        let end = offset + len;
+        let mwin = self.mask().map(|m| &m[offset..end]);
+        match (self, to) {
+            (Column::Str(..), _) | (_, DType::Str) => {
+                self.cast_range_scalar(to, offset, len)
+            }
+            (Column::F64(v, _), DType::F64) => {
+                let (out, m) = kernels::map_masked(&v[offset..end], mwin, 0.0, |x| x);
+                Column::F64(out, m)
+            }
+            (Column::I64(v, _), DType::F64) => {
+                let (out, m) =
+                    kernels::map_masked(&v[offset..end], mwin, 0.0, |x| x as f64);
+                Column::F64(out, m)
+            }
+            (Column::Bool(v, _), DType::F64) => {
+                let (out, m) =
+                    kernels::map_masked(&v[offset..end], mwin, 0.0, |x| x as i64 as f64);
+                Column::F64(out, m)
+            }
+            (Column::F64(v, _), DType::I64) => {
+                let (out, m) =
+                    kernels::map_masked(&v[offset..end], mwin, 0, |x| x as i64);
+                Column::I64(out, m)
+            }
+            (Column::I64(v, _), DType::I64) => {
+                let (out, m) = kernels::map_masked(&v[offset..end], mwin, 0, |x| x);
+                Column::I64(out, m)
+            }
+            (Column::Bool(v, _), DType::I64) => {
+                let (out, m) =
+                    kernels::map_masked(&v[offset..end], mwin, 0, |x| x as i64);
+                Column::I64(out, m)
+            }
+            (Column::F64(v, _), DType::Bool) => {
+                let (out, m) =
+                    kernels::map_masked(&v[offset..end], mwin, false, |x| x != 0.0);
+                Column::Bool(out, m)
+            }
+            (Column::I64(v, _), DType::Bool) => {
+                let (out, m) =
+                    kernels::map_masked(&v[offset..end], mwin, false, |x| x != 0);
+                Column::Bool(out, m)
+            }
+            (Column::Bool(v, _), DType::Bool) => {
+                let (out, m) = kernels::map_masked(&v[offset..end], mwin, false, |x| x);
+                Column::Bool(out, m)
+            }
+        }
+    }
+
+    /// Per-element cast loop: the scalar fallback for string sources
+    /// (fallible parses) and string targets (formatting). Kept
+    /// bit-identical to the pre-kernel implementation.
+    fn cast_range_scalar(&self, to: DType, offset: usize, len: usize) -> Column {
+        kernels::note_scalar(len);
         let n = len;
         match to {
             DType::F64 => {

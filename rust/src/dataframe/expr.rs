@@ -8,7 +8,9 @@
 
 use super::column::{Column, Value};
 use super::frame::DataFrame;
+use super::kernels;
 use super::FrameError;
+use crate::util::simd;
 
 /// Binary operator.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -171,7 +173,10 @@ impl Expr {
             Expr::Not(e) => {
                 let c = e.eval_with(n, resolve)?;
                 match c {
-                    Column::Bool(v, m) => Column::Bool(v.iter().map(|b| !b).collect(), m),
+                    Column::Bool(v, m) => {
+                        let flipped = kernels::not_bool(&v, m.as_deref());
+                        Column::Bool(flipped, m)
+                    }
                     other => {
                         return Err(FrameError::Other(format!(
                             "cannot negate {}",
@@ -182,8 +187,7 @@ impl Expr {
             }
             Expr::IsNull(e) => {
                 let c = e.eval_with(n, resolve)?;
-                let v: Vec<bool> = (0..c.len()).map(|i| !c.is_valid(i)).collect();
-                Column::bool(v)
+                Column::bool(kernels::is_null_mask(c.mask(), c.len()))
             }
             Expr::Bin(op, a, b) => {
                 let ca = a.eval_with(n, resolve)?;
@@ -283,83 +287,139 @@ fn eval_scalar(op: BinOp, a: &Value, b: &Value) -> Result<Value, FrameError> {
     })
 }
 
-/// Vectorized (optimized) kernel: dispatch once per column pair, then run a
-/// tight typed loop. Implemented by delegating per-element to the scalar
-/// kernel only for the rare mixed/null cases; the hot homogeneous-numeric
-/// cases get dedicated loops.
+/// Vectorized (optimized) kernel: dispatch once per column pair onto the
+/// chunked branch-free kernels in [`super::kernels`] — masked or not.
+/// Nulls ride a separate validity bitmap: every lane is computed, then
+/// the `from_values` placeholder is blended over invalid lanes, so the
+/// output is bit-identical to the boxed per-element path without a
+/// single `Option`/`match` in the hot loop. Only genuinely scalar work
+/// remains on the fallback: string operands, bool∘numeric mixes, and
+/// all-null windows (where `from_values` dtype inference kicks in).
 fn eval_vectorized(op: BinOp, a: &Column, b: &Column) -> Result<Column, FrameError> {
     use BinOp::*;
     let n = a.len();
     debug_assert_eq!(n, b.len());
-    // Hot path 1: f64 ∘ f64, no nulls.
-    if let (Some(va), Some(vb)) = (a.as_f64(), b.as_f64()) {
-        if a.mask().is_none() && b.mask().is_none() {
-            return Ok(match op {
-                Add => Column::f64(va.iter().zip(vb).map(|(x, y)| x + y).collect()),
-                Sub => Column::f64(va.iter().zip(vb).map(|(x, y)| x - y).collect()),
-                Mul => Column::f64(va.iter().zip(vb).map(|(x, y)| x * y).collect()),
-                Div => {
-                    let mut out = vec![0.0; n];
-                    let mut mask = vec![true; n];
-                    let mut any = false;
-                    for i in 0..n {
-                        if vb[i] == 0.0 {
-                            mask[i] = false;
-                            any = true;
-                        } else {
-                            out[i] = va[i] / vb[i];
-                        }
-                    }
-                    Column::F64(out, any.then_some(mask))
-                }
-                Eq => Column::bool(va.iter().zip(vb).map(|(x, y)| x == y).collect()),
-                Ne => Column::bool(va.iter().zip(vb).map(|(x, y)| x != y).collect()),
-                Lt => Column::bool(va.iter().zip(vb).map(|(x, y)| x < y).collect()),
-                Le => Column::bool(va.iter().zip(vb).map(|(x, y)| x <= y).collect()),
-                Gt => Column::bool(va.iter().zip(vb).map(|(x, y)| x > y).collect()),
-                Ge => Column::bool(va.iter().zip(vb).map(|(x, y)| x >= y).collect()),
-                And | Or => return Err(FrameError::Other("logic on floats".into())),
-            });
+    // Bool logic first: And/Or on anything but bools must surface the
+    // scalar kernel's type error (or its all-null quirks) exactly.
+    if matches!(op, And | Or) {
+        if let (Column::Bool(va, ma), Column::Bool(vb, mb)) = (a, b) {
+            let v = if matches!(op, And) {
+                kernels::bool_and(va, ma.as_deref(), vb, mb.as_deref())
+            } else {
+                kernels::bool_or(va, ma.as_deref(), vb, mb.as_deref())
+            };
+            return Ok(Column::bool(v));
         }
+        return generic_vectorized(op, a, b, n);
     }
-    // Hot path 2: i64 ∘ i64, no nulls.
-    if let (Some(va), Some(vb)) = (a.as_i64(), b.as_i64()) {
-        if a.mask().is_none() && b.mask().is_none() {
-            return Ok(match op {
-                Add => Column::i64(va.iter().zip(vb).map(|(x, y)| x.wrapping_add(*y)).collect()),
-                Sub => Column::i64(va.iter().zip(vb).map(|(x, y)| x.wrapping_sub(*y)).collect()),
-                Mul => Column::i64(va.iter().zip(vb).map(|(x, y)| x.wrapping_mul(*y)).collect()),
-                Eq => Column::bool(va.iter().zip(vb).map(|(x, y)| x == y).collect()),
-                Ne => Column::bool(va.iter().zip(vb).map(|(x, y)| x != y).collect()),
-                Lt => Column::bool(va.iter().zip(vb).map(|(x, y)| x < y).collect()),
-                Le => Column::bool(va.iter().zip(vb).map(|(x, y)| x <= y).collect()),
-                Gt => Column::bool(va.iter().zip(vb).map(|(x, y)| x > y).collect()),
-                Ge => Column::bool(va.iter().zip(vb).map(|(x, y)| x >= y).collect()),
-                _ => {
-                    // Div and logic fall through to the generic path.
-                    generic_vectorized(op, a, b, n)?
-                }
-            });
+    let fast = match (a, b) {
+        (Column::F64(va, ma), Column::F64(vb, mb)) => {
+            numeric_binop(op, va, ma.as_deref(), vb, mb.as_deref())
         }
-    }
-    // Hot path 3: bool logic, no nulls.
-    if let (Some(va), Some(vb)) = (a.as_bool(), b.as_bool()) {
-        if a.mask().is_none() && b.mask().is_none() {
-            match op {
-                And => {
-                    return Ok(Column::bool(va.iter().zip(vb).map(|(x, y)| *x && *y).collect()))
-                }
-                Or => {
-                    return Ok(Column::bool(va.iter().zip(vb).map(|(x, y)| *x || *y).collect()))
-                }
-                _ => {}
-            }
+        (Column::I64(va, ma), Column::I64(vb, mb)) => {
+            int_binop(op, va, ma.as_deref(), vb, mb.as_deref())
         }
+        // Mixed numeric widens the i64 side to f64 (exactly the boxed
+        // evaluator's `as_f64` rule), then runs the f64 kernel.
+        (Column::I64(va, ma), Column::F64(vb, mb)) => {
+            let mut wide = vec![0.0; n];
+            simd::map_into(va, &mut wide, |x| x as f64);
+            numeric_binop(op, &wide, ma.as_deref(), vb, mb.as_deref())
+        }
+        (Column::F64(va, ma), Column::I64(vb, mb)) => {
+            let mut wide = vec![0.0; n];
+            simd::map_into(vb, &mut wide, |x| x as f64);
+            numeric_binop(op, va, ma.as_deref(), &wide, mb.as_deref())
+        }
+        _ => None,
+    };
+    match fast {
+        Some(col) => Ok(col),
+        None => generic_vectorized(op, a, b, n),
     }
-    generic_vectorized(op, a, b, n)
 }
 
+/// f64 ∘ f64 kernels (including widened i64 operands). `None` routes the
+/// caller to the boxed fallback (all-null windows, or And/Or which must
+/// error through the scalar kernel).
+fn numeric_binop(
+    op: BinOp,
+    va: &[f64],
+    ma: Option<&[bool]>,
+    vb: &[f64],
+    mb: Option<&[bool]>,
+) -> Option<Column> {
+    use BinOp::*;
+    let arith = |f: fn(f64, f64) -> f64| {
+        kernels::zip_masked(va, ma, vb, mb, 0.0, f).map(|(v, m)| Column::F64(v, m))
+    };
+    let cmp = |f: fn(f64, f64) -> bool| {
+        kernels::zip_masked(va, ma, vb, mb, false, f).map(|(v, m)| Column::Bool(v, m))
+    };
+    match op {
+        Add => arith(|x, y| x + y),
+        Sub => arith(|x, y| x - y),
+        Mul => arith(|x, y| x * y),
+        // Division by zero is null (the scalar kernel's rule), expressed
+        // as an extra validity predicate — still no branch in the loop.
+        Div => kernels::zip_masked_where(va, ma, vb, mb, 0.0, |_, y| y != 0.0, |x, y| x / y)
+            .map(|(v, m)| Column::F64(v, m)),
+        Eq => cmp(|x, y| x == y),
+        Ne => cmp(|x, y| x != y),
+        Lt => cmp(|x, y| x < y),
+        Le => cmp(|x, y| x <= y),
+        Gt => cmp(|x, y| x > y),
+        Ge => cmp(|x, y| x >= y),
+        And | Or => None,
+    }
+}
+
+/// i64 ∘ i64 kernels. Arithmetic wraps (pandas int semantics), `Div` is
+/// true division to f64 with divisor-zero lanes null.
+fn int_binop(
+    op: BinOp,
+    va: &[i64],
+    ma: Option<&[bool]>,
+    vb: &[i64],
+    mb: Option<&[bool]>,
+) -> Option<Column> {
+    use BinOp::*;
+    let arith = |f: fn(i64, i64) -> i64| {
+        kernels::zip_masked(va, ma, vb, mb, 0i64, f).map(|(v, m)| Column::I64(v, m))
+    };
+    let cmp = |f: fn(i64, i64) -> bool| {
+        kernels::zip_masked(va, ma, vb, mb, false, f).map(|(v, m)| Column::Bool(v, m))
+    };
+    match op {
+        Add => arith(|x, y| x.wrapping_add(y)),
+        Sub => arith(|x, y| x.wrapping_sub(y)),
+        Mul => arith(|x, y| x.wrapping_mul(y)),
+        Div => kernels::zip_masked_where(
+            va,
+            ma,
+            vb,
+            mb,
+            0.0,
+            |_, y| y != 0,
+            |x, y| x as f64 / y as f64,
+        )
+        .map(|(v, m)| Column::F64(v, m)),
+        Eq => cmp(|x, y| x == y),
+        Ne => cmp(|x, y| x != y),
+        Lt => cmp(|x, y| x < y),
+        Le => cmp(|x, y| x <= y),
+        Gt => cmp(|x, y| x > y),
+        Ge => cmp(|x, y| x >= y),
+        And | Or => None,
+    }
+}
+
+/// Per-element boxed fallback: evaluate the scalar kernel row by row and
+/// rebuild through `from_values` (dtype inference, placeholder
+/// writeback). Ledgered as scalar rows — the honest denominator of the
+/// vector-coverage fraction.
 fn generic_vectorized(op: BinOp, a: &Column, b: &Column, n: usize) -> Result<Column, FrameError> {
+    kernels::note_scalar(n);
     let mut vals = Vec::with_capacity(n);
     for i in 0..n {
         vals.push(eval_scalar(op, &a.value(i), &b.value(i))?);

@@ -1,0 +1,405 @@
+//! Instrumented columnar verb kernels: the layer between the pure
+//! chunked primitives in [`crate::util::simd`] and the dataframe verbs
+//! (`ops.rs`, `expr.rs`, `column.rs`, `batch.rs`).
+//!
+//! Every function here runs a branch-free inner loop over one
+//! contiguous window of column data, handles nulls as a separate bitmap
+//! pass (compute all lanes unconditionally, then blend the placeholder
+//! over invalid lanes — never a per-element `Option`/`match`), and
+//! records its traffic on the process-global [`KernelLedger`]:
+//!
+//! * **vector rows** — lanes carried by a chunked kernel. One verb pass
+//!   over an `n`-row window records `n` rows exactly once, regardless
+//!   of how many internal passes (compute, mask, select) it makes.
+//! * **scalar rows** — lanes that fell back to per-element boxed or
+//!   clone-heavy execution (string columns, mixed dtypes the kernels
+//!   don't cover, `from_values` reconstruction). Callers report these
+//!   through [`note_scalar`].
+//! * **chunks / masked rows** — window count and null-lane count, so
+//!   [`KernelReport::masked_fraction`] exposes how mask-heavy a
+//!   workload was.
+//!
+//! The ledger is process-global (the
+//! [`warm_rpc_count`](crate::runtime::warm_rpc_count) precedent) rather
+//! than per-plan like [`BatchLedger`](crate::coordinator::telemetry::BatchLedger):
+//! these kernels are free functions deep in the column layer with no
+//! plan context to thread an `Arc` through. Runs isolate their own
+//! activity with [`KernelReport::since`] deltas, and the balance
+//! invariant (`vector_rows + scalar_rows == rows`) is structural — the
+//! total is derived, so concurrent recorders can never skew it.
+//!
+//! # Null-mask contract
+//!
+//! Masks follow `Column` semantics: `true` = valid, `None` = all-valid.
+//! Kernels that feed [`Column::from_values`]-shaped consumers
+//! ([`zip_masked`], [`map_masked`]) **normalize** their output mask —
+//! `None` whenever no lane is null — because `from_values` never emits
+//! an all-true mask. [`compact`] does *not* normalize: `Column::filter`
+//! has always mapped `Some` → `Some` verbatim, and the batched plane's
+//! concat relies on that.
+//!
+//! [`KernelReport::masked_fraction`]: crate::coordinator::telemetry::KernelReport::masked_fraction
+//! [`KernelReport::since`]: crate::coordinator::telemetry::KernelReport::since
+//! [`Column::from_values`]: super::column::Column::from_values
+//! [`Column::filter`]: super::column::Column::filter
+
+use crate::coordinator::telemetry::{KernelLedger, KernelReport};
+use crate::util::simd;
+
+/// The process-global kernel ledger. Snapshot before/after a run and
+/// diff with [`KernelReport::since`] to isolate that run's traffic.
+///
+/// [`KernelReport::since`]: crate::coordinator::telemetry::KernelReport::since
+static LEDGER: KernelLedger = KernelLedger::new();
+
+/// Borrow the process-global ledger.
+pub fn ledger() -> &'static KernelLedger {
+    &LEDGER
+}
+
+/// Snapshot the process-global ledger (convenience for
+/// `ledger().snapshot()`).
+pub fn snapshot() -> KernelReport {
+    LEDGER.snapshot()
+}
+
+/// Record `rows` lanes that ran the per-element fallback path (string
+/// parsing/formatting, boxed `from_values` reconstruction, mixed-dtype
+/// combinations without a dedicated kernel).
+pub fn note_scalar(rows: usize) {
+    LEDGER.record_scalar(rows);
+}
+
+fn note_vector(rows: usize, masked: usize) {
+    LEDGER.record_vector(rows, simd::chunk_count(rows), masked);
+}
+
+/// AND two optional validity masks into one owned mask (`None` when
+/// both inputs are `None`, i.e. every lane valid).
+fn combined_valid(
+    n: usize,
+    ma: Option<&[bool]>,
+    mb: Option<&[bool]>,
+) -> Option<Vec<bool>> {
+    match (ma, mb) {
+        (None, None) => None,
+        (Some(m), None) | (None, Some(m)) => Some(m.to_vec()),
+        (Some(a), Some(b)) => {
+            let mut v = vec![true; n];
+            simd::mask_and(a, b, &mut v);
+            Some(v)
+        }
+    }
+}
+
+/// Shared tail of the binary kernels: count invalid lanes, bail to the
+/// caller's scalar fallback when *every* lane is null (a `from_values`
+/// consumer would then infer the all-null default dtype, which only the
+/// boxed path reproduces), otherwise compute all lanes, blend `fill`
+/// over invalid ones, normalize the mask, and ledger the pass.
+fn finish_zip<T: Copy, V: Copy, U: Copy>(
+    a: &[T],
+    b: &[V],
+    valid: Option<Vec<bool>>,
+    fill: U,
+    f: impl Fn(T, V) -> U,
+) -> Option<(Vec<U>, Option<Vec<bool>>)> {
+    let n = a.len();
+    let invalid = valid.as_ref().map(|v| simd::count_invalid(v)).unwrap_or(0);
+    if n > 0 && invalid == n {
+        return None;
+    }
+    let mut out = vec![fill; n];
+    simd::zip_into(a, b, &mut out, f);
+    let mask = match valid {
+        Some(v) if invalid > 0 => {
+            simd::select_fill(&mut out, &v, fill);
+            Some(v)
+        }
+        _ => None,
+    };
+    note_vector(n, invalid);
+    Some((out, mask))
+}
+
+/// Masked element-wise binary kernel: `out[i] = f(a[i], b[i])` on every
+/// lane, `fill` blended over lanes where either input is null. Returns
+/// `None` when all lanes are null (caller falls back to the boxed
+/// path — see [`finish_zip`]); the returned mask is normalized (`None`
+/// when no lane is null).
+pub fn zip_masked<T: Copy, V: Copy, U: Copy>(
+    a: &[T],
+    ma: Option<&[bool]>,
+    b: &[V],
+    mb: Option<&[bool]>,
+    fill: U,
+    f: impl Fn(T, V) -> U,
+) -> Option<(Vec<U>, Option<Vec<bool>>)> {
+    debug_assert_eq!(a.len(), b.len());
+    let valid = combined_valid(a.len(), ma, mb);
+    finish_zip(a, b, valid, fill, f)
+}
+
+/// [`zip_masked`] plus a per-lane validity predicate evaluated on the
+/// raw operands (division's `divisor != 0` null rule). The predicate
+/// runs as its own branch-free pass and ANDs into the validity bitmap.
+pub fn zip_masked_where<T: Copy, V: Copy, U: Copy>(
+    a: &[T],
+    ma: Option<&[bool]>,
+    b: &[V],
+    mb: Option<&[bool]>,
+    fill: U,
+    valid_when: impl Fn(T, V) -> bool,
+    f: impl Fn(T, V) -> U,
+) -> Option<(Vec<U>, Option<Vec<bool>>)> {
+    let n = a.len();
+    debug_assert_eq!(n, b.len());
+    let mut valid = combined_valid(n, ma, mb).unwrap_or_else(|| vec![true; n]);
+    let mut pred = vec![true; n];
+    simd::zip_into(a, b, &mut pred, valid_when);
+    simd::and_assign(&mut valid, &pred);
+    finish_zip(a, b, Some(valid), fill, f)
+}
+
+/// Masked element-wise unary kernel (the cast shape): `out[i] =
+/// f(src[i])` on every lane, `fill` blended over null lanes, mask
+/// normalized. Unlike [`zip_masked`] there is no all-null bailout — the
+/// caller fixes the output dtype, so an all-null window is just an
+/// all-false mask.
+pub fn map_masked<T: Copy, U: Copy>(
+    src: &[T],
+    mask: Option<&[bool]>,
+    fill: U,
+    f: impl Fn(T) -> U,
+) -> (Vec<U>, Option<Vec<bool>>) {
+    let n = src.len();
+    let mut out = vec![fill; n];
+    simd::map_into(src, &mut out, f);
+    let invalid = mask.map(simd::count_invalid).unwrap_or(0);
+    let out_mask = match mask {
+        Some(m) if invalid > 0 => {
+            simd::select_fill(&mut out, m, fill);
+            Some(m.to_vec())
+        }
+        _ => None,
+    };
+    note_vector(n, invalid);
+    (out, out_mask)
+}
+
+fn logic(
+    a: &[bool],
+    ma: Option<&[bool]>,
+    b: &[bool],
+    mb: Option<&[bool]>,
+    f: impl Fn(bool, bool) -> bool,
+) -> Vec<bool> {
+    let n = a.len();
+    debug_assert_eq!(n, b.len());
+    let mut out = vec![false; n];
+    simd::zip_into(a, b, &mut out, f);
+    let mut masked = 0;
+    if let Some(valid) = combined_valid(n, ma, mb) {
+        masked = simd::count_invalid(&valid);
+        simd::and_assign(&mut out, &valid);
+    }
+    note_vector(n, masked);
+    out
+}
+
+/// `a AND b` with SQL-ish null handling: a null operand makes the lane
+/// valid `false` (never null), matching the boxed evaluator. Output is
+/// therefore always unmasked.
+pub fn bool_and(
+    a: &[bool],
+    ma: Option<&[bool]>,
+    b: &[bool],
+    mb: Option<&[bool]>,
+) -> Vec<bool> {
+    logic(a, ma, b, mb, |x, y| x & y)
+}
+
+/// `a OR b`; like [`bool_and`], any null operand forces the lane to
+/// valid `false` (even `true OR null`), matching the boxed evaluator.
+pub fn bool_or(
+    a: &[bool],
+    ma: Option<&[bool]>,
+    b: &[bool],
+    mb: Option<&[bool]>,
+) -> Vec<bool> {
+    logic(a, ma, b, mb, |x, y| x | y)
+}
+
+/// Logical NOT over a bool buffer (mask handled by the caller, which
+/// passes it through unchanged; `mask` here is only for the ledger's
+/// masked-lane count).
+pub fn not_bool(v: &[bool], mask: Option<&[bool]>) -> Vec<bool> {
+    let n = v.len();
+    let mut out = vec![false; n];
+    simd::map_into(v, &mut out, |b| !b);
+    note_vector(n, mask.map(simd::count_invalid).unwrap_or(0));
+    out
+}
+
+/// The `is_null` predicate as a pure bitmap pass: `true` where the
+/// mask is invalid, all-`false` for an unmasked column.
+pub fn is_null_mask(mask: Option<&[bool]>, n: usize) -> Vec<bool> {
+    match mask {
+        Some(m) => {
+            let mut out = vec![false; n];
+            simd::map_into(m, &mut out, |v| !v);
+            note_vector(n, simd::count_invalid(m));
+            out
+        }
+        None => {
+            note_vector(n, 0);
+            vec![false; n]
+        }
+    }
+}
+
+/// `fillna` on an f64 window: copy, then blend `value` over null lanes.
+/// The result is fully valid, so callers drop the mask.
+pub fn fill_nulls(src: &[f64], mask: &[bool], value: f64) -> Vec<f64> {
+    debug_assert_eq!(src.len(), mask.len());
+    let mut out = src.to_vec();
+    simd::select_fill(&mut out, mask, value);
+    note_vector(src.len(), simd::count_invalid(mask));
+    out
+}
+
+/// `fillna` on an i64 window with nulls: widen to f64 (the boxed
+/// engine's `from_values` inference does the same once the f64 fill
+/// value enters the column) and blend `value` over null lanes.
+pub fn fill_nulls_widen(src: &[i64], mask: &[bool], value: f64) -> Vec<f64> {
+    debug_assert_eq!(src.len(), mask.len());
+    let n = src.len();
+    let mut out = vec![0.0; n];
+    simd::map_into(src, &mut out, |x| x as f64);
+    simd::select_fill(&mut out, mask, value);
+    note_vector(n, simd::count_invalid(mask));
+    out
+}
+
+/// Order-preserving compaction of one window by a keep bitmap: the
+/// filter verb. The validity mask is compacted with the same bitmap and
+/// passed through **without** normalization (`Some` stays `Some`,
+/// matching `Column::filter`'s historical behavior).
+pub fn compact<T: Copy + Default>(
+    src: &[T],
+    mask: Option<&[bool]>,
+    keep: &[bool],
+) -> (Vec<T>, Option<Vec<bool>>) {
+    debug_assert_eq!(src.len(), keep.len());
+    let mut vals = vec![T::default(); src.len()];
+    let kept = simd::compact_into(src, keep, &mut vals);
+    vals.truncate(kept);
+    let masked = mask.map(simd::count_invalid).unwrap_or(0);
+    let out_mask = mask.map(|m| {
+        let mut om = vec![false; m.len()];
+        let w = simd::compact_into(m, keep, &mut om);
+        debug_assert_eq!(w, kept);
+        om.truncate(w);
+        om
+    });
+    note_vector(src.len(), masked);
+    (vals, out_mask)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::simd::CHUNK;
+
+    #[test]
+    fn zip_masked_blends_fill_and_normalizes() {
+        // Unmasked: no output mask.
+        let a = [1.0, 2.0, 3.0];
+        let b = [10.0, 20.0, 30.0];
+        let (v, m) = zip_masked(&a, None, &b, None, 0.0, |x, y| x + y).unwrap();
+        assert_eq!(v, vec![11.0, 22.0, 33.0]);
+        assert!(m.is_none());
+        // Masked: placeholder 0.0 at invalid lanes, mask ANDed.
+        let ma = [true, false, true];
+        let mb = [true, true, false];
+        let (v, m) = zip_masked(&a, Some(&ma), &b, Some(&mb), 0.0, |x, y| x + y).unwrap();
+        assert_eq!(v, vec![11.0, 0.0, 0.0]);
+        assert_eq!(m, Some(vec![true, false, false]));
+        // All-true masks normalize away.
+        let all = [true, true, true];
+        let (_, m) = zip_masked(&a, Some(&all), &b, Some(&all), 0.0, |x, y| x + y).unwrap();
+        assert!(m.is_none());
+        // All-null bails out for the boxed fallback.
+        let none = [false, false, false];
+        assert!(zip_masked(&a, Some(&none), &b, None, 0.0, |x, y| x + y).is_none());
+    }
+
+    #[test]
+    fn zip_masked_where_adds_predicate_nulls() {
+        let a = [6.0, 9.0, 3.0];
+        let b = [2.0, 0.0, 1.0];
+        let (v, m) =
+            zip_masked_where(&a, None, &b, None, 0.0, |_, y| y != 0.0, |x, y| x / y)
+                .unwrap();
+        assert_eq!(v, vec![3.0, 0.0, 3.0]);
+        assert_eq!(m, Some(vec![true, false, true]));
+    }
+
+    #[test]
+    fn logic_kernels_treat_null_as_valid_false() {
+        let a = [true, true, false, true];
+        let b = [true, false, true, true];
+        let ma = [true, true, true, false];
+        assert_eq!(
+            bool_and(&a, Some(&ma), &b, None),
+            vec![true, false, false, false]
+        );
+        // true OR null is still false — the boxed evaluator's rule.
+        assert_eq!(
+            bool_or(&a, Some(&ma), &b, None),
+            vec![true, true, true, false]
+        );
+    }
+
+    #[test]
+    fn compact_preserves_mask_without_normalizing() {
+        let src: Vec<i64> = (0..10).collect();
+        let mask = vec![true; 10];
+        let keep: Vec<bool> = (0..10).map(|i| i % 2 == 0).collect();
+        let (v, m) = compact(&src, Some(&mask), &keep);
+        assert_eq!(v, vec![0, 2, 4, 6, 8]);
+        // All-true in, all-true out — Some survives (filter contract).
+        assert_eq!(m, Some(vec![true; 5]));
+        let (v2, m2) = compact(&src, None, &keep);
+        assert_eq!(v2, v);
+        assert!(m2.is_none());
+    }
+
+    #[test]
+    fn ledger_counts_balance_across_kernel_calls() {
+        let before = snapshot();
+        let n = 2 * CHUNK + 7;
+        let a: Vec<f64> = (0..n).map(|i| i as f64).collect();
+        let mask: Vec<bool> = (0..n).map(|i| i % 5 != 0).collect();
+        let _ = fill_nulls(&a, &mask, -1.0);
+        note_scalar(13);
+        let delta = snapshot().since(&before);
+        assert!(delta.balanced(), "{delta:?}");
+        assert!(delta.vector_rows >= n);
+        assert!(delta.scalar_rows >= 13);
+        assert!(delta.chunks >= 3);
+        assert!(delta.masked_rows >= mask.iter().filter(|m| !**m).count());
+        assert_eq!(delta.rows(), delta.vector_rows + delta.scalar_rows);
+    }
+
+    #[test]
+    fn fill_kernels_match_per_element_loops() {
+        let vals: Vec<i64> = (0..CHUNK as i64 + 3).collect();
+        let mask: Vec<bool> = (0..vals.len()).map(|i| i % 7 != 2).collect();
+        let widened = fill_nulls_widen(&vals, &mask, 99.5);
+        for i in 0..vals.len() {
+            let want = if mask[i] { vals[i] as f64 } else { 99.5 };
+            assert_eq!(widened[i], want);
+        }
+    }
+}

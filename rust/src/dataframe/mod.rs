@@ -21,6 +21,7 @@ pub mod batch;
 pub mod column;
 pub mod frame;
 pub mod expr;
+pub mod kernels;
 pub mod ops;
 pub mod csv;
 pub mod groupby;

@@ -8,7 +8,9 @@
 use super::column::{Column, DType, Value};
 use super::expr::Expr;
 use super::frame::DataFrame;
+use super::kernels;
 use super::{Engine, FrameError};
+use crate::util::simd;
 use crate::util::Rng;
 
 /// Filter rows where `pred` evaluates true.
@@ -36,7 +38,11 @@ pub fn filter(df: &DataFrame, pred: &Expr, engine: Engine) -> Result<DataFrame, 
             let keep: Vec<bool> = match &mask_col {
                 Column::Bool(v, None) => v.clone(),
                 Column::Bool(v, Some(m)) => {
-                    v.iter().zip(m).map(|(b, valid)| *b && *valid).collect()
+                    // Null predicate lanes drop the row: AND the validity
+                    // bitmap into the keep-mask as one chunked pass.
+                    let mut keep = v.clone();
+                    simd::and_assign(&mut keep, m);
+                    keep
                 }
                 other => {
                     return Err(FrameError::Other(format!(
@@ -158,9 +164,7 @@ pub fn dropna(df: &DataFrame, cols: &[&str], engine: Engine) -> Result<DataFrame
             let mut keep = vec![true; n];
             for &c in &check {
                 if let Some(mask) = df.col_at(c).mask() {
-                    for i in 0..n {
-                        keep[i] &= mask[i];
-                    }
+                    simd::and_assign(&mut keep, mask);
                 }
             }
             Ok(df.filter_rows(&keep))
@@ -168,7 +172,15 @@ pub fn dropna(df: &DataFrame, cols: &[&str], engine: Engine) -> Result<DataFrame
     }
 }
 
-/// Fill nulls in an f64 column with `value` (`fillna`).
+/// Fill nulls in a numeric column with `value` (`fillna`).
+///
+/// Only f64/i64 columns are accepted — filling a string or bool column
+/// with a float is a type error on both engines (the baseline's boxed
+/// path used to silently corrupt such columns; the optimized path used
+/// to silently no-op, so the engines disagreed). An i64 column that
+/// actually contains nulls widens to f64, exactly as the baseline's
+/// `from_values` inference does once the f64 fill value enters the
+/// column; an i64 column with a mask but no nulls just drops the mask.
 pub fn fillna_f64(
     df: &DataFrame,
     name: &str,
@@ -176,6 +188,18 @@ pub fn fillna_f64(
     engine: Engine,
 ) -> Result<DataFrame, FrameError> {
     let col = df.col(name)?;
+    if matches!(col.dtype(), DType::Str | DType::Bool) {
+        return Err(FrameError::TypeMismatch {
+            col: name.to_string(),
+            expected: "f64 or i64",
+            got: col.dtype().name(),
+        });
+    }
+    if col.is_empty() {
+        // Nothing to fill; preserve the dtype (the baseline's
+        // `from_values` would otherwise default an empty result to f64).
+        return Ok(df.clone());
+    }
     let filled = match engine {
         Engine::Baseline => {
             let mut vals = Vec::with_capacity(col.len());
@@ -189,10 +213,15 @@ pub fn fillna_f64(
             Column::from_values(&vals)
         }
         Engine::Optimized => match col {
-            Column::F64(v, Some(m)) => {
-                let out: Vec<f64> =
-                    v.iter().zip(m).map(|(x, ok)| if *ok { *x } else { value }).collect();
-                Column::f64(out)
+            Column::F64(v, Some(m)) => Column::f64(kernels::fill_nulls(v, m, value)),
+            Column::I64(v, Some(m)) => {
+                if simd::count_invalid(m) > 0 {
+                    Column::f64(kernels::fill_nulls_widen(v, m, value))
+                } else {
+                    // Mask present but every lane valid: normalize it
+                    // away, matching the baseline's rebuilt column.
+                    Column::i64(v.clone())
+                }
             }
             c => c.clone(),
         },
@@ -208,7 +237,12 @@ pub fn sort_by(df: &DataFrame, name: &str, ascending: bool) -> Result<DataFrame,
     let mut idx: Vec<usize> = (0..df.nrows()).collect();
     match col {
         Column::F64(v, _) => idx.sort_by(|&a, &b| {
-            let o = v[a].partial_cmp(&v[b]).unwrap_or(std::cmp::Ordering::Equal);
+            // total_cmp gives NaN a fixed place in the order (after +inf
+            // ascending). The old `partial_cmp().unwrap_or(Equal)` made
+            // the comparator non-transitive in the presence of NaN —
+            // sort_by's contract violation, so NaN rows landed at
+            // whatever position the merge happened to leave them.
+            let o = v[a].total_cmp(&v[b]);
             if ascending { o } else { o.reverse() }
         }),
         Column::I64(v, _) => idx.sort_by(|&a, &b| {
@@ -377,20 +411,174 @@ mod tests {
     }
 
     #[test]
-    fn engines_agree_property() {
-        prop::check("filter engines agree", 15, |rng| {
-            let n = 1 + rng.below(60);
-            let df = DataFrame::from_cols(vec![
-                ("x", Column::f64((0..n).map(|_| rng.normal()).collect())),
-                ("g", Column::i64((0..n).map(|_| rng.range_i64(0, 4)).collect())),
-            ]);
-            let pred = Expr::col("x").gt(Expr::lit(0.0)).or(Expr::col("g").eq(Expr::lit_i64(1)));
-            let a = filter(&df, &pred, Engine::Baseline).map_err(|e| e.to_string())?;
-            let b = filter(&df, &pred, Engine::Optimized).map_err(|e| e.to_string())?;
-            if a.nrows() != b.nrows() {
-                return Err(format!("{} vs {}", a.nrows(), b.nrows()));
+    fn sort_f64_with_nans_is_total() {
+        // Regression: the old comparator collapsed NaN comparisons to
+        // Equal, which is non-transitive and let NaN rows land anywhere.
+        // total_cmp orders NaN after +inf, so ascending sorts put every
+        // NaN at the tail and descending sorts put them at the head.
+        let df = DataFrame::from_cols(vec![(
+            "x",
+            Column::f64(vec![2.0, f64::NAN, 1.0, f64::NAN, 0.5, f64::INFINITY]),
+        )]);
+        let asc = sort_by(&df, "x", true).unwrap();
+        let xs = asc.f64s("x").unwrap();
+        assert_eq!(&xs[..4], &[0.5, 1.0, 2.0, f64::INFINITY]);
+        assert!(xs[4].is_nan() && xs[5].is_nan());
+        let desc = sort_by(&df, "x", false).unwrap();
+        let xs = desc.f64s("x").unwrap();
+        assert!(xs[0].is_nan() && xs[1].is_nan());
+        assert_eq!(&xs[2..], &[f64::INFINITY, 2.0, 1.0, 0.5]);
+    }
+
+    #[test]
+    fn fillna_widens_i64_with_nulls_on_both_engines() {
+        let df = DataFrame::from_cols(vec![(
+            "k",
+            Column::I64(vec![1, 0, 3], Some(vec![true, false, true])),
+        )]);
+        let a = fillna_f64(&df, "k", -9.5, Engine::Baseline).unwrap();
+        let b = fillna_f64(&df, "k", -9.5, Engine::Optimized).unwrap();
+        for out in [&a, &b] {
+            let c = out.col("k").unwrap();
+            assert_eq!(c.dtype(), DType::F64);
+            assert!(c.mask().is_none());
+            assert_eq!(c.as_f64().unwrap(), &[1.0, -9.5, 3.0]);
+        }
+    }
+
+    #[test]
+    fn fillna_strips_all_valid_mask_without_widening() {
+        let df = DataFrame::from_cols(vec![(
+            "k",
+            Column::I64(vec![4, 5], Some(vec![true, true])),
+        )]);
+        for eng in [Engine::Baseline, Engine::Optimized] {
+            let out = fillna_f64(&df, "k", 0.0, eng).unwrap();
+            let c = out.col("k").unwrap();
+            assert_eq!(c.dtype(), DType::I64, "{eng:?}");
+            assert!(c.mask().is_none(), "{eng:?}");
+            assert_eq!(c.as_i64().unwrap(), &[4, 5]);
+        }
+    }
+
+    #[test]
+    fn fillna_rejects_non_numeric_columns_on_both_engines() {
+        let df = sample();
+        for eng in [Engine::Baseline, Engine::Optimized] {
+            let err = fillna_f64(&df, "state", 0.0, eng).unwrap_err();
+            assert!(matches!(err, FrameError::TypeMismatch { .. }), "{eng:?}");
+        }
+    }
+
+    #[test]
+    fn fillna_empty_preserves_dtype() {
+        let df = DataFrame::from_cols(vec![("k", Column::i64(vec![]))]);
+        for eng in [Engine::Baseline, Engine::Optimized] {
+            let out = fillna_f64(&df, "k", 1.0, eng).unwrap();
+            assert_eq!(out.col("k").unwrap().dtype(), DType::I64, "{eng:?}");
+            assert_eq!(out.nrows(), 0);
+        }
+    }
+
+    /// Cell-by-cell agreement, tolerant of the baseline's numeric
+    /// widening (`from_values`) — dtypes may differ, values may not.
+    fn frames_agree(a: &DataFrame, b: &DataFrame) -> Result<(), String> {
+        if a.nrows() != b.nrows() {
+            return Err(format!("row count: {} vs {}", a.nrows(), b.nrows()));
+        }
+        for name in a.names() {
+            let (ca, cb) = (a.col(name).unwrap(), b.col(name).map_err(|e| e.to_string())?);
+            for i in 0..a.nrows() {
+                let (va, vb) = (ca.value(i), cb.value(i));
+                let same = match (&va, &vb) {
+                    (Value::Null, Value::Null) => true,
+                    (Value::F64(x), Value::F64(y)) if x.is_nan() && y.is_nan() => true,
+                    (x, y) => {
+                        x == y
+                            || matches!(
+                                (x.as_f64(), y.as_f64()),
+                                (Some(p), Some(q)) if p.to_bits() == q.to_bits()
+                            )
+                    }
+                };
+                if !same {
+                    return Err(format!("{name}[{i}]: {va:?} vs {vb:?}"));
+                }
             }
-            prop::assert_close(a.f64s("x").unwrap(), b.f64s("x").unwrap(), 1e-12)
+        }
+        Ok(())
+    }
+
+    #[test]
+    fn engines_agree_property() {
+        use crate::dataframe::kernels;
+        // Lengths straddle the kernel chunk width so every test run
+        // exercises exact-chunk, one-over, and one-under tails.
+        let lens = [
+            1,
+            simd::CHUNK - 1,
+            simd::CHUNK,
+            simd::CHUNK + 1,
+            2 * simd::CHUNK,
+        ];
+        let before = kernels::snapshot();
+        prop::check("engines agree on rewritten verbs", 20, |rng| {
+            let n = if rng.chance(0.5) {
+                lens[rng.below(lens.len())]
+            } else {
+                1 + rng.below(3 * simd::CHUNK)
+            };
+            let mask = |rng: &mut crate::util::Rng, p: f64| -> Option<Vec<bool>> {
+                rng.chance(0.6).then(|| (0..n).map(|_| rng.chance(p)).collect())
+            };
+            let payload = |rng: &mut crate::util::Rng| -> f64 {
+                if rng.chance(0.05) {
+                    f64::NAN
+                } else {
+                    rng.normal()
+                }
+            };
+            let df = DataFrame::from_cols(vec![
+                (
+                    "x",
+                    Column::F64((0..n).map(|_| payload(rng)).collect(), mask(rng, 0.9)),
+                ),
+                (
+                    "k",
+                    Column::I64(
+                        (0..n).map(|_| rng.range_i64(-4, 4)).collect(),
+                        mask(rng, 0.85),
+                    ),
+                ),
+                ("y", Column::f64((0..n).map(|_| rng.normal()).collect())),
+            ]);
+            let pred = Expr::col("x")
+                .gt(Expr::lit(0.0))
+                .or(Expr::col("k").eq(Expr::lit_i64(1)));
+            let arith = Expr::col("x")
+                .mul(Expr::col("k"))
+                .add(Expr::col("y").div(Expr::col("x")));
+            for (tag, run) in [
+                ("filter", &(|e| filter(&df, &pred, e))
+                    as &dyn Fn(Engine) -> Result<DataFrame, FrameError>),
+                ("with_column", &|e| with_column(&df, "z", &arith, e)),
+                ("astype_f64", &|e| astype(&df, "k", DType::F64, e)),
+                ("astype_i64", &|e| astype(&df, "x", DType::I64, e)),
+                ("astype_str", &|e| astype(&df, "x", DType::Str, e)),
+                ("dropna", &|e| dropna(&df, &[], e)),
+                ("fillna", &|e| fillna_f64(&df, "x", -7.25, e)),
+            ] {
+                let a = run(Engine::Baseline).map_err(|e| format!("{tag}: {e}"))?;
+                let b = run(Engine::Optimized).map_err(|e| format!("{tag}: {e}"))?;
+                frames_agree(&a, &b).map_err(|e| format!("{tag} (n={n}): {e}"))?;
+            }
+            Ok(())
         });
+        // The optimized arms above must have ledgered vector traffic,
+        // and the ledger's structural invariants must hold on the delta.
+        let delta = kernels::snapshot().since(&before);
+        assert!(delta.vector_rows > 0, "{delta:?}");
+        assert!(delta.balanced(), "{delta:?}");
+        assert_eq!(delta.rows(), delta.vector_rows + delta.scalar_rows);
     }
 }

@@ -12,6 +12,8 @@
 //!                                  # (--listen serves it over TCP instead of in-process)
 //! repro bench-serve [--clients C] [--requests N] [--mix census:4,iiot:1]
 //!                                  # closed-loop TCP load generator; writes BENCH_serve.json
+//! repro bench-kernels [--rows N] [--iters K]
+//!                                  # per-verb columnar-kernel microbench; writes BENCH_kernels.json
 //! repro fig1 [--scale F]           # Figure 1 stage breakdown, all pipelines
 //! repro config                     # Table 3 analogue: software config
 //! repro models                     # AOT artifacts available to the runtime
@@ -37,6 +39,7 @@ fn main() {
         "explain" => cmd_explain(&args),
         "serve" => cmd_serve(&args),
         "bench-serve" => cmd_bench_serve(&args),
+        "bench-kernels" => cmd_bench_kernels(&args),
         "fig1" => cmd_fig1(&args),
         "config" => cmd_config(),
         "models" => cmd_models(),
@@ -68,6 +71,9 @@ fn print_help() {
          \x20 serve                soak a PipelineService with a mixed-priority request mix\n\
          \x20 bench-serve          closed-loop TCP load generator over a loopback PipelineServer;\n\
          \x20                      writes BENCH_serve.json (per-tenant throughput, p50/p95, sheds)\n\
+         \x20 bench-kernels        per-verb columnar-kernel microbench (filter/with_column/astype/\n\
+         \x20                      dropna/fillna rows/s + KernelReport ledger) plus one sequential\n\
+         \x20                      census anchor; writes BENCH_kernels.json\n\
          \x20 fig1                 stage-time breakdown for every pipeline (Figure 1)\n\
          \x20 config               print the software configuration (Table 3)\n\
          \x20 models               list AOT model artifacts\n\
@@ -111,7 +117,12 @@ fn print_help() {
          \x20 --depth D / --workers W           service provisioning (defaults 8 / 2)\n\
          \x20 --per-tenant D                    per-tenant in-flight lane depth (default 8)\n\
          \x20 --max-conns N / --idle-after T    serving-edge limits (as for serve --listen)\n\
-         \x20 --out PATH                        trajectory path (default BENCH_serve.json)\n"
+         \x20 --out PATH                        trajectory path (default BENCH_serve.json)\n\
+         \n\
+         OPTIONS (bench-kernels):\n\
+         \x20 --rows N                          rows per synthetic frame (default 200000 * --scale)\n\
+         \x20 --iters K                         timed passes per verb (default 5)\n\
+         \x20 --out PATH                        trajectory path (default BENCH_kernels.json)\n"
     );
 }
 
@@ -192,6 +203,15 @@ fn cmd_run(args: &Args) -> i32 {
                     b.rows_out,
                     b.rows_filtered,
                     b.zero_copy_fraction() * 100.0
+                );
+            }
+            if let Some(k) = &res.kernels {
+                println!(
+                    "kernels: {} rows through columnar verbs ({:.1}% vector path, {} chunks, {:.1}% lanes masked)",
+                    k.rows(),
+                    k.vector_fraction() * 100.0,
+                    k.chunks,
+                    k.masked_fraction() * 100.0
                 );
             }
             if let Some(sharding) = &res.sharding {
@@ -755,6 +775,150 @@ fn cmd_bench_serve(args: &Args) -> i32 {
         report.trajectory_pipelines(),
         net_section,
     ) {
+        Ok(_) => {
+            println!("wrote {out}");
+            0
+        }
+        Err(e) => {
+            eprintln!("cannot write {out}: {e}");
+            1
+        }
+    }
+}
+
+/// `repro bench-kernels`: time each rewritten dataframe verb over a
+/// synthetic masked frame, ledger every pass through the columnar
+/// kernel layer, and persist the per-verb rows/s trajectory (plus one
+/// tiny sequential census run as the cross-bench E2E anchor) to
+/// `BENCH_kernels.json`. Counters prove WHERE rows went (vector vs
+/// scalar path); the wall clocks prove how fast they moved.
+fn cmd_bench_kernels(args: &Args) -> i32 {
+    use repro::dataframe::{kernels, ops, Column, DType, DataFrame, Engine, Expr, FrameError};
+    use repro::util::bench;
+    use repro::util::json::Json;
+    use std::hint::black_box;
+    use std::time::Instant;
+
+    let cfg = parse_cfg(args);
+    let default_rows = ((200_000.0 * cfg.scale) as usize).max(4_096);
+    let rows: usize = args.get_parse("rows", default_rows);
+    let iters: usize = args.get_parse("iters", 5usize).max(1);
+    let out = args.get_or("out", "BENCH_kernels.json");
+    let engine = match cfg.toggles.dataframe {
+        OptLevel::Optimized => Engine::Optimized,
+        OptLevel::Baseline => Engine::Baseline,
+    };
+
+    // Synthetic frame shaped like the tabular pipelines' hot columns:
+    // masked f64 `x` (~12% nulls), masked i64 `k` (~8% nulls), and an
+    // unmasked f64 `y`. Deterministic from --seed.
+    let mut rng = repro::util::Rng::new(cfg.seed);
+    let mut xv = Vec::with_capacity(rows);
+    let mut xm = Vec::with_capacity(rows);
+    let mut kv = Vec::with_capacity(rows);
+    let mut km = Vec::with_capacity(rows);
+    let mut yv = Vec::with_capacity(rows);
+    for _ in 0..rows {
+        xv.push(rng.normal());
+        xm.push(!rng.chance(0.12));
+        kv.push(rng.below(1000) as i64 - 500);
+        km.push(!rng.chance(0.08));
+        yv.push(rng.f64());
+    }
+    let df = DataFrame::from_cols(vec![
+        ("x", Column::F64(xv, Some(xm))),
+        ("k", Column::I64(kv, Some(km))),
+        ("y", Column::f64(yv)),
+    ]);
+
+    let filter_pred = Expr::col("x").gt(Expr::lit(0.25));
+    let derive = Expr::col("x")
+        .mul(Expr::col("k"))
+        .add(Expr::col("y").div(Expr::col("x")));
+    let run_verb = |verb: &str, d: &DataFrame| -> Result<DataFrame, FrameError> {
+        match verb {
+            "filter" => ops::filter(d, &filter_pred, engine),
+            "with_column" => ops::with_column(d, "z", &derive, engine),
+            "astype" => ops::astype(d, "k", DType::F64, engine),
+            "dropna" => ops::dropna(d, &[], engine),
+            "fillna" => ops::fillna_f64(d, "x", -7.25, engine),
+            other => unreachable!("unknown verb {other}"),
+        }
+    };
+
+    println!(
+        "bench-kernels: {} engine, {rows} rows x {iters} iters per verb",
+        cfg.toggles.dataframe.label()
+    );
+    let mut t = Table::new(&["verb", "rows/s", "vector rows", "scalar rows", "vector %"]);
+    let mut section = BTreeMap::new();
+    for name in ["filter", "with_column", "astype", "dropna", "fillna"] {
+        let before = kernels::snapshot();
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            match run_verb(name, &df) {
+                Ok(res) => {
+                    black_box(res.nrows());
+                }
+                Err(e) => {
+                    eprintln!("error: {name}: {e:?}");
+                    return 1;
+                }
+            }
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let delta = kernels::snapshot().since(&before);
+        let total_rows = rows * iters;
+        let rows_per_s = total_rows as f64 / wall.max(1e-12);
+        t.row(&[
+            name.to_string(),
+            format!("{rows_per_s:.0}"),
+            delta.vector_rows.to_string(),
+            delta.scalar_rows.to_string(),
+            format!("{:.1}%", delta.vector_fraction() * 100.0),
+        ]);
+        let mut e = BTreeMap::new();
+        e.insert("rows".to_string(), Json::Num(total_rows as f64));
+        e.insert("iters".to_string(), Json::Num(iters as f64));
+        e.insert("wall_s".to_string(), Json::Num(wall));
+        e.insert("rows_per_s".to_string(), Json::Num(rows_per_s));
+        e.insert("vector_rows".to_string(), Json::Num(delta.vector_rows as f64));
+        e.insert("scalar_rows".to_string(), Json::Num(delta.scalar_rows as f64));
+        e.insert("chunks".to_string(), Json::Num(delta.chunks as f64));
+        e.insert("masked_rows".to_string(), Json::Num(delta.masked_rows as f64));
+        e.insert("vector_fraction".to_string(), Json::Num(delta.vector_fraction()));
+        section.insert(name.to_string(), Json::Obj(e));
+    }
+    t.print();
+
+    // One tiny sequential census run anchors the verb throughputs to an
+    // E2E trajectory every other bench also records.
+    let census_cfg = RunConfig { exec: ExecMode::Sequential, ..cfg };
+    let t0 = Instant::now();
+    let res = match run_by_name("census", &census_cfg) {
+        Ok(res) => res,
+        Err(e) => {
+            eprintln!("error: census anchor: {e:#}");
+            return 1;
+        }
+    };
+    let anchor = bench::mode_entry(&res, t0.elapsed());
+    if let Some(k) = &res.kernels {
+        println!(
+            "census anchor: {:.1}% of {} dataframe rows on the vector path",
+            k.vector_fraction() * 100.0,
+            k.rows()
+        );
+    }
+    let mut modes = BTreeMap::new();
+    modes.insert("sequential".to_string(), anchor);
+    let mut census = BTreeMap::new();
+    census.insert("exec_modes".to_string(), Json::Obj(modes));
+    let mut pipelines = BTreeMap::new();
+    pipelines.insert("census".to_string(), Json::Obj(census));
+    let mut extra = BTreeMap::new();
+    extra.insert("kernels".to_string(), Json::Obj(section));
+    match bench::write_trajectory_with(out, "bench_kernels", cfg.scale, pipelines, extra) {
         Ok(_) => {
             println!("wrote {out}");
             0

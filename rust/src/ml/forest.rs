@@ -224,13 +224,17 @@ fn best_split_sort(
         total[y[i as usize]] += 1;
     }
     let mut order: Vec<u32> = Vec::with_capacity(n);
+    // Class-count scratch reused across boundaries and features — the
+    // old per-boundary `right` allocation dominated the scan.
+    let mut left = vec![0usize; n_classes];
+    let mut right = vec![0usize; n_classes];
     for &f in features {
         order.clear();
         order.extend_from_slice(idx);
         order.sort_by(|&a, &b| {
             x.get(a as usize, f).partial_cmp(&x.get(b as usize, f)).unwrap()
         });
-        let mut left = vec![0usize; n_classes];
+        left.fill(0);
         for w in 0..n - 1 {
             let i = order[w] as usize;
             left[y[i]] += 1;
@@ -241,8 +245,9 @@ fn best_split_sort(
             }
             let nl = w + 1;
             let nr = n - nl;
-            let right: Vec<usize> =
-                total.iter().zip(&left).map(|(t, l)| t - l).collect();
+            for c in 0..n_classes {
+                right[c] = total[c] - left[c];
+            }
             let score = (nl as f64 * gini(&left, nl) + nr as f64 * gini(&right, nr)) / n as f64;
             if best.as_ref().map(|b| score < b.score).unwrap_or(true) {
                 best = Some(Best { score, feature: f, threshold: 0.5 * (v + vn) });
@@ -263,6 +268,18 @@ fn best_split_hist(
 ) -> Option<Best> {
     let n = idx.len();
     let mut best: Option<Best> = None;
+    // Node totals are feature-independent: count once, not per feature.
+    let mut total = vec![0usize; n_classes];
+    for &i in idx {
+        total[y[i as usize]] += 1;
+    }
+    // Histogram + class-count scratch reused across features; the old
+    // code allocated all four buffers per feature and `right` per bin
+    // boundary.
+    let mut hist: Vec<usize> = Vec::new();
+    let mut bin_count: Vec<usize> = Vec::new();
+    let mut left = vec![0usize; n_classes];
+    let mut right = vec![0usize; n_classes];
     for &f in features {
         // Node-local min/max → uniform bins (one linear pass).
         let mut lo = f64::INFINITY;
@@ -277,20 +294,18 @@ fn best_split_hist(
         }
         let nb = max_bins.max(2);
         let scale = nb as f64 / (hi - lo);
-        let mut hist = vec![0usize; nb * n_classes];
-        let mut bin_count = vec![0usize; nb];
+        hist.clear();
+        hist.resize(nb * n_classes, 0);
+        bin_count.clear();
+        bin_count.resize(nb, 0);
         for &i in idx {
             let v = x.get(i as usize, f);
             let b = (((v - lo) * scale) as usize).min(nb - 1);
             hist[b * n_classes + y[i as usize]] += 1;
             bin_count[b] += 1;
         }
-        let mut left = vec![0usize; n_classes];
+        left.fill(0);
         let mut nl = 0usize;
-        let mut total = vec![0usize; n_classes];
-        for &i in idx {
-            total[y[i as usize]] += 1;
-        }
         for b in 0..nb - 1 {
             for c in 0..n_classes {
                 left[c] += hist[b * n_classes + c];
@@ -300,8 +315,9 @@ fn best_split_hist(
                 continue;
             }
             let nr = n - nl;
-            let right: Vec<usize> =
-                total.iter().zip(&left).map(|(t, l)| t - l).collect();
+            for c in 0..n_classes {
+                right[c] = total[c] - left[c];
+            }
             let score = (nl as f64 * gini(&left, nl) + nr as f64 * gini(&right, nr)) / n as f64;
             if best.as_ref().map(|bb| score < bb.score).unwrap_or(true) {
                 let threshold = lo + (b + 1) as f64 / scale;

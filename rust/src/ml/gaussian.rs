@@ -6,6 +6,7 @@
 //! score is the squared Mahalanobis distance.
 
 use crate::linalg::{cholesky, Matrix};
+use crate::util::simd;
 
 /// Gaussian model of normality with a Cholesky-factored covariance.
 #[derive(Debug, Clone)]
@@ -37,17 +38,19 @@ impl GaussianModel {
     /// Squared Mahalanobis distance of one row (the anomaly score).
     pub fn score_row(&self, row: &[f64]) -> f64 {
         debug_assert_eq!(row.len(), self.mean.len());
-        // Solve L z = (row - mean); score = ||z||².
+        // Solve L z = (row - mean); score = ||z||². Each forward-solve
+        // step reads the contiguous row prefix of L, so the inner
+        // product runs on slices (no per-element bounds-checked get);
+        // dot_sub keeps the subtraction order of the original loop, so
+        // scores are bit-identical.
         let d = self.mean.len();
         let mut z = vec![0.0; d];
         for i in 0..d {
-            let mut sum = row[i] - self.mean[i];
-            for k in 0..i {
-                sum -= self.chol.get(i, k) * z[k];
-            }
-            z[i] = sum / self.chol.get(i, i);
+            let li = self.chol.row(i);
+            let sum = simd::dot_sub(row[i] - self.mean[i], &li[..i], &z[..i]);
+            z[i] = sum / li[i];
         }
-        z.iter().map(|v| v * v).sum()
+        simd::sum_sq(&z)
     }
 
     /// Scores for every row of `x`.

@@ -316,12 +316,17 @@ fn best_split_hist(
     params: &GbtParams,
 ) -> Option<SplitCand> {
     let mut best: Option<SplitCand> = None;
+    // One histogram buffer reused across features (and across the many
+    // nodes of a tree via the caller's loop) — the per-feature
+    // allocation dominated node build time at small node sizes.
+    let mut gh: Vec<(f64, f64)> = Vec::new();
     for (f, (edges, bins)) in binned.edges.iter().zip(&binned.bins).enumerate() {
         if edges.is_empty() {
             continue;
         }
         let nb = edges.len() + 1;
-        let mut gh = vec![(0.0f64, 0.0f64); nb];
+        gh.clear();
+        gh.resize(nb, (0.0f64, 0.0f64));
         for &i in idx {
             let b = bins[i as usize] as usize;
             gh[b].0 += grad[i as usize];

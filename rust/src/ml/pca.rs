@@ -43,10 +43,8 @@ impl Pca {
     pub fn transform(&self, x: &Matrix) -> Matrix {
         let mut xc = x.clone();
         for r in 0..xc.rows {
-            let row = xc.row_mut(r);
-            for (c, v) in row.iter_mut().enumerate() {
-                *v -= self.means[c];
-            }
+            // Center each contiguous row in one chunked lane-wise pass.
+            crate::util::simd::sub_assign(xc.row_mut(r), &self.means);
         }
         crate::linalg::matmul_blocked(&xc, &self.components)
     }

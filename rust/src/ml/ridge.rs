@@ -12,6 +12,7 @@
 //!   access + Cholesky solve — the MKL-shaped path.
 
 use crate::linalg::{cholesky_solve, gemm, Matrix};
+use crate::util::simd;
 use crate::OptLevel;
 
 /// Fitted ridge regression model.
@@ -51,17 +52,17 @@ impl Ridge {
             }
             OptLevel::Optimized => {
                 // Symmetric Gram kernel: one streaming pass, half FLOPs.
+                // Xᵀy accumulates row-wise as axpy over each contiguous
+                // row — chunked and element-wise in index order, so the
+                // result is bit-identical to the scalar loop.
                 let g = gemm::gram(&xc);
                 let mut r = vec![0.0; n];
                 for i in 0..xc.rows {
-                    let row = xc.row(i);
                     let yi = yc[i];
                     if yi == 0.0 {
                         continue;
                     }
-                    for (j, v) in row.iter().enumerate() {
-                        r[j] += v * yi;
-                    }
+                    simd::axpy(yi, xc.row(i), &mut r);
                 }
                 (g, r)
             }

@@ -54,7 +54,9 @@ pub use workload::{Output, Workload};
 pub(crate) use workload::workload_mismatch;
 
 use crate::coordinator::plan::{CompiledPlan, Sharder, Slicing};
-use crate::coordinator::telemetry::{BatchReport, OptReport, Report, SchedReport, ShardedReport};
+use crate::coordinator::telemetry::{
+    BatchReport, KernelReport, OptReport, Report, SchedReport, ShardedReport,
+};
 use crate::coordinator::{exec, ExecMode, ExecOutcome, Plan};
 use crate::runtime::ModelClient;
 use crate::OptLevel;
@@ -182,6 +184,13 @@ pub struct PipelineResult {
     /// out of `metrics`: optimized and unoptimized runs must produce
     /// bit-identical metric maps (the conformance contract).
     pub opt: Option<OptReport>,
+    /// Columnar-kernel counters for runs whose dataframe verbs went
+    /// through the vectorized kernel layer ([`crate::dataframe::kernels`]);
+    /// `None` when no kernel recorded activity. Counter-based only —
+    /// vector-path rows vs scalar-fallback rows, chunks, masked lanes —
+    /// and kept out of `metrics` for the same conformance reason as
+    /// `batching`: kernel-path and scalar-path runs answer identically.
+    pub kernels: Option<KernelReport>,
 }
 
 impl PipelineResult {
@@ -327,6 +336,7 @@ pub fn run_compiled(
 ) -> anyhow::Result<PipelineResult> {
     let base = *cfg;
     let batch_before = compiled.batch_report();
+    let kernel_before = crate::dataframe::kernels::snapshot();
     let outcome = match cfg.exec {
         ExecMode::Sequential => {
             exec::run_sequential(compiled.bind(materialize(entry, cfg, payload), cfg.seed)?)?
@@ -372,6 +382,14 @@ pub fn run_compiled(
         result.batching = Some(batch_delta);
     }
     result.opt = compiled.opt_report().cloned();
+    // The kernel ledger is process-global, so under a parallel test
+    // harness the delta may include neighboring runs' rows — it is
+    // telemetry about HOW rows moved, never part of the answer, and the
+    // balance invariants hold for any interleaving of recordings.
+    let kernel_delta = crate::dataframe::kernels::snapshot().since(&kernel_before);
+    if kernel_delta.rows() > 0 {
+        result.kernels = Some(kernel_delta);
+    }
     Ok(result)
 }
 
@@ -413,6 +431,7 @@ pub(crate) fn finish_outcome(outcome: ExecOutcome) -> PipelineResult {
         sched: outcome.sched,
         batching: None,
         opt: None,
+        kernels: None,
     }
 }
 
@@ -760,6 +779,22 @@ mod tests {
                 assert_eq!(x.owned, y.owned, "{name} shard {}", x.shard);
                 assert_eq!(x.completed, y.completed, "{name} shard {}", x.shard);
             }
+        }
+    }
+
+    #[test]
+    fn tabular_compiled_runs_surface_a_kernel_report() {
+        // The tabular pipelines' dataframe verbs run on the vectorized
+        // kernel layer; the per-run delta rides PipelineResult::kernels
+        // (never the metric map). The ledger is process-global, so a
+        // parallel test harness may inflate the delta — assertions are
+        // therefore presence + direction, not exact counts.
+        let cfg = RunConfig { scale: 0.05, seed: 31, ..Default::default() };
+        for name in ["census", "plasticc", "iiot"] {
+            let res = run_by_name(name, &cfg).unwrap();
+            let k = res.kernels.expect("tabular runs drive the kernel layer");
+            assert!(k.vector_rows > 0, "{name}: {k:?}");
+            assert!(k.rows() >= k.vector_rows, "{name}: {k:?}");
         }
     }
 

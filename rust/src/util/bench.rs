@@ -31,7 +31,10 @@
 //! per-item latency percentiles (`p50_ms`/`p95_ms`, `null` when the
 //! run recorded no samples). Batched runs additionally carry their
 //! [`BatchReport`](crate::coordinator::telemetry::BatchReport)
-//! counters under `"batch"`. Mode keys are
+//! counters under `"batch"`, and runs whose dataframe verbs drove the
+//! vectorized kernel layer carry their
+//! [`KernelReport`](crate::coordinator::telemetry::KernelReport)
+//! counters under `"kernels"`. Mode keys are
 //! [`ExecMode`](crate::coordinator::ExecMode) display strings
 //! (`sequential`, `streaming`, `multi:N`, `shard:N`, `async:N`).
 //! Object keys are ordered (`BTreeMap`), so diffs between trajectory
@@ -75,6 +78,15 @@ pub fn mode_entry(res: &PipelineResult, wall: Duration) -> Json {
         bo.insert("copied_bytes".to_string(), num(b.copied_bytes as f64));
         bo.insert("zero_copy_fraction".to_string(), num(b.zero_copy_fraction()));
         o.insert("batch".to_string(), Json::Obj(bo));
+    }
+    if let Some(k) = &res.kernels {
+        let mut ko = BTreeMap::new();
+        ko.insert("vector_rows".to_string(), num(k.vector_rows as f64));
+        ko.insert("scalar_rows".to_string(), num(k.scalar_rows as f64));
+        ko.insert("chunks".to_string(), num(k.chunks as f64));
+        ko.insert("masked_rows".to_string(), num(k.masked_rows as f64));
+        ko.insert("vector_fraction".to_string(), num(k.vector_fraction()));
+        o.insert("kernels".to_string(), Json::Obj(ko));
     }
     Json::Obj(o)
 }
@@ -143,6 +155,14 @@ mod tests {
             batch.get("clone_avoided_bytes").and_then(Json::as_f64),
             Some(b.clone_avoided_bytes as f64)
         );
+        let k = res.kernels.expect("tabular run drives the kernel layer");
+        let kernels = parsed.get("kernels").expect("kernel counters serialized");
+        assert_eq!(
+            kernels.get("vector_rows").and_then(Json::as_f64),
+            Some(k.vector_rows as f64)
+        );
+        let frac = kernels.get("vector_fraction").and_then(Json::as_f64).unwrap();
+        assert!((0.0..=1.0).contains(&frac), "{frac}");
     }
 
     #[test]

@@ -13,6 +13,7 @@ pub mod json;
 pub mod cli;
 pub mod prop;
 pub mod logger;
+pub mod simd;
 pub mod stats;
 
 pub use rng::Rng;

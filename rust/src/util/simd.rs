@@ -1,0 +1,318 @@
+//! Chunked, branch-free loop primitives over contiguous slices — the
+//! substrate the columnar kernel layer (`dataframe/kernels.rs`) and the
+//! `ml/` inner loops build on.
+//!
+//! The paper's preprocessing wins (§3.1–§3.3) come from replacing
+//! row-interpreted object loops with contiguous columnar passes the
+//! compiler can autovectorize. These helpers encode the three rules that
+//! make rustc/LLVM emit vector code on Xeon targets:
+//!
+//! 1. **Fixed-width chunks.** Loops run over `[T; CHUNK]`-sized windows
+//!    (`chunks_exact`), so the trip count inside a window is a compile
+//!    time constant and the vectorizer does not have to reason about the
+//!    tail. The tail (`< CHUNK` lanes) runs the same scalar body once.
+//! 2. **No branches in the lane body.** Null handling never enters the
+//!    hot loop: validity is a separate `&[bool]` pass, and invalid lanes
+//!    are *overwritten* by a select (`if mask { computed } else
+//!    { placeholder }` compiles to a blend, not a branch) — never
+//!    skipped with `continue` or matched on `Option`.
+//! 3. **Order-preserving reductions.** The reduction helpers
+//!    ([`dot`], [`sum`], [`sum_sq`], [`axpy`]) accumulate strictly
+//!    left-to-right in one scalar accumulator, so replacing a hand
+//!    written loop with them is **bit-identical**, not just ULP-close.
+//!    (LLVM may still vectorize integer reductions, which reassociate
+//!    losslessly; float reductions keep their sequential semantics.)
+//!
+//! Nothing here counts rows or touches ledgers — instrumentation lives
+//! one layer up in `dataframe/kernels.rs`, which decides what counts as
+//! a "vector row" and reports to
+//! [`KernelLedger`](crate::coordinator::telemetry::KernelLedger).
+
+/// Lane-window width for chunked loops. 64 `f64` lanes = 512 bytes = a
+/// full cache line × 8, wide enough for AVX-512 unrolling, small enough
+/// that tails stay cheap.
+pub const CHUNK: usize = 64;
+
+/// Number of `CHUNK`-sized windows a loop of `len` lanes iterates
+/// (tail window included when `len % CHUNK != 0`; zero when empty).
+pub fn chunk_count(len: usize) -> usize {
+    len.div_ceil(CHUNK)
+}
+
+/// `out[i] = f(a[i])` over chunked windows. `out.len() == a.len()`.
+pub fn map_into<T: Copy, U, F: Fn(T) -> U>(a: &[T], out: &mut [U], f: F) {
+    debug_assert_eq!(a.len(), out.len());
+    let mut oc = out.chunks_exact_mut(CHUNK);
+    let mut ac = a.chunks_exact(CHUNK);
+    for (o, x) in (&mut oc).zip(&mut ac) {
+        for i in 0..CHUNK {
+            o[i] = f(x[i]);
+        }
+    }
+    for (o, x) in oc.into_remainder().iter_mut().zip(ac.remainder()) {
+        *o = f(*x);
+    }
+}
+
+/// `out[i] = f(a[i], b[i])` over chunked windows.
+pub fn zip_into<T: Copy, V: Copy, U, F: Fn(T, V) -> U>(
+    a: &[T],
+    b: &[V],
+    out: &mut [U],
+    f: F,
+) {
+    debug_assert_eq!(a.len(), b.len());
+    debug_assert_eq!(a.len(), out.len());
+    let mut oc = out.chunks_exact_mut(CHUNK);
+    let mut ac = a.chunks_exact(CHUNK);
+    let mut bc = b.chunks_exact(CHUNK);
+    for ((o, x), y) in (&mut oc).zip(&mut ac).zip(&mut bc) {
+        for i in 0..CHUNK {
+            o[i] = f(x[i], y[i]);
+        }
+    }
+    for ((o, x), y) in oc
+        .into_remainder()
+        .iter_mut()
+        .zip(ac.remainder())
+        .zip(bc.remainder())
+    {
+        *o = f(*x, *y);
+    }
+}
+
+/// Branch-free select writeback: `out[i] = if mask[i] { out[i] } else
+/// { fill }`. This is the separate bitmap pass that keeps null handling
+/// out of compute loops — compute every lane unconditionally, then
+/// blend the placeholder over invalid lanes.
+pub fn select_fill<T: Copy>(out: &mut [T], mask: &[bool], fill: T) {
+    debug_assert_eq!(out.len(), mask.len());
+    let mut oc = out.chunks_exact_mut(CHUNK);
+    let mut mc = mask.chunks_exact(CHUNK);
+    for (o, m) in (&mut oc).zip(&mut mc) {
+        for i in 0..CHUNK {
+            o[i] = if m[i] { o[i] } else { fill };
+        }
+    }
+    for (o, m) in oc.into_remainder().iter_mut().zip(mc.remainder()) {
+        *o = if *m { *o } else { fill };
+    }
+}
+
+/// Lane-wise AND of two validity bitmaps into `out`.
+pub fn mask_and(a: &[bool], b: &[bool], out: &mut [bool]) {
+    zip_into(a, b, out, |x, y| x & y);
+}
+
+/// In-place lane-wise AND: `out[i] &= m[i]`.
+pub fn and_assign(out: &mut [bool], m: &[bool]) {
+    debug_assert_eq!(out.len(), m.len());
+    let mut oc = out.chunks_exact_mut(CHUNK);
+    let mut mc = m.chunks_exact(CHUNK);
+    for (o, w) in (&mut oc).zip(&mut mc) {
+        for i in 0..CHUNK {
+            o[i] &= w[i];
+        }
+    }
+    for (o, v) in oc.into_remainder().iter_mut().zip(mc.remainder()) {
+        *o &= *v;
+    }
+}
+
+/// In-place lane-wise subtraction: `out[i] -= m[i]` (the row-centering
+/// pass in PCA/ridge). Element-wise, so bit-identical to the scalar
+/// loop it replaces.
+pub fn sub_assign(out: &mut [f64], m: &[f64]) {
+    debug_assert_eq!(out.len(), m.len());
+    let mut oc = out.chunks_exact_mut(CHUNK);
+    let mut mc = m.chunks_exact(CHUNK);
+    for (o, w) in (&mut oc).zip(&mut mc) {
+        for i in 0..CHUNK {
+            o[i] -= w[i];
+        }
+    }
+    for (o, v) in oc.into_remainder().iter_mut().zip(mc.remainder()) {
+        *o -= *v;
+    }
+}
+
+/// Count invalid lanes (`false` entries) in a validity bitmap.
+/// Branch-free: each lane contributes `0` or `1` to an integer sum.
+pub fn count_invalid(mask: &[bool]) -> usize {
+    let mut total = 0usize;
+    let mut mc = mask.chunks_exact(CHUNK);
+    for m in &mut mc {
+        let mut c = 0usize;
+        for &v in m {
+            c += !v as usize;
+        }
+        total += c;
+    }
+    for &v in mc.remainder() {
+        total += !v as usize;
+    }
+    total
+}
+
+/// Compact `src` lanes where `keep[i]` into `out`, preserving order.
+/// Returns the number of lanes written. `out` must be at least
+/// `src.len()` long (callers allocate full-length scratch and truncate
+/// to the returned count): the store is unconditional and always in
+/// bounds because the write cursor `w` never exceeds the read index,
+/// so the loop body has no branch — dropped lanes are simply
+/// overwritten by the next kept one.
+pub fn compact_into<T: Copy>(src: &[T], keep: &[bool], out: &mut [T]) -> usize {
+    debug_assert_eq!(src.len(), keep.len());
+    debug_assert!(out.len() >= src.len());
+    let mut w = 0usize;
+    for (v, k) in src.iter().zip(keep) {
+        out[w] = *v;
+        w += *k as usize;
+    }
+    w
+}
+
+/// Strictly left-to-right dot product — bit-identical to the textbook
+/// `for` loop it replaces (no reassociation).
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0.0f64;
+    for (x, y) in a.iter().zip(b) {
+        acc += x * y;
+    }
+    acc
+}
+
+/// Strictly left-to-right `init - Σ a[i]·b[i]`, subtracting term by
+/// term — the triangular-solve inner step. Same operation order as the
+/// `sum -= l * z` loop it replaces, so bit-identical.
+pub fn dot_sub(init: f64, a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = init;
+    for (x, y) in a.iter().zip(b) {
+        acc -= x * y;
+    }
+    acc
+}
+
+/// Strictly left-to-right sum (no reassociation).
+pub fn sum(a: &[f64]) -> f64 {
+    let mut acc = 0.0f64;
+    for &x in a {
+        acc += x;
+    }
+    acc
+}
+
+/// Strictly left-to-right sum of squares (no reassociation).
+pub fn sum_sq(a: &[f64]) -> f64 {
+    let mut acc = 0.0f64;
+    for &x in a {
+        acc += x * x;
+    }
+    acc
+}
+
+/// `y[i] += alpha * x[i]` in index order — the BLAS-1 axpy shape the
+/// ridge normal-equation accumulation reduces to. Element-wise (no
+/// cross-lane reduction), so it is exactly the loop it replaces.
+pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    let mut yc = y.chunks_exact_mut(CHUNK);
+    let mut xc = x.chunks_exact(CHUNK);
+    for (yw, xw) in (&mut yc).zip(&mut xc) {
+        for i in 0..CHUNK {
+            yw[i] += alpha * xw[i];
+        }
+    }
+    for (yv, xv) in yc.into_remainder().iter_mut().zip(xc.remainder()) {
+        *yv += alpha * *xv;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunk_count_covers_boundaries() {
+        assert_eq!(chunk_count(0), 0);
+        assert_eq!(chunk_count(1), 1);
+        assert_eq!(chunk_count(CHUNK - 1), 1);
+        assert_eq!(chunk_count(CHUNK), 1);
+        assert_eq!(chunk_count(CHUNK + 1), 2);
+        assert_eq!(chunk_count(3 * CHUNK), 3);
+    }
+
+    #[test]
+    fn map_zip_match_naive_loops_at_chunk_boundaries() {
+        for len in [0, 1, CHUNK - 1, CHUNK, CHUNK + 1, 2 * CHUNK + 3] {
+            let a: Vec<f64> = (0..len).map(|i| i as f64 * 0.5).collect();
+            let b: Vec<f64> = (0..len).map(|i| (len - i) as f64).collect();
+            let mut out = vec![0.0; len];
+            map_into(&a, &mut out, |x| x * 2.0 + 1.0);
+            assert!(out.iter().zip(&a).all(|(o, x)| *o == x * 2.0 + 1.0));
+            zip_into(&a, &b, &mut out, |x, y| x * y);
+            assert!(out.iter().enumerate().all(|(i, o)| *o == a[i] * b[i]));
+        }
+    }
+
+    #[test]
+    fn select_fill_blends_placeholders_over_invalid_lanes() {
+        let mut v: Vec<f64> = (0..CHUNK + 5).map(|i| i as f64).collect();
+        let mask: Vec<bool> = (0..CHUNK + 5).map(|i| i % 3 != 0).collect();
+        select_fill(&mut v, &mask, -1.0);
+        for (i, x) in v.iter().enumerate() {
+            if i % 3 == 0 {
+                assert_eq!(*x, -1.0);
+            } else {
+                assert_eq!(*x, i as f64);
+            }
+        }
+        assert_eq!(count_invalid(&mask), mask.iter().filter(|m| !**m).count());
+        let mut m2 = vec![true; mask.len()];
+        and_assign(&mut m2, &mask);
+        assert_eq!(m2, mask);
+    }
+
+    #[test]
+    fn compact_preserves_order_and_count() {
+        let src: Vec<i64> = (0..150).collect();
+        let keep: Vec<bool> = (0..150).map(|i| i % 4 != 1).collect();
+        let expect: Vec<i64> = src
+            .iter()
+            .zip(&keep)
+            .filter(|(_, k)| **k)
+            .map(|(v, _)| *v)
+            .collect();
+        let mut out = vec![0i64; src.len()];
+        let n = compact_into(&src, &keep, &mut out);
+        assert_eq!(n, expect.len());
+        out.truncate(n);
+        assert_eq!(out, expect);
+    }
+
+    #[test]
+    fn reductions_are_bit_identical_to_sequential_loops() {
+        let a: Vec<f64> = (0..257).map(|i| (i as f64).sin() * 1e3).collect();
+        let b: Vec<f64> = (0..257).map(|i| (i as f64).cos() / 7.0).collect();
+        let mut naive_dot = 0.0;
+        let mut naive_sum = 0.0;
+        let mut naive_sq = 0.0;
+        for i in 0..a.len() {
+            naive_dot += a[i] * b[i];
+            naive_sum += a[i];
+            naive_sq += a[i] * a[i];
+        }
+        assert_eq!(dot(&a, &b).to_bits(), naive_dot.to_bits());
+        assert_eq!(sum(&a).to_bits(), naive_sum.to_bits());
+        assert_eq!(sum_sq(&a).to_bits(), naive_sq.to_bits());
+        let mut y1 = b.clone();
+        let mut y2 = b.clone();
+        axpy(3.25, &a, &mut y1);
+        for i in 0..y2.len() {
+            y2[i] += 3.25 * a[i];
+        }
+        assert!(y1.iter().zip(&y2).all(|(p, q)| p.to_bits() == q.to_bits()));
+    }
+}
